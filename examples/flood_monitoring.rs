@@ -1,0 +1,232 @@
+//! End-to-end **hardware-in-the-loop** flood-monitoring run — the full
+//! three-layer stack on a real workload.
+//!
+//! Loads the AOT-compiled analytics models (Layer 2 JAX + Layer 1 Pallas,
+//! lowered once by `make artifacts`) through the PJRT CPU client and drives
+//! the paper's Fig. 1 workflow over synthetic LandSat-like frames:
+//!
+//!   sensing → cloud detection → land-use classification → {waterbody,
+//!   crop monitoring}, with per-stage thresholds deciding tile propagation
+//!   (the *measured* distribution ratios) and the ISL link model charging
+//!   communication time for cross-satellite calls.
+//!
+//! Reports per-stage throughput, measured distribution ratios, end-to-end
+//! tile latencies (p50/p99) and the emulated ISL budget.  Recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example flood_monitoring
+//! ```
+
+use std::time::Instant;
+
+use orbitchain::constellation::Constellation;
+use orbitchain::link;
+use orbitchain::profile::datasize;
+use orbitchain::runtime::{ModelRuntime, TileGen};
+use orbitchain::util::stats;
+
+const FRAMES: usize = 4;
+const BATCH: usize = 8;
+
+fn main() -> anyhow::Result<()> {
+    let dir = ModelRuntime::default_dir();
+    let rt = ModelRuntime::load(&dir)?;
+    println!(
+        "loaded {} model variants from {}",
+        rt.variants().count(),
+        dir.display()
+    );
+
+    let constellation = Constellation::jetson();
+    let n0 = constellation.tiles_per_frame;
+    let tile_len = rt.tile_len();
+    let isl = link::lora_narrow();
+    let isl_rate = isl.rate_bps(0.05, constellation.isl_separation_km());
+    println!(
+        "constellation: {} sats, {} tiles/frame, ISL {:.0} bit/s",
+        constellation.n_sats, n0, isl_rate
+    );
+
+    let cloud = rt.model("cloud", BATCH).expect("cloud_b8");
+    let landuse = rt.model("landuse", BATCH).expect("landuse_b8");
+    let water = rt.model("water", BATCH).expect("water_b8");
+    let crop = rt.model("crop", BATCH).expect("crop_b8");
+
+    // Calibrate per-stage decision thresholds on a held-out batch so the
+    // stage pass-rates realize the workflow's profiled distribution ratios
+    // (δ = 0.5) — the paper's offline profiling step.  (The models carry
+    // seeded synthetic weights; thresholding their scores at the calibration
+    // median yields the 50% pass behaviour the evaluation parameterizes.)
+    let mut cal_gen = TileGen::new(7);
+    let cloud_thr = calibrate(cloud, &mut cal_gen, tile_len, |outs, k| {
+        outs[0][k * 2 + 1] - outs[0][k * 2] // clear-vs-cloudy margin
+    })?;
+    // Land-use sees only cloud-free tiles at runtime; calibrate on the
+    // same distribution.
+    cal_gen.cloud_prob = 0.0;
+    let land_thr = calibrate(landuse, &mut cal_gen, tile_len, |outs, k| {
+        let l = &outs[0][k * 4..k * 4 + 4];
+        l[0] - (l[1].max(l[2]).max(l[3])) // farm-vs-rest margin
+    })?;
+    println!("calibrated thresholds: cloud {cloud_thr:.3}, landuse {land_thr:.3}");
+
+    let mut gen = TileGen::new(42);
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut stage_tiles = [0usize; 4]; // cloud, landuse, water, crop
+    let mut stage_time = [0f64; 4];
+    let mut isl_bytes_total = 0.0;
+    let mut isl_energy_total = 0.0;
+    let wall0 = Instant::now();
+
+    for frame in 0..FRAMES {
+        // Sensing: capture + tile the frame (synthetic radiometry).
+        let mut tiles: Vec<Vec<f32>> = Vec::with_capacity(n0);
+        for _ in 0..n0 {
+            let (t, _) = gen.tile_vec();
+            tiles.push(t);
+        }
+
+        // Stage 1 (sat 0): cloud detection on every tile.
+        let (clear, t_cloud) = run_stage(cloud, &tiles, tile_len, |outs, k| {
+            // Clear-vs-cloudy margin against the calibrated threshold.
+            outs[0][k * 2 + 1] - outs[0][k * 2] >= cloud_thr
+        })?;
+        stage_tiles[0] += tiles.len();
+        stage_time[0] += t_cloud;
+
+        // Stage 2 (sat 0): land-use classification on clear tiles.
+        let clear_tiles: Vec<Vec<f32>> =
+            clear.iter().map(|&k| tiles[k].clone()).collect();
+        let (farm, t_land) = run_stage(landuse, &clear_tiles, tile_len, |outs, k| {
+            let l = &outs[0][k * 4..k * 4 + 4];
+            l[0] - (l[1].max(l[2]).max(l[3])) >= land_thr
+        })?;
+        stage_tiles[1] += clear_tiles.len();
+        stage_time[1] += t_land;
+
+        // Cross-satellite call: masks for farm tiles ship to sat 1; raw
+        // pixels are re-captured locally there (data locality).
+        let mask_bytes = farm.len() as f64 * datasize::TAG_HEADER_BYTES * 4.0;
+        isl_bytes_total += mask_bytes;
+        isl_energy_total += isl.energy_j(mask_bytes, 0.05, constellation.isl_separation_km());
+        let comm_s = mask_bytes * 8.0 / isl_rate;
+        let revisit_s = constellation.revisit_time_s(1);
+
+        // Stage 3+4 (sat 1): waterbody + crop monitoring on farm tiles.
+        let farm_tiles: Vec<Vec<f32>> =
+            farm.iter().map(|&k| clear_tiles[k].clone()).collect();
+        let (_, t_water) = run_stage(water, &farm_tiles, tile_len, |_, _| true)?;
+        let (_, t_crop) = run_stage(crop, &farm_tiles, tile_len, |_, _| true)?;
+        stage_tiles[2] += farm_tiles.len();
+        stage_tiles[3] += farm_tiles.len();
+        stage_time[2] += t_water;
+        stage_time[3] += t_crop;
+
+        // Per-frame end-to-end latency: compute + comm + revisit.
+        let e2e = t_cloud + t_land + comm_s + revisit_s + t_water.max(t_crop);
+        latencies.push(e2e);
+        println!(
+            "frame {frame}: {n0} tiles -> {} clear -> {} farm; e2e {:.2}s \
+             (compute {:.2}, comm {:.3}, revisit {:.0})",
+            clear.len(),
+            farm.len(),
+            e2e,
+            t_cloud + t_land + t_water.max(t_crop),
+            comm_s,
+            revisit_s
+        );
+    }
+
+    let wall = wall0.elapsed().as_secs_f64();
+    println!("\n== stage summary (PJRT CPU, batch {BATCH}) ==");
+    for (k, name) in ["cloud", "landuse", "water", "crop"].iter().enumerate() {
+        if stage_tiles[k] > 0 {
+            println!(
+                "{name:>8}: {:4} tiles, {:6.1} tiles/s",
+                stage_tiles[k],
+                stage_tiles[k] as f64 / stage_time[k]
+            );
+        }
+    }
+    println!(
+        "measured distribution ratios: cloud→landuse {:.2}, landuse→water/crop {:.2}",
+        stage_tiles[1] as f64 / stage_tiles[0] as f64,
+        stage_tiles[2] as f64 / stage_tiles[1] as f64
+    );
+    println!(
+        "latency: p50 {:.2}s p99 {:.2}s; ISL {:.0} B total ({:.2} J); wall {wall:.1}s",
+        stats::percentile(&latencies, 50.0),
+        stats::percentile(&latencies, 99.0),
+        isl_bytes_total,
+        isl_energy_total
+    );
+    println!(
+        "raw-shipping alternative would need {:.1} MB over the ISL per frame — \
+         {}x more",
+        datasize::RAW_TILE_BYTES * stage_tiles[2] as f64 / FRAMES as f64 / 1e6,
+        (datasize::RAW_TILE_BYTES * stage_tiles[2] as f64 / isl_bytes_total.max(1.0))
+            as u64
+    );
+    println!("flood_monitoring OK");
+    Ok(())
+}
+
+/// Median score of `score(outs, k)` over 48 calibration tiles — the
+/// threshold at which half the tiles pass (δ = 0.5).
+fn calibrate(
+    model: &orbitchain::runtime::LoadedModel,
+    gen: &mut TileGen,
+    tile_len: usize,
+    score: impl Fn(&[Vec<f32>], usize) -> f32,
+) -> anyhow::Result<f32> {
+    let mut scores = Vec::new();
+    let mut buf = vec![0.0f32; model.batch * tile_len];
+    for _ in 0..(48 / model.batch).max(1) {
+        for k in 0..model.batch {
+            gen.fill_tile(&mut buf[k * tile_len..(k + 1) * tile_len]);
+        }
+        let outs = model.infer(&buf)?;
+        for k in 0..model.batch {
+            scores.push(score(&outs, k));
+        }
+    }
+    scores.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(scores[scores.len() / 2])
+}
+
+/// Run one analytics stage over `tiles` in batches; `keep(outs, k)` decides
+/// whether tile `k` of the batch propagates downstream.  Returns the kept
+/// indices and the stage compute time.
+fn run_stage(
+    model: &orbitchain::runtime::LoadedModel,
+    tiles: &[Vec<f32>],
+    tile_len: usize,
+    keep: impl Fn(&[Vec<f32>], usize) -> bool,
+) -> anyhow::Result<(Vec<usize>, f64)> {
+    let mut kept = Vec::new();
+    let mut total = 0.0;
+    let mut buf = vec![0.0f32; model.batch * tile_len];
+    let mut base = 0;
+    while base < tiles.len() {
+        let take = model.batch.min(tiles.len() - base);
+        for k in 0..take {
+            buf[k * tile_len..(k + 1) * tile_len].copy_from_slice(&tiles[base + k]);
+        }
+        // Tail under-fill: repeat the last tile (results ignored).
+        for k in take..model.batch {
+            let src = (k.saturating_sub(1)).min(take - 1);
+            let (a, b) = buf.split_at_mut(k * tile_len);
+            b[..tile_len].copy_from_slice(&a[src * tile_len..(src + 1) * tile_len]);
+        }
+        let (outs, dt) = model.infer_timed(&buf)?;
+        total += dt;
+        for k in 0..take {
+            if keep(&outs, k) {
+                kept.push(base + k);
+            }
+        }
+        base += take;
+    }
+    Ok((kept, total))
+}

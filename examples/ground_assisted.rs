@@ -1,0 +1,83 @@
+//! Why ground-assisted Earth observation cannot be real-time
+//! (paper Appendix B, Fig. 17) — the motivation study, end to end.
+//!
+//! Propagates the five mainstream constellations for 24 h against ten
+//! ground stations at the most-populated metros, and reports (a) the
+//! satellite-ground connection-interval distribution and (b) the fraction
+//! of generated data that fits through the downlink per contact, with 50%
+//! in-orbit filtering already applied.  Then contrasts with OrbitChain's
+//! in-orbit latency on the same scenario scale.
+//!
+//! ```bash
+//! cargo run --release --example ground_assisted
+//! ```
+
+use orbitchain::constellation::Constellation;
+use orbitchain::orbit::{presets, visibility};
+use orbitchain::profile::ProfileDb;
+use orbitchain::sim::{self, SimConfig};
+use orbitchain::util::stats;
+use orbitchain::workflow;
+
+fn main() -> anyhow::Result<()> {
+    let stations = presets::ground_stations();
+    println!("== Appendix B: 24 h ground-contact sweep ({} stations) ==", stations.len());
+    println!(
+        "{:<12} {:>9} {:>12} {:>12} {:>10} {:>14}",
+        "constellation", "contacts", "median_gap", "p90_gap", ">1h_gaps", "downlinkable"
+    );
+
+    let mut all_intervals = Vec::new();
+    for preset in presets::all() {
+        let (intervals, ratios) =
+            visibility::sweep_preset(&preset, &stations, 86_400.0, 10.0, 0.5);
+        if intervals.is_empty() {
+            println!("{:<12} {:>9}", preset.name, 0);
+            continue;
+        }
+        let frac = intervals.iter().filter(|&&g| g >= 3600.0).count() as f64
+            / intervals.len() as f64;
+        println!(
+            "{:<12} {:>9} {:>10.0} s {:>10.0} s {:>9.0}% {:>13.0}%",
+            preset.name,
+            intervals.len(),
+            stats::percentile(&intervals, 50.0),
+            stats::percentile(&intervals, 90.0),
+            frac * 100.0,
+            stats::mean(&ratios) * 100.0
+        );
+        all_intervals.extend(intervals);
+    }
+
+    let median = stats::percentile(&all_intervals, 50.0);
+    println!(
+        "\nObservation 1 (reproduced): median wait for the next ground contact \
+         is {:.0} min; {}% of gaps exceed one hour — minute-level response via \
+         the ground is impossible, and even 50%-filtered data does not fit the \
+         downlink.",
+        median / 60.0,
+        (all_intervals.iter().filter(|&&g| g >= 3600.0).count() * 100
+            / all_intervals.len())
+    );
+
+    // The OrbitChain contrast: same Earth, minutes not hours.
+    let wf = workflow::flood_monitoring(0.5);
+    let profiles = ProfileDb::jetson();
+    let constellation = Constellation::jetson();
+    let rep = sim::simulate_orbitchain(
+        &wf,
+        &profiles,
+        &constellation,
+        SimConfig { frames: 5, isl_rate_bps: Some(5_000.0), ..Default::default() },
+    )?;
+    println!(
+        "\nOrbitChain on the same frame scale: full analytics in {:.1} s over a \
+         5 kbps LoRa ISL ({}x faster than the median ground wait).",
+        rep.frame_latency_s,
+        (median / rep.frame_latency_s) as u64
+    );
+    assert!(median > 1800.0, "ground gaps must be tens of minutes+");
+    assert!(rep.frame_latency_s < 300.0, "in-orbit path must be minutes");
+    println!("ground_assisted OK");
+    Ok(())
+}

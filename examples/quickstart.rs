@@ -1,0 +1,73 @@
+//! Quickstart: plan → route → simulate the paper's farmland-flood workflow
+//! on the 3-satellite Jetson constellation (§6.1 testbed).
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use orbitchain::constellation::Constellation;
+use orbitchain::planner;
+use orbitchain::profile::ProfileDb;
+use orbitchain::routing;
+use orbitchain::sim::{self, SimConfig};
+use orbitchain::workflow;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The Fig. 1 workflow: cloud -> landuse -> {water, crop}, δ = 0.5.
+    let wf = workflow::flood_monitoring(0.5);
+    let rho = wf.workload_factors()?;
+    println!("workflow: {} functions, workload factors {rho:?}", wf.len());
+
+    // 2. The testbed: 3 Jetson Orin Nano satellites, 100-tile frames,
+    //    5 s frame deadline, LoRa inter-satellite links, §6.1 orbit shift.
+    let constellation = Constellation::jetson();
+    let profiles = ProfileDb::jetson();
+    println!(
+        "constellation: {} sats, Δf = {} s, {} tiles/frame, ISL ≈ {:.0} bit/s",
+        constellation.n_sats,
+        constellation.frame_deadline_s,
+        constellation.tiles_per_frame,
+        constellation.isl_rate_bps()
+    );
+
+    // 3. Ground planning: Program (10) — deployment + resource allocation.
+    let plan = planner::plan(&wf, &profiles, &constellation)?;
+    println!(
+        "plan: φ = {:.2} (feasible: {}), {} placements, {} B&B nodes",
+        plan.phi,
+        plan.feasible(),
+        plan.placements.iter().filter(|p| p.deployed || p.gpu).count(),
+        plan.nodes
+    );
+    let violations = planner::verify_plan(&plan, &wf, &profiles, &constellation);
+    assert!(violations.is_empty(), "plan must verify: {violations:?}");
+
+    // 4. Workload routing: Algorithm 1.
+    let routing = routing::route(&wf, &profiles, &constellation, &plan)?;
+    println!(
+        "routing: {} pipelines, {:.0} tiles/frame routed, {:.0} ISL bytes/frame",
+        routing.pipelines.len(),
+        routing.routed_tiles,
+        routing.isl_bytes_per_frame
+    );
+
+    // 5. Runtime: discrete-event simulation of 10 frames.
+    let report = sim::simulate_orbitchain(
+        &wf,
+        &profiles,
+        &constellation,
+        SimConfig { frames: 10, ..Default::default() },
+    )?;
+    println!(
+        "simulation: completion = {:.1}%, frame latency = {:.2} s \
+         (proc {:.2} / comm {:.2} / revisit {:.2})",
+        report.completion_ratio * 100.0,
+        report.frame_latency_s,
+        report.breakdown.0,
+        report.breakdown.1,
+        report.breakdown.2
+    );
+    assert!(report.completion_ratio > 0.9, "OrbitChain should keep up");
+    println!("quickstart OK");
+    Ok(())
+}

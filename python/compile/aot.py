@@ -1,0 +1,104 @@
+"""AOT export: lower every analytics model to HLO *text* artifacts.
+
+This is the only place Python touches the system: ``make artifacts`` runs it
+once, producing ``artifacts/<model>_b<batch>.hlo.txt`` plus a JSON manifest,
+and the Rust coordinator (Layer 3) loads and executes the artifacts through
+the PJRT C API at runtime.  Python is never on the request path.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly.  Lowering goes through
+stablehlo -> XlaComputation with ``return_tuple=True`` so the Rust side can
+unwrap with ``to_tuple()``.
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Batch sizes exported per model.  b1 serves the latency-oriented per-tile
+# path; b8 is the batched throughput path used by the Rust HIL executor.
+BATCHES = (1, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring).
+
+    ``print_large_constants=True`` is load-bearing: the default HLO printer
+    elides big constants as ``{...}``, which xla_extension 0.5.1's text
+    parser silently accepts as *zeros* — shipping models whose weights
+    vanish at the Rust runtime.  The baked model weights must be printed
+    in full.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "constant({...})" not in text, "elided constants would ship zeros"
+    return text
+
+
+def lower_model(name: str, batch: int, seed: int = 42) -> str:
+    fn = model.model_fn(name, seed=seed)
+    lowered = jax.jit(fn).lower(model.input_spec(batch))
+    return to_hlo_text(lowered)
+
+
+def export_all(out_dir: str, seed: int = 42, batches=BATCHES) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "tile": model.TILE,
+        "channels": model.CHANNELS,
+        "seed": seed,
+        "models": {},
+    }
+    for name in model.MODEL_NAMES:
+        entries = []
+        for b in batches:
+            text = lower_model(name, b, seed=seed)
+            fname = f"{name}_b{b}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            entries.append(
+                {
+                    "batch": b,
+                    "file": fname,
+                    "input_shape": [b, model.TILE, model.TILE, model.CHANNELS],
+                    "outputs": [
+                        {"name": n, "shape": [b, *shape]}
+                        for n, shape in model.OUTPUT_SPECS[name]
+                    ],
+                    "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                    "hlo_bytes": len(text),
+                }
+            )
+            print(f"  {fname}: {len(text)} chars")
+        manifest["models"][name] = entries
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest {mpath}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--seed", type=int, default=42)
+    args = ap.parse_args()
+    export_all(args.out, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels for OrbitChain analytics models.
+
+Every kernel here is written with ``jax.experimental.pallas`` and lowered with
+``interpret=True`` so the resulting HLO contains plain XLA ops that the CPU
+PJRT client (the Rust runtime) can execute.  Real-TPU lowering would emit a
+Mosaic custom-call which the CPU plugin cannot run; ``interpret=True`` is the
+mandated correctness path on this testbed.
+
+Kernels:
+  * :mod:`.matmul`     — blocked matmul (MXU-shaped tiles, accumulator scratch)
+  * :mod:`.conv`       — 3x3 same-conv expressed as shift-matmuls (im2col-free)
+  * :mod:`.pool`       — 2x2 average pooling
+  * :mod:`.preprocess` — fused tile normalization ((x*scale - mean)/std)
+  * :mod:`.ref`        — pure-jnp oracles used by the pytest/hypothesis suite
+"""
+
+from .matmul import matmul
+from .conv import conv3x3
+from .pool import avg_pool2x2
+from .preprocess import normalize_tile
+
+__all__ = ["matmul", "conv3x3", "avg_pool2x2", "normalize_tile"]

@@ -1,0 +1,105 @@
+"""Structural performance analysis of the Layer-1 Pallas kernels.
+
+On this CPU testbed the kernels execute under ``interpret=True`` (numpy
+semantics), so wallclock is *not* a TPU proxy.  What we can and do verify is
+the kernel *structure* a real TPU cares about: per-block VMEM footprint
+(must fit the ~16 MiB VMEM budget with headroom for double buffering) and
+MXU arithmetic intensity (FLOPs per HBM byte — high enough to stay compute
+bound).  EXPERIMENTS.md §Perf records the numbers emitted here.
+"""
+
+from dataclasses import dataclass
+
+# TPU architectural reference points (v4-class core).
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_FLOPS_PER_CYCLE = 2 * 128 * 128  # one 128x128 MAC array, 2 flops/MAC
+
+
+@dataclass
+class KernelEstimate:
+    name: str
+    #: bytes resident in VMEM for one grid step (inputs + outputs + acc)
+    vmem_block_bytes: int
+    #: FLOPs executed per grid step
+    flops_per_block: float
+    #: HBM bytes moved per grid step (block loads + stores)
+    hbm_bytes_per_block: float
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        """FLOPs per HBM byte for one grid step."""
+        return self.flops_per_block / max(self.hbm_bytes_per_block, 1.0)
+
+    @property
+    def vmem_utilization(self) -> float:
+        """Fraction of VMEM used by one block (×2 for double buffering)."""
+        return self.vmem_block_bytes / VMEM_BYTES
+
+    def fits_vmem_double_buffered(self) -> bool:
+        return 2 * self.vmem_block_bytes <= VMEM_BYTES
+
+
+def matmul_estimate(m: int, k: int, n: int, bm: int = 128, bn: int = 128, bk: int = 128) -> KernelEstimate:
+    """Blocked matmul (kernels.matmul): per-step blocks x[bm,bk], y[bk,bn],
+    out[bm,bn] (f32)."""
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    vmem = 4 * (bm * bk + bk * bn + bm * bn)
+    flops = 2.0 * bm * bn * bk
+    hbm = 4.0 * (bm * bk + bk * bn) + 4.0 * bm * bn / max(k // bk, 1)
+    return KernelEstimate("matmul", vmem, flops, hbm)
+
+
+def conv3x3_estimate(h: int, w: int, cin: int, cout: int) -> KernelEstimate:
+    """Shift-matmul conv (kernels.conv3x3): one batch element per step."""
+    vmem = 4 * ((h + 2) * (w + 2) * cin + 9 * cin * cout + cout + h * w * cout)
+    flops = 2.0 * 9 * h * w * cin * cout
+    hbm = 4.0 * ((h + 2) * (w + 2) * cin + 9 * cin * cout + h * w * cout)
+    return KernelEstimate("conv3x3", vmem, flops, hbm)
+
+
+def pool_estimate(h: int, w: int, c: int) -> KernelEstimate:
+    vmem = 4 * (h * w * c + (h // 2) * (w // 2) * c)
+    flops = float(h * w * c)  # one add/mul per input element
+    hbm = 4.0 * (h * w * c + (h // 2) * (w // 2) * c)
+    return KernelEstimate("avg_pool2x2", vmem, flops, hbm)
+
+
+def normalize_estimate(h: int, w: int, c: int) -> KernelEstimate:
+    vmem = 4 * (2 * h * w * c + 2 * c)
+    flops = 3.0 * h * w * c  # scale, subtract, divide
+    hbm = 4.0 * 2 * h * w * c
+    return KernelEstimate("normalize_tile", vmem, flops, hbm)
+
+
+def model_conv_stack_estimates(tile: int = 64):
+    """Estimates for every conv layer shape used by the four models."""
+    shapes = [
+        (tile, tile, 3, 16),
+        (tile // 2, tile // 2, 16, 32),
+        (tile // 4, tile // 4, 32, 32),
+        (tile // 8, tile // 8, 32, 32),
+    ]
+    return [conv3x3_estimate(*s) for s in shapes]
+
+
+def report() -> str:
+    """Human-readable §Perf block."""
+    lines = ["kernel                  vmem/block  2x-buffered  flops/block  AI (flop/B)"]
+    ests = [
+        matmul_estimate(1024, 1024, 1024),
+        matmul_estimate(64, 1024, 2),  # smallest dense head
+        *model_conv_stack_estimates(),
+        pool_estimate(64, 64, 16),
+        normalize_estimate(64, 64, 3),
+    ]
+    for e in ests:
+        lines.append(
+            f"{e.name:<22} {e.vmem_block_bytes/1024:>9.1f}K "
+            f"{'fits' if e.fits_vmem_double_buffered() else 'OVER':>12} "
+            f"{e.flops_per_block:>12.3g} {e.arithmetic_intensity:>11.2f}"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

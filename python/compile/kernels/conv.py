@@ -1,0 +1,78 @@
+"""3x3 same-padding convolution as a Pallas shift-matmul kernel.
+
+Hardware adaptation (paper GPU -> TPU): on the Jetson the conv layers run as
+cuDNN implicit-GEMM over tensor cores.  The TPU analogue is to feed the MXU:
+each of the nine (dy, dx) filter taps contributes a ``[H*W, Cin] @ [Cin,
+Cout]`` matmul over a statically shifted window of the padded input, so the
+whole conv is nine MXU passes over data already resident in VMEM — the same
+role threadblock shared-memory tiling plays in the CUDA version.  The
+(dy, dx) loop is a Python loop, so it unrolls at trace time into straight-line
+HLO with no dynamic control flow.
+
+The grid walks the batch dimension; one program owns a full (H+2, W+2, Cin)
+padded tile and produces the (H, W, Cout) output tile.  For the 64x64
+analytics tiles used by the models the largest VMEM block is
+66*66*32*4 B ≈ 0.56 MiB, comfortably inside the ~16 MiB VMEM budget.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv3x3_kernel(x_ref, w_ref, b_ref, o_ref, *, h: int, w: int, relu: bool):
+    xp = x_ref[...]  # [H+2, W+2, Cin] (pre-padded by the caller)
+    wk = w_ref[...]  # [3, 3, Cin, Cout]
+    cin = xp.shape[-1]
+    cout = wk.shape[-1]
+
+    acc = jnp.zeros((h * w, cout), dtype=jnp.float32)
+    for dy in range(3):
+        for dx in range(3):
+            # Static slice of the shifted window; reshape to a GEMM operand.
+            patch = xp[dy : dy + h, dx : dx + w, :].reshape(h * w, cin)
+            acc += jnp.dot(
+                patch, wk[dy, dx], preferred_element_type=jnp.float32
+            )
+
+    out = acc.reshape(h, w, cout) + b_ref[...]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("relu",))
+def conv3x3(x, w, b, *, relu: bool = True):
+    """3x3 stride-1 same-padding conv (+bias, optional ReLU).
+
+    Args:
+      x: ``[B, H, W, Cin]`` input tiles (NHWC).
+      w: ``[3, 3, Cin, Cout]`` filters (HWIO).
+      b: ``[Cout]`` bias.
+      relu: fuse a ReLU into the kernel epilogue.
+
+    Returns:
+      ``[B, H, W, Cout]``.
+    """
+    bsz, h, wdt, cin = x.shape
+    assert w.shape[:3] == (3, 3, cin), f"filter mismatch: {w.shape} for Cin={cin}"
+    cout = w.shape[-1]
+
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    kernel = functools.partial(_conv3x3_kernel, h=h, w=wdt, relu=relu)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz,),
+        in_specs=[
+            # `None` squeezes the batch axis so the kernel sees 3-D tiles.
+            pl.BlockSpec((None, h + 2, wdt + 2, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((3, 3, cin, cout), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, h, wdt, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, wdt, cout), x.dtype),
+        interpret=True,
+    )(xp, w, b)

@@ -1,0 +1,72 @@
+"""Blocked matmul Pallas kernel.
+
+The kernel is shaped for the TPU MXU: the grid walks (M/bm, N/bn) output
+blocks with an inner K reduction dimension; the output block is revisited
+across K steps (its index map ignores the K grid axis) and acts as the
+accumulator, the standard Pallas reduction pattern.  Block sizes default to
+multiples of the 128x128 systolic array and are clamped for the small
+analytics heads.
+
+This is the single compute hot-spot of every analytics model: conv layers
+lower onto it via shift-matmuls (see conv.py) and dense heads call it
+directly.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output block; grid axis 2 walks the K reduction."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-shaped inner product: [bm, bk] @ [bk, bn] accumulated in f32.
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``target`` (keeps grid exact)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """Compute ``x @ y`` with the blocked Pallas kernel.
+
+    Args:
+      x: ``[M, K]`` float array.
+      y: ``[K, N]`` float array.
+      bm/bn/bk: target block sizes; clamped to divisors of the actual dims so
+        every grid step sees a full block (model shapes are padded to
+        friendly sizes by the caller, so no masking is required).
+
+    Returns:
+      ``[M, N]`` array of ``x.dtype``.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    bm, bn, bk = _block(m, bm), _block(n, bn), _block(k, bk)
+
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)

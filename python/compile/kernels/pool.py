@@ -1,0 +1,40 @@
+"""2x2 average-pooling Pallas kernel.
+
+One program per batch element; the kernel reshapes the (H, W, C) tile into
+(H/2, 2, W/2, 2, C) and reduces the two window axes — pure VPU elementwise
+work that XLA fuses into the surrounding conv epilogue after lowering.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _avg_pool_kernel(x_ref, o_ref):
+    x = x_ref[...]  # [H, W, C]
+    h, w, c = x.shape
+    x = x.reshape(h // 2, 2, w // 2, 2, c)
+    o_ref[...] = x.mean(axis=(1, 3)).astype(o_ref.dtype)
+
+
+@jax.jit
+def avg_pool2x2(x):
+    """2x2 stride-2 average pool.
+
+    Args:
+      x: ``[B, H, W, C]`` with even H and W.
+
+    Returns:
+      ``[B, H/2, W/2, C]``.
+    """
+    bsz, h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, f"odd spatial dims: {x.shape}"
+
+    return pl.pallas_call(
+        _avg_pool_kernel,
+        grid=(bsz,),
+        in_specs=[pl.BlockSpec((None, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((None, h // 2, w // 2, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h // 2, w // 2, c), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,50 @@
+"""Fused tile-normalization Pallas kernel.
+
+The sensing function hands the analytics pipeline raw uint8-scaled radiance
+tiles; every model first maps them to zero-mean unit-variance floats.  On the
+Jetson this is a trivial CUDA elementwise kernel; on TPU it is one VPU pass
+over the tile while it is already in VMEM, fused here so the downstream conv
+reads normalized data without a second HBM round-trip.
+
+``out = (x * scale - mean) / std`` with per-channel mean/std.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _normalize_kernel(x_ref, mean_ref, std_ref, o_ref, *, scale: float):
+    x = x_ref[...] * scale  # [H, W, C]
+    o_ref[...] = ((x - mean_ref[...]) / std_ref[...]).astype(o_ref.dtype)
+
+
+@jax.jit
+def normalize_tile(x, mean, std, scale: float = 1.0 / 255.0):
+    """Normalize raw tiles to model input space.
+
+    Args:
+      x: ``[B, H, W, C]`` raw tile values (0..255 range, stored as float).
+      mean: ``[C]`` per-channel mean (in post-scale units).
+      std: ``[C]`` per-channel std (in post-scale units).
+      scale: raw-to-unit scale factor (1/255 for 8-bit radiometry).
+
+    Returns:
+      ``[B, H, W, C]`` normalized float tiles.
+    """
+    import functools
+
+    bsz, h, w, c = x.shape
+    kernel = functools.partial(_normalize_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((None, h, w, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, h, w, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, mean, std)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each function here computes the same mathematical result as its Pallas
+counterpart using only stock jax.numpy / lax ops.  The pytest + hypothesis
+suite asserts ``assert_allclose(kernel(...), ref(...))`` across a sweep of
+shapes, dtypes and seeds; these oracles are also what the L2 models are
+validated against after AOT lowering.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Oracle for kernels.matmul: plain jnp matmul in f32 accumulation."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def conv3x3_ref(x, w, b, *, relu: bool = True):
+    """Oracle for kernels.conv3x3: lax conv_general_dilated, NHWC/HWIO."""
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + b.astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(x.dtype)
+
+
+def avg_pool2x2_ref(x):
+    """Oracle for kernels.avg_pool2x2: lax reduce_window mean."""
+    summed = jax.lax.reduce_window(
+        x.astype(jnp.float32),
+        0.0,
+        jax.lax.add,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+    return (summed / 4.0).astype(x.dtype)
+
+
+def normalize_tile_ref(x, mean, std, scale: float = 1.0 / 255.0):
+    """Oracle for kernels.normalize_tile."""
+    return ((x * scale - mean) / std).astype(x.dtype)

@@ -1,0 +1,81 @@
+"""AOT export tests: HLO-text artifacts are well-formed, deterministic, and
+the lowered computation agrees with eager execution."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+
+def _tiles(seed, batch):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.uniform(0, 255, size=(batch, model.TILE, model.TILE, model.CHANNELS)).astype(
+            "float32"
+        )
+    )
+
+
+@pytest.mark.parametrize("name", model.MODEL_NAMES)
+def test_hlo_text_wellformed(name):
+    text = aot.lower_model(name, batch=1)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # Interpret-mode Pallas must lower to plain HLO: no Mosaic custom-calls.
+    assert "tpu_custom_call" not in text
+    assert "mosaic" not in text.lower()
+
+
+@pytest.mark.parametrize("name", model.MODEL_NAMES)
+def test_lowering_deterministic(name):
+    assert aot.lower_model(name, batch=1) == aot.lower_model(name, batch=1)
+
+
+def test_lowered_matches_eager():
+    """jit-compiled (the artifact path) == eager for every model."""
+    x = _tiles(9, 1)
+    for name in model.MODEL_NAMES:
+        fn = model.model_fn(name)
+        eager = fn(x)
+        compiled = jax.jit(fn)(x)
+        for e, c in zip(eager, compiled):
+            np.testing.assert_allclose(e, c, rtol=1e-4, atol=1e-5)
+
+
+def test_export_all_manifest(tmp_path):
+    manifest = aot.export_all(str(tmp_path), batches=(1,))
+    assert set(manifest["models"]) == set(model.MODEL_NAMES)
+    on_disk = json.loads((tmp_path / "manifest.json").read_text())
+    assert on_disk["tile"] == model.TILE
+    for name, entries in on_disk["models"].items():
+        for e in entries:
+            path = tmp_path / e["file"]
+            assert path.exists()
+            assert path.stat().st_size == e["hlo_bytes"]
+            assert e["input_shape"] == [
+                e["batch"],
+                model.TILE,
+                model.TILE,
+                model.CHANNELS,
+            ]
+
+
+def test_repo_artifacts_fresh_if_present():
+    """If artifacts/ exists at the repo root, it must match current models."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(root, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    manifest = json.loads(open(mpath).read())
+    entry = manifest["models"]["cloud"][0]
+    text = aot.lower_model("cloud", batch=entry["batch"], seed=manifest["seed"])
+    import hashlib
+
+    assert hashlib.sha256(text.encode()).hexdigest() == entry["sha256"], (
+        "artifacts/ is stale: re-run `make artifacts`"
+    )

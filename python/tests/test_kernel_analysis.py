@@ -1,0 +1,53 @@
+"""Structural performance invariants of the Layer-1 kernels (§Perf):
+VMEM budgets and arithmetic-intensity sanity across the shape sweep the
+models actually use."""
+
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import analysis
+
+settings.register_profile("analysis", deadline=None, max_examples=50)
+settings.load_profile("analysis")
+
+
+def test_default_matmul_blocks_fit_vmem():
+    e = analysis.matmul_estimate(4096, 4096, 4096)
+    # 128^3 blocking: 3 * 128*128*4 B = 192 KiB/block, far under VMEM.
+    assert e.vmem_block_bytes == 3 * 128 * 128 * 4
+    assert e.fits_vmem_double_buffered()
+    # MXU-bound: >= 32 flops/byte at 128-blocking.
+    assert e.arithmetic_intensity > 30.0
+
+
+def test_model_conv_layers_fit_vmem():
+    for e in analysis.model_conv_stack_estimates():
+        assert e.fits_vmem_double_buffered(), e
+        assert e.vmem_utilization < 0.1, "64px tiles are tiny for VMEM"
+
+
+@given(
+    h=st.sampled_from([8, 16, 32, 64, 128]),
+    cin=st.integers(1, 64),
+    cout=st.integers(1, 64),
+)
+def test_conv_intensity_grows_with_channels(h, cin, cout):
+    e = analysis.conv3x3_estimate(h, h, cin, cout)
+    assert e.flops_per_block > 0
+    # 9-tap conv reuses every input element 9*cout times: intensity beats
+    # a pure elementwise op whenever cout > 1.
+    if cout >= 4:
+        elementwise = analysis.normalize_estimate(h, h, cin)
+        assert e.arithmetic_intensity > elementwise.arithmetic_intensity
+
+
+@given(m=st.integers(1, 512), k=st.integers(1, 4096), n=st.integers(1, 512))
+def test_matmul_estimate_monotone_and_bounded(m, k, n):
+    e = analysis.matmul_estimate(m, k, n)
+    assert e.vmem_block_bytes <= 3 * 128 * 128 * 4
+    assert e.flops_per_block <= 2.0 * 128 * 128 * 128
+
+
+def test_report_renders():
+    r = analysis.report()
+    assert "conv3x3" in r and "matmul" in r
+    assert "OVER" not in r, "every kernel block must fit double-buffered VMEM"

@@ -1,0 +1,178 @@
+"""Layer-1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, seeds and value ranges; every property asserts
+allclose against ``compile.kernels.ref``.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, conv3x3, avg_pool2x2, normalize_tile
+from compile.kernels import ref
+
+settings.register_profile("kernels", deadline=None, max_examples=25)
+settings.load_profile("kernels")
+
+
+def _arr(rng, shape, lo=-2.0, hi=2.0, dtype="float32"):
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 48),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = _arr(rng, (m, k)), _arr(rng, (k, n))
+    np.testing.assert_allclose(
+        matmul(x, y), ref.matmul_ref(x, y), rtol=1e-5, atol=1e-5
+    )
+
+
+@given(
+    m=st.sampled_from([32, 64, 128, 256]),
+    k=st.sampled_from([32, 128, 384]),
+    n=st.sampled_from([32, 128, 256]),
+    bm=st.sampled_from([16, 32, 128]),
+    bk=st.sampled_from([16, 64, 128]),
+    bn=st.sampled_from([16, 64, 128]),
+)
+def test_matmul_blocking_invariance(m, k, n, bm, bk, bn):
+    """The result must not depend on the chosen block decomposition."""
+    rng = np.random.default_rng(m * 31 + k * 7 + n)
+    x, y = _arr(rng, (m, k)), _arr(rng, (k, n))
+    base = ref.matmul_ref(x, y)
+    np.testing.assert_allclose(
+        matmul(x, y, bm=bm, bk=bk, bn=bn), base, rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_identity():
+    x = jnp.eye(16, dtype=jnp.float32)
+    y = jnp.arange(16 * 5, dtype=jnp.float32).reshape(16, 5)
+    np.testing.assert_allclose(matmul(x, y), y)
+
+
+def test_matmul_shape_mismatch_raises():
+    x = jnp.zeros((4, 5), jnp.float32)
+    y = jnp.zeros((6, 3), jnp.float32)
+    with pytest.raises(AssertionError):
+        matmul(x, y)
+
+
+# ---------------------------------------------------------------------------
+# conv3x3
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 3),
+    hw=st.sampled_from([4, 8, 16, 32]),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv3x3_matches_ref(b, hw, cin, cout, relu, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (b, hw, hw, cin))
+    w = _arr(rng, (3, 3, cin, cout), -1.0, 1.0)
+    bias = _arr(rng, (cout,), -0.5, 0.5)
+    np.testing.assert_allclose(
+        conv3x3(x, w, bias, relu=relu),
+        ref.conv3x3_ref(x, w, bias, relu=relu),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_conv3x3_delta_filter_is_identity():
+    """A centered delta filter with zero bias reproduces the input."""
+    rng = np.random.default_rng(7)
+    x = _arr(rng, (2, 8, 8, 3), 0.0, 1.0)
+    w = np.zeros((3, 3, 3, 3), np.float32)
+    for c in range(3):
+        w[1, 1, c, c] = 1.0
+    out = conv3x3(x, jnp.asarray(w), jnp.zeros(3, jnp.float32), relu=False)
+    np.testing.assert_allclose(out, x, rtol=1e-6, atol=1e-6)
+
+
+def test_conv3x3_relu_clamps_negative():
+    rng = np.random.default_rng(8)
+    x = _arr(rng, (1, 8, 8, 2))
+    w = _arr(rng, (3, 3, 2, 4))
+    bias = jnp.full((4,), -100.0, jnp.float32)
+    out = conv3x3(x, w, bias, relu=True)
+    assert float(jnp.min(out)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# avg_pool2x2
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 4),
+    hw=st.sampled_from([2, 4, 8, 16, 64]),
+    c=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pool_matches_ref(b, hw, c, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (b, hw, hw, c))
+    np.testing.assert_allclose(
+        avg_pool2x2(x), ref.avg_pool2x2_ref(x), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_pool_constant_preserved():
+    x = jnp.full((1, 8, 8, 2), 3.5, jnp.float32)
+    np.testing.assert_allclose(avg_pool2x2(x), jnp.full((1, 4, 4, 2), 3.5))
+
+
+def test_pool_odd_dims_rejected():
+    with pytest.raises(AssertionError):
+        avg_pool2x2(jnp.zeros((1, 7, 8, 1), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# normalize_tile
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 4),
+    hw=st.sampled_from([4, 16, 64]),
+    c=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_normalize_matches_ref(b, hw, c, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (b, hw, hw, c), 0.0, 255.0)
+    mean = _arr(rng, (c,), 0.2, 0.8)
+    std = _arr(rng, (c,), 0.1, 0.5)
+    np.testing.assert_allclose(
+        normalize_tile(x, mean, std),
+        ref.normalize_tile_ref(x, mean, std),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+def test_normalize_zero_centered():
+    """Tiles equal to 255*mean normalize to exactly zero."""
+    mean = jnp.asarray([0.4, 0.5, 0.6], jnp.float32)
+    std = jnp.asarray([0.2, 0.2, 0.2], jnp.float32)
+    x = jnp.broadcast_to(mean * 255.0, (1, 8, 8, 3))
+    out = normalize_tile(x, mean, std)
+    np.testing.assert_allclose(out, jnp.zeros_like(out), atol=1e-5)

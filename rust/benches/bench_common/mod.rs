@@ -1,0 +1,26 @@
+//! Shared bench harness (criterion is not in the offline vendor set):
+//! times a closure over warm-up + measured iterations and prints
+//! mean/min/max wallclock alongside the regenerated table.
+
+use std::time::Instant;
+
+/// Time `f` over `iters` measured runs (after one warm-up); prints stats.
+pub fn bench<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) -> T {
+    let mut out = f(); // warm-up
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        out = f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "bench {name}: mean {:.3} ms  min {:.3} ms  max {:.3} ms  (n={iters})",
+        mean * 1e3,
+        min * 1e3,
+        max * 1e3
+    );
+    out
+}

@@ -1,0 +1,9 @@
+//! Regenerates the paper artifact via `orbitchain::exp::fig03_contention()` and reports
+//! harness timing.  Run: `cargo bench --bench fig03_contention`.
+mod bench_common;
+use orbitchain::exp;
+
+fn main() {
+    let table = bench_common::bench("fig03_contention", 3, || exp::fig03_contention());
+    println!("{}", table.render());
+}

@@ -1,0 +1,17 @@
+//! Fig. 4(b): per-model time for 100 tiles — hardware-in-the-loop when the
+//! AOT artifacts exist (real PJRT inference), otherwise the profile model.
+//! Run: `cargo bench --bench fig04_model_speed`.
+mod bench_common;
+use orbitchain::exp;
+use orbitchain::runtime::ModelRuntime;
+
+fn main() {
+    let hil = ModelRuntime::load(&ModelRuntime::default_dir()).ok();
+    if hil.is_none() {
+        eprintln!("note: artifacts not built; using profile model (run `make artifacts`)");
+    }
+    let table = bench_common::bench("fig04_model_speed", 1, || {
+        exp::fig04_model_speed(hil.as_ref())
+    });
+    println!("{}", table.render());
+}

@@ -1,0 +1,9 @@
+//! Regenerates the paper artifact via `orbitchain::exp::fig07_profiling()` and reports
+//! harness timing.  Run: `cargo bench --bench fig07_profiling`.
+mod bench_common;
+use orbitchain::exp;
+
+fn main() {
+    let table = bench_common::bench("fig07_profiling", 3, || exp::fig07_profiling());
+    println!("{}", table.render());
+}

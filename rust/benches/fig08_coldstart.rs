@@ -1,0 +1,10 @@
+//! Fig. 8(a,b): GPU cold-start decay and per-tile data volumes.
+//! Run: `cargo bench --bench fig08_coldstart`.
+mod bench_common;
+use orbitchain::exp;
+
+fn main() {
+    let (a, b) = bench_common::bench("fig08_coldstart", 3, exp::fig08_coldstart_datasize);
+    println!("{}", a.render());
+    println!("{}", b.render());
+}

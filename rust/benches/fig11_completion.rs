@@ -1,0 +1,12 @@
+//! Fig. 11: completion ratio vs frame deadline on the Jetson testbed,
+//! OrbitChain vs data/compute parallelism, 2/3/4-function workflows.
+//! Run: `cargo bench --bench fig11_completion`.
+mod bench_common;
+use orbitchain::exp;
+
+fn main() {
+    let table = bench_common::bench("fig11_completion", 1, || {
+        exp::fig11_completion("jetson", 16)
+    });
+    println!("{}", table.render());
+}

@@ -1,0 +1,10 @@
+//! Fig. 12: per-frame ISL traffic vs cloud distribution ratio (Jetson),
+//! OrbitChain routing vs load spraying.
+//! Run: `cargo bench --bench fig12_comm`.
+mod bench_common;
+use orbitchain::exp;
+
+fn main() {
+    let table = bench_common::bench("fig12_comm", 1, || exp::fig12_comm("jetson"));
+    println!("{}", table.render());
+}

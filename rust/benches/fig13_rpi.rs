@@ -1,0 +1,14 @@
+//! Fig. 13(a,b): completion ratio and communication overhead on the
+//! Raspberry Pi testbed.
+//! Run: `cargo bench --bench fig13_rpi`.
+mod bench_common;
+use orbitchain::exp;
+
+fn main() {
+    let a = bench_common::bench("fig13a_completion", 1, || {
+        exp::fig11_completion("rpi", 16)
+    });
+    println!("{}", a.render());
+    let b = bench_common::bench("fig13b_comm", 1, || exp::fig12_comm("rpi"));
+    println!("{}", b.render());
+}

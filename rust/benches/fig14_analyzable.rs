@@ -1,0 +1,14 @@
+//! Fig. 14: analyzable tiles within the frame deadline vs constellation
+//! size, OrbitChain (Program (10) feasibility) vs compute parallelism.
+//! Run: `cargo bench --bench fig14_analyzable`.
+mod bench_common;
+use orbitchain::exp;
+
+fn main() {
+    for device in ["jetson", "rpi"] {
+        let table = bench_common::bench(&format!("fig14_{device}"), 1, || {
+            exp::fig14_analyzable(device)
+        });
+        println!("{}", table.render());
+    }
+}

@@ -1,0 +1,14 @@
+//! Fig. 15: ISL bandwidth vs end-to-end frame latency with
+//! processing/communication/revisit breakdown.
+//! Run: `cargo bench --bench fig15_latency`.
+mod bench_common;
+use orbitchain::exp;
+
+fn main() {
+    for device in ["jetson", "rpi"] {
+        let table = bench_common::bench(&format!("fig15_{device}"), 1, || {
+            exp::fig15_latency(device, 4)
+        });
+        println!("{}", table.render());
+    }
+}

@@ -1,0 +1,12 @@
+//! Fig. 17: 24 h satellite-ground contact study over five constellation
+//! presets and ten metro ground stations (Appendix B).
+//! Run: `cargo bench --bench fig17_ground`.
+mod bench_common;
+use orbitchain::exp;
+
+fn main() {
+    let table = bench_common::bench("fig17_ground", 1, || {
+        exp::fig17_ground(86_400.0, 10.0)
+    });
+    println!("{}", table.render());
+}

@@ -1,0 +1,9 @@
+//! Regenerates the paper artifact via `orbitchain::exp::fig18_isl()` and reports
+//! harness timing.  Run: `cargo bench --bench fig18_isl`.
+mod bench_common;
+use orbitchain::exp;
+
+fn main() {
+    let table = bench_common::bench("fig18_isl", 3, || exp::fig18_isl());
+    println!("{}", table.render());
+}

@@ -1,0 +1,9 @@
+//! Regenerates the paper artifact via `orbitchain::exp::fig20_planning()` and reports
+//! harness timing.  Run: `cargo bench --bench fig20_planning`.
+mod bench_common;
+use orbitchain::exp;
+
+fn main() {
+    let table = bench_common::bench("fig20_planning", 1, || exp::fig20_planning());
+    println!("{}", table.render());
+}

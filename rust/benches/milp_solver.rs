@@ -1,0 +1,21 @@
+//! Micro-benchmark of the Program (10) MILP solve across instance sizes
+//! (perf-pass tracking for the planner, EXPERIMENTS.md §Perf).
+//! Run: `cargo bench --bench milp_solver`.
+mod bench_common;
+
+use orbitchain::constellation::Constellation;
+use orbitchain::planner;
+use orbitchain::profile::{Device, ProfileDb};
+use orbitchain::workflow;
+
+fn main() {
+    for (n_sats, label) in [(3usize, "jetson-3sat"), (6, "6sat"), (10, "10sat")] {
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::uniform(n_sats, Device::JetsonOrinNano, 5.0, 100);
+        let plan = bench_common::bench(&format!("milp_{label}"), 3, || {
+            planner::plan(&wf, &db, &c).expect("plan")
+        });
+        println!("  phi={:.3} nodes={} proven={}", plan.phi, plan.nodes, plan.proven);
+    }
+}

@@ -1,0 +1,44 @@
+//! Micro-benchmark of the discrete-event engine hot path: end-to-end
+//! events/second on a large OrbitChain scenario (perf-pass tracking,
+//! EXPERIMENTS.md §Perf).
+//! Run: `cargo bench --bench sim_engine`.
+mod bench_common;
+
+use orbitchain::constellation::Constellation;
+use orbitchain::planner;
+use orbitchain::profile::{Device, ProfileDb};
+use orbitchain::routing;
+use orbitchain::sim::{instances_from_plan, SimConfig, Simulator};
+use orbitchain::workflow;
+
+fn main() {
+    let wf = workflow::flood_monitoring(0.5);
+    let db = ProfileDb::jetson();
+    let c = Constellation::uniform(6, Device::JetsonOrinNano, 5.0, 400);
+    let plan = planner::plan(&wf, &db, &c).expect("plan");
+    let routing = routing::route(&wf, &db, &c, &plan).expect("route");
+    let instances = instances_from_plan(&plan, &c);
+
+    let frames = 20usize;
+    let rep = bench_common::bench("sim_engine", 5, || {
+        let sim = Simulator::new(
+            &wf,
+            &db,
+            &c,
+            instances.clone(),
+            &routing.pipelines,
+            SimConfig { frames, ..Default::default() },
+        );
+        sim.run()
+    });
+    // Rough event count: every tile triggers arrival+done per stage plus
+    // link events; use analyzed counts as the proxy.
+    let analyzed: f64 = ["cloud", "landuse", "water", "crop"]
+        .iter()
+        .map(|n| rep.metrics.counter(&format!("func.{n}.analyzed")))
+        .sum();
+    println!(
+        "scenario: {} frames x {} tiles, {:.0} tiles analyzed, completion {:.3}",
+        frames, c.tiles_per_frame, analyzed, rep.completion_ratio
+    );
+}

@@ -1,0 +1,9 @@
+//! Regenerates the paper artifact via `orbitchain::exp::tab01_fit(42)` and reports
+//! harness timing.  Run: `cargo bench --bench tab01_fit`.
+mod bench_common;
+use orbitchain::exp;
+
+fn main() {
+    let table = bench_common::bench("tab01_fit", 3, || exp::tab01_fit(42));
+    println!("{}", table.render());
+}

@@ -1,0 +1,369 @@
+//! Baseline multi-satellite OEC frameworks (paper §3.2, §6.1).
+//!
+//! * **Data parallelism** (Denby & Lucia, ASPLOS'20): every satellite hosts
+//!   *all* analytics functions and processes an even share of each frame's
+//!   tiles.  No inter-satellite communication, but co-located models
+//!   contend (Fig. 3b) and the workflow cannot be instantiated at all once
+//!   combined memory exceeds capacity — completion 0 (§6.2(1)).
+//! * **Compute parallelism**: the workflow is deployed as one pipeline,
+//!   functions spread across satellites while balancing per-satellite
+//!   load; throughput is capped by the slowest (bottleneck) stage (Fig. 4).
+//!
+//! Both produce the same `(instances, pipelines)` shape the discrete-event
+//! simulator consumes, so Fig. 11/13 compare all three frameworks under
+//! identical runtime semantics.  Like OrbitChain, both baselines use local
+//! sensing functions for raw data (favouring the baselines: shipping raw
+//! tiles over kbps ISLs would zero them out — see Fig. 8(b)).
+
+use crate::constellation::Constellation;
+use crate::profile::{contention, ProfileDb};
+use crate::routing::{Dev, Pipeline, Stage};
+use crate::sim::gpu::SliceWindow;
+use crate::sim::InstanceSpec;
+use crate::workflow::Workflow;
+
+/// A baseline deployment ready for simulation.
+#[derive(Debug)]
+pub struct FrameworkDeployment {
+    pub instances: Vec<InstanceSpec>,
+    pub pipelines: Vec<Pipeline>,
+    /// True when the framework failed to instantiate (e.g. OOM) — the
+    /// simulator then reports 0 completion.
+    pub instantiated: bool,
+    /// Human-readable notes (e.g. why instantiation failed).
+    pub notes: Vec<String>,
+}
+
+/// **Data parallelism**: all functions on every satellite, tiles split
+/// evenly within each capture group.
+pub fn data_parallelism(
+    wf: &Workflow,
+    profiles: &ProfileDb,
+    constellation: &Constellation,
+) -> FrameworkDeployment {
+    let spec = &profiles.spec;
+    let names: Vec<&str> = (0..wf.len()).map(|i| wf.name(i)).collect();
+    let use_gpu = spec.has_gpu;
+
+    // Co-location feasibility on one satellite (identical across sats).
+    let colo = contention::colocate(profiles, &names, use_gpu);
+    let (slowdown, _oom) = match colo {
+        contention::Colocation::Degraded { slowdown, .. } => (slowdown, false),
+        contention::Colocation::OutOfMemory { required_mb, capacity_mb } => {
+            // Retry CPU-only (GPU residency dropped).
+            match contention::colocate(profiles, &names, false) {
+                contention::Colocation::Degraded { slowdown, .. } => (slowdown, false),
+                contention::Colocation::OutOfMemory { .. } => {
+                    return FrameworkDeployment {
+                        instances: Vec::new(),
+                        pipelines: Vec::new(),
+                        instantiated: false,
+                        notes: vec![format!(
+                            "OOM: {required_mb:.0} MB required, {capacity_mb:.0} MB available"
+                        )],
+                    };
+                }
+            }
+        }
+    };
+    let gpu_resident = use_gpu
+        && matches!(
+            contention::colocate(profiles, &names, true),
+            contention::Colocation::Degraded { .. }
+        );
+
+    let df = constellation.frame_deadline_s;
+    let quota = spec.beta * spec.cpu_cores / wf.len() as f64;
+    let gpu_share = spec.alpha * df / wf.len() as f64;
+    let mut instances = Vec::new();
+    for j in 0..constellation.n_sats {
+        let mut offset = 0.0;
+        for i in 0..wf.len() {
+            let f = profiles.get(wf.name(i));
+            let cpu_speed = f.cpu_speed(quota) / slowdown;
+            if cpu_speed > 0.0 {
+                instances.push(InstanceSpec {
+                    func: i,
+                    sat: j,
+                    dev: Dev::Cpu,
+                    rate_tiles_s: cpu_speed,
+                    window: SliceWindow::always(df),
+                });
+            }
+            if gpu_resident && f.gpu_speed > 0.0 {
+                instances.push(InstanceSpec {
+                    func: i,
+                    sat: j,
+                    dev: Dev::Gpu,
+                    rate_tiles_s: f.gpu_speed / slowdown,
+                    window: SliceWindow { offset, len: gpu_share, period: df },
+                });
+                offset += gpu_share;
+            }
+        }
+    }
+
+    // One all-local pipeline per (capture group, member satellite); the
+    // group's tiles split evenly (pre-defined assignment, no ISL).
+    let dev_of = |i: usize| {
+        if gpu_resident && profiles.get(wf.name(i)).gpu_speed > 0.0 {
+            Dev::Gpu
+        } else {
+            Dev::Cpu
+        }
+    };
+    let mut pipelines = Vec::new();
+    for (gi, g) in constellation.capture_groups.iter().enumerate() {
+        let share = g.tiles as f64 / g.len() as f64;
+        for j in g.sats() {
+            pipelines.push(Pipeline {
+                stages: (0..wf.len())
+                    .map(|i| Stage { func: i, sat: j, dev: dev_of(i) })
+                    .collect(),
+                workload: share,
+                group: gi,
+            });
+        }
+    }
+
+    FrameworkDeployment { instances, pipelines, instantiated: true, notes: Vec::new() }
+}
+
+/// **Compute parallelism**: one pipeline, functions assigned to satellites
+/// by greedy load balancing (heaviest expected work first onto the least
+/// loaded satellite, preserving sensing locality for the source on the
+/// leader).  Functions sharing a satellite get isolated quota shares.
+pub fn compute_parallelism(
+    wf: &Workflow,
+    profiles: &ProfileDb,
+    constellation: &Constellation,
+) -> FrameworkDeployment {
+    let spec = &profiles.spec;
+    let df = constellation.frame_deadline_s;
+    let ns = constellation.n_sats;
+    let rho = wf.workload_factors().expect("valid workflow");
+
+    // Expected per-function load: tiles × ρ / saturated speed.
+    let mut order: Vec<usize> = (0..wf.len()).collect();
+    let cost = |i: usize| {
+        let f = profiles.get(wf.name(i));
+        let v = if spec.has_gpu && f.gpu_speed > 0.0 {
+            f.gpu_speed
+        } else {
+            f.cspeed.max_value()
+        };
+        rho[i] / v
+    };
+    order.sort_by(|&a, &b| cost(b).partial_cmp(&cost(a)).unwrap());
+
+    // Greedy: topologically-early functions prefer early satellites to
+    // follow the capture order; balance by load.
+    let mut load = vec![0.0f64; ns];
+    let mut assign = vec![0usize; wf.len()];
+    let mut counts = vec![0usize; ns];
+    for &i in &order {
+        let j = (0..ns)
+            .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap().then(a.cmp(&b)))
+            .unwrap();
+        assign[i] = j;
+        load[j] += cost(i);
+        counts[j] += 1;
+    }
+
+    // Memory feasibility per satellite.
+    let mut notes = Vec::new();
+    for j in 0..ns {
+        let mem: f64 = (0..wf.len())
+            .filter(|&i| assign[i] == j)
+            .map(|i| {
+                let f = profiles.get(wf.name(i));
+                f.cmem_mb
+                    + if spec.has_gpu && f.gpu_speed > 0.0 { f.gmem_mb } else { 0.0 }
+            })
+            .sum();
+        if mem > spec.mem_mb {
+            notes.push(format!("satellite {j} over memory: {mem:.0} MB"));
+            return FrameworkDeployment {
+                instances: Vec::new(),
+                pipelines: Vec::new(),
+                instantiated: false,
+                notes,
+            };
+        }
+    }
+
+    let mut instances = Vec::new();
+    for j in 0..ns {
+        let share = counts[j].max(1) as f64;
+        let quota = spec.beta * spec.cpu_cores / share;
+        let gpu_share = spec.alpha * df / share;
+        let mut offset = 0.0;
+        for i in 0..wf.len() {
+            if assign[i] != j {
+                continue;
+            }
+            let f = profiles.get(wf.name(i));
+            if spec.has_gpu && f.gpu_speed > 0.0 {
+                instances.push(InstanceSpec {
+                    func: i,
+                    sat: j,
+                    dev: Dev::Gpu,
+                    rate_tiles_s: f.gpu_speed,
+                    window: SliceWindow { offset, len: gpu_share, period: df },
+                });
+                offset += gpu_share;
+            } else {
+                instances.push(InstanceSpec {
+                    func: i,
+                    sat: j,
+                    dev: Dev::Cpu,
+                    rate_tiles_s: f.cpu_speed(quota),
+                    window: SliceWindow::always(df),
+                });
+            }
+        }
+    }
+
+    // One pipeline per capture group over the fixed placement; tiles whose
+    // group does not include a stage's satellite cannot be captured there —
+    // compute parallelism ignores shifts, so those stages still run but the
+    // group's pipeline is only valid if the *source* satellite can capture
+    // the tile (otherwise the tiles are lost, which the simulator reports
+    // as unanalyzed).
+    let dev_of = |i: usize| {
+        let f = profiles.get(wf.name(i));
+        if spec.has_gpu && f.gpu_speed > 0.0 {
+            Dev::Gpu
+        } else {
+            Dev::Cpu
+        }
+    };
+    let sources = wf.sources();
+    let mut pipelines = Vec::new();
+    for (gi, g) in constellation.capture_groups.iter().enumerate() {
+        let source_ok = sources.iter().all(|&s| g.contains(assign[s]));
+        if !source_ok {
+            notes.push(format!(
+                "capture group {gi} tiles lost: source satellite outside group"
+            ));
+            continue;
+        }
+        pipelines.push(Pipeline {
+            stages: (0..wf.len())
+                .map(|i| Stage { func: i, sat: assign[i], dev: dev_of(i) })
+                .collect(),
+            workload: g.tiles as f64,
+            group: gi,
+        });
+    }
+
+    FrameworkDeployment { instances, pipelines, instantiated: true, notes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constellation::Constellation;
+    use crate::profile::ProfileDb;
+    use crate::sim::{SimConfig, Simulator};
+    use crate::workflow;
+
+    #[test]
+    fn data_parallelism_fails_on_four_functions_jetson() {
+        // §6.2(1): Jetson cannot host all four functions — 0% completion.
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let dep = data_parallelism(&wf, &db, &c);
+        assert!(!dep.instantiated, "{:?}", dep.notes);
+    }
+
+    #[test]
+    fn data_parallelism_instantiates_two_functions() {
+        let wf = workflow::flood_prefix(2, 0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let dep = data_parallelism(&wf, &db, &c);
+        assert!(dep.instantiated);
+        // All-local pipelines: no cross-satellite stage pairs.
+        for p in &dep.pipelines {
+            let s0 = p.stages[0].sat;
+            assert!(p.stages.iter().all(|st| st.sat == s0));
+        }
+        // Tile shares cover the whole frame.
+        let total: f64 = dep.pipelines.iter().map(|p| p.workload).sum();
+        assert!((total - c.tiles_per_frame as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compute_parallelism_spreads_functions() {
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let dep = compute_parallelism(&wf, &db, &c);
+        assert!(dep.instantiated, "{:?}", dep.notes);
+        let sats: std::collections::HashSet<usize> =
+            dep.instances.iter().map(|i| i.sat).collect();
+        assert!(sats.len() >= 2, "should use multiple satellites");
+    }
+
+    #[test]
+    fn baselines_simulate_end_to_end() {
+        let wf = workflow::flood_prefix(3, 0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        for dep in [data_parallelism(&wf, &db, &c), compute_parallelism(&wf, &db, &c)] {
+            if !dep.instantiated {
+                continue;
+            }
+            let sim = Simulator::new(
+                &wf,
+                &db,
+                &c,
+                dep.instances,
+                &dep.pipelines,
+                SimConfig { frames: 4, ..Default::default() },
+            );
+            let rep = sim.run();
+            assert!(rep.completion_ratio > 0.0);
+            assert!(rep.completion_ratio <= 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn orbitchain_beats_baselines_at_tight_deadline() {
+        // The Fig. 11 headline, in miniature: full workflow, tight Δf.
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let cfg = SimConfig { frames: 6, ..Default::default() };
+        let ours = crate::sim::simulate_orbitchain(&wf, &db, &c, cfg.clone()).unwrap();
+
+        let dp = data_parallelism(&wf, &db, &c);
+        let dp_completion = if dp.instantiated {
+            Simulator::new(&wf, &db, &c, dp.instances, &dp.pipelines, cfg.clone())
+                .run()
+                .completion_ratio
+        } else {
+            0.0
+        };
+        let cp = compute_parallelism(&wf, &db, &c);
+        let cp_completion = if cp.instantiated {
+            Simulator::new(&wf, &db, &c, cp.instances, &cp.pipelines, cfg)
+                .run()
+                .completion_ratio
+        } else {
+            0.0
+        };
+        assert!(
+            ours.completion_ratio >= dp_completion,
+            "ours={} dp={dp_completion}",
+            ours.completion_ratio
+        );
+        assert!(
+            ours.completion_ratio >= cp_completion - 0.02,
+            "ours={} cp={cp_completion}",
+            ours.completion_ratio
+        );
+    }
+}

@@ -1,0 +1,216 @@
+//! Scenario configuration (§6.1 parameters) with JSON round-trip.
+//!
+//! A [`Scenario`] bundles everything one experiment run needs — platform,
+//! constellation geometry, workflow shape, distribution ratio, simulation
+//! length — and builds the concrete `(Workflow, ProfileDb, Constellation)`
+//! triple.  The CLI accepts scenario files; presets mirror the paper's two
+//! testbeds.
+
+use crate::constellation::Constellation;
+use crate::profile::{Device, ProfileDb};
+use crate::util::json::{obj, Json};
+use crate::workflow::{self, Workflow};
+
+/// A fully-specified experiment scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub device: Device,
+    pub n_sats: usize,
+    pub frame_deadline_s: f64,
+    pub tiles_per_frame: usize,
+    /// Number of flood-workflow functions (1..=4).
+    pub workflow_size: usize,
+    /// Uniform distribution ratio δ on workflow edges.
+    pub delta: f64,
+    /// Frames to simulate.
+    pub frames: usize,
+    pub seed: u64,
+    /// Optional ISL rate override, bit/s.
+    pub isl_rate_bps: Option<f64>,
+    /// Use the paper's §6.1 ground-track-shift capture groups.
+    pub orbit_shift: bool,
+}
+
+impl Scenario {
+    /// §6.1 Jetson testbed defaults.
+    pub fn jetson() -> Self {
+        Scenario {
+            name: "jetson".into(),
+            device: Device::JetsonOrinNano,
+            n_sats: 3,
+            frame_deadline_s: 5.0,
+            tiles_per_frame: 100,
+            workflow_size: 4,
+            delta: 0.5,
+            frames: 10,
+            seed: 7,
+            isl_rate_bps: None,
+            orbit_shift: true,
+        }
+    }
+
+    /// §6.1 Raspberry Pi testbed defaults.
+    pub fn rpi() -> Self {
+        Scenario {
+            name: "rpi".into(),
+            device: Device::RaspberryPi4,
+            n_sats: 4,
+            frame_deadline_s: 14.0,
+            tiles_per_frame: 25,
+            workflow_size: 4,
+            delta: 0.5,
+            frames: 10,
+            seed: 7,
+            isl_rate_bps: None,
+            orbit_shift: true,
+        }
+    }
+
+    /// Build the concrete experiment inputs.
+    pub fn build(&self) -> (Workflow, ProfileDb, Constellation) {
+        let wf = workflow::flood_prefix(self.workflow_size, self.delta);
+        let db = ProfileDb::of(self.device);
+        let mut c = if self.orbit_shift {
+            match self.device {
+                Device::JetsonOrinNano => Constellation::jetson(),
+                Device::RaspberryPi4 => Constellation::rpi(),
+            }
+        } else {
+            Constellation::uniform(
+                self.n_sats,
+                self.device,
+                self.frame_deadline_s,
+                self.tiles_per_frame,
+            )
+        };
+        c.n_sats = self
+            .n_sats
+            .max(c.capture_groups.iter().map(|g| g.last_sat + 1).max().unwrap_or(1));
+        c.frame_deadline_s = self.frame_deadline_s;
+        if !self.orbit_shift {
+            c.tiles_per_frame = self.tiles_per_frame;
+        }
+        c.validate().expect("scenario constellation");
+        (wf, db, c)
+    }
+
+    pub fn sim_config(&self) -> crate::sim::SimConfig {
+        crate::sim::SimConfig {
+            frames: self.frames,
+            drain_s: 0.0,
+            seed: self.seed,
+            isl_rate_bps: self.isl_rate_bps,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::from(self.name.clone())),
+            (
+                "device",
+                Json::from(match self.device {
+                    Device::JetsonOrinNano => "jetson",
+                    Device::RaspberryPi4 => "rpi",
+                }),
+            ),
+            ("n_sats", Json::from(self.n_sats)),
+            ("frame_deadline_s", Json::Num(self.frame_deadline_s)),
+            ("tiles_per_frame", Json::from(self.tiles_per_frame)),
+            ("workflow_size", Json::from(self.workflow_size)),
+            ("delta", Json::Num(self.delta)),
+            ("frames", Json::from(self.frames)),
+            ("seed", Json::from(self.seed as usize)),
+            (
+                "isl_rate_bps",
+                self.isl_rate_bps.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("orbit_shift", Json::from(self.orbit_shift)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        use anyhow::anyhow;
+        let base = match j.get("device").and_then(Json::as_str) {
+            Some("rpi") => Self::rpi(),
+            Some("jetson") | None => Self::jetson(),
+            Some(other) => return Err(anyhow!("unknown device {other:?}")),
+        };
+        let get_num = |k: &str, d: f64| j.get(k).and_then(Json::as_f64).unwrap_or(d);
+        let get_usize =
+            |k: &str, d: usize| j.get(k).and_then(Json::as_usize).unwrap_or(d);
+        Ok(Scenario {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or(&base.name)
+                .to_string(),
+            device: base.device,
+            n_sats: get_usize("n_sats", base.n_sats),
+            frame_deadline_s: get_num("frame_deadline_s", base.frame_deadline_s),
+            tiles_per_frame: get_usize("tiles_per_frame", base.tiles_per_frame),
+            workflow_size: get_usize("workflow_size", base.workflow_size).clamp(1, 4),
+            delta: get_num("delta", base.delta),
+            frames: get_usize("frames", base.frames),
+            seed: get_usize("seed", base.seed as usize) as u64,
+            isl_rate_bps: j.get("isl_rate_bps").and_then(Json::as_f64),
+            orbit_shift: j
+                .get("orbit_shift")
+                .and_then(Json::as_bool)
+                .unwrap_or(base.orbit_shift),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_build() {
+        for s in [Scenario::jetson(), Scenario::rpi()] {
+            let (wf, db, c) = s.build();
+            assert_eq!(wf.len(), 4);
+            assert_eq!(db.len(), 4);
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut s = Scenario::jetson();
+        s.delta = 0.3;
+        s.isl_rate_bps = Some(50_000.0);
+        s.frames = 20;
+        let j = s.to_json();
+        let back = Scenario::from_json(&j).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn from_json_defaults() {
+        let j = Json::parse(r#"{"device": "rpi", "workflow_size": 2}"#).unwrap();
+        let s = Scenario::from_json(&j).unwrap();
+        assert_eq!(s.device, Device::RaspberryPi4);
+        assert_eq!(s.workflow_size, 2);
+        assert_eq!(s.frames, Scenario::rpi().frames);
+    }
+
+    #[test]
+    fn unknown_device_rejected() {
+        let j = Json::parse(r#"{"device": "tpu"}"#).unwrap();
+        assert!(Scenario::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn uniform_build_respects_overrides() {
+        let mut s = Scenario::jetson();
+        s.orbit_shift = false;
+        s.n_sats = 6;
+        s.tiles_per_frame = 64;
+        let (_, _, c) = s.build();
+        assert_eq!(c.n_sats, 6);
+        assert_eq!(c.tiles_per_frame, 64);
+        assert_eq!(c.capture_groups.len(), 1);
+    }
+}

@@ -1,0 +1,212 @@
+//! On-board energy subsystem: solar input, eclipse geometry, battery
+//! state of charge.
+//!
+//! The paper budgets analytics power at the solar input of a 3U CubeSat
+//! (7 W, Eq. (9)) and motivates minimizing ISL usage by transmit energy
+//! (§2.3).  This module closes the loop: a circular-orbit eclipse model
+//! (cylindrical Earth-shadow approximation), a panel model producing the
+//! 7 W-class input in sunlight, and a battery integrating generation
+//! against the compute + transmit draws the simulator meters.  The energy
+//! ablation bench uses it to show how duty-cycled ISL usage stretches the
+//! power budget (the paper's "carefully planned and minimized" argument).
+
+use crate::orbit::{CircularOrbit, EARTH_RADIUS_KM};
+
+/// Solar/battery parameters of a 3U CubeSat bus.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerBus {
+    /// Panel output in full sunlight, W (≈ 7 W for a 3U body-mounted set).
+    pub solar_w: f64,
+    /// Battery capacity, watt-hours (typical 3U: 20–40 Wh).
+    pub battery_wh: f64,
+    /// Depth-of-discharge floor as a fraction of capacity (LiIon ~0.2).
+    pub dod_floor: f64,
+    /// Bus idle draw (flight software, sensors), W.
+    pub idle_w: f64,
+}
+
+impl Default for PowerBus {
+    fn default() -> Self {
+        PowerBus { solar_w: 7.0, battery_wh: 30.0, dod_floor: 0.2, idle_w: 0.8 }
+    }
+}
+
+/// Fraction of the orbit spent in Earth's shadow (cylindrical umbra,
+/// sun in the orbital plane — the worst case for a given altitude).
+pub fn eclipse_fraction(orbit: &CircularOrbit) -> f64 {
+    let r = orbit.radius_km();
+    // Half-angle subtended by the shadow cylinder: sin θ = R⊕ / r.
+    let half_angle = (EARTH_RADIUS_KM / r).asin();
+    half_angle / std::f64::consts::PI
+}
+
+/// Whether the satellite is sunlit at time `t` (eclipse centered on the
+/// anti-sun point, sun along +x of the phase reference).
+pub fn sunlit(orbit: &CircularOrbit, t: f64) -> bool {
+    let frac = eclipse_fraction(orbit);
+    let period = orbit.period_s();
+    let phase = (t / period).rem_euclid(1.0);
+    // Eclipse window centered at phase 0.5.
+    (phase - 0.5).abs() > frac / 2.0
+}
+
+/// Battery state-of-charge simulation.
+#[derive(Debug, Clone)]
+pub struct Battery {
+    pub bus: PowerBus,
+    /// Current charge, Wh.
+    pub charge_wh: f64,
+    /// Cumulative energy shortfall (load shed), Wh.
+    pub shed_wh: f64,
+}
+
+impl Battery {
+    pub fn new(bus: PowerBus) -> Self {
+        Battery { charge_wh: bus.battery_wh, shed_wh: 0.0, bus }
+    }
+
+    /// Advance `dt_s` seconds with `load_w` of payload draw while
+    /// `sunlit` decides the input.  Returns the actually-served load power
+    /// (less than requested when the battery floor is hit — the simulator
+    /// treats that as a brownout that pauses analytics).
+    pub fn step(&mut self, load_w: f64, dt_s: f64, sunlit: bool) -> f64 {
+        let input_w = if sunlit { self.bus.solar_w } else { 0.0 };
+        let total_load = load_w + self.bus.idle_w;
+        let net_w = input_w - total_load;
+        let dt_h = dt_s / 3600.0;
+        let floor = self.bus.dod_floor * self.bus.battery_wh;
+        let mut served = load_w;
+        let next = self.charge_wh + net_w * dt_h;
+        if next < floor {
+            // Shed payload load to hold the floor (idle is never shed).
+            let available_w = input_w + (self.charge_wh - floor) / dt_h.max(1e-12)
+                - self.bus.idle_w;
+            served = available_w.clamp(0.0, load_w);
+            let shortfall = load_w - served;
+            self.shed_wh += shortfall * dt_h;
+            self.charge_wh = (self.charge_wh
+                + (input_w - served - self.bus.idle_w) * dt_h)
+                .max(floor);
+        } else {
+            self.charge_wh = next.min(self.bus.battery_wh);
+        }
+        served
+    }
+
+    /// State of charge in [0, 1].
+    pub fn soc(&self) -> f64 {
+        self.charge_wh / self.bus.battery_wh
+    }
+}
+
+/// Orbit-average power available to the payload: solar input × sunlit
+/// fraction, minus idle — the long-term sustainable analytics budget.
+pub fn sustainable_payload_w(orbit: &CircularOrbit, bus: &PowerBus) -> f64 {
+    (bus.solar_w * (1.0 - eclipse_fraction(orbit)) - bus.idle_w).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::property;
+
+    fn leo() -> CircularOrbit {
+        CircularOrbit {
+            altitude_km: 500.0,
+            inclination_deg: 97.4,
+            raan_deg: 0.0,
+            phase_deg: 0.0,
+        }
+    }
+
+    #[test]
+    fn eclipse_fraction_leo_band() {
+        // LEO eclipse fractions are ~0.35-0.40 (about 35 min of a ~95 min
+        // orbit) in the in-plane worst case.
+        let f = eclipse_fraction(&leo());
+        assert!((0.30..0.45).contains(&f), "f={f}");
+        // Higher orbit ⇒ smaller shadow fraction.
+        let geoish = CircularOrbit { altitude_km: 20_000.0, ..leo() };
+        assert!(eclipse_fraction(&geoish) < f);
+    }
+
+    #[test]
+    fn sunlit_pattern_matches_fraction() {
+        let o = leo();
+        let period = o.period_s();
+        let steps = 10_000;
+        let lit = (0..steps)
+            .filter(|&k| sunlit(&o, k as f64 * period / steps as f64))
+            .count() as f64
+            / steps as f64;
+        assert!((lit - (1.0 - eclipse_fraction(&o))).abs() < 0.01, "lit={lit}");
+    }
+
+    #[test]
+    fn battery_full_sun_serves_budget_load() {
+        let mut b = Battery::new(PowerBus::default());
+        // 6 W payload + 0.8 idle < 7 W input: battery stays full.
+        for _ in 0..1000 {
+            let served = b.step(6.0, 10.0, true);
+            assert_eq!(served, 6.0);
+        }
+        assert!(b.soc() > 0.99);
+        assert_eq!(b.shed_wh, 0.0);
+    }
+
+    #[test]
+    fn battery_sheds_when_floor_hit() {
+        let bus = PowerBus { battery_wh: 1.0, ..Default::default() };
+        let mut b = Battery::new(bus);
+        // 7 W payload draw in eclipse drains 1 Wh quickly, then sheds.
+        let mut total_served = 0.0;
+        for _ in 0..3600 {
+            total_served += b.step(7.0, 10.0, false) * 10.0 / 3600.0;
+        }
+        assert!(b.shed_wh > 0.0, "must shed in prolonged eclipse");
+        assert!(b.soc() >= b.bus.dod_floor - 1e-9);
+        assert!(total_served < 7.0 * 10.0, "served less than requested");
+    }
+
+    #[test]
+    fn orbit_cycle_with_paper_budget_is_sustainable() {
+        // The paper's 7 W analytics allocation is an *instantaneous* solar
+        // figure; over eclipse cycles the sustainable average is lower —
+        // run two orbits at the sustainable budget and check no shedding.
+        let o = leo();
+        let bus = PowerBus::default();
+        let budget = sustainable_payload_w(&o, &bus);
+        assert!(budget > 2.0 && budget < 7.0, "budget={budget}");
+        let mut b = Battery::new(bus);
+        let dt = 10.0;
+        let steps = (2.0 * o.period_s() / dt) as usize;
+        for k in 0..steps {
+            b.step(budget * 0.95, dt, sunlit(&o, k as f64 * dt));
+        }
+        assert_eq!(b.shed_wh, 0.0, "sustainable load must never shed");
+        assert!(b.soc() > 0.5);
+    }
+
+    #[test]
+    fn prop_soc_bounded() {
+        property("soc in [floor,1]", 30, |rng| {
+            let bus = PowerBus {
+                solar_w: rng.range(2.0, 12.0),
+                battery_wh: rng.range(5.0, 50.0),
+                dod_floor: rng.range(0.05, 0.4),
+                idle_w: rng.range(0.1, 1.5),
+            };
+            let mut b = Battery::new(bus);
+            let o = leo();
+            for k in 0..500 {
+                let t = k as f64 * 30.0;
+                b.step(rng.range(0.0, 10.0), 30.0, sunlit(&o, t));
+                let soc = b.soc();
+                if !(bus.dod_floor - 1e-9..=1.0 + 1e-9).contains(&soc) {
+                    return Err(format!("soc={soc}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,371 @@
+//! Leader–follower constellations, frames and tiles (paper §3.1, §4.2, §5.4).
+//!
+//! `N_s` satellites are evenly spaced along one orbit; consecutive
+//! satellites revisit the same ground-track location after `Δs` seconds, so
+//! they capture the same (or largely overlapping) frames in sequence —
+//! the overlap that lets OrbitChain pass tiny intermediate results over the
+//! ISL instead of raw tiles.  A frame is divided into `N0` aligned tiles
+//! (sensing functions are calibrated offline so tile ids match across
+//! satellites).
+//!
+//! Natural orbit formation can shift ground tracks so that some tiles are
+//! capturable only by a prefix/suffix subset of the satellites (§5.4).  We
+//! model this with *capture groups*: contiguous satellite subsets `S̄` and
+//! the number of tiles `|I_S̄|` unique to each.
+
+pub mod energy;
+
+use crate::link::Channel;
+use crate::orbit::{along_track_separation_km, CircularOrbit};
+use crate::profile::Device;
+
+/// Satellite index within the constellation, ordered by movement (0 leads).
+pub type SatId = usize;
+
+/// A contiguous satellite subset `S̄` and the tiles only it captures.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CaptureGroup {
+    /// First satellite of the contiguous subset.
+    pub first_sat: SatId,
+    /// Last satellite (inclusive).
+    pub last_sat: SatId,
+    /// Number of tiles per frame unique to this subset (`|I_S̄|`).
+    pub tiles: usize,
+}
+
+impl CaptureGroup {
+    pub fn contains(&self, s: SatId) -> bool {
+        (self.first_sat..=self.last_sat).contains(&s)
+    }
+
+    pub fn sats(&self) -> impl Iterator<Item = SatId> {
+        self.first_sat..=self.last_sat
+    }
+
+    pub fn len(&self) -> usize {
+        self.last_sat - self.first_sat + 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+}
+
+/// A leader–follower Earth-observation constellation.
+#[derive(Debug, Clone)]
+pub struct Constellation {
+    /// Number of satellites `N_s`.
+    pub n_sats: usize,
+    /// On-board compute platform.
+    pub device: Device,
+    /// Frame deadline `Δf`: inter-frame capture time, seconds.
+    pub frame_deadline_s: f64,
+    /// Revisit interval `Δs`: time between consecutive satellites passing
+    /// the same ground location, seconds.
+    pub revisit_interval_s: f64,
+    /// Tiles per ground-track frame `N0`.
+    pub tiles_per_frame: usize,
+    /// ISL channel technology.
+    pub isl: Channel,
+    /// ISL RF transmit power, W.
+    pub isl_tx_power_w: f64,
+    /// Shared orbit (for ISL geometry).
+    pub orbit: CircularOrbit,
+    /// Capture groups covering the frame (§5.4).  Always non-empty; groups
+    /// must partition `tiles_per_frame`.
+    pub capture_groups: Vec<CaptureGroup>,
+}
+
+/// Errors from constellation validation.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ConstellationError {
+    #[error("capture groups cover {got} tiles, frame has {want}")]
+    BadCover { got: usize, want: usize },
+    #[error("capture group [{0}, {1}] out of satellite range")]
+    BadGroup(SatId, SatId),
+    #[error("need at least one satellite")]
+    NoSats,
+}
+
+impl Constellation {
+    /// §6.1 Jetson testbed: 3 satellites, 100-tile frames, Δf ≈ 5 s,
+    /// Δs = 10 s, LoRa ISL; orbit shift gives 5 tiles unique to the leader
+    /// and 20 unique to the first two satellites.
+    pub fn jetson() -> Self {
+        let orbit = CircularOrbit {
+            altitude_km: 500.0,
+            inclination_deg: 97.4,
+            raan_deg: 0.0,
+            phase_deg: 0.0,
+        };
+        Constellation {
+            n_sats: 3,
+            device: Device::JetsonOrinNano,
+            frame_deadline_s: 5.0,
+            revisit_interval_s: 10.0,
+            tiles_per_frame: 100,
+            isl: crate::link::lora(),
+            isl_tx_power_w: 0.05,
+            orbit,
+            capture_groups: vec![
+                CaptureGroup { first_sat: 0, last_sat: 0, tiles: 5 },
+                CaptureGroup { first_sat: 0, last_sat: 1, tiles: 20 },
+                CaptureGroup { first_sat: 0, last_sat: 2, tiles: 75 },
+            ],
+        }
+    }
+
+    /// §6.1 Raspberry Pi testbed: 4 satellites, 25-tile frames,
+    /// Δf ≈ 14 s, Δs = 15 s.
+    pub fn rpi() -> Self {
+        let orbit = CircularOrbit {
+            altitude_km: 500.0,
+            inclination_deg: 97.4,
+            raan_deg: 0.0,
+            phase_deg: 0.0,
+        };
+        Constellation {
+            n_sats: 4,
+            device: Device::RaspberryPi4,
+            frame_deadline_s: 14.0,
+            revisit_interval_s: 15.0,
+            tiles_per_frame: 25,
+            isl: crate::link::lora(),
+            isl_tx_power_w: 0.05,
+            orbit,
+            // Shift groups span ≥ 2 satellites: a CPU-only Pi cannot hold
+            // all four models, so single-satellite unique tiles would be
+            // unplannable (Eq. (13)); the paper's RPi shift is milder.
+            capture_groups: vec![
+                CaptureGroup { first_sat: 0, last_sat: 1, tiles: 7 },
+                CaptureGroup { first_sat: 0, last_sat: 3, tiles: 18 },
+            ],
+        }
+    }
+
+    /// A shift-free constellation (every satellite sees every tile) — the
+    /// default for scaling studies like Fig. 14.
+    pub fn uniform(n_sats: usize, device: Device, deadline_s: f64, tiles: usize) -> Self {
+        let base = match device {
+            Device::JetsonOrinNano => Self::jetson(),
+            Device::RaspberryPi4 => Self::rpi(),
+        };
+        Constellation {
+            n_sats,
+            frame_deadline_s: deadline_s,
+            tiles_per_frame: tiles,
+            capture_groups: vec![CaptureGroup {
+                first_sat: 0,
+                last_sat: n_sats - 1,
+                tiles,
+            }],
+            ..base
+        }
+    }
+
+    /// Validate group cover and ranges.
+    pub fn validate(&self) -> Result<(), ConstellationError> {
+        if self.n_sats == 0 {
+            return Err(ConstellationError::NoSats);
+        }
+        let covered: usize = self.capture_groups.iter().map(|g| g.tiles).sum();
+        if covered != self.tiles_per_frame {
+            return Err(ConstellationError::BadCover {
+                got: covered,
+                want: self.tiles_per_frame,
+            });
+        }
+        for g in &self.capture_groups {
+            if g.first_sat > g.last_sat || g.last_sat >= self.n_sats {
+                return Err(ConstellationError::BadGroup(g.first_sat, g.last_sat));
+            }
+        }
+        Ok(())
+    }
+
+    /// ISL hop count between two satellites (space-relay chain: each
+    /// satellite links only to its nearest neighbors, §2.3).
+    pub fn hops(&self, a: SatId, b: SatId) -> usize {
+        a.abs_diff(b)
+    }
+
+    /// Physical separation between adjacent satellites, km (Appendix C
+    /// geometry: along-track offset of `Δs` seconds).
+    pub fn isl_separation_km(&self) -> f64 {
+        along_track_separation_km(&self.orbit, self.revisit_interval_s)
+    }
+
+    /// Achievable ISL rate between *adjacent* satellites, bit/s.
+    pub fn isl_rate_bps(&self) -> f64 {
+        self.isl.rate_bps(self.isl_tx_power_w, self.isl_separation_km())
+    }
+
+    /// Time satellite `s` passes over the ground location the leader saw at
+    /// `t = 0` (revisit delay accumulates per §6.2(4)).
+    pub fn revisit_time_s(&self, s: SatId) -> f64 {
+        s as f64 * self.revisit_interval_s
+    }
+
+    /// Capture-group index of each tile in a frame: tile ids
+    /// `0..tiles_per_frame` are assigned group-contiguously (calibrated
+    /// tiling, §4.2).
+    pub fn tile_group(&self, tile: usize) -> usize {
+        debug_assert!(tile < self.tiles_per_frame);
+        let mut acc = 0;
+        for (gi, g) in self.capture_groups.iter().enumerate() {
+            acc += g.tiles;
+            if tile < acc {
+                return gi;
+            }
+        }
+        unreachable!("validated cover")
+    }
+
+    /// Whether satellite `s` can capture tile `tile` with its own sensor.
+    pub fn can_capture(&self, s: SatId, tile: usize) -> bool {
+        self.capture_groups[self.tile_group(tile)].contains(s)
+    }
+}
+
+/// A captured ground-track frame.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub id: u64,
+    /// Capture time at the *leader* satellite, seconds.
+    pub t_captured_s: f64,
+    /// Number of tiles (indices `0..n_tiles`; group via
+    /// [`Constellation::tile_group`]).
+    pub n_tiles: usize,
+}
+
+/// Generate the frame sequence captured over `horizon_s` seconds.
+pub fn frame_sequence(c: &Constellation, horizon_s: f64) -> Vec<Frame> {
+    let n = (horizon_s / c.frame_deadline_s).floor() as u64;
+    (0..n)
+        .map(|k| Frame {
+            id: k,
+            t_captured_s: k as f64 * c.frame_deadline_s,
+            n_tiles: c.tiles_per_frame,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::property;
+
+    #[test]
+    fn presets_validate() {
+        Constellation::jetson().validate().unwrap();
+        Constellation::rpi().validate().unwrap();
+        Constellation::uniform(5, Device::JetsonOrinNano, 5.0, 100).validate().unwrap();
+    }
+
+    #[test]
+    fn jetson_groups_match_section_6_1() {
+        // 5 unique to the leader, 20 unique to the first two, rest shared.
+        let c = Constellation::jetson();
+        assert_eq!(c.capture_groups[0].tiles, 5);
+        assert_eq!(c.capture_groups[1].tiles, 20);
+        assert_eq!(
+            c.capture_groups.iter().map(|g| g.tiles).sum::<usize>(),
+            c.tiles_per_frame
+        );
+    }
+
+    #[test]
+    fn bad_cover_rejected() {
+        let mut c = Constellation::jetson();
+        c.capture_groups[0].tiles = 6;
+        assert!(matches!(
+            c.validate(),
+            Err(ConstellationError::BadCover { got: 101, want: 100 })
+        ));
+        let mut c2 = Constellation::jetson();
+        c2.capture_groups[2].last_sat = 9;
+        assert!(matches!(c2.validate(), Err(ConstellationError::BadGroup(0, 9))));
+    }
+
+    #[test]
+    fn tile_group_assignment_contiguous() {
+        let c = Constellation::jetson();
+        assert_eq!(c.tile_group(0), 0);
+        assert_eq!(c.tile_group(4), 0);
+        assert_eq!(c.tile_group(5), 1);
+        assert_eq!(c.tile_group(24), 1);
+        assert_eq!(c.tile_group(25), 2);
+        assert_eq!(c.tile_group(99), 2);
+    }
+
+    #[test]
+    fn capture_semantics_follow_groups() {
+        let c = Constellation::jetson();
+        // Tile 0 only capturable by the leader.
+        assert!(c.can_capture(0, 0));
+        assert!(!c.can_capture(1, 0));
+        assert!(!c.can_capture(2, 0));
+        // Tile 10 by sats 0 and 1.
+        assert!(c.can_capture(0, 10) && c.can_capture(1, 10) && !c.can_capture(2, 10));
+        // Tile 50 by everyone.
+        assert!((0..3).all(|s| c.can_capture(s, 50)));
+    }
+
+    #[test]
+    fn hops_symmetric_chain() {
+        let c = Constellation::rpi();
+        assert_eq!(c.hops(0, 3), 3);
+        assert_eq!(c.hops(3, 0), 3);
+        assert_eq!(c.hops(2, 2), 0);
+    }
+
+    #[test]
+    fn isl_geometry_in_appendix_c_band() {
+        // Jetson preset: Δs = 10 s ⇒ ~75 km separation; LoRa still delivers
+        // kbps-Mbps class rates at 50 mW.
+        let c = Constellation::jetson();
+        let d = c.isl_separation_km();
+        assert!((60.0..90.0).contains(&d), "d={d}");
+        let r = c.isl_rate_bps();
+        assert!(r > 5_000.0, "rate={r}");
+    }
+
+    #[test]
+    fn revisit_times_accumulate() {
+        let c = Constellation::rpi();
+        assert_eq!(c.revisit_time_s(0), 0.0);
+        assert_eq!(c.revisit_time_s(3), 45.0);
+    }
+
+    #[test]
+    fn frame_sequence_spacing() {
+        let c = Constellation::jetson();
+        let frames = frame_sequence(&c, 60.0);
+        assert_eq!(frames.len(), 12);
+        assert_eq!(frames[3].t_captured_s, 15.0);
+        assert!(frames.iter().all(|f| f.n_tiles == 100));
+    }
+
+    #[test]
+    fn prop_every_tile_has_a_capturer() {
+        property("tiles capturable", 30, |rng| {
+            let n_sats = 2 + rng.below(6);
+            let mut c = Constellation::uniform(n_sats, Device::JetsonOrinNano, 5.0, 60);
+            // Random contiguous prefix groups, §5.4 style.
+            let a = 1 + rng.below(20);
+            let b = 1 + rng.below(20);
+            c.capture_groups = vec![
+                CaptureGroup { first_sat: 0, last_sat: 0, tiles: a },
+                CaptureGroup { first_sat: 0, last_sat: n_sats - 1, tiles: 60 - a - b },
+                CaptureGroup { first_sat: n_sats - 1, last_sat: n_sats - 1, tiles: b },
+            ];
+            c.validate().map_err(|e| e.to_string())?;
+            for tile in 0..c.tiles_per_frame {
+                if !(0..c.n_sats).any(|s| c.can_capture(s, tile)) {
+                    return Err(format!("tile {tile} uncapturable"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,690 @@
+//! Experiment drivers — one per paper table/figure.
+//!
+//! Every driver regenerates the rows/series of an evaluation artifact and
+//! returns a [`Table`] (printed by the CLI, the benches and recorded in
+//! EXPERIMENTS.md).  The mapping to the paper is in DESIGN.md's
+//! per-experiment index:
+//!
+//! | driver | artifact |
+//! |---|---|
+//! | [`fig03_contention`] | Fig. 3(b) co-location latency |
+//! | [`fig04_model_speed`] | Fig. 4(b) per-model time for 100 tiles |
+//! | [`fig07_profiling`] | Fig. 7(a–d) profiling curves |
+//! | [`fig08_coldstart_datasize`] | Fig. 8(a,b) |
+//! | [`fig11_completion`] | Fig. 11 / Fig. 13(a) completion ratios |
+//! | [`fig12_comm`] | Fig. 12 / Fig. 13(b) ISL traffic |
+//! | [`fig14_analyzable`] | Fig. 14 analyzable tiles |
+//! | [`fig15_latency`] | Fig. 15 bandwidth vs latency + breakdown |
+//! | [`fig17_ground`] | Fig. 17 ground-contact study |
+//! | [`fig18_isl`] | Fig. 18 TX power vs rate |
+//! | [`tab01_fit`] | Table 1 / Fig. 19 piecewise fits |
+//! | [`fig20_planning`] | Fig. 20 planning/routing runtime |
+
+use std::time::Instant;
+
+use crate::baselines;
+use crate::constellation::Constellation;
+use crate::link;
+use crate::orbit::{presets, visibility};
+use crate::profile::{coldstart::ColdStart, contention, datasize, fit, Device, ProfileDb, FUNC_NAMES};
+use crate::routing;
+use crate::sim::{self, SimConfig, Simulator};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::workflow;
+
+/// A rendered experiment result: header + rows, JSON-exportable.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+        rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("title", Json::from(self.title.clone())),
+            (
+                "header",
+                Json::Arr(self.header.iter().map(|h| Json::from(h.clone())).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::Arr(r.iter().map(|c| Json::from(c.clone())).collect())
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (k, c) in r.iter().enumerate() {
+                widths[k] = widths[k].max(c.len());
+            }
+        }
+        let mut out = format!("== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn f(v: f64) -> String {
+    if v.abs() >= 1000.0 {
+        format!("{v:.0}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+fn device_of(name: &str) -> Device {
+    match name {
+        "rpi" => Device::RaspberryPi4,
+        _ => Device::JetsonOrinNano,
+    }
+}
+
+fn constellation_of(device: Device, deadline: f64) -> Constellation {
+    let mut c = match device {
+        Device::JetsonOrinNano => Constellation::jetson(),
+        Device::RaspberryPi4 => Constellation::rpi(),
+    };
+    c.frame_deadline_s = deadline;
+    c
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 3(b): co-location contention.
+// ---------------------------------------------------------------------------
+
+/// Cloud-detection latency when co-hosted with other models (Fig. 3b).
+pub fn fig03_contention() -> Table {
+    let db = ProfileDb::jetson();
+    let mut t = Table::new(
+        "Fig 3(b): cloud-detection inference latency under co-location (Jetson)",
+        &["co-hosted", "mem_util", "slowdown", "latency_ms/tile", "status"],
+    );
+    let sets: [&[&str]; 4] = [
+        &["cloud"],
+        &["cloud", "landuse"],
+        &["cloud", "landuse", "crop"],
+        &["cloud", "landuse", "crop", "water"],
+    ];
+    let labels = ["D", "D+L", "D+L+R", "D+L+R+W"];
+    let quota = db.spec.beta * db.spec.cpu_cores / 2.0;
+    for (set, label) in sets.iter().zip(labels) {
+        match contention::colocate(&db, set, false) {
+            contention::Colocation::Degraded { slowdown, mem_utilization } => {
+                let v = db.get("cloud").cpu_speed(quota) / slowdown;
+                t.row(vec![
+                    label.into(),
+                    f(mem_utilization),
+                    f(slowdown),
+                    f(1000.0 / v),
+                    "ok".into(),
+                ]);
+            }
+            contention::Colocation::OutOfMemory { required_mb, capacity_mb } => {
+                t.row(vec![
+                    label.into(),
+                    f(required_mb / capacity_mb),
+                    "-".into(),
+                    "-".into(),
+                    "OOM (cannot instantiate)".into(),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4(b): heterogeneous model speeds.
+// ---------------------------------------------------------------------------
+
+/// Time for each model to analyze 100 tiles (Fig. 4b).  With
+/// `hil = Some(runtime)`, the CPU column is measured by real PJRT
+/// inference instead of the profile model.
+pub fn fig04_model_speed(hil: Option<&crate::runtime::ModelRuntime>) -> Table {
+    let db = ProfileDb::jetson();
+    let mut t = Table::new(
+        "Fig 4(b): time to analyze 100 tiles per model (Jetson)",
+        &["model", "cpu_s", "gpu_s", "source"],
+    );
+    for name in FUNC_NAMES {
+        let p = db.get(name);
+        let (cpu_s, source) = match hil {
+            Some(rt) => {
+                let mut gen = crate::runtime::TileGen::new(11);
+                let speed = rt
+                    .measure_speed(name, 100, &mut gen)
+                    .expect("HIL measurement");
+                (100.0 / speed, "pjrt-hil")
+            }
+            None => (100.0 / p.cpu_speed(4.0), "profile"),
+        };
+        let gpu_s = 100.0 / p.gpu_speed;
+        t.row(vec![name.into(), f(cpu_s), f(gpu_s), source.into()]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 7: profiling curves.
+// ---------------------------------------------------------------------------
+
+/// CPU speed / GPU speed / memory / power per function (Fig. 7a–d),
+/// sampled at the paper's quota grid.
+pub fn fig07_profiling() -> Table {
+    let db = ProfileDb::jetson();
+    let mut t = Table::new(
+        "Fig 7: analytics function profiling (Jetson, 7 W)",
+        &["func", "quota", "cpu_tiles_s", "gpu_tiles_s", "cmem_mb", "power_w"],
+    );
+    for name in FUNC_NAMES {
+        let p = db.get(name);
+        for q in [0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0] {
+            t.row(vec![
+                name.into(),
+                f(q),
+                f(p.cpu_speed(q)),
+                f(p.gpu_speed),
+                f(p.cmem_mb),
+                f(p.cpu_power(q)),
+            ]);
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 8: cold start + data sizes.
+// ---------------------------------------------------------------------------
+
+/// GPU cold-start decay (Fig. 8a) and per-tile data volumes (Fig. 8b).
+pub fn fig08_coldstart_datasize() -> (Table, Table) {
+    let cs = ColdStart::default();
+    let mut a = Table::new(
+        "Fig 8(a): GPU inference latency multiplier by round",
+        &["round", "multiplier"],
+    );
+    for round in 0..10 {
+        a.row(vec![round.to_string(), f(cs.factor(round))]);
+    }
+    let db = ProfileDb::jetson();
+    let mut b = Table::new(
+        "Fig 8(b): per-tile data sizes",
+        &["kind", "bytes", "vs_raw"],
+    );
+    b.row(vec!["raw 640px tile".into(), f(datasize::RAW_TILE_BYTES), "1".into()]);
+    for name in FUNC_NAMES {
+        let bytes = datasize::intermediate_bytes(&db, name);
+        b.row(vec![
+            format!("{name} result"),
+            f(bytes),
+            format!("1/{:.0}", datasize::RAW_TILE_BYTES / bytes),
+        ]);
+    }
+    (a, b)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 11 / Fig. 13(a): completion ratios.
+// ---------------------------------------------------------------------------
+
+/// Completion ratio per (workflow size, frame deadline, framework)
+/// (Fig. 11 on Jetson, Fig. 13(a) on RPi).
+pub fn fig11_completion(device_name: &str, frames: usize) -> Table {
+    let device = device_of(device_name);
+    let deadlines: &[f64] = match device {
+        Device::JetsonOrinNano => &[4.75, 5.0, 5.25, 5.5],
+        Device::RaspberryPi4 => &[12.0, 14.0, 16.0],
+    };
+    let mut t = Table::new(
+        &format!(
+            "Fig {}: completion ratio ({device_name})",
+            if device == Device::JetsonOrinNano { "11" } else { "13(a)" }
+        ),
+        &["workflow", "deadline_s", "orbitchain", "data_par", "compute_par"],
+    );
+    for wf_size in 2..=4 {
+        let wf = workflow::flood_prefix(wf_size, 0.5);
+        let db = ProfileDb::of(device);
+        for &dl in deadlines {
+            let c = constellation_of(device, dl);
+            let cfg = SimConfig { frames, ..Default::default() };
+            let ours = sim::simulate_orbitchain(&wf, &db, &c, cfg.clone())
+                .map(|r| r.completion_ratio)
+                .unwrap_or(0.0);
+            let dp = baselines::data_parallelism(&wf, &db, &c);
+            let dp_ratio = if dp.instantiated {
+                Simulator::new(&wf, &db, &c, dp.instances, &dp.pipelines, cfg.clone())
+                    .run()
+                    .completion_ratio
+            } else {
+                0.0
+            };
+            let cp = baselines::compute_parallelism(&wf, &db, &c);
+            let cp_ratio = if cp.instantiated {
+                Simulator::new(&wf, &db, &c, cp.instances, &cp.pipelines, cfg)
+                    .run()
+                    .completion_ratio
+            } else {
+                0.0
+            };
+            t.row(vec![
+                format!("{wf_size}-func"),
+                f(dl),
+                f(ours),
+                f(dp_ratio),
+                f(cp_ratio),
+            ]);
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 12 / Fig. 13(b): communication overhead.
+// ---------------------------------------------------------------------------
+
+/// Per-frame ISL traffic, OrbitChain vs load spraying, sweeping the cloud
+/// distribution ratio (Fig. 12 Jetson, Fig. 13(b) RPi).
+pub fn fig12_comm(device_name: &str) -> Table {
+    let device = device_of(device_name);
+    let mut t = Table::new(
+        &format!(
+            "Fig {}: per-frame ISL traffic vs cloud ratio ({device_name})",
+            if device == Device::JetsonOrinNano { "12" } else { "13(b)" }
+        ),
+        &["delta", "orbitchain_B", "spray_B", "saving"],
+    );
+    for delta in [0.1, 0.3, 0.5, 0.7, 0.9] {
+        let mut wf = workflow::flood_monitoring(0.5);
+        wf.set_out_ratio(0, delta); // cloud-detection pass ratio
+        let db = ProfileDb::of(device);
+        let c = constellation_of(device, match device {
+            Device::JetsonOrinNano => 5.0,
+            Device::RaspberryPi4 => 14.0,
+        });
+        let Ok(plan) = crate::planner::plan(&wf, &db, &c) else {
+            t.row(vec![f(delta), "-".into(), "-".into(), "infeasible".into()]);
+            continue;
+        };
+        let ours = routing::route(&wf, &db, &c, &plan).expect("route");
+        let spray = routing::route_load_spraying(&wf, &db, &c, &plan);
+        let saving = if spray.isl_bytes_per_frame > 0.0 {
+            1.0 - ours.isl_bytes_per_frame / spray.isl_bytes_per_frame
+        } else {
+            0.0
+        };
+        t.row(vec![
+            f(delta),
+            f(ours.isl_bytes_per_frame),
+            f(spray.isl_bytes_per_frame),
+            format!("{:.0}%", saving * 100.0),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 14: analyzable tiles.
+// ---------------------------------------------------------------------------
+
+/// Max analyzable tiles per frame vs constellation size (Fig. 14) —
+/// feasibility search on Program (10) as in the paper.
+pub fn fig14_analyzable(device_name: &str) -> Table {
+    let device = device_of(device_name);
+    let (deadline, n0) = match device {
+        Device::JetsonOrinNano => (5.0, 100),
+        Device::RaspberryPi4 => (14.0, 25),
+    };
+    let wf = workflow::flood_monitoring(0.5);
+    let db = ProfileDb::of(device);
+    let rho = wf.workload_factors().unwrap();
+    let mut t = Table::new(
+        &format!("Fig 14: analyzable tiles within deadline ({device_name})"),
+        &["n_sats", "orbitchain", "compute_par", "gain"],
+    );
+    for n_sats in 3..=8 {
+        let c = Constellation::uniform(n_sats, device, deadline, n0);
+        let ours = crate::planner::plan(&wf, &db, &c)
+            .map(|p| p.max_analyzable_tiles(n0))
+            .unwrap_or(0);
+        // Compute parallelism: bottleneck over its fixed placement.
+        let cp = baselines::compute_parallelism(&wf, &db, &c);
+        let cp_tiles = if cp.instantiated {
+            // Per-function capacity per frame deadline.
+            let mut per_func = vec![0.0f64; wf.len()];
+            for inst in &cp.instances {
+                let cap = match inst.dev {
+                    routing::Dev::Cpu => inst.rate_tiles_s * deadline,
+                    routing::Dev::Gpu => inst.rate_tiles_s * inst.window.len,
+                };
+                per_func[inst.func] += cap;
+            }
+            per_func
+                .iter()
+                .zip(&rho)
+                .map(|(cap, r)| if *r > 0.0 { cap / r } else { f64::INFINITY })
+                .fold(f64::INFINITY, f64::min)
+                .floor() as usize
+        } else {
+            0
+        };
+        let gain = if cp_tiles > 0 {
+            format!("{:+.0}%", (ours as f64 / cp_tiles as f64 - 1.0) * 100.0)
+        } else {
+            "-".into()
+        };
+        t.row(vec![n_sats.to_string(), ours.to_string(), cp_tiles.to_string(), gain]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 15: bandwidth vs end-to-end latency.
+// ---------------------------------------------------------------------------
+
+/// End-to-end frame latency and breakdown across ISL bandwidths (Fig. 15).
+pub fn fig15_latency(device_name: &str, frames: usize) -> Table {
+    let device = device_of(device_name);
+    // Jetson: 3-function chain per §6.2(4); RPi: full workflow.
+    let wf = match device {
+        Device::JetsonOrinNano => workflow::flood_prefix(3, 0.5),
+        Device::RaspberryPi4 => workflow::flood_monitoring(0.5),
+    };
+    let db = ProfileDb::of(device);
+    let c = constellation_of(device, match device {
+        Device::JetsonOrinNano => 5.0,
+        Device::RaspberryPi4 => 14.0,
+    });
+    let mut t = Table::new(
+        &format!("Fig 15: ISL bandwidth vs frame latency ({device_name})"),
+        &["bw_bps", "latency_s", "proc_s", "comm_s", "revisit_s"],
+    );
+    for bw in [5_000.0, 50_000.0, 500_000.0, 2_000_000.0] {
+        let cfg = SimConfig { frames, isl_rate_bps: Some(bw), ..Default::default() };
+        match sim::simulate_orbitchain(&wf, &db, &c, cfg) {
+            Ok(rep) => {
+                let (p, co, r) = rep.breakdown;
+                t.row(vec![
+                    format!("{bw:.0}"),
+                    f(rep.frame_latency_s),
+                    f(p),
+                    f(co),
+                    f(r),
+                ]);
+            }
+            Err(e) => t.row(vec![format!("{bw:.0}"), format!("error: {e}"), "-".into(), "-".into(), "-".into()]),
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 17: ground-contact study (Appendix B).
+// ---------------------------------------------------------------------------
+
+/// Ground-connection intervals and downlinkable ratios per constellation
+/// (Fig. 17a/b).
+pub fn fig17_ground(horizon_s: f64, dt_s: f64) -> Table {
+    let stations = presets::ground_stations();
+    let mut t = Table::new(
+        "Fig 17: satellite-ground contact study (24h, 10 stations)",
+        &[
+            "constellation",
+            "contacts",
+            "median_gap_s",
+            "p90_gap_s",
+            "frac_gap>1h",
+            "mean_downlinkable",
+        ],
+    );
+    for p in presets::all() {
+        let (intervals, ratios) = visibility::sweep_preset(&p, &stations, horizon_s, dt_s, 0.5);
+        if intervals.is_empty() {
+            t.row(vec![p.name.into(), "0".into(), "-".into(), "-".into(), "-".into(), "-".into()]);
+            continue;
+        }
+        let frac: f64 = intervals.iter().filter(|&&g| g >= 3600.0).count() as f64
+            / intervals.len() as f64;
+        t.row(vec![
+            p.name.into(),
+            intervals.len().to_string(),
+            f(stats::percentile(&intervals, 50.0)),
+            f(stats::percentile(&intervals, 90.0)),
+            f(frac),
+            f(stats::mean(&ratios)),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 18: ISL power vs rate (Appendix C).
+// ---------------------------------------------------------------------------
+
+/// Achievable ISL rate vs RF transmit power for LoRa and S-band (Fig. 18).
+pub fn fig18_isl() -> Table {
+    let mut t = Table::new(
+        "Fig 18: TX power vs achievable ISL rate at 45 km",
+        &["tx_w", "lora_bps", "sband_bps"],
+    );
+    let d = link::operating_points::SEPARATION_KM;
+    let lora = link::lora();
+    let sband = link::sband();
+    for &p in &[0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0] {
+        t.row(vec![
+            format!("{p}"),
+            f(lora.rate_bps(p, d)),
+            f(sband.rate_bps(p, d)),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 / Fig. 19: piecewise-linear fits.
+// ---------------------------------------------------------------------------
+
+/// Refit the two-piece speed curves from noisy profiling samples (Table 1).
+pub fn tab01_fit(seed: u64) -> Table {
+    let db = ProfileDb::jetson();
+    let mut rng = Rng::new(seed);
+    let mut t = Table::new(
+        "Table 1: piecewise-linear speed fits (3 noisy profiling rounds)",
+        &["func", "segment", "slope", "intercept", "r2"],
+    );
+    let quotas: Vec<f64> = (0..15).map(|i| 0.5 + i as f64 * 0.25).collect();
+    for name in FUNC_NAMES {
+        let curve = &db.get(name).cspeed;
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..3 {
+            xs.extend_from_slice(&quotas);
+            ys.extend(fit::sample_curve(curve, &quotas, 0.03, &mut rng));
+        }
+        let fitres = fit::fit_two_piece(&xs, &ys);
+        for (label, seg) in [("lo", &fitres.lo), ("hi", &fitres.hi)] {
+            t.row(vec![
+                name.into(),
+                format!("{label} [{:.2},{:.2}]", seg.x0, seg.x1),
+                f(seg.slope),
+                f(seg.intercept),
+                f(seg.r2),
+            ]);
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 20: planning efficiency.
+// ---------------------------------------------------------------------------
+
+/// Solve time of Program (10) and runtime of Algorithm 1 across
+/// constellation/workflow sizes (Fig. 20a/b).
+pub fn fig20_planning() -> Table {
+    // Large synthetic instances are timing probes, not quality studies:
+    // bound the B&B so the 10x10 point reflects per-node LP cost (the
+    // paper's Gurobi point is ~30 s there; ours lands in the same order).
+    let had = std::env::var("ORBITCHAIN_PLAN_NODES").ok();
+    if had.is_none() {
+        std::env::set_var("ORBITCHAIN_PLAN_NODES", "60");
+    }
+    let mut t = Table::new(
+        "Fig 20: planning efficiency (synthetic workflows)",
+        &["n_sats", "n_funcs", "milp_ms", "nodes", "route_us", "phi"],
+    );
+    let sizes = [(5usize, 4usize), (6, 5), (8, 6), (10, 8), (10, 10)];
+    for (n_sats, n_funcs) in sizes {
+        let mut rng = Rng::new((n_sats * 31 + n_funcs) as u64);
+        let wf = workflow::random_dag(n_funcs, 0.35, &mut rng);
+        let db = ProfileDb::synthetic(n_funcs, 99, Device::JetsonOrinNano);
+        let c = Constellation::uniform(n_sats, Device::JetsonOrinNano, 5.0, 100);
+        let t0 = Instant::now();
+        let planned = crate::planner::plan(&wf, &db, &c);
+        let milp_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        match planned {
+            Ok(plan) => {
+                let t1 = Instant::now();
+                let _ = routing::route(&wf, &db, &c, &plan);
+                let route_us = t1.elapsed().as_secs_f64() * 1e6;
+                t.row(vec![
+                    n_sats.to_string(),
+                    n_funcs.to_string(),
+                    f(milp_ms),
+                    plan.nodes.to_string(),
+                    f(route_us),
+                    f(plan.phi),
+                ]);
+            }
+            Err(e) => t.row(vec![
+                n_sats.to_string(),
+                n_funcs.to_string(),
+                f(milp_ms),
+                "-".into(),
+                "-".into(),
+                format!("{e}"),
+            ]),
+        }
+    }
+    if had.is_none() {
+        std::env::remove_var("ORBITCHAIN_PLAN_NODES");
+    }
+    t
+}
+
+/// Export a set of tables as a JSON report document.
+pub fn report_json(tables: &[Table]) -> Json {
+    Json::Arr(tables.iter().map(|t| t.to_json()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_render_and_json() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("demo") && s.contains('1'));
+        let j = t.to_json();
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn fig03_shows_oom_for_full_set() {
+        let t = fig03_contention();
+        assert_eq!(t.rows.len(), 4);
+        assert!(t.rows[3][4].contains("OOM"));
+        // Latency increases with co-hosting while instantiable.
+        let l1: f64 = t.rows[0][3].parse().unwrap();
+        let l3: f64 = t.rows[2][3].parse().unwrap();
+        assert!(l3 > l1);
+    }
+
+    #[test]
+    fn fig04_gpu_faster_than_cpu() {
+        let t = fig04_model_speed(None);
+        for r in &t.rows {
+            let cpu: f64 = r[1].parse().unwrap();
+            let gpu: f64 = r[2].parse().unwrap();
+            assert!(gpu < cpu, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn fig08_shapes() {
+        let (a, b) = fig08_coldstart_datasize();
+        assert_eq!(a.rows.len(), 10);
+        assert_eq!(b.rows.len(), 5);
+        // First cold-start multiplier large, last ≈ 1.
+        let first: f64 = a.rows[0][1].parse().unwrap();
+        let last: f64 = a.rows[9][1].parse().unwrap();
+        assert!(first > 5.0 && last < 1.2);
+    }
+
+    #[test]
+    fn fig18_sband_dominates_at_low_power() {
+        let t = fig18_isl();
+        // At 0.05 W, S-band rate > LoRa rate.
+        let row = t.rows.iter().find(|r| r[0] == "0.05").unwrap();
+        let lora: f64 = row[1].parse().unwrap();
+        let sband: f64 = row[2].parse().unwrap();
+        assert!(sband > lora);
+    }
+
+    #[test]
+    fn tab01_r2_high() {
+        let t = tab01_fit(42);
+        for r in &t.rows {
+            let r2: f64 = r[4].parse().unwrap();
+            assert!(r2 > 0.75, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn fig17_runs_quickly_at_coarse_step() {
+        let t = fig17_ground(6.0 * 3600.0, 30.0);
+        assert_eq!(t.rows.len(), 5);
+    }
+}

@@ -1,0 +1,51 @@
+//! # OrbitChain
+//!
+//! A reproduction of *OrbitChain: Orchestrating In-orbit Real-time Analytics
+//! of Earth Observation Data* (CS.DC 2025) as a three-layer Rust + JAX +
+//! Pallas system.
+//!
+//! This crate is **Layer 3**: the coordinator that owns planning
+//! (analytics-function deployment + resource allocation, Program (10)),
+//! workload routing (Algorithm 1), the constellation runtime (discrete-event
+//! simulation of sensing/analytics pipelines, inter-satellite links, GPU
+//! time-slicing), and the hardware-in-the-loop executor that runs the
+//! AOT-compiled analytics models (Layers 2/1, built once by
+//! `python/compile/aot.py`) through the PJRT C API.
+//!
+//! Module map (see DESIGN.md for the full inventory and experiment index):
+//!
+//! * [`util`] — offline-friendly substrates: JSON, PRNG, stats, testkit.
+//! * [`workflow`] — analytics workflow DAGs, distribution ratios, workload
+//!   factors (Definition 1, Algorithm 2).
+//! * [`profile`] — device & analytics-function performance models (§4.3).
+//! * [`lp`] — dense simplex LP solver + branch-and-bound MILP.
+//! * [`planner`] — Program (10): deployment & resource allocation (§5.2).
+//! * [`routing`] — Algorithm 1 workload routing + load-spraying baseline.
+//! * [`orbit`] — orbital mechanics, ground stations, visibility (App. B).
+//! * [`link`] — inter-satellite link budgets: LoRa / S-band (App. C).
+//! * [`constellation`] — leader–follower constellations, frames & tiles.
+//! * [`sim`] — discrete-event runtime: queues, GPU slices, ISL traffic.
+//! * [`runtime`] — PJRT artifact loading & hardware-in-the-loop inference.
+//! * [`baselines`] — data parallelism & compute parallelism frameworks.
+//! * [`telemetry`] — metric registry and reports.
+//! * [`exp`] — one driver per paper figure/table.
+//! * [`config`] — scenario configuration & §6.1 presets.
+
+pub mod baselines;
+pub mod config;
+pub mod constellation;
+pub mod exp;
+pub mod link;
+pub mod lp;
+pub mod orbit;
+pub mod planner;
+pub mod profile;
+pub mod routing;
+pub mod runtime;
+pub mod sim;
+pub mod telemetry;
+pub mod util;
+pub mod workflow;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

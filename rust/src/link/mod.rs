@@ -1,0 +1,287 @@
+//! Inter-satellite link budgets (paper §2.3, Appendix C, Fig. 18).
+//!
+//! Physical-layer model for the two ISL technologies the paper simulates in
+//! the short-range same-orbit geometry (40–50 km separation):
+//!
+//! * **LoRa**: 915 MHz, 125 kHz–1 MHz bandwidth, low-gain (2 dBi)
+//!   quasi-omni antennas, no pointing requirement, always-on capable.
+//! * **S-band**: 2.2–2.4 GHz, 1–2 MHz bandwidth, modest directional gain,
+//!   Mbps-class rates at < 0.1 W transmit power — duty-cycled delivery.
+//!
+//! Achievable rate = spectral-efficiency-capped Shannon capacity over a
+//! free-space path-loss budget; transmit *energy* per byte follows from the
+//! rate-at-power curve plus a power-amplifier efficiency and radio overhead
+//! (the MobiCom'24 measurement the paper cites reports ~18 W peak radio
+//! consumption while transmitting and near-zero idle).
+
+/// Speed of light, m/s.
+pub const C_LIGHT: f64 = 299_792_458.0;
+/// Boltzmann constant, dBm/Hz at 290 K reference (−174 dBm/Hz).
+pub const THERMAL_NOISE_DBM_HZ: f64 = -174.0;
+
+/// An ISL channel configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Channel {
+    pub name: &'static str,
+    /// Carrier frequency, Hz.
+    pub freq_hz: f64,
+    /// Occupied bandwidth, Hz.
+    pub bandwidth_hz: f64,
+    /// Combined TX+RX antenna gain, dBi.
+    pub antenna_gain_dbi: f64,
+    /// Receiver noise figure, dB.
+    pub noise_figure_db: f64,
+    /// Spectral-efficiency cap, bit/s/Hz (modulation limit: LoRa CSS is far
+    /// from Shannon; S-band QPSK-class caps near 2).
+    pub max_spectral_eff: f64,
+    /// Implementation loss from Shannon, as a multiplicative efficiency.
+    pub impl_efficiency: f64,
+    /// Power-amplifier efficiency (RF out / DC in).
+    pub pa_efficiency: f64,
+    /// Fixed radio overhead while transmitting, W.
+    pub tx_overhead_w: f64,
+}
+
+/// LoRa ISL at full 1 MHz aggregated bandwidth (Fig. 18 upper LoRa curve).
+pub fn lora() -> Channel {
+    Channel {
+        name: "LoRa",
+        freq_hz: 915.0e6,
+        bandwidth_hz: 1.0e6,
+        antenna_gain_dbi: 2.0 + 2.0,
+        noise_figure_db: 6.0,
+        max_spectral_eff: 1.5,
+        impl_efficiency: 0.5,
+        pa_efficiency: 0.2,
+        tx_overhead_w: 0.3,
+    }
+}
+
+/// Narrowband LoRa profile used on many CubeSats (5–50 kbps regime of
+/// §2.3); 125 kHz single channel.
+pub fn lora_narrow() -> Channel {
+    Channel { bandwidth_hz: 125.0e3, ..lora() }
+}
+
+/// S-band ISL (Pulsar-STX-class transmitter).
+pub fn sband() -> Channel {
+    Channel {
+        name: "S-Band",
+        freq_hz: 2.3e9,
+        bandwidth_hz: 2.0e6,
+        antenna_gain_dbi: 10.0 + 10.0,
+        noise_figure_db: 5.0,
+        max_spectral_eff: 2.0,
+        impl_efficiency: 0.55,
+        pa_efficiency: 0.25,
+        tx_overhead_w: 0.5,
+    }
+}
+
+impl Channel {
+    /// Free-space path loss at distance `d_km`, dB.
+    pub fn fspl_db(&self, d_km: f64) -> f64 {
+        let d_m = d_km * 1000.0;
+        20.0 * (4.0 * std::f64::consts::PI * d_m * self.freq_hz / C_LIGHT).log10()
+    }
+
+    /// Received power for `tx_w` RF watts at `d_km`, dBm.
+    pub fn rx_power_dbm(&self, tx_w: f64, d_km: f64) -> f64 {
+        let tx_dbm = 10.0 * (tx_w * 1000.0).log10();
+        tx_dbm + self.antenna_gain_dbi - self.fspl_db(d_km)
+    }
+
+    /// Noise floor over the channel bandwidth, dBm.
+    pub fn noise_floor_dbm(&self) -> f64 {
+        THERMAL_NOISE_DBM_HZ + 10.0 * self.bandwidth_hz.log10() + self.noise_figure_db
+    }
+
+    /// Linear SNR for `tx_w` RF watts at `d_km`.
+    pub fn snr(&self, tx_w: f64, d_km: f64) -> f64 {
+        let snr_db = self.rx_power_dbm(tx_w, d_km) - self.noise_floor_dbm();
+        10f64.powf(snr_db / 10.0)
+    }
+
+    /// Achievable data rate at transmit (RF) power `tx_w` and range `d_km`,
+    /// bit/s: implementation-derated Shannon, capped by the modulation's
+    /// spectral-efficiency ceiling (Fig. 18 curves).
+    pub fn rate_bps(&self, tx_w: f64, d_km: f64) -> f64 {
+        if tx_w <= 0.0 {
+            return 0.0;
+        }
+        let shannon = self.bandwidth_hz * (1.0 + self.snr(tx_w, d_km)).log2();
+        (self.impl_efficiency * shannon).min(self.max_spectral_eff * self.bandwidth_hz)
+    }
+
+    /// Minimum RF transmit power to sustain `rate_bps` at `d_km`, W
+    /// (`None` if the rate exceeds the channel ceiling).  Analytic Shannon
+    /// inversion.
+    pub fn power_for_rate_w(&self, rate_bps: f64, d_km: f64) -> Option<f64> {
+        if rate_bps <= 0.0 {
+            return Some(0.0);
+        }
+        if rate_bps > self.max_spectral_eff * self.bandwidth_hz {
+            return None;
+        }
+        let needed_snr = 2f64.powf(rate_bps / (self.impl_efficiency * self.bandwidth_hz)) - 1.0;
+        let needed_rx_dbm =
+            self.noise_floor_dbm() + 10.0 * needed_snr.log10();
+        let tx_dbm = needed_rx_dbm - self.antenna_gain_dbi + self.fspl_db(d_km);
+        Some(10f64.powf(tx_dbm / 10.0) / 1000.0)
+    }
+
+    /// DC power consumption while transmitting at RF power `tx_w`, W.
+    pub fn tx_consumption_w(&self, tx_w: f64) -> f64 {
+        if tx_w <= 0.0 {
+            0.0
+        } else {
+            tx_w / self.pa_efficiency + self.tx_overhead_w
+        }
+    }
+
+    /// Energy to move `bytes` over `d_km` at RF power `tx_w`, joules.
+    pub fn energy_j(&self, bytes: f64, tx_w: f64, d_km: f64) -> f64 {
+        let rate = self.rate_bps(tx_w, d_km);
+        if rate <= 0.0 {
+            return f64::INFINITY;
+        }
+        let seconds = bytes * 8.0 / rate;
+        seconds * self.tx_consumption_w(tx_w)
+    }
+
+    /// Transfer time for `bytes` at RF power `tx_w`, seconds.
+    pub fn transfer_time_s(&self, bytes: f64, tx_w: f64, d_km: f64) -> f64 {
+        let rate = self.rate_bps(tx_w, d_km);
+        if rate <= 0.0 {
+            f64::INFINITY
+        } else {
+            bytes * 8.0 / rate
+        }
+    }
+}
+
+/// Default operating points used by the evaluation (Appendix C "parameter
+/// selection"): low-power transmission below 0.1 W RF.
+pub mod operating_points {
+    /// LoRa slow profile: 5 kbps (§6 latency study lower point).
+    pub const LORA_SLOW_BPS: f64 = 5_000.0;
+    /// LoRa fast profile: 50 kbps.
+    pub const LORA_FAST_BPS: f64 = 50_000.0;
+    /// S-band duty-cycled profile: 2 Mbps.
+    pub const SBAND_BPS: f64 = 2_000_000.0;
+    /// Design inter-satellite separation, km (Appendix C geometry).
+    pub const SEPARATION_KM: f64 = 45.0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::property;
+
+    const D: f64 = operating_points::SEPARATION_KM;
+
+    #[test]
+    fn fspl_reference_value() {
+        // 915 MHz at 45 km: ≈ 124.7 dB.
+        let l = lora().fspl_db(45.0);
+        assert!((l - 124.7).abs() < 0.5, "fspl={l}");
+    }
+
+    #[test]
+    fn sband_reaches_2mbps_under_100mw() {
+        // Appendix C: S-Band ≈ 2 Mbps with < 0.1 W transmit power.
+        let ch = sband();
+        let p = ch.power_for_rate_w(operating_points::SBAND_BPS, D).unwrap();
+        assert!(p < 0.1, "needs {p} W");
+        assert!(p > 1e-4, "implausibly easy: {p} W");
+    }
+
+    #[test]
+    fn lora_capped_below_1_5_mbps() {
+        // Appendix C: LoRa stays under 1.5 Mbps across power levels.
+        let ch = lora();
+        for &p in &[0.01, 0.1, 1.0, 10.0, 100.0] {
+            assert!(ch.rate_bps(p, D) <= 1.5e6 + 1.0, "p={p}");
+        }
+        // And it does eventually reach the cap.
+        assert!((ch.rate_bps(50.0, D) - 1.5e6).abs() < 1e3);
+    }
+
+    #[test]
+    fn lora_narrow_covers_cubesat_kbps_band() {
+        // §2.3: LoRa radios on LEO satellites provide 5–50 kbps.
+        let ch = lora_narrow();
+        let p5 = ch.power_for_rate_w(5_000.0, D).unwrap();
+        let p50 = ch.power_for_rate_w(50_000.0, D).unwrap();
+        assert!(p5 < p50);
+        assert!(p50 < 0.2, "50 kbps needs {p50} W");
+    }
+
+    #[test]
+    fn rate_monotone_in_power_and_saturates() {
+        property("rate monotone", 40, |rng| {
+            let ch = if rng.chance(0.5) { lora() } else { sband() };
+            let p1 = rng.range(1e-4, 1.0);
+            let p2 = p1 * rng.range(1.0, 20.0);
+            let (r1, r2) = (ch.rate_bps(p1, D), ch.rate_bps(p2, D));
+            if r2 + 1e-9 < r1 {
+                return Err(format!("{}: rate({p2})={r2} < rate({p1})={r1}", ch.name));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rate_decreases_with_distance() {
+        let ch = sband();
+        // Below the SE cap, more distance ⇒ lower rate.
+        let p = 1e-3;
+        assert!(ch.rate_bps(p, 40.0) > ch.rate_bps(p, 500.0));
+    }
+
+    #[test]
+    fn power_for_rate_roundtrip() {
+        property("power/rate roundtrip", 30, |rng| {
+            let ch = if rng.chance(0.5) { lora() } else { sband() };
+            let target = rng.range(1e3, ch.max_spectral_eff * ch.bandwidth_hz * 0.95);
+            let p = ch
+                .power_for_rate_w(target, D)
+                .ok_or("power_for_rate failed below cap")?;
+            let r = ch.rate_bps(p, D);
+            crate::util::testkit::close(r, target, 1e-3)
+        });
+    }
+
+    #[test]
+    fn rate_above_cap_unreachable() {
+        assert!(sband().power_for_rate_w(1e9, D).is_none());
+        assert_eq!(sband().power_for_rate_w(0.0, D), Some(0.0));
+    }
+
+    #[test]
+    fn energy_scales_linearly_with_bytes() {
+        let ch = sband();
+        let e1 = ch.energy_j(1e6, 0.05, D);
+        let e2 = ch.energy_j(2e6, 0.05, D);
+        assert!((e2 / e1 - 2.0).abs() < 1e-9);
+        assert_eq!(ch.energy_j(1e6, 0.0, D), f64::INFINITY);
+    }
+
+    #[test]
+    fn raw_vs_intermediate_energy_gap() {
+        // The Fig. 8(b)/Fig. 15 argument: shipping a raw 1.2 MB tile over
+        // LoRa costs orders of magnitude more energy than a ~120 B mask.
+        let ch = lora_narrow();
+        let raw = ch.energy_j(crate::profile::datasize::RAW_TILE_BYTES, 0.05, D);
+        let mask = ch.energy_j(120.0, 0.05, D);
+        assert!(raw / mask > 1e3, "gap {}", raw / mask);
+    }
+
+    #[test]
+    fn consumption_includes_overhead_and_pa() {
+        let ch = lora();
+        assert_eq!(ch.tx_consumption_w(0.0), 0.0);
+        let c = ch.tx_consumption_w(1.0);
+        assert!((c - (1.0 / 0.2 + 0.3)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,344 @@
+//! OrbitChain command-line interface — the Layer-3 leader entrypoint.
+//!
+//! ```text
+//! orbitchain plan       [--device jetson|rpi] [--workflow N] [--deadline S] [--sats N] [--delta D]
+//! orbitchain route      [same flags]            # Algorithm 1 + traffic summary
+//! orbitchain simulate   [same flags] [--frames N] [--isl-bps R] [--json]
+//! orbitchain experiment <fig3b|fig4b|fig7|fig8|fig11|fig12|fig13|fig14|fig15|fig17|fig18|tab1|fig20|all>
+//!                       [--device jetson|rpi] [--frames N] [--json]
+//! orbitchain infer      [--model cloud] [--tiles N] [--artifacts DIR]  # PJRT HIL
+//! orbitchain version
+//! ```
+//!
+//! (Argument parsing is hand-rolled: `clap` is not in the offline vendor
+//! set.)
+
+use std::collections::HashMap;
+
+use orbitchain::config::Scenario;
+use orbitchain::exp;
+use orbitchain::runtime::{ModelRuntime, TileGen};
+use orbitchain::{baselines, planner, routing, sim};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Parse `--key value` / `--flag` pairs after the subcommand.
+fn parse_flags(rest: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < rest.len() {
+        let a = &rest[i];
+        if let Some(key) = a.strip_prefix("--") {
+            let takes_value = i + 1 < rest.len() && !rest[i + 1].starts_with("--");
+            if takes_value {
+                flags.insert(key.to_string(), rest[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(a.clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn scenario_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<Scenario> {
+    let mut s = match flags.get("device").map(String::as_str) {
+        Some("rpi") => Scenario::rpi(),
+        Some("jetson") | None => Scenario::jetson(),
+        Some(other) => anyhow::bail!("unknown --device {other:?} (jetson|rpi)"),
+    };
+    if let Some(v) = flags.get("workflow") {
+        s.workflow_size = v.parse::<usize>()?.clamp(1, 4);
+    }
+    if let Some(v) = flags.get("deadline") {
+        s.frame_deadline_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("sats") {
+        s.n_sats = v.parse()?;
+        s.orbit_shift = false; // explicit sizing implies the uniform layout
+    }
+    if let Some(v) = flags.get("delta") {
+        s.delta = v.parse()?;
+    }
+    if let Some(v) = flags.get("frames") {
+        s.frames = v.parse()?;
+    }
+    if let Some(v) = flags.get("seed") {
+        s.seed = v.parse()?;
+    }
+    if let Some(v) = flags.get("isl-bps") {
+        s.isl_rate_bps = Some(v.parse()?);
+    }
+    Ok(s)
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let (pos, flags) = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "plan" => cmd_plan(&flags),
+        "route" => cmd_route(&flags),
+        "simulate" => cmd_simulate(&flags),
+        "experiment" => cmd_experiment(&pos, &flags),
+        "infer" => cmd_infer(&flags),
+        "version" => {
+            println!("orbitchain {}", env!("CARGO_PKG_VERSION"));
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?} (try `orbitchain help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "orbitchain — in-orbit real-time Earth observation analytics\n\n\
+         commands:\n\
+         \x20 plan        solve Program (10) deployment + resource allocation\n\
+         \x20 route       run Algorithm 1 workload routing\n\
+         \x20 simulate    discrete-event simulation of the planned system\n\
+         \x20 experiment  regenerate a paper figure/table (fig3b..fig20, all)\n\
+         \x20 infer       hardware-in-the-loop PJRT inference on synthetic tiles\n\
+         \x20 version     print version\n\n\
+         common flags: --device jetson|rpi --workflow N --deadline S --sats N\n\
+         \x20            --delta D --frames N --seed N --isl-bps R --json"
+    );
+}
+
+fn cmd_plan(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let s = scenario_from_flags(flags)?;
+    let (wf, db, c) = s.build();
+    let t0 = std::time::Instant::now();
+    let plan = planner::plan(&wf, &db, &c)?;
+    let dt = t0.elapsed();
+    println!(
+        "plan: phi={:.3} feasible={} nodes={} proven={} ({:.1} ms)",
+        plan.phi,
+        plan.feasible(),
+        plan.nodes,
+        plan.proven,
+        dt.as_secs_f64() * 1000.0
+    );
+    println!(
+        "{:<10} {:>4} {:>6} {:>9} {:>9} {:>5} {:>9}",
+        "func", "sat", "cpu", "quota", "tiles/s", "gpu", "slice_s"
+    );
+    for p in &plan.placements {
+        if !p.deployed && !p.gpu {
+            continue;
+        }
+        println!(
+            "{:<10} {:>4} {:>6} {:>9.2} {:>9.3} {:>5} {:>9.3}",
+            wf.name(p.func),
+            p.sat,
+            p.deployed,
+            p.cpu_quota,
+            p.cpu_speed,
+            p.gpu,
+            p.gpu_slice_s
+        );
+    }
+    let violations = planner::verify_plan(&plan, &wf, &db, &c);
+    if violations.is_empty() {
+        println!("verification: all constraints satisfied");
+    } else {
+        println!("verification FAILED: {violations:?}");
+    }
+    Ok(())
+}
+
+fn cmd_route(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let s = scenario_from_flags(flags)?;
+    let (wf, db, c) = s.build();
+    let plan = planner::plan(&wf, &db, &c)?;
+    let r = routing::route(&wf, &db, &c, &plan)?;
+    println!(
+        "routing: {} pipelines, {:.1} tiles routed, {:.1} unrouted, {:.0} ISL B/frame",
+        r.pipelines.len(),
+        r.routed_tiles,
+        r.unrouted_tiles,
+        r.isl_bytes_per_frame
+    );
+    for (k, p) in r.pipelines.iter().enumerate() {
+        let path: Vec<String> = p
+            .stages
+            .iter()
+            .map(|st| {
+                format!(
+                    "{}@s{}{}",
+                    wf.name(st.func),
+                    st.sat,
+                    match st.dev {
+                        routing::Dev::Cpu => "c",
+                        routing::Dev::Gpu => "g",
+                    }
+                )
+            })
+            .collect();
+        println!(
+            "  ζ{k}: σ={:.2} group={} [{}]",
+            p.workload,
+            p.group,
+            path.join(" -> ")
+        );
+    }
+    let spray = routing::route_load_spraying(&wf, &db, &c, &plan);
+    println!(
+        "load-spraying comparison: {:.0} B/frame ({:.0}% saved by OrbitChain)",
+        spray.isl_bytes_per_frame,
+        (1.0 - r.isl_bytes_per_frame / spray.isl_bytes_per_frame.max(1e-9)) * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let s = scenario_from_flags(flags)?;
+    let (wf, db, c) = s.build();
+    let rep = sim::simulate_orbitchain(&wf, &db, &c, s.sim_config())?;
+    if flags.contains_key("json") {
+        println!("{}", rep.metrics.to_json().to_string_pretty());
+        return Ok(());
+    }
+    println!(
+        "completion={:.3} isl_bytes/frame={:.0} frame_latency={:.2}s \
+         (proc {:.2} / comm {:.2} / revisit {:.2})",
+        rep.completion_ratio,
+        rep.isl_bytes_per_frame,
+        rep.frame_latency_s,
+        rep.breakdown.0,
+        rep.breakdown.1,
+        rep.breakdown.2
+    );
+    // Baselines for context.
+    let dp = baselines::data_parallelism(&wf, &db, &c);
+    let cp = baselines::compute_parallelism(&wf, &db, &c);
+    for (name, dep) in [("data-parallelism", dp), ("compute-parallelism", cp)] {
+        if dep.instantiated {
+            let r = sim::Simulator::new(
+                &wf,
+                &db,
+                &c,
+                dep.instances,
+                &dep.pipelines,
+                s.sim_config(),
+            )
+            .run();
+            println!("{name}: completion={:.3}", r.completion_ratio);
+        } else {
+            println!("{name}: cannot instantiate ({})", dep.notes.join("; "));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_experiment(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let which = pos.first().map(String::as_str).unwrap_or("all");
+    let device = flags.get("device").map(String::as_str).unwrap_or("jetson");
+    let frames: usize = flags
+        .get("frames")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(16);
+    let mut tables = Vec::new();
+    let all = which == "all";
+    if all || which == "fig3b" {
+        tables.push(exp::fig03_contention());
+    }
+    if all || which == "fig4b" {
+        let hil = ModelRuntime::load(&ModelRuntime::default_dir()).ok();
+        tables.push(exp::fig04_model_speed(hil.as_ref()));
+    }
+    if all || which == "fig7" {
+        tables.push(exp::fig07_profiling());
+    }
+    if all || which == "fig8" {
+        let (a, b) = exp::fig08_coldstart_datasize();
+        tables.push(a);
+        tables.push(b);
+    }
+    if all || which == "fig11" {
+        tables.push(exp::fig11_completion(device, frames));
+    }
+    if all || which == "fig12" {
+        tables.push(exp::fig12_comm(device));
+    }
+    if all || which == "fig13" {
+        tables.push(exp::fig11_completion("rpi", frames));
+        tables.push(exp::fig12_comm("rpi"));
+    }
+    if all || which == "fig14" {
+        tables.push(exp::fig14_analyzable(device));
+    }
+    if all || which == "fig15" {
+        tables.push(exp::fig15_latency(device, frames));
+    }
+    if all || which == "fig17" {
+        tables.push(exp::fig17_ground(86_400.0, 10.0));
+    }
+    if all || which == "fig18" {
+        tables.push(exp::fig18_isl());
+    }
+    if all || which == "tab1" {
+        tables.push(exp::tab01_fit(42));
+    }
+    if all || which == "fig20" {
+        tables.push(exp::fig20_planning());
+    }
+    if tables.is_empty() {
+        anyhow::bail!("unknown experiment {which:?}");
+    }
+    if flags.contains_key("json") {
+        println!("{}", exp::report_json(&tables).to_string_pretty());
+    } else {
+        for t in &tables {
+            println!("{}", t.render());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_infer(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let dir = flags
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(ModelRuntime::default_dir);
+    let model = flags.get("model").map(String::as_str).unwrap_or("cloud");
+    let tiles: usize = flags
+        .get("tiles")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(100);
+    let rt = ModelRuntime::load(&dir)?;
+    let mut gen = TileGen::new(
+        flags
+            .get("seed")
+            .map(|v| v.parse())
+            .transpose()?
+            .unwrap_or(1u64),
+    );
+    println!("loaded artifacts from {} (tile {}px)", dir.display(), rt.tile);
+    let speed = rt.measure_speed(model, tiles, &mut gen)?;
+    println!("{model}: {tiles} tiles at {speed:.1} tiles/s (PJRT CPU, batched)");
+    Ok(())
+}

@@ -1,0 +1,328 @@
+//! Orbital mechanics substrate (paper Appendix B).
+//!
+//! The paper uses the Hypatia LEO simulator with real constellation
+//! ephemerides to show that ground-assisted analytics cannot be real-time
+//! (Fig. 17).  Hypatia is not available offline, so this module implements
+//! the geometry from first principles: circular Keplerian orbits propagated
+//! in ECI, rotated into ECEF against a rotating Earth, geodetic ground
+//! tracks, ground-station elevation/visibility, and 24-hour contact sweeps
+//! for the five constellation presets the paper simulates (Starlink,
+//! Sentinel-2, Dove-2, RapidEye, Landsat-8) against ten ground stations at
+//! the most-populated metro areas.
+//!
+//! Circular orbits are exactly what connection-interval statistics depend
+//! on (altitude → period and footprint, inclination → coverage latitude
+//! band); perturbations (J2 drift etc.) shift *which* passes happen, not
+//! their statistics over 24 h.
+
+pub mod control;
+pub mod presets;
+pub mod visibility;
+
+/// Mean Earth radius, km.
+pub const EARTH_RADIUS_KM: f64 = 6371.0;
+/// Gravitational parameter μ = GM⊕, km³/s².
+pub const MU_EARTH: f64 = 398_600.441_8;
+/// Earth sidereal rotation rate, rad/s.
+pub const EARTH_OMEGA: f64 = 7.292_115_9e-5;
+
+/// A 3-vector in km (ECI or ECEF as documented per use).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Vec3 {
+    pub x: f64,
+    pub y: f64,
+    pub z: f64,
+}
+
+impl Vec3 {
+    pub fn new(x: f64, y: f64, z: f64) -> Self {
+        Vec3 { x, y, z }
+    }
+
+    pub fn dot(self, o: Vec3) -> f64 {
+        self.x * o.x + self.y * o.y + self.z * o.z
+    }
+
+    pub fn norm(self) -> f64 {
+        self.dot(self).sqrt()
+    }
+
+    pub fn sub(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x - o.x, self.y - o.y, self.z - o.z)
+    }
+
+    pub fn scale(self, k: f64) -> Vec3 {
+        Vec3::new(self.x * k, self.y * k, self.z * k)
+    }
+}
+
+/// Geodetic coordinates (spherical Earth), degrees.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatLon {
+    pub lat_deg: f64,
+    pub lon_deg: f64,
+}
+
+/// A circular low-Earth orbit.
+#[derive(Debug, Clone, Copy)]
+pub struct CircularOrbit {
+    /// Altitude above the mean Earth surface, km.
+    pub altitude_km: f64,
+    /// Inclination, degrees.
+    pub inclination_deg: f64,
+    /// Right ascension of the ascending node, degrees.
+    pub raan_deg: f64,
+    /// Phase (argument of latitude) at t = 0, degrees.
+    pub phase_deg: f64,
+}
+
+impl CircularOrbit {
+    /// Orbital radius from Earth center, km.
+    pub fn radius_km(&self) -> f64 {
+        EARTH_RADIUS_KM + self.altitude_km
+    }
+
+    /// Orbital period, seconds: `2π √(a³/μ)`.
+    pub fn period_s(&self) -> f64 {
+        let a = self.radius_km();
+        2.0 * std::f64::consts::PI * (a.powi(3) / MU_EARTH).sqrt()
+    }
+
+    /// Orbital speed, km/s.
+    pub fn speed_km_s(&self) -> f64 {
+        (MU_EARTH / self.radius_km()).sqrt()
+    }
+
+    /// Mean motion, rad/s.
+    pub fn mean_motion(&self) -> f64 {
+        2.0 * std::f64::consts::PI / self.period_s()
+    }
+
+    /// ECI position at time `t` seconds.
+    ///
+    /// The orbit plane is the xy-plane rotated by inclination about x, then
+    /// by RAAN about z; the satellite moves at constant angular rate.
+    pub fn position_eci(&self, t: f64) -> Vec3 {
+        let u = self.phase_deg.to_radians() + self.mean_motion() * t;
+        let r = self.radius_km();
+        let i = self.inclination_deg.to_radians();
+        let raan = self.raan_deg.to_radians();
+        // In-plane position.
+        let (su, cu) = u.sin_cos();
+        let xp = r * cu;
+        let yp = r * su;
+        // Rotate by inclination about x: (xp, yp·cos i, yp·sin i).
+        let (si, ci) = i.sin_cos();
+        let x1 = xp;
+        let y1 = yp * ci;
+        let z1 = yp * si;
+        // Rotate by RAAN about z.
+        let (sr, cr) = raan.sin_cos();
+        Vec3::new(x1 * cr - y1 * sr, x1 * sr + y1 * cr, z1)
+    }
+
+    /// ECEF position at time `t` (Earth rotated by ω⊕·t).
+    pub fn position_ecef(&self, t: f64) -> Vec3 {
+        let p = self.position_eci(t);
+        let theta = EARTH_OMEGA * t;
+        let (s, c) = theta.sin_cos();
+        // ECEF = Rz(-θ) · ECI.
+        Vec3::new(p.x * c + p.y * s, -p.x * s + p.y * c, p.z)
+    }
+
+    /// Sub-satellite point (spherical geodetic), degrees.
+    pub fn ground_track(&self, t: f64) -> LatLon {
+        let p = self.position_ecef(t);
+        let lat = (p.z / p.norm()).asin().to_degrees();
+        let lon = p.y.atan2(p.x).to_degrees();
+        LatLon { lat_deg: lat, lon_deg: lon }
+    }
+}
+
+/// A ground station on the spherical Earth.
+#[derive(Debug, Clone)]
+pub struct GroundStation {
+    pub name: String,
+    pub location: LatLon,
+    /// Minimum usable elevation angle, degrees (antenna mask).
+    pub min_elevation_deg: f64,
+}
+
+impl GroundStation {
+    pub fn new(name: &str, lat: f64, lon: f64) -> Self {
+        GroundStation {
+            name: name.to_string(),
+            location: LatLon { lat_deg: lat, lon_deg: lon },
+            // High-rate payload downlink needs high elevation (X-band dish
+            // tracking); 30° reproduces the paper's contact statistics.
+            min_elevation_deg: 30.0,
+        }
+    }
+
+    /// Station position in ECEF, km.
+    pub fn position_ecef(&self) -> Vec3 {
+        latlon_to_ecef(self.location, 0.0)
+    }
+
+    /// Elevation angle of a satellite (ECEF, km) above the local horizon,
+    /// degrees.  Negative when below the horizon.
+    pub fn elevation_deg(&self, sat_ecef: Vec3) -> f64 {
+        let gs = self.position_ecef();
+        let to_sat = sat_ecef.sub(gs);
+        // Elevation = angle between `to_sat` and the local horizontal plane;
+        // with a spherical Earth the local up is gs/|gs|.
+        let up = gs.scale(1.0 / gs.norm());
+        let sin_el = to_sat.dot(up) / to_sat.norm();
+        sin_el.asin().to_degrees()
+    }
+
+    /// Whether a satellite at `sat_ecef` is visible above the mask.
+    pub fn sees(&self, sat_ecef: Vec3) -> bool {
+        self.elevation_deg(sat_ecef) >= self.min_elevation_deg
+    }
+}
+
+/// Spherical geodetic → ECEF, km.
+pub fn latlon_to_ecef(ll: LatLon, alt_km: f64) -> Vec3 {
+    let lat = ll.lat_deg.to_radians();
+    let lon = ll.lon_deg.to_radians();
+    let r = EARTH_RADIUS_KM + alt_km;
+    Vec3::new(
+        r * lat.cos() * lon.cos(),
+        r * lat.cos() * lon.sin(),
+        r * lat.sin(),
+    )
+}
+
+/// Great-circle distance between two points on the surface, km.
+pub fn great_circle_km(a: LatLon, b: LatLon) -> f64 {
+    let (la, lb) = (a.lat_deg.to_radians(), b.lat_deg.to_radians());
+    let dlon = (b.lon_deg - a.lon_deg).to_radians();
+    let cos_c = la.sin() * lb.sin() + la.cos() * lb.cos() * dlon.cos();
+    EARTH_RADIUS_KM * cos_c.clamp(-1.0, 1.0).acos()
+}
+
+/// Straight-line (chord) distance between two satellites on the same
+/// circular orbit separated by `dt` seconds along-track, km — the
+/// inter-satellite-link geometry of Appendix C.
+pub fn along_track_separation_km(orbit: &CircularOrbit, dt: f64) -> f64 {
+    let dtheta = orbit.mean_motion() * dt;
+    2.0 * orbit.radius_km() * (dtheta / 2.0).sin()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iss_like() -> CircularOrbit {
+        CircularOrbit {
+            altitude_km: 420.0,
+            inclination_deg: 51.6,
+            raan_deg: 0.0,
+            phase_deg: 0.0,
+        }
+    }
+
+    #[test]
+    fn period_matches_known_values() {
+        // ISS-like: ~92.8 min; Sentinel-2 (786 km): ~100.6 min.
+        assert!((iss_like().period_s() / 60.0 - 92.8).abs() < 1.0);
+        let s2 = CircularOrbit {
+            altitude_km: 786.0,
+            inclination_deg: 98.6,
+            raan_deg: 0.0,
+            phase_deg: 0.0,
+        };
+        assert!((s2.period_s() / 60.0 - 100.6).abs() < 1.5);
+    }
+
+    #[test]
+    fn speed_near_7_6_km_s() {
+        let v = iss_like().speed_km_s();
+        assert!((v - 7.66).abs() < 0.05, "v={v}");
+    }
+
+    #[test]
+    fn altitude_conserved_along_orbit() {
+        let o = iss_like();
+        for k in 0..100 {
+            let t = k as f64 * 60.0;
+            let r = o.position_eci(t).norm();
+            assert!((r - o.radius_km()).abs() < 1e-6, "t={t}: r={r}");
+        }
+    }
+
+    #[test]
+    fn ground_track_latitude_bounded_by_inclination() {
+        let o = iss_like();
+        for k in 0..2000 {
+            let lat = o.ground_track(k as f64 * 30.0).lat_deg;
+            assert!(lat.abs() <= o.inclination_deg + 1e-6, "lat={lat}");
+        }
+        // ...and actually reaches near the inclination.
+        let max_lat = (0..2000)
+            .map(|k| o.ground_track(k as f64 * 30.0).lat_deg)
+            .fold(f64::MIN, f64::max);
+        assert!(max_lat > o.inclination_deg - 2.0, "max_lat={max_lat}");
+    }
+
+    #[test]
+    fn polar_orbit_covers_poles() {
+        let o = CircularOrbit {
+            altitude_km: 700.0,
+            inclination_deg: 90.0,
+            raan_deg: 0.0,
+            phase_deg: 0.0,
+        };
+        // Quarter period after equator crossing, the satellite is at a pole.
+        let ll = o.ground_track(o.period_s() / 4.0);
+        assert!(ll.lat_deg.abs() > 85.0, "{ll:?}");
+    }
+
+    #[test]
+    fn elevation_zenith_pass() {
+        // Satellite directly above the station: elevation ≈ 90°.
+        let gs = GroundStation::new("test", 0.0, 0.0);
+        let sat = latlon_to_ecef(LatLon { lat_deg: 0.0, lon_deg: 0.0 }, 500.0);
+        assert!((gs.elevation_deg(sat) - 90.0).abs() < 1e-6);
+        assert!(gs.sees(sat));
+    }
+
+    #[test]
+    fn elevation_opposite_side_negative() {
+        let gs = GroundStation::new("test", 0.0, 0.0);
+        let sat = latlon_to_ecef(LatLon { lat_deg: 0.0, lon_deg: 180.0 }, 500.0);
+        assert!(gs.elevation_deg(sat) < 0.0);
+        assert!(!gs.sees(sat));
+    }
+
+    #[test]
+    fn ecef_differs_from_eci_as_earth_rotates() {
+        let o = iss_like();
+        let t = 3600.0;
+        let eci = o.position_eci(t);
+        let ecef = o.position_ecef(t);
+        assert!((eci.norm() - ecef.norm()).abs() < 1e-6);
+        assert!((eci.x - ecef.x).abs() > 100.0); // 1 h of rotation ≈ 15°
+    }
+
+    #[test]
+    fn great_circle_sanity() {
+        let eq0 = LatLon { lat_deg: 0.0, lon_deg: 0.0 };
+        let eq90 = LatLon { lat_deg: 0.0, lon_deg: 90.0 };
+        let quarter = std::f64::consts::FRAC_PI_2 * EARTH_RADIUS_KM;
+        assert!((great_circle_km(eq0, eq90) - quarter).abs() < 1.0);
+        assert_eq!(great_circle_km(eq0, eq0), 0.0);
+    }
+
+    #[test]
+    fn appendix_c_separation_band() {
+        // Appendix C: a few seconds of temporal separation on a ~90 min LEO
+        // orbit gives tens of km of inter-satellite distance (~7.6 km/s).
+        let o = iss_like();
+        let d5 = along_track_separation_km(&o, 5.0);
+        assert!((30.0..50.0).contains(&d5), "d5={d5}");
+        let d10 = along_track_separation_km(&o, 10.0);
+        assert!((70.0..80.0).contains(&d10), "d10={d10}");
+    }
+}

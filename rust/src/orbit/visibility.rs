@@ -1,0 +1,189 @@
+//! Ground-contact visibility sweeps (paper Appendix B, Fig. 17).
+//!
+//! Sweeps a satellite's 24-hour trajectory against a set of ground stations,
+//! extracting contact windows (entry/exit, duration), the gaps between
+//! consecutive contacts (Fig. 17a's CDF), and the per-window downlinkable
+//! data ratio (Fig. 17b): how much of the data generated since the previous
+//! contact fits through the downlink during this contact.
+
+use super::{CircularOrbit, GroundStation};
+use crate::orbit::presets::ConstellationPreset;
+
+/// One satellite-ground contact window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ContactWindow {
+    /// Window start, seconds since epoch.
+    pub start_s: f64,
+    /// Window end, seconds.
+    pub end_s: f64,
+    /// Index of the ground station in the sweep input.
+    pub station: usize,
+}
+
+impl ContactWindow {
+    pub fn duration_s(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+}
+
+/// Sweep one satellite against all stations over `[0, horizon_s]` with step
+/// `dt_s`, merging overlapping per-station windows into a single
+/// "connected to *some* station" timeline (the paper's metric: time between
+/// consecutive satellite-ground connections, regardless of station).
+pub fn contact_windows(
+    orbit: &CircularOrbit,
+    stations: &[GroundStation],
+    horizon_s: f64,
+    dt_s: f64,
+) -> Vec<ContactWindow> {
+    let mut windows = Vec::new();
+    let mut open: Option<(f64, usize)> = None;
+    let steps = (horizon_s / dt_s) as usize;
+    for k in 0..=steps {
+        let t = k as f64 * dt_s;
+        let pos = orbit.position_ecef(t);
+        let vis = stations.iter().position(|gs| gs.sees(pos));
+        match (open, vis) {
+            (None, Some(s)) => open = Some((t, s)),
+            (Some((t0, s)), None) => {
+                windows.push(ContactWindow { start_s: t0, end_s: t, station: s });
+                open = None;
+            }
+            _ => {}
+        }
+    }
+    if let Some((t0, s)) = open {
+        windows.push(ContactWindow { start_s: t0, end_s: horizon_s, station: s });
+    }
+    windows
+}
+
+/// Gaps between consecutive contacts, seconds (Fig. 17a sample points).
+pub fn connection_intervals(windows: &[ContactWindow]) -> Vec<f64> {
+    windows
+        .windows(2)
+        .map(|w| w[1].start_s - w[0].end_s)
+        .filter(|&g| g > 0.0)
+        .collect()
+}
+
+/// Per-contact downlinkable ratio (Fig. 17b): fraction of the data generated
+/// since the previous contact (after in-orbit filtering keeps
+/// `keep_fraction`) that fits through the downlink during this contact.
+/// Capped at 1.
+pub fn downlinkable_ratios(
+    preset: &ConstellationPreset,
+    windows: &[ContactWindow],
+    keep_fraction: f64,
+) -> Vec<f64> {
+    let mut out = Vec::new();
+    for w in windows.windows(2) {
+        let gap = w[1].start_s - w[0].end_s;
+        let generated_mb = preset.gen_rate_mb_s * gap.max(0.0) * keep_fraction;
+        let capacity_mb = preset.downlink_mb_s * w[1].duration_s();
+        if generated_mb > 0.0 {
+            out.push((capacity_mb / generated_mb).min(1.0));
+        }
+    }
+    out
+}
+
+/// Aggregate sweep over every satellite of a preset; returns
+/// `(all connection intervals, all downlinkable ratios)`.
+pub fn sweep_preset(
+    preset: &ConstellationPreset,
+    stations: &[GroundStation],
+    horizon_s: f64,
+    dt_s: f64,
+    keep_fraction: f64,
+) -> (Vec<f64>, Vec<f64>) {
+    let mut intervals = Vec::new();
+    let mut ratios = Vec::new();
+    for orbit in crate::orbit::presets::satellites(preset) {
+        let windows = contact_windows(&orbit, stations, horizon_s, dt_s);
+        intervals.extend(connection_intervals(&windows));
+        ratios.extend(downlinkable_ratios(preset, &windows, keep_fraction));
+    }
+    (intervals, ratios)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orbit::presets;
+
+    fn sentinel2() -> ConstellationPreset {
+        presets::all().remove(0)
+    }
+
+    #[test]
+    fn windows_are_ordered_and_positive() {
+        let p = sentinel2();
+        let stations = presets::ground_stations();
+        let w = contact_windows(&p.orbit, &stations, 86_400.0, 10.0);
+        assert!(!w.is_empty(), "no contacts in 24h is implausible");
+        for win in &w {
+            assert!(win.duration_s() > 0.0);
+        }
+        for pair in w.windows(2) {
+            assert!(pair[1].start_s >= pair[0].end_s);
+        }
+    }
+
+    #[test]
+    fn pass_durations_minutes_scale() {
+        // LEO passes over a station last roughly 2–15 minutes.
+        let p = sentinel2();
+        let stations = presets::ground_stations();
+        let w = contact_windows(&p.orbit, &stations, 86_400.0, 5.0);
+        for win in &w {
+            assert!(
+                win.duration_s() < 30.0 * 60.0,
+                "pass too long: {}s",
+                win.duration_s()
+            );
+        }
+    }
+
+    #[test]
+    fn fig17a_contact_gaps_rule_out_realtime() {
+        // Paper Observation 1: in roughly half of cases satellites wait
+        // ≥ 1 h for the next ground contact — minute-level response via the
+        // ground is impossible.  Aggregate over all five presets.
+        let stations = presets::ground_stations();
+        let mut all = Vec::new();
+        for p in presets::all() {
+            let (iv, _) = sweep_preset(&p, &stations, 86_400.0, 10.0, 0.5);
+            all.extend(iv);
+        }
+        assert!(all.len() >= 20, "n={}", all.len());
+        let median = crate::util::stats::percentile(&all, 50.0);
+        assert!(median >= 45.0 * 60.0, "median={median}s");
+        let frac_1h = all.iter().filter(|&&g| g >= 3600.0).count() as f64
+            / all.len() as f64;
+        assert!(frac_1h >= 0.40, "frac>1h={frac_1h}");
+    }
+
+    #[test]
+    fn fig17b_cannot_downlink_everything() {
+        // Paper Observation 1: even after 50% in-orbit filtering, no
+        // mainstream constellation fully downloads its data.
+        let stations = presets::ground_stations();
+        for p in presets::all() {
+            let (_, ratios) = sweep_preset(&p, &stations, 86_400.0, 10.0, 0.5);
+            if ratios.is_empty() {
+                continue;
+            }
+            let mean = crate::util::stats::mean(&ratios);
+            assert!(mean < 1.0, "{}: mean ratio {mean}", p.name);
+        }
+    }
+
+    #[test]
+    fn no_stations_no_windows() {
+        let p = sentinel2();
+        let w = contact_windows(&p.orbit, &[], 86_400.0, 10.0);
+        assert!(w.is_empty());
+        assert!(connection_intervals(&w).is_empty());
+    }
+}

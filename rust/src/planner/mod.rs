@@ -1,0 +1,597 @@
+//! Analytics-function deployment and resource allocation (paper §5.2/§5.4).
+//!
+//! Builds Program (10) as a MILP and solves it with the in-crate simplex +
+//! branch-and-bound ([`crate::lp`]):
+//!
+//! * **Variables** — per function `m_i` × satellite `s_j`: deployment
+//!   `x_{i,j} ∈ {0,1}`, CPU quota `r_{i,j} ≥ 0`, CPU speed `v_{i,j} ≥ 0`
+//!   (epigraph of the piecewise-linear `g^cspeed`), GPU assignment
+//!   `y_{i,j} ∈ {0,1}` and GPU time slice `t_{i,j} ≥ 0`; plus per-satellite
+//!   GPU-power maxima and the bottleneck ratio `φ`.
+//! * **Constraints** — Eqs. (4)–(9) verbatim, with two documented
+//!   modeling choices:
+//!   1. The speed curve enters as `v ≤ slope_k·r + intercept_k·x` per
+//!      segment — exact for the concave nondecreasing Table-1 curves.
+//!   2. CPU power `g^cpow(r)` is concave, which would make Eq. (9)
+//!      nonconvex; we use its *first-segment tangent* (an over-estimate
+//!      everywhere on the domain) — a conservative linearization, so every
+//!      plan accepted here also satisfies the paper's constraint.
+//! * **Workload** — instead of Eq. (3) alone, the ground-track-shift family
+//!   of Eq. (13), strengthened to the cumulative (Hall-style) form: for a
+//!   capture group `S̄`, the satellites of `S̄` must cover the tiles of
+//!   *every group contained in `S̄`*, not just its own unique tiles —
+//!   the literal per-group reading would double-book leader capacity.
+//! * **Objective** — the paper's implementation choice: maximize the
+//!   bottleneck capacity ratio `φ` (scaled so `φ ≥ 1` ⟺ Program (10)
+//!   feasible).  No deployment penalty: it would make every binary
+//!   fractional in the relaxation and explode the B&B tree; spare
+//!   deployments that survive are real usable capacity.
+
+use crate::constellation::Constellation;
+use crate::lp::{solve_milp, Cmp, Lp, MilpOptions, MilpResult};
+use crate::profile::ProfileDb;
+use crate::workflow::Workflow;
+
+/// Cap on the bottleneck ratio so `max φ` never goes unbounded (a frame
+/// cannot meaningfully be oversubscribed 1000×).
+const PHI_CAP: f64 = 1000.0;
+
+/// One (function, satellite) allocation in a deployment plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub func: usize,
+    pub sat: usize,
+    /// CPU instance deployed (`x_{i,j}`)?
+    pub deployed: bool,
+    /// CPU quota `r_{i,j}` (cores).
+    pub cpu_quota: f64,
+    /// CPU processing speed `v_{i,j}` (tiles/s) at that quota.
+    pub cpu_speed: f64,
+    /// GPU assigned (`y_{i,j}`)?
+    pub gpu: bool,
+    /// GPU time slice `t_{i,j}` per frame deadline (s).
+    pub gpu_slice_s: f64,
+    /// GPU speed (tiles/s) while sliced in.
+    pub gpu_speed: f64,
+}
+
+impl Placement {
+    /// Instance capacity per frame deadline, Eq. (11), for the CPU path.
+    pub fn cpu_capacity(&self, frame_deadline_s: f64) -> f64 {
+        self.cpu_speed * frame_deadline_s
+    }
+
+    /// Instance capacity per frame deadline for the GPU path.
+    pub fn gpu_capacity(&self) -> f64 {
+        self.gpu_speed * self.gpu_slice_s
+    }
+}
+
+/// A solved deployment plan.
+#[derive(Debug, Clone)]
+pub struct DeploymentPlan {
+    /// Bottleneck capacity ratio `φ`: every function can absorb `φ×` its
+    /// per-frame workload.  Feasible (Program (10)) iff `φ ≥ 1`.
+    pub phi: f64,
+    /// All placements, indexed `[func][sat]` dense.
+    pub placements: Vec<Placement>,
+    pub n_funcs: usize,
+    pub n_sats: usize,
+    /// B&B search was exhaustive (`false` ⇒ heuristic incumbent).
+    pub proven: bool,
+    /// LP relaxations solved.
+    pub nodes: usize,
+}
+
+impl DeploymentPlan {
+    pub fn placement(&self, func: usize, sat: usize) -> &Placement {
+        &self.placements[func * self.n_sats + sat]
+    }
+
+    /// Is Program (10) satisfied (all workload absorbed within deadline)?
+    pub fn feasible(&self) -> bool {
+        self.phi >= 1.0 - 1e-6
+    }
+
+    /// Total capacity of function `i` per frame deadline across satellites
+    /// (LHS of Eq. (3)).
+    pub fn function_capacity(&self, func: usize, frame_deadline_s: f64) -> f64 {
+        (0..self.n_sats)
+            .map(|j| {
+                let p = self.placement(func, j);
+                p.cpu_capacity(frame_deadline_s) + p.gpu_capacity()
+            })
+            .sum()
+    }
+
+    /// Maximum tiles per frame the constellation can analyze for this
+    /// workflow (Fig. 14 metric): capacity scales linearly through `φ`.
+    pub fn max_analyzable_tiles(&self, n0: usize) -> usize {
+        (self.phi * n0 as f64).floor() as usize
+    }
+}
+
+/// Planner failure modes.
+#[derive(Debug, thiserror::Error)]
+pub enum PlanError {
+    #[error("workflow invalid: {0}")]
+    Workflow(#[from] crate::workflow::WorkflowError),
+    #[error("constellation invalid: {0}")]
+    Constellation(#[from] crate::constellation::ConstellationError),
+    #[error("MILP infeasible (no deployment satisfies resource constraints)")]
+    Infeasible,
+    #[error("MILP unbounded — formulation bug")]
+    Unbounded,
+    #[error("function {0:?} missing from the profile database")]
+    MissingProfile(String),
+}
+
+/// Variable index bookkeeping for one Program (10) instance.
+struct VarMap {
+    n_sats: usize,
+    x0: usize,
+    r0: usize,
+    v0: usize,
+    y0: usize,
+    t0: usize,
+    pg0: usize,
+    phi: usize,
+    n_vars: usize,
+}
+
+impl VarMap {
+    fn new(n_funcs: usize, n_sats: usize) -> Self {
+        let nm = n_funcs * n_sats;
+        let x0 = 0;
+        let r0 = x0 + nm;
+        let v0 = r0 + nm;
+        let y0 = v0 + nm;
+        let t0 = y0 + nm;
+        let pg0 = t0 + nm;
+        let phi = pg0 + n_sats;
+        VarMap { n_sats, x0, r0, v0, y0, t0, pg0, phi, n_vars: phi + 1 }
+    }
+    fn x(&self, i: usize, j: usize) -> usize {
+        self.x0 + i * self.n_sats + j
+    }
+    fn r(&self, i: usize, j: usize) -> usize {
+        self.r0 + i * self.n_sats + j
+    }
+    fn v(&self, i: usize, j: usize) -> usize {
+        self.v0 + i * self.n_sats + j
+    }
+    fn y(&self, i: usize, j: usize) -> usize {
+        self.y0 + i * self.n_sats + j
+    }
+    fn t(&self, i: usize, j: usize) -> usize {
+        self.t0 + i * self.n_sats + j
+    }
+    fn pg(&self, j: usize) -> usize {
+        self.pg0 + j
+    }
+}
+
+/// Solve Program (10) for `workflow` on `constellation` with `profiles`.
+pub fn plan(
+    workflow: &Workflow,
+    profiles: &ProfileDb,
+    constellation: &Constellation,
+) -> Result<DeploymentPlan, PlanError> {
+    workflow.validate()?;
+    constellation.validate()?;
+    for i in 0..workflow.len() {
+        if profiles.try_get(workflow.name(i)).is_none() {
+            return Err(PlanError::MissingProfile(workflow.name(i).to_string()));
+        }
+    }
+
+    let nm = workflow.len();
+    let ns = constellation.n_sats;
+    let rho = workflow.workload_factors()?;
+    let spec = &profiles.spec;
+    let df = constellation.frame_deadline_s;
+    let vm = VarMap::new(nm, ns);
+    let mut lp = Lp::new(vm.n_vars);
+
+    // Objective: max φ.  (No deployment penalty: a penalty makes every
+    // x/y fractional in the relaxation and explodes the B&B tree; spare
+    // deployments that survive are real usable capacity.)
+    lp.maximize(vm.phi, 1.0);
+    let mut binaries = Vec::new();
+    for i in 0..nm {
+        for j in 0..ns {
+            binaries.push(vm.x(i, j));
+        }
+    }
+    lp.add(vec![(vm.phi, 1.0)], Cmp::Le, PHI_CAP);
+
+    // Symmetry breaking: in a shift-free constellation every satellite is
+    // interchangeable, which makes the B&B tree explode across permuted
+    // twins.  Deploying the source function on a satellite prefix is valid
+    // for any solution up to permutation and prunes the twins.
+    if constellation.capture_groups.len() == 1 && nm > 0 {
+        for j in 0..ns.saturating_sub(1) {
+            lp.add(vec![(vm.x(0, j), 1.0), (vm.x(0, j + 1), -1.0)], Cmp::Ge, 0.0);
+        }
+    }
+
+    let cpu_cap = spec.beta * spec.cpu_cores;
+    let gpu_window = spec.alpha * df;
+
+    for i in 0..nm {
+        let f = profiles.get(workflow.name(i));
+        let has_gpu = spec.has_gpu && f.gpu_speed > 0.0;
+        for j in 0..ns {
+            let (x, r, v, y, t) =
+                (vm.x(i, j), vm.r(i, j), vm.v(i, j), vm.y(i, j), vm.t(i, j));
+            // Speed epigraph: v ≤ slope·r + intercept·x per segment.
+            for seg in f.cspeed.segments() {
+                lp.add(
+                    vec![(v, 1.0), (r, -seg.slope), (x, -seg.intercept)],
+                    Cmp::Le,
+                    0.0,
+                );
+            }
+            // Quota linking: lb·x ≤ r ≤ cap·x  (Eq. (6) + big-M link).
+            lp.add(vec![(r, 1.0), (x, -f.lb_cpu)], Cmp::Ge, 0.0);
+            lp.add(vec![(r, 1.0), (x, -cpu_cap)], Cmp::Le, 0.0);
+            if has_gpu {
+                binaries.push(y);
+                // Slice linking: lb·y ≤ t ≤ αΔf·y  (Eq. (7) + link).
+                lp.add(vec![(t, 1.0), (y, -f.lb_gpu_s)], Cmp::Ge, 0.0);
+                lp.add(vec![(t, 1.0), (y, -gpu_window)], Cmp::Le, 0.0);
+                // Per-sat GPU power max: pg_j ≥ gpow_i · y.
+                lp.add(vec![(vm.pg(j), 1.0), (y, -f.gpow_w)], Cmp::Ge, 0.0);
+            } else {
+                // y, t ≥ 0 implicitly; ≤ 0 pins them without artificials.
+                lp.add(vec![(y, 1.0)], Cmp::Le, 0.0);
+                lp.add(vec![(t, 1.0)], Cmp::Le, 0.0);
+            }
+        }
+    }
+
+    for j in 0..ns {
+        // Eq. (4): Σ_i (r + r^gcpu·y) ≤ β·c^cpu.
+        let mut cpu_row = Vec::new();
+        // Eq. (5): Σ_i t ≤ α·Δf.
+        let mut gpu_row = Vec::new();
+        // Eq. (8): Σ_i (cmem·x + gmem·y) ≤ c^mem.
+        let mut mem_row = Vec::new();
+        // Eq. (9) conservative: Σ_i (tangent power) + pg_j ≤ c^pow.
+        let mut pow_row = vec![(vm.pg(j), 1.0)];
+        for i in 0..nm {
+            let f = profiles.get(workflow.name(i));
+            cpu_row.push((vm.r(i, j), 1.0));
+            if f.gpu_speed > 0.0 && spec.has_gpu {
+                cpu_row.push((vm.y(i, j), f.gcpu_quota));
+                mem_row.push((vm.y(i, j), f.gmem_mb));
+            }
+            gpu_row.push((vm.t(i, j), 1.0));
+            mem_row.push((vm.x(i, j), f.cmem_mb));
+            let p1 = f.cpow.segments()[0];
+            pow_row.push((vm.r(i, j), p1.slope));
+            pow_row.push((vm.x(i, j), p1.intercept));
+        }
+        lp.add(cpu_row, Cmp::Le, cpu_cap);
+        lp.add(gpu_row, Cmp::Le, gpu_window);
+        lp.add(mem_row, Cmp::Le, spec.mem_mb);
+        lp.add(pow_row, Cmp::Le, spec.power_w);
+    }
+
+    // Workload constraints: cumulative Eq. (13) per capture group.
+    for g in &constellation.capture_groups {
+        // Tiles the satellites of `g` must jointly cover: every group whose
+        // satellite range is contained in g's range.
+        let covered: usize = constellation
+            .capture_groups
+            .iter()
+            .filter(|h| h.first_sat >= g.first_sat && h.last_sat <= g.last_sat)
+            .map(|h| h.tiles)
+            .sum();
+        if covered == 0 {
+            continue;
+        }
+        for i in 0..nm {
+            if rho[i] <= 0.0 {
+                continue;
+            }
+            let f = profiles.get(workflow.name(i));
+            let mut row: Vec<(usize, f64)> =
+                vec![(vm.phi, -(rho[i] * covered as f64))];
+            for j in g.sats() {
+                row.push((vm.v(i, j), df));
+                if f.gpu_speed > 0.0 && spec.has_gpu {
+                    row.push((vm.t(i, j), f.gpu_speed));
+                }
+            }
+            lp.add(row, Cmp::Ge, 0.0);
+        }
+    }
+
+        // Planner-specific search budget: Program (10) only needs φ to ~5%
+    // (capacity headroom dwarfs that), and tight instances otherwise grind
+    // through thousands of near-identical relaxations.
+    // Size-aware node budget: small instances solve nodes in ~0.1 ms and
+    // can afford deep proofs; 10x10-scale instances pay ~10 ms per node
+    // and get a bounded heuristic search (Fig. 20 regime).  Override with
+    // ORBITCHAIN_PLAN_NODES.
+    let default_nodes = match nm * ns {
+        0..=16 => 8_000,
+        17..=36 => 3_000,
+        _ => 1_000,
+    };
+    let node_limit = std::env::var("ORBITCHAIN_PLAN_NODES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default_nodes);
+    let opts = MilpOptions { node_limit, gap_tol: 0.05, ..MilpOptions::default() };
+    match solve_milp(&lp, &binaries, opts) {
+        MilpResult::Infeasible => Err(PlanError::Infeasible),
+        MilpResult::Unbounded => Err(PlanError::Unbounded),
+        MilpResult::Solved { x, value: _, proven, nodes } => {
+            let mut placements = Vec::with_capacity(nm * ns);
+            for i in 0..nm {
+                let f = profiles.get(workflow.name(i));
+                for j in 0..ns {
+                    let deployed = x[vm.x(i, j)] > 0.5;
+                    let gpu = x[vm.y(i, j)] > 0.5;
+                    // Snap LP round-off (r = lb − 1e-12 would evaluate to
+                    // zero speed below the curve domain).
+                    let quota = if deployed {
+                        x[vm.r(i, j)].max(f.lb_cpu)
+                    } else {
+                        0.0
+                    };
+                    let slice = if gpu { x[vm.t(i, j)] } else { 0.0 };
+                    placements.push(Placement {
+                        func: i,
+                        sat: j,
+                        deployed,
+                        cpu_quota: quota,
+                        // Re-evaluate the true curve (the LP's v equals it
+                        // at optimum, but this is authoritative).
+                        cpu_speed: if deployed { f.cpu_speed(quota) } else { 0.0 },
+                        gpu,
+                        gpu_slice_s: slice,
+                        gpu_speed: if gpu { f.gpu_speed } else { 0.0 },
+                    });
+                }
+            }
+            Ok(DeploymentPlan {
+                phi: x[vm.phi],
+                placements,
+                n_funcs: nm,
+                n_sats: ns,
+                proven,
+                nodes,
+            })
+        }
+    }
+}
+
+/// Verify a plan against Eqs. (4)–(9) + cumulative (13) directly (used by
+/// tests and as a post-solve assertion): returns the list of violated
+/// constraint descriptions (empty ⇒ valid).
+pub fn verify_plan(
+    plan: &DeploymentPlan,
+    workflow: &Workflow,
+    profiles: &ProfileDb,
+    constellation: &Constellation,
+) -> Vec<String> {
+    let mut violations = Vec::new();
+    let spec = &profiles.spec;
+    let df = constellation.frame_deadline_s;
+    let rho = workflow.workload_factors().unwrap();
+    let tol = 1e-6;
+
+    for j in 0..plan.n_sats {
+        let mut cpu = 0.0;
+        let mut gpu_t = 0.0;
+        let mut mem = 0.0;
+        let mut pow = 0.0;
+        let mut pg: f64 = 0.0;
+        for i in 0..plan.n_funcs {
+            let p = plan.placement(i, j);
+            let f = profiles.get(workflow.name(i));
+            if p.deployed {
+                if p.cpu_quota < f.lb_cpu - tol {
+                    violations.push(format!("Eq6: r[{i}][{j}]={} < lb", p.cpu_quota));
+                }
+                cpu += p.cpu_quota;
+                mem += f.cmem_mb;
+                pow += f.cpu_power(p.cpu_quota);
+            } else if p.cpu_quota > tol {
+                violations.push(format!("quota without deployment at [{i}][{j}]"));
+            }
+            if p.gpu {
+                if p.gpu_slice_s < f.lb_gpu_s - tol {
+                    violations.push(format!("Eq7: t[{i}][{j}]={} < lb", p.gpu_slice_s));
+                }
+                cpu += f.gcpu_quota;
+                gpu_t += p.gpu_slice_s;
+                mem += f.gmem_mb;
+                pg = pg.max(f.gpow_w);
+            }
+        }
+        if cpu > spec.beta * spec.cpu_cores + tol {
+            violations.push(format!("Eq4: cpu {cpu} on sat {j}"));
+        }
+        if gpu_t > spec.alpha * df + tol {
+            violations.push(format!("Eq5: gpu time {gpu_t} on sat {j}"));
+        }
+        if mem > spec.mem_mb + tol {
+            violations.push(format!("Eq8: mem {mem} on sat {j}"));
+        }
+        if pow + pg > spec.power_w + tol {
+            violations.push(format!("Eq9: power {} on sat {j}", pow + pg));
+        }
+    }
+
+    // Cumulative workload coverage at ratio φ.
+    for g in &constellation.capture_groups {
+        let covered: usize = constellation
+            .capture_groups
+            .iter()
+            .filter(|h| h.first_sat >= g.first_sat && h.last_sat <= g.last_sat)
+            .map(|h| h.tiles)
+            .sum();
+        for i in 0..plan.n_funcs {
+            if rho[i] <= 0.0 {
+                continue;
+            }
+            let cap: f64 = g
+                .sats()
+                .map(|j| {
+                    let p = plan.placement(i, j);
+                    p.cpu_capacity(df) + p.gpu_capacity()
+                })
+                .sum();
+            let need = plan.phi * rho[i] * covered as f64;
+            if cap + 1e-4 * need.max(1.0) < need {
+                violations.push(format!(
+                    "Eq13: func {i} group [{},{}] capacity {cap} < {need}",
+                    g.first_sat, g.last_sat
+                ));
+            }
+        }
+    }
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constellation::Constellation;
+    use crate::profile::{Device, ProfileDb};
+    use crate::workflow;
+
+    #[test]
+    fn jetson_full_workflow_feasible() {
+        // §6.2: OrbitChain instantiates the full 4-function workflow on the
+        // 3-Jetson constellation and sustains ~100% completion.
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let plan = plan(&wf, &db, &c).expect("plan");
+        assert!(plan.feasible(), "phi={}", plan.phi);
+        let violations = verify_plan(&plan, &wf, &db, &c);
+        assert!(violations.is_empty(), "{violations:?}");
+    }
+
+    #[test]
+    fn plan_uses_gpu_on_jetson() {
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let plan = plan(&wf, &db, &c).unwrap();
+        let any_gpu = plan.placements.iter().any(|p| p.gpu);
+        assert!(any_gpu, "GPU should be engaged for 100-tile frames");
+    }
+
+    #[test]
+    fn rpi_four_function_tight_but_plannable() {
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::rpi();
+        let c = Constellation::rpi();
+        let plan = plan(&wf, &db, &c).expect("plan");
+        assert!(plan.feasible(), "phi={}", plan.phi);
+        let violations = verify_plan(&plan, &wf, &db, &c);
+        assert!(violations.is_empty(), "{violations:?}");
+    }
+
+    #[test]
+    fn infeasible_when_memory_prohibits() {
+        // One satellite cannot host all four functions (Fig. 3b / §3.2).
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::uniform(1, Device::JetsonOrinNano, 5.0, 100);
+        match plan(&wf, &db, &c) {
+            Err(PlanError::Infeasible) => {}
+            Ok(p) => {
+                // If a plan exists it must not be feasible at φ≥1 *and*
+                // hold all four functions on the single satellite.
+                let deployed: usize =
+                    p.placements.iter().filter(|pl| pl.deployed).count();
+                assert!(deployed < 4 || !p.feasible(), "phi={}", p.phi);
+            }
+            Err(e) => panic!("unexpected: {e}"),
+        }
+    }
+
+    #[test]
+    fn phi_grows_with_constellation_size() {
+        // Fig. 14: capacity scales with satellites.
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let phi3 =
+            plan(&wf, &db, &Constellation::uniform(3, Device::JetsonOrinNano, 5.0, 100))
+                .unwrap()
+                .phi;
+        let phi5 =
+            plan(&wf, &db, &Constellation::uniform(5, Device::JetsonOrinNano, 5.0, 100))
+                .unwrap()
+                .phi;
+        assert!(phi5 > phi3 * 1.3, "phi3={phi3} phi5={phi5}");
+    }
+
+    #[test]
+    fn phi_grows_with_deadline() {
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::rpi();
+        let p12 =
+            plan(&wf, &db, &Constellation::uniform(4, Device::RaspberryPi4, 12.0, 25))
+                .unwrap()
+                .phi;
+        let p16 =
+            plan(&wf, &db, &Constellation::uniform(4, Device::RaspberryPi4, 16.0, 25))
+                .unwrap()
+                .phi;
+        assert!(p16 > p12, "12s={p12} 16s={p16}");
+    }
+
+    #[test]
+    fn shift_constraints_bind_leader() {
+        // With tiles unique to the leader, the leader must host (or be
+        // covered for) every function — planning remains feasible.
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson(); // has 5/20/75 groups
+        let plan = plan(&wf, &db, &c).unwrap();
+        assert!(plan.feasible());
+        // Leader alone must cover every function for its 5 unique tiles.
+        let rho = wf.workload_factors().unwrap();
+        for i in 0..wf.len() {
+            let p = plan.placement(i, 0);
+            let cap = p.cpu_capacity(c.frame_deadline_s) + p.gpu_capacity();
+            assert!(
+                cap + 1e-4 >= plan.phi * rho[i] * 5.0,
+                "func {i}: leader capacity {cap} < {}",
+                plan.phi * rho[i] * 5.0
+            );
+        }
+    }
+
+    #[test]
+    fn missing_profile_reported() {
+        let mut wf = workflow::flood_monitoring(0.5);
+        wf.add_function("unknown-model");
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        assert!(matches!(
+            plan(&wf, &db, &c),
+            Err(PlanError::MissingProfile(n)) if n == "unknown-model"
+        ));
+    }
+
+    #[test]
+    fn max_analyzable_tiles_scales_with_phi() {
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let plan = plan(&wf, &db, &c).unwrap();
+        assert_eq!(
+            plan.max_analyzable_tiles(100),
+            (plan.phi * 100.0).floor() as usize
+        );
+    }
+}

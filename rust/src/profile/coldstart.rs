@@ -1,0 +1,72 @@
+//! GPU inference cold-start model (paper Fig. 8(a)).
+//!
+//! The first inference rounds after instantiating a model on the GPU pay a
+//! large model-loading / JIT-warmup penalty that decays over a few rounds to
+//! the steady-state latency.  OrbitChain's design insight (3) — keep models
+//! loaded and continually operating — exists precisely to avoid paying this
+//! on the critical path; the runtime charges it whenever a model is
+//! instantiated lazily (the naive strategy) and the Fig. 8(a) driver
+//! regenerates the decay curve.
+
+/// Cold-start parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ColdStart {
+    /// First-round latency multiplier over steady state (Fig. 8a shows the
+    /// first batch ~8–10× slower).
+    pub first_round_factor: f64,
+    /// Exponential decay constant, in rounds.
+    pub decay_rounds: f64,
+}
+
+impl Default for ColdStart {
+    fn default() -> Self {
+        ColdStart { first_round_factor: 9.0, decay_rounds: 1.2 }
+    }
+}
+
+impl ColdStart {
+    /// Latency multiplier at inference round `round` (0-based).
+    /// Round 0 pays `first_round_factor`; the excess decays exponentially.
+    pub fn factor(&self, round: usize) -> f64 {
+        1.0 + (self.first_round_factor - 1.0) * (-(round as f64) / self.decay_rounds).exp()
+    }
+
+    /// Total extra time (in units of steady-state round latency) paid over
+    /// the first `rounds` rounds relative to a warm model.
+    pub fn total_overhead(&self, rounds: usize) -> f64 {
+        (0..rounds).map(|r| self.factor(r) - 1.0).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_round_is_penalized() {
+        let cs = ColdStart::default();
+        assert!((cs.factor(0) - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decays_monotonically_to_one() {
+        let cs = ColdStart::default();
+        let mut prev = f64::INFINITY;
+        for r in 0..20 {
+            let f = cs.factor(r);
+            assert!(f < prev && f >= 1.0, "round {r}: {f}");
+            prev = f;
+        }
+        assert!((cs.factor(30) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn overhead_bounded_by_geometric_tail() {
+        let cs = ColdStart::default();
+        let oh = cs.total_overhead(50);
+        // Sum of (f0-1) * exp(-r/τ) = (f0-1)/(1 - e^(-1/τ)).
+        let bound = (cs.first_round_factor - 1.0)
+            / (1.0 - (-1.0 / cs.decay_rounds).exp());
+        assert!(oh <= bound + 1e-9 && oh > 0.5 * bound);
+    }
+}

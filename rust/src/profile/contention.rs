@@ -1,0 +1,137 @@
+//! Co-location contention model (paper Fig. 3(b)).
+//!
+//! When multiple analytics models share one device *without* explicit
+//! resource isolation — the data-parallelism baseline — inference slows
+//! down: cache/DRAM bandwidth pressure grows with every co-hosted model and
+//! degrades sharply once combined memory approaches capacity (and the
+//! workflow cannot be instantiated at all once it exceeds capacity,
+//! §3.2/§6.2).
+//!
+//! OrbitChain itself avoids this regime via cgroup/container quotas, so the
+//! model is used only by [`crate::baselines::data_parallelism`] and the
+//! Fig. 3(b) experiment driver.
+
+use super::ProfileDb;
+
+/// Per-co-hosted-model slowdown: every additional co-resident model costs
+/// ~18 % base throughput (shared cache + memory-bus contention)...
+const PER_MODEL_PENALTY: f64 = 0.18;
+/// ...and memory pressure beyond this utilization knee degrades steeply
+/// (swapping/allocator pressure).
+const MEM_KNEE: f64 = 0.80;
+const MEM_PENALTY: f64 = 6.0;
+
+/// Outcome of co-locating a set of functions on one device.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Colocation {
+    /// Feasible; `slowdown` ≥ 1 multiplies every co-hosted function's
+    /// inference latency (divides its speed).
+    Degraded { slowdown: f64, mem_utilization: f64 },
+    /// Combined peak memory exceeds device capacity: the workflow cannot be
+    /// instantiated (completion ratio 0, as observed on the testbed).
+    OutOfMemory { required_mb: f64, capacity_mb: f64 },
+}
+
+/// Evaluate co-locating `funcs` (by name) on the device of `db`, with GPU
+/// instances for functions that have a GPU path (`use_gpu`).
+pub fn colocate(db: &ProfileDb, funcs: &[&str], use_gpu: bool) -> Colocation {
+    let mut mem = 0.0;
+    for name in funcs {
+        let f = db.get(name);
+        mem += f.cmem_mb;
+        if use_gpu && f.gpu_speed > 0.0 {
+            mem += f.gmem_mb;
+        }
+    }
+    let cap = db.spec.mem_mb;
+    if mem > cap {
+        return Colocation::OutOfMemory { required_mb: mem, capacity_mb: cap };
+    }
+    let util = mem / cap;
+    let n = funcs.len() as f64;
+    let mut slowdown = 1.0 + PER_MODEL_PENALTY * (n - 1.0).max(0.0);
+    if util > MEM_KNEE {
+        slowdown += MEM_PENALTY * (util - MEM_KNEE);
+    }
+    Colocation::Degraded { slowdown, mem_utilization: util }
+}
+
+/// Effective speed (tiles/s) of `func` when co-hosted with `cohosted`
+/// (including itself) at `quota` CPU, on CPU or GPU.
+pub fn effective_speed(
+    db: &ProfileDb,
+    func: &str,
+    cohosted: &[&str],
+    quota: f64,
+    gpu: bool,
+) -> f64 {
+    let f = db.get(func);
+    let base = if gpu { f.gpu_speed } else { f.cpu_speed(quota) };
+    match colocate(db, cohosted, gpu) {
+        Colocation::Degraded { slowdown, .. } => base / slowdown,
+        Colocation::OutOfMemory { .. } => 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::{ProfileDb, FUNC_NAMES};
+
+    #[test]
+    fn solo_function_unpenalized() {
+        let db = ProfileDb::jetson();
+        match colocate(&db, &["cloud"], false) {
+            Colocation::Degraded { slowdown, .. } => {
+                assert!((slowdown - 1.0).abs() < 1e-9)
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn slowdown_monotone_in_cohosted_count() {
+        // Fig. 3(b): D < D+L < D+L+R in latency.
+        let db = ProfileDb::jetson();
+        let mut last = 0.0;
+        for k in 1..=3 {
+            match colocate(&db, &FUNC_NAMES[..k].iter().copied().collect::<Vec<_>>(), false) {
+                Colocation::Degraded { slowdown, .. } => {
+                    assert!(slowdown > last, "k={k}");
+                    last = slowdown;
+                }
+                other => panic!("k={k}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn all_four_oom_on_jetson() {
+        // Fig. 11 rightmost group: data parallelism cannot instantiate the
+        // full workflow — completion 0.
+        let db = ProfileDb::jetson();
+        assert!(matches!(
+            colocate(&db, &FUNC_NAMES, false),
+            Colocation::OutOfMemory { .. }
+        ));
+        assert_eq!(effective_speed(&db, "cloud", &FUNC_NAMES, 4.0, false), 0.0);
+    }
+
+    #[test]
+    fn gpu_memory_counts_toward_oom() {
+        let db = ProfileDb::jetson();
+        // Three functions fit CPU-only but not with GPU residency too.
+        let three = &FUNC_NAMES[..3].iter().copied().collect::<Vec<_>>()[..];
+        assert!(matches!(colocate(&db, three, false), Colocation::Degraded { .. }));
+        assert!(matches!(colocate(&db, three, true), Colocation::OutOfMemory { .. }));
+    }
+
+    #[test]
+    fn effective_speed_divides_by_slowdown() {
+        let db = ProfileDb::jetson();
+        let solo = effective_speed(&db, "cloud", &["cloud"], 2.0, false);
+        let duo = effective_speed(&db, "cloud", &["cloud", "landuse"], 2.0, false);
+        assert!(duo < solo);
+        assert!(duo > 0.0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Piecewise-linear performance curves (paper Eq. (1)/(2), Appendix D).
+//!
+//! The paper models CPU-quota → analytics-speed and CPU-quota → power as
+//! two-piece piecewise-linear functions `g^cspeed`, `g^cpow` fit from
+//! profiling runs (Table 1).  This module implements the curve type used
+//! everywhere: evaluation, inversion (what quota buys a target speed — the
+//! planner's LP uses the segment form directly), and concavity checks.
+
+/// One linear segment over `[x0, x1]`: `y = slope * x + intercept`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Segment {
+    pub x0: f64,
+    pub x1: f64,
+    pub slope: f64,
+    pub intercept: f64,
+}
+
+impl Segment {
+    pub fn eval(&self, x: f64) -> f64 {
+        self.slope * x + self.intercept
+    }
+}
+
+/// A piecewise-linear curve with contiguous segments.
+///
+/// Below the first segment the curve is 0 (a function cannot run with less
+/// than its minimum quota); above the last it saturates at the endpoint
+/// value (allocating more CPU than the device-saturation point buys
+/// nothing — Fig. 7a).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pwl {
+    segs: Vec<Segment>,
+}
+
+impl Pwl {
+    /// Build from segments; they must be contiguous and ordered.
+    pub fn new(segs: Vec<Segment>) -> Self {
+        assert!(!segs.is_empty(), "empty piecewise curve");
+        for w in segs.windows(2) {
+            assert!(
+                (w[0].x1 - w[1].x0).abs() < 1e-9,
+                "segments must be contiguous: {:?} then {:?}",
+                w[0],
+                w[1]
+            );
+        }
+        Pwl { segs }
+    }
+
+    /// Two-piece constructor from Table-1 style parameters:
+    /// `(x_break points [a, b, c], slopes, intercepts)` → segments
+    /// `[a,b]` and `[b,c]`.
+    pub fn two_piece(a: f64, b: f64, c: f64, s1: f64, i1: f64, s2: f64, i2: f64) -> Self {
+        Pwl::new(vec![
+            Segment { x0: a, x1: b, slope: s1, intercept: i1 },
+            Segment { x0: b, x1: c, slope: s2, intercept: i2 },
+        ])
+    }
+
+    /// Domain start (minimum instantiable quota).
+    pub fn x_min(&self) -> f64 {
+        self.segs[0].x0
+    }
+
+    /// Domain end (saturation quota).
+    pub fn x_max(&self) -> f64 {
+        self.segs.last().unwrap().x1
+    }
+
+    /// Evaluate with the out-of-domain semantics described on the type.
+    pub fn eval(&self, x: f64) -> f64 {
+        if x < self.x_min() {
+            return 0.0;
+        }
+        if x >= self.x_max() {
+            return self.segs.last().unwrap().eval(self.x_max());
+        }
+        for s in &self.segs {
+            if x <= s.x1 {
+                return s.eval(x);
+            }
+        }
+        unreachable!()
+    }
+
+    /// Maximum value over the domain (curves are nondecreasing in practice,
+    /// but we do not assume it).
+    pub fn max_value(&self) -> f64 {
+        self.segs
+            .iter()
+            .flat_map(|s| [s.eval(s.x0), s.eval(s.x1)])
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Invert: smallest `x` with `eval(x) >= y`, or `None` if unreachable.
+    pub fn inverse(&self, y: f64) -> Option<f64> {
+        if y <= self.eval(self.x_min()) {
+            // Any target at or below the minimum-quota speed is met by the
+            // minimum instantiable quota (eval is 0 below the domain).
+            return Some(self.x_min());
+        }
+        for s in &self.segs {
+            let (y0, y1) = (s.eval(s.x0), s.eval(s.x1));
+            if y <= y1.max(y0) && s.slope != 0.0 {
+                let x = (y - s.intercept) / s.slope;
+                if x >= s.x0 - 1e-9 && x <= s.x1 + 1e-9 {
+                    return Some(x.clamp(s.x0, s.x1));
+                }
+            }
+        }
+        None
+    }
+
+    /// Segments (the planner's LP builds one constraint set per segment).
+    pub fn segments(&self) -> &[Segment] {
+        &self.segs
+    }
+
+    /// True iff the curve is concave and nondecreasing (diminishing
+    /// returns) — the property that makes the LP epigraph formulation of
+    /// `v <= g(r)` exact using one `v <= slope·r + intercept` row per
+    /// segment.
+    pub fn is_concave_nondecreasing(&self) -> bool {
+        let mut prev_slope = f64::INFINITY;
+        for s in &self.segs {
+            if s.slope < -1e-12 || s.slope > prev_slope + 1e-12 {
+                return false;
+            }
+            prev_slope = s.slope;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::{close, property};
+
+    fn cloud_curve() -> Pwl {
+        // Table 1, "Cloud": quota 0.5–2: 0.7804x + 0.1073; 2–4: 0.3445x + 1.1331.
+        Pwl::two_piece(0.5, 2.0, 4.0, 0.7804, 0.1073, 0.3445, 1.1331)
+    }
+
+    #[test]
+    fn evaluates_table1_values() {
+        let c = cloud_curve();
+        assert!(close(c.eval(1.0), 0.8877, 1e-6).is_ok());
+        assert!(close(c.eval(2.0), 0.7804 * 2.0 + 0.1073, 1e-6).is_ok());
+        assert!(close(c.eval(3.0), 0.3445 * 3.0 + 1.1331, 1e-6).is_ok());
+    }
+
+    #[test]
+    fn below_domain_is_zero_above_saturates() {
+        let c = cloud_curve();
+        assert_eq!(c.eval(0.25), 0.0);
+        assert!(close(c.eval(10.0), c.eval(4.0), 1e-12).is_ok());
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let c = cloud_curve();
+        for &x in &[0.5, 0.9, 1.7, 2.0, 2.8, 4.0] {
+            let y = c.eval(x);
+            let xi = c.inverse(y).unwrap();
+            assert!(close(c.eval(xi), y, 1e-9).is_ok(), "x={x}");
+        }
+        assert!(c.inverse(1e9).is_none());
+        assert_eq!(c.inverse(0.0), Some(0.5));
+    }
+
+    #[test]
+    fn concavity_detected() {
+        assert!(cloud_curve().is_concave_nondecreasing());
+        let convex = Pwl::two_piece(0.0, 1.0, 2.0, 1.0, 0.0, 2.0, -1.0);
+        assert!(!convex.is_concave_nondecreasing());
+        let decreasing = Pwl::two_piece(0.0, 1.0, 2.0, -1.0, 3.0, -2.0, 4.0);
+        assert!(!decreasing.is_concave_nondecreasing());
+    }
+
+    #[test]
+    #[should_panic(expected = "contiguous")]
+    fn rejects_gap_segments() {
+        Pwl::new(vec![
+            Segment { x0: 0.0, x1: 1.0, slope: 1.0, intercept: 0.0 },
+            Segment { x0: 1.5, x1: 2.0, slope: 1.0, intercept: 0.0 },
+        ]);
+    }
+
+    #[test]
+    fn prop_inverse_is_least_quota() {
+        property("inverse minimal", 50, |rng: &mut Rng| {
+            let s1 = rng.range(0.3, 1.0);
+            let i1 = rng.range(-0.1, 0.3);
+            let s2 = rng.range(0.05, s1); // concave
+            let b = rng.range(1.0, 3.0);
+            let i2 = s1 * b + i1 - s2 * b; // continuity at b
+            let c = Pwl::two_piece(0.5, b, 4.0, s1, i1, s2, i2);
+            let y = rng.range(0.0, c.max_value());
+            let x = c.inverse(y).ok_or("inverse failed in range")?;
+            close(c.eval(x).max(y), c.eval(x), 1e-6)?; // eval(x) >= y
+            // a slightly smaller x must miss the target (minimality)
+            if x > c.x_min() + 1e-6 && y > c.eval(c.x_min()) {
+                if c.eval(x - 1e-4) >= y + 1e-9 {
+                    return Err(format!("x={x} not minimal for y={y}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,60 @@
+//! Per-tile data volumes (paper Fig. 8(b)).
+//!
+//! The pivotal measurement behind OrbitChain's data-locality design: raw
+//! sensing tiles are megabytes, while intermediate analytics results
+//! (masks, detections, class labels) are tens to hundreds of bytes —
+//! 5–6 orders of magnitude smaller.  Pipelines that share raw data across
+//! satellites pay this gap in inter-satellite bandwidth and transmit energy.
+
+use super::ProfileDb;
+
+/// Raw bytes of one ground-track tile at paper resolution
+/// (640×640 px × 3 bands × 1 B radiometry).
+pub const RAW_TILE_BYTES: f64 = 640.0 * 640.0 * 3.0;
+
+/// Bytes of the per-tile routing header (tile id, frame id, pipeline tag,
+/// mask offsets) that accompanies any inter-satellite function call (§5.1
+/// runtime tagging).
+pub const TAG_HEADER_BYTES: f64 = 24.0;
+
+/// Intermediate-result bytes emitted per tile by `func` (profile constant),
+/// including the routing header.
+pub fn intermediate_bytes(db: &ProfileDb, func: &str) -> f64 {
+    db.get(func).inter_bytes + TAG_HEADER_BYTES
+}
+
+/// Ratio raw/intermediate for a function — Fig. 8(b) reports this in the
+/// 1e5–1e6 band.
+pub fn locality_gain(db: &ProfileDb, func: &str) -> f64 {
+    RAW_TILE_BYTES / intermediate_bytes(db, func)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::{ProfileDb, FUNC_NAMES};
+
+    #[test]
+    fn raw_tile_is_megabytes() {
+        assert_eq!(RAW_TILE_BYTES, 1_228_800.0);
+    }
+
+    #[test]
+    fn intermediate_results_orders_of_magnitude_smaller() {
+        // Fig. 8(b): 3.5+ orders of magnitude at our tile scale.
+        let db = ProfileDb::jetson();
+        for name in FUNC_NAMES {
+            let gain = locality_gain(&db, name);
+            assert!(gain > 3.0e3, "{name}: {gain}");
+            assert!(gain < 1.0e6, "{name}: {gain}");
+        }
+    }
+
+    #[test]
+    fn header_always_included() {
+        let db = ProfileDb::jetson();
+        for name in FUNC_NAMES {
+            assert!(intermediate_bytes(&db, name) > TAG_HEADER_BYTES);
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Piecewise-linear curve fitting (paper Appendix D, Fig. 19 / Table 1).
+//!
+//! The profiling harness samples (CPU-quota, tiles/s) pairs — on the paper's
+//! testbed from real runs, here from the calibrated profile model plus
+//! measurement noise or from hardware-in-the-loop timings — and fits a
+//! two-piece linear model with a breakpoint search.  Reported per segment:
+//! slope, intercept and R², regenerating Table 1.
+
+use crate::util::stats::linfit;
+
+/// One fitted segment row of Table 1.
+#[derive(Debug, Clone, Copy)]
+pub struct FitSegment {
+    pub x0: f64,
+    pub x1: f64,
+    pub slope: f64,
+    pub intercept: f64,
+    pub r2: f64,
+}
+
+/// A fitted two-piece model.
+#[derive(Debug, Clone)]
+pub struct TwoPieceFit {
+    pub lo: FitSegment,
+    pub hi: FitSegment,
+    /// Breakpoint chosen by the search.
+    pub breakpoint: f64,
+    /// Total sum of squared residuals across both segments.
+    pub ssr: f64,
+}
+
+impl TwoPieceFit {
+    pub fn eval(&self, x: f64) -> f64 {
+        if x <= self.breakpoint {
+            self.lo.slope * x + self.lo.intercept
+        } else {
+            self.hi.slope * x + self.hi.intercept
+        }
+    }
+}
+
+fn ssr_of(x: &[f64], y: &[f64], slope: f64, intercept: f64) -> f64 {
+    x.iter()
+        .zip(y)
+        .map(|(xi, yi)| (yi - (slope * xi + intercept)).powi(2))
+        .sum()
+}
+
+/// Fit a two-piece linear model to samples, searching the breakpoint over
+/// the interior sample points (each side needs ≥ 2 points).
+///
+/// Panics if fewer than 4 samples are provided.
+pub fn fit_two_piece(x: &[f64], y: &[f64]) -> TwoPieceFit {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 4, "need >= 4 samples for a two-piece fit");
+    let mut idx: Vec<usize> = (0..x.len()).collect();
+    idx.sort_by(|&a, &b| x[a].partial_cmp(&x[b]).unwrap());
+    let xs: Vec<f64> = idx.iter().map(|&i| x[i]).collect();
+    let ys: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
+
+    let mut best: Option<TwoPieceFit> = None;
+    for k in 2..=(xs.len() - 2) {
+        let (s1, i1, r21) = linfit(&xs[..k], &ys[..k]);
+        let (s2, i2, r22) = linfit(&xs[k..], &ys[k..]);
+        let ssr = ssr_of(&xs[..k], &ys[..k], s1, i1) + ssr_of(&xs[k..], &ys[k..], s2, i2);
+        let cand = TwoPieceFit {
+            lo: FitSegment {
+                x0: xs[0],
+                x1: xs[k - 1],
+                slope: s1,
+                intercept: i1,
+                r2: r21,
+            },
+            hi: FitSegment {
+                x0: xs[k],
+                x1: *xs.last().unwrap(),
+                slope: s2,
+                intercept: i2,
+                r2: r22,
+            },
+            breakpoint: 0.5 * (xs[k - 1] + xs[k]),
+            ssr,
+        };
+        if best.as_ref().map_or(true, |b| cand.ssr < b.ssr) {
+            best = Some(cand);
+        }
+    }
+    best.unwrap()
+}
+
+/// Sample a profile curve at `quotas` with multiplicative Gaussian noise
+/// (σ relative), emulating the three profiling rounds of §4.3.
+pub fn sample_curve(
+    curve: &super::curves::Pwl,
+    quotas: &[f64],
+    rel_noise: f64,
+    rng: &mut crate::util::rng::Rng,
+) -> Vec<f64> {
+    quotas
+        .iter()
+        .map(|&q| {
+            let v = curve.eval(q);
+            (v * (1.0 + rng.normal_ms(0.0, rel_noise))).max(0.0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::ProfileDb;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recovers_exact_two_piece() {
+        // y = 2x for x<=2, y = 0.5x + 3 after.
+        let xs: Vec<f64> = (1..=16).map(|i| i as f64 * 0.25).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|&x| if x <= 2.0 { 2.0 * x } else { 0.5 * x + 3.0 })
+            .collect();
+        let fit = fit_two_piece(&xs, &ys);
+        assert!((fit.lo.slope - 2.0).abs() < 1e-9, "{fit:?}");
+        assert!((fit.hi.slope - 0.5).abs() < 1e-9);
+        assert!((fit.hi.intercept - 3.0).abs() < 1e-9);
+        assert!(fit.ssr < 1e-12);
+        assert!(fit.lo.r2 > 0.999 && fit.hi.r2 > 0.999);
+    }
+
+    #[test]
+    fn table1_refit_from_noisy_samples_has_high_r2() {
+        // Appendix D: R² generally exceeds 0.9 — regenerate from noisy
+        // samples of the calibrated cloud curve.
+        let db = ProfileDb::jetson();
+        let curve = &db.get("cloud").cspeed;
+        let quotas: Vec<f64> = (0..15).map(|i| 0.5 + i as f64 * 0.25).collect();
+        let mut rng = Rng::new(42);
+        let mut ys = Vec::new();
+        let mut xs = Vec::new();
+        for _round in 0..3 {
+            xs.extend_from_slice(&quotas);
+            ys.extend(sample_curve(curve, &quotas, 0.03, &mut rng));
+        }
+        let fit = fit_two_piece(&xs, &ys);
+        assert!(fit.lo.r2 > 0.9, "{}", fit.lo.r2);
+        assert!(fit.hi.r2 > 0.8, "{}", fit.hi.r2);
+        // Slopes land near the Table-1 truth.
+        assert!((fit.lo.slope - 0.7804).abs() < 0.12, "{}", fit.lo.slope);
+    }
+
+    #[test]
+    fn eval_uses_breakpoint() {
+        let xs = vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0];
+        let ys = vec![0.0, 1.0, 2.0, 2.5, 3.0, 3.5];
+        let fit = fit_two_piece(&xs, &ys);
+        assert!(fit.eval(0.5) < fit.eval(4.5));
+    }
+
+    #[test]
+    #[should_panic(expected = "need >= 4 samples")]
+    fn too_few_samples_panics() {
+        fit_two_piece(&[1.0, 2.0, 3.0], &[1.0, 2.0, 3.0]);
+    }
+}

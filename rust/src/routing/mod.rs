@@ -1,0 +1,702 @@
+//! Analytics workload routing (paper §5.3, Algorithm 1; §5.4 shift variant)
+//! plus the *load spraying* baseline used in Fig. 12/13(b).
+//!
+//! Given a [`DeploymentPlan`](crate::planner::DeploymentPlan), routing
+//! orchestrates the deployed function instances into *sensing and analytics
+//! pipelines*: each pipeline has exactly one instance per workflow function,
+//! a workload `σ_k` (source tiles per frame, Eq. (12): bottleneck of
+//! instance capacity over workload factor), and is discovered by BFS that
+//! always picks the *closest* (minimum ISL hops) instance with remaining
+//! capacity — this is the communication-minimizing heart of OrbitChain.
+//!
+//! The §5.4 variant runs the outer loop once per capture group in
+//! increasing subset size, restricting the instance search to satellites
+//! that can capture the group's tiles, so tiles visible to few satellites
+//! are routed first.
+//!
+//! *Load spraying* routes the same workload but splits every function's
+//! traffic across all instances proportionally to capacity, ignoring
+//! locality — the network-load-balancing-inspired comparison point.
+
+use crate::constellation::Constellation;
+use crate::planner::DeploymentPlan;
+use crate::profile::{datasize, ProfileDb};
+use crate::workflow::Workflow;
+
+/// Device of a function instance (CPU-only execution or a GPU time slice —
+/// regarded as two different instances, §5.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dev {
+    Cpu,
+    Gpu,
+}
+
+/// One stage of a pipeline: the instance chosen for a function.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stage {
+    pub func: usize,
+    pub sat: usize,
+    pub dev: Dev,
+}
+
+/// A sensing-and-analytics pipeline `ζ_k` with its assigned workload `σ_k`.
+#[derive(Debug, Clone)]
+pub struct Pipeline {
+    /// `stages[i]` is the instance of function `i` (dense by func id).
+    pub stages: Vec<Stage>,
+    /// Workload σ_k in source tiles per frame deadline.
+    pub workload: f64,
+    /// Capture group this pipeline serves.
+    pub group: usize,
+}
+
+impl Pipeline {
+    /// ISL bytes this pipeline moves per frame: for every workflow edge
+    /// `(i, i')`, `σ_k · ρ_i · δ_{i,i'}` result records of `inter_bytes(i)`
+    /// cross `hops(j_i, j_{i'})` links (§4.2: raw tiles never cross — the
+    /// downstream satellite re-captures them locally).
+    pub fn isl_bytes_per_frame(
+        &self,
+        wf: &Workflow,
+        profiles: &ProfileDb,
+        constellation: &Constellation,
+        rho: &[f64],
+    ) -> f64 {
+        let mut bytes = 0.0;
+        for (u, v, delta) in wf.edge_list() {
+            let hops = constellation.hops(self.stages[u].sat, self.stages[v].sat);
+            if hops > 0 {
+                let records = self.workload * rho[u] * delta;
+                bytes += records
+                    * datasize::intermediate_bytes(profiles, wf.name(u))
+                    * hops as f64;
+            }
+        }
+        bytes.max(0.0)
+    }
+}
+
+/// Result of routing one frame's workload.
+#[derive(Debug, Clone)]
+pub struct Routing {
+    pub pipelines: Vec<Pipeline>,
+    /// Source tiles per frame successfully assigned a pipeline.
+    pub routed_tiles: f64,
+    /// Tiles that could not be routed (zero for feasible plans).
+    pub unrouted_tiles: f64,
+    /// Total ISL traffic per frame, bytes.
+    pub isl_bytes_per_frame: f64,
+}
+
+/// Routing failure.
+#[derive(Debug, thiserror::Error)]
+pub enum RouteError {
+    #[error("no instance of function {func} reachable for capture group {group}")]
+    NoInstance { func: usize, group: usize },
+}
+
+/// Remaining capacity ledger for all instances.
+struct Ledger {
+    /// `[func][sat]` CPU capacities (tiles/frame), then GPU.
+    cpu: Vec<f64>,
+    gpu: Vec<f64>,
+    n_sats: usize,
+}
+
+impl Ledger {
+    fn from_plan(plan: &DeploymentPlan, frame_deadline_s: f64) -> Self {
+        let mut cpu = vec![0.0; plan.n_funcs * plan.n_sats];
+        let mut gpu = vec![0.0; plan.n_funcs * plan.n_sats];
+        for p in &plan.placements {
+            let k = p.func * plan.n_sats + p.sat;
+            cpu[k] = p.cpu_capacity(frame_deadline_s);
+            gpu[k] = p.gpu_capacity();
+        }
+        Ledger { cpu, gpu, n_sats: plan.n_sats }
+    }
+
+    fn get(&self, func: usize, sat: usize, dev: Dev) -> f64 {
+        let k = func * self.n_sats + sat;
+        match dev {
+            Dev::Cpu => self.cpu[k],
+            Dev::Gpu => self.gpu[k],
+        }
+    }
+
+    fn take(&mut self, func: usize, sat: usize, dev: Dev, amount: f64) {
+        let k = func * self.n_sats + sat;
+        let slot = match dev {
+            Dev::Cpu => &mut self.cpu[k],
+            Dev::Gpu => &mut self.gpu[k],
+        };
+        *slot = (*slot - amount).max(0.0);
+    }
+}
+
+const EPS: f64 = 1e-9;
+
+/// **Algorithm 1** with the §5.4 ground-track-shift extension.
+pub fn route(
+    wf: &Workflow,
+    profiles: &ProfileDb,
+    constellation: &Constellation,
+    plan: &DeploymentPlan,
+) -> Result<Routing, RouteError> {
+    let rho = wf.workload_factors().expect("validated workflow");
+    let mut ledger = Ledger::from_plan(plan, constellation.frame_deadline_s);
+    let mut pipelines = Vec::new();
+    let mut routed = 0.0;
+    let mut unrouted = 0.0;
+
+    // Groups in increasing subset size (§5.4: scarce tiles first).
+    let mut group_order: Vec<usize> = (0..constellation.capture_groups.len()).collect();
+    group_order.sort_by_key(|&g| constellation.capture_groups[g].len());
+
+    for gi in group_order {
+        let group = &constellation.capture_groups[gi];
+        let mut remaining = group.tiles as f64;
+        while remaining > EPS {
+            match build_pipeline(wf, &ledger, constellation, gi, &rho) {
+                None => {
+                    unrouted += remaining;
+                    break;
+                }
+                Some((stages, sigma_cap)) => {
+                    let sigma = sigma_cap.min(remaining);
+                    if sigma <= EPS {
+                        unrouted += remaining;
+                        break;
+                    }
+                    for st in &stages {
+                        ledger.take(st.func, st.sat, st.dev, sigma * rho[st.func]);
+                    }
+                    remaining -= sigma;
+                    routed += sigma;
+                    pipelines.push(Pipeline { stages, workload: sigma, group: gi });
+                }
+            }
+        }
+    }
+
+    // Local-improvement pass (implementation refinement over Algorithm 1's
+    // greedy): split pipelines into ~unit-tile chunks, then relocate single
+    // stages to instances with spare capacity whenever that strictly lowers
+    // hop-weighted traffic.  The greedy BFS can strand capacity on tight
+    // plans and end up crossing satellites more than load spraying; the
+    // fine-grained relocation sweeps restore the paper's expected ordering.
+    // Chunks with identical stage assignments are re-merged afterwards.
+    let mut chunks: Vec<Pipeline> = Vec::new();
+    for p in &pipelines {
+        let mut left = p.workload;
+        while left > EPS {
+            let take = left.min(1.0);
+            chunks.push(Pipeline { stages: p.stages.clone(), workload: take, group: p.group });
+            left -= take;
+        }
+    }
+    for _ in 0..4 {
+        let moved = improve_pass(wf, profiles, constellation, &rho, &mut ledger, &mut chunks);
+        let swapped = swap_pass(wf, profiles, constellation, &rho, &mut chunks);
+        if !moved && !swapped {
+            break;
+        }
+    }
+    // Merge chunks that share (group, stage assignment).
+    let mut merged: std::collections::BTreeMap<(usize, Vec<(usize, usize, bool)>), f64> =
+        std::collections::BTreeMap::new();
+    for c in &chunks {
+        let key: Vec<(usize, usize, bool)> = c
+            .stages
+            .iter()
+            .map(|s| (s.func, s.sat, matches!(s.dev, Dev::Gpu)))
+            .collect();
+        *merged.entry((c.group, key)).or_insert(0.0) += c.workload;
+    }
+    pipelines = merged
+        .into_iter()
+        .map(|((group, key), workload)| Pipeline {
+            stages: key
+                .iter()
+                .map(|&(func, sat, gpu)| Stage {
+                    func,
+                    sat,
+                    dev: if gpu { Dev::Gpu } else { Dev::Cpu },
+                })
+                .collect(),
+            workload,
+            group,
+        })
+        .collect();
+
+    let isl = pipelines
+        .iter()
+        .map(|p| p.isl_bytes_per_frame(wf, profiles, constellation, &rho))
+        .sum();
+    Ok(Routing {
+        pipelines,
+        routed_tiles: routed,
+        unrouted_tiles: unrouted,
+        isl_bytes_per_frame: isl,
+    })
+}
+
+/// Hop-weighted traffic cost contributed by function `func` within a
+/// pipeline if its stage sits on satellite `sat`.
+fn stage_cost(
+    wf: &Workflow,
+    profiles: &ProfileDb,
+    constellation: &Constellation,
+    rho: &[f64],
+    stages: &[Stage],
+    func: usize,
+    sat: usize,
+    workload: f64,
+) -> f64 {
+    let mut cost = 0.0;
+    for (u, v, delta) in wf.edge_list() {
+        if u != func && v != func {
+            continue;
+        }
+        let (su, sv) = (
+            if u == func { sat } else { stages[u].sat },
+            if v == func { sat } else { stages[v].sat },
+        );
+        let hops = constellation.hops(su, sv) as f64;
+        cost += workload
+            * rho[u]
+            * delta
+            * datasize::intermediate_bytes(profiles, wf.name(u))
+            * hops;
+    }
+    cost
+}
+
+/// Capacity-neutral swap sweep: exchange the same function's stage between
+/// two equal-workload chunks when that lowers combined hop cost — escapes
+/// the local minima single-stage relocation cannot (an instance pinned to
+/// one satellite still benefits from *which* tiles it serves).
+fn swap_pass(
+    wf: &Workflow,
+    profiles: &ProfileDb,
+    constellation: &Constellation,
+    rho: &[f64],
+    chunks: &mut [Pipeline],
+) -> bool {
+    let mut improved = false;
+    let n = chunks.len();
+    let nf = wf.len();
+    for func in 0..nf {
+        for a in 0..n {
+            for b in (a + 1)..n {
+                if chunks[a].group != chunks[b].group {
+                    continue;
+                }
+                if (chunks[a].workload - chunks[b].workload).abs() > EPS {
+                    continue;
+                }
+                let (sa, sb) = (chunks[a].stages[func], chunks[b].stages[func]);
+                if sa.sat == sb.sat && sa.dev == sb.dev {
+                    continue;
+                }
+                let cost = |p: &Pipeline, st: Stage| {
+                    stage_cost(
+                        wf, profiles, constellation, rho, &p.stages, func, st.sat,
+                        p.workload,
+                    )
+                };
+                let before = cost(&chunks[a], sa) + cost(&chunks[b], sb);
+                let after = cost(&chunks[a], sb) + cost(&chunks[b], sa);
+                if after + 1e-9 < before {
+                    chunks[a].stages[func] = Stage { func, ..sb };
+                    chunks[b].stages[func] = Stage { func, ..sa };
+                    improved = true;
+                }
+            }
+        }
+    }
+    improved
+}
+
+/// One relocation sweep; returns whether anything improved.
+fn improve_pass(
+    wf: &Workflow,
+    profiles: &ProfileDb,
+    constellation: &Constellation,
+    rho: &[f64],
+    ledger: &mut Ledger,
+    pipelines: &mut [Pipeline],
+) -> bool {
+    let mut improved = false;
+    for p in pipelines.iter_mut() {
+        let group = &constellation.capture_groups[p.group];
+        for i in 0..p.stages.len() {
+            let cur = p.stages[i];
+            let need = p.workload * rho[cur.func];
+            let cur_cost = stage_cost(
+                wf, profiles, constellation, rho, &p.stages, cur.func, cur.sat,
+                p.workload,
+            );
+            let mut best: Option<(f64, Stage)> = None;
+            for sat in group.sats() {
+                for dev in [Dev::Cpu, Dev::Gpu] {
+                    if sat == cur.sat && dev == cur.dev {
+                        continue;
+                    }
+                    if ledger.get(cur.func, sat, dev) + EPS < need {
+                        continue;
+                    }
+                    let cost = stage_cost(
+                        wf, profiles, constellation, rho, &p.stages, cur.func, sat,
+                        p.workload,
+                    );
+                    if cost + 1e-9 < best.map_or(cur_cost, |(c, _)| c) {
+                        best = Some((cost, Stage { func: cur.func, sat, dev }));
+                    }
+                }
+            }
+            if let Some((_, st)) = best {
+                // Release the old reservation, take the new one.
+                let k_old = cur.func * ledger.n_sats + cur.sat;
+                match cur.dev {
+                    Dev::Cpu => ledger.cpu[k_old] += need,
+                    Dev::Gpu => ledger.gpu[k_old] += need,
+                }
+                ledger.take(st.func, st.sat, st.dev, need);
+                p.stages[i] = st;
+                improved = true;
+            }
+        }
+    }
+    improved
+}
+
+/// BFS for the next available pipeline within capture group `gi`
+/// (Algorithm 1 lines 3–15).  Returns the stages and the pipeline capacity
+/// `σ = min_i n_i / ρ_i` (Eq. (12)), or `None` when some function has no
+/// remaining instance on the group's satellites.
+fn build_pipeline(
+    wf: &Workflow,
+    ledger: &Ledger,
+    constellation: &Constellation,
+    gi: usize,
+    rho: &[f64],
+) -> Option<(Vec<Stage>, f64)> {
+    let group = &constellation.capture_groups[gi];
+    let n = wf.len();
+    let mut chosen: Vec<Option<Stage>> = vec![None; n];
+    let mut queue: std::collections::VecDeque<usize> = std::collections::VecDeque::new();
+
+    // Dummy instance ν₀: connect each in-degree-0 function to its instance
+    // on the *first* satellite (in movement order) with remaining capacity.
+    for src in wf.sources() {
+        let st = nearest_instance(ledger, group, src, None)?;
+        chosen[src] = Some(st);
+        queue.push_back(src);
+    }
+
+    while let Some(u) = queue.pop_front() {
+        let from_sat = chosen[u].unwrap().sat;
+        for &(v, _) in wf.downstream(u) {
+            if chosen[v].is_some() {
+                continue; // exactly one instance per function (lines 7–8)
+            }
+            let st = nearest_instance(ledger, group, v, Some(from_sat))?;
+            chosen[v] = Some(st);
+            queue.push_back(v);
+        }
+    }
+
+    let stages: Vec<Stage> = chosen.into_iter().map(|s| s.unwrap()).collect();
+    let sigma = stages
+        .iter()
+        .map(|st| {
+            let cap = ledger.get(st.func, st.sat, st.dev);
+            if rho[st.func] > 0.0 {
+                cap / rho[st.func]
+            } else {
+                f64::INFINITY
+            }
+        })
+        .fold(f64::INFINITY, f64::min);
+    if sigma <= EPS || !sigma.is_finite() {
+        None
+    } else {
+        Some((stages, sigma))
+    }
+}
+
+/// Instance of `func` with positive remaining capacity on the group's
+/// satellites, minimizing hops from `from_sat` (or the first satellite in
+/// movement order for sources); ties prefer the larger remaining capacity
+/// (keeps pipelines wide and reduces the pipeline count).
+fn nearest_instance(
+    ledger: &Ledger,
+    group: &crate::constellation::CaptureGroup,
+    func: usize,
+    from_sat: Option<usize>,
+) -> Option<Stage> {
+    let mut best: Option<(usize, f64, Stage)> = None; // (hops, -cap, stage)
+    for sat in group.sats() {
+        for dev in [Dev::Cpu, Dev::Gpu] {
+            let cap = ledger.get(func, sat, dev);
+            if cap <= EPS {
+                continue;
+            }
+            let hops = match from_sat {
+                Some(f) => f.abs_diff(sat),
+                None => sat, // distance from the "first" satellite
+            };
+            let better = match &best {
+                None => true,
+                Some((bh, bcap, _)) => hops < *bh || (hops == *bh && cap > *bcap),
+            };
+            if better {
+                best = Some((hops, cap, Stage { func, sat, dev }));
+            }
+        }
+    }
+    best.map(|(_, _, st)| st)
+}
+
+/// **Load spraying** baseline: every function's workload is split across
+/// *all* its instances proportionally to capacity, with no locality
+/// preference (network-load-balancing style).  Returns the same [`Routing`]
+/// summary; pipelines here are synthetic per-(group × instance-pair)
+/// fractional flows, so only the aggregate fields are meaningful.
+pub fn route_load_spraying(
+    wf: &Workflow,
+    profiles: &ProfileDb,
+    constellation: &Constellation,
+    plan: &DeploymentPlan,
+) -> Routing {
+    let rho = wf.workload_factors().expect("validated workflow");
+    let df = constellation.frame_deadline_s;
+    let ns = plan.n_sats;
+
+    // Per function: distribution of workload over satellites ∝ *remaining*
+    // capacity, restricted per capture group to its satellites.  Groups are
+    // processed scarce-first and deplete a shared ledger, so the sprayed
+    // flow is actually schedulable (no double-booking of leader capacity).
+    let mut isl_bytes = 0.0;
+    let mut routed = 0.0;
+    let mut unrouted = 0.0;
+    let mut remaining: Vec<Vec<f64>> = (0..wf.len())
+        .map(|i| {
+            (0..ns)
+                .map(|j| {
+                    let p = plan.placement(i, j);
+                    p.cpu_capacity(df) + p.gpu_capacity()
+                })
+                .collect()
+        })
+        .collect();
+    let mut group_order: Vec<usize> = (0..constellation.capture_groups.len()).collect();
+    group_order.sort_by_key(|&g| constellation.capture_groups[g].len());
+
+    for &gi in &group_order {
+        let group = &constellation.capture_groups[gi];
+        let tiles = group.tiles as f64;
+        // Fraction of function i's work on satellite j (within the group).
+        let mut frac = vec![vec![0.0; ns]; wf.len()];
+        let mut ok = true;
+        for i in 0..wf.len() {
+            let caps: Vec<f64> = (0..ns)
+                .map(|j| if group.contains(j) { remaining[i][j] } else { 0.0 })
+                .collect();
+            let total: f64 = caps.iter().sum();
+            if total <= EPS {
+                if rho[i] > 0.0 {
+                    ok = false;
+                }
+                continue;
+            }
+            for j in 0..ns {
+                frac[i][j] = caps[j] / total;
+                remaining[i][j] -= frac[i][j] * tiles * rho[i];
+                remaining[i][j] = remaining[i][j].max(0.0);
+            }
+        }
+        if !ok {
+            unrouted += tiles;
+            continue;
+        }
+        routed += tiles;
+        // Expected ISL bytes: traffic on edge (u,v) spreads as the product
+        // of the endpoints' spray distributions.
+        for (u, v, delta) in wf.edge_list() {
+            let records = tiles * rho[u] * delta;
+            let bytes = datasize::intermediate_bytes(profiles, wf.name(u));
+            let mut expected_hops = 0.0;
+            for ju in 0..ns {
+                for jv in 0..ns {
+                    expected_hops +=
+                        frac[u][ju] * frac[v][jv] * constellation.hops(ju, jv) as f64;
+                }
+            }
+            isl_bytes += records * bytes * expected_hops;
+        }
+    }
+
+    Routing {
+        pipelines: Vec::new(),
+        routed_tiles: routed,
+        unrouted_tiles: unrouted,
+        isl_bytes_per_frame: isl_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constellation::Constellation;
+    use crate::planner;
+    use crate::profile::ProfileDb;
+    use crate::workflow;
+
+    fn setup() -> (crate::workflow::Workflow, ProfileDb, Constellation, DeploymentPlan) {
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let plan = planner::plan(&wf, &db, &c).expect("plan");
+        (wf, db, c, plan)
+    }
+
+    #[test]
+    fn routes_all_tiles_for_feasible_plan() {
+        let (wf, db, c, plan) = setup();
+        assert!(plan.feasible());
+        let r = route(&wf, &db, &c, &plan).unwrap();
+        assert!(r.unrouted_tiles < 1e-6, "unrouted={}", r.unrouted_tiles);
+        assert!((r.routed_tiles - c.tiles_per_frame as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pipelines_have_one_stage_per_function() {
+        let (wf, db, c, plan) = setup();
+        let r = route(&wf, &db, &c, &plan).unwrap();
+        for p in &r.pipelines {
+            assert_eq!(p.stages.len(), wf.len());
+            for (i, st) in p.stages.iter().enumerate() {
+                assert_eq!(st.func, i);
+            }
+        }
+    }
+
+    #[test]
+    fn workload_never_exceeds_capacity() {
+        // Conservation: per instance, Σ_k σ_k ρ_i ≤ n_{i,j}^d (+ε).
+        let (wf, db, c, plan) = setup();
+        let rho = wf.workload_factors().unwrap();
+        let r = route(&wf, &db, &c, &plan).unwrap();
+        let mut used = std::collections::HashMap::new();
+        for p in &r.pipelines {
+            for st in &p.stages {
+                *used.entry((st.func, st.sat, st.dev)).or_insert(0.0) +=
+                    p.workload * rho[st.func];
+            }
+        }
+        let df = c.frame_deadline_s;
+        for ((func, sat, dev), amount) in used {
+            let pl = plan.placement(func, sat);
+            let cap = match dev {
+                Dev::Cpu => pl.cpu_capacity(df),
+                Dev::Gpu => pl.gpu_capacity(),
+            };
+            assert!(amount <= cap + 1e-6, "({func},{sat},{dev:?}): {amount} > {cap}");
+        }
+    }
+
+    #[test]
+    fn shift_groups_respected() {
+        // Pipelines for the leader-only group must run entirely on sat 0.
+        let (wf, db, c, plan) = setup();
+        let r = route(&wf, &db, &c, &plan).unwrap();
+        for p in &r.pipelines {
+            let g = &c.capture_groups[p.group];
+            for st in &p.stages {
+                assert!(
+                    g.contains(st.sat),
+                    "stage on sat {} outside group [{}, {}]",
+                    st.sat,
+                    g.first_sat,
+                    g.last_sat
+                );
+            }
+        }
+        // Scarce groups routed: all 5 leader-unique tiles assigned.
+        let leader_tiles: f64 = r
+            .pipelines
+            .iter()
+            .filter(|p| p.group == 0)
+            .map(|p| p.workload)
+            .sum();
+        assert!((leader_tiles - 5.0).abs() < 1e-6, "leader tiles {leader_tiles}");
+    }
+
+    #[test]
+    fn orbitchain_beats_load_spraying_on_isl_traffic() {
+        // Fig. 12: hop-minimizing routing ⇒ less inter-satellite traffic.
+        let (wf, db, c, plan) = setup();
+        let ours = route(&wf, &db, &c, &plan).unwrap();
+        let spray = route_load_spraying(&wf, &db, &c, &plan);
+        assert!(
+            ours.isl_bytes_per_frame <= spray.isl_bytes_per_frame + 1e-9,
+            "ours={} spray={}",
+            ours.isl_bytes_per_frame,
+            spray.isl_bytes_per_frame
+        );
+    }
+
+    #[test]
+    fn traffic_orders_of_magnitude_below_raw() {
+        // §6.2(2): both routers move intermediate results, not raw tiles.
+        let (wf, db, c, plan) = setup();
+        let ours = route(&wf, &db, &c, &plan).unwrap();
+        let raw_all =
+            crate::profile::datasize::RAW_TILE_BYTES * c.tiles_per_frame as f64;
+        assert!(
+            ours.isl_bytes_per_frame < raw_all / 100.0,
+            "isl={} raw={}",
+            ours.isl_bytes_per_frame,
+            raw_all
+        );
+    }
+
+    #[test]
+    fn saturates_at_least_one_instance_per_iteration() {
+        // Termination argument of §5.3: pipeline count ≤ instance count.
+        let (wf, db, c, plan) = setup();
+        let r = route(&wf, &db, &c, &plan).unwrap();
+        let n_instances = plan
+            .placements
+            .iter()
+            .map(|p| (p.deployed as usize) + (p.gpu as usize))
+            .sum::<usize>();
+        // Outer loop also splits by capture group.
+        let bound = n_instances + c.capture_groups.len() * wf.len();
+        assert!(
+            r.pipelines.len() <= bound,
+            "{} pipelines for {} instances",
+            r.pipelines.len(),
+            n_instances
+        );
+    }
+
+    #[test]
+    fn undeployed_plan_reports_unrouted() {
+        let (wf, db, c, plan) = setup();
+        // Zero out every placement: nothing can be routed.
+        let mut empty = plan.clone();
+        for p in &mut empty.placements {
+            p.deployed = false;
+            p.cpu_speed = 0.0;
+            p.gpu = false;
+            p.gpu_speed = 0.0;
+        }
+        let r = route(&wf, &db, &c, &empty).unwrap();
+        assert_eq!(r.routed_tiles, 0.0);
+        assert!((r.unrouted_tiles - c.tiles_per_frame as f64).abs() < 1e-9);
+        let spray = route_load_spraying(&wf, &db, &c, &empty);
+        assert_eq!(spray.routed_tiles, 0.0);
+    }
+}

@@ -1,0 +1,337 @@
+//! PJRT model runtime — the hardware-in-the-loop analytics executor.
+//!
+//! Loads the AOT artifacts produced once by `python/compile/aot.py`
+//! (`artifacts/<model>_b<batch>.hlo.txt` + `manifest.json`), compiles each
+//! HLO module on the PJRT CPU client, and executes real tile inference from
+//! the Rust hot path.  Python is never involved at runtime.
+//!
+//! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax ≥ 0.5's
+//! 64-bit-id serialized protos); modules are lowered with
+//! `return_tuple=True`, so results unwrap with [`xla::Literal::to_tuple`].
+//!
+//! The module also provides [`TileGen`], a seeded synthetic Earth-
+//! observation tile generator (procedural cloud/water/farm textures) used
+//! by the examples and the HIL benchmarks in place of the LandSat8 archive
+//! (dataset substitution, DESIGN.md).
+
+pub mod tilegen;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::util::json::Json;
+
+pub use tilegen::TileGen;
+
+/// Output signature entry of a model: name and per-example shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutputSpec {
+    pub name: String,
+    /// Shape including the batch dimension.
+    pub shape: Vec<usize>,
+}
+
+/// One compiled model variant (a model at a fixed batch size).
+pub struct LoadedModel {
+    pub name: String,
+    pub batch: usize,
+    /// `[batch, tile, tile, channels]`.
+    pub input_shape: Vec<usize>,
+    pub outputs: Vec<OutputSpec>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Run inference on a full input batch (`input.len()` must equal the
+    /// product of `input_shape`).  Returns one flat `Vec<f32>` per model
+    /// output.
+    pub fn infer(&self, input: &[f32]) -> crate::Result<Vec<Vec<f32>>> {
+        let want: usize = self.input_shape.iter().product();
+        if input.len() != want {
+            bail!(
+                "{}_b{}: input length {} != expected {want}",
+                self.name,
+                self.batch,
+                input.len()
+            );
+        }
+        let dims: Vec<i64> = self.input_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != self.outputs.len() {
+            bail!(
+                "{}_b{}: got {} outputs, manifest says {}",
+                self.name,
+                self.batch,
+                parts.len(),
+                self.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+
+    /// Timed inference for profiling; returns outputs and wallclock seconds.
+    pub fn infer_timed(&self, input: &[f32]) -> crate::Result<(Vec<Vec<f32>>, f64)> {
+        let t0 = Instant::now();
+        let out = self.infer(input)?;
+        Ok((out, t0.elapsed().as_secs_f64()))
+    }
+}
+
+/// The artifact-backed model runtime: every analytics model at every
+/// exported batch size, compiled once.
+pub struct ModelRuntime {
+    /// `(model, batch)` → compiled executable.
+    models: BTreeMap<(String, usize), LoadedModel>,
+    /// Tile edge length in px (from the manifest).
+    pub tile: usize,
+    pub channels: usize,
+}
+
+impl ModelRuntime {
+    /// Default artifact directory: `$ORBITCHAIN_ARTIFACTS` or `artifacts/`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("ORBITCHAIN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Load and compile every artifact listed in `manifest.json`.
+    pub fn load(dir: &Path) -> crate::Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Json::parse(&text).context("parsing manifest.json")?;
+        let client = xla::PjRtClient::cpu()?;
+        let tile = manifest
+            .get("tile")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing 'tile'"))?;
+        let channels = manifest
+            .get("channels")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing 'channels'"))?;
+
+        let mut models = BTreeMap::new();
+        let entries = manifest
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'models'"))?;
+        for (name, variants) in entries {
+            for v in variants.as_arr().unwrap_or(&[]) {
+                let batch = v
+                    .get("batch")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("{name}: bad batch"))?;
+                let file = v
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("{name}: bad file"))?;
+                let input_shape: Vec<usize> = v
+                    .get("input_shape")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .ok_or_else(|| anyhow!("{name}: bad input_shape"))?;
+                let outputs: Vec<OutputSpec> = v
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter()
+                            .map(|o| OutputSpec {
+                                name: o
+                                    .get("name")
+                                    .and_then(Json::as_str)
+                                    .unwrap_or("out")
+                                    .to_string(),
+                                shape: o
+                                    .get("shape")
+                                    .and_then(Json::as_arr)
+                                    .map(|s| {
+                                        s.iter().filter_map(Json::as_usize).collect()
+                                    })
+                                    .unwrap_or_default(),
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default();
+
+                let path = dir.join(file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                )?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp)?;
+                models.insert(
+                    (name.clone(), batch),
+                    LoadedModel {
+                        name: name.clone(),
+                        batch,
+                        input_shape,
+                        outputs,
+                        exe,
+                    },
+                );
+            }
+        }
+        if models.is_empty() {
+            bail!("no models found in {}", dir.display());
+        }
+        Ok(ModelRuntime { models, tile, channels })
+    }
+
+    /// A model at an exact batch size.
+    pub fn model(&self, name: &str, batch: usize) -> Option<&LoadedModel> {
+        self.models.get(&(name.to_string(), batch))
+    }
+
+    /// All `(name, batch)` pairs available.
+    pub fn variants(&self) -> impl Iterator<Item = (&str, usize)> {
+        self.models.keys().map(|(n, b)| (n.as_str(), *b))
+    }
+
+    /// Floats per tile.
+    pub fn tile_len(&self) -> usize {
+        self.tile * self.tile * self.channels
+    }
+
+    /// Run `n_tiles` synthetic tiles through a model using its largest
+    /// batch variant (padding the tail), returning tiles/second —
+    /// the hardware-in-the-loop speed measurement behind Fig. 4(b).
+    pub fn measure_speed(
+        &self,
+        name: &str,
+        n_tiles: usize,
+        gen: &mut TileGen,
+    ) -> crate::Result<f64> {
+        let batch = self
+            .models
+            .keys()
+            .filter(|(n, _)| n == name)
+            .map(|&(_, b)| b)
+            .max()
+            .ok_or_else(|| anyhow!("unknown model {name}"))?;
+        let model = self.model(name, batch).unwrap();
+        let tl = self.tile_len();
+        let mut buf = vec![0.0f32; batch * tl];
+        // Warm-up batch (compile caches, allocator) — cold start is
+        // measured separately (Fig. 8a).
+        model.infer(&buf)?;
+        let t0 = Instant::now();
+        let mut done = 0;
+        while done < n_tiles {
+            let take = batch.min(n_tiles - done);
+            for k in 0..take {
+                gen.fill_tile(&mut buf[k * tl..(k + 1) * tl]);
+            }
+            model.infer(&buf)?;
+            done += take;
+        }
+        Ok(n_tiles as f64 / t0.elapsed().as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_and_runs_all_models() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = ModelRuntime::load(&dir).expect("load artifacts");
+        assert_eq!(rt.tile, 64);
+        assert_eq!(rt.channels, 3);
+        let mut gen = TileGen::new(1);
+        for name in ["cloud", "landuse", "water", "crop"] {
+            let m = rt.model(name, 1).expect(name);
+            let mut tilebuf = vec![0.0f32; rt.tile_len()];
+            gen.fill_tile(&mut tilebuf);
+            let outs = m.infer(&tilebuf).expect("infer");
+            assert_eq!(outs.len(), m.outputs.len(), "{name}");
+            for (o, spec) in outs.iter().zip(&m.outputs) {
+                let want: usize = spec.shape.iter().product();
+                assert_eq!(o.len(), want, "{name}.{}", spec.name);
+                assert!(o.iter().all(|v| v.is_finite()), "{name}.{}", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_variant_consistent_with_single() {
+        // b8 on 8 copies of one tile == b1 on the tile (same weights).
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = ModelRuntime::load(&dir).unwrap();
+        let m1 = rt.model("cloud", 1).unwrap();
+        let m8 = rt.model("cloud", 8).unwrap();
+        let mut gen = TileGen::new(2);
+        let tl = rt.tile_len();
+        let mut tile = vec![0.0f32; tl];
+        gen.fill_tile(&mut tile);
+        let out1 = m1.infer(&tile).unwrap();
+        let mut batch = Vec::with_capacity(8 * tl);
+        for _ in 0..8 {
+            batch.extend_from_slice(&tile);
+        }
+        let out8 = m8.infer(&batch).unwrap();
+        // First example of the batched logits equals the single run.
+        let per = out1[0].len();
+        for k in 0..per {
+            let a = out1[0][k];
+            let b = out8[0][k];
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn wrong_input_length_rejected() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = ModelRuntime::load(&dir).unwrap();
+        let m = rt.model("water", 1).unwrap();
+        assert!(m.infer(&[0.0; 7]).is_err());
+    }
+
+    #[test]
+    fn measure_speed_positive() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = ModelRuntime::load(&dir).unwrap();
+        let mut gen = TileGen::new(3);
+        let v = rt.measure_speed("cloud", 16, &mut gen).unwrap();
+        assert!(v > 0.0, "speed {v}");
+    }
+
+    #[test]
+    fn missing_dir_fails_with_hint() {
+        let err = match ModelRuntime::load(Path::new("/nonexistent-dir")) {
+            Err(e) => e,
+            Ok(_) => panic!("load should fail"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,163 @@
+//! Synthetic Earth-observation tile generator.
+//!
+//! Stands in for the LandSat8 Cloud Cover archive (dataset substitution,
+//! DESIGN.md): produces deterministic 0..255 RGB tiles with procedural
+//! value-noise textures blended from four land-cover archetypes — cloud
+//! (bright, low-saturation blobs), water (dark blue), farmland (green
+//! field pattern) and urban (gray high-frequency texture).  The archetype
+//! mix is seeded per tile, so distribution ratios downstream are stable in
+//! expectation and every run is reproducible.
+
+use crate::util::rng::Rng;
+
+/// Deterministic synthetic tile source.
+pub struct TileGen {
+    rng: Rng,
+    /// Probability a tile is dominated by cloud cover.
+    pub cloud_prob: f64,
+    /// Edge length in pixels.
+    pub tile: usize,
+}
+
+/// Land-cover archetype of a generated tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cover {
+    Cloud,
+    Water,
+    Farm,
+    Urban,
+}
+
+impl TileGen {
+    pub fn new(seed: u64) -> Self {
+        TileGen { rng: Rng::new(seed ^ 0x7117E_6E4), cloud_prob: 0.5, tile: 64 }
+    }
+
+    /// Fill `buf` (length `tile*tile*3`) with one tile; returns the
+    /// dominant cover type.
+    pub fn fill_tile(&mut self, buf: &mut [f32]) -> Cover {
+        let t = self.tile;
+        assert_eq!(buf.len(), t * t * 3, "buffer length mismatch");
+        let cover = if self.rng.chance(self.cloud_prob) {
+            Cover::Cloud
+        } else {
+            *self.rng.choice(&[Cover::Water, Cover::Farm, Cover::Urban])
+        };
+        // Coarse value-noise lattice (8x8) interpolated bilinearly.
+        const L: usize = 8;
+        let mut lattice = [[0.0f32; L + 1]; L + 1];
+        for row in lattice.iter_mut() {
+            for v in row.iter_mut() {
+                *v = self.rng.f64() as f32;
+            }
+        }
+        let (base, tint, contrast) = match cover {
+            Cover::Cloud => ([215.0, 215.0, 220.0], [25.0, 25.0, 20.0], 0.35),
+            Cover::Water => ([28.0, 52.0, 95.0], [8.0, 14.0, 30.0], 0.5),
+            Cover::Farm => ([62.0, 120.0, 48.0], [30.0, 45.0, 22.0], 0.8),
+            Cover::Urban => ([120.0, 118.0, 112.0], [55.0, 55.0, 55.0], 1.0),
+        };
+        for y in 0..t {
+            for x in 0..t {
+                let fy = y as f32 / t as f32 * L as f32;
+                let fx = x as f32 / t as f32 * L as f32;
+                let (iy, ix) = (fy as usize, fx as usize);
+                let (dy, dx) = (fy - iy as f32, fx - ix as f32);
+                let n = lattice[iy][ix] * (1.0 - dy) * (1.0 - dx)
+                    + lattice[iy + 1][ix] * dy * (1.0 - dx)
+                    + lattice[iy][ix + 1] * (1.0 - dy) * dx
+                    + lattice[iy + 1][ix + 1] * dy * dx;
+                // Farm rows: add a periodic furrow pattern.
+                let furrow = if cover == Cover::Farm {
+                    0.12 * ((y as f32 * 0.9).sin())
+                } else {
+                    0.0
+                };
+                let v = (n - 0.5) * contrast + furrow;
+                let o = (y * t + x) * 3;
+                for ch in 0..3 {
+                    buf[o + ch] = (base[ch] + tint[ch] * v * 2.0).clamp(0.0, 255.0);
+                }
+            }
+        }
+        cover
+    }
+
+    /// Generate a fresh tile vector.
+    pub fn tile_vec(&mut self) -> (Vec<f32>, Cover) {
+        let mut buf = vec![0.0f32; self.tile * self.tile * 3];
+        let c = self.fill_tile(&mut buf);
+        (buf, c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (a, ca) = TileGen::new(5).tile_vec();
+        let (b, cb) = TileGen::new(5).tile_vec();
+        assert_eq!(a, b);
+        assert_eq!(ca, cb);
+        let (c, _) = TileGen::new(6).tile_vec();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn values_in_radiometric_range() {
+        let mut g = TileGen::new(1);
+        for _ in 0..8 {
+            let (v, _) = g.tile_vec();
+            assert!(v.iter().all(|&x| (0.0..=255.0).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn cloud_probability_respected() {
+        let mut g = TileGen::new(2);
+        g.cloud_prob = 0.5;
+        let mut clouds = 0;
+        let n = 400;
+        for _ in 0..n {
+            if matches!(g.tile_vec().1, Cover::Cloud) {
+                clouds += 1;
+            }
+        }
+        let frac = clouds as f64 / n as f64;
+        assert!((0.4..0.6).contains(&frac), "cloud fraction {frac}");
+    }
+
+    #[test]
+    fn covers_visually_distinct() {
+        // Means of water vs cloud tiles differ strongly (blue vs bright).
+        let mut g = TileGen::new(3);
+        let mut cloud_mean = 0.0;
+        let mut water_mean = 0.0;
+        let (mut nc, mut nw) = (0, 0);
+        for _ in 0..200 {
+            let (v, c) = g.tile_vec();
+            let m: f32 = v.iter().sum::<f32>() / v.len() as f32;
+            match c {
+                Cover::Cloud => {
+                    cloud_mean += m as f64;
+                    nc += 1;
+                }
+                Cover::Water => {
+                    water_mean += m as f64;
+                    nw += 1;
+                }
+                _ => {}
+            }
+        }
+        assert!(nc > 0 && nw > 0);
+        assert!(cloud_mean / nc as f64 > 2.0 * water_mean / nw as f64);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer length mismatch")]
+    fn wrong_buffer_panics() {
+        TileGen::new(0).fill_tile(&mut [0.0; 10]);
+    }
+}

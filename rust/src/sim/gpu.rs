@@ -1,0 +1,128 @@
+//! GPU time-slice window arithmetic (paper §5.1 runtime / Eq. (5)).
+//!
+//! Each satellite's GPU is time-sliced within every frame-deadline period:
+//! function `m_i` owns the window `[offset, offset + len)` (mod `Δf`),
+//! rotating on a pre-defined schedule computed during orchestration.  The
+//! simulator needs to answer: *given work of `w` seconds starting no
+//! earlier than `t`, when does the GPU instance finish?* — accumulating
+//! service only while its window is active.
+
+/// A periodic availability window: active on `[offset, offset+len)` within
+/// each period.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SliceWindow {
+    pub offset: f64,
+    pub len: f64,
+    pub period: f64,
+}
+
+impl SliceWindow {
+    /// Always-on pseudo-window (CPU instances).
+    pub fn always(period: f64) -> Self {
+        SliceWindow { offset: 0.0, len: period, period }
+    }
+
+    /// Is the window active at absolute time `t`?
+    pub fn active(&self, t: f64) -> bool {
+        let phase = t.rem_euclid(self.period);
+        phase >= self.offset && phase < self.offset + self.len
+    }
+
+    /// Next time ≥ `t` when the window becomes (or is) active.
+    pub fn next_active(&self, t: f64) -> f64 {
+        let phase = t.rem_euclid(self.period);
+        if phase < self.offset {
+            t + (self.offset - phase)
+        } else if phase < self.offset + self.len {
+            t
+        } else {
+            t + (self.period - phase) + self.offset
+        }
+    }
+
+    /// Finish time for `work` seconds of service starting no earlier than
+    /// `t`, consuming only active-window time.
+    pub fn finish(&self, t: f64, work: f64) -> f64 {
+        assert!(work >= 0.0 && self.len > 0.0);
+        let mut now = self.next_active(t);
+        let mut left = work;
+        loop {
+            let phase = now.rem_euclid(self.period);
+            let window_left = self.offset + self.len - phase;
+            if left <= window_left + 1e-12 {
+                return now + left;
+            }
+            left -= window_left;
+            now = now + window_left + (self.period - self.len);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{close, property};
+
+    #[test]
+    fn always_on_is_transparent() {
+        let w = SliceWindow::always(5.0);
+        assert_eq!(w.finish(3.2, 1.5), 4.7);
+        assert!(w.active(0.0) && w.active(4.999));
+    }
+
+    #[test]
+    fn waits_for_window_start() {
+        // Window [2, 3) of a 5 s period.
+        let w = SliceWindow { offset: 2.0, len: 1.0, period: 5.0 };
+        assert!(!w.active(1.0));
+        assert!(w.active(2.5));
+        assert_eq!(w.next_active(0.0), 2.0);
+        assert_eq!(w.next_active(2.5), 2.5);
+        assert_eq!(w.next_active(3.0), 7.0);
+        // 0.4 s of work starting at t=0 runs 2.0–2.4.
+        assert!(close(w.finish(0.0, 0.4), 2.4, 1e-12).is_ok());
+    }
+
+    #[test]
+    fn work_spans_multiple_periods() {
+        let w = SliceWindow { offset: 1.0, len: 0.5, period: 4.0 };
+        // 1.2 s of work = 0.5 + 0.5 + 0.2 across three windows:
+        // [1,1.5) [5,5.5) then 0.2 into [9,9.2).
+        assert!(close(w.finish(0.0, 1.2), 9.2, 1e-9).is_ok());
+    }
+
+    #[test]
+    fn zero_work_returns_window_entry() {
+        let w = SliceWindow { offset: 1.0, len: 0.5, period: 4.0 };
+        assert_eq!(w.finish(0.0, 0.0), 1.0);
+        assert_eq!(w.finish(1.2, 0.0), 1.2);
+    }
+
+    #[test]
+    fn prop_finish_monotone_and_sufficient() {
+        property("slice finish sane", 60, |rng| {
+            let period = rng.range(1.0, 10.0);
+            let len = rng.range(0.05, period * 0.9);
+            let offset = rng.range(0.0, period - len);
+            let w = SliceWindow { offset, len, period };
+            let t = rng.range(0.0, 30.0);
+            let work = rng.range(0.0, 5.0);
+            let f = w.finish(t, work);
+            if f < t - 1e-9 {
+                return Err(format!("finish {f} before start {t}"));
+            }
+            // Active time between t and f must equal work (within eps).
+            // Numerically integrate.
+            let steps = 4000;
+            let dt = (f - t) / steps as f64;
+            let mut active = 0.0;
+            for k in 0..steps {
+                if w.active(t + (k as f64 + 0.5) * dt) {
+                    active += dt;
+                }
+            }
+            crate::util::testkit::close(active, work, 0.02)
+                .map_err(|e| format!("active-time mismatch: {e}"))
+        });
+    }
+}

@@ -1,0 +1,656 @@
+//! Discrete-event constellation runtime (paper §5.1 "Runtime", §6 metrics).
+//!
+//! Simulates the in-orbit execution of sensing-and-analytics pipelines at
+//! per-tile granularity:
+//!
+//! * every `Δf` the leader captures a frame; follower `s_j` captures the
+//!   overlapping frame `j·Δs` later (revisit delay);
+//! * each tile is pre-tagged with a pipeline (the routing output, §5.1)
+//!   and enters the pipeline's source instance on its satellite;
+//! * function instances are FIFO servers: CPU instances serve continuously
+//!   at their allocated-quota speed, GPU instances only within their
+//!   pre-scheduled time-slice window ([`gpu::SliceWindow`]);
+//! * distribution ratios thin the tile stream stochastically (a cloud
+//!   detector drops cloudy tiles with probability `1 − δ`);
+//! * cross-satellite function calls ship intermediate results hop-by-hop
+//!   over FIFO ISL links at the link-budget rate, and wait for the
+//!   destination satellite's own capture of the tile (data locality: raw
+//!   pixels never cross the ISL);
+//! * metrics: per-function received/analyzed counts (completion ratio),
+//!   ISL bytes & transmit energy, and per-tile end-to-end latency split
+//!   into processing / communication / revisit components (Fig. 15).
+
+pub mod gpu;
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::constellation::Constellation;
+use crate::profile::{datasize, ProfileDb};
+use crate::routing::{Dev, Pipeline};
+use crate::telemetry::Metrics;
+use crate::util::rng::Rng;
+use crate::workflow::Workflow;
+use gpu::SliceWindow;
+
+/// A function instance the simulator schedules.
+#[derive(Debug, Clone)]
+pub struct InstanceSpec {
+    pub func: usize,
+    pub sat: usize,
+    pub dev: Dev,
+    /// Service rate while active, tiles/s.
+    pub rate_tiles_s: f64,
+    /// Availability window (always-on for CPU; the GPU slice otherwise).
+    pub window: SliceWindow,
+}
+
+/// Simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Number of frames to inject.
+    pub frames: usize,
+    /// Extra drain time after the last capture before measuring, seconds.
+    /// The paper measures completion against continuously arriving frames,
+    /// so the default drain is one frame deadline.
+    pub drain_s: f64,
+    /// RNG seed (tile thinning, tie-breaking).
+    pub seed: u64,
+    /// Override the ISL rate (bit/s); `None` uses the constellation's
+    /// link-budget rate (Fig. 15 sweeps this).
+    pub isl_rate_bps: Option<f64>,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { frames: 10, drain_s: 0.0, seed: 7, isl_rate_bps: None }
+    }
+}
+
+/// Simulation outcome.
+#[derive(Debug)]
+pub struct SimReport {
+    pub metrics: Metrics,
+    /// Completion ratio: analyzed / received, averaged over functions
+    /// (§6.1 metric (1)).
+    pub completion_ratio: f64,
+    /// Mean ISL bytes per frame.
+    pub isl_bytes_per_frame: f64,
+    /// Maximum per-tile end-to-end latency, seconds (§6.1 metric (4):
+    /// frame latency = max tile latency).
+    pub frame_latency_s: f64,
+    /// Latency breakdown of the worst tile: (processing, communication,
+    /// revisit) seconds.
+    pub breakdown: (f64, f64, f64),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Ev {
+    /// Tile arrives at instance `inst`'s queue.
+    Arrival { inst: usize, tile: u32 },
+    /// Instance finishes serving a tile.
+    Done { inst: usize, tile: u32 },
+    /// ISL link `link` finished transmitting a message.
+    LinkDone { link: usize },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct QueuedEvent {
+    t: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for QueuedEvent {
+    fn eq(&self, o: &Self) -> bool {
+        self.t == o.t && self.seq == o.seq
+    }
+}
+impl Eq for QueuedEvent {}
+impl PartialOrd for QueuedEvent {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for QueuedEvent {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        self.t
+            .partial_cmp(&o.t)
+            .unwrap()
+            .then(self.seq.cmp(&o.seq))
+    }
+}
+
+/// Per-tile bookkeeping.
+#[derive(Debug, Clone)]
+struct TileState {
+    pipeline: usize,
+    /// Capture time at the leader.
+    t0: f64,
+    /// Remaining function stages (count of functions that still will run).
+    /// Completion when the last stage finishes.
+    last_done: f64,
+    proc_s: f64,
+    comm_s: f64,
+    revisit_s: f64,
+    /// Per-function arrival time (for queueing-delay accounting).
+    finished: bool,
+}
+
+/// An in-flight ISL message.
+#[derive(Debug, Clone, Copy)]
+struct IslMsg {
+    tile: u32,
+    /// Final destination instance.
+    dest_inst: usize,
+    /// Remaining hops after the current link.
+    next_sat: usize,
+    dest_sat: usize,
+    bytes: f64,
+    /// Communication time accumulated so far for this message.
+    sent_at: f64,
+}
+
+/// The simulator.
+pub struct Simulator<'a> {
+    wf: &'a Workflow,
+    profiles: &'a ProfileDb,
+    constellation: &'a Constellation,
+    instances: Vec<InstanceSpec>,
+    pipelines: &'a [Pipeline],
+    cfg: SimConfig,
+    /// instance lookup: (func, sat, dev) -> index
+    inst_idx: std::collections::HashMap<(usize, usize, Dev), usize>,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(
+        wf: &'a Workflow,
+        profiles: &'a ProfileDb,
+        constellation: &'a Constellation,
+        instances: Vec<InstanceSpec>,
+        pipelines: &'a [Pipeline],
+        cfg: SimConfig,
+    ) -> Self {
+        let inst_idx = instances
+            .iter()
+            .enumerate()
+            .map(|(k, i)| ((i.func, i.sat, i.dev), k))
+            .collect();
+        Simulator { wf, profiles, constellation, instances, pipelines, cfg, inst_idx }
+    }
+
+    /// Run the simulation and produce the report.
+    pub fn run(&self) -> SimReport {
+        let c = self.constellation;
+        let df = c.frame_deadline_s;
+        let isl_rate = self.cfg.isl_rate_bps.unwrap_or_else(|| c.isl_rate_bps());
+        let mut rng = Rng::new(self.cfg.seed);
+        let mut metrics = Metrics::new();
+
+        // Weighted tile → pipeline assignment per capture group.
+        let group_pipes: Vec<Vec<usize>> = (0..c.capture_groups.len())
+            .map(|g| {
+                (0..self.pipelines.len())
+                    .filter(|&k| self.pipelines[k].group == g)
+                    .collect()
+            })
+            .collect();
+
+        let mut heap: BinaryHeap<Reverse<QueuedEvent>> = BinaryHeap::new();
+        let mut seq = 0u64;
+        fn push(
+            heap: &mut BinaryHeap<Reverse<QueuedEvent>>,
+            seq: &mut u64,
+            t: f64,
+            ev: Ev,
+        ) {
+            heap.push(Reverse(QueuedEvent { t, seq: *seq, ev }));
+            *seq += 1;
+        }
+
+        let mut tiles: Vec<TileState> = Vec::new();
+        // Instance state.
+        let n_inst = self.instances.len();
+        let mut inst_queue: Vec<VecDeque<u32>> = vec![VecDeque::new(); n_inst];
+        let mut inst_busy = vec![false; n_inst];
+        // ISL links: index 2*l for l→l+1 ("forward"), 2*l+1 for l+1→l.
+        let n_links = 2 * c.n_sats.saturating_sub(1);
+        let mut link_queue: Vec<VecDeque<IslMsg>> = vec![VecDeque::new(); n_links];
+        let mut link_busy = vec![false; n_links];
+
+        // Inject frames: each tile enters its pipeline's source stages.
+        // (In-degree-0 functions all receive the raw tile from the local
+        // sensing function of the stage's satellite.)
+        let sources = self.wf.sources();
+        for f in 0..self.cfg.frames {
+            let t0 = f as f64 * df;
+            for tile_no in 0..c.tiles_per_frame {
+                let g = c.tile_group(tile_no);
+                let pipes = &group_pipes[g];
+                if pipes.is_empty() {
+                    // Unrouted tiles count as received-but-never-analyzed
+                    // at the source functions.
+                    for &s in &sources {
+                        metrics.inc(&format!("func.{}.received", self.wf.name(s)), 1.0);
+                    }
+                    metrics.inc("tiles.unrouted", 1.0);
+                    continue;
+                }
+                // Weighted choice by σ_k.
+                let total: f64 = pipes.iter().map(|&k| self.pipelines[k].workload).sum();
+                let mut pick = rng.f64() * total;
+                let mut chosen = pipes[pipes.len() - 1];
+                for &k in pipes {
+                    pick -= self.pipelines[k].workload;
+                    if pick <= 0.0 {
+                        chosen = k;
+                        break;
+                    }
+                }
+                let tid = tiles.len() as u32;
+                tiles.push(TileState {
+                    pipeline: chosen,
+                    t0,
+                    last_done: t0,
+                    proc_s: 0.0,
+                    comm_s: 0.0,
+                    revisit_s: 0.0,
+                    finished: false,
+                });
+                for &sfunc in &sources {
+                    let st = self.pipelines[chosen].stages[sfunc];
+                    let inst = self.inst_idx[&(st.func, st.sat, st.dev)];
+                    // The stage's satellite captures this tile at its
+                    // revisit time; pure revisit delay.
+                    let t_cap = t0 + c.revisit_time_s(st.sat);
+                    tiles[tid as usize].revisit_s += t_cap - t0;
+                    push(&mut heap, &mut seq, t_cap, Ev::Arrival { inst, tile: tid });
+                }
+            }
+        }
+
+        let mut last_event_t = 0.0;
+
+        while let Some(Reverse(QueuedEvent { t, ev, .. })) = heap.pop() {
+            last_event_t = t;
+            match ev {
+                Ev::Arrival { inst, tile } => {
+                    let name = self.wf.name(self.instances[inst].func);
+                    metrics.inc(&format!("func.{name}.received"), 1.0);
+                    inst_queue[inst].push_back(tile);
+                    if !inst_busy[inst] {
+                        self.start_service(
+                            inst,
+                            t,
+                            &mut inst_queue,
+                            &mut inst_busy,
+                            &mut heap,
+                            &mut seq,
+                            &mut tiles,
+                        );
+                    }
+                }
+                Ev::Done { inst, tile } => {
+                    let spec = &self.instances[inst];
+                    let name = self.wf.name(spec.func);
+                    metrics.inc(&format!("func.{name}.analyzed"), 1.0);
+                    let ts = &mut tiles[tile as usize];
+                    ts.last_done = t;
+                    // Forward downstream with thinning by δ.
+                    let pipe = &self.pipelines[ts.pipeline];
+                    let downs: Vec<(usize, f64)> =
+                        self.wf.downstream(spec.func).to_vec();
+                    let mut terminal = true;
+                    for (vfunc, delta) in downs {
+                        if !rng.chance(delta) {
+                            continue;
+                        }
+                        terminal = false;
+                        let dst = pipe.stages[vfunc];
+                        let dinst = self.inst_idx[&(dst.func, dst.sat, dst.dev)];
+                        if dst.sat == spec.sat {
+                            push(&mut heap, &mut seq, t, Ev::Arrival { inst: dinst, tile });
+                        } else {
+                            // Ship intermediate result hop-by-hop.
+                            let bytes =
+                                datasize::intermediate_bytes(self.profiles, name);
+                            let hops = c.hops(spec.sat, dst.sat) as f64;
+                            metrics.inc("isl.bytes", bytes * hops);
+                            metrics.inc(
+                                "isl.energy_j",
+                                c.isl.energy_j(
+                                    bytes,
+                                    self.cfg_tx_power(),
+                                    c.isl_separation_km(),
+                                ) * hops,
+                            );
+                            let msg = IslMsg {
+                                tile,
+                                dest_inst: dinst,
+                                next_sat: step_toward(spec.sat, dst.sat),
+                                dest_sat: dst.sat,
+                                bytes,
+                                sent_at: t,
+                            };
+                            let link = link_index(spec.sat, msg.next_sat);
+                            link_queue[link].push_back(msg);
+                            if !link_busy[link] {
+                                link_busy[link] = true;
+                                let tx = link_queue[link].front().unwrap().bytes * 8.0
+                                    / isl_rate;
+                                push(&mut heap, &mut seq, t + tx, Ev::LinkDone { link });
+                            }
+                        }
+                    }
+                    if terminal {
+                        // No downstream (or all thinned): tile's journey on
+                        // this path ends here.
+                        let done_all = self.wf.downstream(spec.func).is_empty();
+                        if done_all && !ts.finished {
+                            ts.finished = true;
+                        }
+                    }
+                    // Serve next queued tile.
+                    inst_busy[inst] = false;
+                    if !inst_queue[inst].is_empty() {
+                        self.start_service(
+                            inst,
+                            t,
+                            &mut inst_queue,
+                            &mut inst_busy,
+                            &mut heap,
+                            &mut seq,
+                            &mut tiles,
+                        );
+                    }
+                }
+                Ev::LinkDone { link } => {
+                    let msg = link_queue[link].pop_front().unwrap();
+                    // Next message on this link.
+                    if let Some(next) = link_queue[link].front() {
+                        let tx = next.bytes * 8.0 / isl_rate;
+                        push(&mut heap, &mut seq, t + tx, Ev::LinkDone { link });
+                    } else {
+                        link_busy[link] = false;
+                    }
+                    let at = msg.next_sat;
+                    if at == msg.dest_sat {
+                        // Arrived: wait for the destination satellite's own
+                        // capture of the tile (revisit), then deliver.
+                        let ts = &mut tiles[msg.tile as usize];
+                        ts.comm_s += t - msg.sent_at;
+                        let t_cap = ts.t0 + c.revisit_time_s(at);
+                        let t_deliver = t.max(t_cap);
+                        if t_cap > t {
+                            ts.revisit_s += t_cap - t;
+                        }
+                        push(
+                            &mut heap,
+                            &mut seq,
+                            t_deliver,
+                            Ev::Arrival { inst: msg.dest_inst, tile: msg.tile },
+                        );
+                    } else {
+                        // Relay one hop further.
+                        let nxt = step_toward(at, msg.dest_sat);
+                        let fwd = IslMsg { next_sat: nxt, ..msg };
+                        let link2 = link_index(at, nxt);
+                        link_queue[link2].push_back(fwd);
+                        if !link_busy[link2] {
+                            link_busy[link2] = true;
+                            let tx = link_queue[link2].front().unwrap().bytes * 8.0
+                                / isl_rate;
+                            push(&mut heap, &mut seq, t + tx, Ev::LinkDone { link: link2 });
+                        }
+                    }
+                }
+            }
+            // Stop measuring at the cutoff: frames keep their deadline
+            // discipline; anything left in queues counts as not analyzed.
+            let cutoff = self.cfg.frames as f64 * df
+                + c.revisit_time_s(c.n_sats - 1)
+                + self.cfg.drain_s;
+            if t > cutoff {
+                break;
+            }
+        }
+        let _ = last_event_t;
+
+        // Aggregate.
+        let mut ratios = Vec::new();
+        for i in 0..self.wf.len() {
+            let name = self.wf.name(i);
+            let rec = metrics.counter(&format!("func.{name}.received"));
+            let ana = metrics.counter(&format!("func.{name}.analyzed"));
+            if rec > 0.0 {
+                ratios.push((ana / rec).min(1.0));
+            }
+        }
+        let completion =
+            if ratios.is_empty() { 0.0 } else { crate::util::stats::mean(&ratios) };
+
+        let mut worst_latency = 0.0;
+        let mut breakdown = (0.0, 0.0, 0.0);
+        for ts in &tiles {
+            let lat = ts.last_done - ts.t0;
+            metrics.observe("tile.latency_s", lat);
+            if lat > worst_latency {
+                worst_latency = lat;
+                let proc = (lat - ts.comm_s - ts.revisit_s).max(0.0);
+                breakdown = (proc, ts.comm_s, ts.revisit_s);
+            }
+            let _ = ts.proc_s;
+        }
+
+        let isl_per_frame = metrics.counter("isl.bytes") / self.cfg.frames.max(1) as f64;
+        SimReport {
+            completion_ratio: completion,
+            isl_bytes_per_frame: isl_per_frame,
+            frame_latency_s: worst_latency,
+            breakdown,
+            metrics,
+        }
+    }
+
+    fn cfg_tx_power(&self) -> f64 {
+        self.constellation.isl_tx_power_w
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn start_service(
+        &self,
+        inst: usize,
+        t: f64,
+        inst_queue: &mut [VecDeque<u32>],
+        inst_busy: &mut [bool],
+        heap: &mut BinaryHeap<Reverse<QueuedEvent>>,
+        seq: &mut u64,
+        tiles: &mut [TileState],
+    ) {
+        let spec = &self.instances[inst];
+        let Some(&tile) = inst_queue[inst].front() else { return };
+        inst_queue[inst].pop_front();
+        inst_busy[inst] = true;
+        let work = 1.0 / spec.rate_tiles_s;
+        let done_t = spec.window.finish(t, work);
+        tiles[tile as usize].proc_s += done_t - t;
+        heap.push(Reverse(QueuedEvent { t: done_t, seq: *seq, ev: Ev::Done { inst, tile } }));
+        *seq += 1;
+    }
+}
+
+/// Build instance specs (with GPU slice schedules) from a deployment plan.
+///
+/// GPU slices on each satellite are laid out back-to-back from offset 0
+/// within the `α·Δf` schedulable window (the pre-defined rotation table of
+/// §5.1).
+pub fn instances_from_plan(
+    plan: &crate::planner::DeploymentPlan,
+    constellation: &Constellation,
+) -> Vec<InstanceSpec> {
+    let df = constellation.frame_deadline_s;
+    let mut out = Vec::new();
+    for j in 0..plan.n_sats {
+        let mut gpu_offset = 0.0;
+        for i in 0..plan.n_funcs {
+            let p = plan.placement(i, j);
+            if p.deployed && p.cpu_speed > 0.0 {
+                out.push(InstanceSpec {
+                    func: i,
+                    sat: j,
+                    dev: Dev::Cpu,
+                    rate_tiles_s: p.cpu_speed,
+                    window: SliceWindow::always(df),
+                });
+            }
+            if p.gpu && p.gpu_speed > 0.0 && p.gpu_slice_s > 0.0 {
+                out.push(InstanceSpec {
+                    func: i,
+                    sat: j,
+                    dev: Dev::Gpu,
+                    rate_tiles_s: p.gpu_speed,
+                    window: SliceWindow {
+                        offset: gpu_offset,
+                        len: p.gpu_slice_s,
+                        period: df,
+                    },
+                });
+                gpu_offset += p.gpu_slice_s;
+            }
+        }
+    }
+    out
+}
+
+fn step_toward(from: usize, to: usize) -> usize {
+    use std::cmp::Ordering;
+    match from.cmp(&to) {
+        Ordering::Less => from + 1,
+        Ordering::Greater => from - 1,
+        Ordering::Equal => from,
+    }
+}
+
+/// Link array index for the directed hop `a → b` (adjacent satellites).
+fn link_index(a: usize, b: usize) -> usize {
+    debug_assert!(a.abs_diff(b) == 1);
+    if b == a + 1 {
+        2 * a
+    } else {
+        2 * b + 1
+    }
+}
+
+/// Convenience: plan → route → simulate in one call (the OrbitChain path).
+pub fn simulate_orbitchain(
+    wf: &Workflow,
+    profiles: &ProfileDb,
+    constellation: &Constellation,
+    cfg: SimConfig,
+) -> Result<SimReport, crate::planner::PlanError> {
+    let plan = crate::planner::plan(wf, profiles, constellation)?;
+    let routing = crate::routing::route(wf, profiles, constellation, &plan)
+        .expect("routing on planned deployment");
+    let instances = instances_from_plan(&plan, constellation);
+    let sim = Simulator::new(wf, profiles, constellation, instances, &routing.pipelines, cfg);
+    Ok(sim.run())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constellation::Constellation;
+    use crate::profile::ProfileDb;
+    use crate::workflow;
+
+    #[test]
+    fn orbitchain_jetson_near_full_completion() {
+        // Fig. 11: OrbitChain ≈ 100% completion on the Jetson testbed.
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let rep = simulate_orbitchain(&wf, &db, &c, SimConfig::default()).unwrap();
+        assert!(rep.completion_ratio > 0.9, "completion={}", rep.completion_ratio);
+    }
+
+    #[test]
+    fn latency_breakdown_components_nonnegative() {
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let rep = simulate_orbitchain(&wf, &db, &c, SimConfig::default()).unwrap();
+        let (p, co, r) = rep.breakdown;
+        assert!(p >= 0.0 && co >= 0.0 && r >= 0.0);
+        assert!(rep.frame_latency_s >= r);
+        // Revisit delay is bounded by the last follower's revisit time plus
+        // queueing; with 2 followers at 10 s it shows up in the breakdown.
+        assert!(rep.frame_latency_s > 0.0);
+    }
+
+    #[test]
+    fn lower_isl_rate_increases_latency() {
+        // Fig. 15(a): 5 kbps vs 50 kbps LoRa.
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let slow = simulate_orbitchain(
+            &wf,
+            &db,
+            &c,
+            SimConfig { isl_rate_bps: Some(5_000.0), frames: 3, ..Default::default() },
+        )
+        .unwrap();
+        let fast = simulate_orbitchain(
+            &wf,
+            &db,
+            &c,
+            SimConfig { isl_rate_bps: Some(2_000_000.0), frames: 3, ..Default::default() },
+        )
+        .unwrap();
+        assert!(
+            slow.frame_latency_s >= fast.frame_latency_s,
+            "slow={} fast={}",
+            slow.frame_latency_s,
+            fast.frame_latency_s
+        );
+    }
+
+    #[test]
+    fn isl_traffic_scales_with_frames() {
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let r5 = simulate_orbitchain(
+            &wf,
+            &db,
+            &c,
+            SimConfig { frames: 5, ..Default::default() },
+        )
+        .unwrap();
+        // Per-frame ISL bytes roughly constant.
+        assert!(r5.isl_bytes_per_frame > 0.0);
+        assert!(
+            r5.metrics.counter("isl.bytes") >= r5.isl_bytes_per_frame * 4.9,
+            "total should be ~5x per-frame"
+        );
+    }
+
+    #[test]
+    fn energy_accounted_when_isl_used() {
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let rep = simulate_orbitchain(&wf, &db, &c, SimConfig::default()).unwrap();
+        if rep.metrics.counter("isl.bytes") > 0.0 {
+            assert!(rep.metrics.counter("isl.energy_j") > 0.0);
+        }
+    }
+
+    #[test]
+    fn link_index_distinct_directions() {
+        assert_ne!(link_index(0, 1), link_index(1, 0));
+        assert_ne!(link_index(1, 2), link_index(2, 1));
+        assert_eq!(link_index(0, 1), 0);
+    }
+}

@@ -1,0 +1,143 @@
+//! Metric registry: counters and sample collections with JSON export.
+//!
+//! Every simulator / runtime component records into a [`Metrics`] instance;
+//! experiment drivers export the registry as JSON rows (the paper-figure
+//! regeneration pipeline) and the CLI pretty-prints it.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{Json, obj};
+use crate::util::stats;
+
+/// A metric registry.  Counter names use dotted paths
+/// (`"isl.bytes"`, `"func.cloud.analyzed"`).
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    counters: BTreeMap<String, f64>,
+    samples: BTreeMap<String, Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `v` to a counter.
+    pub fn inc(&mut self, name: &str, v: f64) {
+        *self.counters.entry(name.to_string()).or_insert(0.0) += v;
+    }
+
+    /// Record one sample of a distribution metric.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.samples.entry(name.to_string()).or_default().push(v);
+    }
+
+    /// Current counter value (0 when never incremented).
+    pub fn counter(&self, name: &str) -> f64 {
+        self.counters.get(name).copied().unwrap_or(0.0)
+    }
+
+    /// All samples of a distribution metric.
+    pub fn samples(&self, name: &str) -> &[f64] {
+        self.samples.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Ratio helper: `counter(num) / counter(den)` (0 when empty).
+    pub fn ratio(&self, num: &str, den: &str) -> f64 {
+        let d = self.counter(den);
+        if d == 0.0 {
+            0.0
+        } else {
+            self.counter(num) / d
+        }
+    }
+
+    /// Merge another registry into this one.
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.counters {
+            self.inc(k, *v);
+        }
+        for (k, vs) in &other.samples {
+            self.samples.entry(k.clone()).or_default().extend(vs);
+        }
+    }
+
+    /// Export as JSON: counters verbatim; distributions summarized
+    /// (count/mean/p50/p99/max).
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect(),
+        );
+        let dists = Json::Obj(
+            self.samples
+                .iter()
+                .map(|(k, vs)| {
+                    (
+                        k.clone(),
+                        obj(vec![
+                            ("count", Json::from(vs.len())),
+                            ("mean", Json::Num(stats::mean(vs))),
+                            ("p50", Json::Num(stats::percentile(vs, 50.0))),
+                            ("p99", Json::Num(stats::percentile(vs, 99.0))),
+                            (
+                                "max",
+                                Json::Num(vs.iter().copied().fold(f64::MIN, f64::max)),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        obj(vec![("counters", counters), ("distributions", dists)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::new();
+        m.inc("a.b", 2.0);
+        m.inc("a.b", 3.0);
+        assert_eq!(m.counter("a.b"), 5.0);
+        assert_eq!(m.counter("missing"), 0.0);
+    }
+
+    #[test]
+    fn ratio_handles_zero_denominator() {
+        let mut m = Metrics::new();
+        assert_eq!(m.ratio("x", "y"), 0.0);
+        m.inc("x", 3.0);
+        m.inc("y", 4.0);
+        assert_eq!(m.ratio("x", "y"), 0.75);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Metrics::new();
+        a.inc("c", 1.0);
+        a.observe("d", 1.0);
+        let mut b = Metrics::new();
+        b.inc("c", 2.0);
+        b.observe("d", 3.0);
+        a.merge(&b);
+        assert_eq!(a.counter("c"), 3.0);
+        assert_eq!(a.samples("d"), &[1.0, 3.0]);
+    }
+
+    #[test]
+    fn json_export_shape() {
+        let mut m = Metrics::new();
+        m.inc("count", 7.0);
+        for v in [1.0, 2.0, 3.0] {
+            m.observe("lat", v);
+        }
+        let j = m.to_json();
+        assert_eq!(j.get("counters").unwrap().get("count").unwrap().as_f64(), Some(7.0));
+        let lat = j.get("distributions").unwrap().get("lat").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_usize(), Some(3));
+        assert_eq!(lat.get("p50").unwrap().as_f64(), Some(2.0));
+    }
+}

@@ -1,0 +1,19 @@
+//! Offline-friendly substrates.
+//!
+//! The build environment has no network access to crates.io, and the vendored
+//! crate set does not include `serde`, `rand`, or `proptest`.  This module
+//! provides the small, well-tested replacements the rest of the crate builds
+//! on:
+//!
+//! * [`json`] — a JSON value model, parser and serializer (config files,
+//!   the artifact manifest, metric reports).
+//! * [`rng`] — a SplitMix64 PRNG with uniform/normal/choice helpers.
+//! * [`stats`] — means, percentiles, CDFs and least-squares fits used by the
+//!   profiling and experiment drivers.
+//! * [`testkit`] — a miniature property-testing harness (seed-reporting
+//!   randomized checks) standing in for `proptest`.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod testkit;

@@ -1,0 +1,135 @@
+//! Small statistics toolbox for the profiling and experiment drivers:
+//! summary statistics, percentiles/CDFs, and ordinary least squares (used by
+//! the piecewise-linear curve fitting that regenerates Table 1 / Fig. 19).
+
+/// Arithmetic mean (`NaN` for an empty slice).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile via linear interpolation on the sorted sample, `p` in `[0,100]`.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty sample");
+    assert!((0.0..=100.0).contains(&p));
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+/// Empirical CDF evaluated at the sample points: returns `(x_sorted, F(x))`.
+pub fn ecdf(xs: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = s.len() as f64;
+    let f = (1..=s.len()).map(|i| i as f64 / n).collect();
+    (s, f)
+}
+
+/// Ordinary least squares `y ≈ slope*x + intercept`; returns
+/// `(slope, intercept, r2)`.
+pub fn linfit(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2, "need at least two points");
+    let mx = mean(x);
+    let my = mean(y);
+    let sxx: f64 = x.iter().map(|xi| (xi - mx).powi(2)).sum();
+    let sxy: f64 = x.iter().zip(y).map(|(xi, yi)| (xi - mx) * (yi - my)).sum();
+    let slope = if sxx == 0.0 { 0.0 } else { sxy / sxx };
+    let intercept = my - slope * mx;
+    let ss_res: f64 = x
+        .iter()
+        .zip(y)
+        .map(|(xi, yi)| (yi - (slope * xi + intercept)).powi(2))
+        .sum();
+    let ss_tot: f64 = y.iter().map(|yi| (yi - my).powi(2)).sum();
+    let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    (slope, intercept, r2)
+}
+
+/// Histogram with `bins` equal-width buckets over `[lo, hi)`; out-of-range
+/// samples clamp into the edge buckets.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    assert!(bins > 0 && hi > lo);
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        let k = (((x - lo) / w) as isize).clamp(0, bins as isize - 1) as usize;
+        h[k] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.0).abs() < 1e-12);
+        assert!(mean(&[]).is_nan());
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn ecdf_monotone() {
+        let (x, f) = ecdf(&[3.0, 1.0, 2.0]);
+        assert_eq!(x, vec![1.0, 2.0, 3.0]);
+        assert_eq!(f, vec![1.0 / 3.0, 2.0 / 3.0, 1.0]);
+    }
+
+    #[test]
+    fn linfit_exact_line() {
+        let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|xi| 2.5 * xi - 1.0).collect();
+        let (m, b, r2) = linfit(&x, &y);
+        assert!((m - 2.5).abs() < 1e-12);
+        assert!((b + 1.0).abs() < 1e-12);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linfit_noise_r2_below_one() {
+        let x: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let y: Vec<f64> = x
+            .iter()
+            .enumerate()
+            .map(|(i, xi)| xi + if i % 2 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        let (_, _, r2) = linfit(&x, &y);
+        assert!(r2 < 1.0 && r2 > 0.8);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let h = histogram(&[0.1, 0.2, 0.9, -5.0, 5.0], 0.0, 1.0, 2);
+        assert_eq!(h, vec![3, 2]);
+    }
+}

@@ -1,0 +1,111 @@
+//! Miniature property-testing harness.
+//!
+//! `proptest` is not available in the offline vendor set (documented
+//! substitution — see DESIGN.md §Testing).  `testkit` keeps the part we rely
+//! on: run a property against many seeded random cases, and on failure
+//! report the exact case seed so the failure replays deterministically
+//! (`Rng::new(seed)` regenerates the inputs).
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla_extension rpath in this
+//! // offline environment; the same pattern executes in unit tests.)
+//! use orbitchain::util::{rng::Rng, testkit::property};
+//!
+//! property("addition commutes", 100, |rng| {
+//!     let (a, b) = (rng.range(-1e6, 1e6), rng.range(-1e6, 1e6));
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Base seed; combined with the case index for per-case streams.  Override
+/// with the `ORBITCHAIN_TEST_SEED` environment variable to replay a failure.
+fn base_seed() -> u64 {
+    std::env::var("ORBITCHAIN_TEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x0C_0FFEE)
+}
+
+/// Run `cases` random cases of a property.  The property receives a seeded
+/// [`Rng`] and returns `Err(description)` to signal a counterexample; the
+/// harness panics with the case seed for replay.
+pub fn property<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (replay: \
+                 ORBITCHAIN_TEST_SEED={base}, case seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two floats agree to a relative-or-absolute tolerance.
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} != {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        property("count", 25, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        property("fails", 10, |rng| {
+            let x = rng.f64();
+            if x < 2.0 {
+                Err(format!("x={x}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6).is_ok());
+        assert!(close(1e9, 1e9 * (1.0 + 1e-9), 1e-6).is_ok());
+        assert!(close(1.0, 1.1, 1e-6).is_err());
+    }
+
+    #[test]
+    fn properties_deterministic() {
+        let mut first = Vec::new();
+        property("record", 5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        property("record", 5, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

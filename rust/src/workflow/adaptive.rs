@@ -1,0 +1,205 @@
+//! Online distribution-ratio estimation (paper §4.1 Remark).
+//!
+//! The paper initializes distribution ratios δ from offline profiling (or
+//! conservatively at 1) and leaves runtime adaptation "as an opportunity
+//! for future research": *"As runtime data accumulate, these ratios can be
+//! adaptively estimated or predicted."*  This module implements that
+//! extension:
+//!
+//! * per-edge EWMA estimators fed by (input, forwarded) tile counts the
+//!   runtime observes each frame;
+//! * confidence bands from the observation volume;
+//! * a replanning trigger that fires when an estimate drifts outside the
+//!   band the current plan was built for — the Planner is then re-run on
+//!   the ground with the updated workflow (plan updates ride the normal
+//!   TT&C schedule, Appendix F).
+
+use super::Workflow;
+
+/// EWMA estimator for one workflow edge's distribution ratio.
+#[derive(Debug, Clone)]
+pub struct RatioEstimator {
+    /// Current estimate of δ.
+    pub estimate: f64,
+    /// EWMA smoothing factor per frame observation.
+    pub alpha: f64,
+    /// Total tiles observed entering the upstream function.
+    pub observed_in: f64,
+    /// δ the active plan was computed with.
+    pub planned: f64,
+}
+
+impl RatioEstimator {
+    /// Start from the planned (profiled) ratio.
+    pub fn new(planned: f64, alpha: f64) -> Self {
+        RatioEstimator { estimate: planned, alpha, observed_in: 0.0, planned }
+    }
+
+    /// Conservative cold-start per the paper: δ = 1 handles full traffic.
+    pub fn conservative(alpha: f64) -> Self {
+        Self::new(1.0, alpha)
+    }
+
+    /// Feed one frame's observation: `tiles_in` entered the upstream
+    /// function, `tiles_out` were forwarded along this edge.
+    pub fn observe(&mut self, tiles_in: f64, tiles_out: f64) {
+        if tiles_in <= 0.0 {
+            return;
+        }
+        let frame_ratio = (tiles_out / tiles_in).clamp(0.0, 10.0);
+        // Frame-level EWMA; frames with little evidence are down-weighted.
+        let w = self.alpha * (tiles_in / 50.0).min(1.0);
+        self.estimate += w * (frame_ratio - self.estimate);
+        self.observed_in += tiles_in;
+    }
+
+    /// Half-width of the ~95% confidence band (binomial normal approx for
+    /// δ ≤ 1; inflated by the EWMA's effective sample shrinkage).
+    pub fn confidence_halfwidth(&self) -> f64 {
+        if self.observed_in < 1.0 {
+            return 1.0;
+        }
+        let p = self.estimate.clamp(0.01, 0.99);
+        // Effective sample size of an EWMA ≈ 2/α − 1 frames of evidence,
+        // each carrying ~observed_in/frames tiles; bound by total tiles.
+        let n_eff = self.observed_in.min(2.0 / self.alpha * 30.0);
+        1.96 * (p * (1.0 - p) / n_eff).sqrt()
+    }
+
+    /// Should the ground re-plan?  Fires when the planned δ falls outside
+    /// the estimate's confidence band by more than `margin`.
+    pub fn needs_replan(&self, margin: f64) -> bool {
+        (self.estimate - self.planned).abs()
+            > self.confidence_halfwidth() + margin
+    }
+}
+
+/// Estimator bank for a whole workflow (one estimator per edge).
+#[derive(Debug, Clone)]
+pub struct WorkflowEstimator {
+    /// Keyed in `edge_list()` order.
+    pub edges: Vec<((usize, usize), RatioEstimator)>,
+}
+
+impl WorkflowEstimator {
+    pub fn from_workflow(wf: &Workflow, alpha: f64) -> Self {
+        WorkflowEstimator {
+            edges: wf
+                .edge_list()
+                .into_iter()
+                .map(|(u, v, d)| ((u, v), RatioEstimator::new(d, alpha)))
+                .collect(),
+        }
+    }
+
+    /// Record a frame: `per_func_in[i]` tiles entered function `i`,
+    /// `per_edge_out[k]` tiles were forwarded on edge `k` (edge-list order).
+    pub fn observe_frame(&mut self, per_func_in: &[f64], per_edge_out: &[f64]) {
+        for (k, ((u, _v), est)) in self.edges.iter_mut().enumerate() {
+            est.observe(per_func_in[*u], per_edge_out[k]);
+        }
+    }
+
+    /// Apply current estimates back onto a workflow (the re-planning input).
+    pub fn updated_workflow(&self, wf: &Workflow) -> Workflow {
+        let mut out = Workflow::new();
+        for i in 0..wf.len() {
+            out.add_function(wf.name(i));
+        }
+        for ((u, v), est) in &self.edges {
+            out.add_edge(*u, *v, est.estimate).expect("same topology");
+        }
+        out
+    }
+
+    pub fn any_needs_replan(&self, margin: f64) -> bool {
+        self.edges.iter().any(|(_, e)| e.needs_replan(margin))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::property;
+    use crate::workflow;
+
+    #[test]
+    fn converges_to_true_ratio() {
+        let mut est = RatioEstimator::new(0.5, 0.02);
+        let mut rng = Rng::new(1);
+        let truth = 0.8;
+        for _ in 0..200 {
+            let tiles_in = 100.0;
+            let out = (0..100).filter(|_| rng.chance(truth)).count() as f64;
+            est.observe(tiles_in, out);
+        }
+        assert!((est.estimate - truth).abs() < 0.05, "est={}", est.estimate);
+        assert!(est.needs_replan(0.05), "0.5 -> 0.8 drift must trigger");
+    }
+
+    #[test]
+    fn stable_ratio_never_triggers() {
+        let mut est = RatioEstimator::new(0.5, 0.02);
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let out = (0..100).filter(|_| rng.chance(0.5)).count() as f64;
+            est.observe(100.0, out);
+            assert!(!est.needs_replan(0.1), "est={}", est.estimate);
+        }
+    }
+
+    #[test]
+    fn conservative_start_is_one() {
+        let est = RatioEstimator::conservative(0.05);
+        assert_eq!(est.estimate, 1.0);
+        assert!(est.confidence_halfwidth() >= 1.0, "no data, no confidence");
+    }
+
+    #[test]
+    fn zero_input_frames_ignored() {
+        let mut est = RatioEstimator::new(0.5, 0.1);
+        est.observe(0.0, 0.0);
+        assert_eq!(est.estimate, 0.5);
+        assert_eq!(est.observed_in, 0.0);
+    }
+
+    #[test]
+    fn workflow_roundtrip_updates_factors() {
+        let wf = workflow::flood_monitoring(0.5);
+        let mut bank = WorkflowEstimator::from_workflow(&wf, 0.05);
+        // Cloud edge actually passes 80% of tiles.
+        for _ in 0..150 {
+            bank.observe_frame(&[100.0, 80.0, 40.0, 40.0], &[80.0, 40.0, 40.0]);
+        }
+        assert!(bank.any_needs_replan(0.05));
+        let updated = bank.updated_workflow(&wf);
+        let rho = updated.workload_factors().unwrap();
+        assert!((rho[1] - 0.8).abs() < 0.05, "rho_landuse={}", rho[1]);
+        // Topology preserved.
+        assert_eq!(updated.edge_list().len(), wf.edge_list().len());
+    }
+
+    #[test]
+    fn prop_estimate_bounded_and_monotone_evidence() {
+        property("estimator sane", 40, |rng: &mut Rng| {
+            let truth = rng.range(0.05, 0.95);
+            let mut est = RatioEstimator::new(rng.range(0.1, 0.9), 0.05);
+            let mut last_hw = f64::INFINITY;
+            for _ in 0..50 {
+                let n = 1 + rng.below(200);
+                let out = (0..n).filter(|_| rng.chance(truth)).count() as f64;
+                est.observe(n as f64, out);
+                if est.estimate < 0.0 || est.estimate > 10.0 {
+                    return Err(format!("estimate {} out of range", est.estimate));
+                }
+                let hw = est.confidence_halfwidth();
+                if hw > last_hw + 0.5 {
+                    return Err("confidence must tighten with evidence".into());
+                }
+                last_hw = hw.min(last_hw);
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,442 @@
+//! Analytics workflows (paper §4.1, Definition 1, Algorithm 2).
+//!
+//! An Earth-observation analytics workflow is a DAG whose nodes are
+//! *analytics functions* (a model plus its pre/post-processing) and whose
+//! edges carry *distribution ratios* δ — the average number of tiles a
+//! function emits downstream per input tile.  From the ratios, Algorithm 2
+//! derives the per-function *workload factor* ρᵢ: the average fraction of
+//! source tiles that reach function `mᵢ` (ρ of a source is 1).
+//!
+//! The module also ships the workflow builders used throughout the
+//! evaluation: the four-function farmland-flood workflow of Fig. 1/Fig. 5,
+//! its 2- and 3-function prefixes (Fig. 11's D+L / D+L+R variants), pure
+//! chains (the model adopted by Serval [47]) and parallel "span" shapes.
+
+pub mod adaptive;
+
+use std::collections::BTreeMap;
+
+/// Index of an analytics function within its workflow.
+pub type FuncId = usize;
+
+/// A directed analytics-workflow graph with per-edge distribution ratios.
+#[derive(Debug, Clone)]
+pub struct Workflow {
+    names: Vec<String>,
+    /// `edges[i]` = list of `(downstream, δ)` pairs of function `i`.
+    edges: Vec<Vec<(FuncId, f64)>>,
+}
+
+/// Errors from workflow construction/validation.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum WorkflowError {
+    #[error("workflow has a cycle involving function {0}")]
+    Cycle(FuncId),
+    #[error("distribution ratio {0} out of range (must be >= 0)")]
+    BadRatio(f64),
+    #[error("duplicate edge {0} -> {1}")]
+    DuplicateEdge(FuncId, FuncId),
+    #[error("edge endpoint {0} out of range")]
+    BadEndpoint(FuncId),
+    #[error("workflow has no functions")]
+    Empty,
+}
+
+impl Workflow {
+    /// Create an empty workflow.
+    pub fn new() -> Self {
+        Workflow { names: Vec::new(), edges: Vec::new() }
+    }
+
+    /// Add an analytics function; returns its id.
+    pub fn add_function(&mut self, name: impl Into<String>) -> FuncId {
+        self.names.push(name.into());
+        self.edges.push(Vec::new());
+        self.names.len() - 1
+    }
+
+    /// Add a directed edge `from -> to` with distribution ratio `delta`.
+    pub fn add_edge(
+        &mut self,
+        from: FuncId,
+        to: FuncId,
+        delta: f64,
+    ) -> Result<(), WorkflowError> {
+        if from >= self.len() || to >= self.len() {
+            return Err(WorkflowError::BadEndpoint(from.max(to)));
+        }
+        if !(delta >= 0.0) || !delta.is_finite() {
+            return Err(WorkflowError::BadRatio(delta));
+        }
+        if self.edges[from].iter().any(|&(t, _)| t == to) {
+            return Err(WorkflowError::DuplicateEdge(from, to));
+        }
+        self.edges[from].push((to, delta));
+        Ok(())
+    }
+
+    /// Number of analytics functions `N_m`.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Function name (for reports).
+    pub fn name(&self, i: FuncId) -> &str {
+        &self.names[i]
+    }
+
+    /// Downstream `(function, δ)` pairs of `i` (paper: `downstream(m_i)`).
+    pub fn downstream(&self, i: FuncId) -> &[(FuncId, f64)] {
+        &self.edges[i]
+    }
+
+    /// Upstream `(function, δ)` pairs of `i`.
+    pub fn upstream(&self, i: FuncId) -> Vec<(FuncId, f64)> {
+        let mut ups = Vec::new();
+        for (u, outs) in self.edges.iter().enumerate() {
+            for &(v, d) in outs {
+                if v == i {
+                    ups.push((u, d));
+                }
+            }
+        }
+        ups
+    }
+
+    /// Functions with in-degree 0 (fed directly by the sensing function).
+    pub fn sources(&self) -> Vec<FuncId> {
+        let mut indeg = vec![0usize; self.len()];
+        for outs in &self.edges {
+            for &(v, _) in outs {
+                indeg[v] += 1;
+            }
+        }
+        (0..self.len()).filter(|&i| indeg[i] == 0).collect()
+    }
+
+    /// Topological order (Kahn).  Errors with a member of a cycle if cyclic.
+    pub fn topo_order(&self) -> Result<Vec<FuncId>, WorkflowError> {
+        if self.is_empty() {
+            return Err(WorkflowError::Empty);
+        }
+        let mut indeg = vec![0usize; self.len()];
+        for outs in &self.edges {
+            for &(v, _) in outs {
+                indeg[v] += 1;
+            }
+        }
+        let mut queue: Vec<FuncId> = (0..self.len()).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(self.len());
+        while let Some(u) = queue.pop() {
+            order.push(u);
+            for &(v, _) in &self.edges[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push(v);
+                }
+            }
+        }
+        if order.len() != self.len() {
+            let stuck = (0..self.len()).find(|&i| indeg[i] > 0).unwrap();
+            return Err(WorkflowError::Cycle(stuck));
+        }
+        Ok(order)
+    }
+
+    /// Validate the workflow (non-empty, acyclic).
+    pub fn validate(&self) -> Result<(), WorkflowError> {
+        self.topo_order().map(|_| ())
+    }
+
+    /// **Algorithm 2** — workload factors ρᵢ: average fraction of source
+    /// tiles reaching each function.  Sources get ρ = 1; every other
+    /// function sums its upstream factors discounted by edge ratios.
+    pub fn workload_factors(&self) -> Result<Vec<f64>, WorkflowError> {
+        let order = self.topo_order()?;
+        let sources = self.sources();
+        let mut rho = vec![0.0f64; self.len()];
+        for s in sources {
+            rho[s] = 1.0;
+        }
+        for &u in &order {
+            let ru = rho[u];
+            for &(v, d) in &self.edges[u] {
+                rho[v] += ru * d;
+            }
+        }
+        Ok(rho)
+    }
+
+    /// All edges as `(from, to, δ)` triples (reporting convenience).
+    pub fn edge_list(&self) -> Vec<(FuncId, FuncId, f64)> {
+        let mut es = Vec::new();
+        for (u, outs) in self.edges.iter().enumerate() {
+            for &(v, d) in outs {
+                es.push((u, v, d));
+            }
+        }
+        es
+    }
+
+    /// Override every edge's distribution ratio leaving function `from`
+    /// (used by the Fig. 12 sweep over the cloud-detection ratio).
+    pub fn set_out_ratio(&mut self, from: FuncId, delta: f64) {
+        for e in &mut self.edges[from] {
+            e.1 = delta;
+        }
+    }
+}
+
+impl Default for Workflow {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builders used by the evaluation.
+// ---------------------------------------------------------------------------
+
+/// Canonical names of the four Fig. 1 analytics functions, in paper order:
+/// cloud detection (m1), land-use classification (m2), waterbody monitoring
+/// (m3), crop monitoring (m4).  These match the Layer-2 model artifacts.
+pub const FLOOD_FUNCS: [&str; 4] = ["cloud", "landuse", "water", "crop"];
+
+/// The Fig. 1 / Fig. 5 farmland-flood workflow:
+/// `cloud -> landuse -> {water, crop}` with uniform ratio `delta`.
+/// With δ = 0.5 this reproduces ρ = (1, 0.5, 0.25, 0.25) from §4.2.
+pub fn flood_monitoring(delta: f64) -> Workflow {
+    let mut wf = Workflow::new();
+    let m: Vec<FuncId> = FLOOD_FUNCS.iter().map(|n| wf.add_function(*n)).collect();
+    wf.add_edge(m[0], m[1], delta).unwrap();
+    wf.add_edge(m[1], m[2], delta).unwrap();
+    wf.add_edge(m[1], m[3], delta).unwrap();
+    wf
+}
+
+/// Prefix of the flood workflow with `n` of its functions chained
+/// (Fig. 11's D / D+L / D+L+R / full variants).  `n` in 1..=4; for `n == 4`
+/// the span shape of [`flood_monitoring`] is used.
+pub fn flood_prefix(n: usize, delta: f64) -> Workflow {
+    assert!((1..=4).contains(&n));
+    if n == 4 {
+        return flood_monitoring(delta);
+    }
+    let mut wf = Workflow::new();
+    let ids: Vec<FuncId> = FLOOD_FUNCS[..n].iter().map(|s| wf.add_function(*s)).collect();
+    for w in ids.windows(2) {
+        wf.add_edge(w[0], w[1], delta).unwrap();
+    }
+    wf
+}
+
+/// A pure function chain `f0 -> f1 -> ... -> f(n-1)` with uniform ratio.
+pub fn chain(n: usize, delta: f64) -> Workflow {
+    let mut wf = Workflow::new();
+    let ids: Vec<FuncId> = (0..n).map(|i| wf.add_function(format!("f{i}"))).collect();
+    for w in ids.windows(2) {
+        wf.add_edge(w[0], w[1], delta).unwrap();
+    }
+    wf
+}
+
+/// A "span" workflow: one root fanning out to `n - 1` parallel leaves.
+pub fn span(n: usize, delta: f64) -> Workflow {
+    assert!(n >= 1);
+    let mut wf = Workflow::new();
+    let root = wf.add_function("root");
+    for i in 1..n {
+        let leaf = wf.add_function(format!("leaf{i}"));
+        wf.add_edge(root, leaf, delta).unwrap();
+    }
+    wf
+}
+
+/// Random DAG over `n` functions (edges only forward in index order) —
+/// used by property tests and the Fig. 20 planning-efficiency sweep.
+pub fn random_dag(n: usize, edge_prob: f64, rng: &mut crate::util::rng::Rng) -> Workflow {
+    let mut wf = Workflow::new();
+    for i in 0..n {
+        wf.add_function(format!("f{i}"));
+    }
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.chance(edge_prob) {
+                wf.add_edge(i, j, rng.range(0.1, 1.0)).unwrap();
+            }
+        }
+    }
+    wf
+}
+
+/// Workload factors as a name -> ρ map (reporting convenience).
+pub fn factor_map(wf: &Workflow) -> BTreeMap<String, f64> {
+    let rho = wf.workload_factors().expect("valid workflow");
+    (0..wf.len()).map(|i| (wf.name(i).to_string(), rho[i])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::property;
+
+    #[test]
+    fn fig5_workload_factors() {
+        let wf = flood_monitoring(0.5);
+        let rho = wf.workload_factors().unwrap();
+        assert_eq!(rho, vec![1.0, 0.5, 0.25, 0.25]);
+    }
+
+    #[test]
+    fn chain_factors_decay_geometrically() {
+        let wf = chain(5, 0.5);
+        let rho = wf.workload_factors().unwrap();
+        for (i, r) in rho.iter().enumerate() {
+            assert!((r - 0.5f64.powi(i as i32)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn span_factors() {
+        let wf = span(4, 0.3);
+        let rho = wf.workload_factors().unwrap();
+        assert_eq!(rho[0], 1.0);
+        for r in &rho[1..] {
+            assert!((r - 0.3).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn diamond_sums_parallel_paths() {
+        // a -> b -> d, a -> c -> d: ρ_d = δ_ab·δ_bd + δ_ac·δ_cd.
+        let mut wf = Workflow::new();
+        let a = wf.add_function("a");
+        let b = wf.add_function("b");
+        let c = wf.add_function("c");
+        let d = wf.add_function("d");
+        wf.add_edge(a, b, 0.5).unwrap();
+        wf.add_edge(a, c, 0.4).unwrap();
+        wf.add_edge(b, d, 0.5).unwrap();
+        wf.add_edge(c, d, 1.0).unwrap();
+        let rho = wf.workload_factors().unwrap();
+        assert!((rho[d] - (0.5 * 0.5 + 0.4 * 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut wf = Workflow::new();
+        let a = wf.add_function("a");
+        let b = wf.add_function("b");
+        wf.add_edge(a, b, 1.0).unwrap();
+        wf.add_edge(b, a, 1.0).unwrap();
+        assert!(matches!(wf.validate(), Err(WorkflowError::Cycle(_))));
+    }
+
+    #[test]
+    fn rejects_bad_edges() {
+        let mut wf = Workflow::new();
+        let a = wf.add_function("a");
+        let b = wf.add_function("b");
+        assert_eq!(wf.add_edge(a, 7, 1.0), Err(WorkflowError::BadEndpoint(7)));
+        assert_eq!(wf.add_edge(a, b, -0.5), Err(WorkflowError::BadRatio(-0.5)));
+        assert!(matches!(
+            wf.add_edge(a, b, f64::NAN).unwrap_err(),
+            WorkflowError::BadRatio(r) if r.is_nan()
+        ));
+        wf.add_edge(a, b, 1.0).unwrap();
+        assert_eq!(wf.add_edge(a, b, 0.5), Err(WorkflowError::DuplicateEdge(a, b)));
+    }
+
+    #[test]
+    fn empty_workflow_invalid() {
+        assert_eq!(Workflow::new().validate(), Err(WorkflowError::Empty));
+    }
+
+    #[test]
+    fn upstream_downstream_consistent() {
+        let wf = flood_monitoring(0.5);
+        assert_eq!(wf.downstream(1).len(), 2);
+        assert_eq!(wf.upstream(2), vec![(1, 0.5)]);
+        assert_eq!(wf.sources(), vec![0]);
+    }
+
+    #[test]
+    fn prefix_builders() {
+        assert_eq!(flood_prefix(1, 0.5).len(), 1);
+        assert_eq!(flood_prefix(2, 0.5).edge_list().len(), 1);
+        assert_eq!(flood_prefix(4, 0.5).edge_list().len(), 3);
+    }
+
+    /// Property: ρ computed by Algorithm 2 equals the sum over all paths
+    /// from any source of the product of edge ratios (path enumeration).
+    #[test]
+    fn prop_factors_equal_path_enumeration() {
+        property("rho == path sum", 60, |rng| {
+            let n = 2 + rng.below(6);
+            let wf = random_dag(n, 0.5, rng);
+            let rho = wf.workload_factors().map_err(|e| e.to_string())?;
+
+            // Path enumeration by memoized DFS from sources.
+            let sources = wf.sources();
+            let mut want = vec![0.0f64; n];
+            for &s in &sources {
+                // DFS accumulating products.
+                fn dfs(wf: &Workflow, u: usize, acc: f64, out: &mut [f64]) {
+                    out[u] += acc;
+                    for &(v, d) in wf.downstream(u) {
+                        dfs(wf, v, acc * d, out);
+                    }
+                }
+                let mut contrib = vec![0.0f64; n];
+                dfs(&wf, s, 1.0, &mut contrib);
+                for i in 0..n {
+                    want[i] += contrib[i];
+                }
+            }
+            // Sources count themselves once in both methods.
+            for i in 0..n {
+                crate::util::testkit::close(rho[i], want[i], 1e-9)
+                    .map_err(|e| format!("func {i}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: scaling one edge's δ scales downstream-only factors
+    /// monotonically (no upstream effect).
+    #[test]
+    fn prop_ratio_monotonicity() {
+        property("delta monotone", 40, |rng| {
+            let n = 3 + rng.below(5);
+            let mut wf = random_dag(n, 0.6, rng);
+            let edges = wf.edge_list();
+            if edges.is_empty() {
+                return Ok(());
+            }
+            let before = wf.workload_factors().unwrap();
+            let (from, _, _) = *rng.choice(&edges);
+            wf.set_out_ratio(from, 2.0);
+            let after = wf.workload_factors().unwrap();
+            for i in 0..n {
+                if after[i] + 1e-12 < before[i] {
+                    return Err(format!(
+                        "factor decreased at {i}: {} -> {}",
+                        before[i], after[i]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn factor_map_names() {
+        let fm = factor_map(&flood_monitoring(0.5));
+        assert_eq!(fm["cloud"], 1.0);
+        assert_eq!(fm["crop"], 0.25);
+    }
+}

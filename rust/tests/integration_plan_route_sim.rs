@@ -1,0 +1,196 @@
+//! Integration: planner → routing → simulator across scenarios, asserting
+//! the cross-module invariants the paper's design relies on.
+
+use orbitchain::baselines;
+use orbitchain::config::Scenario;
+use orbitchain::constellation::Constellation;
+use orbitchain::planner;
+use orbitchain::profile::{Device, ProfileDb};
+use orbitchain::routing::{self, Dev};
+use orbitchain::sim::{self, SimConfig, Simulator};
+use orbitchain::util::rng::Rng;
+use orbitchain::util::testkit::property;
+use orbitchain::workflow;
+
+#[test]
+fn full_stack_jetson_and_rpi() {
+    for scenario in [Scenario::jetson(), Scenario::rpi()] {
+        let (wf, db, c) = scenario.build();
+        let plan = planner::plan(&wf, &db, &c).expect("plan");
+        assert!(plan.feasible(), "{}: phi={}", scenario.name, plan.phi);
+        assert!(
+            planner::verify_plan(&plan, &wf, &db, &c).is_empty(),
+            "{}",
+            scenario.name
+        );
+        let routing = routing::route(&wf, &db, &c, &plan).expect("route");
+        assert!(routing.unrouted_tiles < 1e-6, "{}", scenario.name);
+        let rep = sim::simulate_orbitchain(&wf, &db, &c, scenario.sim_config())
+            .expect("simulate");
+        assert!(
+            rep.completion_ratio > 0.9,
+            "{}: completion {}",
+            scenario.name,
+            rep.completion_ratio
+        );
+    }
+}
+
+#[test]
+fn prop_random_scenarios_conserve_workload() {
+    // For random feasible scenarios: routed + unrouted == N0, and assigned
+    // workload never exceeds planned instance capacity.
+    property("plan/route conservation", 12, |rng: &mut Rng| {
+        let n_sats = 2 + rng.below(5);
+        let n0 = 20 + rng.below(80);
+        let deadline = rng.range(4.0, 8.0);
+        let delta = rng.range(0.2, 0.9);
+        let wf = workflow::flood_monitoring(delta);
+        let db = ProfileDb::jetson();
+        let c = Constellation::uniform(n_sats, Device::JetsonOrinNano, deadline, n0);
+        let Ok(plan) = planner::plan(&wf, &db, &c) else {
+            return Ok(()); // infeasible scenarios are fine
+        };
+        let r = routing::route(&wf, &db, &c, &plan).map_err(|e| e.to_string())?;
+        let total = r.routed_tiles + r.unrouted_tiles;
+        orbitchain::util::testkit::close(total, n0 as f64, 1e-9)?;
+        if plan.feasible() && r.unrouted_tiles > 1e-6 {
+            return Err(format!(
+                "feasible plan (phi={}) but {} unrouted",
+                plan.phi, r.unrouted_tiles
+            ));
+        }
+        // Capacity conservation.
+        let rho = wf.workload_factors().unwrap();
+        let mut used = std::collections::HashMap::new();
+        for p in &r.pipelines {
+            for st in &p.stages {
+                *used.entry((st.func, st.sat, st.dev)).or_insert(0.0) +=
+                    p.workload * rho[st.func];
+            }
+        }
+        for ((func, sat, dev), amount) in used {
+            let pl = plan.placement(func, sat);
+            let cap = match dev {
+                Dev::Cpu => pl.cpu_capacity(c.frame_deadline_s),
+                Dev::Gpu => pl.gpu_capacity(),
+            };
+            if amount > cap + 1e-6 {
+                return Err(format!("({func},{sat},{dev:?}) over capacity"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_completion_in_unit_range_all_frameworks() {
+    property("completion bounded", 6, |rng: &mut Rng| {
+        let wf_size = 2 + rng.below(3);
+        let wf = workflow::flood_prefix(wf_size, 0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let cfg = SimConfig { frames: 3, seed: rng.next_u64(), ..Default::default() };
+        let ours = sim::simulate_orbitchain(&wf, &db, &c, cfg.clone())
+            .map_err(|e| e.to_string())?;
+        if !(0.0..=1.0 + 1e-9).contains(&ours.completion_ratio) {
+            return Err(format!("orbitchain completion {}", ours.completion_ratio));
+        }
+        for dep in [
+            baselines::data_parallelism(&wf, &db, &c),
+            baselines::compute_parallelism(&wf, &db, &c),
+        ] {
+            if !dep.instantiated {
+                continue;
+            }
+            let rep = Simulator::new(&wf, &db, &c, dep.instances, &dep.pipelines, cfg.clone())
+                .run();
+            if !(0.0..=1.0 + 1e-9).contains(&rep.completion_ratio) {
+                return Err(format!("baseline completion {}", rep.completion_ratio));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn headline_more_workload_than_baselines() {
+    // §6.2(1): at the tightest deadline with the full workflow, OrbitChain
+    // completes strictly more than both baselines (data parallelism can't
+    // even instantiate).
+    let wf = workflow::flood_monitoring(0.5);
+    let db = ProfileDb::jetson();
+    let mut c = Constellation::jetson();
+    c.frame_deadline_s = 4.75;
+    let cfg = SimConfig { frames: 6, ..Default::default() };
+    let ours = sim::simulate_orbitchain(&wf, &db, &c, cfg.clone()).unwrap();
+    let dp = baselines::data_parallelism(&wf, &db, &c);
+    assert!(!dp.instantiated, "data parallelism must OOM with 4 functions");
+    let cp = baselines::compute_parallelism(&wf, &db, &c);
+    let cp_ratio = if cp.instantiated {
+        Simulator::new(&wf, &db, &c, cp.instances, &cp.pipelines, cfg)
+            .run()
+            .completion_ratio
+    } else {
+        0.0
+    };
+    assert!(
+        ours.completion_ratio > cp_ratio,
+        "ours={} cp={cp_ratio}",
+        ours.completion_ratio
+    );
+}
+
+#[test]
+fn headline_isl_savings_vs_spraying() {
+    // §6.2(2): OrbitChain saves substantial ISL traffic vs load spraying
+    // across the δ sweep; the saving is strictly positive on average.
+    let db = ProfileDb::jetson();
+    let c = Constellation::jetson();
+    let mut savings = Vec::new();
+    for delta in [0.1, 0.3, 0.5, 0.7, 0.9] {
+        let mut wf = workflow::flood_monitoring(0.5);
+        wf.set_out_ratio(0, delta);
+        let plan = planner::plan(&wf, &db, &c).unwrap();
+        let ours = routing::route(&wf, &db, &c, &plan).unwrap();
+        let spray = routing::route_load_spraying(&wf, &db, &c, &plan);
+        if spray.isl_bytes_per_frame > 0.0 {
+            savings.push(1.0 - ours.isl_bytes_per_frame / spray.isl_bytes_per_frame);
+        }
+    }
+    let mean = orbitchain::util::stats::mean(&savings);
+    assert!(mean > 0.1, "mean saving {mean} ({savings:?})");
+}
+
+#[test]
+fn failure_injection_degraded_satellite() {
+    // Knock out the middle satellite's placements post-planning: routing
+    // must degrade gracefully (route less, never panic), and the simulator
+    // must report reduced-but-bounded completion.
+    let wf = workflow::flood_monitoring(0.5);
+    let db = ProfileDb::jetson();
+    let c = Constellation::jetson();
+    let mut plan = planner::plan(&wf, &db, &c).unwrap();
+    for p in &mut plan.placements {
+        if p.sat == 1 {
+            p.deployed = false;
+            p.cpu_speed = 0.0;
+            p.gpu = false;
+            p.gpu_speed = 0.0;
+            p.gpu_slice_s = 0.0;
+        }
+    }
+    let r = routing::route(&wf, &db, &c, &plan).unwrap();
+    assert!(r.routed_tiles > 0.0, "leader+follower capacity remains");
+    let instances = sim::instances_from_plan(&plan, &c);
+    let rep = Simulator::new(
+        &wf,
+        &db,
+        &c,
+        instances,
+        &r.pipelines,
+        SimConfig { frames: 4, ..Default::default() },
+    )
+    .run();
+    assert!(rep.completion_ratio <= 1.0 + 1e-9);
+}
