@@ -12,12 +12,10 @@
 //! cargo run --release --example ground_assisted
 //! ```
 
-use orbitchain::constellation::Constellation;
+use orbitchain::config::Scenario;
 use orbitchain::orbit::{presets, visibility};
-use orbitchain::profile::ProfileDb;
-use orbitchain::sim::{self, SimConfig};
+use orbitchain::scenario::Orchestrator;
 use orbitchain::util::stats;
-use orbitchain::workflow;
 
 fn main() -> anyhow::Result<()> {
     let stations = presets::ground_stations();
@@ -60,16 +58,10 @@ fn main() -> anyhow::Result<()> {
             / all_intervals.len())
     );
 
-    // The OrbitChain contrast: same Earth, minutes not hours.
-    let wf = workflow::flood_monitoring(0.5);
-    let profiles = ProfileDb::jetson();
-    let constellation = Constellation::jetson();
-    let rep = sim::simulate_orbitchain(
-        &wf,
-        &profiles,
-        &constellation,
-        SimConfig { frames: 5, isl_rate_bps: Some(5_000.0), ..Default::default() },
-    )?;
+    // The OrbitChain contrast: same Earth, minutes not hours — one
+    // orchestrated scenario run on the §6.1 Jetson testbed.
+    let scenario = Scenario::jetson().with_frames(5).with_isl_rate(5_000.0);
+    let rep = Orchestrator::new(&scenario).run()?;
     println!(
         "\nOrbitChain on the same frame scale: full analytics in {:.1} s over a \
          5 kbps LoRa ISL ({}x faster than the median ground wait).",

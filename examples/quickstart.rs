@@ -1,27 +1,27 @@
-//! Quickstart: plan → route → simulate the paper's farmland-flood workflow
-//! on the 3-satellite Jetson constellation (§6.1 testbed).
+//! Quickstart: orchestrate plan → route → simulate for the paper's
+//! farmland-flood workflow on the 3-satellite Jetson constellation (§6.1
+//! testbed), then fan a small deadline sweep across worker threads.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use orbitchain::constellation::Constellation;
+use orbitchain::config::Scenario;
 use orbitchain::planner;
-use orbitchain::profile::ProfileDb;
-use orbitchain::routing;
-use orbitchain::sim::{self, SimConfig};
-use orbitchain::workflow;
+use orbitchain::scenario::{BackendKind, Orchestrator, SweepGrid, SweepRunner};
 
 fn main() -> anyhow::Result<()> {
-    // 1. The Fig. 1 workflow: cloud -> landuse -> {water, crop}, δ = 0.5.
-    let wf = workflow::flood_monitoring(0.5);
-    let rho = wf.workload_factors()?;
-    println!("workflow: {} functions, workload factors {rho:?}", wf.len());
-
-    // 2. The testbed: 3 Jetson Orin Nano satellites, 100-tile frames,
-    //    5 s frame deadline, LoRa inter-satellite links, §6.1 orbit shift.
-    let constellation = Constellation::jetson();
-    let profiles = ProfileDb::jetson();
+    // 1. The §6.1 Jetson scenario: Fig. 1 workflow (cloud -> landuse ->
+    //    {water, crop}, δ = 0.5), 3 satellites, 100-tile frames, 5 s frame
+    //    deadline, LoRa inter-satellite links, orbit shift.
+    let scenario = Scenario::jetson();
+    let orch = Orchestrator::new(&scenario);
+    let (wf, constellation) = (orch.workflow(), orch.constellation());
+    println!(
+        "workflow: {} functions, workload factors {:?}",
+        wf.len(),
+        wf.workload_factors()?
+    );
     println!(
         "constellation: {} sats, Δf = {} s, {} tiles/frame, ISL ≈ {:.0} bit/s",
         constellation.n_sats,
@@ -30,20 +30,22 @@ fn main() -> anyhow::Result<()> {
         constellation.isl_rate_bps()
     );
 
-    // 3. Ground planning: Program (10) — deployment + resource allocation.
-    let plan = planner::plan(&wf, &profiles, &constellation)?;
+    // 2. Plan + route through the orchestrator (MILP planner backend +
+    //    Algorithm 1 router backend — the OrbitChain path).
+    let prepared = orch.prepare()?;
+    let plan = prepared.plan.as_ref().expect("MILP backend yields a plan");
     println!(
-        "plan: φ = {:.2} (feasible: {}), {} placements, {} B&B nodes",
+        "plan: φ = {:.2} (feasible: {}), {} placements, {} B&B nodes ({:.1} ms)",
         plan.phi,
         plan.feasible(),
         plan.placements.iter().filter(|p| p.deployed || p.gpu).count(),
-        plan.nodes
+        plan.nodes,
+        prepared.plan_ms
     );
-    let violations = planner::verify_plan(&plan, &wf, &profiles, &constellation);
+    let violations =
+        planner::verify_plan(plan, orch.workflow(), orch.profiles(), orch.constellation());
     assert!(violations.is_empty(), "plan must verify: {violations:?}");
-
-    // 4. Workload routing: Algorithm 1.
-    let routing = routing::route(&wf, &profiles, &constellation, &plan)?;
+    let routing = prepared.routing.as_ref().expect("router ran");
     println!(
         "routing: {} pipelines, {:.0} tiles/frame routed, {:.0} ISL bytes/frame",
         routing.pipelines.len(),
@@ -51,13 +53,8 @@ fn main() -> anyhow::Result<()> {
         routing.isl_bytes_per_frame
     );
 
-    // 5. Runtime: discrete-event simulation of 10 frames.
-    let report = sim::simulate_orbitchain(
-        &wf,
-        &profiles,
-        &constellation,
-        SimConfig { frames: 10, ..Default::default() },
-    )?;
+    // 3. Runtime: discrete-event simulation of 10 frames.
+    let report = orch.simulate(&prepared);
     println!(
         "simulation: completion = {:.1}%, frame latency = {:.2} s \
          (proc {:.2} / comm {:.2} / revisit {:.2})",
@@ -68,6 +65,21 @@ fn main() -> anyhow::Result<()> {
         report.breakdown.2
     );
     assert!(report.completion_ratio > 0.9, "OrbitChain should keep up");
+
+    // 4. Scaling out: sweep the frame deadline across worker threads.
+    //    Parallel results are bit-identical to a sequential run.
+    let points = SweepGrid::new(scenario.with_frames(4))
+        .deadlines(&[4.75, 5.0, 5.25])
+        .backends(&[BackendKind::OrbitChain])
+        .points();
+    let outcome = SweepRunner::new().run(&points);
+    for (point, ratio) in points.iter().zip(outcome.completion_ratios()) {
+        println!(
+            "sweep: Δf = {:.2} s -> completion {:.1}%",
+            point.scenario.frame_deadline_s,
+            ratio * 100.0
+        );
+    }
     println!("quickstart OK");
     Ok(())
 }

@@ -14,10 +14,9 @@
 //! ```
 
 use orbitchain::constellation::Constellation;
-use orbitchain::planner;
 use orbitchain::profile::{datasize, ProfileDb};
-use orbitchain::routing;
-use orbitchain::sim::{self, SimConfig};
+use orbitchain::scenario::Orchestrator;
+use orbitchain::sim::SimConfig;
 use orbitchain::workflow::Workflow;
 
 fn main() -> anyhow::Result<()> {
@@ -42,9 +41,18 @@ fn main() -> anyhow::Result<()> {
     );
     let profiles = ProfileDb::jetson();
 
-    let plan = planner::plan(&wf, &profiles, &constellation)?;
+    // Bespoke workflow + uniform constellation: the orchestrator is built
+    // from parts and owns the whole plan -> route -> simulate cycle.
+    let orch = Orchestrator::from_parts(
+        wf,
+        profiles.clone(),
+        constellation.clone(),
+        SimConfig { frames: 6, ..Default::default() },
+    )
+    .with_label("tip-and-cue");
+    let prepared = orch.prepare()?;
+    let plan = prepared.plan.as_ref().expect("MILP plan");
     println!("tip-and-cue plan: φ = {:.2}", plan.phi);
-    let routing = routing::route(&wf, &profiles, &constellation, &plan)?;
 
     // Where did the planner put tips vs cues?
     for (i, name) in ["cloud", "landuse", "water", "crop"].iter().enumerate() {
@@ -56,6 +64,7 @@ fn main() -> anyhow::Result<()> {
             .collect();
         println!("  {name:>8} on satellites {sats:?}");
     }
+    let routing = prepared.routing.as_ref().expect("routed");
     println!(
         "  {} pipelines, {:.0} ISL bytes/frame (cue payloads only)",
         routing.pipelines.len(),
@@ -64,12 +73,7 @@ fn main() -> anyhow::Result<()> {
 
     // Simulate and report the tip→cue delivery time = frame latency minus
     // what a tip-only run would take.
-    let full = sim::simulate_orbitchain(
-        &wf,
-        &profiles,
-        &constellation,
-        SimConfig { frames: 6, ..Default::default() },
-    )?;
+    let full = orch.simulate(&prepared);
     println!(
         "end-to-end: completion {:.1}%, tip-to-cue result in {:.1} s \
          (proc {:.1} / comm {:.1} / revisit {:.1})",

@@ -1,36 +1,27 @@
 //! Micro-benchmark of the discrete-event engine hot path: end-to-end
 //! events/second on a large OrbitChain scenario (perf-pass tracking,
-//! EXPERIMENTS.md §Perf).
+//! EXPERIMENTS.md §Perf).  Plan + route run once through the scenario
+//! orchestrator; the measured loop re-simulates the prepared deployment.
 //! Run: `cargo bench --bench sim_engine`.
 mod bench_common;
 
 use orbitchain::constellation::Constellation;
-use orbitchain::planner;
 use orbitchain::profile::{Device, ProfileDb};
-use orbitchain::routing;
-use orbitchain::sim::{instances_from_plan, SimConfig, Simulator};
+use orbitchain::scenario::Orchestrator;
+use orbitchain::sim::SimConfig;
 use orbitchain::workflow;
 
 fn main() {
-    let wf = workflow::flood_monitoring(0.5);
-    let db = ProfileDb::jetson();
-    let c = Constellation::uniform(6, Device::JetsonOrinNano, 5.0, 400);
-    let plan = planner::plan(&wf, &db, &c).expect("plan");
-    let routing = routing::route(&wf, &db, &c, &plan).expect("route");
-    let instances = instances_from_plan(&plan, &c);
-
     let frames = 20usize;
-    let rep = bench_common::bench("sim_engine", 5, || {
-        let sim = Simulator::new(
-            &wf,
-            &db,
-            &c,
-            instances.clone(),
-            &routing.pipelines,
-            SimConfig { frames, ..Default::default() },
-        );
-        sim.run()
-    });
+    let orch = Orchestrator::from_parts(
+        workflow::flood_monitoring(0.5),
+        ProfileDb::jetson(),
+        Constellation::uniform(6, Device::JetsonOrinNano, 5.0, 400),
+        SimConfig { frames, ..Default::default() },
+    );
+    let prepared = orch.prepare().expect("plan + route");
+
+    let rep = bench_common::bench("sim_engine", 5, || orch.simulate(&prepared));
     // Rough event count: every tile triggers arrival+done per stage plus
     // link events; use analyzed counts as the proxy.
     let analyzed: f64 = ["cloud", "landuse", "water", "crop"]
@@ -39,6 +30,9 @@ fn main() {
         .sum();
     println!(
         "scenario: {} frames x {} tiles, {:.0} tiles analyzed, completion {:.3}",
-        frames, c.tiles_per_frame, analyzed, rep.completion_ratio
+        frames,
+        orch.constellation().tiles_per_frame,
+        analyzed,
+        rep.completion_ratio
     );
 }

@@ -1,0 +1,61 @@
+//! Throughput scaling of the parallel scenario sweep: the same grid run
+//! sequentially (1 thread) and fanned across all cores, reporting
+//! points/second and the per-core scaling factor.  Demonstrates >1
+//! scenario-per-core throughput on a multi-point grid while the outputs
+//! stay bit-identical.
+//! Run: `cargo bench --bench sweep_runner`.
+mod bench_common;
+
+use std::time::Instant;
+
+use orbitchain::config::Scenario;
+use orbitchain::scenario::{BackendKind, SweepGrid, SweepRunner};
+
+fn main() {
+    let points = SweepGrid::new(Scenario::jetson().with_frames(6))
+        .deadlines(&[4.75, 5.0, 5.25, 5.5])
+        .workflow_sizes(&[2, 3, 4])
+        .backends(&[BackendKind::OrbitChain, BackendKind::ComputeParallel])
+        .reseed(true)
+        .points();
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!("grid: {} points, {} cores", points.len(), cores);
+
+    let t0 = Instant::now();
+    let sequential = SweepRunner::new().with_threads(1).run(&points);
+    let t_seq = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let parallel = SweepRunner::new().run(&points);
+    let t_par = t1.elapsed().as_secs_f64();
+
+    // The parallel sweep must be bit-identical to the sequential one.
+    for (s, p) in sequential.reports.iter().zip(&parallel.reports) {
+        match (s, p) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(a.completion_ratio, b.completion_ratio);
+                assert_eq!(a.isl_bytes_per_frame, b.isl_bytes_per_frame);
+            }
+            (Err(_), Err(_)) => {}
+            _ => panic!("parallel/sequential outcome mismatch"),
+        }
+    }
+
+    let speedup = t_seq / t_par.max(1e-9);
+    println!(
+        "sequential: {t_seq:.2}s ({:.2} points/s)",
+        points.len() as f64 / t_seq.max(1e-9)
+    );
+    println!(
+        "parallel:   {t_par:.2}s ({:.2} points/s) on {} threads",
+        points.len() as f64 / t_par.max(1e-9),
+        SweepRunner::new().threads()
+    );
+    println!(
+        "speedup: {speedup:.2}x ({:.2} scenarios/s/core parallel vs {:.2} sequential)",
+        points.len() as f64 / t_par.max(1e-9) / cores as f64,
+        points.len() as f64 / t_seq.max(1e-9)
+    );
+}

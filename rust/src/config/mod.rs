@@ -67,6 +67,59 @@ impl Scenario {
         }
     }
 
+    /// Preset for a device by name-independent kind.
+    pub fn of(device: Device) -> Self {
+        match device {
+            Device::JetsonOrinNano => Self::jetson(),
+            Device::RaspberryPi4 => Self::rpi(),
+        }
+    }
+
+    // -- fluent setters (scenario orchestration / sweep call sites) --------
+
+    pub fn with_name(mut self, name: impl Into<String>) -> Self {
+        self.name = name.into();
+        self
+    }
+
+    pub fn with_frames(mut self, frames: usize) -> Self {
+        self.frames = frames;
+        self
+    }
+
+    pub fn with_workflow_size(mut self, n: usize) -> Self {
+        self.workflow_size = n.clamp(1, 4);
+        self
+    }
+
+    pub fn with_deadline(mut self, seconds: f64) -> Self {
+        self.frame_deadline_s = seconds;
+        self
+    }
+
+    pub fn with_delta(mut self, delta: f64) -> Self {
+        self.delta = delta;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_isl_rate(mut self, bps: f64) -> Self {
+        self.isl_rate_bps = Some(bps);
+        self
+    }
+
+    /// Size the constellation explicitly (implies the shift-free uniform
+    /// layout, like the CLI's `--sats`).
+    pub fn with_uniform_sats(mut self, n_sats: usize) -> Self {
+        self.n_sats = n_sats;
+        self.orbit_shift = false;
+        self
+    }
+
     /// Build the concrete experiment inputs.
     pub fn build(&self) -> (Workflow, ProfileDb, Constellation) {
         let wf = workflow::flood_prefix(self.workflow_size, self.delta);

@@ -77,15 +77,28 @@ pub struct Constellation {
 }
 
 /// Errors from constellation validation.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ConstellationError {
-    #[error("capture groups cover {got} tiles, frame has {want}")]
     BadCover { got: usize, want: usize },
-    #[error("capture group [{0}, {1}] out of satellite range")]
     BadGroup(SatId, SatId),
-    #[error("need at least one satellite")]
     NoSats,
 }
+
+impl std::fmt::Display for ConstellationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConstellationError::BadCover { got, want } => {
+                write!(f, "capture groups cover {got} tiles, frame has {want}")
+            }
+            ConstellationError::BadGroup(a, b) => {
+                write!(f, "capture group [{a}, {b}] out of satellite range")
+            }
+            ConstellationError::NoSats => write!(f, "need at least one satellite"),
+        }
+    }
+}
+
+impl std::error::Error for ConstellationError {}
 
 impl Constellation {
     /// §6.1 Jetson testbed: 3 satellites, 100-tile frames, Δf ≈ 5 s,

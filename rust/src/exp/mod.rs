@@ -22,13 +22,17 @@
 
 use std::time::Instant;
 
-use crate::baselines;
+use crate::config::Scenario;
 use crate::constellation::Constellation;
 use crate::link;
 use crate::orbit::{presets, visibility};
 use crate::profile::{coldstart::ColdStart, contention, datasize, fit, Device, ProfileDb, FUNC_NAMES};
 use crate::routing;
-use crate::sim::{self, SimConfig, Simulator};
+use crate::scenario::{
+    BackendKind, ComputeParallelPlanner, LoadSprayRouter, Orchestrator, Planned,
+    SweepGrid, SweepRunner,
+};
+use crate::sim::SimConfig;
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 use crate::util::stats;
@@ -269,12 +273,29 @@ pub fn fig08_coldstart_datasize() -> (Table, Table) {
 
 /// Completion ratio per (workflow size, frame deadline, framework)
 /// (Fig. 11 on Jetson, Fig. 13(a) on RPi).
+///
+/// The full grid — workflow sizes × deadlines × three frameworks — runs as
+/// one parallel [`SweepRunner`] fan-out; per-point results are
+/// deterministic regardless of worker count.
 pub fn fig11_completion(device_name: &str, frames: usize) -> Table {
     let device = device_of(device_name);
     let deadlines: &[f64] = match device {
         Device::JetsonOrinNano => &[4.75, 5.0, 5.25, 5.5],
         Device::RaspberryPi4 => &[12.0, 14.0, 16.0],
     };
+    let backends = [
+        BackendKind::OrbitChain,
+        BackendKind::DataParallel,
+        BackendKind::ComputeParallel,
+    ];
+    let sizes = [2usize, 3, 4];
+    let points = SweepGrid::new(Scenario::of(device).with_frames(frames))
+        .workflow_sizes(&sizes)
+        .deadlines(deadlines)
+        .backends(&backends)
+        .points();
+    let outcome = SweepRunner::new().run(&points);
+
     let mut t = Table::new(
         &format!(
             "Fig {}: completion ratio ({device_name})",
@@ -282,37 +303,21 @@ pub fn fig11_completion(device_name: &str, frames: usize) -> Table {
         ),
         &["workflow", "deadline_s", "orbitchain", "data_par", "compute_par"],
     );
-    for wf_size in 2..=4 {
-        let wf = workflow::flood_prefix(wf_size, 0.5);
-        let db = ProfileDb::of(device);
-        for &dl in deadlines {
-            let c = constellation_of(device, dl);
-            let cfg = SimConfig { frames, ..Default::default() };
-            let ours = sim::simulate_orbitchain(&wf, &db, &c, cfg.clone())
-                .map(|r| r.completion_ratio)
-                .unwrap_or(0.0);
-            let dp = baselines::data_parallelism(&wf, &db, &c);
-            let dp_ratio = if dp.instantiated {
-                Simulator::new(&wf, &db, &c, dp.instances, &dp.pipelines, cfg.clone())
-                    .run()
-                    .completion_ratio
-            } else {
-                0.0
-            };
-            let cp = baselines::compute_parallelism(&wf, &db, &c);
-            let cp_ratio = if cp.instantiated {
-                Simulator::new(&wf, &db, &c, cp.instances, &cp.pipelines, cfg)
-                    .run()
-                    .completion_ratio
-            } else {
-                0.0
+    // Historical row order (workflow sizes outer, deadlines inner) indexed
+    // into the grid order (deadlines outer, backends innermost).
+    for (wi, &wf_size) in sizes.iter().enumerate() {
+        for (di, &dl) in deadlines.iter().enumerate() {
+            let base = (di * sizes.len() + wi) * backends.len();
+            let ratio = |k: usize| match &outcome.reports[base + k] {
+                Ok(rep) => rep.completion_ratio,
+                Err(_) => 0.0,
             };
             t.row(vec![
                 format!("{wf_size}-func"),
                 f(dl),
-                f(ours),
-                f(dp_ratio),
-                f(cp_ratio),
+                f(ratio(0)),
+                f(ratio(1)),
+                f(ratio(2)),
             ]);
         }
     }
@@ -335,6 +340,8 @@ pub fn fig12_comm(device_name: &str) -> Table {
         &["delta", "orbitchain_B", "spray_B", "saving"],
     );
     for delta in [0.1, 0.3, 0.5, 0.7, 0.9] {
+        // Bespoke workflow (only the cloud-detection out-ratio varies), so
+        // the orchestrator is built from parts rather than a Scenario.
         let mut wf = workflow::flood_monitoring(0.5);
         wf.set_out_ratio(0, delta); // cloud-detection pass ratio
         let db = ProfileDb::of(device);
@@ -342,12 +349,13 @@ pub fn fig12_comm(device_name: &str) -> Table {
             Device::JetsonOrinNano => 5.0,
             Device::RaspberryPi4 => 14.0,
         });
-        let Ok(plan) = crate::planner::plan(&wf, &db, &c) else {
+        let orch = Orchestrator::from_parts(wf, db, c, SimConfig::default());
+        let Ok(plan) = orch.plan_deployment() else {
             t.row(vec![f(delta), "-".into(), "-".into(), "infeasible".into()]);
             continue;
         };
-        let ours = routing::route(&wf, &db, &c, &plan).expect("route");
-        let spray = routing::route_load_spraying(&wf, &db, &c, &plan);
+        let ours = orch.route(&plan).expect("route");
+        let spray = orch.route_with(&LoadSprayRouter, &plan).expect("spray route");
         let saving = if spray.isl_bytes_per_frame > 0.0 {
             1.0 - ours.isl_bytes_per_frame / spray.isl_bytes_per_frame
         } else {
@@ -384,29 +392,33 @@ pub fn fig14_analyzable(device_name: &str) -> Table {
     );
     for n_sats in 3..=8 {
         let c = Constellation::uniform(n_sats, device, deadline, n0);
-        let ours = crate::planner::plan(&wf, &db, &c)
+        let orch =
+            Orchestrator::from_parts(wf.clone(), db.clone(), c, SimConfig::default());
+        let ours = orch
+            .plan_deployment()
             .map(|p| p.max_analyzable_tiles(n0))
             .unwrap_or(0);
-        // Compute parallelism: bottleneck over its fixed placement.
-        let cp = baselines::compute_parallelism(&wf, &db, &c);
-        let cp_tiles = if cp.instantiated {
-            // Per-function capacity per frame deadline.
-            let mut per_func = vec![0.0f64; wf.len()];
-            for inst in &cp.instances {
-                let cap = match inst.dev {
-                    routing::Dev::Cpu => inst.rate_tiles_s * deadline,
-                    routing::Dev::Gpu => inst.rate_tiles_s * inst.window.len,
-                };
-                per_func[inst.func] += cap;
+        // Compute parallelism: bottleneck over its fixed placement,
+        // obtained through the same planner-backend interface.
+        let cp_tiles = match orch.plan_with(&ComputeParallelPlanner) {
+            Ok(Planned::Fixed { instances, .. }) => {
+                // Per-function capacity per frame deadline.
+                let mut per_func = vec![0.0f64; wf.len()];
+                for inst in &instances {
+                    let cap = match inst.dev {
+                        routing::Dev::Cpu => inst.rate_tiles_s * deadline,
+                        routing::Dev::Gpu => inst.rate_tiles_s * inst.window.len,
+                    };
+                    per_func[inst.func] += cap;
+                }
+                per_func
+                    .iter()
+                    .zip(&rho)
+                    .map(|(cap, r)| if *r > 0.0 { cap / r } else { f64::INFINITY })
+                    .fold(f64::INFINITY, f64::min)
+                    .floor() as usize
             }
-            per_func
-                .iter()
-                .zip(&rho)
-                .map(|(cap, r)| if *r > 0.0 { cap / r } else { f64::INFINITY })
-                .fold(f64::INFINITY, f64::min)
-                .floor() as usize
-        } else {
-            0
+            _ => 0,
         };
         let gain = if cp_tiles > 0 {
             format!("{:+.0}%", (ours as f64 / cp_tiles as f64 - 1.0) * 100.0)
@@ -426,22 +438,19 @@ pub fn fig14_analyzable(device_name: &str) -> Table {
 pub fn fig15_latency(device_name: &str, frames: usize) -> Table {
     let device = device_of(device_name);
     // Jetson: 3-function chain per §6.2(4); RPi: full workflow.
-    let wf = match device {
-        Device::JetsonOrinNano => workflow::flood_prefix(3, 0.5),
-        Device::RaspberryPi4 => workflow::flood_monitoring(0.5),
-    };
-    let db = ProfileDb::of(device);
-    let c = constellation_of(device, match device {
-        Device::JetsonOrinNano => 5.0,
-        Device::RaspberryPi4 => 14.0,
-    });
+    let base = Scenario::of(device)
+        .with_workflow_size(match device {
+            Device::JetsonOrinNano => 3,
+            Device::RaspberryPi4 => 4,
+        })
+        .with_frames(frames);
     let mut t = Table::new(
         &format!("Fig 15: ISL bandwidth vs frame latency ({device_name})"),
         &["bw_bps", "latency_s", "proc_s", "comm_s", "revisit_s"],
     );
     for bw in [5_000.0, 50_000.0, 500_000.0, 2_000_000.0] {
-        let cfg = SimConfig { frames, isl_rate_bps: Some(bw), ..Default::default() };
-        match sim::simulate_orbitchain(&wf, &db, &c, cfg) {
+        let orch = Orchestrator::new(&base.clone().with_isl_rate(bw));
+        match orch.run() {
             Ok(rep) => {
                 let (p, co, r) = rep.breakdown;
                 t.row(vec![
@@ -452,7 +461,13 @@ pub fn fig15_latency(device_name: &str, frames: usize) -> Table {
                     f(r),
                 ]);
             }
-            Err(e) => t.row(vec![format!("{bw:.0}"), format!("error: {e}"), "-".into(), "-".into(), "-".into()]),
+            Err(e) => t.row(vec![
+                format!("{bw:.0}"),
+                format!("error: {e}"),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]),
         }
     }
     t
@@ -579,27 +594,26 @@ pub fn fig20_planning() -> Table {
         let wf = workflow::random_dag(n_funcs, 0.35, &mut rng);
         let db = ProfileDb::synthetic(n_funcs, 99, Device::JetsonOrinNano);
         let c = Constellation::uniform(n_sats, Device::JetsonOrinNano, 5.0, 100);
+        let orch = Orchestrator::from_parts(wf, db, c, SimConfig::default());
         let t0 = Instant::now();
-        let planned = crate::planner::plan(&wf, &db, &c);
-        let milp_ms = t0.elapsed().as_secs_f64() * 1000.0;
-        match planned {
-            Ok(plan) => {
-                let t1 = Instant::now();
-                let _ = routing::route(&wf, &db, &c, &plan);
-                let route_us = t1.elapsed().as_secs_f64() * 1e6;
+        let prepared = orch.prepare();
+        let total_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        match prepared {
+            Ok(p) => {
+                let plan = p.plan.as_ref().expect("milp backend yields a plan");
                 t.row(vec![
                     n_sats.to_string(),
                     n_funcs.to_string(),
-                    f(milp_ms),
+                    f(p.plan_ms),
                     plan.nodes.to_string(),
-                    f(route_us),
+                    f(p.route_ms * 1e3),
                     f(plan.phi),
                 ]);
             }
             Err(e) => t.row(vec![
                 n_sats.to_string(),
                 n_funcs.to_string(),
-                f(milp_ms),
+                f(total_ms),
                 "-".into(),
                 "-".into(),
                 format!("{e}"),

@@ -28,7 +28,12 @@
 //! * [`runtime`] — PJRT artifact loading & hardware-in-the-loop inference.
 //! * [`baselines`] — data parallelism & compute parallelism frameworks.
 //! * [`telemetry`] — metric registry and reports.
-//! * [`exp`] — one driver per paper figure/table.
+//! * [`scenario`] — the orchestration layer: `Orchestrator` owns the
+//!   plan → route → simulate cycle behind pluggable planner/router
+//!   backends, and `SweepRunner` fans parameter grids across threads
+//!   deterministically.
+//! * [`exp`] — one driver per paper figure/table (all through
+//!   [`scenario::Orchestrator`]).
 //! * [`config`] — scenario configuration & §6.1 presets.
 
 pub mod baselines;
@@ -42,6 +47,7 @@ pub mod planner;
 pub mod profile;
 pub mod routing;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod telemetry;
 pub mod util;

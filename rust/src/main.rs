@@ -3,7 +3,10 @@
 //! ```text
 //! orbitchain plan       [--device jetson|rpi] [--workflow N] [--deadline S] [--sats N] [--delta D]
 //! orbitchain route      [same flags]            # Algorithm 1 + traffic summary
-//! orbitchain simulate   [same flags] [--frames N] [--isl-bps R] [--json]
+//! orbitchain simulate   [same flags] [--frames N] [--isl-bps R] [--backend B] [--json]
+//! orbitchain sweep      [same flags] [--deadlines A,B,..] [--workflows 2,3,4]
+//!                       [--sats-list 3,5,8] [--frames-list 5,10] [--isl-list R1,R2]
+//!                       [--backends orbitchain,compute-par] [--threads N] [--json]
 //! orbitchain experiment <fig3b|fig4b|fig7|fig8|fig11|fig12|fig13|fig14|fig15|fig17|fig18|tab1|fig20|all>
 //!                       [--device jetson|rpi] [--frames N] [--json]
 //! orbitchain infer      [--model cloud] [--tiles N] [--artifacts DIR]  # PJRT HIL
@@ -18,7 +21,10 @@ use std::collections::HashMap;
 use orbitchain::config::Scenario;
 use orbitchain::exp;
 use orbitchain::runtime::{ModelRuntime, TileGen};
-use orbitchain::{baselines, planner, routing, sim};
+use orbitchain::scenario::{
+    BackendKind, LoadSprayRouter, Orchestrator, ScenarioError, SweepGrid, SweepRunner,
+};
+use orbitchain::{planner, routing};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -97,6 +103,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "plan" => cmd_plan(&flags),
         "route" => cmd_route(&flags),
         "simulate" => cmd_simulate(&flags),
+        "sweep" => cmd_sweep(&flags),
         "experiment" => cmd_experiment(&pos, &flags),
         "infer" => cmd_infer(&flags),
         "version" => {
@@ -118,19 +125,25 @@ fn print_help() {
          \x20 plan        solve Program (10) deployment + resource allocation\n\
          \x20 route       run Algorithm 1 workload routing\n\
          \x20 simulate    discrete-event simulation of the planned system\n\
+         \x20 sweep       parallel scenario sweep over a parameter grid\n\
          \x20 experiment  regenerate a paper figure/table (fig3b..fig20, all)\n\
          \x20 infer       hardware-in-the-loop PJRT inference on synthetic tiles\n\
          \x20 version     print version\n\n\
          common flags: --device jetson|rpi --workflow N --deadline S --sats N\n\
-         \x20            --delta D --frames N --seed N --isl-bps R --json"
+         \x20            --delta D --frames N --seed N --isl-bps R --json\n\
+         sweep flags:  --deadlines A,B,.. --workflows 2,3,4 --sats-list 3,5,8\n\
+         \x20            --frames-list 5,10 --isl-list R1,R2\n\
+         \x20            --backends orbitchain,load-spraying,data-par,compute-par\n\
+         \x20            --threads N"
     );
 }
 
 fn cmd_plan(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let s = scenario_from_flags(flags)?;
-    let (wf, db, c) = s.build();
+    let orch = Orchestrator::new(&s);
+    let (wf, db, c) = (orch.workflow(), orch.profiles(), orch.constellation());
     let t0 = std::time::Instant::now();
-    let plan = planner::plan(&wf, &db, &c)?;
+    let plan = orch.plan_deployment()?;
     let dt = t0.elapsed();
     println!(
         "plan: phi={:.3} feasible={} nodes={} proven={} ({:.1} ms)",
@@ -159,7 +172,7 @@ fn cmd_plan(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             p.gpu_slice_s
         );
     }
-    let violations = planner::verify_plan(&plan, &wf, &db, &c);
+    let violations = planner::verify_plan(&plan, wf, db, c);
     if violations.is_empty() {
         println!("verification: all constraints satisfied");
     } else {
@@ -170,9 +183,10 @@ fn cmd_plan(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 
 fn cmd_route(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let s = scenario_from_flags(flags)?;
-    let (wf, db, c) = s.build();
-    let plan = planner::plan(&wf, &db, &c)?;
-    let r = routing::route(&wf, &db, &c, &plan)?;
+    let orch = Orchestrator::new(&s);
+    let wf = orch.workflow();
+    let plan = orch.plan_deployment()?;
+    let r = orch.route(&plan)?;
     println!(
         "routing: {} pipelines, {:.1} tiles routed, {:.1} unrouted, {:.0} ISL B/frame",
         r.pipelines.len(),
@@ -203,7 +217,7 @@ fn cmd_route(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             path.join(" -> ")
         );
     }
-    let spray = routing::route_load_spraying(&wf, &db, &c, &plan);
+    let spray = orch.route_with(&LoadSprayRouter, &plan)?;
     println!(
         "load-spraying comparison: {:.0} B/frame ({:.0}% saved by OrbitChain)",
         spray.isl_bytes_per_frame,
@@ -214,15 +228,21 @@ fn cmd_route(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 
 fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let s = scenario_from_flags(flags)?;
-    let (wf, db, c) = s.build();
-    let rep = sim::simulate_orbitchain(&wf, &db, &c, s.sim_config())?;
+    let orch = Orchestrator::new(&s);
+    let primary = match flags.get("backend") {
+        Some(name) => BackendKind::from_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown --backend {name:?}"))?,
+        None => BackendKind::OrbitChain,
+    };
+    let rep = orch.run_backend(primary)?;
     if flags.contains_key("json") {
-        println!("{}", rep.metrics.to_json().to_string_pretty());
+        println!("{}", rep.to_json().to_string_pretty());
         return Ok(());
     }
     println!(
-        "completion={:.3} isl_bytes/frame={:.0} frame_latency={:.2}s \
+        "{}: completion={:.3} isl_bytes/frame={:.0} frame_latency={:.2}s \
          (proc {:.2} / comm {:.2} / revisit {:.2})",
+        rep.backend,
         rep.completion_ratio,
         rep.isl_bytes_per_frame,
         rep.frame_latency_s,
@@ -230,25 +250,154 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         rep.breakdown.1,
         rep.breakdown.2
     );
-    // Baselines for context.
-    let dp = baselines::data_parallelism(&wf, &db, &c);
-    let cp = baselines::compute_parallelism(&wf, &db, &c);
-    for (name, dep) in [("data-parallelism", dp), ("compute-parallelism", cp)] {
-        if dep.instantiated {
-            let r = sim::Simulator::new(
-                &wf,
-                &db,
-                &c,
-                dep.instances,
-                &dep.pipelines,
-                s.sim_config(),
-            )
-            .run();
-            println!("{name}: completion={:.3}", r.completion_ratio);
-        } else {
-            println!("{name}: cannot instantiate ({})", dep.notes.join("; "));
+    for note in &rep.notes {
+        println!("note: {note}");
+    }
+    // The other frameworks for context, through the same backend traits.
+    for kind in [BackendKind::DataParallel, BackendKind::ComputeParallel] {
+        if kind == primary {
+            continue;
+        }
+        match orch.run_backend(kind) {
+            Ok(r) => println!("{}: completion={:.3}", kind.name(), r.completion_ratio),
+            Err(ScenarioError::NotInstantiated { notes, .. }) => {
+                println!("{}: cannot instantiate ({})", kind.name(), notes.join("; "))
+            }
+            Err(e) => println!("{}: error: {e}", kind.name()),
         }
     }
+    Ok(())
+}
+
+/// Parallel scenario sweep: expand the flag-derived grid, fan it across
+/// worker threads, print one row per point.
+fn cmd_sweep(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    fn parse_list<T: std::str::FromStr>(raw: &str) -> anyhow::Result<Vec<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        raw.split(',')
+            .filter(|p| !p.is_empty())
+            .map(|p| {
+                p.trim()
+                    .parse::<T>()
+                    .map_err(|e| anyhow::anyhow!("bad list entry {p:?}: {e}"))
+            })
+            .collect()
+    }
+
+    let s = scenario_from_flags(flags)?;
+    let mut grid = SweepGrid::new(s);
+    if let Some(raw) = flags.get("deadlines") {
+        grid = grid.deadlines(&parse_list::<f64>(raw)?);
+    }
+    if let Some(raw) = flags.get("workflows") {
+        let sizes = parse_list::<usize>(raw)?;
+        if let Some(bad) = sizes.iter().find(|n| !(1..=4).contains(*n)) {
+            anyhow::bail!("--workflows entry {bad} out of range (1..=4)");
+        }
+        grid = grid.workflow_sizes(&sizes);
+    }
+    if let Some(raw) = flags.get("sats-list") {
+        let sats = parse_list::<usize>(raw)?;
+        if sats.contains(&0) {
+            anyhow::bail!("--sats-list entries must be >= 1");
+        }
+        grid = grid.constellation_sizes(&sats);
+    }
+    if let Some(raw) = flags.get("frames-list") {
+        grid = grid.frames(&parse_list::<usize>(raw)?);
+    }
+    if let Some(raw) = flags.get("isl-list") {
+        grid = grid.isl_rates(&parse_list::<f64>(raw)?);
+    }
+    if let Some(raw) = flags.get("backends") {
+        let kinds: Vec<BackendKind> = raw
+            .split(',')
+            .filter(|p| !p.is_empty())
+            .map(|p| {
+                BackendKind::from_name(p.trim())
+                    .ok_or_else(|| anyhow::anyhow!("unknown backend {p:?}"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        grid = grid.backends(&kinds);
+    }
+    let points = grid.points();
+    if points.is_empty() {
+        anyhow::bail!("empty sweep grid");
+    }
+
+    let mut runner = SweepRunner::new();
+    if let Some(raw) = flags.get("threads") {
+        runner = runner.with_threads(raw.parse()?);
+    }
+    let t0 = std::time::Instant::now();
+    let outcome = runner.run(&points);
+    let wall = t0.elapsed().as_secs_f64();
+
+    if flags.contains_key("json") {
+        let arr: Vec<orbitchain::util::json::Json> = outcome
+            .reports
+            .iter()
+            .map(|r| match r {
+                Ok(rep) => rep.to_json(),
+                Err(e) => orbitchain::util::json::obj(vec![(
+                    "error",
+                    orbitchain::util::json::Json::from(e.to_string()),
+                )]),
+            })
+            .collect();
+        println!(
+            "{}",
+            orbitchain::util::json::Json::Arr(arr).to_string_pretty()
+        );
+        return Ok(());
+    }
+    println!(
+        "{:<14} {:>3} {:>8} {:>3} {:>7} {:>11} {:>11} {:>10}",
+        "backend", "wf", "deadline", "sat", "frames", "completion", "isl_B/frame", "latency_s"
+    );
+    for (point, rep) in points.iter().zip(&outcome.reports) {
+        let sc = &point.scenario;
+        match rep {
+            Ok(r) => println!(
+                "{:<14} {:>3} {:>8.2} {:>3} {:>7} {:>11.3} {:>11.0} {:>10.2}",
+                point.backend.name(),
+                sc.workflow_size,
+                sc.frame_deadline_s,
+                sc.n_sats,
+                sc.frames,
+                r.completion_ratio,
+                r.isl_bytes_per_frame,
+                r.frame_latency_s
+            ),
+            Err(e) => println!(
+                "{:<14} {:>3} {:>8.2} {:>3} {:>7} error: {e}",
+                point.backend.name(),
+                sc.workflow_size,
+                sc.frame_deadline_s,
+                sc.n_sats,
+                sc.frames
+            ),
+        }
+    }
+    let mut notes: Vec<&str> = outcome
+        .reports
+        .iter()
+        .filter_map(|r| r.as_ref().ok())
+        .flat_map(|r| r.notes.iter().map(String::as_str))
+        .collect();
+    notes.sort_unstable();
+    notes.dedup();
+    for note in notes {
+        println!("note: {note}");
+    }
+    println!(
+        "{} points on {} threads in {wall:.2}s ({:.2} points/s)",
+        points.len(),
+        runner.threads(),
+        points.len() as f64 / wall.max(1e-9)
+    );
     Ok(())
 }
 

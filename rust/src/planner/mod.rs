@@ -112,18 +112,44 @@ impl DeploymentPlan {
 }
 
 /// Planner failure modes.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum PlanError {
-    #[error("workflow invalid: {0}")]
-    Workflow(#[from] crate::workflow::WorkflowError),
-    #[error("constellation invalid: {0}")]
-    Constellation(#[from] crate::constellation::ConstellationError),
-    #[error("MILP infeasible (no deployment satisfies resource constraints)")]
+    Workflow(crate::workflow::WorkflowError),
+    Constellation(crate::constellation::ConstellationError),
     Infeasible,
-    #[error("MILP unbounded — formulation bug")]
     Unbounded,
-    #[error("function {0:?} missing from the profile database")]
     MissingProfile(String),
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::Workflow(e) => write!(f, "workflow invalid: {e}"),
+            PlanError::Constellation(e) => write!(f, "constellation invalid: {e}"),
+            PlanError::Infeasible => write!(
+                f,
+                "MILP infeasible (no deployment satisfies resource constraints)"
+            ),
+            PlanError::Unbounded => write!(f, "MILP unbounded — formulation bug"),
+            PlanError::MissingProfile(n) => {
+                write!(f, "function {n:?} missing from the profile database")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+impl From<crate::workflow::WorkflowError> for PlanError {
+    fn from(e: crate::workflow::WorkflowError) -> Self {
+        PlanError::Workflow(e)
+    }
+}
+
+impl From<crate::constellation::ConstellationError> for PlanError {
+    fn from(e: crate::constellation::ConstellationError) -> Self {
+        PlanError::Constellation(e)
+    }
 }
 
 /// Variable index bookkeeping for one Program (10) instance.

@@ -86,14 +86,31 @@ pub struct Routing {
     pub unrouted_tiles: f64,
     /// Total ISL traffic per frame, bytes.
     pub isl_bytes_per_frame: f64,
+    /// Why capture groups (if any) could not be fully routed, in group
+    /// processing order.  Empty ⇔ `unrouted_tiles == 0`.
+    pub failures: Vec<RouteError>,
 }
 
 /// Routing failure.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum RouteError {
-    #[error("no instance of function {func} reachable for capture group {group}")]
+    /// No instance of `func` with remaining capacity is reachable on the
+    /// satellites of capture group `group`.
     NoInstance { func: usize, group: usize },
 }
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::NoInstance { func, group } => write!(
+                f,
+                "no instance of function {func} reachable for capture group {group}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
 
 /// Remaining capacity ledger for all instances.
 struct Ledger {
@@ -147,6 +164,7 @@ pub fn route(
     let mut pipelines = Vec::new();
     let mut routed = 0.0;
     let mut unrouted = 0.0;
+    let mut failures = Vec::new();
 
     // Groups in increasing subset size (§5.4: scarce tiles first).
     let mut group_order: Vec<usize> = (0..constellation.capture_groups.len()).collect();
@@ -157,16 +175,13 @@ pub fn route(
         let mut remaining = group.tiles as f64;
         while remaining > EPS {
             match build_pipeline(wf, &ledger, constellation, gi, &rho) {
-                None => {
+                Err(e) => {
                     unrouted += remaining;
+                    failures.push(e);
                     break;
                 }
-                Some((stages, sigma_cap)) => {
+                Ok((stages, sigma_cap)) => {
                     let sigma = sigma_cap.min(remaining);
-                    if sigma <= EPS {
-                        unrouted += remaining;
-                        break;
-                    }
                     for st in &stages {
                         ledger.take(st.func, st.sat, st.dev, sigma * rho[st.func]);
                     }
@@ -237,7 +252,25 @@ pub fn route(
         routed_tiles: routed,
         unrouted_tiles: unrouted,
         isl_bytes_per_frame: isl,
+        failures,
     })
+}
+
+/// [`route`], but unroutable workload is a hard error instead of an
+/// `unrouted_tiles` tally — the same policy
+/// [`crate::scenario::Orchestrator`] applies in strict mode, as a
+/// convenience for callers driving the router directly.
+pub fn route_strict(
+    wf: &Workflow,
+    profiles: &ProfileDb,
+    constellation: &Constellation,
+    plan: &DeploymentPlan,
+) -> Result<Routing, RouteError> {
+    let r = route(wf, profiles, constellation, plan)?;
+    if let Some(e) = r.failures.first() {
+        return Err(e.clone());
+    }
+    Ok(r)
 }
 
 /// Hop-weighted traffic cost contributed by function `func` within a
@@ -372,24 +405,25 @@ fn improve_pass(
 
 /// BFS for the next available pipeline within capture group `gi`
 /// (Algorithm 1 lines 3–15).  Returns the stages and the pipeline capacity
-/// `σ = min_i n_i / ρ_i` (Eq. (12)), or `None` when some function has no
-/// remaining instance on the group's satellites.
+/// `σ = min_i n_i / ρ_i` (Eq. (12)), or the function that has no remaining
+/// instance (or no remaining capacity) on the group's satellites.
 fn build_pipeline(
     wf: &Workflow,
     ledger: &Ledger,
     constellation: &Constellation,
     gi: usize,
     rho: &[f64],
-) -> Option<(Vec<Stage>, f64)> {
+) -> Result<(Vec<Stage>, f64), RouteError> {
     let group = &constellation.capture_groups[gi];
     let n = wf.len();
     let mut chosen: Vec<Option<Stage>> = vec![None; n];
     let mut queue: std::collections::VecDeque<usize> = std::collections::VecDeque::new();
+    let missing = |func: usize| RouteError::NoInstance { func, group: gi };
 
     // Dummy instance ν₀: connect each in-degree-0 function to its instance
     // on the *first* satellite (in movement order) with remaining capacity.
     for src in wf.sources() {
-        let st = nearest_instance(ledger, group, src, None)?;
+        let st = nearest_instance(ledger, group, src, None).ok_or_else(|| missing(src))?;
         chosen[src] = Some(st);
         queue.push_back(src);
     }
@@ -400,28 +434,28 @@ fn build_pipeline(
             if chosen[v].is_some() {
                 continue; // exactly one instance per function (lines 7–8)
             }
-            let st = nearest_instance(ledger, group, v, Some(from_sat))?;
+            let st = nearest_instance(ledger, group, v, Some(from_sat))
+                .ok_or_else(|| missing(v))?;
             chosen[v] = Some(st);
             queue.push_back(v);
         }
     }
 
     let stages: Vec<Stage> = chosen.into_iter().map(|s| s.unwrap()).collect();
-    let sigma = stages
-        .iter()
-        .map(|st| {
-            let cap = ledger.get(st.func, st.sat, st.dev);
-            if rho[st.func] > 0.0 {
-                cap / rho[st.func]
-            } else {
-                f64::INFINITY
-            }
-        })
-        .fold(f64::INFINITY, f64::min);
+    let mut sigma = f64::INFINITY;
+    let mut bottleneck = stages[0].func;
+    for st in &stages {
+        let cap = ledger.get(st.func, st.sat, st.dev);
+        let s = if rho[st.func] > 0.0 { cap / rho[st.func] } else { f64::INFINITY };
+        if s < sigma {
+            sigma = s;
+            bottleneck = st.func;
+        }
+    }
     if sigma <= EPS || !sigma.is_finite() {
-        None
+        Err(missing(bottleneck))
     } else {
-        Some((stages, sigma))
+        Ok((stages, sigma))
     }
 }
 
@@ -480,6 +514,7 @@ pub fn route_load_spraying(
     let mut isl_bytes = 0.0;
     let mut routed = 0.0;
     let mut unrouted = 0.0;
+    let mut failures = Vec::new();
     let mut remaining: Vec<Vec<f64>> = (0..wf.len())
         .map(|i| {
             (0..ns)
@@ -498,15 +533,15 @@ pub fn route_load_spraying(
         let tiles = group.tiles as f64;
         // Fraction of function i's work on satellite j (within the group).
         let mut frac = vec![vec![0.0; ns]; wf.len()];
-        let mut ok = true;
+        let mut failed: Option<usize> = None;
         for i in 0..wf.len() {
             let caps: Vec<f64> = (0..ns)
                 .map(|j| if group.contains(j) { remaining[i][j] } else { 0.0 })
                 .collect();
             let total: f64 = caps.iter().sum();
             if total <= EPS {
-                if rho[i] > 0.0 {
-                    ok = false;
+                if rho[i] > 0.0 && failed.is_none() {
+                    failed = Some(i);
                 }
                 continue;
             }
@@ -516,8 +551,9 @@ pub fn route_load_spraying(
                 remaining[i][j] = remaining[i][j].max(0.0);
             }
         }
-        if !ok {
+        if let Some(func) = failed {
             unrouted += tiles;
+            failures.push(RouteError::NoInstance { func, group: gi });
             continue;
         }
         routed += tiles;
@@ -542,6 +578,7 @@ pub fn route_load_spraying(
         routed_tiles: routed,
         unrouted_tiles: unrouted,
         isl_bytes_per_frame: isl_bytes,
+        failures,
     }
 }
 
@@ -696,7 +733,35 @@ mod tests {
         let r = route(&wf, &db, &c, &empty).unwrap();
         assert_eq!(r.routed_tiles, 0.0);
         assert!((r.unrouted_tiles - c.tiles_per_frame as f64).abs() < 1e-9);
+        assert!(!r.failures.is_empty(), "failure causes must be recorded");
         let spray = route_load_spraying(&wf, &db, &c, &empty);
         assert_eq!(spray.routed_tiles, 0.0);
+        assert!(!spray.failures.is_empty());
+    }
+
+    #[test]
+    fn route_error_no_instance_reachable_via_strict_mode() {
+        // Every RouteError variant must be constructible from the public
+        // API: an undeployed plan makes NoInstance fire in strict mode.
+        let (wf, db, c, plan) = setup();
+        let mut empty = plan.clone();
+        for p in &mut empty.placements {
+            p.deployed = false;
+            p.cpu_speed = 0.0;
+            p.gpu = false;
+            p.gpu_speed = 0.0;
+        }
+        let err = route_strict(&wf, &db, &c, &empty).unwrap_err();
+        let RouteError::NoInstance { func, group } = err;
+        assert!(func < wf.len());
+        assert!(group < c.capture_groups.len());
+    }
+
+    #[test]
+    fn route_strict_accepts_feasible_plan() {
+        let (wf, db, c, plan) = setup();
+        let r = route_strict(&wf, &db, &c, &plan).expect("feasible plan routes");
+        assert!(r.unrouted_tiles < 1e-6);
+        assert!(r.failures.is_empty());
     }
 }

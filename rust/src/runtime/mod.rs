@@ -7,7 +7,12 @@
 //!
 //! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax ≥ 0.5's
 //! 64-bit-id serialized protos); modules are lowered with
-//! `return_tuple=True`, so results unwrap with [`xla::Literal::to_tuple`].
+//! `return_tuple=True`, so results unwrap with `xla::Literal::to_tuple`.
+//!
+//! The PJRT path needs the `xla` bindings, which are not in the offline
+//! vendor set; it is gated behind the `xla` cargo feature.  Without the
+//! feature the manifest still parses (so artifact errors keep their hints)
+//! but loading reports that hardware-in-the-loop execution is unavailable.
 //!
 //! The module also provides [`TileGen`], a seeded synthetic Earth-
 //! observation tile generator (procedural cloud/water/farm textures) used
@@ -41,6 +46,7 @@ pub struct LoadedModel {
     /// `[batch, tile, tile, channels]`.
     pub input_shape: Vec<usize>,
     pub outputs: Vec<OutputSpec>,
+    #[cfg(feature = "xla")]
     exe: xla::PjRtLoadedExecutable,
 }
 
@@ -48,6 +54,7 @@ impl LoadedModel {
     /// Run inference on a full input batch (`input.len()` must equal the
     /// product of `input_shape`).  Returns one flat `Vec<f32>` per model
     /// output.
+    #[cfg(feature = "xla")]
     pub fn infer(&self, input: &[f32]) -> crate::Result<Vec<Vec<f32>>> {
         let want: usize = self.input_shape.iter().product();
         if input.len() != want {
@@ -75,6 +82,17 @@ impl LoadedModel {
             .into_iter()
             .map(|p| p.to_vec::<f32>().map_err(Into::into))
             .collect()
+    }
+
+    /// Stub without the `xla` feature: loading already fails, but keep the
+    /// signature so downstream code type-checks identically.
+    #[cfg(not(feature = "xla"))]
+    pub fn infer(&self, _input: &[f32]) -> crate::Result<Vec<Vec<f32>>> {
+        bail!(
+            "{}_b{}: built without the `xla` feature — PJRT inference unavailable",
+            self.name,
+            self.batch
+        )
     }
 
     /// Timed inference for profiling; returns outputs and wallclock seconds.
@@ -113,6 +131,7 @@ impl ModelRuntime {
             )
         })?;
         let manifest = Json::parse(&text).context("parsing manifest.json")?;
+        #[cfg(feature = "xla")]
         let client = xla::PjRtClient::cpu()?;
         let tile = manifest
             .get("tile")
@@ -167,21 +186,39 @@ impl ModelRuntime {
                     .unwrap_or_default();
 
                 let path = dir.join(file);
-                let proto = xla::HloModuleProto::from_text_file(
-                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-                )?;
-                let comp = xla::XlaComputation::from_proto(&proto);
-                let exe = client.compile(&comp)?;
-                models.insert(
-                    (name.clone(), batch),
-                    LoadedModel {
-                        name: name.clone(),
-                        batch,
+                #[cfg(feature = "xla")]
+                {
+                    let proto = xla::HloModuleProto::from_text_file(
+                        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                    )?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = client.compile(&comp)?;
+                    models.insert(
+                        (name.clone(), batch),
+                        LoadedModel {
+                            name: name.clone(),
+                            batch,
+                            input_shape,
+                            outputs,
+                            exe,
+                        },
+                    );
+                }
+                #[cfg(not(feature = "xla"))]
+                {
+                    if !path.exists() {
+                        bail!("artifact {} missing", path.display());
+                    }
+                    bail!(
+                        "artifact {name}_b{batch} (shape {:?}, {} outputs) present at \
+                         {} but orbitchain was built without the `xla` feature — \
+                         PJRT hardware-in-the-loop execution unavailable (rebuild \
+                         with --features xla and a local xla_extension checkout)",
                         input_shape,
-                        outputs,
-                        exe,
-                    },
-                );
+                        outputs.len(),
+                        dir.display()
+                    );
+                }
             }
         }
         if models.is_empty() {

@@ -1,0 +1,252 @@
+//! Pluggable planner / router backends for the scenario orchestrator.
+//!
+//! The paper evaluates four deployment strategies — OrbitChain's MILP
+//! (Program (10)) followed by Algorithm 1 routing, the load-spraying
+//! router, and the data-/compute-parallelism baseline frameworks — and the
+//! pre-refactor code drove each through bespoke glue in every experiment.
+//! Here they sit behind two small traits:
+//!
+//! * [`PlannerBackend`] decides *where function instances live*.  It either
+//!   yields a [`DeploymentPlan`] (the MILP path, which still needs a
+//!   router) or a fixed `(instances, pipelines)` deployment (the baseline
+//!   frameworks, which embed their own workload assignment).
+//! * [`RouterBackend`] turns a `DeploymentPlan` into pipelines + workloads.
+//!
+//! [`BackendKind`] names the four canonical combinations so sweeps and the
+//! CLI can select them by value.
+
+use crate::baselines;
+use crate::constellation::Constellation;
+use crate::planner::{self, DeploymentPlan};
+use crate::profile::ProfileDb;
+use crate::routing::{self, Pipeline, Routing};
+use crate::sim::InstanceSpec;
+use crate::workflow::Workflow;
+
+use super::ScenarioError;
+
+/// Borrowed view of one scenario's inputs, handed to every backend call.
+pub struct Ctx<'a> {
+    pub wf: &'a Workflow,
+    pub db: &'a ProfileDb,
+    pub c: &'a Constellation,
+}
+
+/// What a planner backend produced.
+#[derive(Debug, Clone)]
+pub enum Planned {
+    /// A Program (10) deployment plan — pair with a [`RouterBackend`].
+    Deployment(DeploymentPlan),
+    /// A framework that fixes instances *and* workload assignment itself
+    /// (the §3.2 baselines).
+    Fixed {
+        instances: Vec<InstanceSpec>,
+        pipelines: Vec<Pipeline>,
+        notes: Vec<String>,
+    },
+}
+
+/// Decides where analytics-function instances are deployed.
+pub trait PlannerBackend: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn plan(&self, ctx: &Ctx<'_>) -> Result<Planned, ScenarioError>;
+}
+
+/// Assigns workload pipelines over a MILP deployment plan.
+pub trait RouterBackend: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn route(&self, ctx: &Ctx<'_>, plan: &DeploymentPlan) -> Result<Routing, ScenarioError>;
+}
+
+/// Program (10) deployment + resource allocation (§5.2).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MilpPlanner;
+
+impl PlannerBackend for MilpPlanner {
+    fn name(&self) -> &'static str {
+        "milp"
+    }
+
+    fn plan(&self, ctx: &Ctx<'_>) -> Result<Planned, ScenarioError> {
+        planner::plan(ctx.wf, ctx.db, ctx.c)
+            .map(Planned::Deployment)
+            .map_err(ScenarioError::Plan)
+    }
+}
+
+/// Data parallelism (Denby & Lucia): every satellite hosts every function.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DataParallelPlanner;
+
+impl PlannerBackend for DataParallelPlanner {
+    fn name(&self) -> &'static str {
+        "data-parallelism"
+    }
+
+    fn plan(&self, ctx: &Ctx<'_>) -> Result<Planned, ScenarioError> {
+        let dep = baselines::data_parallelism(ctx.wf, ctx.db, ctx.c);
+        if !dep.instantiated {
+            return Err(ScenarioError::NotInstantiated {
+                backend: self.name(),
+                notes: dep.notes,
+            });
+        }
+        Ok(Planned::Fixed {
+            instances: dep.instances,
+            pipelines: dep.pipelines,
+            notes: dep.notes,
+        })
+    }
+}
+
+/// Compute parallelism: one pipeline, functions spread by load balancing.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ComputeParallelPlanner;
+
+impl PlannerBackend for ComputeParallelPlanner {
+    fn name(&self) -> &'static str {
+        "compute-parallelism"
+    }
+
+    fn plan(&self, ctx: &Ctx<'_>) -> Result<Planned, ScenarioError> {
+        let dep = baselines::compute_parallelism(ctx.wf, ctx.db, ctx.c);
+        if !dep.instantiated {
+            return Err(ScenarioError::NotInstantiated {
+                backend: self.name(),
+                notes: dep.notes,
+            });
+        }
+        Ok(Planned::Fixed {
+            instances: dep.instances,
+            pipelines: dep.pipelines,
+            notes: dep.notes,
+        })
+    }
+}
+
+/// Algorithm 1 hop-minimizing routing with the §5.4 shift extension.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OrbitChainRouter;
+
+impl RouterBackend for OrbitChainRouter {
+    fn name(&self) -> &'static str {
+        "orbitchain"
+    }
+
+    fn route(&self, ctx: &Ctx<'_>, plan: &DeploymentPlan) -> Result<Routing, ScenarioError> {
+        routing::route(ctx.wf, ctx.db, ctx.c, plan).map_err(ScenarioError::Route)
+    }
+}
+
+/// Load-spraying comparison router: capacity-proportional splitting with no
+/// locality preference.  Produces aggregate flows only (no per-tile
+/// pipelines), so it is meaningful for traffic studies, not simulation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LoadSprayRouter;
+
+impl RouterBackend for LoadSprayRouter {
+    fn name(&self) -> &'static str {
+        "load-spraying"
+    }
+
+    fn route(&self, ctx: &Ctx<'_>, plan: &DeploymentPlan) -> Result<Routing, ScenarioError> {
+        Ok(routing::route_load_spraying(ctx.wf, ctx.db, ctx.c, plan))
+    }
+}
+
+/// The four canonical backend combinations, selectable by value (sweeps,
+/// CLI flags, grids).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// MILP planner + Algorithm 1 router (the OrbitChain path).
+    OrbitChain,
+    /// MILP planner + load-spraying router (traffic baseline).
+    LoadSpray,
+    /// Data-parallelism framework (fixed deployment).
+    DataParallel,
+    /// Compute-parallelism framework (fixed deployment).
+    ComputeParallel,
+}
+
+impl BackendKind {
+    pub const ALL: [BackendKind; 4] = [
+        BackendKind::OrbitChain,
+        BackendKind::LoadSpray,
+        BackendKind::DataParallel,
+        BackendKind::ComputeParallel,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::OrbitChain => "orbitchain",
+            BackendKind::LoadSpray => "load-spraying",
+            BackendKind::DataParallel => "data-parallelism",
+            BackendKind::ComputeParallel => "compute-parallelism",
+        }
+    }
+
+    /// Parse a CLI/JSON spelling.
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "orbitchain" | "ours" | "milp" => Some(BackendKind::OrbitChain),
+            "load-spraying" | "load_spraying" | "spray" => Some(BackendKind::LoadSpray),
+            "data-parallelism" | "data-par" | "data_parallelism" => {
+                Some(BackendKind::DataParallel)
+            }
+            "compute-parallelism" | "compute-par" | "compute_parallelism" => {
+                Some(BackendKind::ComputeParallel)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn planner(self) -> Box<dyn PlannerBackend> {
+        match self {
+            BackendKind::OrbitChain | BackendKind::LoadSpray => Box::new(MilpPlanner),
+            BackendKind::DataParallel => Box::new(DataParallelPlanner),
+            BackendKind::ComputeParallel => Box::new(ComputeParallelPlanner),
+        }
+    }
+
+    pub fn router(self) -> Box<dyn RouterBackend> {
+        match self {
+            BackendKind::LoadSpray => Box::new(LoadSprayRouter),
+            _ => Box::new(OrbitChainRouter),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_names_round_trip() {
+        for kind in BackendKind::ALL {
+            assert_eq!(BackendKind::from_name(kind.name()), Some(kind));
+        }
+        assert_eq!(BackendKind::from_name("nope"), None);
+        assert_eq!(BackendKind::from_name("spray"), Some(BackendKind::LoadSpray));
+    }
+
+    #[test]
+    fn kind_maps_to_expected_backend_objects() {
+        assert_eq!(BackendKind::OrbitChain.planner().name(), "milp");
+        assert_eq!(BackendKind::OrbitChain.router().name(), "orbitchain");
+        assert_eq!(BackendKind::LoadSpray.router().name(), "load-spraying");
+        assert_eq!(
+            BackendKind::DataParallel.planner().name(),
+            "data-parallelism"
+        );
+        assert_eq!(
+            BackendKind::ComputeParallel.planner().name(),
+            "compute-parallelism"
+        );
+    }
+}

@@ -1,0 +1,575 @@
+//! Scenario orchestration — the single entry point for the plan → route →
+//! simulate cycle (§5's orchestration loop as a reusable subsystem).
+//!
+//! Before this layer existed, every `exp::figXX` driver, example and bench
+//! hand-assembled the same glue: build `(workflow, profiles,
+//! constellation)`, call `planner::plan`, feed the plan to a router, derive
+//! `InstanceSpec`s, construct a `Simulator`, aggregate metrics.  The
+//! [`Orchestrator`] owns that cycle end to end:
+//!
+//! * inputs come from a [`config::Scenario`](crate::config::Scenario) (or
+//!   raw parts for bespoke workflows such as tip-and-cue);
+//! * the planning and routing strategies are pluggable
+//!   [`PlannerBackend`]/[`RouterBackend`] trait objects — the MILP +
+//!   Algorithm 1 OrbitChain path, load spraying and the §3.2 baseline
+//!   frameworks all run behind the same interface;
+//! * the result is a single structured [`ScenarioReport`] with plan,
+//!   routing, simulation and timing summaries plus the raw
+//!   [`Metrics`](crate::telemetry::Metrics) registry.
+//!
+//! On top of it, [`sweep::SweepRunner`] fans a parameter grid across
+//! threads with deterministic per-point seeding, so large scenario sweeps
+//! (Fig. 11-style grids, capacity studies) scale with cores while staying
+//! bit-identical to a sequential run.
+
+pub mod backend;
+pub mod sweep;
+
+use std::time::Instant;
+
+use crate::config::Scenario;
+use crate::constellation::Constellation;
+use crate::planner::{DeploymentPlan, PlanError};
+use crate::profile::ProfileDb;
+use crate::routing::{Pipeline, RouteError, Routing};
+use crate::sim::{self, InstanceSpec, SimConfig, SimReport, Simulator};
+use crate::telemetry::Metrics;
+use crate::util::json::{obj, Json};
+use crate::workflow::Workflow;
+
+pub use backend::{
+    BackendKind, ComputeParallelPlanner, Ctx, DataParallelPlanner, LoadSprayRouter,
+    MilpPlanner, OrbitChainRouter, Planned, PlannerBackend, RouterBackend,
+};
+pub use sweep::{SweepGrid, SweepOutcome, SweepPoint, SweepRunner};
+
+/// Orchestration failure modes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScenarioError {
+    /// The planner backend failed (MILP infeasible, bad inputs, …).
+    Plan(PlanError),
+    /// The router backend failed (strict mode: unroutable workload).
+    Route(RouteError),
+    /// Strict mode rejected a plan with `φ < 1` (Program (10) violated).
+    Infeasible { phi: f64 },
+    /// A baseline framework could not instantiate (e.g. OOM).
+    NotInstantiated {
+        backend: &'static str,
+        notes: Vec<String>,
+    },
+    /// A MILP-only operation was requested from a fixed-deployment backend.
+    NoDeployment { backend: &'static str },
+}
+
+impl std::fmt::Display for ScenarioError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            // Plan/Route delegate so error rows keep their historical text.
+            ScenarioError::Plan(e) => write!(f, "{e}"),
+            ScenarioError::Route(e) => write!(f, "{e}"),
+            ScenarioError::Infeasible { phi } => {
+                write!(f, "deployment plan infeasible (phi = {phi:.3} < 1)")
+            }
+            ScenarioError::NotInstantiated { backend, notes } => {
+                write!(f, "{backend} cannot instantiate: {}", notes.join("; "))
+            }
+            ScenarioError::NoDeployment { backend } => {
+                write!(f, "backend {backend} does not produce a MILP deployment plan")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ScenarioError {}
+
+impl From<PlanError> for ScenarioError {
+    fn from(e: PlanError) -> Self {
+        ScenarioError::Plan(e)
+    }
+}
+
+impl From<RouteError> for ScenarioError {
+    fn from(e: RouteError) -> Self {
+        ScenarioError::Route(e)
+    }
+}
+
+/// Output of the plan + route stages, ready to simulate (repeatedly).
+#[derive(Debug, Clone)]
+pub struct Prepared {
+    /// `"<planner>+<router>"` or the fixed framework's name.
+    pub backend: String,
+    /// The MILP plan, when the planner produced one.
+    pub plan: Option<DeploymentPlan>,
+    /// The routing summary, when a router ran.
+    pub routing: Option<Routing>,
+    pub instances: Vec<InstanceSpec>,
+    pub pipelines: Vec<Pipeline>,
+    pub notes: Vec<String>,
+    pub plan_ms: f64,
+    pub route_ms: f64,
+}
+
+impl Prepared {
+    /// Source tiles per frame carried by the prepared pipelines.
+    pub fn routed_tiles(&self) -> f64 {
+        match &self.routing {
+            Some(r) => r.routed_tiles,
+            None => self.pipelines.iter().map(|p| p.workload).sum(),
+        }
+    }
+}
+
+/// Structured result of one orchestrated scenario run.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub label: String,
+    pub backend: String,
+    /// Bottleneck capacity ratio φ (MILP path only).
+    pub phi: Option<f64>,
+    /// `φ ≥ 1` (MILP path only).
+    pub feasible: Option<bool>,
+    pub n_pipelines: usize,
+    pub routed_tiles: f64,
+    pub unrouted_tiles: f64,
+    /// ISL bytes per frame predicted by routing (analytic).
+    pub routed_isl_bytes_per_frame: f64,
+    /// §6.1 metric (1): analyzed / received, averaged over functions.
+    pub completion_ratio: f64,
+    /// ISL bytes per frame observed by the simulator.
+    pub isl_bytes_per_frame: f64,
+    /// §6.1 metric (4): worst per-tile end-to-end latency.
+    pub frame_latency_s: f64,
+    /// Worst tile's (processing, communication, revisit) split.
+    pub breakdown: (f64, f64, f64),
+    pub plan_ms: f64,
+    pub route_ms: f64,
+    pub sim_ms: f64,
+    pub notes: Vec<String>,
+    pub metrics: Metrics,
+}
+
+impl ScenarioReport {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("label", Json::from(self.label.clone())),
+            ("backend", Json::from(self.backend.clone())),
+            ("phi", self.phi.map(Json::Num).unwrap_or(Json::Null)),
+            (
+                "feasible",
+                self.feasible.map(Json::from).unwrap_or(Json::Null),
+            ),
+            ("n_pipelines", Json::from(self.n_pipelines)),
+            ("routed_tiles", Json::Num(self.routed_tiles)),
+            ("unrouted_tiles", Json::Num(self.unrouted_tiles)),
+            (
+                "routed_isl_bytes_per_frame",
+                Json::Num(self.routed_isl_bytes_per_frame),
+            ),
+            ("completion_ratio", Json::Num(self.completion_ratio)),
+            ("isl_bytes_per_frame", Json::Num(self.isl_bytes_per_frame)),
+            ("frame_latency_s", Json::Num(self.frame_latency_s)),
+            ("proc_s", Json::Num(self.breakdown.0)),
+            ("comm_s", Json::Num(self.breakdown.1)),
+            ("revisit_s", Json::Num(self.breakdown.2)),
+            ("plan_ms", Json::Num(self.plan_ms)),
+            ("route_ms", Json::Num(self.route_ms)),
+            ("sim_ms", Json::Num(self.sim_ms)),
+            (
+                "notes",
+                Json::Arr(self.notes.iter().map(|n| Json::from(n.clone())).collect()),
+            ),
+            ("metrics", self.metrics.to_json()),
+        ])
+    }
+}
+
+/// The end-to-end scenario pipeline: build → plan → route → simulate.
+pub struct Orchestrator {
+    label: String,
+    wf: Workflow,
+    db: ProfileDb,
+    c: Constellation,
+    cfg: SimConfig,
+    planner: Box<dyn PlannerBackend>,
+    router: Box<dyn RouterBackend>,
+    strict: bool,
+}
+
+impl Orchestrator {
+    /// Orchestrate a [`config::Scenario`](crate::config::Scenario) with the
+    /// default OrbitChain backend (MILP planner + Algorithm 1 router).
+    pub fn new(scenario: &Scenario) -> Self {
+        let (wf, db, c) = scenario.build();
+        let cfg = scenario.sim_config();
+        Self::from_built(scenario.name.clone(), wf, db, c, cfg)
+    }
+
+    /// Orchestrate hand-built inputs (bespoke workflows, synthetic
+    /// profiles, Fig. 20-style instances).
+    pub fn from_parts(wf: Workflow, db: ProfileDb, c: Constellation, cfg: SimConfig) -> Self {
+        Self::from_built("custom".to_string(), wf, db, c, cfg)
+    }
+
+    fn from_built(
+        label: String,
+        wf: Workflow,
+        db: ProfileDb,
+        c: Constellation,
+        cfg: SimConfig,
+    ) -> Self {
+        Orchestrator {
+            label,
+            wf,
+            db,
+            c,
+            cfg,
+            planner: Box::new(MilpPlanner),
+            router: Box::new(OrbitChainRouter),
+            strict: false,
+        }
+    }
+
+    /// Select one of the canonical backend combinations.
+    pub fn with_backend(mut self, kind: BackendKind) -> Self {
+        self.planner = kind.planner();
+        self.router = kind.router();
+        self
+    }
+
+    pub fn with_planner(mut self, planner: impl PlannerBackend + 'static) -> Self {
+        self.planner = Box::new(planner);
+        self
+    }
+
+    pub fn with_router(mut self, router: impl RouterBackend + 'static) -> Self {
+        self.router = Box::new(router);
+        self
+    }
+
+    pub fn with_label(mut self, label: impl Into<String>) -> Self {
+        self.label = label.into();
+        self
+    }
+
+    pub fn with_sim_config(mut self, cfg: SimConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Strict mode: an infeasible plan (`φ < 1`) or unroutable workload is
+    /// a hard error instead of a degraded report.
+    pub fn strict(mut self, strict: bool) -> Self {
+        self.strict = strict;
+        self
+    }
+
+    pub fn workflow(&self) -> &Workflow {
+        &self.wf
+    }
+
+    pub fn profiles(&self) -> &ProfileDb {
+        &self.db
+    }
+
+    pub fn constellation(&self) -> &Constellation {
+        &self.c
+    }
+
+    pub fn sim_config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    fn ctx(&self) -> Ctx<'_> {
+        Ctx { wf: &self.wf, db: &self.db, c: &self.c }
+    }
+
+    /// Run the configured planner backend.
+    pub fn plan(&self) -> Result<Planned, ScenarioError> {
+        self.plan_with(self.planner.as_ref())
+    }
+
+    /// Run a specific planner backend over this scenario's inputs.
+    pub fn plan_with(&self, planner: &dyn PlannerBackend) -> Result<Planned, ScenarioError> {
+        let planned = planner.plan(&self.ctx())?;
+        if self.strict {
+            if let Planned::Deployment(p) = &planned {
+                if !p.feasible() {
+                    return Err(ScenarioError::Infeasible { phi: p.phi });
+                }
+            }
+        }
+        Ok(planned)
+    }
+
+    /// The MILP deployment plan (errors for fixed-deployment backends).
+    pub fn plan_deployment(&self) -> Result<DeploymentPlan, ScenarioError> {
+        match self.plan()? {
+            Planned::Deployment(p) => Ok(p),
+            Planned::Fixed { .. } => Err(ScenarioError::NoDeployment {
+                backend: self.planner.name(),
+            }),
+        }
+    }
+
+    /// Route a deployment plan with the configured router backend.
+    pub fn route(&self, plan: &DeploymentPlan) -> Result<Routing, ScenarioError> {
+        self.route_with(self.router.as_ref(), plan)
+    }
+
+    /// Route a deployment plan with a specific router backend.
+    pub fn route_with(
+        &self,
+        router: &dyn RouterBackend,
+        plan: &DeploymentPlan,
+    ) -> Result<Routing, ScenarioError> {
+        let routing = router.route(&self.ctx(), plan)?;
+        if self.strict {
+            if let Some(e) = routing.failures.first() {
+                return Err(ScenarioError::Route(e.clone()));
+            }
+        }
+        Ok(routing)
+    }
+
+    /// Plan + route, producing simulation-ready instances and pipelines.
+    pub fn prepare(&self) -> Result<Prepared, ScenarioError> {
+        self.prepare_with(self.planner.as_ref(), self.router.as_ref())
+    }
+
+    /// [`Self::prepare`] with explicit backends.
+    pub fn prepare_with(
+        &self,
+        planner: &dyn PlannerBackend,
+        router: &dyn RouterBackend,
+    ) -> Result<Prepared, ScenarioError> {
+        let t0 = Instant::now();
+        let planned = self.plan_with(planner)?;
+        let plan_ms = t0.elapsed().as_secs_f64() * 1e3;
+        match planned {
+            Planned::Deployment(plan) => {
+                let t1 = Instant::now();
+                let routing = self.route_with(router, &plan)?;
+                let route_ms = t1.elapsed().as_secs_f64() * 1e3;
+                let instances = sim::instances_from_plan(&plan, &self.c);
+                let pipelines = routing.pipelines.clone();
+                let mut notes = Vec::new();
+                if pipelines.is_empty() && routing.routed_tiles > 0.0 {
+                    notes.push(format!(
+                        "router {} produced aggregate-only flows; per-tile \
+                         simulation sees no pipelines",
+                        router.name()
+                    ));
+                }
+                Ok(Prepared {
+                    backend: format!("{}+{}", planner.name(), router.name()),
+                    plan: Some(plan),
+                    routing: Some(routing),
+                    instances,
+                    pipelines,
+                    notes,
+                    plan_ms,
+                    route_ms,
+                })
+            }
+            Planned::Fixed { instances, pipelines, notes } => Ok(Prepared {
+                backend: planner.name().to_string(),
+                plan: None,
+                routing: None,
+                instances,
+                pipelines,
+                notes,
+                plan_ms,
+                route_ms: 0.0,
+            }),
+        }
+    }
+
+    /// Discrete-event simulation of a prepared deployment (reusable: the
+    /// sim-engine bench calls this in a loop over one `Prepared`).
+    pub fn simulate(&self, prepared: &Prepared) -> SimReport {
+        Simulator::new(
+            &self.wf,
+            &self.db,
+            &self.c,
+            prepared.instances.clone(),
+            &prepared.pipelines,
+            self.cfg.clone(),
+        )
+        .run()
+    }
+
+    /// The full cycle with the configured backends.
+    pub fn run(&self) -> Result<ScenarioReport, ScenarioError> {
+        self.run_with(self.planner.as_ref(), self.router.as_ref())
+    }
+
+    /// The full cycle with one of the canonical backend combinations.
+    pub fn run_backend(&self, kind: BackendKind) -> Result<ScenarioReport, ScenarioError> {
+        self.run_with(kind.planner().as_ref(), kind.router().as_ref())
+    }
+
+    /// The full cycle with explicit backends.
+    pub fn run_with(
+        &self,
+        planner: &dyn PlannerBackend,
+        router: &dyn RouterBackend,
+    ) -> Result<ScenarioReport, ScenarioError> {
+        let prepared = self.prepare_with(planner, router)?;
+        let t0 = Instant::now();
+        let rep = self.simulate(&prepared);
+        let sim_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let routed = prepared.routed_tiles();
+        let (unrouted, routed_isl) = match &prepared.routing {
+            Some(r) => (r.unrouted_tiles, r.isl_bytes_per_frame),
+            None => ((self.c.tiles_per_frame as f64 - routed).max(0.0), 0.0),
+        };
+        Ok(ScenarioReport {
+            label: self.label.clone(),
+            backend: prepared.backend.clone(),
+            phi: prepared.plan.as_ref().map(|p| p.phi),
+            feasible: prepared.plan.as_ref().map(|p| p.feasible()),
+            n_pipelines: prepared.pipelines.len(),
+            routed_tiles: routed,
+            unrouted_tiles: unrouted,
+            routed_isl_bytes_per_frame: routed_isl,
+            completion_ratio: rep.completion_ratio,
+            isl_bytes_per_frame: rep.isl_bytes_per_frame,
+            frame_latency_s: rep.frame_latency_s,
+            breakdown: rep.breakdown,
+            plan_ms: prepared.plan_ms,
+            route_ms: prepared.route_ms,
+            sim_ms,
+            notes: prepared.notes,
+            metrics: rep.metrics,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner;
+    use crate::profile::Device;
+    use crate::routing;
+    use crate::workflow;
+
+    #[test]
+    fn orchestrator_matches_manual_glue() {
+        // The refactor guard: the orchestrated cycle must produce the same
+        // numbers as the historical hand-assembled plan/route/sim glue.
+        let scenario = Scenario::jetson();
+        let (wf, db, c) = scenario.build();
+        let plan = planner::plan(&wf, &db, &c).expect("plan");
+        let routing = routing::route(&wf, &db, &c, &plan).expect("route");
+        let instances = sim::instances_from_plan(&plan, &c);
+        let manual = Simulator::new(
+            &wf,
+            &db,
+            &c,
+            instances,
+            &routing.pipelines,
+            scenario.sim_config(),
+        )
+        .run();
+
+        let rep = Orchestrator::new(&scenario).run().expect("orchestrated run");
+        assert_eq!(rep.completion_ratio, manual.completion_ratio);
+        assert_eq!(rep.isl_bytes_per_frame, manual.isl_bytes_per_frame);
+        assert_eq!(rep.frame_latency_s, manual.frame_latency_s);
+        assert_eq!(rep.phi, Some(plan.phi));
+        assert_eq!(rep.n_pipelines, routing.pipelines.len());
+        assert_eq!(rep.backend, "milp+orbitchain");
+    }
+
+    #[test]
+    fn three_backends_run_behind_the_traits() {
+        let scenario = Scenario::jetson().with_frames(3).with_workflow_size(3);
+        let orch = Orchestrator::new(&scenario);
+        // MILP + OrbitChain router.
+        let ours = orch.run_backend(BackendKind::OrbitChain).unwrap();
+        assert!(ours.completion_ratio > 0.0 && ours.completion_ratio <= 1.0 + 1e-9);
+        assert!(ours.feasible.unwrap(), "phi={:?}", ours.phi);
+        // A baselines framework behind the same interface.
+        let cp = orch.run_backend(BackendKind::ComputeParallel).unwrap();
+        assert!(cp.completion_ratio >= 0.0 && cp.completion_ratio <= 1.0 + 1e-9);
+        assert!(cp.phi.is_none(), "fixed deployments have no MILP plan");
+        // Load spraying routes through the RouterBackend trait.
+        let plan = orch.plan_deployment().unwrap();
+        let spray = orch.route_with(&LoadSprayRouter, &plan).unwrap();
+        let direct = orch.route_with(&OrbitChainRouter, &plan).unwrap();
+        assert!(spray.isl_bytes_per_frame >= direct.isl_bytes_per_frame - 1e-9);
+    }
+
+    #[test]
+    fn strict_mode_rejects_infeasible_deployment() {
+        // One Jetson cannot host the 4-function workflow (§3.2).
+        let mut s = Scenario::jetson();
+        s.orbit_shift = false;
+        s.n_sats = 1;
+        let err = Orchestrator::new(&s).strict(true).run().unwrap_err();
+        match err {
+            ScenarioError::Plan(PlanError::Infeasible) => {}
+            ScenarioError::Infeasible { phi } => assert!(phi < 1.0),
+            other => panic!("expected infeasibility, got {other:?}"),
+        }
+        // Non-strict mode degrades gracefully instead.
+        let rep = Orchestrator::new(&s).run();
+        if let Ok(rep) = rep {
+            assert_eq!(rep.feasible, Some(false));
+        }
+    }
+
+    #[test]
+    fn strict_mode_surfaces_route_failures() {
+        // Zeroing every placement post-planning makes strict routing fail
+        // with the reachable RouteError instead of a silent unrouted tally.
+        let scenario = Scenario::jetson();
+        let orch = Orchestrator::new(&scenario).strict(true);
+        let mut plan = orch.plan_deployment().expect("feasible plan");
+        for p in &mut plan.placements {
+            p.deployed = false;
+            p.cpu_speed = 0.0;
+            p.gpu = false;
+            p.gpu_speed = 0.0;
+        }
+        let err = orch.route(&plan).unwrap_err();
+        assert!(matches!(
+            err,
+            ScenarioError::Route(crate::routing::RouteError::NoInstance { .. })
+        ));
+    }
+
+    #[test]
+    fn not_instantiated_baseline_reported_as_error() {
+        // Data parallelism OOMs with all four functions on the Jetson.
+        let scenario = Scenario::jetson();
+        let err = Orchestrator::new(&scenario)
+            .run_backend(BackendKind::DataParallel)
+            .unwrap_err();
+        assert!(matches!(err, ScenarioError::NotInstantiated { backend, .. }
+            if backend == "data-parallelism"));
+    }
+
+    #[test]
+    fn from_parts_supports_bespoke_workflows() {
+        // Tip-and-cue-style custom DAG on a uniform constellation.
+        let mut wf = workflow::Workflow::new();
+        let a = wf.add_function("cloud");
+        let b = wf.add_function("landuse");
+        wf.add_edge(a, b, 0.5).unwrap();
+        let db = ProfileDb::jetson();
+        let c = Constellation::uniform(3, Device::JetsonOrinNano, 5.0, 60);
+        let orch = Orchestrator::from_parts(
+            wf,
+            db,
+            c,
+            SimConfig { frames: 2, ..Default::default() },
+        );
+        let rep = orch.run().expect("bespoke scenario runs");
+        assert!(rep.completion_ratio > 0.0);
+        let j = rep.to_json();
+        assert_eq!(j.get("backend").and_then(Json::as_str), Some("milp+orbitchain"));
+    }
+}

@@ -1,0 +1,345 @@
+//! Parallel scenario sweeps over parameter grids.
+//!
+//! A [`SweepGrid`] expands a base [`Scenario`] across the dimensions the
+//! evaluation sweeps — frame deadline, workflow size, constellation size,
+//! ISL rate, frame count, device and backend — into an ordered list of
+//! [`SweepPoint`]s.  [`SweepRunner`] fans the points across
+//! `std::thread::scope` workers.
+//!
+//! **Determinism**: every point's seed is fixed at grid-construction time
+//! (optionally derived per point from the base seed), each point's
+//! orchestration touches no shared mutable state, and results land in
+//! pre-indexed slots — so a parallel sweep is bit-identical to a
+//! sequential one, regardless of worker count or scheduling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::config::Scenario;
+use crate::profile::Device;
+use crate::telemetry::Metrics;
+use crate::util::rng::Rng;
+
+use super::backend::BackendKind;
+use super::{Orchestrator, ScenarioError, ScenarioReport};
+
+/// One grid point: a fully specified scenario plus the backend to run it.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub scenario: Scenario,
+    pub backend: BackendKind,
+}
+
+/// Cartesian parameter grid over a base scenario.
+///
+/// Dimensions left unset keep the base scenario's value.  Point order is
+/// deterministic: devices → constellation sizes → deadlines → workflow
+/// sizes → frame counts → ISL rates → backends (innermost).
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    base: Scenario,
+    devices: Vec<Device>,
+    n_sats: Vec<usize>,
+    deadlines: Vec<f64>,
+    workflow_sizes: Vec<usize>,
+    frames: Vec<usize>,
+    isl_rates: Vec<Option<f64>>,
+    backends: Vec<BackendKind>,
+    reseed: bool,
+}
+
+impl SweepGrid {
+    pub fn new(base: Scenario) -> Self {
+        SweepGrid {
+            base,
+            devices: Vec::new(),
+            n_sats: Vec::new(),
+            deadlines: Vec::new(),
+            workflow_sizes: Vec::new(),
+            frames: Vec::new(),
+            isl_rates: Vec::new(),
+            backends: Vec::new(),
+            reseed: false,
+        }
+    }
+
+    pub fn devices(mut self, devices: &[Device]) -> Self {
+        self.devices = devices.to_vec();
+        self
+    }
+
+    /// Constellation sizes (implies the shift-free uniform layout, like the
+    /// CLI's `--sats`).
+    pub fn constellation_sizes(mut self, sizes: &[usize]) -> Self {
+        self.n_sats = sizes.to_vec();
+        self
+    }
+
+    pub fn deadlines(mut self, deadlines: &[f64]) -> Self {
+        self.deadlines = deadlines.to_vec();
+        self
+    }
+
+    pub fn workflow_sizes(mut self, sizes: &[usize]) -> Self {
+        self.workflow_sizes = sizes.to_vec();
+        self
+    }
+
+    pub fn frames(mut self, frames: &[usize]) -> Self {
+        self.frames = frames.to_vec();
+        self
+    }
+
+    pub fn isl_rates(mut self, rates: &[f64]) -> Self {
+        self.isl_rates = rates.iter().map(|&r| Some(r)).collect();
+        self
+    }
+
+    pub fn backends(mut self, backends: &[BackendKind]) -> Self {
+        self.backends = backends.to_vec();
+        self
+    }
+
+    /// Derive a distinct deterministic seed per point (from the base seed
+    /// and the point index) instead of reusing the base seed everywhere.
+    pub fn reseed(mut self, reseed: bool) -> Self {
+        self.reseed = reseed;
+        self
+    }
+
+    /// Expand the grid into its ordered point list.
+    pub fn points(&self) -> Vec<SweepPoint> {
+        let devices = if self.devices.is_empty() {
+            vec![self.base.device]
+        } else {
+            self.devices.clone()
+        };
+        let n_sats: Vec<Option<usize>> = if self.n_sats.is_empty() {
+            vec![None]
+        } else {
+            self.n_sats.iter().map(|&n| Some(n)).collect()
+        };
+        let deadlines = if self.deadlines.is_empty() {
+            vec![self.base.frame_deadline_s]
+        } else {
+            self.deadlines.clone()
+        };
+        let sizes = if self.workflow_sizes.is_empty() {
+            vec![self.base.workflow_size]
+        } else {
+            self.workflow_sizes.clone()
+        };
+        let frames = if self.frames.is_empty() {
+            vec![self.base.frames]
+        } else {
+            self.frames.clone()
+        };
+        let isl_rates = if self.isl_rates.is_empty() {
+            vec![self.base.isl_rate_bps]
+        } else {
+            self.isl_rates.clone()
+        };
+        let backends = if self.backends.is_empty() {
+            vec![BackendKind::OrbitChain]
+        } else {
+            self.backends.clone()
+        };
+
+        let mut points = Vec::new();
+        for &device in &devices {
+            for &ns in &n_sats {
+                for &deadline in &deadlines {
+                    for &wf_size in &sizes {
+                        for &n_frames in &frames {
+                            for &isl in &isl_rates {
+                                for &backend in &backends {
+                                    let mut s = self.base.clone();
+                                    s.device = device;
+                                    if let Some(n) = ns {
+                                        s.n_sats = n;
+                                        s.orbit_shift = false;
+                                    }
+                                    s.frame_deadline_s = deadline;
+                                    s.workflow_size = wf_size;
+                                    s.frames = n_frames;
+                                    s.isl_rate_bps = isl;
+                                    let idx = points.len();
+                                    if self.reseed {
+                                        s.seed = derived_seed(self.base.seed, idx as u64);
+                                    }
+                                    s.name = format!("{}#{idx}", self.base.name);
+                                    points.push(SweepPoint { scenario: s, backend });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        points
+    }
+}
+
+/// Deterministic per-point seed: SplitMix64 over (base seed, point index).
+fn derived_seed(base: u64, idx: u64) -> u64 {
+    Rng::new(base ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(idx.wrapping_add(1))).next_u64()
+}
+
+/// Result of a sweep: per-point reports (grid order) plus the merged
+/// telemetry registry of all successful points.
+#[derive(Debug)]
+pub struct SweepOutcome {
+    pub reports: Vec<Result<ScenarioReport, ScenarioError>>,
+    pub merged: Metrics,
+}
+
+impl SweepOutcome {
+    /// Completion ratio per point (0 for failed points) — the Fig. 11 row
+    /// shape.
+    pub fn completion_ratios(&self) -> Vec<f64> {
+        self.reports
+            .iter()
+            .map(|r| r.as_ref().map(|rep| rep.completion_ratio).unwrap_or(0.0))
+            .collect()
+    }
+}
+
+/// Fans sweep points across scoped worker threads.
+#[derive(Debug, Clone)]
+pub struct SweepRunner {
+    threads: usize,
+}
+
+impl Default for SweepRunner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SweepRunner {
+    /// Use every available core.
+    pub fn new() -> Self {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        SweepRunner { threads }
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run every point, returning reports in grid order.  Work-stealing via
+    /// a shared atomic cursor; each point writes only its own slot, so the
+    /// outcome is independent of scheduling.
+    pub fn run(&self, points: &[SweepPoint]) -> SweepOutcome {
+        let slots: Vec<Mutex<Option<Result<ScenarioReport, ScenarioError>>>> =
+            points.iter().map(|_| Mutex::new(None)).collect();
+        let cursor = AtomicUsize::new(0);
+        let workers = self.threads.min(points.len()).max(1);
+
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= points.len() {
+                        break;
+                    }
+                    let point = &points[i];
+                    let result = Orchestrator::new(&point.scenario)
+                        .with_backend(point.backend)
+                        .run();
+                    *slots[i].lock().expect("slot lock") = Some(result);
+                });
+            }
+        });
+
+        let reports: Vec<Result<ScenarioReport, ScenarioError>> = slots
+            .into_iter()
+            .map(|m| m.into_inner().expect("slot lock").expect("point executed"))
+            .collect();
+        let merged = Metrics::merged(
+            reports.iter().filter_map(|r| r.as_ref().ok()).map(|rep| &rep.metrics),
+        );
+        SweepOutcome { reports, merged }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_grid() -> Vec<SweepPoint> {
+        let base = Scenario::jetson().with_frames(2);
+        SweepGrid::new(base)
+            .workflow_sizes(&[2, 3])
+            .backends(&[BackendKind::OrbitChain, BackendKind::ComputeParallel])
+            .reseed(true)
+            .points()
+    }
+
+    #[test]
+    fn grid_expansion_order_and_seeds() {
+        let points = small_grid();
+        assert_eq!(points.len(), 4); // 2 workflow sizes x 2 backends
+        assert_eq!(points[0].scenario.workflow_size, 2);
+        assert_eq!(points[0].backend, BackendKind::OrbitChain);
+        assert_eq!(points[1].backend, BackendKind::ComputeParallel);
+        assert_eq!(points[2].scenario.workflow_size, 3);
+        // Derived seeds are deterministic and distinct.
+        let again = small_grid();
+        for (a, b) in points.iter().zip(&again) {
+            assert_eq!(a.scenario.seed, b.scenario.seed);
+        }
+        assert_ne!(points[0].scenario.seed, points[2].scenario.seed);
+    }
+
+    #[test]
+    fn parallel_sweep_bit_identical_to_sequential() {
+        let points = small_grid();
+        let sequential = SweepRunner::new().with_threads(1).run(&points);
+        let parallel = SweepRunner::new().with_threads(4).run(&points);
+        assert_eq!(sequential.reports.len(), parallel.reports.len());
+        for (s, p) in sequential.reports.iter().zip(&parallel.reports) {
+            match (s, p) {
+                (Ok(a), Ok(b)) => {
+                    // Bit-identical: the f64s must match exactly, not
+                    // approximately, and so must the full metric registry.
+                    assert_eq!(a.completion_ratio, b.completion_ratio);
+                    assert_eq!(a.isl_bytes_per_frame, b.isl_bytes_per_frame);
+                    assert_eq!(a.frame_latency_s, b.frame_latency_s);
+                    assert_eq!(a.phi, b.phi);
+                    assert_eq!(
+                        a.metrics.to_json().to_string_compact(),
+                        b.metrics.to_json().to_string_compact()
+                    );
+                }
+                (Err(a), Err(b)) => assert_eq!(a, b),
+                (a, b) => panic!("outcome mismatch: {a:?} vs {b:?}"),
+            }
+        }
+        assert_eq!(
+            sequential.merged.to_json().to_string_compact(),
+            parallel.merged.to_json().to_string_compact()
+        );
+    }
+
+    #[test]
+    fn sweep_reports_in_grid_order() {
+        let points = small_grid();
+        let outcome = SweepRunner::new().with_threads(3).run(&points);
+        assert_eq!(outcome.reports.len(), points.len());
+        for (point, rep) in points.iter().zip(&outcome.reports) {
+            if let Ok(rep) = rep {
+                assert_eq!(rep.label, point.scenario.name);
+            }
+        }
+        let ratios = outcome.completion_ratios();
+        assert!(ratios.iter().all(|r| (0.0..=1.0 + 1e-9).contains(r)));
+    }
+}

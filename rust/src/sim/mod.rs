@@ -103,7 +103,7 @@ struct QueuedEvent {
 
 impl PartialEq for QueuedEvent {
     fn eq(&self, o: &Self) -> bool {
-        self.t == o.t && self.seq == o.seq
+        self.cmp(o) == std::cmp::Ordering::Equal
     }
 }
 impl Eq for QueuedEvent {}
@@ -114,10 +114,11 @@ impl PartialOrd for QueuedEvent {
 }
 impl Ord for QueuedEvent {
     fn cmp(&self, o: &Self) -> std::cmp::Ordering {
-        self.t
-            .partial_cmp(&o.t)
-            .unwrap()
-            .then(self.seq.cmp(&o.seq))
+        // `total_cmp`, not `partial_cmp(..).unwrap()`: a NaN event time
+        // (e.g. from a degenerate rate or window) must never panic the
+        // event loop — under the IEEE total order NaNs sort after +inf and
+        // drain like any other event.
+        self.t.total_cmp(&o.t).then(self.seq.cmp(&o.seq))
     }
 }
 
@@ -543,18 +544,28 @@ fn link_index(a: usize, b: usize) -> usize {
 }
 
 /// Convenience: plan → route → simulate in one call (the OrbitChain path).
+///
+/// Thin wrapper over [`crate::scenario::Orchestrator`] — the scenario layer
+/// owns the plan/route/simulate glue; this keeps the historical sim-level
+/// entry point (and its `PlanError` signature) for callers that already
+/// hold the `(workflow, profiles, constellation)` triple.
 pub fn simulate_orbitchain(
     wf: &Workflow,
     profiles: &ProfileDb,
     constellation: &Constellation,
     cfg: SimConfig,
 ) -> Result<SimReport, crate::planner::PlanError> {
-    let plan = crate::planner::plan(wf, profiles, constellation)?;
-    let routing = crate::routing::route(wf, profiles, constellation, &plan)
-        .expect("routing on planned deployment");
-    let instances = instances_from_plan(&plan, constellation);
-    let sim = Simulator::new(wf, profiles, constellation, instances, &routing.pipelines, cfg);
-    Ok(sim.run())
+    let orch = crate::scenario::Orchestrator::from_parts(
+        wf.clone(),
+        profiles.clone(),
+        constellation.clone(),
+        cfg,
+    );
+    let prepared = orch.prepare().map_err(|e| match e {
+        crate::scenario::ScenarioError::Plan(p) => p,
+        other => panic!("routing on planned deployment: {other}"),
+    })?;
+    Ok(orch.simulate(&prepared))
 }
 
 #[cfg(test)]
@@ -652,5 +663,31 @@ mod tests {
         assert_ne!(link_index(0, 1), link_index(1, 0));
         assert_ne!(link_index(1, 2), link_index(2, 1));
         assert_eq!(link_index(0, 1), 0);
+    }
+
+    #[test]
+    fn non_finite_event_times_never_panic_the_event_loop() {
+        // Regression: `partial_cmp(..).unwrap()` in QueuedEvent::cmp used
+        // to panic the moment a NaN event time entered the heap.  Under
+        // `total_cmp`, NaN sorts after +inf and the queue drains normally.
+        let mut heap: BinaryHeap<Reverse<QueuedEvent>> = BinaryHeap::new();
+        let times = [1.5, f64::NAN, 0.25, f64::INFINITY, f64::NEG_INFINITY, f64::NAN, 3.0];
+        for (seq, &t) in times.iter().enumerate() {
+            heap.push(Reverse(QueuedEvent {
+                t,
+                seq: seq as u64,
+                ev: Ev::LinkDone { link: seq },
+            }));
+        }
+        let mut popped = Vec::new();
+        while let Some(Reverse(ev)) = heap.pop() {
+            popped.push(ev.t);
+        }
+        assert_eq!(popped.len(), times.len());
+        // Finite events keep their order and all precede the NaNs.
+        let finite: Vec<f64> = popped.iter().copied().filter(|t| t.is_finite()).collect();
+        assert_eq!(finite, vec![0.25, 1.5, 3.0]);
+        assert!(popped[popped.len() - 1].is_nan());
+        assert!(popped[popped.len() - 2].is_nan());
     }
 }

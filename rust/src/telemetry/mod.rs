@@ -62,6 +62,18 @@ impl Metrics {
         }
     }
 
+    /// Merge many registries (sweep aggregation).  Merging is commutative
+    /// for counters; sample order follows the iterator, so pass registries
+    /// in a deterministic order (e.g. sweep-grid order) for reproducible
+    /// exports.
+    pub fn merged<'a>(all: impl IntoIterator<Item = &'a Metrics>) -> Metrics {
+        let mut out = Metrics::new();
+        for m in all {
+            out.merge(m);
+        }
+        out
+    }
+
     /// Export as JSON: counters verbatim; distributions summarized
     /// (count/mean/p50/p99/max).
     pub fn to_json(&self) -> Json {

@@ -225,12 +225,19 @@ fn write_escaped(out: &mut String, s: &str) {
 }
 
 /// Parse error with byte offset context.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {offset}: {msg}")]
+#[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
     pub offset: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     b: &'a [u8],

@@ -28,19 +28,32 @@ pub struct Workflow {
 }
 
 /// Errors from workflow construction/validation.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum WorkflowError {
-    #[error("workflow has a cycle involving function {0}")]
     Cycle(FuncId),
-    #[error("distribution ratio {0} out of range (must be >= 0)")]
     BadRatio(f64),
-    #[error("duplicate edge {0} -> {1}")]
     DuplicateEdge(FuncId, FuncId),
-    #[error("edge endpoint {0} out of range")]
     BadEndpoint(FuncId),
-    #[error("workflow has no functions")]
     Empty,
 }
+
+impl std::fmt::Display for WorkflowError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WorkflowError::Cycle(i) => {
+                write!(f, "workflow has a cycle involving function {i}")
+            }
+            WorkflowError::BadRatio(d) => {
+                write!(f, "distribution ratio {d} out of range (must be >= 0)")
+            }
+            WorkflowError::DuplicateEdge(u, v) => write!(f, "duplicate edge {u} -> {v}"),
+            WorkflowError::BadEndpoint(i) => write!(f, "edge endpoint {i} out of range"),
+            WorkflowError::Empty => write!(f, "workflow has no functions"),
+        }
+    }
+}
+
+impl std::error::Error for WorkflowError {}
 
 impl Workflow {
     /// Create an empty workflow.

@@ -1,0 +1,103 @@
+//! Integration: the scenario orchestration layer end to end — unified
+//! backends, strict-mode rejection, and parallel sweep determinism plus a
+//! throughput sanity check.
+
+use std::time::Instant;
+
+use orbitchain::config::Scenario;
+use orbitchain::scenario::{BackendKind, Orchestrator, ScenarioError, SweepGrid, SweepRunner};
+
+#[test]
+fn orchestrated_testbeds_reproduce_headline_numbers() {
+    for scenario in [Scenario::jetson(), Scenario::rpi()] {
+        let rep = Orchestrator::new(&scenario).run().expect("orchestrated run");
+        assert_eq!(rep.backend, "milp+orbitchain");
+        assert!(rep.feasible.unwrap(), "{}: phi={:?}", rep.label, rep.phi);
+        assert!(rep.unrouted_tiles < 1e-6, "{}", rep.label);
+        assert!(
+            rep.completion_ratio > 0.9,
+            "{}: completion {}",
+            rep.label,
+            rep.completion_ratio
+        );
+    }
+}
+
+#[test]
+fn all_canonical_backends_produce_reports_or_typed_errors() {
+    let scenario = Scenario::jetson().with_frames(3);
+    let orch = Orchestrator::new(&scenario);
+    for kind in BackendKind::ALL {
+        match orch.run_backend(kind) {
+            Ok(rep) => {
+                assert!(
+                    (0.0..=1.0 + 1e-9).contains(&rep.completion_ratio),
+                    "{kind}: {}",
+                    rep.completion_ratio
+                );
+            }
+            Err(ScenarioError::NotInstantiated { backend, .. }) => {
+                // Data parallelism OOMs on the 4-function Jetson workload.
+                assert_eq!(backend, "data-parallelism");
+            }
+            Err(other) => panic!("{kind}: unexpected error {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn orchestrator_strict_rejects_infeasible_deployment_plan() {
+    // One Jetson cannot host the 4-function workflow (§3.2 / Fig. 3b).
+    let s = Scenario::jetson().with_uniform_sats(1);
+    let err = Orchestrator::new(&s).strict(true).run().unwrap_err();
+    match err {
+        ScenarioError::Plan(_) | ScenarioError::Infeasible { .. } => {}
+        other => panic!("expected plan rejection, got {other:?}"),
+    }
+}
+
+#[test]
+fn sweep_parallel_equals_sequential_across_devices() {
+    let points = SweepGrid::new(Scenario::jetson().with_frames(3))
+        .deadlines(&[4.75, 5.25])
+        .workflow_sizes(&[2, 4])
+        .backends(&[BackendKind::OrbitChain, BackendKind::ComputeParallel])
+        .reseed(true)
+        .points();
+    assert_eq!(points.len(), 8);
+
+    let t0 = Instant::now();
+    let sequential = SweepRunner::new().with_threads(1).run(&points);
+    let t_seq = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let parallel = SweepRunner::new().run(&points);
+    let t_par = t1.elapsed().as_secs_f64();
+
+    for (a, b) in sequential.reports.iter().zip(&parallel.reports) {
+        match (a, b) {
+            (Ok(x), Ok(y)) => {
+                assert_eq!(x.completion_ratio, y.completion_ratio);
+                assert_eq!(x.isl_bytes_per_frame, y.isl_bytes_per_frame);
+                assert_eq!(x.frame_latency_s, y.frame_latency_s);
+                assert_eq!(
+                    x.metrics.to_json().to_string_compact(),
+                    y.metrics.to_json().to_string_compact()
+                );
+            }
+            (Err(x), Err(y)) => assert_eq!(x, y),
+            (x, y) => panic!("parallel/sequential mismatch: {x:?} vs {y:?}"),
+        }
+    }
+
+    // Throughput sanity: with ≥2 workers, the parallel fan-out must not be
+    // pathologically slower than sequential (the sweep_runner bench reports
+    // the real >1 scenario-per-core scaling numbers).
+    let threads = SweepRunner::new().threads();
+    eprintln!("sweep: sequential {t_seq:.2}s, parallel {t_par:.2}s on {threads} threads");
+    if threads >= 2 {
+        assert!(
+            t_par < t_seq * 1.5,
+            "parallel {t_par:.2}s vs sequential {t_seq:.2}s on {threads} threads"
+        );
+    }
+}
