@@ -1,0 +1,80 @@
+//! Epoch-driven re-planning vs static ride-through under identical fault
+//! traces, across satellite MTBF values: completion delta (the value of
+//! re-planning), migration traffic / handover downtime (its cost), and
+//! wall time of the epoch loop including its MILP re-solves.
+//! Run: `cargo bench --bench dynamic_replan`.
+mod bench_common;
+
+use std::time::Instant;
+
+use bench_common::bench;
+use orbitchain::config::Scenario;
+use orbitchain::dynamic::{DynamicSpec, EpochOrchestrator};
+
+fn main() {
+    println!(
+        "{:>7} {:>7} | {:>10} {:>7} {:>11} {:>9} {:>8} | {:>10} {:>8} | {:>7}",
+        "mtbf_s",
+        "events",
+        "completion",
+        "replans",
+        "migration_B",
+        "down_s",
+        "wall_s",
+        "ridethru",
+        "wall_s",
+        "delta"
+    );
+    for mtbf in [300.0, 600.0, 1200.0] {
+        let spec = DynamicSpec { epochs: 12, sat_mtbf_s: mtbf, ..Default::default() };
+        let s = Scenario::jetson().with_seed(7).with_dynamic(spec);
+        let timeline = EpochOrchestrator::new(&s).timeline().clone();
+
+        let t0 = Instant::now();
+        let dyn_rep = EpochOrchestrator::new(&s)
+            .with_timeline(timeline.clone())
+            .replanning(true)
+            .run()
+            .expect("re-planning mission");
+        let t_dyn = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let static_rep = EpochOrchestrator::new(&s)
+            .with_timeline(timeline.clone())
+            .replanning(false)
+            .run()
+            .expect("ride-through mission");
+        let t_static = t1.elapsed().as_secs_f64();
+
+        println!(
+            "{:>7.0} {:>7} | {:>10.3} {:>7} {:>11.0} {:>9.1} {:>8.2} | {:>10.3} {:>8.2} | {:>+7.3}",
+            mtbf,
+            timeline.events.len(),
+            dyn_rep.completion_ratio,
+            dyn_rep.replans,
+            dyn_rep.migration_bytes,
+            dyn_rep.downtime_s,
+            t_dyn,
+            static_rep.completion_ratio,
+            t_static,
+            dyn_rep.completion_ratio - static_rep.completion_ratio
+        );
+    }
+
+    // Steady-state epoch-loop throughput on a fault-free mission (no MILP
+    // re-solves after the initial plan): the per-epoch warm-start overhead.
+    let quiet = DynamicSpec {
+        epochs: 8,
+        sat_mtbf_s: 0.0,
+        link_mtbf_s: 0.0,
+        ..Default::default()
+    };
+    let s = Scenario::jetson().with_seed(7).with_dynamic(quiet);
+    let rep = bench("quiet 8-epoch mission", 5, || {
+        EpochOrchestrator::new(&s).run().expect("quiet mission")
+    });
+    println!(
+        "quiet mission: completion={:.3} backlog={} sim={:.1} ms plan={:.1} ms",
+        rep.completion_ratio, rep.final_backlog, rep.sim_ms, rep.plan_ms
+    );
+}

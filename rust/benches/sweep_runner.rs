@@ -2,16 +2,55 @@
 //! sequentially (1 thread) and fanned across all cores, reporting
 //! points/second and the per-core scaling factor.  Demonstrates >1
 //! scenario-per-core throughput on a multi-point grid while the outputs
-//! stay bit-identical.
+//! stay bit-identical.  Also micro-benches the `Metrics::inc` hot path
+//! (every simulator event increments a counter) against the old
+//! allocate-a-`String`-per-call `entry()` spelling.
 //! Run: `cargo bench --bench sweep_runner`.
-mod bench_common;
 
 use std::time::Instant;
 
 use orbitchain::config::Scenario;
 use orbitchain::scenario::{BackendKind, SweepGrid, SweepRunner};
+use orbitchain::telemetry::Metrics;
+
+/// `Metrics::inc` vs the historical `entry(name.to_string())` spelling,
+/// on an existing counter (the hot case: every sim event after the first).
+fn bench_metrics_hot_path() {
+    const N: usize = 2_000_000;
+    const KEY: &str = "func.cloud.received";
+
+    let mut fast = Metrics::new();
+    fast.inc(KEY, 0.0);
+    let t0 = Instant::now();
+    for _ in 0..N {
+        fast.inc(KEY, 1.0);
+    }
+    let t_fast = t0.elapsed().as_secs_f64();
+
+    // The pre-optimization implementation, reproduced verbatim: entry()
+    // demands an owned key, so every call allocates.
+    let mut naive: std::collections::BTreeMap<String, f64> =
+        std::collections::BTreeMap::new();
+    naive.insert(KEY.to_string(), 0.0);
+    let t1 = Instant::now();
+    for _ in 0..N {
+        *naive.entry(KEY.to_string()).or_insert(0.0) += 1.0;
+    }
+    let t_naive = t1.elapsed().as_secs_f64();
+
+    assert_eq!(fast.counter(KEY), N as f64);
+    assert_eq!(naive[KEY], N as f64);
+    println!(
+        "metrics hot path ({N} incs): lookup-first {:.1} ms vs entry(to_string) \
+         {:.1} ms ({:.2}x)",
+        t_fast * 1e3,
+        t_naive * 1e3,
+        t_naive / t_fast.max(1e-9)
+    );
+}
 
 fn main() {
+    bench_metrics_hot_path();
     let points = SweepGrid::new(Scenario::jetson().with_frames(6))
         .deadlines(&[4.75, 5.0, 5.25, 5.5])
         .workflow_sizes(&[2, 3, 4])

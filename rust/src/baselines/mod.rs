@@ -88,6 +88,7 @@ pub fn data_parallelism(
                     dev: Dev::Cpu,
                     rate_tiles_s: cpu_speed,
                     window: SliceWindow::always(df),
+                    ready_s: 0.0,
                 });
             }
             if gpu_resident && f.gpu_speed > 0.0 {
@@ -97,6 +98,7 @@ pub fn data_parallelism(
                     dev: Dev::Gpu,
                     rate_tiles_s: f.gpu_speed / slowdown,
                     window: SliceWindow { offset, len: gpu_share, period: df },
+                    ready_s: 0.0,
                 });
                 offset += gpu_share;
             }
@@ -210,6 +212,7 @@ pub fn compute_parallelism(
                     dev: Dev::Gpu,
                     rate_tiles_s: f.gpu_speed,
                     window: SliceWindow { offset, len: gpu_share, period: df },
+                    ready_s: 0.0,
                 });
                 offset += gpu_share;
             } else {
@@ -219,6 +222,7 @@ pub fn compute_parallelism(
                     dev: Dev::Cpu,
                     rate_tiles_s: f.cpu_speed(quota),
                     window: SliceWindow::always(df),
+                    ready_s: 0.0,
                 });
             }
         }

@@ -7,6 +7,7 @@
 //! testbeds.
 
 use crate::constellation::Constellation;
+use crate::dynamic::DynamicSpec;
 use crate::profile::{Device, ProfileDb};
 use crate::util::json::{obj, Json};
 use crate::workflow::{self, Workflow};
@@ -30,6 +31,10 @@ pub struct Scenario {
     pub isl_rate_bps: Option<f64>,
     /// Use the paper's §6.1 ground-track-shift capture groups.
     pub orbit_shift: bool,
+    /// Dynamic-orchestration extension: when set, the scenario runs the
+    /// epoch loop of [`crate::dynamic::EpochOrchestrator`] (fault/visibility
+    /// events, re-planning, migration) instead of one static cycle.
+    pub dynamic: Option<DynamicSpec>,
 }
 
 impl Scenario {
@@ -47,6 +52,7 @@ impl Scenario {
             seed: 7,
             isl_rate_bps: None,
             orbit_shift: true,
+            dynamic: None,
         }
     }
 
@@ -64,6 +70,7 @@ impl Scenario {
             seed: 7,
             isl_rate_bps: None,
             orbit_shift: true,
+            dynamic: None,
         }
     }
 
@@ -120,6 +127,12 @@ impl Scenario {
         self
     }
 
+    /// Attach (or replace) the dynamic-orchestration extension.
+    pub fn with_dynamic(mut self, spec: DynamicSpec) -> Self {
+        self.dynamic = Some(spec);
+        self
+    }
+
     /// Build the concrete experiment inputs.
     pub fn build(&self) -> (Workflow, ProfileDb, Constellation) {
         let wf = workflow::flood_prefix(self.workflow_size, self.delta);
@@ -154,6 +167,7 @@ impl Scenario {
             drain_s: 0.0,
             seed: self.seed,
             isl_rate_bps: self.isl_rate_bps,
+            ..Default::default()
         }
     }
 
@@ -179,6 +193,10 @@ impl Scenario {
                 self.isl_rate_bps.map(Json::Num).unwrap_or(Json::Null),
             ),
             ("orbit_shift", Json::from(self.orbit_shift)),
+            (
+                "dynamic",
+                self.dynamic.as_ref().map(DynamicSpec::to_json).unwrap_or(Json::Null),
+            ),
         ])
     }
 
@@ -211,6 +229,10 @@ impl Scenario {
                 .get("orbit_shift")
                 .and_then(Json::as_bool)
                 .unwrap_or(base.orbit_shift),
+            dynamic: match j.get("dynamic") {
+                Some(Json::Null) | None => None,
+                Some(d) => Some(DynamicSpec::from_json(d)),
+            },
         })
     }
 }
@@ -238,6 +260,20 @@ mod tests {
         let j = s.to_json();
         let back = Scenario::from_json(&j).unwrap();
         assert_eq!(s, back);
+    }
+
+    #[test]
+    fn json_roundtrip_with_dynamic_extension() {
+        let spec = crate::dynamic::DynamicSpec {
+            epochs: 7,
+            sat_mtbf_s: 333.0,
+            replan: false,
+            ..Default::default()
+        };
+        let s = Scenario::rpi().with_dynamic(spec);
+        let back = Scenario::from_json(&s.to_json()).unwrap();
+        assert_eq!(s, back);
+        assert_eq!(back.dynamic.as_ref().unwrap().epochs, 7);
     }
 
     #[test]

@@ -238,6 +238,33 @@ impl Constellation {
     pub fn can_capture(&self, s: SatId, tile: usize) -> bool {
         self.capture_groups[self.tile_group(tile)].contains(s)
     }
+
+    /// Degraded copy for dynamic orchestration: a capture group with no
+    /// alive satellite keeps its slot (group indices — and therefore
+    /// pipeline `group` references — stay stable) but drops to zero tiles,
+    /// since nobody can sense them; every other group's tile count scales
+    /// by the workload `burst` factor.  Topology (`n_sats`, hops, links) is
+    /// untouched: a failed payload still relays.  Returns the view plus the
+    /// per-frame tile count lost to sensing-dead groups.
+    pub fn degraded(&self, alive: &[bool], burst: f64) -> (Constellation, usize) {
+        let mut lost = 0usize;
+        let mut groups = Vec::with_capacity(self.capture_groups.len());
+        for g in &self.capture_groups {
+            let scaled = ((g.tiles as f64) * burst.max(0.0)).round() as usize;
+            let sensed = g.sats().any(|s| alive.get(s).copied().unwrap_or(true));
+            let tiles = if sensed {
+                scaled
+            } else {
+                lost += scaled;
+                0
+            };
+            groups.push(CaptureGroup { first_sat: g.first_sat, last_sat: g.last_sat, tiles });
+        }
+        let mut c = self.clone();
+        c.tiles_per_frame = groups.iter().map(|g| g.tiles).sum();
+        c.capture_groups = groups;
+        (c, lost)
+    }
 }
 
 /// A captured ground-track frame.

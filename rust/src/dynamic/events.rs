@@ -1,0 +1,540 @@
+//! Typed constellation event timelines for dynamic orchestration.
+//!
+//! A [`Timeline`] is an ordered list of [`Event`]s — satellite payload
+//! failures/recoveries, ISL outages/restorations, workload bursts and
+//! observation-area visibility transitions.  Timelines are either
+//! *generated* deterministically from a [`DynamicSpec`] + seed
+//! (exponential MTBF/MTTR processes per satellite and per link, visibility
+//! windows from the real [`orbit`](crate::orbit) geometry) or *declared*
+//! explicitly (tests, replayable fault traces, JSON round-trip), so the
+//! re-planning and ride-through policies can be compared under identical
+//! fault traces.
+
+use crate::constellation::Constellation;
+use crate::orbit::visibility;
+use crate::orbit::GroundStation;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+
+/// What happened to the constellation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// Satellite `sat`'s compute payload (and sensor) fails.  Its bus —
+    /// and therefore its ISL relay — stays up; model a full bus loss as a
+    /// payload failure plus outages on its adjacent links.
+    SatFail { sat: usize },
+    /// Satellite `sat`'s payload comes back.
+    SatRecover { sat: usize },
+    /// The undirected link between sats `link` and `link + 1` degrades to
+    /// the spec's `degrade_factor` (0 = hard outage).
+    LinkDown { link: usize },
+    /// The link returns to its nominal rate.
+    LinkUp { link: usize },
+    /// A workload burst begins: tiles per frame scale by `factor`.
+    BurstStart { factor: f64 },
+    /// The burst subsides.
+    BurstEnd,
+    /// The constellation loses sight of the observation area: sensing
+    /// pauses, in-flight work keeps draining.
+    AreaLeave,
+    /// The observation area comes back into view.
+    AreaEnter,
+}
+
+impl EventKind {
+    /// Deterministic tie-break rank for equal-time events.
+    fn rank(&self) -> u8 {
+        match self {
+            EventKind::SatFail { .. } => 0,
+            EventKind::SatRecover { .. } => 1,
+            EventKind::LinkDown { .. } => 2,
+            EventKind::LinkUp { .. } => 3,
+            EventKind::BurstStart { .. } => 4,
+            EventKind::BurstEnd => 5,
+            EventKind::AreaLeave => 6,
+            EventKind::AreaEnter => 7,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            EventKind::SatFail { .. } => "sat_fail",
+            EventKind::SatRecover { .. } => "sat_recover",
+            EventKind::LinkDown { .. } => "link_down",
+            EventKind::LinkUp { .. } => "link_up",
+            EventKind::BurstStart { .. } => "burst_start",
+            EventKind::BurstEnd => "burst_end",
+            EventKind::AreaLeave => "area_leave",
+            EventKind::AreaEnter => "area_enter",
+        }
+    }
+}
+
+impl std::fmt::Display for EventKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EventKind::SatFail { sat } => write!(f, "sat {sat} payload fails"),
+            EventKind::SatRecover { sat } => write!(f, "sat {sat} payload recovers"),
+            EventKind::LinkDown { link } => write!(f, "link {link}\u{2194}{} down", link + 1),
+            EventKind::LinkUp { link } => write!(f, "link {link}\u{2194}{} restored", link + 1),
+            EventKind::BurstStart { factor } => write!(f, "workload burst x{factor}"),
+            EventKind::BurstEnd => write!(f, "burst ends"),
+            EventKind::AreaLeave => write!(f, "observation area out of view"),
+            EventKind::AreaEnter => write!(f, "observation area in view"),
+        }
+    }
+}
+
+/// A timestamped constellation event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    /// Simulated time, seconds from mission start.
+    pub t_s: f64,
+    pub kind: EventKind,
+}
+
+/// Dynamic-orchestration parameters: epoch granularity, fault processes,
+/// burst model, migration accounting, and the policy switch.  Stored as the
+/// `dynamic` extension of a [`Scenario`](crate::config::Scenario).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DynamicSpec {
+    /// Epochs to run.
+    pub epochs: usize,
+    /// Epoch length in frames (epoch seconds = this × `Δf`).
+    pub frames_per_epoch: usize,
+    /// Mean time between per-satellite payload failures, s (exponential);
+    /// ≤ 0 disables satellite faults.
+    pub sat_mtbf_s: f64,
+    /// Mean payload repair time, s.
+    pub sat_mttr_s: f64,
+    /// Mean time between per-link outages, s; ≤ 0 disables link faults.
+    pub link_mtbf_s: f64,
+    /// Mean link outage duration, s.
+    pub link_mttr_s: f64,
+    /// Link rate multiplier while degraded (0 = hard outage).
+    pub degrade_factor: f64,
+    /// Mean time between workload bursts, s; ≤ 0 disables bursts.
+    pub burst_mtbf_s: f64,
+    /// Mean burst duration, s.
+    pub burst_duration_s: f64,
+    /// Tile multiplier during a burst.
+    pub burst_factor: f64,
+    /// Derive observation-area visibility windows from the orbit geometry
+    /// (sensing pauses while the area is out of view).
+    pub area_visibility: bool,
+    /// Per-instance function state shipped on migration, bytes.
+    pub migration_state_bytes: f64,
+    /// Fixed handover overhead added to every migration, s.
+    pub handover_s: f64,
+    /// Cold-deploy delay when no live instance can donate state, s.
+    pub cold_deploy_s: f64,
+    /// Re-plan when the current plan is invalidated (`false` = static
+    /// ride-through baseline: the epoch loop still applies faults, but the
+    /// initial tables are kept for the whole mission).
+    pub replan: bool,
+}
+
+impl Default for DynamicSpec {
+    fn default() -> Self {
+        DynamicSpec {
+            epochs: 12,
+            frames_per_epoch: 4,
+            sat_mtbf_s: 600.0,
+            sat_mttr_s: 120.0,
+            link_mtbf_s: 900.0,
+            link_mttr_s: 90.0,
+            degrade_factor: 0.0,
+            burst_mtbf_s: 0.0,
+            burst_duration_s: 60.0,
+            burst_factor: 2.0,
+            area_visibility: false,
+            migration_state_bytes: 24.0 * 1024.0,
+            handover_s: 0.5,
+            cold_deploy_s: 5.0,
+            replan: true,
+        }
+    }
+}
+
+impl DynamicSpec {
+    /// Epoch length in seconds for a frame deadline `df`.
+    pub fn epoch_s(&self, df: f64) -> f64 {
+        self.frames_per_epoch.max(1) as f64 * df
+    }
+
+    /// Mission horizon in seconds for a frame deadline `df`.
+    pub fn horizon_s(&self, df: f64) -> f64 {
+        self.epochs as f64 * self.epoch_s(df)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("epochs", Json::from(self.epochs)),
+            ("frames_per_epoch", Json::from(self.frames_per_epoch)),
+            ("sat_mtbf_s", Json::Num(self.sat_mtbf_s)),
+            ("sat_mttr_s", Json::Num(self.sat_mttr_s)),
+            ("link_mtbf_s", Json::Num(self.link_mtbf_s)),
+            ("link_mttr_s", Json::Num(self.link_mttr_s)),
+            ("degrade_factor", Json::Num(self.degrade_factor)),
+            ("burst_mtbf_s", Json::Num(self.burst_mtbf_s)),
+            ("burst_duration_s", Json::Num(self.burst_duration_s)),
+            ("burst_factor", Json::Num(self.burst_factor)),
+            ("area_visibility", Json::from(self.area_visibility)),
+            ("migration_state_bytes", Json::Num(self.migration_state_bytes)),
+            ("handover_s", Json::Num(self.handover_s)),
+            ("cold_deploy_s", Json::Num(self.cold_deploy_s)),
+            ("replan", Json::from(self.replan)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Self {
+        let d = DynamicSpec::default();
+        let num = |k: &str, dv: f64| j.get(k).and_then(Json::as_f64).unwrap_or(dv);
+        let us = |k: &str, dv: usize| j.get(k).and_then(Json::as_usize).unwrap_or(dv);
+        let b = |k: &str, dv: bool| j.get(k).and_then(Json::as_bool).unwrap_or(dv);
+        DynamicSpec {
+            epochs: us("epochs", d.epochs),
+            frames_per_epoch: us("frames_per_epoch", d.frames_per_epoch),
+            sat_mtbf_s: num("sat_mtbf_s", d.sat_mtbf_s),
+            sat_mttr_s: num("sat_mttr_s", d.sat_mttr_s),
+            link_mtbf_s: num("link_mtbf_s", d.link_mtbf_s),
+            link_mttr_s: num("link_mttr_s", d.link_mttr_s),
+            degrade_factor: num("degrade_factor", d.degrade_factor),
+            burst_mtbf_s: num("burst_mtbf_s", d.burst_mtbf_s),
+            burst_duration_s: num("burst_duration_s", d.burst_duration_s),
+            burst_factor: num("burst_factor", d.burst_factor),
+            area_visibility: b("area_visibility", d.area_visibility),
+            migration_state_bytes: num("migration_state_bytes", d.migration_state_bytes),
+            handover_s: num("handover_s", d.handover_s),
+            cold_deploy_s: num("cold_deploy_s", d.cold_deploy_s),
+            replan: b("replan", d.replan),
+        }
+    }
+}
+
+/// An ordered constellation event timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Timeline {
+    /// Events sorted by time (ties broken by kind rank).
+    pub events: Vec<Event>,
+    /// Whether the observation area is in view at `t = 0`.
+    pub initial_area_visible: bool,
+}
+
+impl Default for Timeline {
+    fn default() -> Self {
+        Timeline { events: Vec::new(), initial_area_visible: true }
+    }
+}
+
+/// Seed mixing constant for timeline generation (keeps the fault stream
+/// independent of the simulator's tile-thinning stream for equal seeds).
+const TIMELINE_SALT: u64 = 0x612E_7696_A6CE_CC1B;
+
+/// One exponential inter-arrival draw with the given mean.
+fn exp_sample(r: &mut Rng, mean_s: f64) -> f64 {
+    -mean_s * (1.0 - r.f64()).ln()
+}
+
+impl Timeline {
+    /// Declare an explicit timeline (sorted into canonical order).
+    pub fn declared(mut events: Vec<Event>) -> Timeline {
+        events.sort_by(|a, b| {
+            a.t_s.total_cmp(&b.t_s).then_with(|| a.kind.rank().cmp(&b.kind.rank()))
+        });
+        Timeline { events, initial_area_visible: true }
+    }
+
+    /// Generate a timeline for `horizon_s` seconds of mission time.
+    ///
+    /// Deterministic per `(spec, constellation, horizon, seed)`: each
+    /// satellite, each link and the burst process get a forked PRNG stream
+    /// (forked *before* the per-process enable check, so toggling one fault
+    /// family never shifts another family's draws), and area-visibility
+    /// windows come from the pure orbit geometry.
+    pub fn generate(
+        spec: &DynamicSpec,
+        c: &Constellation,
+        horizon_s: f64,
+        seed: u64,
+    ) -> Timeline {
+        let mut root = Rng::new(seed ^ TIMELINE_SALT);
+        let mut events = Vec::new();
+
+        // Satellite payload fail/recover processes.
+        for sat in 0..c.n_sats {
+            let mut r = root.fork();
+            if spec.sat_mtbf_s <= 0.0 {
+                continue;
+            }
+            let mut t = exp_sample(&mut r, spec.sat_mtbf_s);
+            while t < horizon_s {
+                events.push(Event { t_s: t, kind: EventKind::SatFail { sat } });
+                t += exp_sample(&mut r, spec.sat_mttr_s.max(1e-6));
+                if t >= horizon_s {
+                    break;
+                }
+                events.push(Event { t_s: t, kind: EventKind::SatRecover { sat } });
+                t += exp_sample(&mut r, spec.sat_mtbf_s);
+            }
+        }
+
+        // Link outage/restore processes.
+        for link in 0..c.n_sats.saturating_sub(1) {
+            let mut r = root.fork();
+            if spec.link_mtbf_s <= 0.0 {
+                continue;
+            }
+            let mut t = exp_sample(&mut r, spec.link_mtbf_s);
+            while t < horizon_s {
+                events.push(Event { t_s: t, kind: EventKind::LinkDown { link } });
+                t += exp_sample(&mut r, spec.link_mttr_s.max(1e-6));
+                if t >= horizon_s {
+                    break;
+                }
+                events.push(Event { t_s: t, kind: EventKind::LinkUp { link } });
+                t += exp_sample(&mut r, spec.link_mtbf_s);
+            }
+        }
+
+        // Workload bursts.
+        {
+            let mut r = root.fork();
+            if spec.burst_mtbf_s > 0.0 {
+                let mut t = exp_sample(&mut r, spec.burst_mtbf_s);
+                while t < horizon_s {
+                    events.push(Event {
+                        t_s: t,
+                        kind: EventKind::BurstStart { factor: spec.burst_factor },
+                    });
+                    t += exp_sample(&mut r, spec.burst_duration_s.max(1e-6));
+                    if t >= horizon_s {
+                        break;
+                    }
+                    events.push(Event { t_s: t, kind: EventKind::BurstEnd });
+                    t += exp_sample(&mut r, spec.burst_mtbf_s);
+                }
+            }
+        }
+
+        // Observation-area visibility from the orbit geometry: the area is
+        // anchored at the constellation's mid-horizon sub-satellite point,
+        // so a pass occurs within the mission window; sensing is possible
+        // while the leader sees the area above a 30° mask.
+        let mut initial_visible = true;
+        if spec.area_visibility {
+            let track = c.orbit.ground_track(horizon_s / 2.0);
+            let area = GroundStation::new("observation-area", track.lat_deg, track.lon_deg);
+            let windows = visibility::contact_windows(
+                &c.orbit,
+                std::slice::from_ref(&area),
+                horizon_s,
+                1.0,
+            );
+            initial_visible = windows.first().is_some_and(|w| w.start_s <= 0.0);
+            for w in &windows {
+                if w.start_s > 0.0 {
+                    events.push(Event { t_s: w.start_s, kind: EventKind::AreaEnter });
+                }
+                if w.end_s < horizon_s {
+                    events.push(Event { t_s: w.end_s, kind: EventKind::AreaLeave });
+                }
+            }
+        }
+
+        events.sort_by(|a, b| {
+            a.t_s.total_cmp(&b.t_s).then_with(|| a.kind.rank().cmp(&b.kind.rank()))
+        });
+        Timeline { events, initial_area_visible: initial_visible }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut fields = vec![
+                    ("t_s", Json::Num(e.t_s)),
+                    ("kind", Json::from(e.kind.name())),
+                ];
+                match &e.kind {
+                    EventKind::SatFail { sat } | EventKind::SatRecover { sat } => {
+                        fields.push(("sat", Json::from(*sat)));
+                    }
+                    EventKind::LinkDown { link } | EventKind::LinkUp { link } => {
+                        fields.push(("link", Json::from(*link)));
+                    }
+                    EventKind::BurstStart { factor } => {
+                        fields.push(("factor", Json::Num(*factor)));
+                    }
+                    _ => {}
+                }
+                obj(fields)
+            })
+            .collect();
+        obj(vec![
+            ("initial_area_visible", Json::from(self.initial_area_visible)),
+            ("events", Json::Arr(rows)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Timeline> {
+        use anyhow::anyhow;
+        let mut events = Vec::new();
+        for row in j.get("events").and_then(Json::as_arr).unwrap_or(&[]) {
+            let t_s = row
+                .get("t_s")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("event missing t_s"))?;
+            let kind = row
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("event missing kind"))?;
+            let sat = || {
+                row.get("sat")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("{kind} event missing sat"))
+            };
+            let link = || {
+                row.get("link")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("{kind} event missing link"))
+            };
+            let kind = match kind {
+                "sat_fail" => EventKind::SatFail { sat: sat()? },
+                "sat_recover" => EventKind::SatRecover { sat: sat()? },
+                "link_down" => EventKind::LinkDown { link: link()? },
+                "link_up" => EventKind::LinkUp { link: link()? },
+                "burst_start" => EventKind::BurstStart {
+                    factor: row.get("factor").and_then(Json::as_f64).unwrap_or(2.0),
+                },
+                "burst_end" => EventKind::BurstEnd,
+                "area_leave" => EventKind::AreaLeave,
+                "area_enter" => EventKind::AreaEnter,
+                other => return Err(anyhow!("unknown event kind {other:?}")),
+            };
+            events.push(Event { t_s, kind });
+        }
+        let mut tl = Timeline::declared(events);
+        tl.initial_area_visible = j
+            .get("initial_area_visible")
+            .and_then(Json::as_bool)
+            .unwrap_or(true);
+        Ok(tl)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enabled_spec() -> DynamicSpec {
+        DynamicSpec {
+            sat_mtbf_s: 50.0,
+            sat_mttr_s: 20.0,
+            link_mtbf_s: 60.0,
+            link_mttr_s: 15.0,
+            burst_mtbf_s: 80.0,
+            ..DynamicSpec::default()
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_sorted() {
+        let c = Constellation::jetson();
+        let a = Timeline::generate(&enabled_spec(), &c, 1000.0, 7);
+        let b = Timeline::generate(&enabled_spec(), &c, 1000.0, 7);
+        assert_eq!(a, b);
+        assert!(!a.events.is_empty(), "short MTBFs over 1000s must fire");
+        for pair in a.events.windows(2) {
+            assert!(pair[0].t_s <= pair[1].t_s);
+        }
+        let other = Timeline::generate(&enabled_spec(), &c, 1000.0, 8);
+        assert_ne!(a, other, "different seeds give different traces");
+    }
+
+    #[test]
+    fn disabling_one_family_keeps_other_streams() {
+        // Forks happen before the enable check, so turning satellite faults
+        // off must not shift the link-fault draws.
+        let c = Constellation::jetson();
+        let full = Timeline::generate(&enabled_spec(), &c, 1000.0, 7);
+        let mut no_sat = enabled_spec();
+        no_sat.sat_mtbf_s = 0.0;
+        let links_only = Timeline::generate(&no_sat, &c, 1000.0, 7);
+        let link_events = |tl: &Timeline| -> Vec<Event> {
+            tl.events
+                .iter()
+                .filter(|e| {
+                    matches!(e.kind, EventKind::LinkDown { .. } | EventKind::LinkUp { .. })
+                })
+                .cloned()
+                .collect()
+        };
+        assert_eq!(link_events(&full), link_events(&links_only));
+        assert!(!links_only
+            .events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::SatFail { .. })));
+    }
+
+    #[test]
+    fn fail_recover_alternate_per_satellite() {
+        let c = Constellation::jetson();
+        let tl = Timeline::generate(&enabled_spec(), &c, 2000.0, 3);
+        for sat in 0..c.n_sats {
+            let mut down = false;
+            for e in &tl.events {
+                match e.kind {
+                    EventKind::SatFail { sat: s } if s == sat => {
+                        assert!(!down, "double failure for sat {sat}");
+                        down = true;
+                    }
+                    EventKind::SatRecover { sat: s } if s == sat => {
+                        assert!(down, "recovery before failure for sat {sat}");
+                        down = false;
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let tl = Timeline::declared(vec![
+            Event { t_s: 30.0, kind: EventKind::SatFail { sat: 2 } },
+            Event { t_s: 45.0, kind: EventKind::LinkDown { link: 0 } },
+            Event { t_s: 60.0, kind: EventKind::BurstStart { factor: 3.0 } },
+            Event { t_s: 90.0, kind: EventKind::BurstEnd },
+            Event { t_s: 120.0, kind: EventKind::SatRecover { sat: 2 } },
+        ]);
+        let back = Timeline::from_json(&tl.to_json()).unwrap();
+        assert_eq!(tl, back);
+
+        let spec = enabled_spec();
+        let spec_back = DynamicSpec::from_json(&spec.to_json());
+        assert_eq!(spec, spec_back);
+    }
+
+    #[test]
+    fn area_visibility_produces_geometry_windows() {
+        let c = Constellation::jetson();
+        let spec = DynamicSpec {
+            sat_mtbf_s: 0.0,
+            link_mtbf_s: 0.0,
+            area_visibility: true,
+            ..DynamicSpec::default()
+        };
+        // Long horizon: the area anchored at the mid-horizon ground track
+        // must yield at least one enter or leave transition.
+        let tl = Timeline::generate(&spec, &c, 3000.0, 7);
+        assert!(
+            tl.events
+                .iter()
+                .any(|e| matches!(e.kind, EventKind::AreaEnter | EventKind::AreaLeave))
+                || tl.initial_area_visible,
+            "no visibility transitions and never visible: {tl:?}"
+        );
+    }
+}

@@ -1,0 +1,961 @@
+//! Dynamic orchestration: epoch-driven re-planning under constellation
+//! events (paper §5's orchestrator running *continuously* as the
+//! constellation moves, instead of the single static plan → route →
+//! simulate cycle).
+//!
+//! The [`EpochOrchestrator`] slices simulated time into epochs of
+//! `frames_per_epoch · Δf` seconds.  At every epoch boundary it:
+//!
+//! 1. applies the pending [`events::Timeline`] events (payload failures
+//!    and recoveries, ISL outages/degradations, workload bursts,
+//!    observation-area visibility transitions) to a mutable
+//!    [`HealthState`] view of the constellation;
+//! 2. decides whether the deployed tables are still valid — a failed
+//!    satellite hosting instances, a pipeline crossing a dead link, a
+//!    burst exceeding the planned capacity ratio φ, or a topology change
+//!    (recovered satellite / healed partition) all invalidate;
+//! 3. if invalid and the re-planning policy is enabled, re-invokes the
+//!    configured [`PlannerBackend`]/[`RouterBackend`] pair over the
+//!    degraded constellation view (failed or cut-off satellites are banned
+//!    from hosting via [`planner::plan_masked`](crate::planner::plan_masked));
+//!    with re-planning disabled the initial tables ride through, which is
+//!    the static baseline every comparison runs against;
+//! 4. charges the **migration model**: every instance that appears on a
+//!    satellite that did not already host its function ships
+//!    `migration_state_bytes` from the nearest live donor hop-by-hop
+//!    (serialized at the slowest link rate on the path) or pays a
+//!    cold-deploy delay, and serves no earlier than that handover finishes
+//!    (`InstanceSpec::ready_s`);
+//! 5. runs the discrete-event simulator for one epoch with the per-epoch
+//!    instance table, per-link rate table and the unfinished-tile backlog
+//!    of the previous epoch as a warm start.
+//!
+//! Telemetry lands in the merged registry as `dynamic.replans`,
+//! `dynamic.migration.bytes`, `dynamic.downtime_s`, `dynamic.tiles_lost`
+//! and the per-epoch `dynamic.epoch_completion` distribution, so
+//! availability-vs-overhead tradeoffs are measurable.
+
+pub mod events;
+
+use std::time::Instant;
+
+use crate::config::Scenario;
+use crate::constellation::Constellation;
+use crate::profile::ProfileDb;
+use crate::routing::Pipeline;
+use crate::scenario::{
+    BackendKind, Ctx, MilpPlanner, OrbitChainRouter, Planned, PlannerBackend,
+    RouterBackend, ScenarioError, ScenarioReport,
+};
+use crate::sim::{self, InstanceSpec, SimConfig, Simulator};
+use crate::telemetry::Metrics;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::workflow::Workflow;
+
+pub use events::{DynamicSpec, Event, EventKind, Timeline};
+
+/// Ready-time sentinel for instances stranded on a failed satellite: far
+/// beyond any epoch horizon, but finite so window arithmetic stays total.
+pub const NEVER_S: f64 = 1e12;
+
+/// Warm-start backlog cap, in frames' worth of tiles; overflow is dropped
+/// and counted in `dynamic.backlog_dropped`.
+const BACKLOG_CAP_FRAMES: usize = 8;
+
+/// Mutable view of the constellation's condition, evolved by applying
+/// timeline events at epoch boundaries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthState {
+    /// Per-satellite payload health.
+    pub alive: Vec<bool>,
+    /// Per-adjacency rate multiplier (index `l` for the link `l ↔ l+1`);
+    /// 0 = hard outage.
+    pub link_factor: Vec<f64>,
+    /// Current workload burst multiplier (1 = nominal).
+    pub burst: f64,
+    /// Whether the observation area is in view (sensing possible).
+    pub area_visible: bool,
+}
+
+impl HealthState {
+    pub fn healthy(n_sats: usize) -> Self {
+        HealthState {
+            alive: vec![true; n_sats],
+            link_factor: vec![1.0; n_sats.saturating_sub(1)],
+            burst: 1.0,
+            area_visible: true,
+        }
+    }
+
+    /// Apply one event.  `degrade_factor` is the rate multiplier a
+    /// [`EventKind::LinkDown`] imposes (0 = outage).
+    pub fn apply(&mut self, ev: &Event, degrade_factor: f64) {
+        match ev.kind {
+            EventKind::SatFail { sat } => {
+                if sat < self.alive.len() {
+                    self.alive[sat] = false;
+                }
+            }
+            EventKind::SatRecover { sat } => {
+                if sat < self.alive.len() {
+                    self.alive[sat] = true;
+                }
+            }
+            EventKind::LinkDown { link } => {
+                if link < self.link_factor.len() {
+                    self.link_factor[link] = degrade_factor.max(0.0);
+                }
+            }
+            EventKind::LinkUp { link } => {
+                if link < self.link_factor.len() {
+                    self.link_factor[link] = 1.0;
+                }
+            }
+            EventKind::BurstStart { factor } => self.burst = factor.max(0.0),
+            EventKind::BurstEnd => self.burst = 1.0,
+            EventKind::AreaLeave => self.area_visible = false,
+            EventKind::AreaEnter => self.area_visible = true,
+        }
+    }
+
+    pub fn failed_sats(&self) -> Vec<usize> {
+        (0..self.alive.len()).filter(|&j| !self.alive[j]).collect()
+    }
+
+    pub fn outaged_links(&self) -> Vec<usize> {
+        (0..self.link_factor.len()).filter(|&l| self.link_factor[l] <= 0.0).collect()
+    }
+
+    /// Maximal contiguous satellite runs connected by links with a nonzero
+    /// rate (a zero-rate link partitions the relay chain).
+    pub fn segments(&self) -> Vec<(usize, usize)> {
+        let n = self.alive.len();
+        let mut segs = Vec::new();
+        let mut start = 0usize;
+        for (l, &factor) in self.link_factor.iter().enumerate() {
+            if factor <= 0.0 {
+                segs.push((start, l));
+                start = l + 1;
+            }
+        }
+        segs.push((start, n.saturating_sub(1)));
+        segs
+    }
+
+    /// Satellites the orchestrator must not deploy on: failed payloads,
+    /// plus everything outside the best chain segment (most alive members,
+    /// lowest start on ties) — instances there would be unreachable.
+    pub fn masked_sats(&self) -> Vec<usize> {
+        let segs = self.segments();
+        let alive_in =
+            |s: &(usize, usize)| (s.0..=s.1).filter(|&j| self.alive[j]).count();
+        let best = segs
+            .iter()
+            .max_by(|a, b| alive_in(a).cmp(&alive_in(b)).then(b.0.cmp(&a.0)))
+            .copied()
+            .unwrap_or((0, self.alive.len().saturating_sub(1)));
+        (0..self.alive.len())
+            .filter(|&j| j < best.0 || j > best.1 || !self.alive[j])
+            .collect()
+    }
+}
+
+/// The tables currently deployed on the constellation.
+struct PlanState {
+    backend: String,
+    instances: Vec<InstanceSpec>,
+    pipelines: Vec<Pipeline>,
+    phi: Option<f64>,
+    /// Mask the tables were planned under.
+    mask: Vec<usize>,
+    /// Burst factor the tables were planned under.
+    burst: f64,
+}
+
+/// One epoch's outcome.
+#[derive(Debug, Clone)]
+pub struct EpochReport {
+    pub epoch: usize,
+    pub t_start_s: f64,
+    /// Whether tables were rebuilt at this boundary (the initial build in
+    /// epoch 0 does not count as a re-plan).
+    pub replanned: bool,
+    /// Why the previous tables were invalid (also set when the ride-through
+    /// policy chose not to act on it).
+    pub reason: Option<String>,
+    pub completion_ratio: f64,
+    /// Frames captured this epoch (0 while the area is out of view).
+    pub frames: usize,
+    /// Tiles carried into the next epoch.
+    pub backlog: usize,
+    pub migrations: usize,
+    pub migration_bytes: f64,
+    pub downtime_s: f64,
+    pub failed_sats: Vec<usize>,
+    pub outaged_links: Vec<usize>,
+    pub burst: f64,
+    pub area_visible: bool,
+}
+
+/// Aggregate outcome of an epoch-orchestrated mission.
+#[derive(Debug, Clone)]
+pub struct DynamicReport {
+    pub label: String,
+    pub backend: String,
+    pub epochs: Vec<EpochReport>,
+    /// End-of-run completion ratio: analyzed / received per function,
+    /// averaged, over the whole mission.
+    pub completion_ratio: f64,
+    pub replans: usize,
+    pub replan_failures: usize,
+    pub migrations: usize,
+    pub migration_bytes: f64,
+    pub downtime_s: f64,
+    /// Tiles never observable because every satellite of their capture
+    /// group was down.
+    pub tiles_lost: f64,
+    pub final_backlog: usize,
+    pub frame_latency_s: f64,
+    pub breakdown: (f64, f64, f64),
+    pub phi: Option<f64>,
+    pub n_pipelines: usize,
+    pub plan_ms: f64,
+    pub route_ms: f64,
+    pub sim_ms: f64,
+    pub notes: Vec<String>,
+    pub metrics: Metrics,
+}
+
+impl DynamicReport {
+    pub fn to_json(&self) -> Json {
+        let epochs = self
+            .epochs
+            .iter()
+            .map(|e| {
+                obj(vec![
+                    ("epoch", Json::from(e.epoch)),
+                    ("t_start_s", Json::Num(e.t_start_s)),
+                    ("replanned", Json::from(e.replanned)),
+                    (
+                        "reason",
+                        e.reason.clone().map(Json::Str).unwrap_or(Json::Null),
+                    ),
+                    ("completion_ratio", Json::Num(e.completion_ratio)),
+                    ("frames", Json::from(e.frames)),
+                    ("backlog", Json::from(e.backlog)),
+                    ("migrations", Json::from(e.migrations)),
+                    ("migration_bytes", Json::Num(e.migration_bytes)),
+                    ("downtime_s", Json::Num(e.downtime_s)),
+                    (
+                        "failed_sats",
+                        Json::Arr(e.failed_sats.iter().map(|&s| Json::from(s)).collect()),
+                    ),
+                    (
+                        "outaged_links",
+                        Json::Arr(e.outaged_links.iter().map(|&l| Json::from(l)).collect()),
+                    ),
+                    ("burst", Json::Num(e.burst)),
+                    ("area_visible", Json::from(e.area_visible)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("label", Json::from(self.label.clone())),
+            ("backend", Json::from(self.backend.clone())),
+            ("completion_ratio", Json::Num(self.completion_ratio)),
+            ("replans", Json::from(self.replans)),
+            ("replan_failures", Json::from(self.replan_failures)),
+            ("migrations", Json::from(self.migrations)),
+            ("migration_bytes", Json::Num(self.migration_bytes)),
+            ("downtime_s", Json::Num(self.downtime_s)),
+            ("tiles_lost", Json::Num(self.tiles_lost)),
+            ("final_backlog", Json::from(self.final_backlog)),
+            ("frame_latency_s", Json::Num(self.frame_latency_s)),
+            ("epochs", Json::Arr(epochs)),
+            ("metrics", self.metrics.to_json()),
+        ])
+    }
+
+    /// Collapse into the scenario layer's report shape so dynamic points
+    /// ride the same sweep / JSON machinery as static ones.
+    pub fn into_scenario_report(self) -> ScenarioReport {
+        let unrouted = self.metrics.counter("tiles.unrouted");
+        let received: f64 = self.metrics.counter("dynamic.tiles_injected");
+        let frames: f64 = self.metrics.counter("dynamic.frames").max(1.0);
+        let isl = self.metrics.counter("isl.bytes");
+        ScenarioReport {
+            label: self.label,
+            backend: format!("dynamic+{}", self.backend),
+            phi: self.phi,
+            feasible: self.phi.map(|p| p >= 1.0 - 1e-6),
+            n_pipelines: self.n_pipelines,
+            routed_tiles: (received - unrouted).max(0.0),
+            unrouted_tiles: unrouted,
+            routed_isl_bytes_per_frame: isl / frames,
+            completion_ratio: self.completion_ratio,
+            isl_bytes_per_frame: isl / frames,
+            frame_latency_s: self.frame_latency_s,
+            breakdown: self.breakdown,
+            plan_ms: self.plan_ms,
+            route_ms: self.route_ms,
+            sim_ms: self.sim_ms,
+            notes: self.notes,
+            metrics: self.metrics,
+        }
+    }
+}
+
+/// Epoch-driven orchestration of one mission.
+pub struct EpochOrchestrator {
+    label: String,
+    spec: DynamicSpec,
+    wf: Workflow,
+    db: ProfileDb,
+    c: Constellation,
+    seed: u64,
+    isl_rate_bps: Option<f64>,
+    planner: Box<dyn PlannerBackend>,
+    router: Box<dyn RouterBackend>,
+    timeline: Timeline,
+}
+
+impl EpochOrchestrator {
+    /// Orchestrate a [`Scenario`] (its `dynamic` extension supplies the
+    /// spec; absent, the default spec applies).  The event timeline is
+    /// generated from the scenario seed; override it with
+    /// [`Self::with_timeline`] to replay a declared fault trace.
+    pub fn new(scenario: &Scenario) -> Self {
+        let spec = scenario.dynamic.clone().unwrap_or_default();
+        let (wf, db, c) = scenario.build();
+        Self::from_parts(
+            scenario.name.clone(),
+            spec,
+            wf,
+            db,
+            c,
+            scenario.seed,
+            scenario.isl_rate_bps,
+        )
+    }
+
+    /// Orchestrate hand-built inputs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        label: String,
+        spec: DynamicSpec,
+        wf: Workflow,
+        db: ProfileDb,
+        c: Constellation,
+        seed: u64,
+        isl_rate_bps: Option<f64>,
+    ) -> Self {
+        let timeline =
+            Timeline::generate(&spec, &c, spec.horizon_s(c.frame_deadline_s), seed);
+        EpochOrchestrator {
+            label,
+            spec,
+            wf,
+            db,
+            c,
+            seed,
+            isl_rate_bps,
+            planner: Box::new(MilpPlanner),
+            router: Box::new(OrbitChainRouter),
+            timeline,
+        }
+    }
+
+    pub fn with_backend(mut self, kind: BackendKind) -> Self {
+        self.planner = kind.planner();
+        self.router = kind.router();
+        self
+    }
+
+    pub fn with_planner(mut self, planner: impl PlannerBackend + 'static) -> Self {
+        self.planner = Box::new(planner);
+        self
+    }
+
+    pub fn with_router(mut self, router: impl RouterBackend + 'static) -> Self {
+        self.router = Box::new(router);
+        self
+    }
+
+    /// Replace the spec (regenerates the timeline; apply before
+    /// [`Self::with_timeline`]).
+    pub fn with_spec(mut self, spec: DynamicSpec) -> Self {
+        self.timeline = Timeline::generate(
+            &spec,
+            &self.c,
+            spec.horizon_s(self.c.frame_deadline_s),
+            self.seed,
+        );
+        self.spec = spec;
+        self
+    }
+
+    /// Replay a declared fault trace instead of the generated one.
+    pub fn with_timeline(mut self, timeline: Timeline) -> Self {
+        self.timeline = timeline;
+        self
+    }
+
+    /// Toggle the re-planning policy (`false` = static ride-through
+    /// baseline) without touching the fault trace.
+    pub fn replanning(mut self, replan: bool) -> Self {
+        self.spec.replan = replan;
+        self
+    }
+
+    pub fn spec(&self) -> &DynamicSpec {
+        &self.spec
+    }
+
+    pub fn timeline(&self) -> &Timeline {
+        &self.timeline
+    }
+
+    pub fn constellation(&self) -> &Constellation {
+        &self.c
+    }
+
+    /// Run the mission; see the module docs for the epoch loop.
+    pub fn run(&self) -> Result<DynamicReport, ScenarioError> {
+        let df = self.c.frame_deadline_s;
+        let epoch_s = self.spec.epoch_s(df);
+        let nominal_isl = self.isl_rate_bps.unwrap_or_else(|| self.c.isl_rate_bps());
+
+        let mut health = HealthState::healthy(self.c.n_sats);
+        health.area_visible = self.timeline.initial_area_visible;
+        let mut ev_idx = 0usize;
+        let mut current: Option<PlanState> = None;
+
+        let mut merged = Metrics::new();
+        let mut epoch_reports = Vec::with_capacity(self.spec.epochs);
+        let mut notes: Vec<String> = Vec::new();
+        let mut backlog = 0usize;
+        let mut replans = 0usize;
+        let mut replan_failures = 0usize;
+        let mut migrations = 0usize;
+        let mut migration_bytes = 0.0f64;
+        let mut downtime_s = 0.0f64;
+        let mut tiles_lost = 0.0f64;
+        let mut dropped_backlog = 0usize;
+        let mut injected = 0.0f64;
+        let mut total_frames = 0usize;
+        let mut plan_ms = 0.0f64;
+        let mut route_ms = 0.0f64;
+        let mut sim_ms = 0.0f64;
+        let mut worst_latency = 0.0f64;
+        let mut worst_breakdown = (0.0, 0.0, 0.0);
+
+        for e in 0..self.spec.epochs {
+            let t0 = e as f64 * epoch_s;
+            // Events during epoch `e-1` take effect at this boundary.
+            while ev_idx < self.timeline.events.len()
+                && self.timeline.events[ev_idx].t_s <= t0
+            {
+                health.apply(&self.timeline.events[ev_idx], self.spec.degrade_factor);
+                ev_idx += 1;
+            }
+            let mask = health.masked_sats();
+
+            let invalid: Option<String> = match &current {
+                None => Some("initial deployment".to_string()),
+                Some(ps) => self.invalidation(ps, &health, &mask),
+            };
+
+            let mut replanned = false;
+            let mut epoch_migrations = 0usize;
+            let mut epoch_mig_bytes = 0.0f64;
+            let mut epoch_downtime = 0.0f64;
+            let mut migration_ready: Vec<(usize, f64)> = Vec::new();
+
+            if let Some(reason) = &invalid {
+                let initial = current.is_none();
+                if initial || self.spec.replan {
+                    match self.build_tables(&mask, health.burst) {
+                        Ok((built, pm, rm)) => {
+                            plan_ms += pm;
+                            route_ms += rm;
+                            if let Some(prev) = &current {
+                                let (readies, m_bytes, m_down) = self.charge_migration(
+                                    &built.instances,
+                                    &prev.instances,
+                                    &health,
+                                    nominal_isl,
+                                );
+                                epoch_migrations = readies.len();
+                                epoch_mig_bytes = m_bytes;
+                                epoch_downtime = m_down;
+                                migrations += epoch_migrations;
+                                migration_bytes += m_bytes;
+                                downtime_s += m_down;
+                                migration_ready = readies;
+                                replans += 1;
+                                replanned = true;
+                                notes.push(format!("epoch {e}: re-planned ({reason})"));
+                            }
+                            current = Some(built);
+                        }
+                        Err(err) => {
+                            if initial {
+                                return Err(err);
+                            }
+                            replan_failures += 1;
+                            notes.push(format!(
+                                "epoch {e}: re-plan failed ({err}); riding through"
+                            ));
+                        }
+                    }
+                }
+            }
+
+            let state = current.as_ref().expect("tables exist after initial plan");
+
+            // Per-epoch view of the pristine constellation: dead groups
+            // sense nothing, bursts scale tile counts; group indices (and
+            // so pipeline group references) stay stable.
+            let (epoch_c, lost_per_frame) = self.c.degraded(&health.alive, health.burst);
+            let frames = if health.area_visible { self.spec.frames_per_epoch } else { 0 };
+            tiles_lost += (lost_per_frame * frames) as f64;
+            total_frames += frames;
+
+            // Availability overlay: stranded instances never serve this
+            // epoch; freshly migrated ones serve once handover completes.
+            let mut instances: Vec<InstanceSpec> = state
+                .instances
+                .iter()
+                .map(|inst| {
+                    let mut i2 = inst.clone();
+                    if !health.alive.get(inst.sat).copied().unwrap_or(true) {
+                        i2.ready_s = NEVER_S;
+                    }
+                    i2
+                })
+                .collect();
+            for &(idx, ready) in &migration_ready {
+                if let Some(i2) = instances.get_mut(idx) {
+                    i2.ready_s = i2.ready_s.max(ready);
+                }
+            }
+
+            // Warm-start backlog (bounded; kept whole while sensing of the
+            // entire frame is impossible).
+            let (warm, dropped) = if epoch_c.tiles_per_frame == 0 {
+                (0usize, 0usize)
+            } else {
+                let cap = BACKLOG_CAP_FRAMES * epoch_c.tiles_per_frame;
+                (backlog.min(cap), backlog.saturating_sub(cap))
+            };
+            dropped_backlog += dropped;
+
+            let cfg = SimConfig {
+                frames,
+                drain_s: if frames == 0 { epoch_s } else { 0.0 },
+                seed: epoch_seed(self.seed, e),
+                isl_rate_bps: self.isl_rate_bps,
+                link_rate_factors: Some(health.link_factor.clone()),
+                warm_tiles: warm,
+            };
+            injected += (frames * epoch_c.tiles_per_frame + warm) as f64;
+
+            let t_sim = Instant::now();
+            let rep = Simulator::new(
+                &self.wf,
+                &self.db,
+                &epoch_c,
+                instances,
+                &state.pipelines,
+                cfg,
+            )
+            .run();
+            sim_ms += t_sim.elapsed().as_secs_f64() * 1e3;
+
+            if rep.frame_latency_s > worst_latency {
+                worst_latency = rep.frame_latency_s;
+                worst_breakdown = rep.breakdown;
+            }
+            merged.merge(&rep.metrics);
+            merged.observe("dynamic.epoch_completion", rep.completion_ratio);
+            backlog = if epoch_c.tiles_per_frame == 0 {
+                backlog
+            } else {
+                rep.unfinished_tiles
+            };
+
+            epoch_reports.push(EpochReport {
+                epoch: e,
+                t_start_s: t0,
+                replanned,
+                reason: invalid,
+                completion_ratio: rep.completion_ratio,
+                frames,
+                backlog,
+                migrations: epoch_migrations,
+                migration_bytes: epoch_mig_bytes,
+                downtime_s: epoch_downtime,
+                failed_sats: health.failed_sats(),
+                outaged_links: health.outaged_links(),
+                burst: health.burst,
+                area_visible: health.area_visible,
+            });
+        }
+
+        // Mission-wide completion from the merged per-function counters.
+        let mut ratios = Vec::new();
+        for i in 0..self.wf.len() {
+            let rec = merged.counter(&format!("func.{}.received", self.wf.name(i)));
+            let ana = merged.counter(&format!("func.{}.analyzed", self.wf.name(i)));
+            if rec > 0.0 {
+                ratios.push((ana / rec).min(1.0));
+            }
+        }
+        let completion = if ratios.is_empty() { 0.0 } else { stats::mean(&ratios) };
+
+        merged.inc("dynamic.replans", replans as f64);
+        merged.inc("dynamic.replan_failures", replan_failures as f64);
+        merged.inc("dynamic.migration.count", migrations as f64);
+        merged.inc("dynamic.migration.bytes", migration_bytes);
+        merged.inc("dynamic.downtime_s", downtime_s);
+        merged.inc("dynamic.tiles_lost", tiles_lost);
+        merged.inc("dynamic.epochs", self.spec.epochs as f64);
+        merged.inc("dynamic.frames", total_frames as f64);
+        merged.inc("dynamic.tiles_injected", injected);
+        merged.inc("dynamic.backlog_final", backlog as f64);
+        merged.inc("dynamic.backlog_dropped", dropped_backlog as f64);
+
+        // Degenerate zero-epoch mission: still plan once so the report
+        // (backend, phi, pipeline count) is well-formed instead of
+        // panicking.
+        if current.is_none() {
+            let (built, pm, rm) =
+                self.build_tables(&health.masked_sats(), health.burst)?;
+            plan_ms += pm;
+            route_ms += rm;
+            current = Some(built);
+        }
+        let state = current.as_ref().expect("tables just built");
+        Ok(DynamicReport {
+            label: self.label.clone(),
+            backend: state.backend.clone(),
+            epochs: epoch_reports,
+            completion_ratio: completion,
+            replans,
+            replan_failures,
+            migrations,
+            migration_bytes,
+            downtime_s,
+            tiles_lost,
+            final_backlog: backlog,
+            frame_latency_s: worst_latency,
+            breakdown: worst_breakdown,
+            phi: state.phi,
+            n_pipelines: state.pipelines.len(),
+            plan_ms,
+            route_ms,
+            sim_ms,
+            notes,
+            metrics: merged,
+        })
+    }
+
+    /// [`Self::run`] collapsed to the scenario layer's report shape.
+    pub fn run_scenario_report(&self) -> Result<ScenarioReport, ScenarioError> {
+        self.run().map(DynamicReport::into_scenario_report)
+    }
+
+    /// Why the deployed tables are no longer valid, if they aren't.
+    fn invalidation(
+        &self,
+        ps: &PlanState,
+        health: &HealthState,
+        mask: &[usize],
+    ) -> Option<String> {
+        if ps.mask.as_slice() != mask {
+            return Some(format!(
+                "topology changed (masked sats {:?} -> {:?})",
+                ps.mask, mask
+            ));
+        }
+        for p in &ps.pipelines {
+            for l in p.adjacencies_crossed(&self.wf) {
+                if health.link_factor.get(l).copied().unwrap_or(1.0) <= 0.0 {
+                    return Some(format!("pipeline crosses dead link {l}"));
+                }
+            }
+        }
+        if let Some(phi) = ps.phi {
+            if health.burst > ps.burst && phi + 1e-9 < health.burst {
+                return Some(format!(
+                    "burst x{} exceeds planned capacity (phi {phi:.2})",
+                    health.burst
+                ));
+            }
+        }
+        None
+    }
+
+    /// Plan + route over the degraded constellation with `mask` banned.
+    fn build_tables(
+        &self,
+        mask: &[usize],
+        burst: f64,
+    ) -> Result<(PlanState, f64, f64), ScenarioError> {
+        let mut usable = vec![true; self.c.n_sats];
+        for &j in mask {
+            if j < usable.len() {
+                usable[j] = false;
+            }
+        }
+        let (eff_c, _lost) = self.c.degraded(&usable, burst);
+        let ctx = Ctx { wf: &self.wf, db: &self.db, c: &eff_c, banned: mask };
+        let t0 = Instant::now();
+        let planned = self.planner.plan(&ctx)?;
+        let plan_ms = t0.elapsed().as_secs_f64() * 1e3;
+        match planned {
+            Planned::Deployment(plan) => {
+                let t1 = Instant::now();
+                let routing = self.router.route(&ctx, &plan)?;
+                let route_ms = t1.elapsed().as_secs_f64() * 1e3;
+                let instances = sim::instances_from_plan(&plan, &eff_c);
+                Ok((
+                    PlanState {
+                        backend: format!(
+                            "{}+{}",
+                            self.planner.name(),
+                            self.router.name()
+                        ),
+                        instances,
+                        pipelines: routing.pipelines,
+                        phi: Some(plan.phi),
+                        mask: mask.to_vec(),
+                        burst,
+                    },
+                    plan_ms,
+                    route_ms,
+                ))
+            }
+            Planned::Fixed { instances, pipelines, notes: _ } => Ok((
+                PlanState {
+                    backend: self.planner.name().to_string(),
+                    instances,
+                    pipelines,
+                    phi: None,
+                    mask: mask.to_vec(),
+                    burst,
+                },
+                plan_ms,
+                0.0,
+            )),
+        }
+    }
+
+    /// Migration accounting for a re-plan: every new instance on a
+    /// satellite that did not already host its function ships state from
+    /// the nearest live donor (hop-by-hop at the slowest link rate on the
+    /// path) or pays the cold-deploy delay.  Returns per-instance ready
+    /// times, total ISL bytes charged, and the handover downtime (the
+    /// slowest migration).
+    fn charge_migration(
+        &self,
+        new_instances: &[InstanceSpec],
+        prev: &[InstanceSpec],
+        health: &HealthState,
+        nominal_isl: f64,
+    ) -> (Vec<(usize, f64)>, f64, f64) {
+        let mut readies = Vec::new();
+        let mut bytes_total = 0.0f64;
+        let mut max_ready = 0.0f64;
+        for (idx, inst) in new_instances.iter().enumerate() {
+            let resident =
+                prev.iter().any(|p| p.func == inst.func && p.sat == inst.sat);
+            if resident {
+                continue;
+            }
+            // A donor must be alive *and* reachable: a hard outage on the
+            // path makes the transfer impossible, so such donors fall
+            // through to the cold-deploy path instead of producing an
+            // astronomically slow "migration".
+            let donor = prev
+                .iter()
+                .filter(|p| {
+                    p.func == inst.func
+                        && health.alive.get(p.sat).copied().unwrap_or(false)
+                        && path_min_factor(&health.link_factor, p.sat, inst.sat) > 0.0
+                })
+                .min_by_key(|p| self.c.hops(p.sat, inst.sat));
+            let ready = match donor {
+                Some(d) if d.sat == inst.sat => self.spec.handover_s,
+                Some(d) => {
+                    let hops = self.c.hops(d.sat, inst.sat);
+                    let factor = path_min_factor(&health.link_factor, d.sat, inst.sat);
+                    let rate = (nominal_isl * factor).max(1e-9);
+                    bytes_total += self.spec.migration_state_bytes * hops as f64;
+                    self.spec.handover_s
+                        + self.spec.migration_state_bytes * 8.0 * hops as f64 / rate
+                }
+                None => self.spec.cold_deploy_s,
+            };
+            if ready > max_ready {
+                max_ready = ready;
+            }
+            readies.push((idx, ready));
+        }
+        (readies, bytes_total, max_ready)
+    }
+}
+
+/// Deterministic per-epoch simulator seed.
+fn epoch_seed(seed: u64, epoch: usize) -> u64 {
+    Rng::new(seed ^ (epoch as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64()
+}
+
+/// Slowest rate multiplier along the chain path `a ↔ b` (1.0 when equal).
+fn path_min_factor(link_factor: &[f64], a: usize, b: usize) -> f64 {
+    let (lo, hi) = (a.min(b), a.max(b));
+    let mut min_factor = 1.0f64;
+    for l in lo..hi {
+        min_factor = min_factor.min(link_factor.get(l).copied().unwrap_or(1.0));
+    }
+    min_factor
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet_spec(epochs: usize) -> DynamicSpec {
+        DynamicSpec {
+            epochs,
+            frames_per_epoch: 2,
+            sat_mtbf_s: 0.0,
+            link_mtbf_s: 0.0,
+            burst_mtbf_s: 0.0,
+            ..DynamicSpec::default()
+        }
+    }
+
+    fn jetson_with(spec: DynamicSpec) -> Scenario {
+        let mut s = Scenario::jetson();
+        s.dynamic = Some(spec);
+        s
+    }
+
+    #[test]
+    fn quiet_mission_plans_once_and_completes() {
+        let s = jetson_with(quiet_spec(3));
+        let rep = EpochOrchestrator::new(&s).run().expect("mission runs");
+        assert_eq!(rep.replans, 0, "no events, no re-plans: {:?}", rep.notes);
+        assert_eq!(rep.migration_bytes, 0.0);
+        assert_eq!(rep.epochs.len(), 3);
+        assert!(rep.completion_ratio > 0.85, "completion={}", rep.completion_ratio);
+        assert_eq!(rep.epochs[0].reason.as_deref(), Some("initial deployment"));
+        assert!(!rep.epochs[0].replanned);
+    }
+
+    #[test]
+    fn zero_epoch_mission_reports_cleanly() {
+        // `--epochs 0` must produce a well-formed (empty) report, not a
+        // panic.
+        let s = jetson_with(quiet_spec(0));
+        let rep = EpochOrchestrator::new(&s).run().expect("degenerate mission");
+        assert!(rep.epochs.is_empty());
+        assert!(rep.phi.is_some());
+        assert_eq!(rep.replans, 0);
+        assert_eq!(rep.completion_ratio, 0.0);
+    }
+
+    #[test]
+    fn declared_failure_triggers_replan_and_migration() {
+        let s = jetson_with(quiet_spec(6));
+        let tl = Timeline::declared(vec![
+            Event { t_s: 15.0, kind: EventKind::SatFail { sat: 1 } },
+            Event { t_s: 35.0, kind: EventKind::SatRecover { sat: 1 } },
+        ]);
+        let rep = EpochOrchestrator::new(&s)
+            .with_timeline(tl)
+            .run()
+            .expect("mission runs");
+        // Fail lands at the epoch-2 boundary (t0 = 20), recovery at epoch 4
+        // (t0 = 40): two re-plans.
+        assert_eq!(rep.replans, 2, "notes: {:?}", rep.notes);
+        assert!(rep.migration_bytes > 0.0, "recovery re-plan must migrate state");
+        assert!(rep.downtime_s > 0.0);
+        assert_eq!(rep.metrics.counter("dynamic.replans"), 2.0);
+        assert!(rep.metrics.counter("dynamic.migration.bytes") > 0.0);
+        let e2 = &rep.epochs[2];
+        assert!(e2.replanned && e2.failed_sats == vec![1], "{e2:?}");
+    }
+
+    #[test]
+    fn ride_through_keeps_tables_and_reports_reason() {
+        let s = jetson_with(quiet_spec(4));
+        let tl = Timeline::declared(vec![Event {
+            t_s: 15.0,
+            kind: EventKind::SatFail { sat: 2 },
+        }]);
+        let rep = EpochOrchestrator::new(&s)
+            .with_timeline(tl)
+            .replanning(false)
+            .run()
+            .expect("mission runs");
+        assert_eq!(rep.replans, 0);
+        assert_eq!(rep.migration_bytes, 0.0);
+        let e2 = &rep.epochs[2];
+        assert!(e2.reason.is_some() && !e2.replanned, "{e2:?}");
+        assert!(rep.completion_ratio < 1.0);
+    }
+
+    #[test]
+    fn link_outage_masks_minor_segment() {
+        let mut h = HealthState::healthy(4);
+        h.link_factor[1] = 0.0; // 0-1 | 2-3
+        assert_eq!(h.segments(), vec![(0, 1), (2, 3)]);
+        assert_eq!(h.masked_sats(), vec![2, 3], "tie breaks to the leader side");
+        h.alive[0] = false;
+        // Segment (2,3) now has more alive members.
+        assert_eq!(h.masked_sats(), vec![0, 1]);
+        h.link_factor[1] = 1.0;
+        assert_eq!(h.masked_sats(), vec![0], "healed chain masks only the dead sat");
+    }
+
+    #[test]
+    fn burst_invalidates_only_beyond_phi() {
+        let s = jetson_with(quiet_spec(4));
+        let tl = Timeline::declared(vec![Event {
+            t_s: 15.0,
+            kind: EventKind::BurstStart { factor: 4.0 },
+        }]);
+        let rep = EpochOrchestrator::new(&s)
+            .with_timeline(tl)
+            .run()
+            .expect("mission runs");
+        // A 4x burst is beyond any feasible Jetson phi: the orchestrator
+        // must re-plan (and the epoch view must scale tile counts).
+        assert!(rep.replans >= 1, "notes: {:?}", rep.notes);
+        let burst_epoch = rep.epochs.iter().find(|e| e.burst > 1.0).expect("burst seen");
+        assert!(burst_epoch.reason.is_some());
+    }
+
+    #[test]
+    fn mission_is_deterministic() {
+        let mut spec = quiet_spec(5);
+        spec.sat_mtbf_s = 60.0;
+        spec.sat_mttr_s = 30.0;
+        spec.link_mtbf_s = 80.0;
+        spec.link_mttr_s = 20.0;
+        let s = jetson_with(spec);
+        let a = EpochOrchestrator::new(&s).run().expect("run a");
+        let b = EpochOrchestrator::new(&s).run().expect("run b");
+        assert_eq!(a.completion_ratio, b.completion_ratio);
+        assert_eq!(a.replans, b.replans);
+        assert_eq!(a.migration_bytes, b.migration_bytes);
+        assert_eq!(
+            a.metrics.to_json().to_string_compact(),
+            b.metrics.to_json().to_string_compact()
+        );
+    }
+}

@@ -19,6 +19,7 @@
 //! | [`fig18_isl`] | Fig. 18 TX power vs rate |
 //! | [`tab01_fit`] | Table 1 / Fig. 19 piecewise fits |
 //! | [`fig20_planning`] | Fig. 20 planning/routing runtime |
+//! | [`dynamic_availability`] | epoch re-planning vs ride-through (new subsystem) |
 
 use std::time::Instant;
 
@@ -622,6 +623,73 @@ pub fn fig20_planning() -> Table {
     }
     if had.is_none() {
         std::env::remove_var("ORBITCHAIN_PLAN_NODES");
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Dynamic orchestration: availability vs overhead under identical faults.
+// ---------------------------------------------------------------------------
+
+/// Epoch re-planning vs static ride-through under one generated fault trace
+/// (satellite MTBF `mtbf_s`; repair, link and burst processes at the
+/// [`DynamicSpec`](crate::dynamic::DynamicSpec) defaults).  Both policies
+/// replay the *identical* timeline, so the completion delta is purely the
+/// value of re-planning, and the migration/downtime columns are its cost.
+pub fn dynamic_availability(
+    device_name: &str,
+    seed: u64,
+    epochs: usize,
+    mtbf_s: f64,
+) -> Table {
+    let spec = crate::dynamic::DynamicSpec {
+        epochs,
+        sat_mtbf_s: mtbf_s,
+        ..Default::default()
+    };
+    let s = Scenario::of(device_of(device_name)).with_seed(seed).with_dynamic(spec);
+    let timeline = crate::dynamic::EpochOrchestrator::new(&s).timeline().clone();
+    let mut t = Table::new(
+        &format!(
+            "Dynamic orchestration: re-planning vs ride-through \
+             ({device_name}, seed {seed}, {} epochs, {} events)",
+            epochs,
+            timeline.events.len()
+        ),
+        &[
+            "policy",
+            "completion",
+            "replans",
+            "migration_B",
+            "downtime_s",
+            "lost_tiles",
+            "backlog",
+        ],
+    );
+    for (label, replan) in [("replan", true), ("ride-through", false)] {
+        let orch = crate::dynamic::EpochOrchestrator::new(&s)
+            .with_timeline(timeline.clone())
+            .replanning(replan);
+        match orch.run() {
+            Ok(rep) => t.row(vec![
+                label.into(),
+                f(rep.completion_ratio),
+                rep.replans.to_string(),
+                f(rep.migration_bytes),
+                f(rep.downtime_s),
+                f(rep.tiles_lost),
+                rep.final_backlog.to_string(),
+            ]),
+            Err(e) => t.row(vec![
+                label.into(),
+                format!("error: {e}"),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]),
+        }
     }
     t
 }

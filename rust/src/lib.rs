@@ -32,6 +32,10 @@
 //!   plan → route → simulate cycle behind pluggable planner/router
 //!   backends, and `SweepRunner` fans parameter grids across threads
 //!   deterministically.
+//! * [`dynamic`] — epoch-driven orchestration: typed constellation event
+//!   timelines (failures, link outages, bursts, visibility windows), the
+//!   `EpochOrchestrator` re-planning loop, and migration-aware handover
+//!   accounting.
 //! * [`exp`] — one driver per paper figure/table (all through
 //!   [`scenario::Orchestrator`]).
 //! * [`config`] — scenario configuration & §6.1 presets.
@@ -39,6 +43,7 @@
 pub mod baselines;
 pub mod config;
 pub mod constellation;
+pub mod dynamic;
 pub mod exp;
 pub mod link;
 pub mod lp;

@@ -6,24 +6,32 @@
 //! orbitchain simulate   [same flags] [--frames N] [--isl-bps R] [--backend B] [--json]
 //! orbitchain sweep      [same flags] [--deadlines A,B,..] [--workflows 2,3,4]
 //!                       [--sats-list 3,5,8] [--frames-list 5,10] [--isl-list R1,R2]
+//!                       [--mtbf-list 300,600] [--outage-list 60,120] [--epoch-frames-list 2,4]
 //!                       [--backends orbitchain,compute-par] [--threads N] [--json]
-//! orbitchain experiment <fig3b|fig4b|fig7|fig8|fig11|fig12|fig13|fig14|fig15|fig17|fig18|tab1|fig20|all>
-//!                       [--device jetson|rpi] [--frames N] [--json]
+//! orbitchain dynamic    [same flags] [--epochs N] [--epoch-frames N] [--mtbf S] [--mttr S]
+//!                       [--link-mtbf S] [--link-mttr S] [--degrade-factor F]
+//!                       [--burst-mtbf S] [--burst-duration S] [--burst-factor X]
+//!                       [--area-visibility] [--state-bytes B] [--backend B]
+//!                       [--no-baseline] [--json]
+//! orbitchain experiment <fig3b|fig4b|fig7|fig8|fig11|fig12|fig13|fig14|fig15|fig17|fig18|tab1|fig20|dynamic|all>
+//!                       [--device jetson|rpi] [--frames N] [--seed N] [--json]
 //! orbitchain infer      [--model cloud] [--tiles N] [--artifacts DIR]  # PJRT HIL
 //! orbitchain version
 //! ```
 //!
 //! (Argument parsing is hand-rolled: `clap` is not in the offline vendor
-//! set.)
+//! set.)  Unknown `--flags` are rejected with the subcommand's valid set.
 
 use std::collections::HashMap;
 
 use orbitchain::config::Scenario;
+use orbitchain::dynamic::EpochOrchestrator;
 use orbitchain::exp;
 use orbitchain::runtime::{ModelRuntime, TileGen};
 use orbitchain::scenario::{
     BackendKind, LoadSprayRouter, Orchestrator, ScenarioError, SweepGrid, SweepRunner,
 };
+use orbitchain::util::json::obj;
 use orbitchain::{planner, routing};
 
 fn main() {
@@ -60,6 +68,46 @@ fn parse_flags(rest: &[String]) -> (Vec<String>, HashMap<String, String>) {
         }
     }
     (pos, flags)
+}
+
+/// Flags every scenario-driven subcommand accepts.
+const SCENARIO_FLAGS: &[&str] = &[
+    "device", "workflow", "deadline", "sats", "delta", "frames", "seed", "isl-bps",
+];
+
+/// Reject typo'd flags instead of silently ignoring them.
+fn ensure_known_flags(
+    cmd: &str,
+    flags: &HashMap<String, String>,
+    valid: &[&str],
+) -> anyhow::Result<()> {
+    let mut unknown: Vec<&str> = flags
+        .keys()
+        .map(String::as_str)
+        .filter(|k| !valid.contains(k))
+        .collect();
+    if unknown.is_empty() {
+        return Ok(());
+    }
+    unknown.sort_unstable();
+    let listed: Vec<String> = valid.iter().map(|v| format!("--{v}")).collect();
+    anyhow::bail!(
+        "unknown flag{} {} for `{cmd}`; valid flags: {}",
+        if unknown.len() > 1 { "s" } else { "" },
+        unknown
+            .iter()
+            .map(|u| format!("--{u}"))
+            .collect::<Vec<_>>()
+            .join(", "),
+        if listed.is_empty() { "(none)".to_string() } else { listed.join(" ") }
+    )
+}
+
+/// The scenario flags plus a subcommand's own.
+fn scenario_plus(extra: &[&'static str]) -> Vec<&'static str> {
+    let mut v = SCENARIO_FLAGS.to_vec();
+    v.extend_from_slice(extra);
+    v
 }
 
 fn scenario_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<Scenario> {
@@ -100,13 +148,72 @@ fn run(args: &[String]) -> anyhow::Result<()> {
     };
     let (pos, flags) = parse_flags(&args[1..]);
     match cmd.as_str() {
-        "plan" => cmd_plan(&flags),
-        "route" => cmd_route(&flags),
-        "simulate" => cmd_simulate(&flags),
-        "sweep" => cmd_sweep(&flags),
-        "experiment" => cmd_experiment(&pos, &flags),
-        "infer" => cmd_infer(&flags),
+        "plan" => {
+            ensure_known_flags("plan", &flags, &scenario_plus(&[]))?;
+            cmd_plan(&flags)
+        }
+        "route" => {
+            ensure_known_flags("route", &flags, &scenario_plus(&[]))?;
+            cmd_route(&flags)
+        }
+        "simulate" => {
+            ensure_known_flags("simulate", &flags, &scenario_plus(&["backend", "json"]))?;
+            cmd_simulate(&flags)
+        }
+        "sweep" => {
+            ensure_known_flags(
+                "sweep",
+                &flags,
+                &scenario_plus(&[
+                    "deadlines",
+                    "workflows",
+                    "sats-list",
+                    "frames-list",
+                    "isl-list",
+                    "mtbf-list",
+                    "outage-list",
+                    "epoch-frames-list",
+                    "backends",
+                    "threads",
+                    "json",
+                ]),
+            )?;
+            cmd_sweep(&flags)
+        }
+        "dynamic" => {
+            let mut valid = scenario_plus(&[
+                "epochs",
+                "epoch-frames",
+                "mtbf",
+                "mttr",
+                "link-mtbf",
+                "link-mttr",
+                "degrade-factor",
+                "burst-mtbf",
+                "burst-duration",
+                "burst-factor",
+                "area-visibility",
+                "state-bytes",
+                "backend",
+                "no-baseline",
+                "json",
+            ]);
+            // Mission length is `--epochs` x `--epoch-frames`; rejecting
+            // `--frames` here beats silently ignoring it.
+            valid.retain(|f| *f != "frames");
+            ensure_known_flags("dynamic", &flags, &valid)?;
+            cmd_dynamic(&flags)
+        }
+        "experiment" => {
+            ensure_known_flags("experiment", &flags, &["device", "frames", "seed", "json"])?;
+            cmd_experiment(&pos, &flags)
+        }
+        "infer" => {
+            ensure_known_flags("infer", &flags, &["model", "tiles", "artifacts", "seed"])?;
+            cmd_infer(&flags)
+        }
         "version" => {
+            ensure_known_flags("version", &flags, &[])?;
             println!("orbitchain {}", env!("CARGO_PKG_VERSION"));
             Ok(())
         }
@@ -126,15 +233,22 @@ fn print_help() {
          \x20 route       run Algorithm 1 workload routing\n\
          \x20 simulate    discrete-event simulation of the planned system\n\
          \x20 sweep       parallel scenario sweep over a parameter grid\n\
-         \x20 experiment  regenerate a paper figure/table (fig3b..fig20, all)\n\
+         \x20 dynamic     epoch-driven orchestration under fault/visibility events\n\
+         \x20             (re-planning vs static ride-through on one fault trace)\n\
+         \x20 experiment  regenerate a paper figure/table (fig3b..fig20, dynamic, all)\n\
          \x20 infer       hardware-in-the-loop PJRT inference on synthetic tiles\n\
          \x20 version     print version\n\n\
-         common flags: --device jetson|rpi --workflow N --deadline S --sats N\n\
-         \x20            --delta D --frames N --seed N --isl-bps R --json\n\
-         sweep flags:  --deadlines A,B,.. --workflows 2,3,4 --sats-list 3,5,8\n\
-         \x20            --frames-list 5,10 --isl-list R1,R2\n\
-         \x20            --backends orbitchain,load-spraying,data-par,compute-par\n\
-         \x20            --threads N"
+         common flags:  --device jetson|rpi --workflow N --deadline S --sats N\n\
+         \x20             --delta D --frames N --seed N --isl-bps R --json\n\
+         sweep flags:   --deadlines A,B,.. --workflows 2,3,4 --sats-list 3,5,8\n\
+         \x20             --frames-list 5,10 --isl-list R1,R2 --mtbf-list 300,600\n\
+         \x20             --outage-list 60,120 --epoch-frames-list 2,4\n\
+         \x20             --backends orbitchain,load-spraying,data-par,compute-par\n\
+         \x20             --threads N\n\
+         dynamic flags: --epochs N --epoch-frames N --mtbf S --mttr S\n\
+         \x20             --link-mtbf S --link-mttr S --degrade-factor F\n\
+         \x20             --burst-mtbf S --burst-duration S --burst-factor X\n\
+         \x20             --area-visibility --state-bytes B --backend B --no-baseline"
     );
 }
 
@@ -311,6 +425,19 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     if let Some(raw) = flags.get("isl-list") {
         grid = grid.isl_rates(&parse_list::<f64>(raw)?);
     }
+    if let Some(raw) = flags.get("mtbf-list") {
+        grid = grid.sat_mtbfs(&parse_list::<f64>(raw)?);
+    }
+    if let Some(raw) = flags.get("outage-list") {
+        grid = grid.outage_durations(&parse_list::<f64>(raw)?);
+    }
+    if let Some(raw) = flags.get("epoch-frames-list") {
+        let frames = parse_list::<usize>(raw)?;
+        if frames.contains(&0) {
+            anyhow::bail!("--epoch-frames-list entries must be >= 1");
+        }
+        grid = grid.epoch_frames(&frames);
+    }
     if let Some(raw) = flags.get("backends") {
         let kinds: Vec<BackendKind> = raw
             .split(',')
@@ -401,6 +528,162 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Epoch-driven orchestration: run the configured fault trace with
+/// re-planning, then (unless `--no-baseline`) the identical trace with the
+/// static ride-through policy, and report the availability/overhead
+/// tradeoff.
+fn cmd_dynamic(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let mut s = scenario_from_flags(flags)?;
+    let mut spec = s.dynamic.clone().unwrap_or_default();
+    if let Some(v) = flags.get("epochs") {
+        spec.epochs = v.parse()?;
+    }
+    if let Some(v) = flags.get("epoch-frames") {
+        spec.frames_per_epoch = v.parse::<usize>()?.max(1);
+    }
+    if let Some(v) = flags.get("mtbf") {
+        spec.sat_mtbf_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("mttr") {
+        spec.sat_mttr_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("link-mtbf") {
+        spec.link_mtbf_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("link-mttr") {
+        spec.link_mttr_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("degrade-factor") {
+        spec.degrade_factor = v.parse()?;
+    }
+    if let Some(v) = flags.get("burst-mtbf") {
+        spec.burst_mtbf_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("burst-duration") {
+        spec.burst_duration_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("burst-factor") {
+        spec.burst_factor = v.parse()?;
+    }
+    if flags.contains_key("area-visibility") {
+        spec.area_visibility = true;
+    }
+    if let Some(v) = flags.get("state-bytes") {
+        spec.migration_state_bytes = v.parse()?;
+    }
+    spec.replan = true;
+    s.dynamic = Some(spec.clone());
+
+    let backend = match flags.get("backend") {
+        Some(name) => BackendKind::from_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown --backend {name:?}"))?,
+        None => BackendKind::OrbitChain,
+    };
+
+    let orch = EpochOrchestrator::new(&s).with_backend(backend);
+    let timeline = orch.timeline().clone();
+    let df = orch.constellation().frame_deadline_s;
+    let dyn_rep = orch.run()?;
+    let static_rep = if flags.contains_key("no-baseline") {
+        None
+    } else {
+        Some(
+            EpochOrchestrator::new(&s)
+                .with_backend(backend)
+                .with_timeline(timeline.clone())
+                .replanning(false)
+                .run()?,
+        )
+    };
+
+    if flags.contains_key("json") {
+        let mut fields = vec![
+            ("timeline", timeline.to_json()),
+            ("dynamic", dyn_rep.to_json()),
+        ];
+        if let Some(st) = &static_rep {
+            fields.push(("static", st.to_json()));
+        }
+        println!("{}", obj(fields).to_string_pretty());
+        return Ok(());
+    }
+
+    println!(
+        "timeline: {} events over {:.0}s ({} epochs x {:.0}s, seed {})",
+        timeline.events.len(),
+        spec.horizon_s(df),
+        spec.epochs,
+        spec.epoch_s(df),
+        s.seed
+    );
+    for ev in &timeline.events {
+        println!("  t={:7.1}s  {}", ev.t_s, ev.kind);
+    }
+    println!(
+        "{:<5} {:>7} {:>6} {:>10} {:>7} {:>8} {:>7}  {}",
+        "epoch", "t0_s", "frames", "completion", "backlog", "migrated", "down_s", "state"
+    );
+    for e in &dyn_rep.epochs {
+        let mut state = String::new();
+        if !e.failed_sats.is_empty() {
+            state.push_str(&format!("failed{:?} ", e.failed_sats));
+        }
+        if !e.outaged_links.is_empty() {
+            state.push_str(&format!("outage{:?} ", e.outaged_links));
+        }
+        if e.burst > 1.0 {
+            state.push_str(&format!("burst x{} ", e.burst));
+        }
+        if !e.area_visible {
+            state.push_str("hidden ");
+        }
+        if e.replanned {
+            state.push_str("[re-planned]");
+        }
+        println!(
+            "{:<5} {:>7.0} {:>6} {:>10.3} {:>7} {:>8} {:>7.2}  {}",
+            e.epoch,
+            e.t_start_s,
+            e.frames,
+            e.completion_ratio,
+            e.backlog,
+            e.migrations,
+            e.downtime_s,
+            state
+        );
+    }
+    for note in &dyn_rep.notes {
+        println!("note: {note}");
+    }
+    println!(
+        "dynamic (re-planning): completion={:.3} replans={} migration={:.0} B \
+         downtime={:.1}s lost_tiles={:.0}",
+        dyn_rep.completion_ratio,
+        dyn_rep.replans,
+        dyn_rep.migration_bytes,
+        dyn_rep.downtime_s,
+        dyn_rep.tiles_lost
+    );
+    if let Some(st) = &static_rep {
+        println!(
+            "static ride-through:   completion={:.3} (re-planning delta {:+.3})",
+            st.completion_ratio,
+            dyn_rep.completion_ratio - st.completion_ratio
+        );
+    }
+    println!(
+        "counters: dynamic.replans={:.0} dynamic.migration.bytes={:.0} \
+         dynamic.downtime_s={:.2} dynamic.tiles_lost={:.0} \
+         dynamic.backlog_final={:.0}",
+        dyn_rep.metrics.counter("dynamic.replans"),
+        dyn_rep.metrics.counter("dynamic.migration.bytes"),
+        dyn_rep.metrics.counter("dynamic.downtime_s"),
+        dyn_rep.metrics.counter("dynamic.tiles_lost"),
+        dyn_rep.metrics.counter("dynamic.backlog_final"),
+    );
+    Ok(())
+}
+
 fn cmd_experiment(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let which = pos.first().map(String::as_str).unwrap_or("all");
     let device = flags.get("device").map(String::as_str).unwrap_or("jetson");
@@ -453,6 +736,14 @@ fn cmd_experiment(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Re
     }
     if all || which == "fig20" {
         tables.push(exp::fig20_planning());
+    }
+    if all || which == "dynamic" {
+        let seed: u64 = flags
+            .get("seed")
+            .map(|v| v.parse())
+            .transpose()?
+            .unwrap_or(7);
+        tables.push(exp::dynamic_availability(device, seed, 20, 600.0));
     }
     if tables.is_empty() {
         anyhow::bail!("unknown experiment {which:?}");

@@ -203,6 +203,22 @@ pub fn plan(
     profiles: &ProfileDb,
     constellation: &Constellation,
 ) -> Result<DeploymentPlan, PlanError> {
+    plan_masked(workflow, profiles, constellation, &[])
+}
+
+/// [`plan`] with a deployment mask: satellites listed in `banned` may not
+/// host any instance (`x_{i,j} = y_{i,j} = 0`, which via the quota/slice
+/// linking rows also pins `r` and `t` to zero).  The dynamic orchestration
+/// layer re-plans through this entry point when payloads fail or a link
+/// outage cuts satellites off; coverage constraints still range over the
+/// banned satellites (with zero capacity), so the surviving members of each
+/// capture group must absorb its workload.
+pub fn plan_masked(
+    workflow: &Workflow,
+    profiles: &ProfileDb,
+    constellation: &Constellation,
+    banned: &[usize],
+) -> Result<DeploymentPlan, PlanError> {
     workflow.validate()?;
     constellation.validate()?;
     for i in 0..workflow.len() {
@@ -234,8 +250,9 @@ pub fn plan(
     // Symmetry breaking: in a shift-free constellation every satellite is
     // interchangeable, which makes the B&B tree explode across permuted
     // twins.  Deploying the source function on a satellite prefix is valid
-    // for any solution up to permutation and prunes the twins.
-    if constellation.capture_groups.len() == 1 && nm > 0 {
+    // for any solution up to permutation and prunes the twins.  (A
+    // deployment mask breaks the interchangeability, so it disables this.)
+    if constellation.capture_groups.len() == 1 && nm > 0 && banned.is_empty() {
         for j in 0..ns.saturating_sub(1) {
             lp.add(vec![(vm.x(0, j), 1.0), (vm.x(0, j + 1), -1.0)], Cmp::Ge, 0.0);
         }
@@ -302,6 +319,18 @@ pub fn plan(
         lp.add(gpu_row, Cmp::Le, gpu_window);
         lp.add(mem_row, Cmp::Le, spec.mem_mb);
         lp.add(pow_row, Cmp::Le, spec.power_w);
+    }
+
+    // Deployment mask: banned satellites host nothing (their binaries are
+    // pinned to zero; the linking rows then pin r and t).
+    for &j in banned {
+        if j >= ns {
+            continue;
+        }
+        for i in 0..nm {
+            lp.add(vec![(vm.x(i, j), 1.0)], Cmp::Le, 0.0);
+            lp.add(vec![(vm.y(i, j), 1.0)], Cmp::Le, 0.0);
+        }
     }
 
     // Workload constraints: cumulative Eq. (13) per capture group.

@@ -74,6 +74,24 @@ impl Pipeline {
         }
         bytes.max(0.0)
     }
+
+    /// Chain adjacencies (index `l` = the undirected link between sats `l`
+    /// and `l+1`) that some inter-stage transfer of this pipeline crosses.
+    /// The dynamic layer uses this to detect routes invalidated by a link
+    /// outage.
+    pub fn adjacencies_crossed(&self, wf: &Workflow) -> Vec<usize> {
+        let mut used = std::collections::BTreeSet::new();
+        for (u, v, delta) in wf.edge_list() {
+            if delta <= 0.0 {
+                continue;
+            }
+            let (a, b) = (self.stages[u].sat, self.stages[v].sat);
+            for l in a.min(b)..a.max(b) {
+                used.insert(l);
+            }
+        }
+        used.into_iter().collect()
+    }
 }
 
 /// Result of routing one frame's workload.

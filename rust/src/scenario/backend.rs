@@ -30,6 +30,11 @@ pub struct Ctx<'a> {
     pub wf: &'a Workflow,
     pub db: &'a ProfileDb,
     pub c: &'a Constellation,
+    /// Satellites that may not host instances (failed payloads / cut-off
+    /// chain segments).  Empty for static scenarios.  The MILP planner
+    /// enforces it exactly; the fixed baseline frameworks ignore it — they
+    /// model systems that cannot re-plan around faults.
+    pub banned: &'a [usize],
 }
 
 /// What a planner backend produced.
@@ -68,7 +73,7 @@ impl PlannerBackend for MilpPlanner {
     }
 
     fn plan(&self, ctx: &Ctx<'_>) -> Result<Planned, ScenarioError> {
-        planner::plan(ctx.wf, ctx.db, ctx.c)
+        planner::plan_masked(ctx.wf, ctx.db, ctx.c, ctx.banned)
             .map(Planned::Deployment)
             .map_err(ScenarioError::Plan)
     }

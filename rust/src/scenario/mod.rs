@@ -281,7 +281,7 @@ impl Orchestrator {
     }
 
     fn ctx(&self) -> Ctx<'_> {
-        Ctx { wf: &self.wf, db: &self.db, c: &self.c }
+        Ctx { wf: &self.wf, db: &self.db, c: &self.c, banned: &[] }
     }
 
     /// Run the configured planner backend.

@@ -2,9 +2,11 @@
 //!
 //! A [`SweepGrid`] expands a base [`Scenario`] across the dimensions the
 //! evaluation sweeps — frame deadline, workflow size, constellation size,
-//! ISL rate, frame count, device and backend — into an ordered list of
-//! [`SweepPoint`]s.  [`SweepRunner`] fans the points across
-//! `std::thread::scope` workers.
+//! ISL rate, frame count, device, backend, and the event-timeline
+//! parameters of the dynamic layer (satellite MTBF, outage duration, epoch
+//! length) — into an ordered list of [`SweepPoint`]s.  [`SweepRunner`] fans
+//! the points across `std::thread::scope` workers; points carrying a
+//! dynamic extension run the epoch-orchestration loop.
 //!
 //! **Determinism**: every point's seed is fixed at grid-construction time
 //! (optionally derived per point from the base seed), each point's
@@ -34,7 +36,11 @@ pub struct SweepPoint {
 ///
 /// Dimensions left unset keep the base scenario's value.  Point order is
 /// deterministic: devices → constellation sizes → deadlines → workflow
-/// sizes → frame counts → ISL rates → backends (innermost).
+/// sizes → frame counts → ISL rates → satellite MTBFs → outage durations →
+/// epoch lengths → backends (innermost).  Setting any of the three
+/// event-timeline dimensions attaches a
+/// [`DynamicSpec`](crate::dynamic::DynamicSpec) to the point (extending the
+/// base scenario's spec when present), so those points run the epoch loop.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
     base: Scenario,
@@ -44,6 +50,9 @@ pub struct SweepGrid {
     workflow_sizes: Vec<usize>,
     frames: Vec<usize>,
     isl_rates: Vec<Option<f64>>,
+    sat_mtbfs: Vec<f64>,
+    outage_durations: Vec<f64>,
+    epoch_frames: Vec<usize>,
     backends: Vec<BackendKind>,
     reseed: bool,
 }
@@ -58,6 +67,9 @@ impl SweepGrid {
             workflow_sizes: Vec::new(),
             frames: Vec::new(),
             isl_rates: Vec::new(),
+            sat_mtbfs: Vec::new(),
+            outage_durations: Vec::new(),
+            epoch_frames: Vec::new(),
             backends: Vec::new(),
             reseed: false,
         }
@@ -92,6 +104,27 @@ impl SweepGrid {
 
     pub fn isl_rates(mut self, rates: &[f64]) -> Self {
         self.isl_rates = rates.iter().map(|&r| Some(r)).collect();
+        self
+    }
+
+    /// Mean-time-between-failure values for the satellite fault process
+    /// (seconds); attaches the dynamic extension to every point.
+    pub fn sat_mtbfs(mut self, mtbfs: &[f64]) -> Self {
+        self.sat_mtbfs = mtbfs.to_vec();
+        self
+    }
+
+    /// Mean outage (repair) durations for the satellite fault process
+    /// (seconds); attaches the dynamic extension to every point.
+    pub fn outage_durations(mut self, durations: &[f64]) -> Self {
+        self.outage_durations = durations.to_vec();
+        self
+    }
+
+    /// Epoch lengths in frames; attaches the dynamic extension to every
+    /// point.
+    pub fn epoch_frames(mut self, frames: &[usize]) -> Self {
+        self.epoch_frames = frames.to_vec();
         self
     }
 
@@ -139,6 +172,21 @@ impl SweepGrid {
         } else {
             self.isl_rates.clone()
         };
+        let mtbfs: Vec<Option<f64>> = if self.sat_mtbfs.is_empty() {
+            vec![None]
+        } else {
+            self.sat_mtbfs.iter().map(|&m| Some(m)).collect()
+        };
+        let outages: Vec<Option<f64>> = if self.outage_durations.is_empty() {
+            vec![None]
+        } else {
+            self.outage_durations.iter().map(|&o| Some(o)).collect()
+        };
+        let epoch_frames: Vec<Option<usize>> = if self.epoch_frames.is_empty() {
+            vec![None]
+        } else {
+            self.epoch_frames.iter().map(|&f| Some(f)).collect()
+        };
         let backends = if self.backends.is_empty() {
             vec![BackendKind::OrbitChain]
         } else {
@@ -152,23 +200,55 @@ impl SweepGrid {
                     for &wf_size in &sizes {
                         for &n_frames in &frames {
                             for &isl in &isl_rates {
-                                for &backend in &backends {
-                                    let mut s = self.base.clone();
-                                    s.device = device;
-                                    if let Some(n) = ns {
-                                        s.n_sats = n;
-                                        s.orbit_shift = false;
+                                for &mtbf in &mtbfs {
+                                    for &outage in &outages {
+                                        for &ef in &epoch_frames {
+                                            for &backend in &backends {
+                                                let mut s = self.base.clone();
+                                                s.device = device;
+                                                if let Some(n) = ns {
+                                                    s.n_sats = n;
+                                                    s.orbit_shift = false;
+                                                }
+                                                s.frame_deadline_s = deadline;
+                                                s.workflow_size = wf_size;
+                                                s.frames = n_frames;
+                                                s.isl_rate_bps = isl;
+                                                if mtbf.is_some()
+                                                    || outage.is_some()
+                                                    || ef.is_some()
+                                                {
+                                                    let mut d = s
+                                                        .dynamic
+                                                        .clone()
+                                                        .unwrap_or_default();
+                                                    if let Some(m) = mtbf {
+                                                        d.sat_mtbf_s = m;
+                                                    }
+                                                    if let Some(o) = outage {
+                                                        d.sat_mttr_s = o;
+                                                    }
+                                                    if let Some(f) = ef {
+                                                        d.frames_per_epoch = f;
+                                                    }
+                                                    s.dynamic = Some(d);
+                                                }
+                                                let idx = points.len();
+                                                if self.reseed {
+                                                    s.seed = derived_seed(
+                                                        self.base.seed,
+                                                        idx as u64,
+                                                    );
+                                                }
+                                                s.name =
+                                                    format!("{}#{idx}", self.base.name);
+                                                points.push(SweepPoint {
+                                                    scenario: s,
+                                                    backend,
+                                                });
+                                            }
+                                        }
                                     }
-                                    s.frame_deadline_s = deadline;
-                                    s.workflow_size = wf_size;
-                                    s.frames = n_frames;
-                                    s.isl_rate_bps = isl;
-                                    let idx = points.len();
-                                    if self.reseed {
-                                        s.seed = derived_seed(self.base.seed, idx as u64);
-                                    }
-                                    s.name = format!("{}#{idx}", self.base.name);
-                                    points.push(SweepPoint { scenario: s, backend });
                                 }
                             }
                         }
@@ -251,9 +331,18 @@ impl SweepRunner {
                         break;
                     }
                     let point = &points[i];
-                    let result = Orchestrator::new(&point.scenario)
-                        .with_backend(point.backend)
-                        .run();
+                    // Dynamic points run the epoch loop; static points the
+                    // single plan → route → simulate cycle.  Both collapse
+                    // to the same report shape.
+                    let result = if point.scenario.dynamic.is_some() {
+                        crate::dynamic::EpochOrchestrator::new(&point.scenario)
+                            .with_backend(point.backend)
+                            .run_scenario_report()
+                    } else {
+                        Orchestrator::new(&point.scenario)
+                            .with_backend(point.backend)
+                            .run()
+                    };
                     *slots[i].lock().expect("slot lock") = Some(result);
                 });
             }
@@ -327,6 +416,26 @@ mod tests {
             sequential.merged.to_json().to_string_compact(),
             parallel.merged.to_json().to_string_compact()
         );
+    }
+
+    #[test]
+    fn timeline_dimensions_attach_dynamic_extension() {
+        let base = Scenario::jetson().with_frames(2);
+        let points = SweepGrid::new(base)
+            .sat_mtbfs(&[300.0, 600.0])
+            .outage_durations(&[60.0])
+            .epoch_frames(&[2])
+            .points();
+        assert_eq!(points.len(), 2);
+        for (point, mtbf) in points.iter().zip([300.0, 600.0]) {
+            let d = point.scenario.dynamic.as_ref().expect("dynamic attached");
+            assert_eq!(d.sat_mtbf_s, mtbf);
+            assert_eq!(d.sat_mttr_s, 60.0);
+            assert_eq!(d.frames_per_epoch, 2);
+        }
+        // Without timeline dimensions, no extension is attached.
+        let plain = SweepGrid::new(Scenario::jetson()).points();
+        assert!(plain[0].scenario.dynamic.is_none());
     }
 
     #[test]

@@ -43,6 +43,11 @@ pub struct InstanceSpec {
     pub rate_tiles_s: f64,
     /// Availability window (always-on for CPU; the GPU slice otherwise).
     pub window: SliceWindow,
+    /// Earliest time this instance can serve, seconds.  0 for static runs;
+    /// the dynamic orchestration layer uses it to model state-migration /
+    /// cold-deploy handover delays and (with a large sentinel) instances
+    /// stranded on failed satellites.
+    pub ready_s: f64,
 }
 
 /// Simulation configuration.
@@ -59,11 +64,29 @@ pub struct SimConfig {
     /// Override the ISL rate (bit/s); `None` uses the constellation's
     /// link-budget rate (Fig. 15 sweeps this).
     pub isl_rate_bps: Option<f64>,
+    /// Per-adjacency ISL rate multipliers (index `l` for the undirected
+    /// pair `l ↔ l+1`); the dynamic layer's per-epoch link table.  `None`
+    /// means every link runs at the nominal rate.  Factors ≤ 0 model a hard
+    /// outage: the rate is clamped to a vanishing value so transfers stall
+    /// far past any simulation horizon instead of dividing by zero.
+    pub link_rate_factors: Option<Vec<f64>>,
+    /// Backlog tiles carried over from a previous epoch (warm start).  They
+    /// are injected at `t = 0` with no revisit delay — their pixels were
+    /// already captured — and distributed over pipelines exactly like frame
+    /// tiles.
+    pub warm_tiles: usize,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        SimConfig { frames: 10, drain_s: 0.0, seed: 7, isl_rate_bps: None }
+        SimConfig {
+            frames: 10,
+            drain_s: 0.0,
+            seed: 7,
+            isl_rate_bps: None,
+            link_rate_factors: None,
+            warm_tiles: 0,
+        }
     }
 }
 
@@ -82,6 +105,9 @@ pub struct SimReport {
     /// Latency breakdown of the worst tile: (processing, communication,
     /// revisit) seconds.
     pub breakdown: (f64, f64, f64),
+    /// Injected tiles whose pipeline journey had not ended by the cutoff —
+    /// the backlog a warm-started next epoch inherits.
+    pub unfinished_tiles: usize,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -189,6 +215,29 @@ impl<'a> Simulator<'a> {
         let mut rng = Rng::new(self.cfg.seed);
         let mut metrics = Metrics::new();
 
+        // Per-function metric keys, formatted once: `inc` runs per event,
+        // and a `format!` per event dominated the sim profile.
+        let recv_keys: Vec<String> = (0..self.wf.len())
+            .map(|i| format!("func.{}.received", self.wf.name(i)))
+            .collect();
+        let done_keys: Vec<String> = (0..self.wf.len())
+            .map(|i| format!("func.{}.analyzed", self.wf.name(i)))
+            .collect();
+
+        // Effective directed-link rate: nominal rate times the adjacency's
+        // factor from the per-epoch link table (link `2l`/`2l+1` ↔
+        // adjacency `l`).  Outage factors clamp to a vanishing rate so the
+        // transfer stalls past any horizon rather than dividing by zero.
+        let link_rate = |link: usize| -> f64 {
+            match &self.cfg.link_rate_factors {
+                Some(fs) => {
+                    let f = fs.get(link / 2).copied().unwrap_or(1.0);
+                    (isl_rate * f).max(1e-9)
+                }
+                None => isl_rate,
+            }
+        };
+
         // Weighted tile → pipeline assignment per capture group.
         let group_pipes: Vec<Vec<usize>> = (0..c.capture_groups.len())
             .map(|g| {
@@ -220,10 +269,61 @@ impl<'a> Simulator<'a> {
         let mut link_queue: Vec<VecDeque<IslMsg>> = vec![VecDeque::new(); n_links];
         let mut link_busy = vec![false; n_links];
 
+        // Weighted choice by σ_k among a group's pipelines.
+        let pick_pipeline = |rng: &mut Rng, pipes: &[usize]| -> usize {
+            let total: f64 = pipes.iter().map(|&k| self.pipelines[k].workload).sum();
+            let mut pick = rng.f64() * total;
+            let mut chosen = pipes[pipes.len() - 1];
+            for &k in pipes {
+                pick -= self.pipelines[k].workload;
+                if pick <= 0.0 {
+                    chosen = k;
+                    break;
+                }
+            }
+            chosen
+        };
+
+        let sources = self.wf.sources();
+
+        // Warm backlog: tiles inherited from the previous epoch.  Their
+        // pixels are already resident at the source satellites, so they
+        // enter at t = 0 with no revisit delay.
+        for w in 0..self.cfg.warm_tiles {
+            if c.tiles_per_frame == 0 {
+                break;
+            }
+            let tile_no = w % c.tiles_per_frame;
+            let g = c.tile_group(tile_no);
+            let pipes = &group_pipes[g];
+            if pipes.is_empty() {
+                for &s in &sources {
+                    metrics.inc(&recv_keys[s], 1.0);
+                }
+                metrics.inc("tiles.unrouted", 1.0);
+                continue;
+            }
+            let chosen = pick_pipeline(&mut rng, pipes);
+            let tid = tiles.len() as u32;
+            tiles.push(TileState {
+                pipeline: chosen,
+                t0: 0.0,
+                last_done: 0.0,
+                proc_s: 0.0,
+                comm_s: 0.0,
+                revisit_s: 0.0,
+                finished: false,
+            });
+            for &sfunc in &sources {
+                let st = self.pipelines[chosen].stages[sfunc];
+                let inst = self.inst_idx[&(st.func, st.sat, st.dev)];
+                push(&mut heap, &mut seq, 0.0, Ev::Arrival { inst, tile: tid });
+            }
+        }
+
         // Inject frames: each tile enters its pipeline's source stages.
         // (In-degree-0 functions all receive the raw tile from the local
         // sensing function of the stage's satellite.)
-        let sources = self.wf.sources();
         for f in 0..self.cfg.frames {
             let t0 = f as f64 * df;
             for tile_no in 0..c.tiles_per_frame {
@@ -233,22 +333,12 @@ impl<'a> Simulator<'a> {
                     // Unrouted tiles count as received-but-never-analyzed
                     // at the source functions.
                     for &s in &sources {
-                        metrics.inc(&format!("func.{}.received", self.wf.name(s)), 1.0);
+                        metrics.inc(&recv_keys[s], 1.0);
                     }
                     metrics.inc("tiles.unrouted", 1.0);
                     continue;
                 }
-                // Weighted choice by σ_k.
-                let total: f64 = pipes.iter().map(|&k| self.pipelines[k].workload).sum();
-                let mut pick = rng.f64() * total;
-                let mut chosen = pipes[pipes.len() - 1];
-                for &k in pipes {
-                    pick -= self.pipelines[k].workload;
-                    if pick <= 0.0 {
-                        chosen = k;
-                        break;
-                    }
-                }
+                let chosen = pick_pipeline(&mut rng, pipes);
                 let tid = tiles.len() as u32;
                 tiles.push(TileState {
                     pipeline: chosen,
@@ -271,14 +361,22 @@ impl<'a> Simulator<'a> {
             }
         }
 
+        // Measurement cutoff: frames keep their deadline discipline;
+        // anything still queued or in flight past it counts as not analyzed
+        // (and feeds the warm-start backlog of the next epoch).
+        let cutoff = self.cfg.frames as f64 * df
+            + c.revisit_time_s(c.n_sats - 1)
+            + self.cfg.drain_s;
         let mut last_event_t = 0.0;
 
         while let Some(Reverse(QueuedEvent { t, ev, .. })) = heap.pop() {
+            if t > cutoff {
+                break;
+            }
             last_event_t = t;
             match ev {
                 Ev::Arrival { inst, tile } => {
-                    let name = self.wf.name(self.instances[inst].func);
-                    metrics.inc(&format!("func.{name}.received"), 1.0);
+                    metrics.inc(&recv_keys[self.instances[inst].func], 1.0);
                     inst_queue[inst].push_back(tile);
                     if !inst_busy[inst] {
                         self.start_service(
@@ -295,7 +393,7 @@ impl<'a> Simulator<'a> {
                 Ev::Done { inst, tile } => {
                     let spec = &self.instances[inst];
                     let name = self.wf.name(spec.func);
-                    metrics.inc(&format!("func.{name}.analyzed"), 1.0);
+                    metrics.inc(&done_keys[spec.func], 1.0);
                     let ts = &mut tiles[tile as usize];
                     ts.last_done = t;
                     // Forward downstream with thinning by δ.
@@ -339,18 +437,16 @@ impl<'a> Simulator<'a> {
                             if !link_busy[link] {
                                 link_busy[link] = true;
                                 let tx = link_queue[link].front().unwrap().bytes * 8.0
-                                    / isl_rate;
+                                    / link_rate(link);
                                 push(&mut heap, &mut seq, t + tx, Ev::LinkDone { link });
                             }
                         }
                     }
-                    if terminal {
-                        // No downstream (or all thinned): tile's journey on
-                        // this path ends here.
-                        let done_all = self.wf.downstream(spec.func).is_empty();
-                        if done_all && !ts.finished {
-                            ts.finished = true;
-                        }
+                    if terminal && !ts.finished {
+                        // Journey over: a sink completed, or every
+                        // downstream edge thinned the tile out — either way
+                        // no further stage will run, so it is not backlog.
+                        ts.finished = true;
                     }
                     // Serve next queued tile.
                     inst_busy[inst] = false;
@@ -370,7 +466,7 @@ impl<'a> Simulator<'a> {
                     let msg = link_queue[link].pop_front().unwrap();
                     // Next message on this link.
                     if let Some(next) = link_queue[link].front() {
-                        let tx = next.bytes * 8.0 / isl_rate;
+                        let tx = next.bytes * 8.0 / link_rate(link);
                         push(&mut heap, &mut seq, t + tx, Ev::LinkDone { link });
                     } else {
                         link_busy[link] = false;
@@ -401,19 +497,11 @@ impl<'a> Simulator<'a> {
                         if !link_busy[link2] {
                             link_busy[link2] = true;
                             let tx = link_queue[link2].front().unwrap().bytes * 8.0
-                                / isl_rate;
+                                / link_rate(link2);
                             push(&mut heap, &mut seq, t + tx, Ev::LinkDone { link: link2 });
                         }
                     }
                 }
-            }
-            // Stop measuring at the cutoff: frames keep their deadline
-            // discipline; anything left in queues counts as not analyzed.
-            let cutoff = self.cfg.frames as f64 * df
-                + c.revisit_time_s(c.n_sats - 1)
-                + self.cfg.drain_s;
-            if t > cutoff {
-                break;
             }
         }
         let _ = last_event_t;
@@ -421,9 +509,8 @@ impl<'a> Simulator<'a> {
         // Aggregate.
         let mut ratios = Vec::new();
         for i in 0..self.wf.len() {
-            let name = self.wf.name(i);
-            let rec = metrics.counter(&format!("func.{name}.received"));
-            let ana = metrics.counter(&format!("func.{name}.analyzed"));
+            let rec = metrics.counter(&recv_keys[i]);
+            let ana = metrics.counter(&done_keys[i]);
             if rec > 0.0 {
                 ratios.push((ana / rec).min(1.0));
             }
@@ -444,12 +531,14 @@ impl<'a> Simulator<'a> {
             let _ = ts.proc_s;
         }
 
+        let unfinished = tiles.iter().filter(|ts| !ts.finished).count();
         let isl_per_frame = metrics.counter("isl.bytes") / self.cfg.frames.max(1) as f64;
         SimReport {
             completion_ratio: completion,
             isl_bytes_per_frame: isl_per_frame,
             frame_latency_s: worst_latency,
             breakdown,
+            unfinished_tiles: unfinished,
             metrics,
         }
     }
@@ -474,7 +563,9 @@ impl<'a> Simulator<'a> {
         inst_queue[inst].pop_front();
         inst_busy[inst] = true;
         let work = 1.0 / spec.rate_tiles_s;
-        let done_t = spec.window.finish(t, work);
+        // An instance serves no earlier than `ready_s` (migration handover
+        // delay, or a huge sentinel for a failed satellite's payload).
+        let done_t = spec.window.finish(t.max(spec.ready_s), work);
         tiles[tile as usize].proc_s += done_t - t;
         heap.push(Reverse(QueuedEvent { t: done_t, seq: *seq, ev: Ev::Done { inst, tile } }));
         *seq += 1;
@@ -503,6 +594,7 @@ pub fn instances_from_plan(
                     dev: Dev::Cpu,
                     rate_tiles_s: p.cpu_speed,
                     window: SliceWindow::always(df),
+                    ready_s: 0.0,
                 });
             }
             if p.gpu && p.gpu_speed > 0.0 && p.gpu_slice_s > 0.0 {
@@ -516,6 +608,7 @@ pub fn instances_from_plan(
                         len: p.gpu_slice_s,
                         period: df,
                     },
+                    ready_s: 0.0,
                 });
                 gpu_offset += p.gpu_slice_s;
             }

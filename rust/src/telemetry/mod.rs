@@ -23,13 +23,29 @@ impl Metrics {
     }
 
     /// Add `v` to a counter.
+    ///
+    /// Hot path: the simulator calls this once per event.  `BTreeMap::entry`
+    /// demands an owned key, so the obvious `entry(name.to_string())` spelling
+    /// allocates a `String` on *every* call; looking up first means the
+    /// allocation happens only on the first increment of each counter.
     pub fn inc(&mut self, name: &str, v: f64) {
-        *self.counters.entry(name.to_string()).or_insert(0.0) += v;
+        match self.counters.get_mut(name) {
+            Some(slot) => *slot += v,
+            None => {
+                self.counters.insert(name.to_string(), v);
+            }
+        }
     }
 
-    /// Record one sample of a distribution metric.
+    /// Record one sample of a distribution metric (same lookup-before-insert
+    /// discipline as [`Metrics::inc`]).
     pub fn observe(&mut self, name: &str, v: f64) {
-        self.samples.entry(name.to_string()).or_default().push(v);
+        match self.samples.get_mut(name) {
+            Some(vs) => vs.push(v),
+            None => {
+                self.samples.insert(name.to_string(), vec![v]);
+            }
+        }
     }
 
     /// Current counter value (0 when never incremented).

@@ -1,0 +1,176 @@
+//! Integration: the dynamic orchestration subsystem end to end — epoch
+//! re-planning vs static ride-through under identical fault traces,
+//! migration accounting, and the CLI acceptance scenario
+//! (`dynamic --seed 7 --epochs 20 --mtbf 600`).
+
+use orbitchain::config::Scenario;
+use orbitchain::dynamic::{
+    DynamicSpec, EpochOrchestrator, Event, EventKind, Timeline,
+};
+use orbitchain::exp;
+
+fn acceptance_spec() -> DynamicSpec {
+    // The CLI acceptance parameters: `--seed 7 --epochs 20 --mtbf 600` on
+    // the Jetson testbed, everything else at spec defaults.
+    DynamicSpec { epochs: 20, sat_mtbf_s: 600.0, ..DynamicSpec::default() }
+}
+
+#[test]
+fn declared_fault_trace_replanning_beats_ride_through() {
+    // One mid-mission payload failure with recovery, identical for both
+    // policies.  Epochs are 20 s (4 frames x 5 s): the failure lands at the
+    // epoch-2 boundary, the recovery at epoch 13.
+    let spec = DynamicSpec {
+        epochs: 20,
+        frames_per_epoch: 4,
+        sat_mtbf_s: 0.0,
+        link_mtbf_s: 0.0,
+        burst_mtbf_s: 0.0,
+        ..DynamicSpec::default()
+    };
+    let s = Scenario::jetson().with_dynamic(spec);
+    let trace = Timeline::declared(vec![
+        Event { t_s: 30.0, kind: EventKind::SatFail { sat: 2 } },
+        Event { t_s: 250.0, kind: EventKind::SatRecover { sat: 2 } },
+    ]);
+
+    let dynamic = EpochOrchestrator::new(&s)
+        .with_timeline(trace.clone())
+        .run()
+        .expect("re-planning mission");
+    let ride = EpochOrchestrator::new(&s)
+        .with_timeline(trace)
+        .replanning(false)
+        .run()
+        .expect("ride-through mission");
+
+    // Failure + recovery: exactly two re-plans, none for the baseline.
+    assert_eq!(dynamic.replans, 2, "notes: {:?}", dynamic.notes);
+    assert_eq!(ride.replans, 0);
+    // The recovery re-plan redeploys onto sat 2 from live donors.
+    assert!(dynamic.migration_bytes > 0.0);
+    assert!(dynamic.downtime_s > 0.0);
+    assert_eq!(dynamic.metrics.counter("dynamic.replans"), 2.0);
+    assert!(dynamic.metrics.counter("dynamic.migration.bytes") > 0.0);
+    // Availability: re-planning must beat riding through the outage.
+    assert!(
+        dynamic.completion_ratio > ride.completion_ratio,
+        "replan {} vs ride-through {}",
+        dynamic.completion_ratio,
+        ride.completion_ratio
+    );
+    // Both policies saw the same fault trace.
+    let failed = |rep: &orbitchain::dynamic::DynamicReport| -> Vec<Vec<usize>> {
+        rep.epochs.iter().map(|e| e.failed_sats.clone()).collect()
+    };
+    assert_eq!(failed(&dynamic), failed(&ride));
+}
+
+#[test]
+fn acceptance_trace_produces_replans_and_migration() {
+    // The generated seed-7 trace behind the CLI acceptance command: a sat-1
+    // failure, recovery, and a second failure inside the 400 s horizon.
+    let s = Scenario::jetson().with_seed(7).with_dynamic(acceptance_spec());
+    let orch = EpochOrchestrator::new(&s);
+    assert!(
+        orch.timeline()
+            .events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::SatFail { .. })),
+        "seed-7 timeline must contain a payload failure: {:?}",
+        orch.timeline().events
+    );
+    let dynamic = orch.run().expect("re-planning mission");
+    assert!(dynamic.replans > 0, "notes: {:?}", dynamic.notes);
+    assert!(dynamic.migration_bytes > 0.0);
+    assert!(dynamic.metrics.counter("dynamic.replans") > 0.0);
+    assert!(dynamic.metrics.counter("dynamic.migration.bytes") > 0.0);
+
+    let ride = EpochOrchestrator::new(&s)
+        .with_timeline(orch.timeline().clone())
+        .replanning(false)
+        .run()
+        .expect("ride-through mission");
+    assert!(
+        dynamic.completion_ratio > ride.completion_ratio,
+        "replan {} vs ride-through {}",
+        dynamic.completion_ratio,
+        ride.completion_ratio
+    );
+}
+
+#[test]
+fn exp_driver_compares_policies_on_one_trace() {
+    let t = exp::dynamic_availability("jetson", 7, 20, 600.0);
+    assert_eq!(t.rows.len(), 2);
+    assert_eq!(t.rows[0][0], "replan");
+    assert_eq!(t.rows[1][0], "ride-through");
+    let completion = |row: &[String]| -> f64 { row[1].parse().unwrap() };
+    let replans: usize = t.rows[0][2].parse().unwrap();
+    let migration: f64 = t.rows[0][3].parse().unwrap();
+    assert!(replans > 0, "{t:?}");
+    assert!(migration > 0.0, "{t:?}");
+    assert!(
+        completion(&t.rows[0]) > completion(&t.rows[1]),
+        "driver must show the availability win: {t:?}"
+    );
+    // The baseline never re-plans and never migrates.
+    assert_eq!(t.rows[1][2], "0");
+}
+
+#[test]
+fn area_visibility_pauses_sensing() {
+    // Declared visibility gap: sensing stops for two epochs, the backlog
+    // keeps draining, and completion stays well-defined.
+    let spec = DynamicSpec {
+        epochs: 6,
+        frames_per_epoch: 2,
+        sat_mtbf_s: 0.0,
+        link_mtbf_s: 0.0,
+        ..DynamicSpec::default()
+    };
+    let s = Scenario::jetson().with_dynamic(spec);
+    let trace = Timeline::declared(vec![
+        Event { t_s: 15.0, kind: EventKind::AreaLeave },
+        Event { t_s: 35.0, kind: EventKind::AreaEnter },
+    ]);
+    let rep = EpochOrchestrator::new(&s)
+        .with_timeline(trace)
+        .run()
+        .expect("mission runs");
+    let hidden: Vec<usize> =
+        rep.epochs.iter().filter(|e| !e.area_visible).map(|e| e.epoch).collect();
+    assert_eq!(hidden, vec![2, 3]);
+    for e in &rep.epochs {
+        assert_eq!(e.frames, if e.area_visible { 2 } else { 0 });
+    }
+    assert!(rep.completion_ratio > 0.8, "completion={}", rep.completion_ratio);
+    assert_eq!(rep.replans, 0, "visibility alone must not force a re-plan");
+}
+
+#[test]
+fn link_outage_cuts_off_and_heals() {
+    // Severing link 1 isolates sat 2; the orchestrator re-plans onto the
+    // leader-side segment, then re-plans again when the link heals.
+    let spec = DynamicSpec {
+        epochs: 10,
+        frames_per_epoch: 2,
+        sat_mtbf_s: 0.0,
+        link_mtbf_s: 0.0,
+        ..DynamicSpec::default()
+    };
+    let s = Scenario::jetson().with_dynamic(spec);
+    let trace = Timeline::declared(vec![
+        Event { t_s: 15.0, kind: EventKind::LinkDown { link: 1 } },
+        Event { t_s: 55.0, kind: EventKind::LinkUp { link: 1 } },
+    ]);
+    let rep = EpochOrchestrator::new(&s)
+        .with_timeline(trace)
+        .run()
+        .expect("mission runs");
+    assert_eq!(rep.replans, 2, "outage + heal: {:?}", rep.notes);
+    let outage_epoch = &rep.epochs[2];
+    assert_eq!(outage_epoch.outaged_links, vec![1]);
+    assert!(outage_epoch.replanned);
+    assert!(rep.migration_bytes > 0.0, "healing re-plan migrates state back");
+}

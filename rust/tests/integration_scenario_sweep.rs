@@ -5,6 +5,7 @@
 use std::time::Instant;
 
 use orbitchain::config::Scenario;
+use orbitchain::dynamic::DynamicSpec;
 use orbitchain::scenario::{BackendKind, Orchestrator, ScenarioError, SweepGrid, SweepRunner};
 
 #[test]
@@ -54,6 +55,50 @@ fn orchestrator_strict_rejects_infeasible_deployment_plan() {
         ScenarioError::Plan(_) | ScenarioError::Infeasible { .. } => {}
         other => panic!("expected plan rejection, got {other:?}"),
     }
+}
+
+#[test]
+fn dynamic_sweep_parallel_equals_sequential() {
+    // Same seed + event timeline ⇒ bit-identical reports regardless of
+    // worker count: the epoch loop (fault trace generation, re-planning,
+    // migration, per-epoch simulation) must be as deterministic as the
+    // static cycle.
+    let base = Scenario::jetson().with_dynamic(DynamicSpec {
+        epochs: 5,
+        frames_per_epoch: 2,
+        ..DynamicSpec::default()
+    });
+    let points = SweepGrid::new(base)
+        .sat_mtbfs(&[120.0, 480.0])
+        .outage_durations(&[40.0])
+        .reseed(true)
+        .points();
+    assert_eq!(points.len(), 2);
+    assert!(points.iter().all(|p| p.scenario.dynamic.is_some()));
+
+    let sequential = SweepRunner::new().with_threads(1).run(&points);
+    let parallel = SweepRunner::new().with_threads(4).run(&points);
+    for (a, b) in sequential.reports.iter().zip(&parallel.reports) {
+        match (a, b) {
+            (Ok(x), Ok(y)) => {
+                assert!(x.backend.starts_with("dynamic+"), "{}", x.backend);
+                assert_eq!(x.completion_ratio, y.completion_ratio);
+                assert_eq!(x.isl_bytes_per_frame, y.isl_bytes_per_frame);
+                assert_eq!(x.frame_latency_s, y.frame_latency_s);
+                assert_eq!(
+                    x.metrics.to_json().to_string_compact(),
+                    y.metrics.to_json().to_string_compact()
+                );
+                assert_eq!(x.metrics.counter("dynamic.epochs"), 5.0);
+            }
+            (Err(x), Err(y)) => assert_eq!(x, y),
+            (x, y) => panic!("parallel/sequential mismatch: {x:?} vs {y:?}"),
+        }
+    }
+    assert_eq!(
+        sequential.merged.to_json().to_string_compact(),
+        parallel.merged.to_json().to_string_compact()
+    );
 }
 
 #[test]
