@@ -1,0 +1,62 @@
+//! Closed-loop tip-and-cue across reserve fractions on one tip stream:
+//! admissions and tip→insight response latency (the value of the reserve),
+//! background completion (its cost), and the wall time of the closed loop
+//! including its reserved MILP solve and per-tip pass predictions.
+//! Run: `cargo bench --bench tipcue`.
+mod bench_common;
+
+use std::time::Instant;
+
+use bench_common::bench;
+use orbitchain::config::Scenario;
+use orbitchain::tipcue::{TipCueOrchestrator, TipCueSpec};
+use orbitchain::util::stats;
+
+fn main() {
+    println!(
+        "{:>7} | {:>4} {:>8} {:>9} {:>6} | {:>12} {:>10} | {:>7}",
+        "reserve", "tips", "admitted", "completed", "missed", "mean_lat_s", "completion", "wall_s"
+    );
+    for reserve in [0.0, 0.1, 0.2, 0.4] {
+        let spec = TipCueSpec {
+            tip_rate_per_frame: 1.0,
+            reserve_frac: reserve,
+            ..Default::default()
+        };
+        let s = Scenario::jetson().with_seed(7).with_tipcue(spec);
+        let t0 = Instant::now();
+        let rep = TipCueOrchestrator::new(&s).run().expect("closed loop runs");
+        let wall = t0.elapsed().as_secs_f64();
+        let mean_lat = if rep.response_latency_s.is_empty() {
+            f64::NAN
+        } else {
+            stats::mean(&rep.response_latency_s)
+        };
+        println!(
+            "{:>7.2} | {:>4} {:>8} {:>9} {:>6} | {:>12.1} {:>10.3} | {:>7.2}",
+            reserve,
+            rep.tips.len(),
+            rep.admitted,
+            rep.completed,
+            rep.missed,
+            mean_lat,
+            rep.completion_ratio,
+            wall
+        );
+    }
+
+    // Steady-state closed-loop throughput at the default spec (one MILP
+    // solve + pass predictions + shared simulation per iteration).
+    let s = Scenario::jetson().with_seed(7).with_tipcue(TipCueSpec::default());
+    let rep = bench("tipcue closed loop (defaults)", 5, || {
+        TipCueOrchestrator::new(&s).run().expect("closed loop runs")
+    });
+    println!(
+        "defaults: tips={} admitted={} completed={} plan={:.1} ms sim={:.1} ms",
+        rep.tips.len(),
+        rep.admitted,
+        rep.completed,
+        rep.plan_ms,
+        rep.sim_ms
+    );
+}

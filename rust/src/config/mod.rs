@@ -9,6 +9,7 @@
 use crate::constellation::Constellation;
 use crate::dynamic::DynamicSpec;
 use crate::profile::{Device, ProfileDb};
+use crate::tipcue::TipCueSpec;
 use crate::util::json::{obj, Json};
 use crate::workflow::{self, Workflow};
 
@@ -35,6 +36,11 @@ pub struct Scenario {
     /// epoch loop of [`crate::dynamic::EpochOrchestrator`] (fault/visibility
     /// events, re-planning, migration) instead of one static cycle.
     pub dynamic: Option<DynamicSpec>,
+    /// Tip-and-cue extension: when set, the scenario runs the closed loop
+    /// of [`crate::tipcue::TipCueOrchestrator`] — the tip workflow's
+    /// detections raise cue tasks that are pass-predicted, admitted against
+    /// the reserved capacity and injected back into the same simulation.
+    pub tipcue: Option<TipCueSpec>,
 }
 
 impl Scenario {
@@ -53,6 +59,7 @@ impl Scenario {
             isl_rate_bps: None,
             orbit_shift: true,
             dynamic: None,
+            tipcue: None,
         }
     }
 
@@ -71,6 +78,7 @@ impl Scenario {
             isl_rate_bps: None,
             orbit_shift: true,
             dynamic: None,
+            tipcue: None,
         }
     }
 
@@ -130,6 +138,12 @@ impl Scenario {
     /// Attach (or replace) the dynamic-orchestration extension.
     pub fn with_dynamic(mut self, spec: DynamicSpec) -> Self {
         self.dynamic = Some(spec);
+        self
+    }
+
+    /// Attach (or replace) the tip-and-cue extension.
+    pub fn with_tipcue(mut self, spec: TipCueSpec) -> Self {
+        self.tipcue = Some(spec);
         self
     }
 
@@ -197,6 +211,10 @@ impl Scenario {
                 "dynamic",
                 self.dynamic.as_ref().map(DynamicSpec::to_json).unwrap_or(Json::Null),
             ),
+            (
+                "tipcue",
+                self.tipcue.as_ref().map(TipCueSpec::to_json).unwrap_or(Json::Null),
+            ),
         ])
     }
 
@@ -232,6 +250,10 @@ impl Scenario {
             dynamic: match j.get("dynamic") {
                 Some(Json::Null) | None => None,
                 Some(d) => Some(DynamicSpec::from_json(d)),
+            },
+            tipcue: match j.get("tipcue") {
+                Some(Json::Null) | None => None,
+                Some(t) => Some(TipCueSpec::from_json(t)),
             },
         })
     }
@@ -274,6 +296,20 @@ mod tests {
         let back = Scenario::from_json(&s.to_json()).unwrap();
         assert_eq!(s, back);
         assert_eq!(back.dynamic.as_ref().unwrap().epochs, 7);
+    }
+
+    #[test]
+    fn json_roundtrip_with_tipcue_extension() {
+        let spec = TipCueSpec {
+            tip_rate_per_frame: 0.8,
+            cue_deadline_s: 45.0,
+            reserve_frac: 0.3,
+            ..Default::default()
+        };
+        let s = Scenario::jetson().with_tipcue(spec);
+        let back = Scenario::from_json(&s.to_json()).unwrap();
+        assert_eq!(s, back);
+        assert_eq!(back.tipcue.as_ref().unwrap().reserve_frac, 0.3);
     }
 
     #[test]

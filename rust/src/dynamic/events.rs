@@ -39,6 +39,10 @@ pub enum EventKind {
     AreaLeave,
     /// The observation area comes back into view.
     AreaEnter,
+    /// A tip-and-cue follow-up request arrives: `tiles` high-priority,
+    /// deadline-bound tasks raised by a detection elsewhere join the next
+    /// epoch's workload (constellation health is unaffected).
+    CueArrival { tiles: usize },
 }
 
 impl EventKind {
@@ -53,6 +57,7 @@ impl EventKind {
             EventKind::BurstEnd => 5,
             EventKind::AreaLeave => 6,
             EventKind::AreaEnter => 7,
+            EventKind::CueArrival { .. } => 8,
         }
     }
 
@@ -66,6 +71,7 @@ impl EventKind {
             EventKind::BurstEnd => "burst_end",
             EventKind::AreaLeave => "area_leave",
             EventKind::AreaEnter => "area_enter",
+            EventKind::CueArrival { .. } => "cue_arrival",
         }
     }
 }
@@ -81,6 +87,10 @@ impl std::fmt::Display for EventKind {
             EventKind::BurstEnd => write!(f, "burst ends"),
             EventKind::AreaLeave => write!(f, "observation area out of view"),
             EventKind::AreaEnter => write!(f, "observation area in view"),
+            EventKind::CueArrival { tiles } => {
+                write!(f, "cue arrival ({tiles} follow-up tile{})",
+                    if *tiles == 1 { "" } else { "s" })
+            }
         }
     }
 }
@@ -128,6 +138,18 @@ pub struct DynamicSpec {
     pub handover_s: f64,
     /// Cold-deploy delay when no live instance can donate state, s.
     pub cold_deploy_s: f64,
+    /// Mean time between tip-and-cue arrivals, s (exponential); ≤ 0
+    /// disables the cue stream.  Arrivals inject priority, deadline-bound
+    /// tiles into the epoch they land in, so cue traffic competes with
+    /// re-planning, faults and backlog on the same tables.  Like every
+    /// event family, arrivals take effect at the *next epoch boundary* —
+    /// events inside the final epoch never fire, so
+    /// `dynamic.cues_injected` counts boundary-applied arrivals, not raw
+    /// timeline rows.
+    pub cue_mtbt_s: f64,
+    /// Completion deadline for each injected cue, relative to its epoch
+    /// start, s.
+    pub cue_deadline_s: f64,
     /// Re-plan when the current plan is invalidated (`false` = static
     /// ride-through baseline: the epoch loop still applies faults, but the
     /// initial tables are kept for the whole mission).
@@ -151,6 +173,8 @@ impl Default for DynamicSpec {
             migration_state_bytes: 24.0 * 1024.0,
             handover_s: 0.5,
             cold_deploy_s: 5.0,
+            cue_mtbt_s: 0.0,
+            cue_deadline_s: 30.0,
             replan: true,
         }
     }
@@ -183,6 +207,8 @@ impl DynamicSpec {
             ("migration_state_bytes", Json::Num(self.migration_state_bytes)),
             ("handover_s", Json::Num(self.handover_s)),
             ("cold_deploy_s", Json::Num(self.cold_deploy_s)),
+            ("cue_mtbt_s", Json::Num(self.cue_mtbt_s)),
+            ("cue_deadline_s", Json::Num(self.cue_deadline_s)),
             ("replan", Json::from(self.replan)),
         ])
     }
@@ -207,6 +233,8 @@ impl DynamicSpec {
             migration_state_bytes: num("migration_state_bytes", d.migration_state_bytes),
             handover_s: num("handover_s", d.handover_s),
             cold_deploy_s: num("cold_deploy_s", d.cold_deploy_s),
+            cue_mtbt_s: num("cue_mtbt_s", d.cue_mtbt_s),
+            cue_deadline_s: num("cue_deadline_s", d.cue_deadline_s),
             replan: b("replan", d.replan),
         }
     }
@@ -317,6 +345,24 @@ impl Timeline {
             }
         }
 
+        // Tip-and-cue arrivals: detections elsewhere raise follow-up tasks
+        // that land as priority work.  Forked before the enable check, like
+        // every other family, so toggling the cue stream never shifts the
+        // fault draws.
+        {
+            let mut r = root.fork();
+            if spec.cue_mtbt_s > 0.0 {
+                let mut t = exp_sample(&mut r, spec.cue_mtbt_s);
+                while t < horizon_s {
+                    events.push(Event {
+                        t_s: t,
+                        kind: EventKind::CueArrival { tiles: 1 + r.below(3) },
+                    });
+                    t += exp_sample(&mut r, spec.cue_mtbt_s);
+                }
+            }
+        }
+
         // Observation-area visibility from the orbit geometry: the area is
         // anchored at the constellation's mid-horizon sub-satellite point,
         // so a pass occurs within the mission window; sensing is possible
@@ -367,6 +413,9 @@ impl Timeline {
                     EventKind::BurstStart { factor } => {
                         fields.push(("factor", Json::Num(*factor)));
                     }
+                    EventKind::CueArrival { tiles } => {
+                        fields.push(("tiles", Json::from(*tiles)));
+                    }
                     _ => {}
                 }
                 obj(fields)
@@ -411,6 +460,9 @@ impl Timeline {
                 "burst_end" => EventKind::BurstEnd,
                 "area_leave" => EventKind::AreaLeave,
                 "area_enter" => EventKind::AreaEnter,
+                "cue_arrival" => EventKind::CueArrival {
+                    tiles: row.get("tiles").and_then(Json::as_usize).unwrap_or(1),
+                },
                 other => return Err(anyhow!("unknown event kind {other:?}")),
             };
             events.push(Event { t_s, kind });
@@ -515,6 +567,39 @@ mod tests {
         let spec = enabled_spec();
         let spec_back = DynamicSpec::from_json(&spec.to_json());
         assert_eq!(spec, spec_back);
+    }
+
+    #[test]
+    fn cue_stream_generates_and_round_trips() {
+        let c = Constellation::jetson();
+        let spec = DynamicSpec {
+            sat_mtbf_s: 0.0,
+            link_mtbf_s: 0.0,
+            cue_mtbt_s: 40.0,
+            ..DynamicSpec::default()
+        };
+        let tl = Timeline::generate(&spec, &c, 2000.0, 7);
+        let cue_events = |tl: &Timeline| -> Vec<Event> {
+            tl.events
+                .iter()
+                .filter(|e| matches!(e.kind, EventKind::CueArrival { .. }))
+                .cloned()
+                .collect()
+        };
+        let cues = cue_events(&tl);
+        assert!(!cues.is_empty(), "40 s MTBT over 2000 s must fire");
+        for e in &cues {
+            if let EventKind::CueArrival { tiles } = e.kind {
+                assert!((1..=3).contains(&tiles), "{e:?}");
+            }
+        }
+        let back = Timeline::from_json(&tl.to_json()).unwrap();
+        assert_eq!(tl, back);
+        // The cue fork happens in family order like every other stream, so
+        // enabling the fault families does not shift the cue draws.
+        let full =
+            Timeline::generate(&DynamicSpec { cue_mtbt_s: 40.0, ..enabled_spec() }, &c, 2000.0, 7);
+        assert_eq!(cue_events(&full), cues);
     }
 
     #[test]

@@ -117,6 +117,9 @@ impl HealthState {
             EventKind::BurstEnd => self.burst = 1.0,
             EventKind::AreaLeave => self.area_visible = false,
             EventKind::AreaEnter => self.area_visible = true,
+            // Cue arrivals are workload, not damage: the epoch loop queues
+            // them as priority injections; health is untouched.
+            EventKind::CueArrival { .. } => {}
         }
     }
 
@@ -443,6 +446,8 @@ impl EpochOrchestrator {
         let mut downtime_s = 0.0f64;
         let mut tiles_lost = 0.0f64;
         let mut dropped_backlog = 0usize;
+        let mut cues_injected = 0usize;
+        let mut cues_missed = 0usize;
         let mut injected = 0.0f64;
         let mut total_frames = 0usize;
         let mut plan_ms = 0.0f64;
@@ -453,10 +458,17 @@ impl EpochOrchestrator {
 
         for e in 0..self.spec.epochs {
             let t0 = e as f64 * epoch_s;
-            // Events during epoch `e-1` take effect at this boundary.
+            // Events during epoch `e-1` take effect at this boundary.  Cue
+            // arrivals don't change constellation health; they queue as
+            // priority work for this epoch instead.
+            let mut cue_tiles = 0usize;
             while ev_idx < self.timeline.events.len()
                 && self.timeline.events[ev_idx].t_s <= t0
             {
+                if let EventKind::CueArrival { tiles } = self.timeline.events[ev_idx].kind
+                {
+                    cue_tiles += tiles;
+                }
                 health.apply(&self.timeline.events[ev_idx], self.spec.degrade_factor);
                 ev_idx += 1;
             }
@@ -552,6 +564,25 @@ impl EpochOrchestrator {
             };
             dropped_backlog += dropped;
 
+            // Cue arrivals from the event timeline enter this epoch as
+            // priority injections at its start (deadline-bound, queue
+            // jumping); they share instances and links with the background
+            // workload, so cue traffic and faults interact.
+            let cue_injections: Vec<sim::TileInjection> = (0..cue_tiles)
+                .map(|i| sim::TileInjection {
+                    t_s: 0.0,
+                    tile_no: if epoch_c.tiles_per_frame == 0 {
+                        0
+                    } else {
+                        i % epoch_c.tiles_per_frame
+                    },
+                    deadline_s: self.spec.cue_deadline_s,
+                    priority: true,
+                    prefer_sat: None,
+                })
+                .collect();
+            cues_injected += cue_tiles;
+
             let cfg = SimConfig {
                 frames,
                 drain_s: if frames == 0 { epoch_s } else { 0.0 },
@@ -559,8 +590,9 @@ impl EpochOrchestrator {
                 isl_rate_bps: self.isl_rate_bps,
                 link_rate_factors: Some(health.link_factor.clone()),
                 warm_tiles: warm,
+                injections: cue_injections,
             };
-            injected += (frames * epoch_c.tiles_per_frame + warm) as f64;
+            injected += (frames * epoch_c.tiles_per_frame + warm + cue_tiles) as f64;
 
             let t_sim = Instant::now();
             let rep = Simulator::new(
@@ -578,6 +610,7 @@ impl EpochOrchestrator {
                 worst_latency = rep.frame_latency_s;
                 worst_breakdown = rep.breakdown;
             }
+            cues_missed += rep.injections.iter().filter(|o| !o.met_deadline()).count();
             merged.merge(&rep.metrics);
             merged.observe("dynamic.epoch_completion", rep.completion_ratio);
             backlog = if epoch_c.tiles_per_frame == 0 {
@@ -626,6 +659,8 @@ impl EpochOrchestrator {
         merged.inc("dynamic.tiles_injected", injected);
         merged.inc("dynamic.backlog_final", backlog as f64);
         merged.inc("dynamic.backlog_dropped", dropped_backlog as f64);
+        merged.inc("dynamic.cues_injected", cues_injected as f64);
+        merged.inc("dynamic.cues_missed", cues_missed as f64);
 
         // Degenerate zero-epoch mission: still plan once so the report
         // (backend, phi, pipeline count) is well-formed instead of
@@ -938,6 +973,25 @@ mod tests {
         assert!(rep.replans >= 1, "notes: {:?}", rep.notes);
         let burst_epoch = rep.epochs.iter().find(|e| e.burst > 1.0).expect("burst seen");
         assert!(burst_epoch.reason.is_some());
+    }
+
+    #[test]
+    fn cue_arrivals_inject_priority_work() {
+        let mut spec = quiet_spec(4);
+        spec.cue_deadline_s = 60.0;
+        let s = jetson_with(spec);
+        let tl = Timeline::declared(vec![Event {
+            t_s: 15.0,
+            kind: EventKind::CueArrival { tiles: 3 },
+        }]);
+        let rep = EpochOrchestrator::new(&s)
+            .with_timeline(tl)
+            .run()
+            .expect("mission runs");
+        assert_eq!(rep.metrics.counter("dynamic.cues_injected"), 3.0);
+        assert_eq!(rep.metrics.counter("tiles.injected"), 3.0);
+        // A healthy constellation with a generous deadline misses nothing.
+        assert_eq!(rep.metrics.counter("dynamic.cues_missed"), 0.0);
     }
 
     #[test]

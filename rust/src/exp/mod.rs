@@ -20,6 +20,7 @@
 //! | [`tab01_fit`] | Table 1 / Fig. 19 piecewise fits |
 //! | [`fig20_planning`] | Fig. 20 planning/routing runtime |
 //! | [`dynamic_availability`] | epoch re-planning vs ride-through (new subsystem) |
+//! | [`tipcue_response`] | tip→insight response latency vs reserve φ_cue (tip-and-cue subsystem) |
 
 use std::time::Instant;
 
@@ -27,7 +28,9 @@ use crate::config::Scenario;
 use crate::constellation::Constellation;
 use crate::link;
 use crate::orbit::{presets, visibility};
-use crate::profile::{coldstart::ColdStart, contention, datasize, fit, Device, ProfileDb, FUNC_NAMES};
+use crate::profile::{
+    coldstart::ColdStart, contention, datasize, fit, Device, ProfileDb, FUNC_NAMES,
+};
 use crate::routing;
 use crate::scenario::{
     BackendKind, ComputeParallelPlanner, LoadSprayRouter, Orchestrator, Planned,
@@ -694,6 +697,74 @@ pub fn dynamic_availability(
     t
 }
 
+// ---------------------------------------------------------------------------
+// Tip-and-cue: admission vs background completion across reserve fractions.
+// ---------------------------------------------------------------------------
+
+/// Closed-loop tip-and-cue across reserve fractions φ_cue, on the identical
+/// tip stream (same seed throughout): with no reserve every cue is rejected
+/// on capacity; growing φ_cue buys admissions — and tip→insight response
+/// latency measurements — at the price of the background capacity ratio φ.
+pub fn tipcue_response(device_name: &str, seed: u64, frames: usize) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Tip-and-cue: admission vs background tradeoff \
+             ({device_name}, seed {seed}, {frames} frames)"
+        ),
+        &[
+            "reserve",
+            "phi",
+            "tips",
+            "admitted",
+            "completed",
+            "missed",
+            "mean_latency_s",
+            "completion",
+        ],
+    );
+    for reserve in [0.0, 0.1, 0.2, 0.3, 0.4] {
+        let spec = crate::tipcue::TipCueSpec {
+            tip_rate_per_frame: 1.0,
+            reserve_frac: reserve,
+            ..Default::default()
+        };
+        let s = Scenario::of(device_of(device_name))
+            .with_seed(seed)
+            .with_frames(frames)
+            .with_tipcue(spec);
+        match crate::tipcue::TipCueOrchestrator::new(&s).run() {
+            Ok(rep) => {
+                let mean_lat = if rep.response_latency_s.is_empty() {
+                    "-".to_string()
+                } else {
+                    f(stats::mean(&rep.response_latency_s))
+                };
+                t.row(vec![
+                    f(reserve),
+                    rep.phi.map(f).unwrap_or_else(|| "-".into()),
+                    rep.tips.len().to_string(),
+                    rep.admitted.to_string(),
+                    rep.completed.to_string(),
+                    rep.missed.to_string(),
+                    mean_lat,
+                    f(rep.completion_ratio),
+                ]);
+            }
+            Err(e) => t.row(vec![
+                f(reserve),
+                format!("error: {e}"),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]),
+        }
+    }
+    t
+}
+
 /// Export a set of tables as a JSON report document.
 pub fn report_json(tables: &[Table]) -> Json {
     Json::Arr(tables.iter().map(|t| t.to_json()).collect())
@@ -768,5 +839,14 @@ mod tests {
     fn fig17_runs_quickly_at_coarse_step() {
         let t = fig17_ground(6.0 * 3600.0, 30.0);
         assert_eq!(t.rows.len(), 5);
+    }
+
+    #[test]
+    fn tipcue_response_shape_and_zero_reserve_row() {
+        let t = tipcue_response("jetson", 7, 3);
+        assert_eq!(t.rows.len(), 5);
+        // reserve = 0 admits nothing; the tip count is shared across rows.
+        assert_eq!(t.rows[0][3], "0");
+        assert_eq!(t.rows[0][2], t.rows[4][2]);
     }
 }

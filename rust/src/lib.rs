@@ -33,9 +33,13 @@
 //!   backends, and `SweepRunner` fans parameter grids across threads
 //!   deterministically.
 //! * [`dynamic`] — epoch-driven orchestration: typed constellation event
-//!   timelines (failures, link outages, bursts, visibility windows), the
-//!   `EpochOrchestrator` re-planning loop, and migration-aware handover
-//!   accounting.
+//!   timelines (failures, link outages, bursts, visibility windows, cue
+//!   arrivals), the `EpochOrchestrator` re-planning loop, and
+//!   migration-aware handover accounting.
+//! * [`tipcue`] — in-orbit tip-and-cue: the tip workflow's detections are
+//!   converted into pass-predicted, deadline-bound cue tasks, admitted
+//!   against a reserved capacity share and injected back into the same
+//!   simulation (the first closed-loop scenario).
 //! * [`exp`] — one driver per paper figure/table (all through
 //!   [`scenario::Orchestrator`]).
 //! * [`config`] — scenario configuration & §6.1 presets.
@@ -55,6 +59,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod sim;
 pub mod telemetry;
+pub mod tipcue;
 pub mod util;
 pub mod workflow;
 

@@ -7,7 +7,11 @@
 //! orbitchain sweep      [same flags] [--deadlines A,B,..] [--workflows 2,3,4]
 //!                       [--sats-list 3,5,8] [--frames-list 5,10] [--isl-list R1,R2]
 //!                       [--mtbf-list 300,600] [--outage-list 60,120] [--epoch-frames-list 2,4]
+//!                       [--tip-rate-list 0.2,0.5] [--cue-deadline-list 60,90]
+//!                       [--reserve-list 0.0,0.2,0.4]
 //!                       [--backends orbitchain,compute-par] [--threads N] [--json]
+//! orbitchain tipcue     [same flags] [--tip-rate R] [--cue-deadline S] [--reserve F]
+//!                       [--pass-dt S] [--min-elevation D] [--backend B] [--json]
 //! orbitchain dynamic    [same flags] [--epochs N] [--epoch-frames N] [--mtbf S] [--mttr S]
 //!                       [--link-mtbf S] [--link-mttr S] [--degrade-factor F]
 //!                       [--burst-mtbf S] [--burst-duration S] [--burst-factor X]
@@ -31,7 +35,9 @@ use orbitchain::runtime::{ModelRuntime, TileGen};
 use orbitchain::scenario::{
     BackendKind, LoadSprayRouter, Orchestrator, ScenarioError, SweepGrid, SweepRunner,
 };
+use orbitchain::tipcue::{CueStatus, TipCueOrchestrator};
 use orbitchain::util::json::obj;
+use orbitchain::util::stats;
 use orbitchain::{planner, routing};
 
 fn main() {
@@ -173,12 +179,31 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     "mtbf-list",
                     "outage-list",
                     "epoch-frames-list",
+                    "tip-rate-list",
+                    "cue-deadline-list",
+                    "reserve-list",
                     "backends",
                     "threads",
                     "json",
                 ]),
             )?;
             cmd_sweep(&flags)
+        }
+        "tipcue" => {
+            ensure_known_flags(
+                "tipcue",
+                &flags,
+                &scenario_plus(&[
+                    "tip-rate",
+                    "cue-deadline",
+                    "reserve",
+                    "pass-dt",
+                    "min-elevation",
+                    "backend",
+                    "json",
+                ]),
+            )?;
+            cmd_tipcue(&flags)
         }
         "dynamic" => {
             let mut valid = scenario_plus(&[
@@ -235,7 +260,10 @@ fn print_help() {
          \x20 sweep       parallel scenario sweep over a parameter grid\n\
          \x20 dynamic     epoch-driven orchestration under fault/visibility events\n\
          \x20             (re-planning vs static ride-through on one fault trace)\n\
-         \x20 experiment  regenerate a paper figure/table (fig3b..fig20, dynamic, all)\n\
+         \x20 tipcue      closed-loop tip-and-cue: detections raise pass-predicted,\n\
+         \x20             deadline-bound cue tasks admitted against a capacity reserve\n\
+         \x20 experiment  regenerate a paper figure/table (fig3b..fig20, dynamic,\n\
+         \x20             tipcue, all)\n\
          \x20 infer       hardware-in-the-loop PJRT inference on synthetic tiles\n\
          \x20 version     print version\n\n\
          common flags:  --device jetson|rpi --workflow N --deadline S --sats N\n\
@@ -243,12 +271,16 @@ fn print_help() {
          sweep flags:   --deadlines A,B,.. --workflows 2,3,4 --sats-list 3,5,8\n\
          \x20             --frames-list 5,10 --isl-list R1,R2 --mtbf-list 300,600\n\
          \x20             --outage-list 60,120 --epoch-frames-list 2,4\n\
+         \x20             --tip-rate-list 0.2,0.5 --cue-deadline-list 60,90\n\
+         \x20             --reserve-list 0.0,0.2,0.4\n\
          \x20             --backends orbitchain,load-spraying,data-par,compute-par\n\
          \x20             --threads N\n\
          dynamic flags: --epochs N --epoch-frames N --mtbf S --mttr S\n\
          \x20             --link-mtbf S --link-mttr S --degrade-factor F\n\
          \x20             --burst-mtbf S --burst-duration S --burst-factor X\n\
-         \x20             --area-visibility --state-bytes B --backend B --no-baseline"
+         \x20             --area-visibility --state-bytes B --backend B --no-baseline\n\
+         tipcue flags:  --tip-rate R --cue-deadline S --reserve F --pass-dt S\n\
+         \x20             --min-elevation D --backend B"
     );
 }
 
@@ -438,6 +470,19 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         }
         grid = grid.epoch_frames(&frames);
     }
+    if let Some(raw) = flags.get("tip-rate-list") {
+        grid = grid.tip_rates(&parse_list::<f64>(raw)?);
+    }
+    if let Some(raw) = flags.get("cue-deadline-list") {
+        grid = grid.cue_deadlines(&parse_list::<f64>(raw)?);
+    }
+    if let Some(raw) = flags.get("reserve-list") {
+        let fracs = parse_list::<f64>(raw)?;
+        if let Some(bad) = fracs.iter().find(|f| !(0.0..=0.9).contains(*f)) {
+            anyhow::bail!("--reserve-list entry {bad} out of range [0, 0.9]");
+        }
+        grid = grid.reserve_fracs(&fracs);
+    }
     if let Some(raw) = flags.get("backends") {
         let kinds: Vec<BackendKind> = raw
             .split(',')
@@ -449,6 +494,24 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             .collect::<anyhow::Result<_>>()?;
         grid = grid.backends(&kinds);
     }
+    // The closed tip-and-cue loop ignores the dynamic extension (ROADMAP:
+    // combining them is future work); reject the combination instead of
+    // silently dropping the fault timeline from those points.
+    let has_dynamic_dims = ["mtbf-list", "outage-list", "epoch-frames-list"]
+        .iter()
+        .any(|k| flags.contains_key(*k));
+    let has_tipcue_dims = ["tip-rate-list", "cue-deadline-list", "reserve-list"]
+        .iter()
+        .any(|k| flags.contains_key(*k));
+    if has_dynamic_dims && has_tipcue_dims {
+        anyhow::bail!(
+            "dynamic dimensions (--mtbf-list/--outage-list/--epoch-frames-list) cannot \
+             be combined with tip-and-cue dimensions (--tip-rate-list/--cue-deadline-list/\
+             --reserve-list): tip-and-cue points run the static closed loop and would \
+             silently ignore the fault timeline"
+        );
+    }
+
     let points = grid.points();
     if points.is_empty() {
         anyhow::bail!("empty sweep grid");
@@ -684,6 +747,122 @@ fn cmd_dynamic(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Closed-loop tip-and-cue: deterministic tip stream → pass-predicted cue
+/// scheduling → reserve-gated admission → shared simulation, reporting the
+/// tip→insight response latency per cue.
+fn cmd_tipcue(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let mut s = scenario_from_flags(flags)?;
+    let mut spec = s.tipcue.clone().unwrap_or_default();
+    if let Some(v) = flags.get("tip-rate") {
+        spec.tip_rate_per_frame = v.parse()?;
+    }
+    if let Some(v) = flags.get("cue-deadline") {
+        spec.cue_deadline_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("reserve") {
+        let reserve: f64 = v.parse()?;
+        // Same range the planner accepts: reject instead of silently
+        // clamping, so reported reserves always match the applied ones.
+        if !(0.0..=0.9).contains(&reserve) {
+            anyhow::bail!("--reserve {reserve} out of range [0, 0.9]");
+        }
+        spec.reserve_frac = reserve;
+    }
+    if let Some(v) = flags.get("pass-dt") {
+        spec.pass_dt_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("min-elevation") {
+        spec.min_elevation_deg = v.parse()?;
+    }
+    s.tipcue = Some(spec.clone());
+
+    let backend = match flags.get("backend") {
+        Some(name) => BackendKind::from_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown --backend {name:?}"))?,
+        None => BackendKind::OrbitChain,
+    };
+    let rep = TipCueOrchestrator::new(&s).with_backend(backend).run()?;
+
+    if flags.contains_key("json") {
+        println!("{}", rep.to_json().to_string_pretty());
+        return Ok(());
+    }
+    println!(
+        "tip-and-cue: {} tips over {} frames (rate {}/frame, seed {}), \
+         reserve phi_cue={}, cue deadline {}s, backend {}",
+        rep.tips.len(),
+        s.frames,
+        spec.tip_rate_per_frame,
+        s.seed,
+        rep.reserve_frac,
+        spec.cue_deadline_s,
+        rep.backend
+    );
+    if let Some(phi) = rep.phi {
+        println!("plan: phi={phi:.3} (background capacity, net of the reserve)");
+    }
+    for cue in &rep.cues {
+        let head = format!(
+            "tip {:>2} t={:6.1}s @({:6.2},{:7.2})",
+            cue.tip.id, cue.tip.t_s, cue.tip.target.lat_deg, cue.tip.target.lon_deg
+        );
+        match cue.status {
+            CueStatus::Completed => println!(
+                "  {head} -> cue sat {} pass {:.1}s, done {:.1}s \
+                 (latency {:.1}s, deadline {:.1}s)",
+                cue.sat.unwrap_or(0),
+                cue.injected_t_s.unwrap_or(0.0),
+                cue.finished_s.unwrap_or(0.0),
+                cue.response_latency_s().unwrap_or(0.0),
+                cue.deadline_s
+            ),
+            CueStatus::Missed => println!(
+                "  {head} -> cue sat {} pass {:.1}s, MISSED deadline {:.1}s",
+                cue.sat.unwrap_or(0),
+                cue.injected_t_s.unwrap_or(0.0),
+                cue.deadline_s
+            ),
+            CueStatus::RejectedNoPass => {
+                println!("  {head} -> rejected: no pass before the deadline")
+            }
+            CueStatus::RejectedCapacity => println!(
+                "  {head} -> rejected: reserve exhausted (pass sat {} at {:.1}s)",
+                cue.sat.unwrap_or(0),
+                cue.pass.map(|p| p.aos_s).unwrap_or(0.0)
+            ),
+        }
+    }
+    println!(
+        "cues: {}/{} admitted ({} no-pass, {} capacity); {} completed, {} missed",
+        rep.admitted,
+        rep.tips.len(),
+        rep.rejected_no_pass,
+        rep.rejected_capacity,
+        rep.completed,
+        rep.missed
+    );
+    if rep.response_latency_s.is_empty() {
+        println!("tipcue.response_latency: (no completed cues)");
+    } else {
+        let l = &rep.response_latency_s;
+        println!(
+            "tipcue.response_latency: mean={:.1}s p50={:.1}s max={:.1}s over {} cues",
+            stats::mean(l),
+            stats::percentile(l, 50.0),
+            l.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            l.len()
+        );
+    }
+    println!(
+        "background: completion={:.3} isl_bytes/frame={:.0} frame_latency={:.2}s",
+        rep.completion_ratio, rep.isl_bytes_per_frame, rep.frame_latency_s
+    );
+    for note in &rep.notes {
+        println!("note: {note}");
+    }
+    Ok(())
+}
+
 fn cmd_experiment(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let which = pos.first().map(String::as_str).unwrap_or("all");
     let device = flags.get("device").map(String::as_str).unwrap_or("jetson");
@@ -744,6 +923,14 @@ fn cmd_experiment(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Re
             .transpose()?
             .unwrap_or(7);
         tables.push(exp::dynamic_availability(device, seed, 20, 600.0));
+    }
+    if all || which == "tipcue" {
+        let seed: u64 = flags
+            .get("seed")
+            .map(|v| v.parse())
+            .transpose()?
+            .unwrap_or(7);
+        tables.push(exp::tipcue_response(device, seed, frames));
     }
     if tables.is_empty() {
         anyhow::bail!("unknown experiment {which:?}");

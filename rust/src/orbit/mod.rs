@@ -130,6 +130,18 @@ impl CircularOrbit {
         Vec3::new(p.x * c + p.y * s, -p.x * s + p.y * c, p.z)
     }
 
+    /// The same orbit with the along-track position delayed by `delay_s`
+    /// seconds: satellite `j` of a leader–follower chain flies the leader's
+    /// orbit shifted back by `j·Δs` of phase, so it passes over the same
+    /// ground-track point `j·Δs` later (modulo Earth rotation, which the
+    /// ECEF conversion applies at the *actual* query time).
+    pub fn delayed(&self, delay_s: f64) -> CircularOrbit {
+        CircularOrbit {
+            phase_deg: self.phase_deg - (self.mean_motion() * delay_s).to_degrees(),
+            ..*self
+        }
+    }
+
     /// Sub-satellite point (spherical geodetic), degrees.
     pub fn ground_track(&self, t: f64) -> LatLon {
         let p = self.position_ecef(t);
@@ -313,6 +325,23 @@ mod tests {
         let quarter = std::f64::consts::FRAC_PI_2 * EARTH_RADIUS_KM;
         assert!((great_circle_km(eq0, eq90) - quarter).abs() < 1.0);
         assert_eq!(great_circle_km(eq0, eq0), 0.0);
+    }
+
+    #[test]
+    fn delayed_orbit_trails_the_leader() {
+        // The delayed orbit's ECI position at t equals the leader's at
+        // t - delay (same plane, shifted phase).
+        let o = iss_like();
+        let d = o.delayed(25.0);
+        for k in 0..20 {
+            let t = 100.0 + k as f64 * 37.0;
+            let a = d.position_eci(t);
+            let b = o.position_eci(t - 25.0);
+            assert!(a.sub(b).norm() < 1e-6, "t={t}: {a:?} vs {b:?}");
+        }
+        // Zero delay is the identity.
+        let z = o.delayed(0.0);
+        assert_eq!(z.phase_deg, o.phase_deg);
     }
 
     #[test]

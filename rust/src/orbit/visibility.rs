@@ -1,10 +1,17 @@
-//! Ground-contact visibility sweeps (paper Appendix B, Fig. 17).
+//! Ground-contact visibility sweeps (paper Appendix B, Fig. 17) and
+//! target-pass prediction for tip-and-cue tasking.
 //!
 //! Sweeps a satellite's 24-hour trajectory against a set of ground stations,
 //! extracting contact windows (entry/exit, duration), the gaps between
 //! consecutive contacts (Fig. 17a's CDF), and the per-window downlinkable
 //! data ratio (Fig. 17b): how much of the data generated since the previous
-//! contact fits through the downlink during this contact.
+//! contact fits through the downlink during this contact.  Window
+//! boundaries are refined by bisection between sweep steps, and a midpoint
+//! probe keeps sub-`dt_s` passes from being dropped at coarse step sizes.
+//!
+//! [`next_pass`] answers the inverse question the tip-and-cue scheduler
+//! asks: given a ground *target* (a geolocated tip), when does this orbit
+//! next rise above the target's elevation mask?
 
 use super::{CircularOrbit, GroundStation};
 use crate::orbit::presets::ConstellationPreset;
@@ -26,36 +33,170 @@ impl ContactWindow {
     }
 }
 
+/// Locate the change point of `pred` on `(lo, hi)` by bisection, assuming a
+/// single transition away from `pred(lo)`'s value inside the bracket.
+/// 32 halvings of a minute-scale bracket give sub-millisecond precision.
+fn bisect_change(mut lo: f64, mut hi: f64, pred: impl Fn(f64) -> bool) -> f64 {
+    let at_lo = pred(lo);
+    for _ in 0..32 {
+        let mid = 0.5 * (lo + hi);
+        if pred(mid) == at_lo {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
 /// Sweep one satellite against all stations over `[0, horizon_s]` with step
-/// `dt_s`, merging overlapping per-station windows into a single
-/// "connected to *some* station" timeline (the paper's metric: time between
-/// consecutive satellite-ground connections, regardless of station).
+/// `dt_s`.  Consecutive coverage forms one merged timeline — when coverage
+/// hands over directly from station A to station B the A-window closes and
+/// a B-window opens at the same (bisection-refined) instant, so per-window
+/// attribution is correct while [`connection_intervals`] (which ignores
+/// zero gaps) keeps the paper's "connected to *some* station" metric.
+/// Entry/exit times are refined by bisection between sweep steps, and a
+/// midpoint probe catches passes shorter than `dt_s` that rise and set
+/// between two steps.
 pub fn contact_windows(
     orbit: &CircularOrbit,
     stations: &[GroundStation],
     horizon_s: f64,
     dt_s: f64,
 ) -> Vec<ContactWindow> {
-    let mut windows = Vec::new();
-    let mut open: Option<(f64, usize)> = None;
-    let steps = (horizon_s / dt_s) as usize;
-    for k in 0..=steps {
-        let t = k as f64 * dt_s;
+    if stations.is_empty() || dt_s <= 0.0 || horizon_s <= 0.0 {
+        return Vec::new();
+    }
+    // First station (input order) that sees the satellite at `t`.
+    let vis_at = |t: f64| -> Option<usize> {
         let pos = orbit.position_ecef(t);
-        let vis = stations.iter().position(|gs| gs.sees(pos));
+        stations.iter().position(|gs| gs.sees(pos))
+    };
+    let mut windows = Vec::new();
+    let mut open: Option<(f64, usize)> = vis_at(0.0).map(|s| (0.0, s));
+    let mut prev_t = 0.0;
+    let steps = (horizon_s / dt_s) as usize;
+    for k in 1..=steps {
+        let t = k as f64 * dt_s;
+        let vis = vis_at(t);
         match (open, vis) {
-            (None, Some(s)) => open = Some((t, s)),
+            (None, Some(s)) => {
+                // Entry inside (prev_t, t]: refine the AOS.
+                let aos = bisect_change(prev_t, t, |x| vis_at(x).is_some());
+                open = Some((aos, s));
+            }
             (Some((t0, s)), None) => {
-                windows.push(ContactWindow { start_s: t0, end_s: t, station: s });
+                // Exit inside (prev_t, t]: refine the LOS.
+                let los = bisect_change(prev_t, t, |x| vis_at(x).is_some());
+                windows.push(ContactWindow { start_s: t0, end_s: los, station: s });
                 open = None;
+            }
+            (Some((t0, s)), Some(s2)) if s2 != s => {
+                // Direct handover: close A and reopen B at the refined
+                // change point (zero gap ⇒ merged-timeline semantics hold).
+                let b = bisect_change(prev_t, t, |x| vis_at(x) == Some(s));
+                windows.push(ContactWindow { start_s: t0, end_s: b, station: s });
+                open = Some((b, s2));
+            }
+            (None, None) => {
+                // A sub-`dt_s` pass can rise and set between two steps;
+                // probe the midpoint so coarse sweeps do not drop it.
+                let tm = 0.5 * (prev_t + t);
+                if let Some(s) = vis_at(tm) {
+                    let aos = bisect_change(prev_t, tm, |x| vis_at(x).is_some());
+                    let los = bisect_change(tm, t, |x| vis_at(x).is_some());
+                    if los > aos {
+                        windows.push(ContactWindow { start_s: aos, end_s: los, station: s });
+                    }
+                }
             }
             _ => {}
         }
+        prev_t = t;
     }
     if let Some((t0, s)) = open {
         windows.push(ContactWindow { start_s: t0, end_s: horizon_s, station: s });
     }
     windows
+}
+
+/// One predicted pass of a satellite over a ground target.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PassWindow {
+    /// Acquisition of signal: the target rises above the elevation mask.
+    pub aos_s: f64,
+    /// Loss of signal.
+    pub los_s: f64,
+    /// Peak elevation sampled within the pass, degrees.
+    pub max_elevation_deg: f64,
+}
+
+impl PassWindow {
+    pub fn duration_s(&self) -> f64 {
+        self.los_s - self.aos_s
+    }
+}
+
+/// Predict the next pass of `orbit` over `target` starting at `after_s`,
+/// searching `horizon_s` seconds ahead with sweep step `dt_s` (boundaries
+/// bisection-refined; a midpoint probe catches sub-`dt_s` passes).  Returns
+/// `None` when the target stays below the mask for the whole horizon.  A
+/// pass still in progress at the horizon end is clipped there.
+///
+/// This is the target-visibility primitive of the tip-and-cue scheduler:
+/// the cue satellite for a tip is the constellation member whose
+/// [`CircularOrbit::delayed`] orbit has the earliest `aos_s` before the
+/// cue deadline.
+pub fn next_pass(
+    orbit: &CircularOrbit,
+    target: &GroundStation,
+    after_s: f64,
+    horizon_s: f64,
+    dt_s: f64,
+) -> Option<PassWindow> {
+    if dt_s <= 0.0 || horizon_s <= 0.0 {
+        return None;
+    }
+    let sees = |t: f64| target.sees(orbit.position_ecef(t));
+    let end = after_s + horizon_s;
+    let steps = (horizon_s / dt_s).ceil() as usize;
+
+    // Find the AOS (or note the pass is already in progress at `after_s`).
+    let mut aos: Option<f64> = if sees(after_s) { Some(after_s) } else { None };
+    let mut prev_t = after_s;
+    let mut k = 1usize;
+    while aos.is_none() && k <= steps {
+        let t = (after_s + k as f64 * dt_s).min(end);
+        if sees(t) {
+            aos = Some(bisect_change(prev_t, t, &sees));
+        } else {
+            // Midpoint probe for a pass contained in (prev_t, t).
+            let tm = 0.5 * (prev_t + t);
+            if sees(tm) {
+                aos = Some(bisect_change(prev_t, tm, &sees));
+            }
+        }
+        prev_t = t;
+        k += 1;
+    }
+    let aos = aos?;
+
+    // Walk forward from the AOS to the LOS, tracking peak elevation.
+    let mut max_el = target.elevation_deg(orbit.position_ecef(aos));
+    let fine = (dt_s / 4.0).max(1e-3);
+    let mut t = aos;
+    loop {
+        let t2 = t + fine;
+        if t2 >= end {
+            return Some(PassWindow { aos_s: aos, los_s: end, max_elevation_deg: max_el });
+        }
+        if !sees(t2) {
+            let los = bisect_change(t, t2, &sees);
+            return Some(PassWindow { aos_s: aos, los_s: los, max_elevation_deg: max_el });
+        }
+        max_el = max_el.max(target.elevation_deg(orbit.position_ecef(t2)));
+        t = t2;
+    }
 }
 
 /// Gaps between consecutive contacts, seconds (Fig. 17a sample points).
@@ -185,5 +326,116 @@ mod tests {
         let w = contact_windows(&p.orbit, &[], 86_400.0, 10.0);
         assert!(w.is_empty());
         assert!(connection_intervals(&w).is_empty());
+    }
+
+    /// An equatorial pass crossing two stations in sequence: a 500 km
+    /// equatorial orbit moves ~0.06°/s of longitude relative to the ground,
+    /// and the 30°-mask footprint radius is ~6.6° of central angle, so
+    /// station A (lon 10°) is claimed until it sets, then station B
+    /// (lon 13°) — one window per station, zero gap at the handover.
+    #[test]
+    fn handover_reattributes_station_with_zero_gap() {
+        let orbit = CircularOrbit {
+            altitude_km: 500.0,
+            inclination_deg: 0.0,
+            raan_deg: 0.0,
+            phase_deg: 0.0,
+        };
+        let a = GroundStation::new("A", 0.0, 10.0);
+        let b = GroundStation::new("B", 0.0, 13.0);
+        let w = contact_windows(&orbit, &[a, b], 3_000.0, 5.0);
+        assert_eq!(w.len(), 2, "{w:?}");
+        assert_eq!(w[0].station, 0);
+        assert_eq!(w[1].station, 1);
+        // Pre-fix behavior kept station A for the whole merged span; now
+        // the A-window closes exactly where the B-window opens.
+        assert!((w[0].end_s - w[1].start_s).abs() < 1e-3, "{w:?}");
+        assert!(w[0].duration_s() > 0.0 && w[1].duration_s() > 0.0);
+        // The zero-gap handover does not create a connection interval.
+        assert!(connection_intervals(&w).is_empty());
+    }
+
+    /// Regression for boundary refinement: with bisection + the midpoint
+    /// probe, a coarse dt_s = 60 sweep must reproduce the dt_s = 5 merged
+    /// timeline — same number of merged passes, boundaries within 1 s
+    /// (pre-fix, coarse entry/exit times were off by up to dt_s and
+    /// sub-step passes were dropped outright).  Windows separated by less
+    /// than the coarse step are merged on both sides before comparing: a
+    /// sub-step gap between two stations is indistinguishable from a
+    /// handover at the coarse resolution, by construction.
+    #[test]
+    fn coarse_step_matches_fine_step_after_refinement() {
+        fn merged(windows: &[ContactWindow], gap_tol_s: f64) -> Vec<(f64, f64)> {
+            let mut out: Vec<(f64, f64)> = Vec::new();
+            for w in windows {
+                match out.last_mut() {
+                    Some(last) if w.start_s - last.1 < gap_tol_s => last.1 = w.end_s,
+                    _ => out.push((w.start_s, w.end_s)),
+                }
+            }
+            out
+        }
+        let p = sentinel2();
+        let stations = presets::ground_stations();
+        let coarse = merged(&contact_windows(&p.orbit, &stations, 43_200.0, 60.0), 60.0);
+        let fine = merged(&contact_windows(&p.orbit, &stations, 43_200.0, 5.0), 60.0);
+        assert_eq!(coarse.len(), fine.len(), "coarse {coarse:?}\nfine {fine:?}");
+        for (c, f) in coarse.iter().zip(&fine) {
+            assert!((c.0 - f.0).abs() < 1.0, "aos {c:?} vs {f:?}");
+            assert!((c.1 - f.1).abs() < 1.0, "los {c:?} vs {f:?}");
+        }
+    }
+
+    #[test]
+    fn next_pass_finds_overhead_crossing() {
+        // Equatorial orbit, target ahead on the equator: the pass must rise
+        // within the first ~400 s and peak near zenith.
+        let orbit = CircularOrbit {
+            altitude_km: 500.0,
+            inclination_deg: 0.0,
+            raan_deg: 0.0,
+            phase_deg: 0.0,
+        };
+        let target = GroundStation::new("target", 0.0, 10.0);
+        let pass = next_pass(&orbit, &target, 0.0, 1_000.0, 5.0).expect("pass");
+        assert!(pass.aos_s > 0.0 && pass.aos_s < 400.0, "{pass:?}");
+        assert!(pass.los_s > pass.aos_s);
+        assert!(pass.max_elevation_deg > 80.0, "{pass:?}");
+        // Starting the search after the pass ends finds nothing in a short
+        // horizon (the next revisit is a full orbit away).
+        assert!(next_pass(&orbit, &target, pass.los_s + 1.0, 600.0, 5.0).is_none());
+    }
+
+    #[test]
+    fn next_pass_out_of_plane_target_is_none() {
+        let orbit = CircularOrbit {
+            altitude_km: 500.0,
+            inclination_deg: 0.0,
+            raan_deg: 0.0,
+            phase_deg: 0.0,
+        };
+        let target = GroundStation::new("polar", 80.0, 0.0);
+        assert!(next_pass(&orbit, &target, 0.0, 20_000.0, 10.0).is_none());
+    }
+
+    #[test]
+    fn delayed_follower_passes_later() {
+        // A follower trailing by 20 s reaches the same target ~20 s later
+        // (± Earth-rotation slippage, well under the 2 s tolerance here
+        // for an equatorial pass).
+        let orbit = CircularOrbit {
+            altitude_km: 500.0,
+            inclination_deg: 0.0,
+            raan_deg: 0.0,
+            phase_deg: 0.0,
+        };
+        let target = GroundStation::new("target", 0.0, 10.0);
+        let lead = next_pass(&orbit, &target, 0.0, 1_000.0, 2.0).expect("leader pass");
+        let follow =
+            next_pass(&orbit.delayed(20.0), &target, 0.0, 1_000.0, 2.0).expect("follower");
+        assert!(
+            (follow.aos_s - lead.aos_s - 20.0).abs() < 2.0,
+            "lead {lead:?} follow {follow:?}"
+        );
     }
 }

@@ -71,7 +71,10 @@ impl Placement {
 #[derive(Debug, Clone)]
 pub struct DeploymentPlan {
     /// Bottleneck capacity ratio `φ`: every function can absorb `φ×` its
-    /// per-frame workload.  Feasible (Program (10)) iff `φ ≥ 1`.
+    /// per-frame workload.  Feasible (Program (10)) iff `φ ≥ 1`.  For a
+    /// reserved plan (`cue_reserve > 0`) the workload side is inflated by
+    /// `1/(1 − cue_reserve)`, so `φ ≥ 1` additionally certifies the cue
+    /// headroom.
     pub phi: f64,
     /// All placements, indexed `[func][sat]` dense.
     pub placements: Vec<Placement>,
@@ -81,6 +84,10 @@ pub struct DeploymentPlan {
     pub proven: bool,
     /// LP relaxations solved.
     pub nodes: usize,
+    /// Multi-tenant slack fraction φ_cue the plan was sized for (0 for the
+    /// plain Program (10) plan): the share of every function's capacity
+    /// kept free for detection-triggered cue tasks.
+    pub cue_reserve: f64,
 }
 
 impl DeploymentPlan {
@@ -219,6 +226,27 @@ pub fn plan_masked(
     constellation: &Constellation,
     banned: &[usize],
 ) -> Result<DeploymentPlan, PlanError> {
+    plan_reserved(workflow, profiles, constellation, banned, 0.0)
+}
+
+/// [`plan_masked`] with a multi-tenant capacity reserve: a slack fraction
+/// `cue_reserve = φ_cue ∈ [0, 0.9]` of every function's capacity is kept
+/// free on top of the background workload, so detection-triggered cue
+/// tasks (the tip-and-cue subsystem) can be admitted mid-mission without
+/// displacing it.  Implemented by inflating the workload side of the
+/// cumulative Eq. (13) rows by `1/(1 − φ_cue)`: a plan with `φ ≥ 1` then
+/// certifies `capacity ≥ workload + φ_cue/(1 − φ_cue) × workload`, i.e.
+/// the background fits in a `(1 − φ_cue)` share of what was provisioned.
+/// Placements keep their *physical* rates — the reserve is an admission
+/// budget, not a throttle, so an admitted cue really does run at full
+/// speed on the shared instances.
+pub fn plan_reserved(
+    workflow: &Workflow,
+    profiles: &ProfileDb,
+    constellation: &Constellation,
+    banned: &[usize],
+    cue_reserve: f64,
+) -> Result<DeploymentPlan, PlanError> {
     workflow.validate()?;
     constellation.validate()?;
     for i in 0..workflow.len() {
@@ -232,6 +260,9 @@ pub fn plan_masked(
     let rho = workflow.workload_factors()?;
     let spec = &profiles.spec;
     let df = constellation.frame_deadline_s;
+    // Reserve φ_cue of capacity for cue traffic by inflating the workload.
+    let cue_reserve = cue_reserve.clamp(0.0, 0.9);
+    let workload_scale = 1.0 / (1.0 - cue_reserve);
     let vm = VarMap::new(nm, ns);
     let mut lp = Lp::new(vm.n_vars);
 
@@ -352,7 +383,7 @@ pub fn plan_masked(
             }
             let f = profiles.get(workflow.name(i));
             let mut row: Vec<(usize, f64)> =
-                vec![(vm.phi, -(rho[i] * covered as f64))];
+                vec![(vm.phi, -(rho[i] * covered as f64 * workload_scale))];
             for j in g.sats() {
                 row.push((vm.v(i, j), df));
                 if f.gpu_speed > 0.0 && spec.has_gpu {
@@ -419,6 +450,7 @@ pub fn plan_masked(
                 n_sats: ns,
                 proven,
                 nodes,
+                cue_reserve,
             })
         }
     }
@@ -482,7 +514,9 @@ pub fn verify_plan(
         }
     }
 
-    // Cumulative workload coverage at ratio φ.
+    // Cumulative workload coverage at ratio φ (reserved plans inflate the
+    // workload side by the same factor the solver used).
+    let workload_scale = 1.0 / (1.0 - plan.cue_reserve.clamp(0.0, 0.9));
     for g in &constellation.capture_groups {
         let covered: usize = constellation
             .capture_groups
@@ -501,7 +535,7 @@ pub fn verify_plan(
                     p.cpu_capacity(df) + p.gpu_capacity()
                 })
                 .sum();
-            let need = plan.phi * rho[i] * covered as f64;
+            let need = plan.phi * rho[i] * covered as f64 * workload_scale;
             if cap + 1e-4 * need.max(1.0) < need {
                 violations.push(format!(
                     "Eq13: func {i} group [{},{}] capacity {cap} < {need}",
@@ -636,6 +670,47 @@ mod tests {
             plan(&wf, &db, &c),
             Err(PlanError::MissingProfile(n)) if n == "unknown-model"
         ));
+    }
+
+    #[test]
+    fn reserved_plan_scales_phi_down_and_verifies() {
+        // Reserving φ_cue of capacity shrinks the reported background φ by
+        // about (1 − φ_cue) — same physical placements, inflated workload.
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let base = plan(&wf, &db, &c).expect("base plan");
+        let reserved = plan_reserved(&wf, &db, &c, &[], 0.25).expect("reserved plan");
+        assert_eq!(reserved.cue_reserve, 0.25);
+        assert!(
+            reserved.phi < base.phi,
+            "reserve must cost background phi: {} vs {}",
+            reserved.phi,
+            base.phi
+        );
+        // The B&B stops at a 5% gap, so compare with slack.
+        let want = base.phi * 0.75;
+        assert!(
+            (reserved.phi - want).abs() <= 0.15 * want,
+            "phi {} vs scaled {}",
+            reserved.phi,
+            want
+        );
+        // The reserve-aware verifier accepts the plan it solved.
+        let violations = verify_plan(&reserved, &wf, &db, &c);
+        assert!(violations.is_empty(), "{violations:?}");
+    }
+
+    #[test]
+    fn zero_reserve_is_plain_plan_masked() {
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let a = plan_masked(&wf, &db, &c, &[]).unwrap();
+        let b = plan_reserved(&wf, &db, &c, &[], 0.0).unwrap();
+        assert_eq!(a.phi, b.phi);
+        assert_eq!(a.placements, b.placements);
+        assert_eq!(b.cue_reserve, 0.0);
     }
 
     #[test]

@@ -79,6 +79,28 @@ impl PlannerBackend for MilpPlanner {
     }
 }
 
+/// Program (10) with a multi-tenant capacity reserve: a slack fraction
+/// φ_cue of every function's capacity is kept free for detection-triggered
+/// cue tasks (the tip-and-cue subsystem's admission budget).  `reserve = 0`
+/// degenerates to [`MilpPlanner`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReservedMilpPlanner {
+    /// Slack fraction φ_cue ∈ [0, 0.9].
+    pub reserve: f64,
+}
+
+impl PlannerBackend for ReservedMilpPlanner {
+    fn name(&self) -> &'static str {
+        "milp-reserved"
+    }
+
+    fn plan(&self, ctx: &Ctx<'_>) -> Result<Planned, ScenarioError> {
+        planner::plan_reserved(ctx.wf, ctx.db, ctx.c, ctx.banned, self.reserve)
+            .map(Planned::Deployment)
+            .map_err(ScenarioError::Plan)
+    }
+}
+
 /// Data parallelism (Denby & Lucia): every satellite hosts every function.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct DataParallelPlanner;

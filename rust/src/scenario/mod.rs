@@ -39,7 +39,8 @@ use crate::workflow::Workflow;
 
 pub use backend::{
     BackendKind, ComputeParallelPlanner, Ctx, DataParallelPlanner, LoadSprayRouter,
-    MilpPlanner, OrbitChainRouter, Planned, PlannerBackend, RouterBackend,
+    MilpPlanner, OrbitChainRouter, Planned, PlannerBackend, ReservedMilpPlanner,
+    RouterBackend,
 };
 pub use sweep::{SweepGrid, SweepOutcome, SweepPoint, SweepRunner};
 

@@ -37,10 +37,13 @@ pub struct SweepPoint {
 /// Dimensions left unset keep the base scenario's value.  Point order is
 /// deterministic: devices → constellation sizes → deadlines → workflow
 /// sizes → frame counts → ISL rates → satellite MTBFs → outage durations →
-/// epoch lengths → backends (innermost).  Setting any of the three
-/// event-timeline dimensions attaches a
-/// [`DynamicSpec`](crate::dynamic::DynamicSpec) to the point (extending the
-/// base scenario's spec when present), so those points run the epoch loop.
+/// epoch lengths → tip rates → cue deadlines → reserve fractions →
+/// backends (innermost).  Setting any of the three event-timeline
+/// dimensions attaches a [`DynamicSpec`](crate::dynamic::DynamicSpec) to
+/// the point (extending the base scenario's spec when present), so those
+/// points run the epoch loop; setting a tip-and-cue dimension likewise
+/// attaches a [`TipCueSpec`](crate::tipcue::TipCueSpec), so those points
+/// run the closed loop.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
     base: Scenario,
@@ -53,6 +56,9 @@ pub struct SweepGrid {
     sat_mtbfs: Vec<f64>,
     outage_durations: Vec<f64>,
     epoch_frames: Vec<usize>,
+    tip_rates: Vec<f64>,
+    cue_deadlines: Vec<f64>,
+    reserve_fracs: Vec<f64>,
     backends: Vec<BackendKind>,
     reseed: bool,
 }
@@ -70,6 +76,9 @@ impl SweepGrid {
             sat_mtbfs: Vec::new(),
             outage_durations: Vec::new(),
             epoch_frames: Vec::new(),
+            tip_rates: Vec::new(),
+            cue_deadlines: Vec::new(),
+            reserve_fracs: Vec::new(),
             backends: Vec::new(),
             reseed: false,
         }
@@ -125,6 +134,26 @@ impl SweepGrid {
     /// point.
     pub fn epoch_frames(mut self, frames: &[usize]) -> Self {
         self.epoch_frames = frames.to_vec();
+        self
+    }
+
+    /// Expected tips per frame; attaches the tip-and-cue extension to
+    /// every point (those points run the closed loop).
+    pub fn tip_rates(mut self, rates: &[f64]) -> Self {
+        self.tip_rates = rates.to_vec();
+        self
+    }
+
+    /// Cue deadlines in seconds; attaches the tip-and-cue extension.
+    pub fn cue_deadlines(mut self, deadlines: &[f64]) -> Self {
+        self.cue_deadlines = deadlines.to_vec();
+        self
+    }
+
+    /// Reserve fractions φ_cue; attaches the tip-and-cue extension — the
+    /// admission/background-completion tradeoff sweep.
+    pub fn reserve_fracs(mut self, fracs: &[f64]) -> Self {
+        self.reserve_fracs = fracs.to_vec();
         self
     }
 
@@ -187,6 +216,34 @@ impl SweepGrid {
         } else {
             self.epoch_frames.iter().map(|&f| Some(f)).collect()
         };
+        // Tip-and-cue dimensions, flattened into one (rate, deadline,
+        // reserve) axis so the nesting below stays readable.
+        let tipcue_dims: Vec<(Option<f64>, Option<f64>, Option<f64>)> = {
+            let trs: Vec<Option<f64>> = if self.tip_rates.is_empty() {
+                vec![None]
+            } else {
+                self.tip_rates.iter().map(|&r| Some(r)).collect()
+            };
+            let cds: Vec<Option<f64>> = if self.cue_deadlines.is_empty() {
+                vec![None]
+            } else {
+                self.cue_deadlines.iter().map(|&d| Some(d)).collect()
+            };
+            let rfs: Vec<Option<f64>> = if self.reserve_fracs.is_empty() {
+                vec![None]
+            } else {
+                self.reserve_fracs.iter().map(|&r| Some(r)).collect()
+            };
+            let mut dims = Vec::new();
+            for &tr in &trs {
+                for &cd in &cds {
+                    for &rf in &rfs {
+                        dims.push((tr, cd, rf));
+                    }
+                }
+            }
+            dims
+        };
         let backends = if self.backends.is_empty() {
             vec![BackendKind::OrbitChain]
         } else {
@@ -203,49 +260,72 @@ impl SweepGrid {
                                 for &mtbf in &mtbfs {
                                     for &outage in &outages {
                                         for &ef in &epoch_frames {
-                                            for &backend in &backends {
-                                                let mut s = self.base.clone();
-                                                s.device = device;
-                                                if let Some(n) = ns {
-                                                    s.n_sats = n;
-                                                    s.orbit_shift = false;
-                                                }
-                                                s.frame_deadline_s = deadline;
-                                                s.workflow_size = wf_size;
-                                                s.frames = n_frames;
-                                                s.isl_rate_bps = isl;
-                                                if mtbf.is_some()
-                                                    || outage.is_some()
-                                                    || ef.is_some()
-                                                {
-                                                    let mut d = s
-                                                        .dynamic
-                                                        .clone()
-                                                        .unwrap_or_default();
-                                                    if let Some(m) = mtbf {
-                                                        d.sat_mtbf_s = m;
+                                            for &(tr, cd, rf) in &tipcue_dims {
+                                                for &backend in &backends {
+                                                    let mut s = self.base.clone();
+                                                    s.device = device;
+                                                    if let Some(n) = ns {
+                                                        s.n_sats = n;
+                                                        s.orbit_shift = false;
                                                     }
-                                                    if let Some(o) = outage {
-                                                        d.sat_mttr_s = o;
+                                                    s.frame_deadline_s = deadline;
+                                                    s.workflow_size = wf_size;
+                                                    s.frames = n_frames;
+                                                    s.isl_rate_bps = isl;
+                                                    if mtbf.is_some()
+                                                        || outage.is_some()
+                                                        || ef.is_some()
+                                                    {
+                                                        let mut d = s
+                                                            .dynamic
+                                                            .clone()
+                                                            .unwrap_or_default();
+                                                        if let Some(m) = mtbf {
+                                                            d.sat_mtbf_s = m;
+                                                        }
+                                                        if let Some(o) = outage {
+                                                            d.sat_mttr_s = o;
+                                                        }
+                                                        if let Some(f) = ef {
+                                                            d.frames_per_epoch = f;
+                                                        }
+                                                        s.dynamic = Some(d);
                                                     }
-                                                    if let Some(f) = ef {
-                                                        d.frames_per_epoch = f;
+                                                    if tr.is_some()
+                                                        || cd.is_some()
+                                                        || rf.is_some()
+                                                    {
+                                                        let mut tc = s
+                                                            .tipcue
+                                                            .clone()
+                                                            .unwrap_or_default();
+                                                        if let Some(v) = tr {
+                                                            tc.tip_rate_per_frame = v;
+                                                        }
+                                                        if let Some(v) = cd {
+                                                            tc.cue_deadline_s = v;
+                                                        }
+                                                        if let Some(v) = rf {
+                                                            tc.reserve_frac = v;
+                                                        }
+                                                        s.tipcue = Some(tc);
                                                     }
-                                                    s.dynamic = Some(d);
-                                                }
-                                                let idx = points.len();
-                                                if self.reseed {
-                                                    s.seed = derived_seed(
-                                                        self.base.seed,
-                                                        idx as u64,
+                                                    let idx = points.len();
+                                                    if self.reseed {
+                                                        s.seed = derived_seed(
+                                                            self.base.seed,
+                                                            idx as u64,
+                                                        );
+                                                    }
+                                                    s.name = format!(
+                                                        "{}#{idx}",
+                                                        self.base.name
                                                     );
+                                                    points.push(SweepPoint {
+                                                        scenario: s,
+                                                        backend,
+                                                    });
                                                 }
-                                                s.name =
-                                                    format!("{}#{idx}", self.base.name);
-                                                points.push(SweepPoint {
-                                                    scenario: s,
-                                                    backend,
-                                                });
                                             }
                                         }
                                     }
@@ -331,10 +411,15 @@ impl SweepRunner {
                         break;
                     }
                     let point = &points[i];
-                    // Dynamic points run the epoch loop; static points the
-                    // single plan → route → simulate cycle.  Both collapse
-                    // to the same report shape.
-                    let result = if point.scenario.dynamic.is_some() {
+                    // Tip-and-cue points run the closed loop, dynamic
+                    // points the epoch loop, static points the single
+                    // plan → route → simulate cycle.  All collapse to the
+                    // same report shape.
+                    let result = if point.scenario.tipcue.is_some() {
+                        crate::tipcue::TipCueOrchestrator::new(&point.scenario)
+                            .with_backend(point.backend)
+                            .run_scenario_report()
+                    } else if point.scenario.dynamic.is_some() {
                         crate::dynamic::EpochOrchestrator::new(&point.scenario)
                             .with_backend(point.backend)
                             .run_scenario_report()
@@ -436,6 +521,24 @@ mod tests {
         // Without timeline dimensions, no extension is attached.
         let plain = SweepGrid::new(Scenario::jetson()).points();
         assert!(plain[0].scenario.dynamic.is_none());
+    }
+
+    #[test]
+    fn tipcue_dimensions_attach_extension() {
+        let base = Scenario::jetson().with_frames(2);
+        let points = SweepGrid::new(base)
+            .reserve_fracs(&[0.0, 0.3])
+            .cue_deadlines(&[45.0])
+            .points();
+        assert_eq!(points.len(), 2);
+        for (point, reserve) in points.iter().zip([0.0, 0.3]) {
+            let tc = point.scenario.tipcue.as_ref().expect("tipcue attached");
+            assert_eq!(tc.reserve_frac, reserve);
+            assert_eq!(tc.cue_deadline_s, 45.0);
+        }
+        // Without tip-and-cue dimensions, no extension is attached.
+        let plain = SweepGrid::new(Scenario::jetson()).points();
+        assert!(plain[0].scenario.tipcue.is_none());
     }
 
     #[test]

@@ -75,6 +75,11 @@ pub struct SimConfig {
     /// already captured — and distributed over pipelines exactly like frame
     /// tiles.
     pub warm_tiles: usize,
+    /// Mid-run task injections (tip-and-cue follow-up tasks, cue arrivals
+    /// from the dynamic event timeline): single tiles entering their
+    /// pipeline at an arbitrary time with a deadline and a priority bit.
+    /// The measurement cutoff extends to cover every injection's deadline.
+    pub injections: Vec<TileInjection>,
 }
 
 impl Default for SimConfig {
@@ -86,7 +91,54 @@ impl Default for SimConfig {
             isl_rate_bps: None,
             link_rate_factors: None,
             warm_tiles: 0,
+            injections: Vec::new(),
         }
+    }
+}
+
+/// One mid-run task injected into the simulation: a single tile that
+/// enters its capture group's pipeline at `t_s` (its pixels are captured
+/// then — e.g. by the cue satellite of a predicted pass — so no revisit
+/// delay applies at the source) and must finish every reachable sink by
+/// `deadline_s`.
+#[derive(Debug, Clone)]
+pub struct TileInjection {
+    /// Arrival (capture) time, seconds.
+    pub t_s: f64,
+    /// Tile id within the frame layout (selects the capture group).
+    pub tile_no: usize,
+    /// Absolute completion deadline, seconds.
+    pub deadline_s: f64,
+    /// Priority tasks jump instance queues and are never thinned by the
+    /// distribution ratios — a cue must run its whole workflow.
+    pub priority: bool,
+    /// Prefer a pipeline whose source stage lives on this satellite (the
+    /// predicted-pass satellite); falls back to the weighted draw when no
+    /// such pipeline exists in the tile's capture group.
+    pub prefer_sat: Option<usize>,
+}
+
+/// What happened to one [`TileInjection`].
+#[derive(Debug, Clone)]
+pub struct InjectionOutcome {
+    /// Index into [`SimConfig::injections`].
+    pub injection: usize,
+    /// A pipeline existed for the tile's capture group.
+    pub routed: bool,
+    /// Satellite hosting the source stage the task entered on.
+    pub source_sat: Option<usize>,
+    /// Time the task's journey completed before cutoff: every reachable
+    /// sink for priority tasks, every *surviving* (un-thinned) sink for
+    /// non-priority ones.
+    pub finished_s: Option<f64>,
+    /// The injection's absolute deadline (copied for reporting).
+    pub deadline_s: f64,
+}
+
+impl InjectionOutcome {
+    /// Completed with every reachable sink done by the deadline.
+    pub fn met_deadline(&self) -> bool {
+        matches!(self.finished_s, Some(t) if t <= self.deadline_s + 1e-9)
     }
 }
 
@@ -108,6 +160,8 @@ pub struct SimReport {
     /// Injected tiles whose pipeline journey had not ended by the cutoff —
     /// the backlog a warm-started next epoch inherits.
     pub unfinished_tiles: usize,
+    /// Per-injection outcomes, in [`SimConfig::injections`] order.
+    pub injections: Vec<InjectionOutcome>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -162,6 +216,10 @@ struct TileState {
     revisit_s: f64,
     /// Per-function arrival time (for queueing-delay accounting).
     finished: bool,
+    /// Priority tile: jumps instance queues, never thinned.
+    priority: bool,
+    /// Index into [`SimConfig::injections`] for injected tiles.
+    injection: Option<usize>,
 }
 
 /// An in-flight ISL message.
@@ -313,6 +371,8 @@ impl<'a> Simulator<'a> {
                 comm_s: 0.0,
                 revisit_s: 0.0,
                 finished: false,
+                priority: false,
+                injection: None,
             });
             for &sfunc in &sources {
                 let st = self.pipelines[chosen].stages[sfunc];
@@ -348,6 +408,8 @@ impl<'a> Simulator<'a> {
                     comm_s: 0.0,
                     revisit_s: 0.0,
                     finished: false,
+                    priority: false,
+                    injection: None,
                 });
                 for &sfunc in &sources {
                     let st = self.pipelines[chosen].stages[sfunc];
@@ -361,12 +423,117 @@ impl<'a> Simulator<'a> {
             }
         }
 
+        // Mid-run task injections: a single tile each, entering its capture
+        // group's pipeline at `t_s` with no revisit delay (its pixels are
+        // captured then, e.g. by the cue satellite of a predicted pass).
+        // Completion accounting: an injected task owes one terminal event
+        // per positive-ratio source→sink path (a multi-in-edge sink runs,
+        // and terminates, once per in-path).  `sink_paths_from[u]` — the
+        // number of such paths from `u` to any effective sink (a function
+        // with no positive-ratio out-edge) — both seeds the debt and pays
+        // it down when thinning prunes a subtree mid-flight, so the call
+        // is exact for priority *and* thinned non-priority tasks.
+        let sink_paths_from: Vec<u64> = match self.wf.topo_order() {
+            Ok(order) => {
+                let mut paths = vec![0u64; self.wf.len()];
+                for &u in order.iter().rev() {
+                    let downs = self.wf.downstream(u);
+                    if downs.iter().all(|&(_, d)| d <= 0.0) {
+                        paths[u] = 1;
+                    } else {
+                        paths[u] = downs
+                            .iter()
+                            .filter(|&&(_, d)| d > 0.0)
+                            .map(|&(v, _)| paths[v])
+                            .sum();
+                    }
+                }
+                paths
+            }
+            // A degenerate workflow cannot run an injection's pipeline
+            // meaningfully; fall back to first-terminal completion.
+            Err(_) => vec![1; self.wf.len().max(1)],
+        };
+        let n_expected_terminals = sources
+            .iter()
+            .map(|&s| sink_paths_from.get(s).copied().unwrap_or(1) as usize)
+            .sum::<usize>()
+            .max(1);
+        let mut injection_outcomes: Vec<InjectionOutcome> = Vec::new();
+        let mut injection_terminals_left: Vec<usize> = Vec::new();
+        for (ii, inj) in self.cfg.injections.iter().enumerate() {
+            let mut outcome = InjectionOutcome {
+                injection: ii,
+                routed: false,
+                source_sat: None,
+                finished_s: None,
+                deadline_s: inj.deadline_s,
+            };
+            injection_terminals_left.push(n_expected_terminals);
+            if c.tiles_per_frame == 0 {
+                metrics.inc("tiles.unrouted", 1.0);
+                injection_outcomes.push(outcome);
+                continue;
+            }
+            let tile_no = inj.tile_no % c.tiles_per_frame;
+            let g = c.tile_group(tile_no);
+            let pipes = &group_pipes[g];
+            if pipes.is_empty() {
+                for &s in &sources {
+                    metrics.inc(&recv_keys[s], 1.0);
+                }
+                metrics.inc("tiles.unrouted", 1.0);
+                injection_outcomes.push(outcome);
+                continue;
+            }
+            // Prefer a pipeline whose source stage sits on the requested
+            // (predicted-pass) satellite; weighted draw otherwise.
+            let preferred = inj.prefer_sat.and_then(|sat| {
+                let src = *sources.first()?;
+                pipes
+                    .iter()
+                    .copied()
+                    .find(|&k| self.pipelines[k].stages[src].sat == sat)
+            });
+            let chosen = match preferred {
+                Some(k) => k,
+                None => pick_pipeline(&mut rng, pipes),
+            };
+            let tid = tiles.len() as u32;
+            tiles.push(TileState {
+                pipeline: chosen,
+                t0: inj.t_s,
+                last_done: inj.t_s,
+                proc_s: 0.0,
+                comm_s: 0.0,
+                revisit_s: 0.0,
+                finished: false,
+                priority: inj.priority,
+                injection: Some(ii),
+            });
+            outcome.routed = true;
+            outcome.source_sat = sources
+                .first()
+                .map(|&s| self.pipelines[chosen].stages[s].sat);
+            for &sfunc in &sources {
+                let st = self.pipelines[chosen].stages[sfunc];
+                let inst = self.inst_idx[&(st.func, st.sat, st.dev)];
+                push(&mut heap, &mut seq, inj.t_s, Ev::Arrival { inst, tile: tid });
+            }
+            metrics.inc("tiles.injected", 1.0);
+            injection_outcomes.push(outcome);
+        }
+
         // Measurement cutoff: frames keep their deadline discipline;
         // anything still queued or in flight past it counts as not analyzed
-        // (and feeds the warm-start backlog of the next epoch).
-        let cutoff = self.cfg.frames as f64 * df
+        // (and feeds the warm-start backlog of the next epoch).  Injections
+        // extend the cutoff to cover their deadlines.
+        let mut cutoff = self.cfg.frames as f64 * df
             + c.revisit_time_s(c.n_sats - 1)
             + self.cfg.drain_s;
+        for inj in &self.cfg.injections {
+            cutoff = cutoff.max(inj.deadline_s.max(inj.t_s) + self.cfg.drain_s);
+        }
         let mut last_event_t = 0.0;
 
         while let Some(Reverse(QueuedEvent { t, ev, .. })) = heap.pop() {
@@ -377,7 +544,13 @@ impl<'a> Simulator<'a> {
             match ev {
                 Ev::Arrival { inst, tile } => {
                     metrics.inc(&recv_keys[self.instances[inst].func], 1.0);
-                    inst_queue[inst].push_back(tile);
+                    // Priority tasks (cues) jump the FIFO; the tile in
+                    // service is not preempted.
+                    if tiles[tile as usize].priority {
+                        inst_queue[inst].push_front(tile);
+                    } else {
+                        inst_queue[inst].push_back(tile);
+                    }
                     if !inst_busy[inst] {
                         self.start_service(
                             inst,
@@ -396,13 +569,25 @@ impl<'a> Simulator<'a> {
                     metrics.inc(&done_keys[spec.func], 1.0);
                     let ts = &mut tiles[tile as usize];
                     ts.last_done = t;
-                    // Forward downstream with thinning by δ.
+                    let priority = ts.priority;
+                    let injected = ts.injection.is_some();
+                    // Forward downstream with thinning by δ — except for
+                    // priority tasks, which always ride every positive-δ
+                    // edge: a cue must run its whole follow-up workflow.
                     let pipe = &self.pipelines[ts.pipeline];
                     let downs: Vec<(usize, f64)> =
                         self.wf.downstream(spec.func).to_vec();
                     let mut terminal = true;
+                    // Sink-path debt an injected task sheds at this event:
+                    // thinned subtrees pay their path counts immediately.
+                    let mut shed = 0usize;
                     for (vfunc, delta) in downs {
-                        if !rng.chance(delta) {
+                        let forwarded =
+                            if priority { delta > 0.0 } else { rng.chance(delta) };
+                        if !forwarded {
+                            if injected && delta > 0.0 {
+                                shed += sink_paths_from[vfunc] as usize;
+                            }
                             continue;
                         }
                         terminal = false;
@@ -442,11 +627,35 @@ impl<'a> Simulator<'a> {
                             }
                         }
                     }
-                    if terminal && !ts.finished {
-                        // Journey over: a sink completed, or every
-                        // downstream edge thinned the tile out — either way
-                        // no further stage will run, so it is not backlog.
-                        ts.finished = true;
+                    match ts.injection {
+                        Some(ii) => {
+                            // An injected task completes when its sink-path
+                            // debt reaches zero: each effective-sink
+                            // execution pays 1, each thinned edge pays its
+                            // pruned subtree's path count — exact whether
+                            // or not the task has priority.
+                            let is_sink = self
+                                .wf
+                                .downstream(spec.func)
+                                .iter()
+                                .all(|&(_, d)| d <= 0.0);
+                            let dec = shed + usize::from(is_sink);
+                            if dec > 0 {
+                                let left = &mut injection_terminals_left[ii];
+                                *left = left.saturating_sub(dec);
+                                if *left == 0 && !ts.finished {
+                                    ts.finished = true;
+                                    injection_outcomes[ii].finished_s = Some(t);
+                                }
+                            }
+                        }
+                        None => {
+                            if terminal {
+                                // Journey over: a sink completed, or every
+                                // downstream edge thinned the tile out.
+                                ts.finished = true;
+                            }
+                        }
                     }
                     // Serve next queued tile.
                     inst_busy[inst] = false;
@@ -475,9 +684,18 @@ impl<'a> Simulator<'a> {
                     if at == msg.dest_sat {
                         // Arrived: wait for the destination satellite's own
                         // capture of the tile (revisit), then deliver.
+                        // Injected tasks skip the wait: their pixels were
+                        // captured at injection (by the cue satellite of
+                        // the predicted pass) and ride with the task, and
+                        // `t0` is that capture time — the leader-relative
+                        // revisit schedule does not apply to them.
                         let ts = &mut tiles[msg.tile as usize];
                         ts.comm_s += t - msg.sent_at;
-                        let t_cap = ts.t0 + c.revisit_time_s(at);
+                        let t_cap = if ts.injection.is_some() {
+                            t
+                        } else {
+                            ts.t0 + c.revisit_time_s(at)
+                        };
                         let t_deliver = t.max(t_cap);
                         if t_cap > t {
                             ts.revisit_s += t_cap - t;
@@ -539,6 +757,7 @@ impl<'a> Simulator<'a> {
             frame_latency_s: worst_latency,
             breakdown,
             unfinished_tiles: unfinished,
+            injections: injection_outcomes,
             metrics,
         }
     }
@@ -749,6 +968,76 @@ mod tests {
         if rep.metrics.counter("isl.bytes") > 0.0 {
             assert!(rep.metrics.counter("isl.energy_j") > 0.0);
         }
+    }
+
+    #[test]
+    fn priority_injection_completes_and_meets_deadline() {
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let cfg = SimConfig {
+            frames: 3,
+            injections: vec![TileInjection {
+                t_s: 2.0,
+                tile_no: 50, // group 2: capturable by every satellite
+                deadline_s: 120.0,
+                priority: true,
+                prefer_sat: None,
+            }],
+            ..Default::default()
+        };
+        let rep = simulate_orbitchain(&wf, &db, &c, cfg).unwrap();
+        assert_eq!(rep.injections.len(), 1);
+        let o = &rep.injections[0];
+        assert!(o.routed && o.source_sat.is_some());
+        let done = o.finished_s.expect("priority cue runs the full workflow");
+        assert!(done >= 2.0, "finished before injection: {done}");
+        assert!(o.met_deadline(), "finished at {done} vs deadline 120");
+        assert_eq!(rep.metrics.counter("tiles.injected"), 1.0);
+    }
+
+    #[test]
+    fn injection_deadline_miss_is_reported() {
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let cfg = SimConfig {
+            frames: 3,
+            injections: vec![TileInjection {
+                t_s: 2.0,
+                tile_no: 50,
+                // The deadline already passed when the task arrives (a cue
+                // scheduled too late): it can only be reported as missed.
+                deadline_s: 1.0,
+                priority: true,
+                prefer_sat: None,
+            }],
+            ..Default::default()
+        };
+        let rep = simulate_orbitchain(&wf, &db, &c, cfg).unwrap();
+        let o = &rep.injections[0];
+        assert!(o.routed);
+        assert!(!o.met_deadline(), "{o:?}");
+    }
+
+    #[test]
+    fn injection_prefers_pass_satellite_pipeline() {
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let cfg = SimConfig {
+            frames: 2,
+            injections: vec![TileInjection {
+                t_s: 1.0,
+                tile_no: 0, // group 0: only the leader captures it
+                deadline_s: 200.0,
+                priority: true,
+                prefer_sat: Some(0),
+            }],
+            ..Default::default()
+        };
+        let rep = simulate_orbitchain(&wf, &db, &c, cfg).unwrap();
+        assert_eq!(rep.injections[0].source_sat, Some(0));
     }
 
     #[test]

@@ -1,0 +1,724 @@
+//! In-orbit tip-and-cue: detection-triggered cue tasking with pass
+//! prediction and multi-tenant capacity sharing (the "advanced workflow"
+//! the paper's abstract promises, built as a closed loop on the scenario
+//! orchestration layer).
+//!
+//! A wide-area **tip workflow** — the scenario's own analytics DAG, e.g.
+//! flood detection — emits geolocated *tips* while the mission runs.  The
+//! **cue scheduler** converts each tip into a high-resolution follow-up
+//! task with a deadline:
+//!
+//! 1. **Pass prediction.**  Every constellation member flies the leader's
+//!    orbit delayed by its revisit offset
+//!    ([`CircularOrbit::delayed`](crate::orbit::CircularOrbit::delayed));
+//!    [`visibility::next_pass`](crate::orbit::visibility::next_pass)
+//!    finds, per satellite, when the tip's ground target next rises above
+//!    the elevation mask.  The cue satellite is the one with the earliest
+//!    acquisition of signal before the cue deadline.
+//! 2. **Multi-tenant admission.**  The deployment is planned with
+//!    [`planner::plan_reserved`](crate::planner::plan_reserved): a slack
+//!    fraction φ_cue of every function's capacity is provisioned on top of
+//!    the background workload.  Admission is a token bucket filled at the
+//!    reserve's tile rate — `φ_cue/(1 − φ_cue) × N0/Δf` tiles per second —
+//!    so cue traffic can never displace more background work than the
+//!    reserve paid for.  With φ_cue = 0 every cue is rejected.
+//! 3. **Closed-loop execution.**  Admitted cues become
+//!    [`sim::TileInjection`]s at their predicted pass time: priority tiles
+//!    that jump instance queues, ride every positive-ratio workflow edge
+//!    (no thinning — a cue runs its whole follow-up workflow), route
+//!    through the pipelines the configured
+//!    [`RouterBackend`](crate::scenario::RouterBackend) produced, and must
+//!    finish every reachable sink by `tip time + cue deadline`.
+//!
+//! The headline metric is the **tip→insight response latency**
+//! (`tipcue.response_latency`): time from tip emission to the cue
+//! workflow's last sink, per completed cue.  Counters:
+//! `tipcue.tips`, `tipcue.cues_{admitted,rejected,completed,missed}`.
+//!
+//! Entry points: CLI `orbitchain tipcue`, [`exp::tipcue_response`]
+//! (admission/background tradeoff across reserve fractions),
+//! `benches/tipcue.rs`, and the sweep dimensions
+//! [`SweepGrid::tip_rates`](crate::scenario::SweepGrid::tip_rates) /
+//! `cue_deadlines` / `reserve_fracs`.
+//!
+//! [`exp::tipcue_response`]: crate::exp::tipcue_response
+
+use std::time::Instant;
+
+use crate::config::Scenario;
+use crate::constellation::Constellation;
+use crate::orbit::visibility::{self, PassWindow};
+use crate::orbit::{GroundStation, LatLon};
+use crate::scenario::{
+    BackendKind, LoadSprayRouter, Orchestrator, OrbitChainRouter, ReservedMilpPlanner,
+    ScenarioError, ScenarioReport,
+};
+use crate::sim;
+use crate::telemetry::Metrics;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Seed mixing constant for tip generation (keeps the tip stream
+/// independent of the simulator's thinning stream and the dynamic layer's
+/// fault streams for equal seeds).
+const TIPCUE_SALT: u64 = 0x5EED_71B5_C0E5_A7E1;
+
+/// Tip-and-cue parameters.  Stored as the `tipcue` extension of a
+/// [`Scenario`](crate::config::Scenario); JSON-round-trippable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TipCueSpec {
+    /// Expected tips emitted per frame by the tip workflow (the fractional
+    /// part is drawn as a Bernoulli per frame, so the stream is
+    /// deterministic per seed).
+    pub tip_rate_per_frame: f64,
+    /// Cue completion deadline relative to the tip's emission, seconds —
+    /// also the pass-prediction search horizon.
+    pub cue_deadline_s: f64,
+    /// Multi-tenant slack fraction φ_cue ∈ [0, 0.9] the planner reserves
+    /// on top of the background workload; fills the admission bucket.
+    pub reserve_frac: f64,
+    /// Pass-prediction sweep step, seconds.
+    pub pass_dt_s: f64,
+    /// Elevation mask for the cue sensor over the tip target, degrees.
+    pub min_elevation_deg: f64,
+    /// Admitted cues jump instance queues and bypass thinning (default).
+    pub cue_priority: bool,
+}
+
+impl Default for TipCueSpec {
+    fn default() -> Self {
+        TipCueSpec {
+            tip_rate_per_frame: 0.4,
+            cue_deadline_s: 90.0,
+            reserve_frac: 0.2,
+            pass_dt_s: 1.0,
+            min_elevation_deg: 30.0,
+            cue_priority: true,
+        }
+    }
+}
+
+impl TipCueSpec {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("tip_rate_per_frame", Json::Num(self.tip_rate_per_frame)),
+            ("cue_deadline_s", Json::Num(self.cue_deadline_s)),
+            ("reserve_frac", Json::Num(self.reserve_frac)),
+            ("pass_dt_s", Json::Num(self.pass_dt_s)),
+            ("min_elevation_deg", Json::Num(self.min_elevation_deg)),
+            ("cue_priority", Json::from(self.cue_priority)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Self {
+        let d = TipCueSpec::default();
+        let num = |k: &str, dv: f64| j.get(k).and_then(Json::as_f64).unwrap_or(dv);
+        TipCueSpec {
+            tip_rate_per_frame: num("tip_rate_per_frame", d.tip_rate_per_frame),
+            cue_deadline_s: num("cue_deadline_s", d.cue_deadline_s),
+            reserve_frac: num("reserve_frac", d.reserve_frac),
+            pass_dt_s: num("pass_dt_s", d.pass_dt_s),
+            min_elevation_deg: num("min_elevation_deg", d.min_elevation_deg),
+            cue_priority: j
+                .get("cue_priority")
+                .and_then(Json::as_bool)
+                .unwrap_or(d.cue_priority),
+        }
+    }
+}
+
+/// One geolocated detection emitted by the tip workflow.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tip {
+    pub id: usize,
+    /// Frame whose analysis raised the tip.
+    pub frame: usize,
+    /// Capture time of the tipping tile (leader clock), seconds.
+    pub t_cap_s: f64,
+    /// Emission time — capture plus the detection latency, seconds.  The
+    /// cue deadline counts from here.
+    pub t_s: f64,
+    /// Ground target to re-image (near the capture-time sub-satellite
+    /// track, offset cross/along-swath).
+    pub target: LatLon,
+    /// Tile id that tripped the detector (metadata for traces).
+    pub tile_no: usize,
+}
+
+/// What the cue scheduler decided (and, after simulation, what happened).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CueStatus {
+    /// Admitted and every reachable sink finished before the deadline.
+    Completed,
+    /// Admitted but not finished by the deadline (or not at all).
+    Missed,
+    /// No satellite passes over the target before the deadline.
+    RejectedNoPass,
+    /// The reserve's token bucket was empty at the pass time.
+    RejectedCapacity,
+}
+
+impl CueStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            CueStatus::Completed => "completed",
+            CueStatus::Missed => "missed",
+            CueStatus::RejectedNoPass => "rejected_no_pass",
+            CueStatus::RejectedCapacity => "rejected_capacity",
+        }
+    }
+}
+
+/// Per-tip cue record: scheduling decision plus simulated outcome.
+#[derive(Debug, Clone)]
+pub struct CueRecord {
+    pub tip: Tip,
+    /// Predicted-pass (cue) satellite, for admitted/capacity-rejected cues.
+    pub sat: Option<usize>,
+    /// The predicted pass window.
+    pub pass: Option<PassWindow>,
+    /// When the cue task entered the simulation (the pass AOS).
+    pub injected_t_s: Option<f64>,
+    /// Absolute deadline: tip emission + cue deadline.
+    pub deadline_s: f64,
+    /// When the cue workflow's last reachable sink finished.
+    pub finished_s: Option<f64>,
+    pub status: CueStatus,
+}
+
+impl CueRecord {
+    /// Tip→insight latency, for completed cues.
+    pub fn response_latency_s(&self) -> Option<f64> {
+        match (self.status, self.finished_s) {
+            (CueStatus::Completed, Some(t)) => Some(t - self.tip.t_s),
+            _ => None,
+        }
+    }
+}
+
+/// Generate the deterministic tip stream for a mission: per frame, a
+/// Bernoulli-rounded `tip_rate_per_frame` count of tips, each anchored
+/// near the sub-satellite track at its capture time and emitted after a
+/// detection latency of 0.5–1.5 frame deadlines.
+pub fn generate_tips(
+    spec: &TipCueSpec,
+    c: &Constellation,
+    frames: usize,
+    seed: u64,
+) -> Vec<Tip> {
+    let mut rng = Rng::new(seed ^ TIPCUE_SALT);
+    let df = c.frame_deadline_s;
+    let rate = spec.tip_rate_per_frame.max(0.0);
+    let mut tips = Vec::new();
+    for frame in 0..frames {
+        let mut n = rate.floor() as usize;
+        if rng.chance(rate - rate.floor()) {
+            n += 1;
+        }
+        for _ in 0..n {
+            let t_cap = frame as f64 * df + rng.f64() * df;
+            let track = c.orbit.ground_track(t_cap);
+            let target = LatLon {
+                lat_deg: (track.lat_deg + rng.range(-0.5, 0.5)).clamp(-89.0, 89.0),
+                lon_deg: track.lon_deg + rng.range(-0.5, 0.5),
+            };
+            let t_s = t_cap + rng.range(0.5, 1.5) * df;
+            let tile_no = rng.below(c.tiles_per_frame.max(1));
+            tips.push(Tip { id: tips.len(), frame, t_cap_s: t_cap, t_s, target, tile_no });
+        }
+    }
+    tips
+}
+
+/// First tile index of the largest capture group containing `sat` — the
+/// injected cue tile's id, so the cue rides a pipeline of a group the pass
+/// satellite can actually sense.
+fn group_tile_for_sat(c: &Constellation, sat: usize) -> usize {
+    let mut acc = 0usize;
+    let mut best: Option<(usize, usize)> = None; // (tiles, first tile index)
+    for g in &c.capture_groups {
+        if g.contains(sat) && g.tiles > 0 {
+            match best {
+                Some((tiles, _)) if tiles >= g.tiles => {}
+                _ => best = Some((g.tiles, acc)),
+            }
+        }
+        acc += g.tiles;
+    }
+    best.map(|(_, first)| first).unwrap_or(0)
+}
+
+/// Outcome of one closed-loop tip-and-cue mission.
+#[derive(Debug, Clone)]
+pub struct TipCueReport {
+    pub label: String,
+    /// `"<planner>+<router>"` of the underlying deployment.
+    pub backend: String,
+    /// Background capacity ratio φ net of the reserve (MILP path only).
+    pub phi: Option<f64>,
+    pub reserve_frac: f64,
+    pub tips: Vec<Tip>,
+    pub cues: Vec<CueRecord>,
+    pub admitted: usize,
+    pub rejected_no_pass: usize,
+    pub rejected_capacity: usize,
+    pub completed: usize,
+    pub missed: usize,
+    /// Tip→insight latencies of the completed cues, seconds.
+    pub response_latency_s: Vec<f64>,
+    /// Background + cue completion ratio of the shared simulation.
+    pub completion_ratio: f64,
+    pub frame_latency_s: f64,
+    pub n_pipelines: usize,
+    pub routed_tiles: f64,
+    pub unrouted_tiles: f64,
+    pub routed_isl_bytes_per_frame: f64,
+    pub isl_bytes_per_frame: f64,
+    pub breakdown: (f64, f64, f64),
+    pub plan_ms: f64,
+    pub route_ms: f64,
+    pub sim_ms: f64,
+    pub notes: Vec<String>,
+    pub metrics: Metrics,
+}
+
+impl TipCueReport {
+    pub fn to_json(&self) -> Json {
+        let cues = self
+            .cues
+            .iter()
+            .map(|cue| {
+                obj(vec![
+                    ("tip", Json::from(cue.tip.id)),
+                    ("tip_t_s", Json::Num(cue.tip.t_s)),
+                    ("target_lat", Json::Num(cue.tip.target.lat_deg)),
+                    ("target_lon", Json::Num(cue.tip.target.lon_deg)),
+                    ("sat", cue.sat.map(Json::from).unwrap_or(Json::Null)),
+                    (
+                        "pass_aos_s",
+                        cue.pass.map(|p| Json::Num(p.aos_s)).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "injected_t_s",
+                        cue.injected_t_s.map(Json::Num).unwrap_or(Json::Null),
+                    ),
+                    ("deadline_s", Json::Num(cue.deadline_s)),
+                    (
+                        "finished_s",
+                        cue.finished_s.map(Json::Num).unwrap_or(Json::Null),
+                    ),
+                    ("status", Json::from(cue.status.name())),
+                    (
+                        "response_latency_s",
+                        cue.response_latency_s().map(Json::Num).unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("label", Json::from(self.label.clone())),
+            ("backend", Json::from(self.backend.clone())),
+            ("phi", self.phi.map(Json::Num).unwrap_or(Json::Null)),
+            ("reserve_frac", Json::Num(self.reserve_frac)),
+            ("tips", Json::from(self.tips.len())),
+            ("admitted", Json::from(self.admitted)),
+            ("rejected_no_pass", Json::from(self.rejected_no_pass)),
+            ("rejected_capacity", Json::from(self.rejected_capacity)),
+            ("completed", Json::from(self.completed)),
+            ("missed", Json::from(self.missed)),
+            (
+                "response_latency_mean_s",
+                if self.response_latency_s.is_empty() {
+                    Json::Null
+                } else {
+                    Json::Num(stats::mean(&self.response_latency_s))
+                },
+            ),
+            ("completion_ratio", Json::Num(self.completion_ratio)),
+            ("frame_latency_s", Json::Num(self.frame_latency_s)),
+            ("cues", Json::Arr(cues)),
+            ("metrics", self.metrics.to_json()),
+        ])
+    }
+
+    /// Collapse into the scenario layer's report shape so tip-and-cue
+    /// points ride the same sweep / JSON machinery as static and dynamic
+    /// ones (the tipcue.* counters travel in `metrics`).
+    pub fn into_scenario_report(self) -> ScenarioReport {
+        ScenarioReport {
+            label: self.label,
+            backend: format!("tipcue+{}", self.backend),
+            phi: self.phi,
+            feasible: self.phi.map(|p| p >= 1.0 - 1e-6),
+            n_pipelines: self.n_pipelines,
+            routed_tiles: self.routed_tiles,
+            unrouted_tiles: self.unrouted_tiles,
+            routed_isl_bytes_per_frame: self.routed_isl_bytes_per_frame,
+            completion_ratio: self.completion_ratio,
+            isl_bytes_per_frame: self.isl_bytes_per_frame,
+            frame_latency_s: self.frame_latency_s,
+            breakdown: self.breakdown,
+            plan_ms: self.plan_ms,
+            route_ms: self.route_ms,
+            sim_ms: self.sim_ms,
+            notes: self.notes,
+            metrics: self.metrics,
+        }
+    }
+}
+
+/// The closed-loop orchestrator: plan (with reserve) → route → generate
+/// tips → predict passes → admit cues → simulate with injections.
+pub struct TipCueOrchestrator {
+    scenario: Scenario,
+    spec: TipCueSpec,
+    kind: BackendKind,
+}
+
+impl TipCueOrchestrator {
+    /// Orchestrate a [`Scenario`] (its `tipcue` extension supplies the
+    /// spec; absent, the defaults apply).
+    pub fn new(scenario: &Scenario) -> Self {
+        TipCueOrchestrator {
+            spec: scenario.tipcue.clone().unwrap_or_default(),
+            scenario: scenario.clone(),
+            kind: BackendKind::OrbitChain,
+        }
+    }
+
+    /// Replace the spec.
+    pub fn with_spec(mut self, spec: TipCueSpec) -> Self {
+        self.spec = spec;
+        self
+    }
+
+    /// Select the underlying planner/router combination.  The MILP paths
+    /// plan through [`ReservedMilpPlanner`]; the fixed-deployment baselines
+    /// cannot reserve (their φ_cue only gates admission).
+    pub fn with_backend(mut self, kind: BackendKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    pub fn spec(&self) -> &TipCueSpec {
+        &self.spec
+    }
+
+    /// Run the closed loop; see the module docs.
+    pub fn run(&self) -> Result<TipCueReport, ScenarioError> {
+        let reserve = self.spec.reserve_frac.clamp(0.0, 0.9);
+        let base = Orchestrator::new(&self.scenario);
+        let orch = match self.kind {
+            BackendKind::OrbitChain => base
+                .with_planner(ReservedMilpPlanner { reserve })
+                .with_router(OrbitChainRouter),
+            BackendKind::LoadSpray => base
+                .with_planner(ReservedMilpPlanner { reserve })
+                .with_router(LoadSprayRouter),
+            other => base.with_backend(other),
+        };
+        let prepared = orch.prepare()?;
+        let c = orch.constellation().clone();
+        let df = c.frame_deadline_s;
+        let frames = orch.sim_config().frames;
+
+        // The tip stream: deterministic per (spec, constellation, seed).
+        let tips = generate_tips(&self.spec, &c, frames, self.scenario.seed);
+
+        // Cue scheduling: pass prediction + token-bucket admission.  The
+        // bucket fills at the reserve's tile rate, so by the time a pass
+        // occurs at `t`, at most `rate × t` cues may have been admitted.
+        let budget_rate = reserve / (1.0 - reserve) * c.tiles_per_frame as f64 / df;
+        let mut cues: Vec<CueRecord> = Vec::with_capacity(tips.len());
+        let mut injections: Vec<sim::TileInjection> = Vec::new();
+        let mut inj_of_cue: Vec<Option<usize>> = Vec::with_capacity(tips.len());
+        for tip in &tips {
+            let deadline_s = tip.t_s + self.spec.cue_deadline_s;
+            let target = GroundStation {
+                name: format!("tip-{}", tip.id),
+                location: tip.target,
+                min_elevation_deg: self.spec.min_elevation_deg,
+            };
+            // Earliest acquisition of signal across the chain (each member
+            // flies the leader's orbit delayed by its revisit offset).
+            let best = (0..c.n_sats)
+                .filter_map(|j| {
+                    visibility::next_pass(
+                        &c.orbit.delayed(c.revisit_time_s(j)),
+                        &target,
+                        tip.t_s,
+                        self.spec.cue_deadline_s,
+                        self.spec.pass_dt_s,
+                    )
+                    .map(|p| (j, p))
+                })
+                .min_by(|a, b| a.1.aos_s.total_cmp(&b.1.aos_s));
+            match best {
+                None => {
+                    cues.push(CueRecord {
+                        tip: tip.clone(),
+                        sat: None,
+                        pass: None,
+                        injected_t_s: None,
+                        deadline_s,
+                        finished_s: None,
+                        status: CueStatus::RejectedNoPass,
+                    });
+                    inj_of_cue.push(None);
+                }
+                Some((sat, pass)) => {
+                    let tokens = budget_rate * pass.aos_s;
+                    if (injections.len() + 1) as f64 > tokens + 1e-9 {
+                        cues.push(CueRecord {
+                            tip: tip.clone(),
+                            sat: Some(sat),
+                            pass: Some(pass),
+                            injected_t_s: None,
+                            deadline_s,
+                            finished_s: None,
+                            status: CueStatus::RejectedCapacity,
+                        });
+                        inj_of_cue.push(None);
+                    } else {
+                        inj_of_cue.push(Some(injections.len()));
+                        injections.push(sim::TileInjection {
+                            t_s: pass.aos_s,
+                            tile_no: group_tile_for_sat(&c, sat),
+                            deadline_s,
+                            priority: self.spec.cue_priority,
+                            prefer_sat: Some(sat),
+                        });
+                        cues.push(CueRecord {
+                            tip: tip.clone(),
+                            sat: Some(sat),
+                            pass: Some(pass),
+                            injected_t_s: Some(pass.aos_s),
+                            deadline_s,
+                            finished_s: None,
+                            status: CueStatus::Missed,
+                        });
+                    }
+                }
+            }
+        }
+        let admitted = injections.len();
+
+        // Simulate background + cues on the shared tables.
+        let mut cfg = orch.sim_config().clone();
+        cfg.injections = injections;
+        let orch = orch.with_sim_config(cfg);
+        let t0 = Instant::now();
+        let rep = orch.simulate(&prepared);
+        let sim_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // Match outcomes back onto the cue records.
+        let mut completed = 0usize;
+        let mut missed = 0usize;
+        let mut latencies = Vec::new();
+        for (k, cue) in cues.iter_mut().enumerate() {
+            let Some(ij) = inj_of_cue[k] else { continue };
+            let outcome = &rep.injections[ij];
+            cue.finished_s = outcome.finished_s;
+            if outcome.met_deadline() {
+                cue.status = CueStatus::Completed;
+                completed += 1;
+                if let Some(t) = outcome.finished_s {
+                    latencies.push(t - cue.tip.t_s);
+                }
+            } else {
+                cue.status = CueStatus::Missed;
+                missed += 1;
+            }
+        }
+        let rejected_no_pass = cues
+            .iter()
+            .filter(|cue| cue.status == CueStatus::RejectedNoPass)
+            .count();
+        let rejected_capacity = cues
+            .iter()
+            .filter(|cue| cue.status == CueStatus::RejectedCapacity)
+            .count();
+
+        let mut metrics = rep.metrics;
+        metrics.inc("tipcue.tips", tips.len() as f64);
+        metrics.inc("tipcue.cues_admitted", admitted as f64);
+        metrics.inc(
+            "tipcue.cues_rejected",
+            (rejected_no_pass + rejected_capacity) as f64,
+        );
+        metrics.inc("tipcue.cues_completed", completed as f64);
+        metrics.inc("tipcue.cues_missed", missed as f64);
+        for l in &latencies {
+            metrics.observe("tipcue.response_latency", *l);
+        }
+
+        let routed = prepared.routed_tiles();
+        let (unrouted, routed_isl) = match &prepared.routing {
+            Some(r) => (r.unrouted_tiles, r.isl_bytes_per_frame),
+            None => ((c.tiles_per_frame as f64 - routed).max(0.0), 0.0),
+        };
+        let mut notes = prepared.notes.clone();
+        if self.scenario.dynamic.is_some() {
+            notes.push(
+                "scenario.dynamic is ignored by the tip-and-cue closed loop \
+                 (combining the epoch and closed loops is a ROADMAP item)"
+                    .to_string(),
+            );
+        }
+        Ok(TipCueReport {
+            label: self.scenario.name.clone(),
+            backend: prepared.backend.clone(),
+            phi: prepared.plan.as_ref().map(|p| p.phi),
+            reserve_frac: reserve,
+            tips,
+            cues,
+            admitted,
+            rejected_no_pass,
+            rejected_capacity,
+            completed,
+            missed,
+            response_latency_s: latencies,
+            completion_ratio: rep.completion_ratio,
+            frame_latency_s: rep.frame_latency_s,
+            n_pipelines: prepared.pipelines.len(),
+            routed_tiles: routed,
+            unrouted_tiles: unrouted,
+            routed_isl_bytes_per_frame: routed_isl,
+            isl_bytes_per_frame: rep.isl_bytes_per_frame,
+            breakdown: rep.breakdown,
+            plan_ms: prepared.plan_ms,
+            route_ms: prepared.route_ms,
+            sim_ms,
+            notes,
+            metrics,
+        })
+    }
+
+    /// [`Self::run`] collapsed to the scenario layer's report shape.
+    pub fn run_scenario_report(&self) -> Result<ScenarioReport, ScenarioError> {
+        self.run().map(TipCueReport::into_scenario_report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_json_round_trip() {
+        let spec = TipCueSpec {
+            tip_rate_per_frame: 1.25,
+            cue_deadline_s: 40.0,
+            reserve_frac: 0.35,
+            pass_dt_s: 0.5,
+            min_elevation_deg: 25.0,
+            cue_priority: false,
+        };
+        assert_eq!(TipCueSpec::from_json(&spec.to_json()), spec);
+        // Missing fields fall back to the defaults.
+        let d = TipCueSpec::from_json(&Json::parse("{}").unwrap());
+        assert_eq!(d, TipCueSpec::default());
+    }
+
+    #[test]
+    fn tip_stream_deterministic_and_near_track() {
+        let c = Constellation::jetson();
+        let spec = TipCueSpec { tip_rate_per_frame: 1.5, ..Default::default() };
+        let a = generate_tips(&spec, &c, 20, 7);
+        let b = generate_tips(&spec, &c, 20, 7);
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "1.5 tips/frame over 20 frames");
+        // Rate 1.5 gives between 20 and 40 tips over 20 frames.
+        assert!((20..=40).contains(&a.len()), "n={}", a.len());
+        for tip in &a {
+            assert!(tip.t_s > tip.t_cap_s, "emission after capture");
+            let track = c.orbit.ground_track(tip.t_cap_s);
+            assert!((tip.target.lat_deg - track.lat_deg).abs() <= 0.5 + 1e-9);
+            assert!(tip.tile_no < c.tiles_per_frame);
+        }
+        let other = generate_tips(&spec, &c, 20, 8);
+        assert_ne!(a, other, "different seeds give different tip streams");
+    }
+
+    #[test]
+    fn zero_rate_means_no_tips() {
+        let c = Constellation::jetson();
+        let spec = TipCueSpec { tip_rate_per_frame: 0.0, ..Default::default() };
+        assert!(generate_tips(&spec, &c, 50, 7).is_empty());
+    }
+
+    #[test]
+    fn group_tile_targets_a_group_containing_the_sat() {
+        let c = Constellation::jetson();
+        for sat in 0..c.n_sats {
+            let tile = group_tile_for_sat(&c, sat);
+            assert!(c.can_capture(sat, tile), "sat {sat} tile {tile}");
+        }
+        // Jetson: the 75-tile shared group starts at tile 25.
+        assert_eq!(group_tile_for_sat(&c, 2), 25);
+    }
+
+    #[test]
+    fn zero_reserve_rejects_every_cue_on_capacity() {
+        let spec = TipCueSpec {
+            tip_rate_per_frame: 1.0,
+            reserve_frac: 0.0,
+            ..Default::default()
+        };
+        let s = Scenario::jetson().with_frames(4).with_tipcue(spec);
+        let rep = TipCueOrchestrator::new(&s).run().expect("runs");
+        assert_eq!(rep.admitted, 0);
+        assert!(rep.tips.len() >= rep.rejected_capacity);
+        assert_eq!(rep.completed, 0);
+        assert_eq!(rep.metrics.counter("tipcue.cues_admitted"), 0.0);
+        // Every tip with a predicted pass was rejected for capacity.
+        assert_eq!(
+            rep.metrics.counter("tipcue.cues_rejected"),
+            rep.tips.len() as f64
+        );
+    }
+
+    #[test]
+    fn closed_loop_admits_and_completes_with_reserve() {
+        let spec = TipCueSpec {
+            tip_rate_per_frame: 1.0,
+            reserve_frac: 0.25,
+            ..Default::default()
+        };
+        let s = Scenario::jetson().with_seed(7).with_tipcue(spec);
+        let rep = TipCueOrchestrator::new(&s).run().expect("runs");
+        assert!(!rep.tips.is_empty());
+        assert!(rep.admitted >= 1, "{:?}", rep.metrics.to_json().to_string_compact());
+        assert!(rep.completed >= 1, "admitted {} completed {}", rep.admitted, rep.completed);
+        assert_eq!(rep.response_latency_s.len(), rep.completed);
+        for l in &rep.response_latency_s {
+            // Latency counts from the tip, so it is bounded by the relative
+            // cue deadline.
+            assert!(*l > 0.0 && *l <= 90.0 + 1e-9, "latency {l}");
+        }
+        // Completed cues really finished before their deadlines on a
+        // predicted-pass satellite.
+        for cue in rep.cues.iter().filter(|c| c.status == CueStatus::Completed) {
+            assert!(cue.sat.is_some());
+            assert!(cue.finished_s.unwrap() <= cue.deadline_s + 1e-9);
+            assert!(cue.injected_t_s.unwrap() >= cue.tip.t_s);
+        }
+    }
+
+    #[test]
+    fn mission_is_deterministic() {
+        let s = Scenario::jetson()
+            .with_frames(5)
+            .with_tipcue(TipCueSpec { tip_rate_per_frame: 0.8, ..Default::default() });
+        let a = TipCueOrchestrator::new(&s).run().expect("run a");
+        let b = TipCueOrchestrator::new(&s).run().expect("run b");
+        assert_eq!(a.admitted, b.admitted);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.response_latency_s, b.response_latency_s);
+        assert_eq!(
+            a.metrics.to_json().to_string_compact(),
+            b.metrics.to_json().to_string_compact()
+        );
+    }
+}

@@ -419,6 +419,52 @@ mod tests {
         });
     }
 
+    /// Property: every generated random DAG is well-formed — it validates,
+    /// its topological order covers every function exactly once with edges
+    /// pointing forward, and Algorithm 2 yields finite non-negative
+    /// workload factors — across sizes, densities and seeds.
+    #[test]
+    fn prop_random_dag_always_well_formed() {
+        property("random_dag well-formed", 80, |rng| {
+            let n = 1 + rng.below(9);
+            let edge_prob = rng.f64();
+            let wf = random_dag(n, edge_prob, rng);
+            assert_eq!(wf.len(), n);
+            wf.validate().map_err(|e| format!("validate: {e}"))?;
+            let order = wf.topo_order().map_err(|e| format!("topo: {e}"))?;
+            if order.len() != n {
+                return Err(format!("topo order covers {} of {n}", order.len()));
+            }
+            let mut seen = vec![false; n];
+            for &u in &order {
+                if seen[u] {
+                    return Err(format!("duplicate {u} in topo order"));
+                }
+                seen[u] = true;
+            }
+            // Every edge goes from earlier to later in the order.
+            let mut pos = vec![0usize; n];
+            for (k, &u) in order.iter().enumerate() {
+                pos[u] = k;
+            }
+            for (u, v, d) in wf.edge_list() {
+                if pos[u] >= pos[v] {
+                    return Err(format!("edge {u}->{v} against topo order"));
+                }
+                if !(d.is_finite() && d >= 0.0) {
+                    return Err(format!("edge {u}->{v} ratio {d}"));
+                }
+            }
+            let rho = wf.workload_factors().map_err(|e| format!("rho: {e}"))?;
+            for (i, r) in rho.iter().enumerate() {
+                if !(r.is_finite() && *r >= 0.0) {
+                    return Err(format!("rho[{i}] = {r}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
     /// Property: scaling one edge's δ scales downstream-only factors
     /// monotonically (no upstream effect).
     #[test]

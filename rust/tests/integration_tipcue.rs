@@ -1,0 +1,130 @@
+//! Integration: the tip-and-cue subsystem end to end — the CLI acceptance
+//! scenario (`tipcue --seed 7`: a deterministic closed loop where a tip is
+//! converted into an admitted cue that completes before its deadline on a
+//! predicted-pass satellite, with `tipcue.response_latency` reported), the
+//! reserve-fraction admission/background tradeoff, and the parallel sweep
+//! over φ_cue staying bit-identical to sequential.
+
+use orbitchain::config::Scenario;
+use orbitchain::scenario::{SweepGrid, SweepRunner};
+use orbitchain::tipcue::{CueStatus, TipCueOrchestrator, TipCueSpec};
+
+#[test]
+fn acceptance_seed7_closed_loop_trace() {
+    // `orbitchain tipcue --seed 7` — the Jetson scenario at spec defaults.
+    let s = Scenario::jetson().with_seed(7).with_tipcue(TipCueSpec::default());
+    let rep = TipCueOrchestrator::new(&s).run().expect("closed loop runs");
+
+    // Deterministic tip stream: seed 7 emits tips at the default rate.
+    assert!(!rep.tips.is_empty(), "seed-7 trace must emit tips");
+    // At least one tip became an admitted cue...
+    assert!(rep.admitted >= 1, "cues: {:?}", rep.cues);
+    // ...that completed before its deadline on a predicted-pass satellite.
+    let done: Vec<_> = rep
+        .cues
+        .iter()
+        .filter(|c| c.status == CueStatus::Completed)
+        .collect();
+    assert!(!done.is_empty(), "cues: {:?}", rep.cues);
+    for cue in &done {
+        let sat = cue.sat.expect("completed cue has a pass satellite");
+        assert!(sat < 3);
+        let pass = cue.pass.expect("completed cue has a pass window");
+        assert!(pass.aos_s >= cue.tip.t_s, "pass precedes the tip: {cue:?}");
+        let finished = cue.finished_s.expect("completed cue finished");
+        assert!(finished <= cue.deadline_s + 1e-9, "{cue:?}");
+    }
+    // The headline metric is reported: one latency sample per completion.
+    assert_eq!(rep.response_latency_s.len(), rep.completed);
+    assert!(rep.completed >= 1);
+    let samples = rep.metrics.samples("tipcue.response_latency");
+    assert_eq!(samples.len(), rep.completed);
+    assert!(samples.iter().all(|&l| l > 0.0));
+    assert_eq!(rep.metrics.counter("tipcue.tips"), rep.tips.len() as f64);
+    assert_eq!(rep.metrics.counter("tipcue.cues_admitted"), rep.admitted as f64);
+    assert_eq!(rep.metrics.counter("tipcue.cues_completed"), rep.completed as f64);
+
+    // The trace is pinned: a second run reproduces it bit for bit.
+    let again = TipCueOrchestrator::new(&s).run().expect("replay runs");
+    assert_eq!(again.admitted, rep.admitted);
+    assert_eq!(again.completed, rep.completed);
+    assert_eq!(again.response_latency_s, rep.response_latency_s);
+    assert_eq!(
+        again.metrics.to_json().to_string_compact(),
+        rep.metrics.to_json().to_string_compact()
+    );
+}
+
+#[test]
+fn reserve_fraction_gates_admission() {
+    // The multi-tenant tradeoff on one tip stream: no reserve, no cues;
+    // with a reserve, the same tips are admitted.
+    let base = Scenario::jetson().with_seed(7).with_frames(6);
+    let mk = |reserve: f64| {
+        TipCueOrchestrator::new(&base.clone().with_tipcue(TipCueSpec {
+            tip_rate_per_frame: 1.0,
+            reserve_frac: reserve,
+            ..Default::default()
+        }))
+        .run()
+        .expect("closed loop runs")
+    };
+    let none = mk(0.0);
+    let some = mk(0.3);
+    assert_eq!(none.tips, some.tips, "identical tip stream");
+    assert_eq!(none.admitted, 0);
+    assert_eq!(none.rejected_capacity + none.rejected_no_pass, none.tips.len());
+    assert!(some.admitted > none.admitted, "{} vs {}", some.admitted, none.admitted);
+    // The reserve costs background capacity: φ shrinks as φ_cue grows.
+    let (phi_none, phi_some) = (none.phi.unwrap(), some.phi.unwrap());
+    assert!(phi_some < phi_none, "phi {phi_some} vs {phi_none}");
+}
+
+#[test]
+fn reserve_sweep_parallel_bit_identical_to_sequential() {
+    let base = Scenario::jetson().with_seed(7).with_frames(4);
+    let points = SweepGrid::new(base)
+        .reserve_fracs(&[0.0, 0.2, 0.4])
+        .points();
+    assert_eq!(points.len(), 3);
+    assert!(points.iter().all(|p| p.scenario.tipcue.is_some()));
+
+    let sequential = SweepRunner::new().with_threads(1).run(&points);
+    let parallel = SweepRunner::new().with_threads(3).run(&points);
+    assert_eq!(sequential.reports.len(), parallel.reports.len());
+    for (s, p) in sequential.reports.iter().zip(&parallel.reports) {
+        match (s, p) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(a.completion_ratio, b.completion_ratio);
+                assert_eq!(a.phi, b.phi);
+                assert_eq!(a.frame_latency_s, b.frame_latency_s);
+                assert_eq!(
+                    a.metrics.to_json().to_string_compact(),
+                    b.metrics.to_json().to_string_compact()
+                );
+            }
+            (Err(a), Err(b)) => assert_eq!(a, b),
+            (a, b) => panic!("outcome mismatch: {a:?} vs {b:?}"),
+        }
+    }
+
+    // The tradeoff is visible in the sweep itself: admissions grow with
+    // the reserve while the background capacity ratio φ shrinks.
+    let admitted: Vec<f64> = sequential
+        .reports
+        .iter()
+        .map(|r| r.as_ref().unwrap().metrics.counter("tipcue.cues_admitted"))
+        .collect();
+    assert_eq!(admitted[0], 0.0);
+    assert!(admitted[2] >= admitted[1], "{admitted:?}");
+    assert!(admitted[2] > 0.0, "{admitted:?}");
+    let phis: Vec<f64> = sequential
+        .reports
+        .iter()
+        .map(|r| r.as_ref().unwrap().phi.unwrap())
+        .collect();
+    assert!(phis[2] < phis[0], "{phis:?}");
+    // Tip-and-cue points identify themselves in the report shape.
+    let backend = &sequential.reports[0].as_ref().unwrap().backend;
+    assert!(backend.starts_with("tipcue+"), "{backend}");
+}
