@@ -2,9 +2,10 @@
 //! sequentially (1 thread) and fanned across all cores, reporting
 //! points/second and the per-core scaling factor.  Demonstrates >1
 //! scenario-per-core throughput on a multi-point grid while the outputs
-//! stay bit-identical.  Also micro-benches the `Metrics::inc` hot path
-//! (every simulator event increments a counter) against the old
-//! allocate-a-`String`-per-call `entry()` spelling.
+//! stay bit-identical.  Also micro-benches the `Metrics` hot path (every
+//! simulator event increments a counter) across its three generations:
+//! interned `MetricId` (current), name-based lookup-first, and the
+//! original allocate-a-`String`-per-call `entry()` spelling.
 //! Run: `cargo bench --bench sweep_runner`.
 
 use std::time::Instant;
@@ -13,39 +14,51 @@ use orbitchain::config::Scenario;
 use orbitchain::scenario::{BackendKind, SweepGrid, SweepRunner};
 use orbitchain::telemetry::Metrics;
 
-/// `Metrics::inc` vs the historical `entry(name.to_string())` spelling,
-/// on an existing counter (the hot case: every sim event after the first).
+/// Interned `Metrics::inc_id` vs name-based `inc` vs the historical
+/// `entry(name.to_string())` spelling, on an existing counter (the hot
+/// case: every sim event after the first).
 fn bench_metrics_hot_path() {
     const N: usize = 2_000_000;
     const KEY: &str = "func.cloud.received";
 
-    let mut fast = Metrics::new();
-    fast.inc(KEY, 0.0);
+    let mut interned = Metrics::new();
+    let id = interned.id(KEY);
     let t0 = Instant::now();
     for _ in 0..N {
-        fast.inc(KEY, 1.0);
+        interned.inc_id(id, 1.0);
     }
-    let t_fast = t0.elapsed().as_secs_f64();
+    let t_id = t0.elapsed().as_secs_f64();
 
-    // The pre-optimization implementation, reproduced verbatim: entry()
-    // demands an owned key, so every call allocates.
+    let mut named = Metrics::new();
+    named.inc(KEY, 0.0);
+    let t1 = Instant::now();
+    for _ in 0..N {
+        named.inc(KEY, 1.0);
+    }
+    let t_name = t1.elapsed().as_secs_f64();
+
+    // The original implementation, reproduced verbatim: entry() demands an
+    // owned key, so every call allocates.
     let mut naive: std::collections::BTreeMap<String, f64> =
         std::collections::BTreeMap::new();
     naive.insert(KEY.to_string(), 0.0);
-    let t1 = Instant::now();
+    let t2 = Instant::now();
     for _ in 0..N {
         *naive.entry(KEY.to_string()).or_insert(0.0) += 1.0;
     }
-    let t_naive = t1.elapsed().as_secs_f64();
+    let t_naive = t2.elapsed().as_secs_f64();
 
-    assert_eq!(fast.counter(KEY), N as f64);
+    assert_eq!(interned.counter(KEY), N as f64);
+    assert_eq!(named.counter(KEY), N as f64);
     assert_eq!(naive[KEY], N as f64);
     println!(
-        "metrics hot path ({N} incs): lookup-first {:.1} ms vs entry(to_string) \
-         {:.1} ms ({:.2}x)",
-        t_fast * 1e3,
+        "metrics hot path ({N} incs): inc_id {:.1} ms vs inc(name) {:.1} ms vs \
+         entry(to_string) {:.1} ms ({:.2}x / {:.2}x over naive)",
+        t_id * 1e3,
+        t_name * 1e3,
         t_naive * 1e3,
-        t_naive / t_fast.max(1e-9)
+        t_naive / t_id.max(1e-9),
+        t_naive / t_name.max(1e-9)
     );
 }
 

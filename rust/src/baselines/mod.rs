@@ -320,14 +320,8 @@ mod tests {
             if !dep.instantiated {
                 continue;
             }
-            let sim = Simulator::new(
-                &wf,
-                &db,
-                &c,
-                dep.instances,
-                &dep.pipelines,
-                SimConfig { frames: 4, ..Default::default() },
-            );
+            let cfg = SimConfig { frames: 4, ..Default::default() };
+            let sim = Simulator::new(&wf, &db, &c, &dep.instances, &dep.pipelines, &cfg);
             let rep = sim.run();
             assert!(rep.completion_ratio > 0.0);
             assert!(rep.completion_ratio <= 1.0 + 1e-9);
@@ -345,7 +339,7 @@ mod tests {
 
         let dp = data_parallelism(&wf, &db, &c);
         let dp_completion = if dp.instantiated {
-            Simulator::new(&wf, &db, &c, dp.instances, &dp.pipelines, cfg.clone())
+            Simulator::new(&wf, &db, &c, &dp.instances, &dp.pipelines, &cfg)
                 .run()
                 .completion_ratio
         } else {
@@ -353,7 +347,7 @@ mod tests {
         };
         let cp = compute_parallelism(&wf, &db, &c);
         let cp_completion = if cp.instantiated {
-            Simulator::new(&wf, &db, &c, cp.instances, &cp.pipelines, cfg)
+            Simulator::new(&wf, &db, &c, &cp.instances, &cp.pipelines, &cfg)
                 .run()
                 .completion_ratio
         } else {

@@ -6,12 +6,32 @@
 //! triple.  The CLI accepts scenario files; presets mirror the paper's two
 //! testbeds.
 
+use std::sync::Arc;
+
 use crate::constellation::Constellation;
 use crate::dynamic::DynamicSpec;
 use crate::profile::{Device, ProfileDb};
 use crate::tipcue::TipCueSpec;
 use crate::util::json::{obj, Json};
 use crate::workflow::{self, Workflow};
+
+/// Everything [`Scenario::build`] reads, as a hashable key: two scenarios
+/// with equal keys build identical `(Workflow, ProfileDb, Constellation)`
+/// triples, so sweep points differing only in simulation parameters
+/// (frames, seed, ISL rate, backend, extensions) can share one
+/// [`Scenario::build_shared`] result instead of rebuilding per point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BuildKey {
+    device: Device,
+    n_sats: usize,
+    /// `f64::to_bits` of the frame deadline (exact-identity semantics).
+    frame_deadline_bits: u64,
+    tiles_per_frame: usize,
+    workflow_size: usize,
+    /// `f64::to_bits` of δ.
+    delta_bits: u64,
+    orbit_shift: bool,
+}
 
 /// A fully-specified experiment scenario.
 #[derive(Debug, Clone, PartialEq)]
@@ -175,6 +195,26 @@ impl Scenario {
         (wf, db, c)
     }
 
+    /// [`Self::build`] with the triple behind `Arc`s, ready to share
+    /// across orchestrators and sweep workers without cloning.
+    pub fn build_shared(&self) -> (Arc<Workflow>, Arc<ProfileDb>, Arc<Constellation>) {
+        let (wf, db, c) = self.build();
+        (Arc::new(wf), Arc::new(db), Arc::new(c))
+    }
+
+    /// The build-input identity of this scenario (see [`BuildKey`]).
+    pub fn build_key(&self) -> BuildKey {
+        BuildKey {
+            device: self.device,
+            n_sats: self.n_sats,
+            frame_deadline_bits: self.frame_deadline_s.to_bits(),
+            tiles_per_frame: self.tiles_per_frame,
+            workflow_size: self.workflow_size,
+            delta_bits: self.delta.to_bits(),
+            orbit_shift: self.orbit_shift,
+        }
+    }
+
     pub fn sim_config(&self) -> crate::sim::SimConfig {
         crate::sim::SimConfig {
             frames: self.frames,
@@ -325,6 +365,19 @@ mod tests {
     fn unknown_device_rejected() {
         let j = Json::parse(r#"{"device": "tpu"}"#).unwrap();
         assert!(Scenario::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn build_key_identifies_shared_builds() {
+        let a = Scenario::jetson().with_frames(3).with_seed(1);
+        let b = Scenario::jetson().with_frames(9).with_seed(2).with_isl_rate(5e3);
+        assert_eq!(a.build_key(), b.build_key(), "sim-only params share a build");
+        assert_ne!(a.build_key(), Scenario::jetson().with_workflow_size(2).build_key());
+        assert_ne!(a.build_key(), Scenario::rpi().build_key());
+        let (wf, db, c) = a.build_shared();
+        assert_eq!(wf.len(), 4);
+        assert_eq!(db.len(), 4);
+        c.validate().unwrap();
     }
 
     #[test]

@@ -436,6 +436,9 @@ impl EpochOrchestrator {
         let mut current: Option<PlanState> = None;
 
         let mut merged = Metrics::new();
+        // Interned ids for everything this loop records per epoch (the
+        // one-shot mission totals below reuse them; names resolve once).
+        let m_epoch_completion = merged.id("dynamic.epoch_completion");
         let mut epoch_reports = Vec::with_capacity(self.spec.epochs);
         let mut notes: Vec<String> = Vec::new();
         let mut backlog = 0usize;
@@ -599,9 +602,9 @@ impl EpochOrchestrator {
                 &self.wf,
                 &self.db,
                 &epoch_c,
-                instances,
+                &instances,
                 &state.pipelines,
-                cfg,
+                &cfg,
             )
             .run();
             sim_ms += t_sim.elapsed().as_secs_f64() * 1e3;
@@ -612,7 +615,7 @@ impl EpochOrchestrator {
             }
             cues_missed += rep.injections.iter().filter(|o| !o.met_deadline()).count();
             merged.merge(&rep.metrics);
-            merged.observe("dynamic.epoch_completion", rep.completion_ratio);
+            merged.observe_id(m_epoch_completion, rep.completion_ratio);
             backlog = if epoch_c.tiles_per_frame == 0 {
                 backlog
             } else {

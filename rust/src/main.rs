@@ -5,7 +5,8 @@
 //! orbitchain route      [same flags]            # Algorithm 1 + traffic summary
 //! orbitchain simulate   [same flags] [--frames N] [--isl-bps R] [--backend B] [--json]
 //! orbitchain sweep      [same flags] [--deadlines A,B,..] [--workflows 2,3,4]
-//!                       [--sats-list 3,5,8] [--frames-list 5,10] [--isl-list R1,R2]
+//!                       [--sats-list 3,5,8 | --sats 3,5,8] [--frames-list 5,10]
+//!                       [--isl-list R1,R2]
 //!                       [--mtbf-list 300,600] [--outage-list 60,120] [--epoch-frames-list 2,4]
 //!                       [--tip-rate-list 0.2,0.5] [--cue-deadline-list 60,90]
 //!                       [--reserve-list 0.0,0.2,0.4]
@@ -269,6 +270,7 @@ fn print_help() {
          common flags:  --device jetson|rpi --workflow N --deadline S --sats N\n\
          \x20             --delta D --frames N --seed N --isl-bps R --json\n\
          sweep flags:   --deadlines A,B,.. --workflows 2,3,4 --sats-list 3,5,8\n\
+         \x20             (--sats 3,5,8 works too)\n\
          \x20             --frames-list 5,10 --isl-list R1,R2 --mtbf-list 300,600\n\
          \x20             --outage-list 60,120 --epoch-frames-list 2,4\n\
          \x20             --tip-rate-list 0.2,0.5 --cue-deadline-list 60,90\n\
@@ -431,6 +433,16 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             })
             .collect()
     }
+
+    // `--sats` doubles as a sweep dimension: a comma list
+    // (`sweep --sats 10,25,50`) means the same as `--sats-list` (which
+    // wins when both are given).
+    let mut flags = flags.clone();
+    if matches!(flags.get("sats"), Some(v) if v.contains(',')) {
+        let list = flags.remove("sats").expect("checked above");
+        flags.entry("sats-list".to_string()).or_insert(list);
+    }
+    let flags = &flags;
 
     let s = scenario_from_flags(flags)?;
     let mut grid = SweepGrid::new(s);

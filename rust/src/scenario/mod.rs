@@ -25,6 +25,7 @@
 pub mod backend;
 pub mod sweep;
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::Scenario;
@@ -186,11 +187,17 @@ impl ScenarioReport {
 }
 
 /// The end-to-end scenario pipeline: build → plan → route → simulate.
+///
+/// The `(workflow, profiles, constellation)` triple is held behind `Arc`s:
+/// orchestrators built from a scenario own the only reference, while sweep
+/// workers ([`SweepRunner`]) share one pre-built triple across every grid
+/// point with the same build inputs — nothing is cloned per point or per
+/// run.
 pub struct Orchestrator {
     label: String,
-    wf: Workflow,
-    db: ProfileDb,
-    c: Constellation,
+    wf: Arc<Workflow>,
+    db: Arc<ProfileDb>,
+    c: Arc<Constellation>,
     cfg: SimConfig,
     planner: Box<dyn PlannerBackend>,
     router: Box<dyn RouterBackend>,
@@ -201,22 +208,44 @@ impl Orchestrator {
     /// Orchestrate a [`config::Scenario`](crate::config::Scenario) with the
     /// default OrbitChain backend (MILP planner + Algorithm 1 router).
     pub fn new(scenario: &Scenario) -> Self {
-        let (wf, db, c) = scenario.build();
-        let cfg = scenario.sim_config();
-        Self::from_built(scenario.name.clone(), wf, db, c, cfg)
+        let (wf, db, c) = scenario.build_shared();
+        Self::from_built(scenario.name.clone(), wf, db, c, scenario.sim_config())
+    }
+
+    /// Orchestrate a scenario over a pre-built shared triple — the sweep
+    /// fast path: grid points that differ only in simulation parameters
+    /// (frames, seed, ISL rate, backend) share one
+    /// [`Scenario::build_shared`] result, keyed by
+    /// [`Scenario::build_key`], instead of rebuilding the workflow,
+    /// profile database and constellation per point.  The caller is
+    /// responsible for the key equality; a mismatched triple silently
+    /// simulates the wrong system.
+    pub fn from_scenario_shared(
+        scenario: &Scenario,
+        wf: Arc<Workflow>,
+        db: Arc<ProfileDb>,
+        c: Arc<Constellation>,
+    ) -> Self {
+        Self::from_built(scenario.name.clone(), wf, db, c, scenario.sim_config())
     }
 
     /// Orchestrate hand-built inputs (bespoke workflows, synthetic
     /// profiles, Fig. 20-style instances).
     pub fn from_parts(wf: Workflow, db: ProfileDb, c: Constellation, cfg: SimConfig) -> Self {
-        Self::from_built("custom".to_string(), wf, db, c, cfg)
+        Self::from_built(
+            "custom".to_string(),
+            Arc::new(wf),
+            Arc::new(db),
+            Arc::new(c),
+            cfg,
+        )
     }
 
     fn from_built(
         label: String,
-        wf: Workflow,
-        db: ProfileDb,
-        c: Constellation,
+        wf: Arc<Workflow>,
+        db: Arc<ProfileDb>,
+        c: Arc<Constellation>,
         cfg: SimConfig,
     ) -> Self {
         Orchestrator {
@@ -282,7 +311,7 @@ impl Orchestrator {
     }
 
     fn ctx(&self) -> Ctx<'_> {
-        Ctx { wf: &self.wf, db: &self.db, c: &self.c, banned: &[] }
+        Ctx { wf: &*self.wf, db: &*self.db, c: &*self.c, banned: &[] }
     }
 
     /// Run the configured planner backend.
@@ -387,15 +416,17 @@ impl Orchestrator {
     }
 
     /// Discrete-event simulation of a prepared deployment (reusable: the
-    /// sim-engine bench calls this in a loop over one `Prepared`).
+    /// sim-engine bench calls this in a loop over one `Prepared`, and the
+    /// simulator borrows everything — instances, pipelines, config — so
+    /// repeat runs allocate nothing up front).
     pub fn simulate(&self, prepared: &Prepared) -> SimReport {
         Simulator::new(
             &self.wf,
             &self.db,
             &self.c,
-            prepared.instances.clone(),
+            &prepared.instances,
             &prepared.pipelines,
-            self.cfg.clone(),
+            &self.cfg,
         )
         .run()
     }
@@ -417,8 +448,18 @@ impl Orchestrator {
         router: &dyn RouterBackend,
     ) -> Result<ScenarioReport, ScenarioError> {
         let prepared = self.prepare_with(planner, router)?;
+        Ok(self.report_for(&prepared))
+    }
+
+    /// The simulate + aggregate half of [`Self::run_with`], over an
+    /// already-prepared deployment.  [`SweepRunner`] shares one
+    /// [`Prepared`] across every grid point with the same build inputs and
+    /// backend, so the MILP solve and routing run once per distinct
+    /// deployment instead of once per point; `plan_ms`/`route_ms` then
+    /// report the shared solve's cost.
+    pub fn report_for(&self, prepared: &Prepared) -> ScenarioReport {
         let t0 = Instant::now();
-        let rep = self.simulate(&prepared);
+        let rep = self.simulate(prepared);
         let sim_ms = t0.elapsed().as_secs_f64() * 1e3;
 
         let routed = prepared.routed_tiles();
@@ -426,7 +467,7 @@ impl Orchestrator {
             Some(r) => (r.unrouted_tiles, r.isl_bytes_per_frame),
             None => ((self.c.tiles_per_frame as f64 - routed).max(0.0), 0.0),
         };
-        Ok(ScenarioReport {
+        ScenarioReport {
             label: self.label.clone(),
             backend: prepared.backend.clone(),
             phi: prepared.plan.as_ref().map(|p| p.phi),
@@ -442,9 +483,9 @@ impl Orchestrator {
             plan_ms: prepared.plan_ms,
             route_ms: prepared.route_ms,
             sim_ms,
-            notes: prepared.notes,
+            notes: prepared.notes.clone(),
             metrics: rep.metrics,
-        })
+        }
     }
 }
 
@@ -465,17 +506,20 @@ mod tests {
         let plan = planner::plan(&wf, &db, &c).expect("plan");
         let routing = routing::route(&wf, &db, &c, &plan).expect("route");
         let instances = sim::instances_from_plan(&plan, &c);
-        let manual = Simulator::new(
-            &wf,
-            &db,
-            &c,
-            instances,
-            &routing.pipelines,
-            scenario.sim_config(),
-        )
-        .run();
+        let cfg = scenario.sim_config();
+        let manual =
+            Simulator::new(&wf, &db, &c, &instances, &routing.pipelines, &cfg).run();
 
         let rep = Orchestrator::new(&scenario).run().expect("orchestrated run");
+        // ...and the shared-build construction path must agree bit for bit
+        // with the per-orchestrator build (the sweep cache's contract).
+        let (swf, sdb, sc) = scenario.build_shared();
+        let shared = Orchestrator::from_scenario_shared(&scenario, swf, sdb, sc)
+            .run()
+            .expect("shared-build run");
+        assert_eq!(shared.completion_ratio, rep.completion_ratio);
+        assert_eq!(shared.frame_latency_s, rep.frame_latency_s);
+        assert_eq!(shared.phi, rep.phi);
         assert_eq!(rep.completion_ratio, manual.completion_ratio);
         assert_eq!(rep.isl_bytes_per_frame, manual.isl_bytes_per_frame);
         assert_eq!(rep.frame_latency_s, manual.frame_latency_s);

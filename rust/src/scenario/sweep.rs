@@ -9,21 +9,26 @@
 //! dynamic extension run the epoch-orchestration loop.
 //!
 //! **Determinism**: every point's seed is fixed at grid-construction time
-//! (optionally derived per point from the base seed), each point's
-//! orchestration touches no shared mutable state, and results land in
-//! pre-indexed slots — so a parallel sweep is bit-identical to a
-//! sequential one, regardless of worker count or scheduling.
+//! (optionally derived per point from the base seed), the only state
+//! points share — the pre-built scenario triples and the per-(build,
+//! backend) [`Prepared`] deployments — is a deterministic pure function of
+//! the grid, and results land in pre-indexed slots — so a parallel sweep
+//! is bit-identical to a sequential one, regardless of worker count or
+//! scheduling.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
-use crate::config::Scenario;
-use crate::profile::Device;
+use crate::config::{BuildKey, Scenario};
+use crate::constellation::Constellation;
+use crate::profile::{Device, ProfileDb};
 use crate::telemetry::Metrics;
 use crate::util::rng::Rng;
+use crate::workflow::Workflow;
 
 use super::backend::BackendKind;
-use super::{Orchestrator, ScenarioError, ScenarioReport};
+use super::{Orchestrator, Prepared, ScenarioError, ScenarioReport};
 
 /// One grid point: a fully specified scenario plus the backend to run it.
 #[derive(Debug, Clone)]
@@ -397,7 +402,40 @@ impl SweepRunner {
     /// Run every point, returning reports in grid order.  Work-stealing via
     /// a shared atomic cursor; each point writes only its own slot, so the
     /// outcome is independent of scheduling.
+    ///
+    /// Static points share two levels of pre-computed state:
+    ///
+    /// 1. **Builds** — the `(workflow, profiles, constellation)` triple is
+    ///    built once per distinct [`Scenario::build_key`] and handed to
+    ///    workers behind `Arc`s (no per-point rebuild, no per-run clone).
+    /// 2. **Deployments** — the plan + route output ([`Prepared`]) is a
+    ///    pure function of (build key, backend), so the MILP solve and
+    ///    routing run once per distinct deployment; points differing only
+    ///    in simulation parameters (frames, seed, ISL rate) reuse it.  The
+    ///    first worker to need a deployment computes it under that entry's
+    ///    lock; the rest wait and share the `Arc`.
+    ///
+    /// Sharing cannot change results — triple and deployment are
+    /// deterministic in their keys — so parallel output stays
+    /// bit-identical to sequential (timing fields `plan_ms`/`route_ms`
+    /// report the shared solve).
     pub fn run(&self, points: &[SweepPoint]) -> SweepOutcome {
+        type Triple = (Arc<Workflow>, Arc<ProfileDb>, Arc<Constellation>);
+        type PrepSlot = Mutex<Option<Result<Arc<Prepared>, ScenarioError>>>;
+        let mut builds: HashMap<BuildKey, Triple> = HashMap::new();
+        let mut preps: HashMap<(BuildKey, BackendKind), PrepSlot> = HashMap::new();
+        for point in points {
+            if point.scenario.tipcue.is_none() && point.scenario.dynamic.is_none() {
+                let key = point.scenario.build_key();
+                builds
+                    .entry(key)
+                    .or_insert_with(|| point.scenario.build_shared());
+                preps.entry((key, point.backend)).or_insert_with(|| Mutex::new(None));
+            }
+        }
+        let builds = &builds;
+        let preps = &preps;
+
         let slots: Vec<Mutex<Option<Result<ScenarioReport, ScenarioError>>>> =
             points.iter().map(|_| Mutex::new(None)).collect();
         let cursor = AtomicUsize::new(0);
@@ -413,8 +451,9 @@ impl SweepRunner {
                     let point = &points[i];
                     // Tip-and-cue points run the closed loop, dynamic
                     // points the epoch loop, static points the single
-                    // plan → route → simulate cycle.  All collapse to the
-                    // same report shape.
+                    // plan → route → simulate cycle over the shared
+                    // triple + deployment.  All collapse to the same
+                    // report shape.
                     let result = if point.scenario.tipcue.is_some() {
                         crate::tipcue::TipCueOrchestrator::new(&point.scenario)
                             .with_backend(point.backend)
@@ -424,9 +463,20 @@ impl SweepRunner {
                             .with_backend(point.backend)
                             .run_scenario_report()
                     } else {
-                        Orchestrator::new(&point.scenario)
-                            .with_backend(point.backend)
-                            .run()
+                        let key = point.scenario.build_key();
+                        let (wf, db, c) = builds[&key].clone();
+                        let orch =
+                            Orchestrator::from_scenario_shared(&point.scenario, wf, db, c)
+                                .with_backend(point.backend);
+                        let prepared = {
+                            let mut slot =
+                                preps[&(key, point.backend)].lock().expect("prep lock");
+                            if slot.is_none() {
+                                *slot = Some(orch.prepare().map(Arc::new));
+                            }
+                            slot.as_ref().expect("slot just filled").clone()
+                        };
+                        prepared.map(|p| orch.report_for(&p))
                     };
                     *slots[i].lock().expect("slot lock") = Some(result);
                 });
@@ -539,6 +589,32 @@ mod tests {
         // Without tip-and-cue dimensions, no extension is attached.
         let plain = SweepGrid::new(Scenario::jetson()).points();
         assert!(plain[0].scenario.tipcue.is_none());
+    }
+
+    #[test]
+    fn shared_builds_match_per_point_builds() {
+        // The runner's build cache hands one triple to every static point
+        // with the same build key; the results must be indistinguishable
+        // from rebuilding per point.
+        let base = Scenario::jetson().with_frames(2);
+        let points = SweepGrid::new(base).frames(&[2, 3]).reseed(true).points();
+        let outcome = SweepRunner::new().with_threads(2).run(&points);
+        for (point, rep) in points.iter().zip(&outcome.reports) {
+            let solo = Orchestrator::new(&point.scenario)
+                .with_backend(point.backend)
+                .run();
+            match (rep, solo) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.completion_ratio, b.completion_ratio);
+                    assert_eq!(a.frame_latency_s, b.frame_latency_s);
+                    assert_eq!(
+                        a.metrics.to_json().to_string_compact(),
+                        b.metrics.to_json().to_string_compact()
+                    );
+                }
+                (a, b) => panic!("outcome mismatch: {a:?} vs {b:?}"),
+            }
+        }
     }
 
     #[test]

@@ -28,7 +28,7 @@ use std::collections::{BinaryHeap, VecDeque};
 use crate::constellation::Constellation;
 use crate::profile::{datasize, ProfileDb};
 use crate::routing::{Dev, Pipeline};
-use crate::telemetry::Metrics;
+use crate::telemetry::{MetricId, Metrics};
 use crate::util::rng::Rng;
 use crate::workflow::Workflow;
 use gpu::SliceWindow;
@@ -236,16 +236,27 @@ struct IslMsg {
     sent_at: f64,
 }
 
-/// The simulator.
+/// Sentinel for an absent `(func, sat, dev)` slot in the dense instance
+/// index.
+const NO_INSTANCE: u32 = u32::MAX;
+
+/// The simulator.  Borrows every input — the scenario layer simulates one
+/// `Prepared` repeatedly and the epoch loop re-runs per epoch, so nothing
+/// is cloned per run.
 pub struct Simulator<'a> {
     wf: &'a Workflow,
     profiles: &'a ProfileDb,
     constellation: &'a Constellation,
-    instances: Vec<InstanceSpec>,
+    instances: &'a [InstanceSpec],
     pipelines: &'a [Pipeline],
-    cfg: SimConfig,
-    /// instance lookup: (func, sat, dev) -> index
-    inst_idx: std::collections::HashMap<(usize, usize, Dev), usize>,
+    cfg: &'a SimConfig,
+    /// Dense instance index: slot `(func · n_sats + sat) · 2 + dev`
+    /// (dev: CPU = 0, GPU = 1), [`NO_INSTANCE`] when absent.  Replaces a
+    /// `HashMap<(usize, usize, Dev), usize>` that was hashed on every
+    /// event's downstream fan-out.
+    inst_idx: Vec<u32>,
+    /// Satellite dimension of `inst_idx`.
+    n_sats_dim: usize,
 }
 
 impl<'a> Simulator<'a> {
@@ -253,16 +264,49 @@ impl<'a> Simulator<'a> {
         wf: &'a Workflow,
         profiles: &'a ProfileDb,
         constellation: &'a Constellation,
-        instances: Vec<InstanceSpec>,
+        instances: &'a [InstanceSpec],
         pipelines: &'a [Pipeline],
-        cfg: SimConfig,
+        cfg: &'a SimConfig,
     ) -> Self {
-        let inst_idx = instances
+        let n_funcs = instances
             .iter()
-            .enumerate()
-            .map(|(k, i)| ((i.func, i.sat, i.dev), k))
-            .collect();
-        Simulator { wf, profiles, constellation, instances, pipelines, cfg, inst_idx }
+            .map(|i| i.func + 1)
+            .max()
+            .unwrap_or(0)
+            .max(wf.len());
+        let n_sats_dim = instances
+            .iter()
+            .map(|i| i.sat + 1)
+            .max()
+            .unwrap_or(0)
+            .max(constellation.n_sats)
+            .max(1);
+        let mut inst_idx = vec![NO_INSTANCE; n_funcs * n_sats_dim * 2];
+        // Later duplicates win, matching the historical HashMap collect.
+        for (k, i) in instances.iter().enumerate() {
+            inst_idx[(i.func * n_sats_dim + i.sat) * 2 + (i.dev == Dev::Gpu) as usize] =
+                k as u32;
+        }
+        Simulator {
+            wf,
+            profiles,
+            constellation,
+            instances,
+            pipelines,
+            cfg,
+            inst_idx,
+            n_sats_dim,
+        }
+    }
+
+    /// Instance slot for `(func, sat, dev)` — panics when no such instance
+    /// exists, like the historical `HashMap` indexing did.
+    #[inline]
+    fn inst_at(&self, func: usize, sat: usize, dev: Dev) -> usize {
+        let k = self.inst_idx[(func * self.n_sats_dim + sat) * 2
+            + (dev == Dev::Gpu) as usize];
+        assert!(k != NO_INSTANCE, "no instance for func {func} sat {sat} {dev:?}");
+        k as usize
     }
 
     /// Run the simulation and produce the report.
@@ -273,14 +317,21 @@ impl<'a> Simulator<'a> {
         let mut rng = Rng::new(self.cfg.seed);
         let mut metrics = Metrics::new();
 
-        // Per-function metric keys, formatted once: `inc` runs per event,
-        // and a `format!` per event dominated the sim profile.
-        let recv_keys: Vec<String> = (0..self.wf.len())
-            .map(|i| format!("func.{}.received", self.wf.name(i)))
+        // Per-function metric keys, formatted and interned once: `inc`
+        // runs per event, and first a `format!` per event, then a
+        // string-keyed map lookup per event, dominated the sim profile.
+        // After interning, the per-event cost is a vector index.
+        let recv_keys: Vec<MetricId> = (0..self.wf.len())
+            .map(|i| metrics.id(&format!("func.{}.received", self.wf.name(i))))
             .collect();
-        let done_keys: Vec<String> = (0..self.wf.len())
-            .map(|i| format!("func.{}.analyzed", self.wf.name(i)))
+        let done_keys: Vec<MetricId> = (0..self.wf.len())
+            .map(|i| metrics.id(&format!("func.{}.analyzed", self.wf.name(i))))
             .collect();
+        let m_unrouted = metrics.id("tiles.unrouted");
+        let m_injected = metrics.id("tiles.injected");
+        let m_isl_bytes = metrics.id("isl.bytes");
+        let m_isl_energy = metrics.id("isl.energy_j");
+        let m_tile_latency = metrics.id("tile.latency_s");
 
         // Effective directed-link rate: nominal rate times the adjacency's
         // factor from the per-epoch link table (link `2l`/`2l+1` ↔
@@ -356,9 +407,9 @@ impl<'a> Simulator<'a> {
             let pipes = &group_pipes[g];
             if pipes.is_empty() {
                 for &s in &sources {
-                    metrics.inc(&recv_keys[s], 1.0);
+                    metrics.inc_id(recv_keys[s], 1.0);
                 }
-                metrics.inc("tiles.unrouted", 1.0);
+                metrics.inc_id(m_unrouted, 1.0);
                 continue;
             }
             let chosen = pick_pipeline(&mut rng, pipes);
@@ -376,7 +427,7 @@ impl<'a> Simulator<'a> {
             });
             for &sfunc in &sources {
                 let st = self.pipelines[chosen].stages[sfunc];
-                let inst = self.inst_idx[&(st.func, st.sat, st.dev)];
+                let inst = self.inst_at(st.func, st.sat, st.dev);
                 push(&mut heap, &mut seq, 0.0, Ev::Arrival { inst, tile: tid });
             }
         }
@@ -393,9 +444,9 @@ impl<'a> Simulator<'a> {
                     // Unrouted tiles count as received-but-never-analyzed
                     // at the source functions.
                     for &s in &sources {
-                        metrics.inc(&recv_keys[s], 1.0);
+                        metrics.inc_id(recv_keys[s], 1.0);
                     }
-                    metrics.inc("tiles.unrouted", 1.0);
+                    metrics.inc_id(m_unrouted, 1.0);
                     continue;
                 }
                 let chosen = pick_pipeline(&mut rng, pipes);
@@ -413,7 +464,7 @@ impl<'a> Simulator<'a> {
                 });
                 for &sfunc in &sources {
                     let st = self.pipelines[chosen].stages[sfunc];
-                    let inst = self.inst_idx[&(st.func, st.sat, st.dev)];
+                    let inst = self.inst_at(st.func, st.sat, st.dev);
                     // The stage's satellite captures this tile at its
                     // revisit time; pure revisit delay.
                     let t_cap = t0 + c.revisit_time_s(st.sat);
@@ -471,7 +522,7 @@ impl<'a> Simulator<'a> {
             };
             injection_terminals_left.push(n_expected_terminals);
             if c.tiles_per_frame == 0 {
-                metrics.inc("tiles.unrouted", 1.0);
+                metrics.inc_id(m_unrouted, 1.0);
                 injection_outcomes.push(outcome);
                 continue;
             }
@@ -480,9 +531,9 @@ impl<'a> Simulator<'a> {
             let pipes = &group_pipes[g];
             if pipes.is_empty() {
                 for &s in &sources {
-                    metrics.inc(&recv_keys[s], 1.0);
+                    metrics.inc_id(recv_keys[s], 1.0);
                 }
-                metrics.inc("tiles.unrouted", 1.0);
+                metrics.inc_id(m_unrouted, 1.0);
                 injection_outcomes.push(outcome);
                 continue;
             }
@@ -517,10 +568,10 @@ impl<'a> Simulator<'a> {
                 .map(|&s| self.pipelines[chosen].stages[s].sat);
             for &sfunc in &sources {
                 let st = self.pipelines[chosen].stages[sfunc];
-                let inst = self.inst_idx[&(st.func, st.sat, st.dev)];
+                let inst = self.inst_at(st.func, st.sat, st.dev);
                 push(&mut heap, &mut seq, inj.t_s, Ev::Arrival { inst, tile: tid });
             }
-            metrics.inc("tiles.injected", 1.0);
+            metrics.inc_id(m_injected, 1.0);
             injection_outcomes.push(outcome);
         }
 
@@ -543,7 +594,7 @@ impl<'a> Simulator<'a> {
             last_event_t = t;
             match ev {
                 Ev::Arrival { inst, tile } => {
-                    metrics.inc(&recv_keys[self.instances[inst].func], 1.0);
+                    metrics.inc_id(recv_keys[self.instances[inst].func], 1.0);
                     // Priority tasks (cues) jump the FIFO; the tile in
                     // service is not preempted.
                     if tiles[tile as usize].priority {
@@ -566,7 +617,7 @@ impl<'a> Simulator<'a> {
                 Ev::Done { inst, tile } => {
                     let spec = &self.instances[inst];
                     let name = self.wf.name(spec.func);
-                    metrics.inc(&done_keys[spec.func], 1.0);
+                    metrics.inc_id(done_keys[spec.func], 1.0);
                     let ts = &mut tiles[tile as usize];
                     ts.last_done = t;
                     let priority = ts.priority;
@@ -592,7 +643,7 @@ impl<'a> Simulator<'a> {
                         }
                         terminal = false;
                         let dst = pipe.stages[vfunc];
-                        let dinst = self.inst_idx[&(dst.func, dst.sat, dst.dev)];
+                        let dinst = self.inst_at(dst.func, dst.sat, dst.dev);
                         if dst.sat == spec.sat {
                             push(&mut heap, &mut seq, t, Ev::Arrival { inst: dinst, tile });
                         } else {
@@ -600,9 +651,9 @@ impl<'a> Simulator<'a> {
                             let bytes =
                                 datasize::intermediate_bytes(self.profiles, name);
                             let hops = c.hops(spec.sat, dst.sat) as f64;
-                            metrics.inc("isl.bytes", bytes * hops);
-                            metrics.inc(
-                                "isl.energy_j",
+                            metrics.inc_id(m_isl_bytes, bytes * hops);
+                            metrics.inc_id(
+                                m_isl_energy,
                                 c.isl.energy_j(
                                     bytes,
                                     self.cfg_tx_power(),
@@ -727,8 +778,8 @@ impl<'a> Simulator<'a> {
         // Aggregate.
         let mut ratios = Vec::new();
         for i in 0..self.wf.len() {
-            let rec = metrics.counter(&recv_keys[i]);
-            let ana = metrics.counter(&done_keys[i]);
+            let rec = metrics.counter_id(recv_keys[i]);
+            let ana = metrics.counter_id(done_keys[i]);
             if rec > 0.0 {
                 ratios.push((ana / rec).min(1.0));
             }
@@ -740,7 +791,7 @@ impl<'a> Simulator<'a> {
         let mut breakdown = (0.0, 0.0, 0.0);
         for ts in &tiles {
             let lat = ts.last_done - ts.t0;
-            metrics.observe("tile.latency_s", lat);
+            metrics.observe_id(m_tile_latency, lat);
             if lat > worst_latency {
                 worst_latency = lat;
                 let proc = (lat - ts.comm_s - ts.revisit_s).max(0.0);
@@ -750,7 +801,8 @@ impl<'a> Simulator<'a> {
         }
 
         let unfinished = tiles.iter().filter(|ts| !ts.finished).count();
-        let isl_per_frame = metrics.counter("isl.bytes") / self.cfg.frames.max(1) as f64;
+        let isl_per_frame =
+            metrics.counter_id(m_isl_bytes) / self.cfg.frames.max(1) as f64;
         SimReport {
             completion_ratio: completion,
             isl_bytes_per_frame: isl_per_frame,
@@ -857,27 +909,24 @@ fn link_index(a: usize, b: usize) -> usize {
 
 /// Convenience: plan → route → simulate in one call (the OrbitChain path).
 ///
-/// Thin wrapper over [`crate::scenario::Orchestrator`] — the scenario layer
-/// owns the plan/route/simulate glue; this keeps the historical sim-level
-/// entry point (and its `PlanError` signature) for callers that already
-/// hold the `(workflow, profiles, constellation)` triple.
+/// The historical sim-level entry point (and its `PlanError` signature)
+/// for callers that already hold the `(workflow, profiles, constellation)`
+/// triple.  Runs the same MILP + Algorithm-1 cycle as the scenario
+/// layer's default backend (the refactor-guard test
+/// `orchestrator_matches_manual_glue` pins the equivalence), borrowing the
+/// triple instead of cloning it into an orchestrator.
 pub fn simulate_orbitchain(
     wf: &Workflow,
     profiles: &ProfileDb,
     constellation: &Constellation,
     cfg: SimConfig,
 ) -> Result<SimReport, crate::planner::PlanError> {
-    let orch = crate::scenario::Orchestrator::from_parts(
-        wf.clone(),
-        profiles.clone(),
-        constellation.clone(),
-        cfg,
-    );
-    let prepared = orch.prepare().map_err(|e| match e {
-        crate::scenario::ScenarioError::Plan(p) => p,
-        other => panic!("routing on planned deployment: {other}"),
-    })?;
-    Ok(orch.simulate(&prepared))
+    let plan = crate::planner::plan(wf, profiles, constellation)?;
+    let routing = crate::routing::route(wf, profiles, constellation, &plan)
+        .unwrap_or_else(|e| panic!("routing on planned deployment: {e}"));
+    let instances = instances_from_plan(&plan, constellation);
+    Ok(Simulator::new(wf, profiles, constellation, &instances, &routing.pipelines, &cfg)
+        .run())
 }
 
 #[cfg(test)]

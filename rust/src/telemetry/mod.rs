@@ -3,18 +3,46 @@
 //! Every simulator / runtime component records into a [`Metrics`] instance;
 //! experiment drivers export the registry as JSON rows (the paper-figure
 //! regeneration pipeline) and the CLI pretty-prints it.
+//!
+//! **Interned hot path.**  The simulator emits metrics once per
+//! discrete event, so the registry is storage-dense: names are interned
+//! into `u32` [`MetricId`]s once (at sim setup — `Metrics::id`), and the
+//! per-event [`Metrics::inc_id`] / [`Metrics::observe_id`] calls are plain
+//! vector indexing with no hashing, string comparison or allocation.  The
+//! name-based [`Metrics::inc`] / [`Metrics::observe`] remain for cold
+//! paths and intern on first use.  Counter names use dotted paths
+//! (`"isl.bytes"`, `"func.cloud.analyzed"`).
 
-use std::collections::BTreeMap;
+use std::collections::HashMap;
 
-use crate::util::json::{Json, obj};
+use crate::util::json::{obj, Json};
 use crate::util::stats;
 
-/// A metric registry.  Counter names use dotted paths
-/// (`"isl.bytes"`, `"func.cloud.analyzed"`).
+/// An interned metric key: a dense index into one [`Metrics`] registry.
+///
+/// Ids are **registry-specific** — an id resolved by one registry's
+/// [`Metrics::id`] must only be used with that registry (using it
+/// elsewhere indexes an unrelated slot or panics).  Resolve once per
+/// registry at setup, then record through the `_id` methods on the hot
+/// path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MetricId(u32);
+
+/// A metric registry.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
-    counters: BTreeMap<String, f64>,
-    samples: BTreeMap<String, Vec<f64>>,
+    /// Id → name (ids are assigned densely in interning order).
+    names: Vec<String>,
+    /// Name → id.
+    index: HashMap<String, u32>,
+    /// Id → counter value (0 until first increment).
+    counters: Vec<f64>,
+    /// Id → whether the counter was ever incremented: an id interned for a
+    /// counter that never fired must not surface in the JSON export (the
+    /// simulator interns every per-function key up front).
+    counted: Vec<bool>,
+    /// Id → distribution samples (empty ⇔ absent from the export).
+    samples: Vec<Vec<f64>>,
 }
 
 impl Metrics {
@@ -22,40 +50,66 @@ impl Metrics {
         Self::default()
     }
 
-    /// Add `v` to a counter.
-    ///
-    /// Hot path: the simulator calls this once per event.  `BTreeMap::entry`
-    /// demands an owned key, so the obvious `entry(name.to_string())` spelling
-    /// allocates a `String` on *every* call; looking up first means the
-    /// allocation happens only on the first increment of each counter.
-    pub fn inc(&mut self, name: &str, v: f64) {
-        match self.counters.get_mut(name) {
-            Some(slot) => *slot += v,
-            None => {
-                self.counters.insert(name.to_string(), v);
-            }
+    /// Intern `name`, returning its dense id in *this* registry.  The
+    /// first call per name allocates; every later call is one hash lookup.
+    pub fn id(&mut self, name: &str) -> MetricId {
+        if let Some(&i) = self.index.get(name) {
+            return MetricId(i);
         }
+        let i = self.names.len() as u32;
+        self.index.insert(name.to_string(), i);
+        self.names.push(name.to_string());
+        self.counters.push(0.0);
+        self.counted.push(false);
+        self.samples.push(Vec::new());
+        MetricId(i)
     }
 
-    /// Record one sample of a distribution metric (same lookup-before-insert
-    /// discipline as [`Metrics::inc`]).
+    /// Add `v` to an interned counter — the per-event hot path: two
+    /// vector writes, no hashing or allocation.
+    #[inline]
+    pub fn inc_id(&mut self, id: MetricId, v: f64) {
+        self.counters[id.0 as usize] += v;
+        self.counted[id.0 as usize] = true;
+    }
+
+    /// Record one sample of an interned distribution metric.
+    #[inline]
+    pub fn observe_id(&mut self, id: MetricId, v: f64) {
+        self.samples[id.0 as usize].push(v);
+    }
+
+    /// Add `v` to a counter by name (cold path: interns on first use).
+    pub fn inc(&mut self, name: &str, v: f64) {
+        let id = self.id(name);
+        self.inc_id(id, v);
+    }
+
+    /// Record one sample of a distribution metric by name (cold path).
     pub fn observe(&mut self, name: &str, v: f64) {
-        match self.samples.get_mut(name) {
-            Some(vs) => vs.push(v),
-            None => {
-                self.samples.insert(name.to_string(), vec![v]);
-            }
-        }
+        let id = self.id(name);
+        self.observe_id(id, v);
     }
 
     /// Current counter value (0 when never incremented).
     pub fn counter(&self, name: &str) -> f64 {
-        self.counters.get(name).copied().unwrap_or(0.0)
+        match self.index.get(name) {
+            Some(&i) => self.counters[i as usize],
+            None => 0.0,
+        }
+    }
+
+    /// Current counter value by interned id.
+    pub fn counter_id(&self, id: MetricId) -> f64 {
+        self.counters[id.0 as usize]
     }
 
     /// All samples of a distribution metric.
     pub fn samples(&self, name: &str) -> &[f64] {
-        self.samples.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+        match self.index.get(name) {
+            Some(&i) => &self.samples[i as usize],
+            None => &[],
+        }
     }
 
     /// Ratio helper: `counter(num) / counter(den)` (0 when empty).
@@ -68,20 +122,24 @@ impl Metrics {
         }
     }
 
-    /// Merge another registry into this one.
+    /// Merge another registry into this one (by name: id spaces are
+    /// registry-specific).
     pub fn merge(&mut self, other: &Metrics) {
-        for (k, v) in &other.counters {
-            self.inc(k, *v);
-        }
-        for (k, vs) in &other.samples {
-            self.samples.entry(k.clone()).or_default().extend(vs);
+        for (i, name) in other.names.iter().enumerate() {
+            if other.counted[i] {
+                self.inc(name, other.counters[i]);
+            }
+            if !other.samples[i].is_empty() {
+                let id = self.id(name);
+                self.samples[id.0 as usize].extend_from_slice(&other.samples[i]);
+            }
         }
     }
 
     /// Merge many registries (sweep aggregation).  Merging is commutative
-    /// for counters; sample order follows the iterator, so pass registries
-    /// in a deterministic order (e.g. sweep-grid order) for reproducible
-    /// exports.
+    /// for counters; per-key sample order follows the registry order, so
+    /// pass registries in a deterministic order (e.g. sweep-grid order)
+    /// for reproducible exports.
     pub fn merged<'a>(all: impl IntoIterator<Item = &'a Metrics>) -> Metrics {
         let mut out = Metrics::new();
         for m in all {
@@ -91,17 +149,24 @@ impl Metrics {
     }
 
     /// Export as JSON: counters verbatim; distributions summarized
-    /// (count/mean/p50/p99/max).
+    /// (count/mean/p50/p99/max).  Keys sort by name (the `Json::Obj`
+    /// `BTreeMap`), independent of interning order, so exports are
+    /// byte-identical however the registry was populated;
+    /// interned-but-never-recorded ids are omitted.
     pub fn to_json(&self) -> Json {
         let counters = Json::Obj(
-            self.counters.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect(),
+            (0..self.names.len())
+                .filter(|&i| self.counted[i])
+                .map(|i| (self.names[i].clone(), Json::Num(self.counters[i])))
+                .collect(),
         );
         let dists = Json::Obj(
-            self.samples
-                .iter()
-                .map(|(k, vs)| {
+            (0..self.names.len())
+                .filter(|&i| !self.samples[i].is_empty())
+                .map(|i| {
+                    let vs = &self.samples[i];
                     (
-                        k.clone(),
+                        self.names[i].clone(),
                         obj(vec![
                             ("count", Json::from(vs.len())),
                             ("mean", Json::Num(stats::mean(vs))),
@@ -134,6 +199,39 @@ mod tests {
     }
 
     #[test]
+    fn interned_ids_are_stable_and_equivalent() {
+        let mut m = Metrics::new();
+        let a = m.id("hot.counter");
+        let a2 = m.id("hot.counter");
+        assert_eq!(a, a2, "interning is idempotent");
+        m.inc_id(a, 2.0);
+        m.inc("hot.counter", 3.0);
+        assert_eq!(m.counter("hot.counter"), 5.0);
+        assert_eq!(m.counter_id(a), 5.0);
+        let d = m.id("hot.dist");
+        m.observe_id(d, 1.0);
+        m.observe("hot.dist", 2.0);
+        assert_eq!(m.samples("hot.dist"), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn untouched_interned_ids_stay_out_of_export() {
+        // The simulator interns every per-function key up front; keys that
+        // never fire must not surface as zero counters / empty dists.
+        let mut m = Metrics::new();
+        let _silent = m.id("never.incremented");
+        let _silent_dist = m.id("never.observed");
+        m.inc("real", 0.0); // explicitly recorded zero stays visible
+        let j = m.to_json();
+        assert!(j.get("counters").unwrap().get("never.incremented").is_none());
+        assert!(j.get("distributions").unwrap().get("never.observed").is_none());
+        assert_eq!(j.get("counters").unwrap().get("real").unwrap().as_f64(), Some(0.0));
+        // ...but reading them is still well-defined.
+        assert_eq!(m.counter("never.incremented"), 0.0);
+        assert!(m.samples("never.observed").is_empty());
+    }
+
+    #[test]
     fn ratio_handles_zero_denominator() {
         let mut m = Metrics::new();
         assert_eq!(m.ratio("x", "y"), 0.0);
@@ -156,6 +254,20 @@ mod tests {
     }
 
     #[test]
+    fn merge_is_name_based_across_disjoint_id_spaces() {
+        // The same name interns to different ids in different registries;
+        // merging must go by name, not id.
+        let mut a = Metrics::new();
+        a.inc("first", 1.0);
+        a.inc("shared", 10.0);
+        let mut b = Metrics::new();
+        b.inc("shared", 5.0); // id 0 here, id 1 in `a`
+        a.merge(&b);
+        assert_eq!(a.counter("shared"), 15.0);
+        assert_eq!(a.counter("first"), 1.0);
+    }
+
+    #[test]
     fn json_export_shape() {
         let mut m = Metrics::new();
         m.inc("count", 7.0);
@@ -167,5 +279,16 @@ mod tests {
         let lat = j.get("distributions").unwrap().get("lat").unwrap();
         assert_eq!(lat.get("count").unwrap().as_usize(), Some(3));
         assert_eq!(lat.get("p50").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn json_export_sorted_by_name_not_interning_order() {
+        let mut m = Metrics::new();
+        m.inc("z.last", 1.0);
+        m.inc("a.first", 2.0);
+        let s = m.to_json().to_string_compact();
+        let za = s.find("z.last").unwrap();
+        let af = s.find("a.first").unwrap();
+        assert!(af < za, "{s}");
     }
 }

@@ -408,7 +408,11 @@ impl TipCueOrchestrator {
     /// Run the closed loop; see the module docs.
     pub fn run(&self) -> Result<TipCueReport, ScenarioError> {
         let reserve = self.spec.reserve_frac.clamp(0.0, 0.9);
-        let base = Orchestrator::new(&self.scenario);
+        // One shared build feeds both the orchestrator and the
+        // pass-prediction geometry below: the constellation rides an `Arc`
+        // instead of being rebuilt and deep-cloned per run.
+        let (wf, db, c) = self.scenario.build_shared();
+        let base = Orchestrator::from_scenario_shared(&self.scenario, wf, db, c.clone());
         let orch = match self.kind {
             BackendKind::OrbitChain => base
                 .with_planner(ReservedMilpPlanner { reserve })
@@ -419,7 +423,6 @@ impl TipCueOrchestrator {
             other => base.with_backend(other),
         };
         let prepared = orch.prepare()?;
-        let c = orch.constellation().clone();
         let df = c.frame_deadline_s;
         let frames = orch.sim_config().frames;
 
@@ -541,16 +544,19 @@ impl TipCueOrchestrator {
             .count();
 
         let mut metrics = rep.metrics;
-        metrics.inc("tipcue.tips", tips.len() as f64);
-        metrics.inc("tipcue.cues_admitted", admitted as f64);
-        metrics.inc(
-            "tipcue.cues_rejected",
-            (rejected_no_pass + rejected_capacity) as f64,
-        );
-        metrics.inc("tipcue.cues_completed", completed as f64);
-        metrics.inc("tipcue.cues_missed", missed as f64);
+        let m_tips = metrics.id("tipcue.tips");
+        let m_admitted = metrics.id("tipcue.cues_admitted");
+        let m_rejected = metrics.id("tipcue.cues_rejected");
+        let m_completed = metrics.id("tipcue.cues_completed");
+        let m_missed = metrics.id("tipcue.cues_missed");
+        let m_latency = metrics.id("tipcue.response_latency");
+        metrics.inc_id(m_tips, tips.len() as f64);
+        metrics.inc_id(m_admitted, admitted as f64);
+        metrics.inc_id(m_rejected, (rejected_no_pass + rejected_capacity) as f64);
+        metrics.inc_id(m_completed, completed as f64);
+        metrics.inc_id(m_missed, missed as f64);
         for l in &latencies {
-            metrics.observe("tipcue.response_latency", *l);
+            metrics.observe_id(m_latency, *l);
         }
 
         let routed = prepared.routed_tiles();

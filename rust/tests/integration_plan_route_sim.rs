@@ -103,8 +103,8 @@ fn prop_completion_in_unit_range_all_frameworks() {
             if !dep.instantiated {
                 continue;
             }
-            let rep = Simulator::new(&wf, &db, &c, dep.instances, &dep.pipelines, cfg.clone())
-                .run();
+            let rep =
+                Simulator::new(&wf, &db, &c, &dep.instances, &dep.pipelines, &cfg).run();
             if !(0.0..=1.0 + 1e-9).contains(&rep.completion_ratio) {
                 return Err(format!("baseline completion {}", rep.completion_ratio));
             }
@@ -128,7 +128,7 @@ fn headline_more_workload_than_baselines() {
     assert!(!dp.instantiated, "data parallelism must OOM with 4 functions");
     let cp = baselines::compute_parallelism(&wf, &db, &c);
     let cp_ratio = if cp.instantiated {
-        Simulator::new(&wf, &db, &c, cp.instances, &cp.pipelines, cfg)
+        Simulator::new(&wf, &db, &c, &cp.instances, &cp.pipelines, &cfg)
             .run()
             .completion_ratio
     } else {
@@ -183,14 +183,7 @@ fn failure_injection_degraded_satellite() {
     let r = routing::route(&wf, &db, &c, &plan).unwrap();
     assert!(r.routed_tiles > 0.0, "leader+follower capacity remains");
     let instances = sim::instances_from_plan(&plan, &c);
-    let rep = Simulator::new(
-        &wf,
-        &db,
-        &c,
-        instances,
-        &r.pipelines,
-        SimConfig { frames: 4, ..Default::default() },
-    )
-    .run();
+    let cfg = SimConfig { frames: 4, ..Default::default() };
+    let rep = Simulator::new(&wf, &db, &c, &instances, &r.pipelines, &cfg).run();
     assert!(rep.completion_ratio <= 1.0 + 1e-9);
 }
