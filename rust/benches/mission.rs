@@ -1,0 +1,74 @@
+//! Combined mission loop at constellation scale: wall time, cue
+//! admission, and the FIFO-vs-priority ISL latency delta per size.
+//!
+//! Run: `cargo bench --bench mission` (10/25/50 sats)
+//!      `cargo bench --bench mission -- --short` (CI smoke: 10 sats,
+//!      fewer epochs)
+
+mod bench_common;
+
+use std::time::Instant;
+
+use bench_common::bench;
+use orbitchain::config::Scenario;
+use orbitchain::dynamic::DynamicSpec;
+use orbitchain::mission::{MissionOrchestrator, MissionSpec};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let short = args.iter().any(|a| a == "--short");
+    let (sats, epochs): (&[usize], usize) =
+        if short { (&[10], 4) } else { (&[10, 25, 50], 6) };
+
+    println!(
+        "{:>5} | {:>7} {:>5} {:>6} {:>9} | {:>11} {:>11} {:>7} | {:>7}",
+        "sats",
+        "replans",
+        "tips",
+        "admit",
+        "completed",
+        "lat_fifo_s",
+        "lat_prio_s",
+        "delta%",
+        "wall_s"
+    );
+    for &n in sats {
+        let spec = MissionSpec {
+            dynamic: DynamicSpec { epochs, ..Default::default() },
+            ..Default::default()
+        };
+        let s = Scenario::jetson()
+            .with_seed(7)
+            .with_uniform_sats(n)
+            .with_isl_rate(16_000.0)
+            .with_mission(spec);
+        let t0 = Instant::now();
+        let rep = MissionOrchestrator::new(&s).run_compare().expect("mission runs");
+        let wall = t0.elapsed().as_secs_f64();
+        let (lat_fifo, lat_prio, delta) = match rep.fifo_prio_latency_means() {
+            Some((f, p)) => (f, p, (f - p) / f.max(1e-9) * 100.0),
+            None => (f64::NAN, f64::NAN, f64::NAN),
+        };
+        println!(
+            "{:>5} | {:>7} {:>5} {:>6} {:>9} | {:>11.2} {:>11.2} {:>7.1} | {:>7.2}",
+            n, rep.replans, rep.tips, rep.admitted, rep.completed, lat_fifo, lat_prio,
+            delta, wall
+        );
+    }
+
+    // Steady-state closed-loop throughput at the smallest size (epoch
+    // re-planning + detection hook + per-cue routing + two sims/epoch).
+    let spec = MissionSpec {
+        dynamic: DynamicSpec { epochs: 4, frames_per_epoch: 2, ..Default::default() },
+        ..Default::default()
+    };
+    let s = Scenario::jetson().with_seed(7).with_mission(spec);
+    let rep = bench("mission closed loop (jetson, 4 epochs, compare)", 3, || {
+        MissionOrchestrator::new(&s).run_compare().expect("mission runs")
+    });
+    println!(
+        "defaults: detections={} tips={} admitted={} completed={} plan={:.1} ms \
+         sim={:.1} ms",
+        rep.detections, rep.tips, rep.admitted, rep.completed, rep.plan_ms, rep.sim_ms
+    );
+}

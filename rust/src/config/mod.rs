@@ -10,6 +10,7 @@ use std::sync::Arc;
 
 use crate::constellation::Constellation;
 use crate::dynamic::DynamicSpec;
+use crate::mission::MissionSpec;
 use crate::profile::{Device, ProfileDb};
 use crate::tipcue::TipCueSpec;
 use crate::util::json::{obj, Json};
@@ -61,6 +62,12 @@ pub struct Scenario {
     /// detections raise cue tasks that are pass-predicted, admitted against
     /// the reserved capacity and injected back into the same simulation.
     pub tipcue: Option<TipCueSpec>,
+    /// Mission extension: when set, the scenario runs the combined closed
+    /// loop of [`crate::mission::MissionOrchestrator`] — dynamic epoch
+    /// re-planning and detection-derived tip-and-cue together, with
+    /// per-cue routing and two-class ISL queues.  Takes precedence over
+    /// the `dynamic` and `tipcue` extensions in sweeps.
+    pub mission: Option<MissionSpec>,
 }
 
 impl Scenario {
@@ -80,6 +87,7 @@ impl Scenario {
             orbit_shift: true,
             dynamic: None,
             tipcue: None,
+            mission: None,
         }
     }
 
@@ -99,6 +107,7 @@ impl Scenario {
             orbit_shift: true,
             dynamic: None,
             tipcue: None,
+            mission: None,
         }
     }
 
@@ -164,6 +173,12 @@ impl Scenario {
     /// Attach (or replace) the tip-and-cue extension.
     pub fn with_tipcue(mut self, spec: TipCueSpec) -> Self {
         self.tipcue = Some(spec);
+        self
+    }
+
+    /// Attach (or replace) the mission extension.
+    pub fn with_mission(mut self, spec: MissionSpec) -> Self {
+        self.mission = Some(spec);
         self
     }
 
@@ -255,6 +270,10 @@ impl Scenario {
                 "tipcue",
                 self.tipcue.as_ref().map(TipCueSpec::to_json).unwrap_or(Json::Null),
             ),
+            (
+                "mission",
+                self.mission.as_ref().map(MissionSpec::to_json).unwrap_or(Json::Null),
+            ),
         ])
     }
 
@@ -294,6 +313,10 @@ impl Scenario {
             tipcue: match j.get("tipcue") {
                 Some(Json::Null) | None => None,
                 Some(t) => Some(TipCueSpec::from_json(t)),
+            },
+            mission: match j.get("mission") {
+                Some(Json::Null) | None => None,
+                Some(m) => Some(MissionSpec::from_json(m)),
             },
         })
     }
@@ -350,6 +373,23 @@ mod tests {
         let back = Scenario::from_json(&s.to_json()).unwrap();
         assert_eq!(s, back);
         assert_eq!(back.tipcue.as_ref().unwrap().reserve_frac, 0.3);
+    }
+
+    #[test]
+    fn json_roundtrip_with_mission_extension() {
+        let spec = MissionSpec {
+            detection_rate: 0.1,
+            reserve_frac: 0.3,
+            priority_isl: false,
+            dynamic: crate::dynamic::DynamicSpec { epochs: 6, ..Default::default() },
+            ..Default::default()
+        };
+        let s = Scenario::jetson().with_mission(spec);
+        let back = Scenario::from_json(&s.to_json()).unwrap();
+        assert_eq!(s, back);
+        let m = back.mission.as_ref().unwrap();
+        assert_eq!(m.dynamic.epochs, 6);
+        assert!(!m.priority_isl);
     }
 
     #[test]

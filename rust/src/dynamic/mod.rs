@@ -61,8 +61,9 @@ pub use events::{DynamicSpec, Event, EventKind, Timeline};
 pub const NEVER_S: f64 = 1e12;
 
 /// Warm-start backlog cap, in frames' worth of tiles; overflow is dropped
-/// and counted in `dynamic.backlog_dropped`.
-const BACKLOG_CAP_FRAMES: usize = 8;
+/// and counted in `dynamic.backlog_dropped` (shared with the mission loop's
+/// `mission.backlog_dropped`).
+pub(crate) const BACKLOG_CAP_FRAMES: usize = 8;
 
 /// Mutable view of the constellation's condition, evolved by applying
 /// timeline events at epoch boundaries.
@@ -165,16 +166,22 @@ impl HealthState {
     }
 }
 
-/// The tables currently deployed on the constellation.
-struct PlanState {
-    backend: String,
-    instances: Vec<InstanceSpec>,
-    pipelines: Vec<Pipeline>,
-    phi: Option<f64>,
+/// The tables currently deployed on the constellation.  Shared with the
+/// mission loop ([`crate::mission`]), which runs the same epoch cycle with
+/// detection-derived cue tasking layered on top.
+pub(crate) struct PlanState {
+    pub(crate) backend: String,
+    pub(crate) instances: Vec<InstanceSpec>,
+    pub(crate) pipelines: Vec<Pipeline>,
+    /// The MILP deployment the tables came from (None for the fixed
+    /// baseline frameworks) — the mission loop's per-cue routing passes
+    /// re-solve workload shares against it.
+    pub(crate) plan: Option<crate::planner::DeploymentPlan>,
+    pub(crate) phi: Option<f64>,
     /// Mask the tables were planned under.
-    mask: Vec<usize>,
+    pub(crate) mask: Vec<usize>,
     /// Burst factor the tables were planned under.
-    burst: f64,
+    pub(crate) burst: f64,
 }
 
 /// One epoch's outcome.
@@ -479,7 +486,7 @@ impl EpochOrchestrator {
 
             let invalid: Option<String> = match &current {
                 None => Some("initial deployment".to_string()),
-                Some(ps) => self.invalidation(ps, &health, &mask),
+                Some(ps) => invalidation(ps, &health, &mask, &self.wf),
             };
 
             let mut replanned = false;
@@ -491,12 +498,22 @@ impl EpochOrchestrator {
             if let Some(reason) = &invalid {
                 let initial = current.is_none();
                 if initial || self.spec.replan {
-                    match self.build_tables(&mask, health.burst) {
+                    match build_tables(
+                        self.planner.as_ref(),
+                        self.router.as_ref(),
+                        &self.wf,
+                        &self.db,
+                        &self.c,
+                        &mask,
+                        health.burst,
+                    ) {
                         Ok((built, pm, rm)) => {
                             plan_ms += pm;
                             route_ms += rm;
                             if let Some(prev) = &current {
-                                let (readies, m_bytes, m_down) = self.charge_migration(
+                                let (readies, m_bytes, m_down) = charge_migration(
+                                    &self.spec,
+                                    &self.c,
                                     &built.instances,
                                     &prev.instances,
                                     &health,
@@ -582,6 +599,7 @@ impl EpochOrchestrator {
                     deadline_s: self.spec.cue_deadline_s,
                     priority: true,
                     prefer_sat: None,
+                    pipeline: None,
                 })
                 .collect();
             cues_injected += cue_tiles;
@@ -594,6 +612,7 @@ impl EpochOrchestrator {
                 link_rate_factors: Some(health.link_factor.clone()),
                 warm_tiles: warm,
                 injections: cue_injections,
+                ..Default::default()
             };
             injected += (frames * epoch_c.tiles_per_frame + warm + cue_tiles) as f64;
 
@@ -669,8 +688,15 @@ impl EpochOrchestrator {
         // (backend, phi, pipeline count) is well-formed instead of
         // panicking.
         if current.is_none() {
-            let (built, pm, rm) =
-                self.build_tables(&health.masked_sats(), health.burst)?;
+            let (built, pm, rm) = build_tables(
+                self.planner.as_ref(),
+                self.router.as_ref(),
+                &self.wf,
+                &self.db,
+                &self.c,
+                &health.masked_sats(),
+                health.burst,
+            )?;
             plan_ms += pm;
             route_ms += rm;
             current = Some(built);
@@ -704,150 +730,153 @@ impl EpochOrchestrator {
     pub fn run_scenario_report(&self) -> Result<ScenarioReport, ScenarioError> {
         self.run().map(DynamicReport::into_scenario_report)
     }
+}
 
-    /// Why the deployed tables are no longer valid, if they aren't.
-    fn invalidation(
-        &self,
-        ps: &PlanState,
-        health: &HealthState,
-        mask: &[usize],
-    ) -> Option<String> {
-        if ps.mask.as_slice() != mask {
+/// Why deployed tables are no longer valid, if they aren't.  Shared by the
+/// dynamic epoch loop and the mission loop.
+pub(crate) fn invalidation(
+    ps: &PlanState,
+    health: &HealthState,
+    mask: &[usize],
+    wf: &Workflow,
+) -> Option<String> {
+    if ps.mask.as_slice() != mask {
+        return Some(format!(
+            "topology changed (masked sats {:?} -> {:?})",
+            ps.mask, mask
+        ));
+    }
+    for p in &ps.pipelines {
+        for l in p.adjacencies_crossed(wf) {
+            if health.link_factor.get(l).copied().unwrap_or(1.0) <= 0.0 {
+                return Some(format!("pipeline crosses dead link {l}"));
+            }
+        }
+    }
+    if let Some(phi) = ps.phi {
+        if health.burst > ps.burst && phi + 1e-9 < health.burst {
             return Some(format!(
-                "topology changed (masked sats {:?} -> {:?})",
-                ps.mask, mask
+                "burst x{} exceeds planned capacity (phi {phi:.2})",
+                health.burst
             ));
         }
-        for p in &ps.pipelines {
-            for l in p.adjacencies_crossed(&self.wf) {
-                if health.link_factor.get(l).copied().unwrap_or(1.0) <= 0.0 {
-                    return Some(format!("pipeline crosses dead link {l}"));
-                }
-            }
-        }
-        if let Some(phi) = ps.phi {
-            if health.burst > ps.burst && phi + 1e-9 < health.burst {
-                return Some(format!(
-                    "burst x{} exceeds planned capacity (phi {phi:.2})",
-                    health.burst
-                ));
-            }
-        }
-        None
     }
+    None
+}
 
-    /// Plan + route over the degraded constellation with `mask` banned.
-    fn build_tables(
-        &self,
-        mask: &[usize],
-        burst: f64,
-    ) -> Result<(PlanState, f64, f64), ScenarioError> {
-        let mut usable = vec![true; self.c.n_sats];
-        for &j in mask {
-            if j < usable.len() {
-                usable[j] = false;
-            }
+/// Plan + route over the degraded constellation with `mask` banned.
+/// Shared by the dynamic epoch loop and the mission loop.
+pub(crate) fn build_tables(
+    planner: &dyn PlannerBackend,
+    router: &dyn RouterBackend,
+    wf: &Workflow,
+    db: &ProfileDb,
+    c: &Constellation,
+    mask: &[usize],
+    burst: f64,
+) -> Result<(PlanState, f64, f64), ScenarioError> {
+    let mut usable = vec![true; c.n_sats];
+    for &j in mask {
+        if j < usable.len() {
+            usable[j] = false;
         }
-        let (eff_c, _lost) = self.c.degraded(&usable, burst);
-        let ctx = Ctx { wf: &self.wf, db: &self.db, c: &eff_c, banned: mask };
-        let t0 = Instant::now();
-        let planned = self.planner.plan(&ctx)?;
-        let plan_ms = t0.elapsed().as_secs_f64() * 1e3;
-        match planned {
-            Planned::Deployment(plan) => {
-                let t1 = Instant::now();
-                let routing = self.router.route(&ctx, &plan)?;
-                let route_ms = t1.elapsed().as_secs_f64() * 1e3;
-                let instances = sim::instances_from_plan(&plan, &eff_c);
-                Ok((
-                    PlanState {
-                        backend: format!(
-                            "{}+{}",
-                            self.planner.name(),
-                            self.router.name()
-                        ),
-                        instances,
-                        pipelines: routing.pipelines,
-                        phi: Some(plan.phi),
-                        mask: mask.to_vec(),
-                        burst,
-                    },
-                    plan_ms,
-                    route_ms,
-                ))
-            }
-            Planned::Fixed { instances, pipelines, notes: _ } => Ok((
+    }
+    let (eff_c, _lost) = c.degraded(&usable, burst);
+    let ctx = Ctx { wf, db, c: &eff_c, banned: mask };
+    let t0 = Instant::now();
+    let planned = planner.plan(&ctx)?;
+    let plan_ms = t0.elapsed().as_secs_f64() * 1e3;
+    match planned {
+        Planned::Deployment(plan) => {
+            let t1 = Instant::now();
+            let routing = router.route(&ctx, &plan)?;
+            let route_ms = t1.elapsed().as_secs_f64() * 1e3;
+            let instances = sim::instances_from_plan(&plan, &eff_c);
+            Ok((
                 PlanState {
-                    backend: self.planner.name().to_string(),
+                    backend: format!("{}+{}", planner.name(), router.name()),
                     instances,
-                    pipelines,
-                    phi: None,
+                    pipelines: routing.pipelines,
+                    phi: Some(plan.phi),
+                    plan: Some(plan),
                     mask: mask.to_vec(),
                     burst,
                 },
                 plan_ms,
-                0.0,
-            )),
+                route_ms,
+            ))
         }
-    }
-
-    /// Migration accounting for a re-plan: every new instance on a
-    /// satellite that did not already host its function ships state from
-    /// the nearest live donor (hop-by-hop at the slowest link rate on the
-    /// path) or pays the cold-deploy delay.  Returns per-instance ready
-    /// times, total ISL bytes charged, and the handover downtime (the
-    /// slowest migration).
-    fn charge_migration(
-        &self,
-        new_instances: &[InstanceSpec],
-        prev: &[InstanceSpec],
-        health: &HealthState,
-        nominal_isl: f64,
-    ) -> (Vec<(usize, f64)>, f64, f64) {
-        let mut readies = Vec::new();
-        let mut bytes_total = 0.0f64;
-        let mut max_ready = 0.0f64;
-        for (idx, inst) in new_instances.iter().enumerate() {
-            let resident =
-                prev.iter().any(|p| p.func == inst.func && p.sat == inst.sat);
-            if resident {
-                continue;
-            }
-            // A donor must be alive *and* reachable: a hard outage on the
-            // path makes the transfer impossible, so such donors fall
-            // through to the cold-deploy path instead of producing an
-            // astronomically slow "migration".
-            let donor = prev
-                .iter()
-                .filter(|p| {
-                    p.func == inst.func
-                        && health.alive.get(p.sat).copied().unwrap_or(false)
-                        && path_min_factor(&health.link_factor, p.sat, inst.sat) > 0.0
-                })
-                .min_by_key(|p| self.c.hops(p.sat, inst.sat));
-            let ready = match donor {
-                Some(d) if d.sat == inst.sat => self.spec.handover_s,
-                Some(d) => {
-                    let hops = self.c.hops(d.sat, inst.sat);
-                    let factor = path_min_factor(&health.link_factor, d.sat, inst.sat);
-                    let rate = (nominal_isl * factor).max(1e-9);
-                    bytes_total += self.spec.migration_state_bytes * hops as f64;
-                    self.spec.handover_s
-                        + self.spec.migration_state_bytes * 8.0 * hops as f64 / rate
-                }
-                None => self.spec.cold_deploy_s,
-            };
-            if ready > max_ready {
-                max_ready = ready;
-            }
-            readies.push((idx, ready));
-        }
-        (readies, bytes_total, max_ready)
+        Planned::Fixed { instances, pipelines, notes: _ } => Ok((
+            PlanState {
+                backend: planner.name().to_string(),
+                instances,
+                pipelines,
+                plan: None,
+                phi: None,
+                mask: mask.to_vec(),
+                burst,
+            },
+            plan_ms,
+            0.0,
+        )),
     }
 }
 
-/// Deterministic per-epoch simulator seed.
-fn epoch_seed(seed: u64, epoch: usize) -> u64 {
+/// Migration accounting for a re-plan: every new instance on a satellite
+/// that did not already host its function ships state from the nearest
+/// live donor (hop-by-hop at the slowest link rate on the path) or pays
+/// the cold-deploy delay.  Returns per-instance ready times, total ISL
+/// bytes charged, and the handover downtime (the slowest migration).
+/// Shared by the dynamic epoch loop and the mission loop.
+pub(crate) fn charge_migration(
+    spec: &DynamicSpec,
+    c: &Constellation,
+    new_instances: &[InstanceSpec],
+    prev: &[InstanceSpec],
+    health: &HealthState,
+    nominal_isl: f64,
+) -> (Vec<(usize, f64)>, f64, f64) {
+    let mut readies = Vec::new();
+    let mut bytes_total = 0.0f64;
+    let mut max_ready = 0.0f64;
+    for (idx, inst) in new_instances.iter().enumerate() {
+        let resident = prev.iter().any(|p| p.func == inst.func && p.sat == inst.sat);
+        if resident {
+            continue;
+        }
+        // A donor must be alive *and* reachable: a hard outage on the
+        // path makes the transfer impossible, so such donors fall
+        // through to the cold-deploy path instead of producing an
+        // astronomically slow "migration".
+        let donor = prev
+            .iter()
+            .filter(|p| {
+                p.func == inst.func
+                    && health.alive.get(p.sat).copied().unwrap_or(false)
+                    && path_min_factor(&health.link_factor, p.sat, inst.sat) > 0.0
+            })
+            .min_by_key(|p| c.hops(p.sat, inst.sat));
+        let ready = match donor {
+            Some(d) if d.sat == inst.sat => spec.handover_s,
+            Some(d) => {
+                let hops = c.hops(d.sat, inst.sat);
+                let factor = path_min_factor(&health.link_factor, d.sat, inst.sat);
+                let rate = (nominal_isl * factor).max(1e-9);
+                bytes_total += spec.migration_state_bytes * hops as f64;
+                spec.handover_s + spec.migration_state_bytes * 8.0 * hops as f64 / rate
+            }
+            None => spec.cold_deploy_s,
+        };
+        if ready > max_ready {
+            max_ready = ready;
+        }
+        readies.push((idx, ready));
+    }
+    (readies, bytes_total, max_ready)
+}
+
+/// Deterministic per-epoch simulator seed (shared with the mission loop).
+pub(crate) fn epoch_seed(seed: u64, epoch: usize) -> u64 {
     Rng::new(seed ^ (epoch as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64()
 }
 

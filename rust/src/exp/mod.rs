@@ -21,6 +21,7 @@
 //! | [`fig20_planning`] | Fig. 20 planning/routing runtime |
 //! | [`dynamic_availability`] | epoch re-planning vs ride-through (new subsystem) |
 //! | [`tipcue_response`] | tip→insight response latency vs reserve φ_cue (tip-and-cue subsystem) |
+//! | [`mission_scale`] | combined mission loop at 10–50 sats: cue latency, FIFO vs priority ISLs |
 
 use std::time::Instant;
 
@@ -753,6 +754,85 @@ pub fn tipcue_response(device_name: &str, seed: u64, frames: usize) -> Table {
             Err(e) => t.row(vec![
                 f(reserve),
                 format!("error: {e}"),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]),
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Mission: combined dynamic + tip-and-cue loop, FIFO vs priority ISLs at
+// constellation scale.
+// ---------------------------------------------------------------------------
+
+/// The combined mission loop at 10–50 satellites: cue response latency
+/// under FIFO vs two-class priority ISL queues, measured on identical
+/// per-epoch inputs (the `run_compare` overlay).  The ISL rate is pinned
+/// low enough that background transfers queue, so the discipline delta is
+/// visible (the paper's contention regime).
+pub fn mission_scale(device_name: &str, seed: u64, sats: &[usize]) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Mission: dynamic + tip-and-cue combined, FIFO vs priority ISLs \
+             ({device_name}, seed {seed}, 16 kbps ISL)"
+        ),
+        &[
+            "sats",
+            "replans",
+            "tips",
+            "admitted",
+            "completed",
+            "lat_fifo_s",
+            "lat_prio_s",
+            "delta_pct",
+            "completion",
+        ],
+    );
+    for &n in sats {
+        let spec = crate::mission::MissionSpec {
+            dynamic: crate::dynamic::DynamicSpec {
+                epochs: 6,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let s = Scenario::of(device_of(device_name))
+            .with_seed(seed)
+            .with_uniform_sats(n)
+            .with_isl_rate(16_000.0)
+            .with_mission(spec);
+        match crate::mission::MissionOrchestrator::new(&s).run_compare() {
+            Ok(rep) => {
+                let (lat_fifo, lat_prio, delta) = match rep.fifo_prio_latency_means() {
+                    Some((lf, lp)) => (
+                        f(lf),
+                        f(lp),
+                        f((lf - lp) / lf.max(1e-9) * 100.0),
+                    ),
+                    None => ("-".into(), "-".into(), "-".into()),
+                };
+                t.row(vec![
+                    n.to_string(),
+                    rep.replans.to_string(),
+                    rep.tips.to_string(),
+                    rep.admitted.to_string(),
+                    rep.completed.to_string(),
+                    lat_fifo,
+                    lat_prio,
+                    delta,
+                    f(rep.completion_ratio),
+                ]);
+            }
+            Err(e) => t.row(vec![
+                n.to_string(),
+                format!("error: {e}"),
+                "-".into(),
                 "-".into(),
                 "-".into(),
                 "-".into(),

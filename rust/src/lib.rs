@@ -40,6 +40,10 @@
 //!   converted into pass-predicted, deadline-bound cue tasks, admitted
 //!   against a reserved capacity share and injected back into the same
 //!   simulation (the first closed-loop scenario).
+//! * [`mission`] — the combined closed loop: the dynamic epoch/fault cycle
+//!   and tip-and-cue in one mission, with tips derived from the
+//!   simulator's actual detection completions, per-cue routed dedicated
+//!   pipelines, and two-class (priority) ISL queues measured against FIFO.
 //! * [`exp`] — one driver per paper figure/table (all through
 //!   [`scenario::Orchestrator`]).
 //! * [`config`] — scenario configuration & §6.1 presets.
@@ -51,6 +55,7 @@ pub mod dynamic;
 pub mod exp;
 pub mod link;
 pub mod lp;
+pub mod mission;
 pub mod orbit;
 pub mod planner;
 pub mod profile;

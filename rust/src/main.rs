@@ -9,7 +9,7 @@
 //!                       [--isl-list R1,R2]
 //!                       [--mtbf-list 300,600] [--outage-list 60,120] [--epoch-frames-list 2,4]
 //!                       [--tip-rate-list 0.2,0.5] [--cue-deadline-list 60,90]
-//!                       [--reserve-list 0.0,0.2,0.4]
+//!                       [--reserve-list 0.0,0.2,0.4] [--detection-rate-list 0.02,0.1]
 //!                       [--backends orbitchain,compute-par] [--threads N] [--json]
 //! orbitchain tipcue     [same flags] [--tip-rate R] [--cue-deadline S] [--reserve F]
 //!                       [--pass-dt S] [--min-elevation D] [--backend B] [--json]
@@ -18,7 +18,12 @@
 //!                       [--burst-mtbf S] [--burst-duration S] [--burst-factor X]
 //!                       [--area-visibility] [--state-bytes B] [--backend B]
 //!                       [--no-baseline] [--json]
-//! orbitchain experiment <fig3b|fig4b|fig7|fig8|fig11|fig12|fig13|fig14|fig15|fig17|fig18|tab1|fig20|dynamic|all>
+//! orbitchain mission    [same flags, --sats takes a comma list] [--epochs N]
+//!                       [--epoch-frames N] [--mtbf S] [--mttr S] [--link-mtbf S]
+//!                       [--link-mttr S] [--detection-rate R] [--cue-deadline S]
+//!                       [--reserve F] [--pass-dt S] [--min-elevation D]
+//!                       [--fifo] [--backend B] [--json]
+//! orbitchain experiment <fig3b|..|fig20|tab1|dynamic|tipcue|mission|all>
 //!                       [--device jetson|rpi] [--frames N] [--seed N] [--json]
 //! orbitchain infer      [--model cloud] [--tiles N] [--artifacts DIR]  # PJRT HIL
 //! orbitchain version
@@ -32,6 +37,7 @@ use std::collections::HashMap;
 use orbitchain::config::Scenario;
 use orbitchain::dynamic::EpochOrchestrator;
 use orbitchain::exp;
+use orbitchain::mission::MissionOrchestrator;
 use orbitchain::runtime::{ModelRuntime, TileGen};
 use orbitchain::scenario::{
     BackendKind, LoadSprayRouter, Orchestrator, ScenarioError, SweepGrid, SweepRunner,
@@ -117,6 +123,51 @@ fn scenario_plus(extra: &[&'static str]) -> Vec<&'static str> {
     v
 }
 
+/// Apply the epoch/fault/migration flags shared by `dynamic` and
+/// `mission` onto a [`DynamicSpec`].
+fn apply_dynamic_flags(
+    spec: &mut orbitchain::dynamic::DynamicSpec,
+    flags: &HashMap<String, String>,
+) -> anyhow::Result<()> {
+    if let Some(v) = flags.get("epochs") {
+        spec.epochs = v.parse()?;
+    }
+    if let Some(v) = flags.get("epoch-frames") {
+        spec.frames_per_epoch = v.parse::<usize>()?.max(1);
+    }
+    if let Some(v) = flags.get("mtbf") {
+        spec.sat_mtbf_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("mttr") {
+        spec.sat_mttr_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("link-mtbf") {
+        spec.link_mtbf_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("link-mttr") {
+        spec.link_mttr_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("degrade-factor") {
+        spec.degrade_factor = v.parse()?;
+    }
+    if let Some(v) = flags.get("burst-mtbf") {
+        spec.burst_mtbf_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("burst-duration") {
+        spec.burst_duration_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("burst-factor") {
+        spec.burst_factor = v.parse()?;
+    }
+    if flags.contains_key("area-visibility") {
+        spec.area_visibility = true;
+    }
+    if let Some(v) = flags.get("state-bytes") {
+        spec.migration_state_bytes = v.parse()?;
+    }
+    Ok(())
+}
+
 fn scenario_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<Scenario> {
     let mut s = match flags.get("device").map(String::as_str) {
         Some("rpi") => Scenario::rpi(),
@@ -183,6 +234,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     "tip-rate-list",
                     "cue-deadline-list",
                     "reserve-list",
+                    "detection-rate-list",
                     "backends",
                     "threads",
                     "json",
@@ -230,6 +282,34 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             ensure_known_flags("dynamic", &flags, &valid)?;
             cmd_dynamic(&flags)
         }
+        "mission" => {
+            let mut valid = scenario_plus(&[
+                "epochs",
+                "epoch-frames",
+                "mtbf",
+                "mttr",
+                "link-mtbf",
+                "link-mttr",
+                "degrade-factor",
+                "burst-mtbf",
+                "burst-duration",
+                "burst-factor",
+                "area-visibility",
+                "state-bytes",
+                "detection-rate",
+                "cue-deadline",
+                "reserve",
+                "pass-dt",
+                "min-elevation",
+                "fifo",
+                "backend",
+                "json",
+            ]);
+            // Mission length is `--epochs` x `--epoch-frames`.
+            valid.retain(|f| *f != "frames");
+            ensure_known_flags("mission", &flags, &valid)?;
+            cmd_mission(&flags)
+        }
         "experiment" => {
             ensure_known_flags("experiment", &flags, &["device", "frames", "seed", "json"])?;
             cmd_experiment(&pos, &flags)
@@ -263,8 +343,10 @@ fn print_help() {
          \x20             (re-planning vs static ride-through on one fault trace)\n\
          \x20 tipcue      closed-loop tip-and-cue: detections raise pass-predicted,\n\
          \x20             deadline-bound cue tasks admitted against a capacity reserve\n\
+         \x20 mission     the combined loop: dynamic re-planning + detection-derived\n\
+         \x20             tip-and-cue with per-cue routing, FIFO vs priority ISLs\n\
          \x20 experiment  regenerate a paper figure/table (fig3b..fig20, dynamic,\n\
-         \x20             tipcue, all)\n\
+         \x20             tipcue, mission, all)\n\
          \x20 infer       hardware-in-the-loop PJRT inference on synthetic tiles\n\
          \x20 version     print version\n\n\
          common flags:  --device jetson|rpi --workflow N --deadline S --sats N\n\
@@ -274,7 +356,7 @@ fn print_help() {
          \x20             --frames-list 5,10 --isl-list R1,R2 --mtbf-list 300,600\n\
          \x20             --outage-list 60,120 --epoch-frames-list 2,4\n\
          \x20             --tip-rate-list 0.2,0.5 --cue-deadline-list 60,90\n\
-         \x20             --reserve-list 0.0,0.2,0.4\n\
+         \x20             --reserve-list 0.0,0.2,0.4 --detection-rate-list 0.02,0.1\n\
          \x20             --backends orbitchain,load-spraying,data-par,compute-par\n\
          \x20             --threads N\n\
          dynamic flags: --epochs N --epoch-frames N --mtbf S --mttr S\n\
@@ -282,7 +364,9 @@ fn print_help() {
          \x20             --burst-mtbf S --burst-duration S --burst-factor X\n\
          \x20             --area-visibility --state-bytes B --backend B --no-baseline\n\
          tipcue flags:  --tip-rate R --cue-deadline S --reserve F --pass-dt S\n\
-         \x20             --min-elevation D --backend B"
+         \x20             --min-elevation D --backend B\n\
+         mission flags: --sats 10,25,50 --epochs N --epoch-frames N --mtbf S\n\
+         \x20             --detection-rate R --cue-deadline S --reserve F --fifo"
     );
 }
 
@@ -495,6 +579,9 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         }
         grid = grid.reserve_fracs(&fracs);
     }
+    if let Some(raw) = flags.get("detection-rate-list") {
+        grid = grid.detection_rates(&parse_list::<f64>(raw)?);
+    }
     if let Some(raw) = flags.get("backends") {
         let kinds: Vec<BackendKind> = raw
             .split(',')
@@ -506,21 +593,36 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             .collect::<anyhow::Result<_>>()?;
         grid = grid.backends(&kinds);
     }
-    // The closed tip-and-cue loop ignores the dynamic extension (ROADMAP:
-    // combining them is future work); reject the combination instead of
-    // silently dropping the fault timeline from those points.
+    // The standalone tip-and-cue loop ignores the dynamic extension — that
+    // combination is what the *mission* loop is for (--detection-rate-list,
+    // which absorbs the dynamic dimensions); reject it instead of silently
+    // dropping the fault timeline from those points.  The mission loop
+    // derives its tips from detections, so the synthetic tip-stream
+    // dimensions don't apply to it either.
     let has_dynamic_dims = ["mtbf-list", "outage-list", "epoch-frames-list"]
         .iter()
         .any(|k| flags.contains_key(*k));
     let has_tipcue_dims = ["tip-rate-list", "cue-deadline-list", "reserve-list"]
         .iter()
         .any(|k| flags.contains_key(*k));
-    if has_dynamic_dims && has_tipcue_dims {
+    let has_mission_dims = flags.contains_key("detection-rate-list");
+    if has_dynamic_dims && has_tipcue_dims && !has_mission_dims {
         anyhow::bail!(
             "dynamic dimensions (--mtbf-list/--outage-list/--epoch-frames-list) cannot \
              be combined with tip-and-cue dimensions (--tip-rate-list/--cue-deadline-list/\
              --reserve-list): tip-and-cue points run the static closed loop and would \
-             silently ignore the fault timeline"
+             silently ignore the fault timeline; use --detection-rate-list to run the \
+             combined mission loop instead"
+        );
+    }
+    // The cue-knob dimensions (--cue-deadline-list/--reserve-list) are
+    // absorbed into mission points by the grid; only the synthetic
+    // tip-rate axis is meaningless there.
+    if has_mission_dims && flags.contains_key("tip-rate-list") {
+        anyhow::bail!(
+            "--detection-rate-list (mission points derive tips from actual detection \
+             completions) cannot be combined with --tip-rate-list (the standalone \
+             loop's synthetic tip stream); the detection rate replaces it"
         );
     }
 
@@ -610,42 +712,7 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 fn cmd_dynamic(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let mut s = scenario_from_flags(flags)?;
     let mut spec = s.dynamic.clone().unwrap_or_default();
-    if let Some(v) = flags.get("epochs") {
-        spec.epochs = v.parse()?;
-    }
-    if let Some(v) = flags.get("epoch-frames") {
-        spec.frames_per_epoch = v.parse::<usize>()?.max(1);
-    }
-    if let Some(v) = flags.get("mtbf") {
-        spec.sat_mtbf_s = v.parse()?;
-    }
-    if let Some(v) = flags.get("mttr") {
-        spec.sat_mttr_s = v.parse()?;
-    }
-    if let Some(v) = flags.get("link-mtbf") {
-        spec.link_mtbf_s = v.parse()?;
-    }
-    if let Some(v) = flags.get("link-mttr") {
-        spec.link_mttr_s = v.parse()?;
-    }
-    if let Some(v) = flags.get("degrade-factor") {
-        spec.degrade_factor = v.parse()?;
-    }
-    if let Some(v) = flags.get("burst-mtbf") {
-        spec.burst_mtbf_s = v.parse()?;
-    }
-    if let Some(v) = flags.get("burst-duration") {
-        spec.burst_duration_s = v.parse()?;
-    }
-    if let Some(v) = flags.get("burst-factor") {
-        spec.burst_factor = v.parse()?;
-    }
-    if flags.contains_key("area-visibility") {
-        spec.area_visibility = true;
-    }
-    if let Some(v) = flags.get("state-bytes") {
-        spec.migration_state_bytes = v.parse()?;
-    }
+    apply_dynamic_flags(&mut spec, flags)?;
     spec.replan = true;
     s.dynamic = Some(spec.clone());
 
@@ -755,6 +822,182 @@ fn cmd_dynamic(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         dyn_rep.metrics.counter("dynamic.downtime_s"),
         dyn_rep.metrics.counter("dynamic.tiles_lost"),
         dyn_rep.metrics.counter("dynamic.backlog_final"),
+    );
+    Ok(())
+}
+
+/// The combined mission loop: dynamic epoch re-planning + detection-derived
+/// tip-and-cue with per-cue routing, run in compare mode so every epoch is
+/// also re-simulated under the opposite ISL discipline — the table reports
+/// the cue response latency under FIFO vs priority links per constellation
+/// size (`--sats` takes a comma list, e.g. `10,25,50`).
+fn cmd_mission(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    // `--sats` is a comma list here; parse it before the scenario flags.
+    let mut flags = flags.clone();
+    let sats_list: Vec<Option<usize>> = match flags.remove("sats") {
+        None => vec![None],
+        Some(raw) => raw
+            .split(',')
+            .filter(|p| !p.is_empty())
+            .map(|p| {
+                let n: usize = p
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad --sats entry {p:?}: {e}"))?;
+                if n == 0 {
+                    anyhow::bail!("--sats entries must be >= 1");
+                }
+                Ok(Some(n))
+            })
+            .collect::<anyhow::Result<_>>()?,
+    };
+    if sats_list.is_empty() {
+        anyhow::bail!("--sats list is empty");
+    }
+    let flags = &flags;
+    let base = scenario_from_flags(flags)?;
+
+    let mut spec = base.mission.clone().unwrap_or_default();
+    apply_dynamic_flags(&mut spec.dynamic, flags)?;
+    if let Some(v) = flags.get("detection-rate") {
+        spec.detection_rate = v.parse()?;
+    }
+    if let Some(v) = flags.get("cue-deadline") {
+        spec.cue_deadline_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("reserve") {
+        let reserve: f64 = v.parse()?;
+        if !(0.0..=0.9).contains(&reserve) {
+            anyhow::bail!("--reserve {reserve} out of range [0, 0.9]");
+        }
+        spec.reserve_frac = reserve;
+    }
+    if let Some(v) = flags.get("pass-dt") {
+        spec.pass_dt_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("min-elevation") {
+        spec.min_elevation_deg = v.parse()?;
+    }
+    spec.dynamic.replan = true;
+    // The primary discipline drives the closed loop; the overlay measures
+    // the opposite one on identical inputs.
+    spec.priority_isl = !flags.contains_key("fifo");
+
+    let backend = match flags.get("backend") {
+        Some(name) => BackendKind::from_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown --backend {name:?}"))?,
+        None => BackendKind::OrbitChain,
+    };
+
+    let mut reports = Vec::new();
+    for &ns in &sats_list {
+        let mut s = base.clone();
+        if let Some(n) = ns {
+            s.n_sats = n;
+            s.orbit_shift = false;
+        }
+        s.mission = Some(spec.clone());
+        let rep = MissionOrchestrator::new(&s).with_backend(backend).run_compare()?;
+        reports.push(rep);
+    }
+
+    if flags.contains_key("json") {
+        let arr: Vec<orbitchain::util::json::Json> =
+            reports.iter().map(|r| r.to_json()).collect();
+        println!("{}", orbitchain::util::json::Json::Arr(arr).to_string_pretty());
+        return Ok(());
+    }
+
+    // Per-epoch + per-cue trace for a single-constellation run.
+    if let [rep] = reports.as_slice() {
+        println!(
+            "{:<5} {:>7} {:>6} {:>10} {:>7} {:>7} {:>5} {:>5}  {}",
+            "epoch", "t0_s", "frames", "completion", "backlog", "detects", "tips", "cues", "state"
+        );
+        for e in &rep.epochs {
+            let mut state = String::new();
+            if !e.failed_sats.is_empty() {
+                state.push_str(&format!("failed{:?} ", e.failed_sats));
+            }
+            if !e.outaged_links.is_empty() {
+                state.push_str(&format!("outage{:?} ", e.outaged_links));
+            }
+            if e.replanned {
+                state.push_str("[re-planned]");
+            }
+            println!(
+                "{:<5} {:>7.0} {:>6} {:>10.3} {:>7} {:>7} {:>5} {:>5}  {}",
+                e.epoch,
+                e.t_start_s,
+                e.frames,
+                e.completion_ratio,
+                e.backlog,
+                e.detections,
+                e.tips,
+                e.cues_injected,
+                state
+            );
+        }
+        for cue in &rep.cues {
+            println!(
+                "  cue {:>2} detected {:>6.1}s sat {} -> {} (deadline {:.1}s{})",
+                cue.tip.id,
+                cue.tip.t_s,
+                cue.sat.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+                cue.status.name(),
+                cue.deadline_s,
+                cue.finished_s
+                    .map(|t| format!(", done {t:.1}s"))
+                    .unwrap_or_default()
+            );
+        }
+    }
+
+    println!(
+        "{:>5} {:>8} {:>5} {:>6} {:>5} {:>5} {:>11} {:>11} {:>7} {:>11}",
+        "sats",
+        "replans",
+        "tips",
+        "admit",
+        "done",
+        "miss",
+        "lat_fifo_s",
+        "lat_prio_s",
+        "delta%",
+        "completion"
+    );
+    for (i, rep) in reports.iter().enumerate() {
+        let (lat_fifo, lat_prio, delta) = match rep.fifo_prio_latency_means() {
+            Some((f, p)) => (
+                format!("{f:.2}"),
+                format!("{p:.2}"),
+                format!("{:.1}", (f - p) / f.max(1e-9) * 100.0),
+            ),
+            None => ("-".into(), "-".into(), "-".into()),
+        };
+        println!(
+            "{:>5} {:>8} {:>5} {:>6} {:>5} {:>5} {:>11} {:>11} {:>7} {:>11.3}",
+            sats_list[i].unwrap_or(base.n_sats),
+            rep.replans,
+            rep.tips,
+            rep.admitted,
+            rep.completed,
+            rep.missed + rep.expired,
+            lat_fifo,
+            lat_prio,
+            delta,
+            rep.completion_ratio
+        );
+        for note in &rep.notes {
+            if !note.starts_with("epoch") {
+                println!("note: {note}");
+            }
+        }
+    }
+    println!(
+        "mission.cue_latency: prio jumps two-class ISL queues; fifo is the same \
+         mission re-simulated per epoch with FIFO links (identical tables, \
+         backlog and cues)"
     );
     Ok(())
 }
@@ -943,6 +1186,14 @@ fn cmd_experiment(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Re
             .transpose()?
             .unwrap_or(7);
         tables.push(exp::tipcue_response(device, seed, frames));
+    }
+    if all || which == "mission" {
+        let seed: u64 = flags
+            .get("seed")
+            .map(|v| v.parse())
+            .transpose()?
+            .unwrap_or(7);
+        tables.push(exp::mission_scale(device, seed, &[10, 25, 50]));
     }
     if tables.is_empty() {
         anyhow::bail!("unknown experiment {which:?}");

@@ -1,0 +1,1390 @@
+//! Mission runner: the closed loop that runs dynamic re-planning and
+//! tip-and-cue **together** (the combination the paper's headline numbers
+//! come from — event-driven tasking contending with background analytics
+//! on shared compute and shared ISLs).
+//!
+//! One [`MissionOrchestrator`] epoch does, in order:
+//!
+//! 1. **Events.**  The dynamic [`Timeline`] (payload faults, link
+//!    outages, bursts, visibility windows) is applied to a
+//!    [`HealthState`] at the epoch boundary, exactly like the
+//!    [`EpochOrchestrator`](crate::dynamic::EpochOrchestrator).
+//! 2. **Re-plan.**  Invalid tables are rebuilt through the configured
+//!    [`PlannerBackend`]/[`RouterBackend`] pair — by default
+//!    [`ReservedMilpPlanner`], so a φ_cue slack share is provisioned on
+//!    top of the background workload — with migration/handover charged via
+//!    the shared accounting of the dynamic layer.
+//! 3. **Cue injection with per-cue routing.**  Cues admitted at earlier
+//!    boundaries whose predicted pass falls in this epoch are injected.
+//!    Each cue gets a **dedicated pipeline**: a [`RouterBackend`] pass
+//!    re-solves workload shares over the current deployment with the cue
+//!    tile as its own single-tile capture group ([`CUE_PIPELINE_GROUP`]),
+//!    and the injection is pinned to that pipeline
+//!    ([`sim::TileInjection::pipeline`]) instead of piggybacking on a
+//!    background pipeline.
+//! 4. **Simulate.**  The epoch runs in the shared discrete-event
+//!    simulator with the per-epoch health tables, the warm-start backlog,
+//!    and — when [`MissionSpec::priority_isl`] is set — two-class ISL
+//!    queues in which cue messages overtake queued background transfers.
+//!    Thinning runs in the order-independent stable mode so the FIFO and
+//!    priority disciplines face the same background workload.
+//! 5. **Detections → tips.**  The simulator's in-loop detection hook
+//!    ([`sim::SimConfig::detect_func`]) records every completion of the
+//!    detector function; a seeded per-tile Bernoulli promotes a
+//!    `detection_rate` fraction of them to tips (replacing the synthetic
+//!    marked point process of the standalone tip-and-cue loop).  At the
+//!    first boundary after its detection each tip is pass-predicted
+//!    (earliest acquisition of signal across the chain's delayed orbits)
+//!    and admitted against the reserve's token bucket.
+//!
+//! The headline metric is the cue response latency under each link
+//! discipline — `mission.cue_latency_prio` vs `mission.cue_latency_fifo`
+//! (tip detection → last cue sink, per completed cue); the `mission`
+//! CLI subcommand runs both disciplines on the identical mission and
+//! prints the delta, at 10–50 satellites via `--sats 10,25,50`.
+
+use std::collections::BTreeSet;
+use std::time::Instant;
+
+use crate::config::Scenario;
+use crate::constellation::{CaptureGroup, Constellation};
+use crate::dynamic::{
+    build_tables, charge_migration, epoch_seed, invalidation, DynamicSpec, HealthState,
+    PlanState, Timeline, BACKLOG_CAP_FRAMES, NEVER_S,
+};
+use crate::orbit::visibility;
+use crate::orbit::{GroundStation, LatLon};
+use crate::planner::DeploymentPlan;
+use crate::profile::ProfileDb;
+use crate::routing::Pipeline;
+use crate::scenario::{
+    BackendKind, Ctx, LoadSprayRouter, OrbitChainRouter, PlannerBackend,
+    ReservedMilpPlanner, RouterBackend, ScenarioError, ScenarioReport,
+};
+use crate::sim::{self, InstanceSpec, SimConfig, Simulator};
+use crate::telemetry::Metrics;
+use crate::tipcue::{group_tile_for_sat, CueRecord, CueStatus, Tip};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::workflow::Workflow;
+
+/// Seed mixing constant for tip promotion/geolocation (keeps the stream
+/// independent of the timeline, thinning and tipcue streams for equal
+/// seeds).
+const MISSION_SALT: u64 = 0x3A9D_5E01_BEEF_CAFE;
+
+/// Sentinel `Pipeline::group` for cue-dedicated pipelines: the simulator's
+/// per-group tables match real group indices by equality, so a sentinel
+/// pipeline never serves background tiles — only the injection pinned to
+/// it.
+pub const CUE_PIPELINE_GROUP: usize = usize::MAX;
+
+/// Mission parameters: the dynamic epoch/fault spec plus the
+/// detection-driven cue tasking knobs.  Stored as the `mission` extension
+/// of a [`Scenario`]; JSON-round-trippable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MissionSpec {
+    /// Epoch granularity, fault processes, migration accounting and the
+    /// re-planning policy switch.  `cue_mtbt_s` is ignored here: the
+    /// mission derives cues from actual detections, not a synthetic
+    /// arrival process.
+    pub dynamic: DynamicSpec,
+    /// Probability that one completed detector tile raises a tip
+    /// (seeded per-tile Bernoulli over the in-loop detection stream).
+    pub detection_rate: f64,
+    /// Detector function index (`None` = the workflow's last function).
+    pub detect_func: Option<usize>,
+    /// Cue completion deadline relative to the tasking boundary, seconds —
+    /// also the pass-prediction search horizon.
+    pub cue_deadline_s: f64,
+    /// Multi-tenant slack fraction φ_cue ∈ [0, 0.9] the planner reserves
+    /// on top of the background workload; fills the admission bucket.
+    pub reserve_frac: f64,
+    /// Pass-prediction step, seconds.
+    pub pass_dt_s: f64,
+    /// Elevation mask for the cue sensor over the tip target, degrees.
+    pub min_elevation_deg: f64,
+    /// Admitted cues jump instance queues and bypass thinning.
+    pub cue_priority: bool,
+    /// Two-class ISL queues: cue messages overtake queued background
+    /// transfers (the `mission.cue_latency_prio` discipline).  Off, cue
+    /// messages wait FIFO behind background traffic
+    /// (`mission.cue_latency_fifo`).
+    pub priority_isl: bool,
+}
+
+impl Default for MissionSpec {
+    fn default() -> Self {
+        MissionSpec {
+            dynamic: DynamicSpec::default(),
+            detection_rate: 0.02,
+            detect_func: None,
+            cue_deadline_s: 90.0,
+            reserve_frac: 0.2,
+            pass_dt_s: 1.0,
+            min_elevation_deg: 30.0,
+            cue_priority: true,
+            priority_isl: true,
+        }
+    }
+}
+
+impl MissionSpec {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("dynamic", self.dynamic.to_json()),
+            ("detection_rate", Json::Num(self.detection_rate)),
+            (
+                "detect_func",
+                self.detect_func.map(Json::from).unwrap_or(Json::Null),
+            ),
+            ("cue_deadline_s", Json::Num(self.cue_deadline_s)),
+            ("reserve_frac", Json::Num(self.reserve_frac)),
+            ("pass_dt_s", Json::Num(self.pass_dt_s)),
+            ("min_elevation_deg", Json::Num(self.min_elevation_deg)),
+            ("cue_priority", Json::from(self.cue_priority)),
+            ("priority_isl", Json::from(self.priority_isl)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Self {
+        let d = MissionSpec::default();
+        let num = |k: &str, dv: f64| j.get(k).and_then(Json::as_f64).unwrap_or(dv);
+        let b = |k: &str, dv: bool| j.get(k).and_then(Json::as_bool).unwrap_or(dv);
+        MissionSpec {
+            dynamic: match j.get("dynamic") {
+                Some(Json::Null) | None => d.dynamic,
+                Some(dj) => DynamicSpec::from_json(dj),
+            },
+            detection_rate: num("detection_rate", d.detection_rate),
+            detect_func: j.get("detect_func").and_then(Json::as_usize),
+            cue_deadline_s: num("cue_deadline_s", d.cue_deadline_s),
+            reserve_frac: num("reserve_frac", d.reserve_frac),
+            pass_dt_s: num("pass_dt_s", d.pass_dt_s),
+            min_elevation_deg: num("min_elevation_deg", d.min_elevation_deg),
+            cue_priority: b("cue_priority", d.cue_priority),
+            priority_isl: b("priority_isl", d.priority_isl),
+        }
+    }
+}
+
+/// One mission epoch's outcome.
+#[derive(Debug, Clone)]
+pub struct MissionEpoch {
+    pub epoch: usize,
+    pub t_start_s: f64,
+    /// Whether tables were rebuilt at this boundary (the initial build in
+    /// epoch 0 does not count as a re-plan).
+    pub replanned: bool,
+    pub reason: Option<String>,
+    pub completion_ratio: f64,
+    pub frames: usize,
+    pub backlog: usize,
+    pub migrations: usize,
+    /// Detector completions recorded this epoch (pre-promotion).
+    pub detections: usize,
+    /// Tips promoted from this epoch's detections.
+    pub tips: usize,
+    /// Cues injected into this epoch's simulation.
+    pub cues_injected: usize,
+    pub failed_sats: Vec<usize>,
+    pub outaged_links: Vec<usize>,
+    pub burst: f64,
+    pub area_visible: bool,
+}
+
+/// Outcome of the opposite ISL discipline measured over the *identical*
+/// per-epoch inputs (same tables, same warm backlog, same cue
+/// injections), produced by [`MissionOrchestrator::run_compare`].  Because
+/// the closed-loop state evolves under the primary discipline only, every
+/// per-cue difference against the primary run is attributable purely to
+/// the ISL queue discipline.
+#[derive(Debug, Clone)]
+pub struct AltDiscipline {
+    /// The alternate discipline (always the negation of the report's
+    /// `priority_isl`).
+    pub priority_isl: bool,
+    pub completed: usize,
+    pub missed: usize,
+    /// Per-cue completion times, aligned with [`MissionReport::cues`]
+    /// (None: not injected, or unfinished under this discipline).
+    pub finished_s: Vec<Option<f64>>,
+    /// Detection→insight latencies of cues completed under this
+    /// discipline.
+    pub response_latency_s: Vec<f64>,
+}
+
+/// Aggregate outcome of one closed-loop mission.
+#[derive(Debug, Clone)]
+pub struct MissionReport {
+    pub label: String,
+    pub backend: String,
+    /// Which ISL discipline this mission ran under.
+    pub priority_isl: bool,
+    /// Background capacity ratio φ net of the reserve (MILP path only).
+    pub phi: Option<f64>,
+    pub reserve_frac: f64,
+    pub epochs: Vec<MissionEpoch>,
+    /// Detector completions over the whole mission (pre-promotion).
+    pub detections: usize,
+    /// Tips promoted from detections (including unserviced ones).
+    pub tips: usize,
+    /// Tips whose detection landed too late for any tasking boundary.
+    pub tips_unserviced: usize,
+    /// Scheduled cues, in tasking order.
+    pub cues: Vec<CueRecord>,
+    pub admitted: usize,
+    pub rejected_no_pass: usize,
+    pub rejected_capacity: usize,
+    pub completed: usize,
+    /// Injected but not finished by the deadline.
+    pub missed: usize,
+    /// Admitted but never injected: the predicted pass fell beyond the
+    /// mission horizon.  Counted separately from `missed`.
+    pub expired: usize,
+    /// Cues that rode a dedicated per-cue routed pipeline (vs the
+    /// prefer-satellite fallback for fixed-deployment backends).
+    pub per_cue_routed: usize,
+    /// Detection→insight latencies of the completed cues, seconds.
+    pub response_latency_s: Vec<f64>,
+    /// Mission-wide completion ratio (background + cue workload).
+    pub completion_ratio: f64,
+    pub replans: usize,
+    pub replan_failures: usize,
+    pub migrations: usize,
+    pub migration_bytes: f64,
+    pub downtime_s: f64,
+    pub tiles_lost: f64,
+    pub final_backlog: usize,
+    pub frame_latency_s: f64,
+    pub breakdown: (f64, f64, f64),
+    pub n_pipelines: usize,
+    pub plan_ms: f64,
+    pub route_ms: f64,
+    pub sim_ms: f64,
+    /// The opposite ISL discipline measured on identical epoch inputs
+    /// ([`MissionOrchestrator::run_compare`] only).
+    pub alt: Option<AltDiscipline>,
+    pub notes: Vec<String>,
+    pub metrics: Metrics,
+}
+
+impl MissionReport {
+    /// Mean detection→insight latency of completed cues.
+    pub fn mean_latency_s(&self) -> Option<f64> {
+        if self.response_latency_s.is_empty() {
+            None
+        } else {
+            Some(stats::mean(&self.response_latency_s))
+        }
+    }
+
+    /// Paired per-cue latencies `(primary, alternate)` over the cues that
+    /// completed under *both* disciplines — the population the
+    /// FIFO-vs-priority comparison is valid on.  None without
+    /// [`MissionOrchestrator::run_compare`].
+    pub fn paired_latencies(&self) -> Option<(Vec<f64>, Vec<f64>)> {
+        let alt = self.alt.as_ref()?;
+        let mut primary = Vec::new();
+        let mut other = Vec::new();
+        for (i, cue) in self.cues.iter().enumerate() {
+            let (Some(tp), Some(ta)) = (
+                cue.finished_s.filter(|_| cue.status == CueStatus::Completed),
+                alt.finished_s.get(i).copied().flatten(),
+            ) else {
+                continue;
+            };
+            if ta > cue.deadline_s + 1e-9 {
+                continue;
+            }
+            primary.push(tp - cue.tip.t_s);
+            other.push(ta - cue.tip.t_s);
+        }
+        Some((primary, other))
+    }
+
+    /// Mean cue latency under (FIFO, priority) links over the paired
+    /// population; None when no cue completed under both disciplines.
+    pub fn fifo_prio_latency_means(&self) -> Option<(f64, f64)> {
+        let (primary, other) = self.paired_latencies()?;
+        if primary.is_empty() {
+            return None;
+        }
+        let (p, o) = (stats::mean(&primary), stats::mean(&other));
+        if self.priority_isl {
+            Some((o, p))
+        } else {
+            Some((p, o))
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let epochs = self
+            .epochs
+            .iter()
+            .map(|e| {
+                obj(vec![
+                    ("epoch", Json::from(e.epoch)),
+                    ("t_start_s", Json::Num(e.t_start_s)),
+                    ("replanned", Json::from(e.replanned)),
+                    (
+                        "reason",
+                        e.reason.clone().map(Json::Str).unwrap_or(Json::Null),
+                    ),
+                    ("completion_ratio", Json::Num(e.completion_ratio)),
+                    ("frames", Json::from(e.frames)),
+                    ("backlog", Json::from(e.backlog)),
+                    ("migrations", Json::from(e.migrations)),
+                    ("detections", Json::from(e.detections)),
+                    ("tips", Json::from(e.tips)),
+                    ("cues_injected", Json::from(e.cues_injected)),
+                    ("burst", Json::Num(e.burst)),
+                    ("area_visible", Json::from(e.area_visible)),
+                ])
+            })
+            .collect();
+        let cues = self
+            .cues
+            .iter()
+            .map(|cue| {
+                obj(vec![
+                    ("tip", Json::from(cue.tip.id)),
+                    ("detected_s", Json::Num(cue.tip.t_s)),
+                    ("target_lat", Json::Num(cue.tip.target.lat_deg)),
+                    ("target_lon", Json::Num(cue.tip.target.lon_deg)),
+                    ("sat", cue.sat.map(Json::from).unwrap_or(Json::Null)),
+                    (
+                        "injected_t_s",
+                        cue.injected_t_s.map(Json::Num).unwrap_or(Json::Null),
+                    ),
+                    ("deadline_s", Json::Num(cue.deadline_s)),
+                    (
+                        "finished_s",
+                        cue.finished_s.map(Json::Num).unwrap_or(Json::Null),
+                    ),
+                    ("status", Json::from(cue.status.name())),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("label", Json::from(self.label.clone())),
+            ("backend", Json::from(self.backend.clone())),
+            ("priority_isl", Json::from(self.priority_isl)),
+            ("phi", self.phi.map(Json::Num).unwrap_or(Json::Null)),
+            ("reserve_frac", Json::Num(self.reserve_frac)),
+            ("detections", Json::from(self.detections)),
+            ("tips", Json::from(self.tips)),
+            ("tips_unserviced", Json::from(self.tips_unserviced)),
+            ("admitted", Json::from(self.admitted)),
+            ("rejected_no_pass", Json::from(self.rejected_no_pass)),
+            ("rejected_capacity", Json::from(self.rejected_capacity)),
+            ("completed", Json::from(self.completed)),
+            ("missed", Json::from(self.missed)),
+            ("expired", Json::from(self.expired)),
+            ("per_cue_routed", Json::from(self.per_cue_routed)),
+            (
+                "response_latency_mean_s",
+                self.mean_latency_s().map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "alt",
+                match &self.alt {
+                    None => Json::Null,
+                    Some(a) => obj(vec![
+                        ("priority_isl", Json::from(a.priority_isl)),
+                        ("completed", Json::from(a.completed)),
+                        ("missed", Json::from(a.missed)),
+                        (
+                            "response_latency_mean_s",
+                            if a.response_latency_s.is_empty() {
+                                Json::Null
+                            } else {
+                                Json::Num(stats::mean(&a.response_latency_s))
+                            },
+                        ),
+                    ]),
+                },
+            ),
+            ("completion_ratio", Json::Num(self.completion_ratio)),
+            ("replans", Json::from(self.replans)),
+            ("migration_bytes", Json::Num(self.migration_bytes)),
+            ("downtime_s", Json::Num(self.downtime_s)),
+            ("frame_latency_s", Json::Num(self.frame_latency_s)),
+            ("epochs", Json::Arr(epochs)),
+            ("cues", Json::Arr(cues)),
+            ("metrics", self.metrics.to_json()),
+        ])
+    }
+
+    /// Collapse into the scenario layer's report shape so mission points
+    /// ride the same sweep / JSON machinery as static, dynamic and tipcue
+    /// ones (the `mission.*` counters travel in `metrics`).
+    pub fn into_scenario_report(self) -> ScenarioReport {
+        let unrouted = self.metrics.counter("tiles.unrouted");
+        let received = self.metrics.counter("mission.tiles_injected");
+        let frames = self.metrics.counter("mission.frames").max(1.0);
+        let isl = self.metrics.counter("isl.bytes");
+        ScenarioReport {
+            label: self.label,
+            backend: format!("mission+{}", self.backend),
+            phi: self.phi,
+            feasible: self.phi.map(|p| p >= 1.0 - 1e-6),
+            n_pipelines: self.n_pipelines,
+            routed_tiles: (received - unrouted).max(0.0),
+            unrouted_tiles: unrouted,
+            routed_isl_bytes_per_frame: isl / frames,
+            completion_ratio: self.completion_ratio,
+            isl_bytes_per_frame: isl / frames,
+            frame_latency_s: self.frame_latency_s,
+            breakdown: self.breakdown,
+            plan_ms: self.plan_ms,
+            route_ms: self.route_ms,
+            sim_ms: self.sim_ms,
+            notes: self.notes,
+            metrics: self.metrics,
+        }
+    }
+}
+
+/// An admitted cue waiting for the epoch containing its predicted pass.
+#[derive(Debug, Clone, Copy)]
+struct PendingCue {
+    /// Index into the report's cue records.
+    cue: usize,
+    sat: usize,
+    aos_abs_s: f64,
+    deadline_abs_s: f64,
+    tile_no: usize,
+}
+
+/// The combined closed-loop orchestrator; see the module docs.
+pub struct MissionOrchestrator {
+    label: String,
+    spec: MissionSpec,
+    wf: Workflow,
+    db: ProfileDb,
+    c: Constellation,
+    seed: u64,
+    isl_rate_bps: Option<f64>,
+    kind: BackendKind,
+    timeline: Timeline,
+}
+
+impl MissionOrchestrator {
+    /// Orchestrate a [`Scenario`] (its `mission` extension supplies the
+    /// spec; absent, the defaults apply).  The event timeline is generated
+    /// from the scenario seed; override it with [`Self::with_timeline`] to
+    /// replay a declared fault trace.
+    pub fn new(scenario: &Scenario) -> Self {
+        let spec = scenario.mission.clone().unwrap_or_default();
+        let (wf, db, c) = scenario.build();
+        let timeline = Timeline::generate(
+            &spec.dynamic,
+            &c,
+            spec.dynamic.horizon_s(c.frame_deadline_s),
+            scenario.seed,
+        );
+        MissionOrchestrator {
+            label: scenario.name.clone(),
+            spec,
+            wf,
+            db,
+            c,
+            seed: scenario.seed,
+            isl_rate_bps: scenario.isl_rate_bps,
+            kind: BackendKind::OrbitChain,
+            timeline,
+        }
+    }
+
+    /// Replace the spec (regenerates the timeline; apply before
+    /// [`Self::with_timeline`]).
+    pub fn with_spec(mut self, spec: MissionSpec) -> Self {
+        self.timeline = Timeline::generate(
+            &spec.dynamic,
+            &self.c,
+            spec.dynamic.horizon_s(self.c.frame_deadline_s),
+            self.seed,
+        );
+        self.spec = spec;
+        self
+    }
+
+    /// Toggle the ISL queue discipline without touching the fault trace or
+    /// any other knob — the FIFO-vs-priority comparison switch.
+    pub fn with_priority_isl(mut self, on: bool) -> Self {
+        self.spec.priority_isl = on;
+        self
+    }
+
+    /// Replay a declared fault trace instead of the generated one.
+    pub fn with_timeline(mut self, timeline: Timeline) -> Self {
+        self.timeline = timeline;
+        self
+    }
+
+    /// Select the underlying planner/router combination.  The MILP paths
+    /// plan through [`ReservedMilpPlanner`]; the fixed-deployment baselines
+    /// cannot reserve or route per cue (their cues fall back to the
+    /// prefer-satellite injection path).
+    pub fn with_backend(mut self, kind: BackendKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    pub fn spec(&self) -> &MissionSpec {
+        &self.spec
+    }
+
+    pub fn timeline(&self) -> &Timeline {
+        &self.timeline
+    }
+
+    pub fn constellation(&self) -> &Constellation {
+        &self.c
+    }
+
+    /// Run the mission; see the module docs for the epoch loop.
+    pub fn run(&self) -> Result<MissionReport, ScenarioError> {
+        self.run_inner(false)
+    }
+
+    /// [`Self::run`], additionally re-simulating every epoch under the
+    /// *opposite* ISL discipline on identical inputs (same tables, warm
+    /// backlog and cue injections — the closed loop itself evolves under
+    /// the primary discipline).  The report's `alt` field and the second
+    /// `mission.cue_latency_{fifo,prio}` distribution carry the overlay,
+    /// so the latency delta is attributable purely to the queue
+    /// discipline.
+    pub fn run_compare(&self) -> Result<MissionReport, ScenarioError> {
+        self.run_inner(true)
+    }
+
+    fn run_inner(&self, compare: bool) -> Result<MissionReport, ScenarioError> {
+        let df = self.c.frame_deadline_s;
+        let epoch_s = self.spec.dynamic.epoch_s(df);
+        let n_epochs = self.spec.dynamic.epochs;
+        let mission_end = n_epochs as f64 * epoch_s;
+        let nominal_isl = self.isl_rate_bps.unwrap_or_else(|| self.c.isl_rate_bps());
+        let reserve = self.spec.reserve_frac.clamp(0.0, 0.9);
+        let budget_rate = reserve / (1.0 - reserve) * self.c.tiles_per_frame as f64 / df;
+        let detect_func = self
+            .spec
+            .detect_func
+            .unwrap_or_else(|| self.wf.len().saturating_sub(1))
+            .min(self.wf.len().saturating_sub(1));
+        let (planner, router): (Box<dyn PlannerBackend>, Box<dyn RouterBackend>) =
+            match self.kind {
+                BackendKind::OrbitChain => (
+                    Box::new(ReservedMilpPlanner { reserve }) as Box<dyn PlannerBackend>,
+                    Box::new(OrbitChainRouter) as Box<dyn RouterBackend>,
+                ),
+                BackendKind::LoadSpray => (
+                    Box::new(ReservedMilpPlanner { reserve }) as Box<dyn PlannerBackend>,
+                    Box::new(LoadSprayRouter) as Box<dyn RouterBackend>,
+                ),
+                other => (other.planner(), other.router()),
+            };
+
+        let mut health = HealthState::healthy(self.c.n_sats);
+        health.area_visible = self.timeline.initial_area_visible;
+        let mut ev_idx = 0usize;
+        let mut current: Option<PlanState> = None;
+
+        let mut merged = Metrics::new();
+        let m_epoch_completion = merged.id("mission.epoch_completion");
+        let (primary_key, alt_key) = if self.spec.priority_isl {
+            ("mission.cue_latency_prio", "mission.cue_latency_fifo")
+        } else {
+            ("mission.cue_latency_fifo", "mission.cue_latency_prio")
+        };
+        let m_latency = merged.id(primary_key);
+        let m_alt_latency = merged.id(alt_key);
+
+        let mut epoch_reports = Vec::with_capacity(n_epochs);
+        let mut notes: Vec<String> = Vec::new();
+        if self.spec.dynamic.cue_mtbt_s > 0.0 {
+            notes.push(
+                "mission derives cues from detections; DynamicSpec.cue_mtbt_s ignored"
+                    .to_string(),
+            );
+        }
+        let mut cues: Vec<CueRecord> = Vec::new();
+        let mut pending: Vec<PendingCue> = Vec::new();
+        let mut latencies: Vec<f64> = Vec::new();
+        let mut detections_total = 0usize;
+        let mut tips_total = 0usize;
+        let mut tips_unserviced = 0usize;
+        let mut admitted = 0usize;
+        let mut rejected_no_pass = 0usize;
+        let mut rejected_capacity = 0usize;
+        let mut completed = 0usize;
+        let mut missed = 0usize;
+        let mut per_cue_routed = 0usize;
+        // Opposite-discipline overlay (`run_compare`): (cue index,
+        // completion time, met-deadline) per injected cue.
+        let mut alt_outcomes: Vec<(usize, Option<f64>, bool)> = Vec::new();
+        let mut alt_latencies: Vec<f64> = Vec::new();
+        let mut backlog = 0usize;
+        let mut replans = 0usize;
+        let mut replan_failures = 0usize;
+        let mut migrations = 0usize;
+        let mut migration_bytes = 0.0f64;
+        let mut downtime_s = 0.0f64;
+        let mut tiles_lost = 0.0f64;
+        let mut dropped_backlog = 0usize;
+        let mut injected = 0.0f64;
+        let mut total_frames = 0usize;
+        let mut plan_ms = 0.0f64;
+        let mut route_ms = 0.0f64;
+        let mut sim_ms = 0.0f64;
+        let mut worst_latency = 0.0f64;
+        let mut worst_breakdown = (0.0, 0.0, 0.0);
+
+        for e in 0..n_epochs {
+            let t0 = e as f64 * epoch_s;
+            // Events during epoch `e-1` take effect at this boundary
+            // (CueArrival rows are inert here: mission cues come from the
+            // detection stream below).
+            while ev_idx < self.timeline.events.len()
+                && self.timeline.events[ev_idx].t_s <= t0
+            {
+                health.apply(&self.timeline.events[ev_idx], self.spec.dynamic.degrade_factor);
+                ev_idx += 1;
+            }
+            let mask = health.masked_sats();
+
+            let invalid: Option<String> = match &current {
+                None => Some("initial deployment".to_string()),
+                Some(ps) => invalidation(ps, &health, &mask, &self.wf),
+            };
+
+            let mut replanned = false;
+            let mut epoch_migrations = 0usize;
+            let mut migration_ready: Vec<(usize, f64)> = Vec::new();
+
+            if let Some(reason) = &invalid {
+                let initial = current.is_none();
+                if initial || self.spec.dynamic.replan {
+                    match build_tables(
+                        planner.as_ref(),
+                        router.as_ref(),
+                        &self.wf,
+                        &self.db,
+                        &self.c,
+                        &mask,
+                        health.burst,
+                    ) {
+                        Ok((built, pm, rm)) => {
+                            plan_ms += pm;
+                            route_ms += rm;
+                            if let Some(prev) = &current {
+                                let (readies, m_bytes, m_down) = charge_migration(
+                                    &self.spec.dynamic,
+                                    &self.c,
+                                    &built.instances,
+                                    &prev.instances,
+                                    &health,
+                                    nominal_isl,
+                                );
+                                epoch_migrations = readies.len();
+                                migrations += epoch_migrations;
+                                migration_bytes += m_bytes;
+                                downtime_s += m_down;
+                                migration_ready = readies;
+                                replans += 1;
+                                replanned = true;
+                                notes.push(format!("epoch {e}: re-planned ({reason})"));
+                            }
+                            current = Some(built);
+                        }
+                        Err(err) => {
+                            if initial {
+                                return Err(err);
+                            }
+                            replan_failures += 1;
+                            notes.push(format!(
+                                "epoch {e}: re-plan failed ({err}); riding through"
+                            ));
+                        }
+                    }
+                }
+            }
+
+            let state = current.as_ref().expect("tables exist after initial plan");
+            let (epoch_c, lost_per_frame) = self.c.degraded(&health.alive, health.burst);
+            let frames = if health.area_visible {
+                self.spec.dynamic.frames_per_epoch
+            } else {
+                0
+            };
+            tiles_lost += (lost_per_frame * frames) as f64;
+            total_frames += frames;
+
+            // Availability overlay: stranded instances never serve this
+            // epoch; freshly migrated ones serve once handover completes.
+            let mut instances: Vec<InstanceSpec> = state
+                .instances
+                .iter()
+                .map(|inst| {
+                    let mut i2 = inst.clone();
+                    if !health.alive.get(inst.sat).copied().unwrap_or(true) {
+                        i2.ready_s = NEVER_S;
+                    }
+                    i2
+                })
+                .collect();
+            for &(idx, ready) in &migration_ready {
+                if let Some(i2) = instances.get_mut(idx) {
+                    i2.ready_s = i2.ready_s.max(ready);
+                }
+            }
+
+            let (warm, dropped) = if epoch_c.tiles_per_frame == 0 {
+                (0usize, 0usize)
+            } else {
+                let cap = BACKLOG_CAP_FRAMES * epoch_c.tiles_per_frame;
+                (backlog.min(cap), backlog.saturating_sub(cap))
+            };
+            dropped_backlog += dropped;
+
+            // Cues whose predicted pass falls in this epoch: give each a
+            // dedicated per-cue routed pipeline and pin its injection.
+            let epoch_end = t0 + epoch_s;
+            let (due, rest): (Vec<PendingCue>, Vec<PendingCue>) =
+                pending.drain(..).partition(|p| p.aos_abs_s < epoch_end);
+            pending = rest;
+            let mut cue_pipelines: Vec<Pipeline> = Vec::new();
+            let mut injections: Vec<sim::TileInjection> = Vec::new();
+            let mut inj_cues: Vec<usize> = Vec::new();
+            for p in &due {
+                let dedicated = state.plan.as_ref().and_then(|plan| {
+                    route_cue(
+                        router.as_ref(),
+                        &self.wf,
+                        &self.db,
+                        &self.c,
+                        plan,
+                        &mask,
+                        p.sat,
+                    )
+                });
+                // Pinned indices are laid out after the background table.
+                let pinned = dedicated.map(|pipe| {
+                    cue_pipelines.push(pipe);
+                    state.pipelines.len() + cue_pipelines.len() - 1
+                });
+                if pinned.is_some() {
+                    per_cue_routed += 1;
+                }
+                injections.push(sim::TileInjection {
+                    t_s: (p.aos_abs_s - t0).max(0.0),
+                    tile_no: p.tile_no,
+                    deadline_s: p.deadline_abs_s - t0,
+                    priority: self.spec.cue_priority,
+                    prefer_sat: Some(p.sat),
+                    pipeline: pinned,
+                });
+                inj_cues.push(p.cue);
+                cues[p.cue].injected_t_s = Some(p.aos_abs_s.max(t0));
+            }
+            let cues_injected = injections.len();
+            // Most epochs inject no cues: borrow the background table
+            // as-is instead of cloning it per epoch.
+            let extended: Vec<Pipeline>;
+            let pipelines: &[Pipeline] = if cue_pipelines.is_empty() {
+                &state.pipelines
+            } else {
+                extended = state
+                    .pipelines
+                    .iter()
+                    .cloned()
+                    .chain(cue_pipelines)
+                    .collect();
+                &extended
+            };
+
+            let cfg = SimConfig {
+                frames,
+                drain_s: if frames == 0 { epoch_s } else { 0.0 },
+                seed: epoch_seed(self.seed, e),
+                isl_rate_bps: self.isl_rate_bps,
+                link_rate_factors: Some(health.link_factor.clone()),
+                warm_tiles: warm,
+                injections,
+                detect_func: Some(detect_func),
+                stable_thinning: true,
+                priority_isl: self.spec.priority_isl,
+            };
+            injected +=
+                (frames * epoch_c.tiles_per_frame + warm + cues_injected) as f64;
+
+            let t_sim = Instant::now();
+            let rep = Simulator::new(
+                &self.wf,
+                &self.db,
+                &epoch_c,
+                &instances,
+                pipelines,
+                &cfg,
+            )
+            .run();
+
+            // The overlay epoch: identical inputs, opposite ISL queue
+            // discipline.  Nothing of it feeds back into the loop state,
+            // and its only consumed output is the per-cue outcomes — so
+            // epochs without cue injections skip it entirely.
+            if compare && !inj_cues.is_empty() {
+                let alt_cfg = SimConfig { priority_isl: !cfg.priority_isl, ..cfg.clone() };
+                let alt = Simulator::new(
+                    &self.wf,
+                    &self.db,
+                    &epoch_c,
+                    &instances,
+                    pipelines,
+                    &alt_cfg,
+                )
+                .run();
+                for (k, &cue_idx) in inj_cues.iter().enumerate() {
+                    let o = &alt.injections[k];
+                    let finished_abs = o.finished_s.map(|t| t0 + t);
+                    alt_outcomes.push((cue_idx, finished_abs, o.met_deadline()));
+                }
+            }
+            sim_ms += t_sim.elapsed().as_secs_f64() * 1e3;
+
+            if rep.frame_latency_s > worst_latency {
+                worst_latency = rep.frame_latency_s;
+                worst_breakdown = rep.breakdown;
+            }
+
+            // Match cue outcomes back onto the records.
+            for (k, &cue_idx) in inj_cues.iter().enumerate() {
+                let outcome = &rep.injections[k];
+                let cue = &mut cues[cue_idx];
+                cue.finished_s = outcome.finished_s.map(|t| t0 + t);
+                if outcome.met_deadline() {
+                    cue.status = CueStatus::Completed;
+                    completed += 1;
+                    if let Some(t) = cue.finished_s {
+                        let latency = t - cue.tip.t_s;
+                        latencies.push(latency);
+                        merged.observe_id(m_latency, latency);
+                    }
+                } else {
+                    cue.status = CueStatus::Missed;
+                    missed += 1;
+                }
+            }
+
+            // Detections → tips at the first boundary after the detection
+            // is observed: promote, geolocate, pass-predict, admit.
+            let epoch_detections = {
+                let mut seen: BTreeSet<u32> = BTreeSet::new();
+                let mut dets: Vec<&sim::Detection> = rep
+                    .detections
+                    .iter()
+                    .filter(|d| seen.insert(d.tile))
+                    .collect();
+                // Tile-id order, not completion order: the promotion set
+                // must not depend on the ISL discipline's event schedule.
+                dets.sort_by_key(|d| d.tile);
+                dets.into_iter().cloned().collect::<Vec<sim::Detection>>()
+            };
+            detections_total += epoch_detections.len();
+            let mut epoch_tips = 0usize;
+            for det in &epoch_detections {
+                let mut r = tip_rng(self.seed, e, det.tile);
+                if r.f64() >= self.spec.detection_rate {
+                    continue;
+                }
+                epoch_tips += 1;
+                tips_total += 1;
+                let t_cap_abs = t0 + det.t0_s;
+                let t_emit_abs = t0 + det.t_done_s;
+                // Tasking happens at the first epoch boundary at or after
+                // the detection lands.
+                let t_dec = (t_emit_abs / epoch_s).ceil().max((e + 1) as f64) * epoch_s;
+                let track = self.c.orbit.ground_track(t_cap_abs);
+                let target = LatLon {
+                    lat_deg: (track.lat_deg + r.range(-0.5, 0.5)).clamp(-89.0, 89.0),
+                    lon_deg: track.lon_deg + r.range(-0.5, 0.5),
+                };
+                let tip = Tip {
+                    id: tips_total - 1,
+                    frame: (t_cap_abs / df).floor() as usize,
+                    t_cap_s: t_cap_abs,
+                    t_s: t_emit_abs,
+                    target,
+                    tile_no: det.tile_no,
+                };
+                if t_dec >= mission_end {
+                    tips_unserviced += 1;
+                    continue;
+                }
+                let deadline_abs = t_dec + self.spec.cue_deadline_s;
+                let station = GroundStation {
+                    name: format!("tip-{}", tip.id),
+                    location: tip.target,
+                    min_elevation_deg: self.spec.min_elevation_deg,
+                };
+                // Earliest acquisition of signal across the chain (each
+                // member flies the leader's orbit delayed by its revisit
+                // offset).
+                let best = (0..self.c.n_sats)
+                    .filter_map(|j| {
+                        visibility::next_pass(
+                            &self.c.orbit.delayed(self.c.revisit_time_s(j)),
+                            &station,
+                            t_dec,
+                            self.spec.cue_deadline_s,
+                            self.spec.pass_dt_s,
+                        )
+                        .map(|p| (j, p))
+                    })
+                    .min_by(|a, b| a.1.aos_s.total_cmp(&b.1.aos_s));
+                match best {
+                    None => {
+                        rejected_no_pass += 1;
+                        cues.push(CueRecord {
+                            tip,
+                            sat: None,
+                            pass: None,
+                            injected_t_s: None,
+                            deadline_s: deadline_abs,
+                            finished_s: None,
+                            status: CueStatus::RejectedNoPass,
+                        });
+                    }
+                    Some((sat, pass)) => {
+                        let tokens = budget_rate * pass.aos_s;
+                        if (admitted + 1) as f64 > tokens + 1e-9 {
+                            rejected_capacity += 1;
+                            cues.push(CueRecord {
+                                tip,
+                                sat: Some(sat),
+                                pass: Some(pass),
+                                injected_t_s: None,
+                                deadline_s: deadline_abs,
+                                finished_s: None,
+                                status: CueStatus::RejectedCapacity,
+                            });
+                        } else {
+                            admitted += 1;
+                            pending.push(PendingCue {
+                                cue: cues.len(),
+                                sat,
+                                aos_abs_s: pass.aos_s,
+                                deadline_abs_s: deadline_abs,
+                                tile_no: group_tile_for_sat(&self.c, sat),
+                            });
+                            cues.push(CueRecord {
+                                tip,
+                                sat: Some(sat),
+                                pass: Some(pass),
+                                injected_t_s: None,
+                                deadline_s: deadline_abs,
+                                finished_s: None,
+                                status: CueStatus::Missed,
+                            });
+                        }
+                    }
+                }
+            }
+
+            merged.merge(&rep.metrics);
+            merged.observe_id(m_epoch_completion, rep.completion_ratio);
+            backlog = if epoch_c.tiles_per_frame == 0 {
+                backlog
+            } else {
+                rep.unfinished_tiles
+            };
+
+            epoch_reports.push(MissionEpoch {
+                epoch: e,
+                t_start_s: t0,
+                replanned,
+                reason: invalid,
+                completion_ratio: rep.completion_ratio,
+                frames,
+                backlog,
+                migrations: epoch_migrations,
+                detections: epoch_detections.len(),
+                tips: epoch_tips,
+                cues_injected,
+                failed_sats: health.failed_sats(),
+                outaged_links: health.outaged_links(),
+                burst: health.burst,
+                area_visible: health.area_visible,
+            });
+        }
+
+        // Admitted cues whose pass never arrived before the mission ended.
+        let expired = pending.len();
+        for p in &pending {
+            cues[p.cue].status = CueStatus::Missed;
+        }
+
+        // Mission-wide completion from the merged per-function counters.
+        let mut ratios = Vec::new();
+        for i in 0..self.wf.len() {
+            let rec = merged.counter(&format!("func.{}.received", self.wf.name(i)));
+            let ana = merged.counter(&format!("func.{}.analyzed", self.wf.name(i)));
+            if rec > 0.0 {
+                ratios.push((ana / rec).min(1.0));
+            }
+        }
+        let completion = if ratios.is_empty() { 0.0 } else { stats::mean(&ratios) };
+
+        merged.inc("mission.detections", detections_total as f64);
+        merged.inc("mission.tips", tips_total as f64);
+        merged.inc("mission.tips_unserviced", tips_unserviced as f64);
+        merged.inc("mission.cues_admitted", admitted as f64);
+        merged.inc(
+            "mission.cues_rejected",
+            (rejected_no_pass + rejected_capacity) as f64,
+        );
+        merged.inc("mission.cues_completed", completed as f64);
+        merged.inc("mission.cues_missed", missed as f64);
+        merged.inc("mission.cues_expired", expired as f64);
+        merged.inc("mission.per_cue_routed", per_cue_routed as f64);
+        merged.inc("mission.replans", replans as f64);
+        merged.inc("mission.replan_failures", replan_failures as f64);
+        merged.inc("mission.migration.count", migrations as f64);
+        merged.inc("mission.migration.bytes", migration_bytes);
+        merged.inc("mission.downtime_s", downtime_s);
+        merged.inc("mission.tiles_lost", tiles_lost);
+        merged.inc("mission.epochs", n_epochs as f64);
+        merged.inc("mission.frames", total_frames as f64);
+        merged.inc("mission.tiles_injected", injected);
+        merged.inc("mission.backlog_final", backlog as f64);
+        merged.inc("mission.backlog_dropped", dropped_backlog as f64);
+
+        // Assemble the opposite-discipline overlay (compare mode): its
+        // latency samples land in the *other* cue-latency distribution.
+        let alt = if compare {
+            let mut finished: Vec<Option<f64>> = vec![None; cues.len()];
+            let mut alt_completed = 0usize;
+            let mut alt_missed = 0usize;
+            for &(cue_idx, t, met) in &alt_outcomes {
+                if let Some(slot) = finished.get_mut(cue_idx) {
+                    *slot = t;
+                }
+                if met {
+                    alt_completed += 1;
+                    if let Some(tf) = t {
+                        let latency = tf - cues[cue_idx].tip.t_s;
+                        alt_latencies.push(latency);
+                        merged.observe_id(m_alt_latency, latency);
+                    }
+                } else {
+                    alt_missed += 1;
+                }
+            }
+            Some(AltDiscipline {
+                priority_isl: !self.spec.priority_isl,
+                completed: alt_completed,
+                missed: alt_missed,
+                finished_s: finished,
+                response_latency_s: alt_latencies,
+            })
+        } else {
+            None
+        };
+
+        // Degenerate zero-epoch mission: still plan once so the report is
+        // well-formed instead of panicking.
+        if current.is_none() {
+            let (built, pm, rm) = build_tables(
+                planner.as_ref(),
+                router.as_ref(),
+                &self.wf,
+                &self.db,
+                &self.c,
+                &health.masked_sats(),
+                health.burst,
+            )?;
+            plan_ms += pm;
+            route_ms += rm;
+            current = Some(built);
+        }
+        let state = current.as_ref().expect("tables just built");
+        Ok(MissionReport {
+            label: self.label.clone(),
+            backend: state.backend.clone(),
+            priority_isl: self.spec.priority_isl,
+            phi: state.phi,
+            reserve_frac: reserve,
+            epochs: epoch_reports,
+            detections: detections_total,
+            tips: tips_total,
+            tips_unserviced,
+            cues,
+            admitted,
+            rejected_no_pass,
+            rejected_capacity,
+            completed,
+            missed,
+            expired,
+            per_cue_routed,
+            response_latency_s: latencies,
+            completion_ratio: completion,
+            replans,
+            replan_failures,
+            migrations,
+            migration_bytes,
+            downtime_s,
+            tiles_lost,
+            final_backlog: backlog,
+            frame_latency_s: worst_latency,
+            breakdown: worst_breakdown,
+            n_pipelines: state.pipelines.len(),
+            plan_ms,
+            route_ms,
+            sim_ms,
+            alt,
+            notes,
+            metrics: merged,
+        })
+    }
+
+    /// [`Self::run`] collapsed to the scenario layer's report shape.
+    pub fn run_scenario_report(&self) -> Result<ScenarioReport, ScenarioError> {
+        self.run().map(MissionReport::into_scenario_report)
+    }
+}
+
+/// Seeded tip stream: the first draw decides promotion, later draws
+/// geolocate the target — a pure function of (seed, epoch, tile), so the
+/// FIFO and priority disciplines promote the same tips.
+fn tip_rng(seed: u64, epoch: usize, tile: u32) -> Rng {
+    let key = (((epoch as u64) + 1) << 32 ^ (tile as u64 + 1))
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    Rng::new(seed ^ MISSION_SALT ^ key)
+}
+
+/// Satellite span of the group the cue tile belongs to — the *same*
+/// group-selection rule that assigned the injected tile id
+/// ([`crate::tipcue::group_for_sat`]), so the tile and the dedicated
+/// pipeline can never reference different groups.  Falls back to the
+/// satellite itself.
+fn cue_group_span(c: &Constellation, sat: usize) -> (usize, usize) {
+    match crate::tipcue::group_for_sat(c, sat) {
+        Some((g, _)) => (g.first_sat, g.last_sat),
+        None => (sat, sat),
+    }
+}
+
+/// The per-cue routing pass: re-solve workload shares over the current
+/// deployment with the cue tile as its own single-tile capture group, and
+/// return the dedicated pipeline (tagged [`CUE_PIPELINE_GROUP`] so it
+/// never serves background tiles).  Prefers a pipeline whose source stage
+/// sits on the predicted-pass satellite; `None` when the router produces
+/// no per-tile pipelines (aggregate-flow or fixed-deployment backends) —
+/// the caller falls back to the prefer-satellite injection path.
+fn route_cue(
+    router: &dyn RouterBackend,
+    wf: &Workflow,
+    db: &ProfileDb,
+    c: &Constellation,
+    plan: &DeploymentPlan,
+    mask: &[usize],
+    cue_sat: usize,
+) -> Option<Pipeline> {
+    let (first, last) = cue_group_span(c, cue_sat);
+    let mut cue_c = c.clone();
+    cue_c.tiles_per_frame = 1;
+    cue_c.capture_groups =
+        vec![CaptureGroup { first_sat: first, last_sat: last, tiles: 1 }];
+    let ctx = Ctx { wf, db, c: &cue_c, banned: mask };
+    let routing = router.route(&ctx, plan).ok()?;
+    let src = wf.sources().first().copied()?;
+    let mut best: Option<Pipeline> = None;
+    for p in &routing.pipelines {
+        let rank = |q: &Pipeline| (usize::from(q.stages[src].sat == cue_sat), q.workload);
+        let replace = match &best {
+            None => true,
+            Some(b) => rank(p) > rank(b),
+        };
+        if replace {
+            best = Some(p.clone());
+        }
+    }
+    best.map(|mut p| {
+        p.group = CUE_PIPELINE_GROUP;
+        p
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dynamic::{Event, EventKind};
+
+    fn quiet_spec(epochs: usize) -> MissionSpec {
+        MissionSpec {
+            dynamic: DynamicSpec {
+                epochs,
+                frames_per_epoch: 2,
+                sat_mtbf_s: 0.0,
+                link_mtbf_s: 0.0,
+                burst_mtbf_s: 0.0,
+                ..DynamicSpec::default()
+            },
+            detection_rate: 0.2,
+            ..MissionSpec::default()
+        }
+    }
+
+    fn jetson_with(spec: MissionSpec) -> Scenario {
+        Scenario::jetson().with_mission(spec)
+    }
+
+    #[test]
+    fn spec_json_round_trip() {
+        let spec = MissionSpec {
+            dynamic: DynamicSpec { epochs: 5, sat_mtbf_s: 333.0, ..Default::default() },
+            detection_rate: 0.1,
+            detect_func: Some(2),
+            cue_deadline_s: 45.0,
+            reserve_frac: 0.35,
+            pass_dt_s: 0.5,
+            min_elevation_deg: 25.0,
+            cue_priority: false,
+            priority_isl: false,
+        };
+        assert_eq!(MissionSpec::from_json(&spec.to_json()), spec);
+        let d = MissionSpec::from_json(&Json::parse("{}").unwrap());
+        assert_eq!(d, MissionSpec::default());
+    }
+
+    #[test]
+    fn quiet_mission_detects_and_completes_cues() {
+        let s = jetson_with(quiet_spec(6));
+        let rep = MissionOrchestrator::new(&s).run().expect("mission runs");
+        assert_eq!(rep.replans, 0, "no events, no re-plans: {:?}", rep.notes);
+        assert!(rep.detections > 0, "detector completions must be recorded");
+        assert!(rep.tips > 0, "20% of detections must tip");
+        assert!(rep.admitted > 0, "reserve 0.2 admits cues");
+        assert!(rep.completed > 0, "quiet Jetson mission completes cues");
+        assert_eq!(rep.response_latency_s.len(), rep.completed);
+        assert!(rep.per_cue_routed > 0, "MILP path routes cues dedicated pipelines");
+        assert_eq!(
+            rep.cues.len(),
+            rep.admitted + rep.rejected_no_pass + rep.rejected_capacity
+        );
+        // Completed cues finished before their deadlines after injection.
+        for cue in rep.cues.iter().filter(|c| c.status == CueStatus::Completed) {
+            assert!(cue.sat.is_some());
+            assert!(cue.finished_s.unwrap() <= cue.deadline_s + 1e-9);
+            assert!(cue.injected_t_s.unwrap() >= cue.tip.t_s - 1e-9);
+        }
+        assert_eq!(rep.metrics.counter("mission.cues_completed"), rep.completed as f64);
+        assert_eq!(
+            rep.metrics.samples("mission.cue_latency_prio").len(),
+            rep.completed
+        );
+    }
+
+    #[test]
+    fn zero_reserve_rejects_cues_on_capacity() {
+        let mut spec = quiet_spec(4);
+        spec.reserve_frac = 0.0;
+        let s = jetson_with(spec);
+        let rep = MissionOrchestrator::new(&s).run().expect("mission runs");
+        assert!(rep.tips > 0);
+        assert_eq!(rep.admitted, 0);
+        assert_eq!(rep.completed, 0);
+        assert_eq!(rep.rejected_capacity + rep.rejected_no_pass, rep.cues.len());
+    }
+
+    #[test]
+    fn fault_triggers_replan_in_the_combined_loop() {
+        let s = jetson_with(quiet_spec(6));
+        let tl = Timeline::declared(vec![
+            Event { t_s: 15.0, kind: EventKind::SatFail { sat: 1 } },
+            Event { t_s: 35.0, kind: EventKind::SatRecover { sat: 1 } },
+        ]);
+        let rep = MissionOrchestrator::new(&s)
+            .with_timeline(tl)
+            .run()
+            .expect("mission runs");
+        assert_eq!(rep.replans, 2, "notes: {:?}", rep.notes);
+        assert!(rep.migration_bytes > 0.0);
+        assert!(rep.detections > 0, "detections continue across re-plans");
+    }
+
+    #[test]
+    fn priority_isl_never_slower_than_fifo_on_identical_inputs() {
+        let mut spec = quiet_spec(6);
+        spec.detection_rate = 0.4;
+        let mut s = jetson_with(spec);
+        // Contended links: deep background queues for cue messages to jump.
+        s.isl_rate_bps = Some(16_000.0);
+        let rep = MissionOrchestrator::new(&s).run_compare().expect("mission runs");
+        assert!(rep.priority_isl, "prio drives the loop by default");
+        let alt = rep.alt.as_ref().expect("compare mode records the overlay");
+        assert!(!alt.priority_isl);
+        assert_eq!(alt.finished_s.len(), rep.cues.len());
+        // Over the cues completed under both disciplines — same tables,
+        // backlog and injections — priority links are no slower than FIFO
+        // links on the mean (the quantity the CLI table reports).
+        let (prio_l, fifo_l) = rep.paired_latencies().expect("compare mode");
+        assert!(!prio_l.is_empty(), "cues: {:?}", rep.cues);
+        assert_eq!(prio_l.len(), fifo_l.len());
+        let (fifo_mean, prio_mean) = rep.fifo_prio_latency_means().unwrap();
+        assert!(prio_mean <= fifo_mean + 1e-9, "{prio_mean} vs {fifo_mean}");
+        // Both first-class distributions are populated in one registry.
+        assert_eq!(
+            rep.metrics.samples("mission.cue_latency_prio").len(),
+            rep.completed
+        );
+        assert_eq!(
+            rep.metrics.samples("mission.cue_latency_fifo").len(),
+            alt.completed
+        );
+    }
+
+    #[test]
+    fn mission_is_deterministic() {
+        let mut spec = quiet_spec(5);
+        spec.dynamic.sat_mtbf_s = 60.0;
+        spec.dynamic.sat_mttr_s = 30.0;
+        let s = jetson_with(spec);
+        let a = MissionOrchestrator::new(&s).run().expect("run a");
+        let b = MissionOrchestrator::new(&s).run().expect("run b");
+        assert_eq!(a.tips, b.tips);
+        assert_eq!(a.admitted, b.admitted);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.response_latency_s, b.response_latency_s);
+        assert_eq!(
+            a.metrics.to_json().to_string_compact(),
+            b.metrics.to_json().to_string_compact()
+        );
+    }
+
+    #[test]
+    fn route_cue_pins_a_dedicated_sentinel_pipeline() {
+        let (wf, db, c) = Scenario::jetson().build();
+        let plan =
+            crate::planner::plan_reserved(&wf, &db, &c, &[], 0.2).expect("reserved plan");
+        let pipe = route_cue(&OrbitChainRouter, &wf, &db, &c, &plan, &[], 1)
+            .expect("cue pipeline routes");
+        assert_eq!(pipe.group, CUE_PIPELINE_GROUP);
+        assert_eq!(pipe.stages.len(), wf.len());
+        assert!(pipe.workload > 0.0);
+        // The sentinel keeps it out of every real capture group's table.
+        assert!(c.capture_groups.len() < CUE_PIPELINE_GROUP);
+    }
+
+    #[test]
+    fn zero_epoch_mission_reports_cleanly() {
+        let s = jetson_with(quiet_spec(0));
+        let rep = MissionOrchestrator::new(&s).run().expect("degenerate mission");
+        assert!(rep.epochs.is_empty());
+        assert!(rep.phi.is_some());
+        assert_eq!(rep.tips, 0);
+        assert_eq!(rep.completion_ratio, 0.0);
+    }
+}

@@ -48,7 +48,9 @@ pub struct SweepPoint {
 /// the point (extending the base scenario's spec when present), so those
 /// points run the epoch loop; setting a tip-and-cue dimension likewise
 /// attaches a [`TipCueSpec`](crate::tipcue::TipCueSpec), so those points
-/// run the closed loop.
+/// run the closed loop; setting a detection-rate dimension attaches a
+/// [`MissionSpec`](crate::mission::MissionSpec) (absorbing the dynamic
+/// dimensions), so those points run the combined mission loop.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
     base: Scenario,
@@ -64,6 +66,7 @@ pub struct SweepGrid {
     tip_rates: Vec<f64>,
     cue_deadlines: Vec<f64>,
     reserve_fracs: Vec<f64>,
+    detection_rates: Vec<f64>,
     backends: Vec<BackendKind>,
     reseed: bool,
 }
@@ -84,6 +87,7 @@ impl SweepGrid {
             tip_rates: Vec::new(),
             cue_deadlines: Vec::new(),
             reserve_fracs: Vec::new(),
+            detection_rates: Vec::new(),
             backends: Vec::new(),
             reseed: false,
         }
@@ -162,6 +166,19 @@ impl SweepGrid {
         self
     }
 
+    /// Detection-to-tip promotion rates; attaches the mission extension —
+    /// those points run the *combined* closed loop
+    /// ([`crate::mission::MissionOrchestrator`]), absorbing any dynamic
+    /// dimensions (MTBF / outage / epoch length) into its fault spec and
+    /// the cue-knob dimensions ([`Self::cue_deadlines`] /
+    /// [`Self::reserve_fracs`]) into its own spec.  The synthetic
+    /// tip-rate axis is suppressed for mission points (the detection rate
+    /// replaces it).
+    pub fn detection_rates(mut self, rates: &[f64]) -> Self {
+        self.detection_rates = rates.to_vec();
+        self
+    }
+
     pub fn backends(mut self, backends: &[BackendKind]) -> Self {
         self.backends = backends.to_vec();
         self
@@ -221,14 +238,20 @@ impl SweepGrid {
         } else {
             self.epoch_frames.iter().map(|&f| Some(f)).collect()
         };
-        // Tip-and-cue dimensions, flattened into one (rate, deadline,
-        // reserve) axis so the nesting below stays readable.
-        let tipcue_dims: Vec<(Option<f64>, Option<f64>, Option<f64>)> = {
-            let trs: Vec<Option<f64>> = if self.tip_rates.is_empty() {
-                vec![None]
-            } else {
-                self.tip_rates.iter().map(|&r| Some(r)).collect()
-            };
+        // Tip-and-cue + mission dimensions, flattened into one (rate,
+        // deadline, reserve, detection-rate) axis so the nesting below
+        // stays readable.  With a detection-rate (mission) dimension the
+        // synthetic tip-rate axis is suppressed — mission points derive
+        // tips from actual detections, so the axis would silently
+        // multiply the grid without changing any point.
+        type ExtDim = (Option<f64>, Option<f64>, Option<f64>, Option<f64>);
+        let ext_dims: Vec<ExtDim> = {
+            let trs: Vec<Option<f64>> =
+                if self.tip_rates.is_empty() || !self.detection_rates.is_empty() {
+                    vec![None]
+                } else {
+                    self.tip_rates.iter().map(|&r| Some(r)).collect()
+                };
             let cds: Vec<Option<f64>> = if self.cue_deadlines.is_empty() {
                 vec![None]
             } else {
@@ -239,11 +262,18 @@ impl SweepGrid {
             } else {
                 self.reserve_fracs.iter().map(|&r| Some(r)).collect()
             };
+            let drs: Vec<Option<f64>> = if self.detection_rates.is_empty() {
+                vec![None]
+            } else {
+                self.detection_rates.iter().map(|&r| Some(r)).collect()
+            };
             let mut dims = Vec::new();
             for &tr in &trs {
                 for &cd in &cds {
                     for &rf in &rfs {
-                        dims.push((tr, cd, rf));
+                        for &dr in &drs {
+                            dims.push((tr, cd, rf, dr));
+                        }
                     }
                 }
             }
@@ -265,7 +295,7 @@ impl SweepGrid {
                                 for &mtbf in &mtbfs {
                                     for &outage in &outages {
                                         for &ef in &epoch_frames {
-                                            for &(tr, cd, rf) in &tipcue_dims {
+                                            for &(tr, cd, rf, dr) in &ext_dims {
                                                 for &backend in &backends {
                                                     let mut s = self.base.clone();
                                                     s.device = device;
@@ -315,6 +345,14 @@ impl SweepGrid {
                                                         }
                                                         s.tipcue = Some(tc);
                                                     }
+                                                    if let Some(rate) = dr {
+                                                        self.attach_mission(
+                                                            &mut s,
+                                                            rate,
+                                                            (mtbf, outage, ef),
+                                                            (cd, rf),
+                                                        );
+                                                    }
                                                     let idx = points.len();
                                                     if self.reseed {
                                                         s.seed = derived_seed(
@@ -342,6 +380,50 @@ impl SweepGrid {
             }
         }
         points
+    }
+
+    /// Turn one expanded point into a mission point: the swept dynamic
+    /// dimensions and cue knobs apply onto the mission spec — they never
+    /// clobber a base mission spec with defaults.
+    fn attach_mission(
+        &self,
+        s: &mut Scenario,
+        rate: f64,
+        dyn_dims: (Option<f64>, Option<f64>, Option<usize>),
+        cue_dims: (Option<f64>, Option<f64>),
+    ) {
+        let (mtbf, outage, ef) = dyn_dims;
+        let (cd, rf) = cue_dims;
+        let mut m = s.mission.clone().unwrap_or_default();
+        m.detection_rate = rate;
+        match s.dynamic.take() {
+            // No base mission spec: the dynamic extension (base spec +
+            // swept dims, already combined) seeds the fault spec whole.
+            Some(d) if self.base.mission.is_none() => m.dynamic = d,
+            // A base mission spec: swept dims apply field-wise on top of
+            // its own fault spec.
+            _ => {
+                if let Some(v) = mtbf {
+                    m.dynamic.sat_mtbf_s = v;
+                }
+                if let Some(v) = outage {
+                    m.dynamic.sat_mttr_s = v;
+                }
+                if let Some(v) = ef {
+                    m.dynamic.frames_per_epoch = v;
+                }
+            }
+        }
+        // Cue knobs field-wise for the same reason; the tipcue extension
+        // never rides along on a mission point.
+        s.tipcue = None;
+        if let Some(v) = cd {
+            m.cue_deadline_s = v;
+        }
+        if let Some(v) = rf {
+            m.reserve_frac = v;
+        }
+        s.mission = Some(m);
     }
 }
 
@@ -425,7 +507,10 @@ impl SweepRunner {
         let mut builds: HashMap<BuildKey, Triple> = HashMap::new();
         let mut preps: HashMap<(BuildKey, BackendKind), PrepSlot> = HashMap::new();
         for point in points {
-            if point.scenario.tipcue.is_none() && point.scenario.dynamic.is_none() {
+            if point.scenario.mission.is_none()
+                && point.scenario.tipcue.is_none()
+                && point.scenario.dynamic.is_none()
+            {
                 let key = point.scenario.build_key();
                 builds
                     .entry(key)
@@ -449,12 +534,17 @@ impl SweepRunner {
                         break;
                     }
                     let point = &points[i];
-                    // Tip-and-cue points run the closed loop, dynamic
+                    // Mission points run the combined closed loop,
+                    // tip-and-cue points the static closed loop, dynamic
                     // points the epoch loop, static points the single
                     // plan → route → simulate cycle over the shared
                     // triple + deployment.  All collapse to the same
                     // report shape.
-                    let result = if point.scenario.tipcue.is_some() {
+                    let result = if point.scenario.mission.is_some() {
+                        crate::mission::MissionOrchestrator::new(&point.scenario)
+                            .with_backend(point.backend)
+                            .run_scenario_report()
+                    } else if point.scenario.tipcue.is_some() {
                         crate::tipcue::TipCueOrchestrator::new(&point.scenario)
                             .with_backend(point.backend)
                             .run_scenario_report()
@@ -589,6 +679,89 @@ mod tests {
         // Without tip-and-cue dimensions, no extension is attached.
         let plain = SweepGrid::new(Scenario::jetson()).points();
         assert!(plain[0].scenario.tipcue.is_none());
+    }
+
+    #[test]
+    fn mission_dimension_attaches_extension_and_absorbs_dynamic() {
+        let base = Scenario::jetson().with_frames(2);
+        let points = SweepGrid::new(base)
+            .sat_mtbfs(&[300.0])
+            .cue_deadlines(&[45.0])
+            .reserve_fracs(&[0.3])
+            // Suppressed for mission points: must not multiply the grid.
+            .tip_rates(&[0.2, 0.5, 0.8])
+            .detection_rates(&[0.05, 0.2])
+            .points();
+        assert_eq!(points.len(), 2, "tip-rate axis suppressed for mission points");
+        for (point, rate) in points.iter().zip([0.05, 0.2]) {
+            let m = point.scenario.mission.as_ref().expect("mission attached");
+            assert_eq!(m.detection_rate, rate);
+            assert_eq!(m.dynamic.sat_mtbf_s, 300.0, "dynamic dims absorbed");
+            assert_eq!(m.cue_deadline_s, 45.0, "cue dims absorbed");
+            assert_eq!(m.reserve_frac, 0.3, "reserve dims absorbed");
+            assert!(point.scenario.dynamic.is_none(), "not left as a dynamic point");
+            assert!(point.scenario.tipcue.is_none(), "not left as a tipcue point");
+        }
+        let plain = SweepGrid::new(Scenario::jetson()).points();
+        assert!(plain[0].scenario.mission.is_none());
+    }
+
+    #[test]
+    fn mission_dimension_preserves_base_mission_spec() {
+        // A base scenario that already carries a mission spec keeps its
+        // non-swept knobs: dims apply field-wise, never reset to defaults.
+        let base_spec = crate::mission::MissionSpec {
+            dynamic: crate::dynamic::DynamicSpec { epochs: 2, ..Default::default() },
+            cue_deadline_s: 30.0,
+            pass_dt_s: 0.5,
+            ..Default::default()
+        };
+        let base = Scenario::jetson().with_mission(base_spec);
+        let points = SweepGrid::new(base)
+            .sat_mtbfs(&[300.0])
+            .reserve_fracs(&[0.3])
+            .detection_rates(&[0.1])
+            .points();
+        assert_eq!(points.len(), 1);
+        let m = points[0].scenario.mission.as_ref().expect("mission attached");
+        assert_eq!(m.dynamic.epochs, 2, "base fault spec preserved");
+        assert_eq!(m.dynamic.sat_mtbf_s, 300.0, "swept dim applied");
+        assert_eq!(m.cue_deadline_s, 30.0, "non-swept cue knob preserved");
+        assert_eq!(m.reserve_frac, 0.3, "swept cue knob applied");
+        assert_eq!(m.pass_dt_s, 0.5, "non-swept knob preserved");
+    }
+
+    #[test]
+    fn mission_sweep_parallel_bit_identical_to_sequential() {
+        let spec = crate::mission::MissionSpec {
+            dynamic: crate::dynamic::DynamicSpec {
+                epochs: 2,
+                frames_per_epoch: 2,
+                sat_mtbf_s: 0.0,
+                link_mtbf_s: 0.0,
+                ..Default::default()
+            },
+            detection_rate: 0.2,
+            ..Default::default()
+        };
+        let base = Scenario::jetson().with_mission(spec);
+        let points = SweepGrid::new(base).detection_rates(&[0.1, 0.3]).points();
+        assert_eq!(points.len(), 2);
+        let sequential = SweepRunner::new().with_threads(1).run(&points);
+        let parallel = SweepRunner::new().with_threads(2).run(&points);
+        for (s, p) in sequential.reports.iter().zip(&parallel.reports) {
+            match (s, p) {
+                (Ok(a), Ok(b)) => {
+                    assert!(a.backend.starts_with("mission+"), "{}", a.backend);
+                    assert_eq!(a.completion_ratio, b.completion_ratio);
+                    assert_eq!(
+                        a.metrics.to_json().to_string_compact(),
+                        b.metrics.to_json().to_string_compact()
+                    );
+                }
+                (a, b) => panic!("outcome mismatch: {a:?} vs {b:?}"),
+            }
+        }
     }
 
     #[test]

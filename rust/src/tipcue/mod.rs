@@ -231,22 +231,34 @@ pub fn generate_tips(
     tips
 }
 
-/// First tile index of the largest capture group containing `sat` — the
-/// injected cue tile's id, so the cue rides a pipeline of a group the pass
-/// satellite can actually sense.
-fn group_tile_for_sat(c: &Constellation, sat: usize) -> usize {
+/// Largest capture group containing `sat` (ties keep the earliest) plus
+/// the index of its first tile — the one group-selection rule shared by
+/// cue tile-id assignment here and the mission loop's per-cue routing
+/// span, so the injected tile and the dedicated pipeline can never
+/// reference different groups.
+pub(crate) fn group_for_sat(
+    c: &Constellation,
+    sat: usize,
+) -> Option<(&crate::constellation::CaptureGroup, usize)> {
     let mut acc = 0usize;
-    let mut best: Option<(usize, usize)> = None; // (tiles, first tile index)
+    let mut best: Option<(&crate::constellation::CaptureGroup, usize)> = None;
     for g in &c.capture_groups {
         if g.contains(sat) && g.tiles > 0 {
             match best {
-                Some((tiles, _)) if tiles >= g.tiles => {}
-                _ => best = Some((g.tiles, acc)),
+                Some((bg, _)) if bg.tiles >= g.tiles => {}
+                _ => best = Some((g, acc)),
             }
         }
         acc += g.tiles;
     }
-    best.map(|(_, first)| first).unwrap_or(0)
+    best
+}
+
+/// First tile index of the largest capture group containing `sat` — the
+/// injected cue tile's id, so the cue rides a pipeline of a group the pass
+/// satellite can actually sense.  Shared with the mission loop.
+pub(crate) fn group_tile_for_sat(c: &Constellation, sat: usize) -> usize {
+    group_for_sat(c, sat).map(|(_, first)| first).unwrap_or(0)
 }
 
 /// Outcome of one closed-loop tip-and-cue mission.
@@ -491,6 +503,7 @@ impl TipCueOrchestrator {
                             deadline_s,
                             priority: self.spec.cue_priority,
                             prefer_sat: Some(sat),
+                            pipeline: None,
                         });
                         cues.push(CueRecord {
                             tip: tip.clone(),

@@ -1,0 +1,203 @@
+//! Integration: the combined mission loop end to end — the CLI acceptance
+//! scenario (`mission --seed 7`: a deterministic mission where a declared
+//! fault forces a re-plan mid-mission while detection-derived cues are
+//! admitted, per-cue routed, and completed before their deadlines), the
+//! FIFO-vs-priority ISL comparison on identical per-epoch inputs, the
+//! same-class ordering guarantee of the two-class link queues, and the
+//! mission branch of the parallel sweep staying bit-identical to
+//! sequential.
+
+use orbitchain::config::Scenario;
+use orbitchain::dynamic::{DynamicSpec, Event, EventKind, Timeline};
+use orbitchain::mission::{MissionOrchestrator, MissionSpec};
+use orbitchain::scenario::{SweepGrid, SweepRunner};
+use orbitchain::sim::{self, SimConfig, TileInjection};
+use orbitchain::tipcue::CueStatus;
+
+fn mission_spec(epochs: usize, detection_rate: f64) -> MissionSpec {
+    MissionSpec {
+        dynamic: DynamicSpec {
+            epochs,
+            frames_per_epoch: 2,
+            sat_mtbf_s: 0.0,
+            link_mtbf_s: 0.0,
+            burst_mtbf_s: 0.0,
+            ..DynamicSpec::default()
+        },
+        detection_rate,
+        ..MissionSpec::default()
+    }
+}
+
+#[test]
+fn acceptance_seed7_mission_trace() {
+    // `orbitchain mission --seed 7` over a declared fault trace: the
+    // seed-7 mission must re-plan around the failure AND complete at least
+    // one detection-derived cue before its deadline — the two halves of
+    // the combined loop interacting on shared tables.
+    let s = Scenario::jetson().with_seed(7).with_mission(mission_spec(8, 0.3));
+    let tl = Timeline::declared(vec![
+        Event { t_s: 25.0, kind: EventKind::SatFail { sat: 1 } },
+        Event { t_s: 55.0, kind: EventKind::SatRecover { sat: 1 } },
+    ]);
+    let rep = MissionOrchestrator::new(&s)
+        .with_timeline(tl.clone())
+        .run()
+        .expect("mission runs");
+
+    // ≥ 1 fault-triggered re-plan (fail at the epoch-3 boundary, recovery
+    // at epoch 6: two re-plans on the quiet baseline spec).
+    assert!(rep.replans >= 1, "notes: {:?}", rep.notes);
+    assert!(
+        rep.epochs.iter().any(|e| e.replanned && !e.failed_sats.is_empty()),
+        "a re-plan must be fault-triggered: {:?}",
+        rep.epochs
+    );
+
+    // Tips are sourced from the simulator's detection completions.
+    assert!(rep.detections > 0, "in-loop detection hook must record completions");
+    assert!(rep.tips > 0, "30% of detections must tip");
+    assert_eq!(rep.metrics.counter("mission.tips"), rep.tips as f64);
+
+    // ≥ 1 detection-derived cue completes before its deadline, riding a
+    // dedicated per-cue routed pipeline.
+    let done: Vec<_> = rep
+        .cues
+        .iter()
+        .filter(|c| c.status == CueStatus::Completed)
+        .collect();
+    assert!(!done.is_empty(), "cues: {:?}", rep.cues);
+    assert!(rep.per_cue_routed > 0, "MILP missions route cues dedicated pipelines");
+    for cue in &done {
+        assert!(cue.sat.expect("completed cue has a pass satellite") < 3);
+        let finished = cue.finished_s.expect("completed cue finished");
+        assert!(finished <= cue.deadline_s + 1e-9, "{cue:?}");
+        assert!(finished > cue.tip.t_s, "insight after detection: {cue:?}");
+    }
+    assert_eq!(rep.response_latency_s.len(), rep.completed);
+    assert_eq!(
+        rep.metrics.samples("mission.cue_latency_prio").len(),
+        rep.completed
+    );
+
+    // The trace is pinned: a replay reproduces it bit for bit.
+    let again = MissionOrchestrator::new(&s)
+        .with_timeline(tl)
+        .run()
+        .expect("replay runs");
+    assert_eq!(again.replans, rep.replans);
+    assert_eq!(again.tips, rep.tips);
+    assert_eq!(again.completed, rep.completed);
+    assert_eq!(again.response_latency_s, rep.response_latency_s);
+    assert_eq!(
+        again.metrics.to_json().to_string_compact(),
+        rep.metrics.to_json().to_string_compact()
+    );
+}
+
+#[test]
+fn priority_isl_beats_fifo_under_contention() {
+    // The headline comparison: the same mission (identical tables, warm
+    // backlog and cue injections per epoch) re-simulated under FIFO links
+    // must not beat the two-class priority discipline on mean cue
+    // response latency.  Contention comes from a pinned low ISL rate.
+    let mut s = Scenario::jetson().with_seed(7).with_mission(mission_spec(6, 0.4));
+    s.isl_rate_bps = Some(16_000.0);
+    let rep = MissionOrchestrator::new(&s).run_compare().expect("mission runs");
+    let alt = rep.alt.as_ref().expect("compare mode records the FIFO overlay");
+    assert!(rep.priority_isl && !alt.priority_isl);
+    let (fifo_mean, prio_mean) = rep
+        .fifo_prio_latency_means()
+        .expect("cues completed under both disciplines");
+    assert!(
+        prio_mean <= fifo_mean + 1e-9,
+        "priority ISLs must not be slower: prio {prio_mean} vs fifo {fifo_mean}"
+    );
+    // Both first-class latency distributions live in one registry.
+    assert_eq!(
+        rep.metrics.samples("mission.cue_latency_prio").len(),
+        rep.completed
+    );
+    assert_eq!(
+        rep.metrics.samples("mission.cue_latency_fifo").len(),
+        alt.completed
+    );
+}
+
+#[test]
+fn priority_links_never_reorder_same_class_transfers() {
+    // Two same-class (priority) cues injected in arrival order onto the
+    // same pinned pipeline must finish in arrival order under two-class
+    // queues — FIFO within a class is part of the discipline's contract.
+    // Background contention comes from the frames sharing the links.
+    let s = Scenario::jetson();
+    let (wf, db, c) = s.build();
+    let plan = orbitchain::planner::plan(&wf, &db, &c).expect("plan");
+    let routing = orbitchain::routing::route(&wf, &db, &c, &plan).expect("route");
+    let instances = sim::instances_from_plan(&plan, &c);
+    // All three cues pin the same (last) pipeline, so they share every
+    // instance and link on the route.
+    let k = routing.pipelines.len() - 1;
+    let mk = |t_s: f64| TileInjection {
+        t_s,
+        tile_no: 50,
+        deadline_s: 400.0,
+        priority: true,
+        prefer_sat: None,
+        pipeline: Some(k),
+    };
+    let cfg = SimConfig {
+        frames: 4,
+        isl_rate_bps: Some(16_000.0),
+        priority_isl: true,
+        stable_thinning: true,
+        injections: vec![mk(2.0), mk(2.5), mk(3.0)],
+        ..Default::default()
+    };
+    let rep = sim::Simulator::new(&wf, &db, &c, &instances, &routing.pipelines, &cfg)
+        .run();
+    let finished: Vec<f64> = rep
+        .injections
+        .iter()
+        .map(|o| o.finished_s.expect("priority cue completes"))
+        .collect();
+    for w in finished.windows(2) {
+        assert!(
+            w[0] <= w[1] + 1e-9,
+            "same-class transfers reordered: {finished:?}"
+        );
+    }
+}
+
+#[test]
+fn mission_sweep_points_run_combined_loop_bit_identical() {
+    let base = Scenario::jetson().with_seed(7).with_mission(mission_spec(3, 0.2));
+    let points = SweepGrid::new(base)
+        .detection_rates(&[0.1, 0.3])
+        .reseed(true)
+        .points();
+    assert_eq!(points.len(), 2);
+    assert!(points.iter().all(|p| p.scenario.mission.is_some()));
+
+    let sequential = SweepRunner::new().with_threads(1).run(&points);
+    let parallel = SweepRunner::new().with_threads(2).run(&points);
+    assert_eq!(sequential.reports.len(), parallel.reports.len());
+    for (s, p) in sequential.reports.iter().zip(&parallel.reports) {
+        match (s, p) {
+            (Ok(a), Ok(b)) => {
+                assert!(a.backend.starts_with("mission+"), "{}", a.backend);
+                assert_eq!(a.completion_ratio, b.completion_ratio);
+                assert_eq!(a.frame_latency_s, b.frame_latency_s);
+                assert_eq!(
+                    a.metrics.to_json().to_string_compact(),
+                    b.metrics.to_json().to_string_compact()
+                );
+            }
+            (Err(a), Err(b)) => assert_eq!(a, b),
+            (a, b) => panic!("outcome mismatch: {a:?} vs {b:?}"),
+        }
+    }
+    // The mission counters travel in the collapsed report shape.
+    let rep = sequential.reports[1].as_ref().unwrap();
+    assert!(rep.metrics.counter("mission.detections") > 0.0);
+}
