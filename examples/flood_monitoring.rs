@@ -11,8 +11,10 @@
 //!   communication time for cross-satellite calls.
 //!
 //! Reports per-stage throughput, measured distribution ratios, end-to-end
-//! tile latencies (p50/p99) and the emulated ISL budget.  Recorded in
-//! EXPERIMENTS.md §End-to-end.
+//! tile latencies (p50/p99) and the emulated ISL budget, then replays the
+//! measured δ through [`orbitchain::scenario::Orchestrator`] — the full
+//! plan → route → simulate stack — for a side-by-side comparison with the
+//! hand-rolled pipeline.  Recorded in EXPERIMENTS.md §End-to-end.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example flood_monitoring
@@ -20,10 +22,12 @@
 
 use std::time::Instant;
 
+use orbitchain::config::Scenario;
 use orbitchain::constellation::Constellation;
 use orbitchain::link;
 use orbitchain::profile::datasize;
 use orbitchain::runtime::{ModelRuntime, TileGen};
+use orbitchain::scenario::Orchestrator;
 use orbitchain::util::stats;
 
 const FRAMES: usize = 4;
@@ -167,6 +171,46 @@ fn main() -> anyhow::Result<()> {
         datasize::RAW_TILE_BYTES * stage_tiles[2] as f64 / FRAMES as f64 / 1e6,
         (datasize::RAW_TILE_BYTES * stage_tiles[2] as f64 / isl_bytes_total.max(1.0))
             as u64
+    );
+
+    // Orchestrated replay: feed the HIL-measured distribution ratio back
+    // into the scenario layer and run the full plan → route → simulate
+    // stack on the same Jetson constellation, so the hand-rolled pipeline
+    // above can be compared against the MILP placement + Algorithm 1
+    // routing + discrete-event simulation of the identical workload.
+    let measured_delta =
+        (stage_tiles[1] as f64 / stage_tiles[0] as f64).clamp(0.05, 0.95);
+    let scenario = Scenario::jetson()
+        .with_name("flood-hil")
+        .with_delta(measured_delta)
+        .with_frames(FRAMES);
+    let report = Orchestrator::new(&scenario).run()?;
+    println!("\n== orchestrated replay (measured δ = {measured_delta:.2}) ==");
+    println!(
+        "plan: φ = {} (feasible: {}); routing: {} pipelines, {:.0} tiles/frame, \
+         {:.0} ISL B/frame",
+        report
+            .phi
+            .map_or_else(|| "-".into(), |phi| format!("{phi:.2}")),
+        report.feasible.map_or_else(|| "-".into(), |f| f.to_string()),
+        report.n_pipelines,
+        report.routed_tiles,
+        report.routed_isl_bytes_per_frame
+    );
+    println!(
+        "simulation: completion {:.1}%, frame latency {:.2}s \
+         (proc {:.2} / comm {:.2} / revisit {:.2}), {:.0} ISL B/frame observed",
+        report.completion_ratio * 100.0,
+        report.frame_latency_s,
+        report.breakdown.0,
+        report.breakdown.1,
+        report.breakdown.2,
+        report.isl_bytes_per_frame
+    );
+    println!(
+        "HIL p50 {:.2}s vs orchestrated frame latency {:.2}s",
+        stats::percentile(&latencies, 50.0),
+        report.frame_latency_s
     );
     println!("flood_monitoring OK");
     Ok(())

@@ -1,4 +1,5 @@
-//! Constellation-scale sweep throughput at 10/25/50 satellites — the
+//! Constellation-scale sweep throughput at 10/25/50 satellites (chains)
+//! and 100/250/1000 satellites (Walker-delta shells) — the
 //! `BENCH_scale.json` baseline CI's smoke-bench job and future PRs compare
 //! against.
 //!
@@ -19,8 +20,8 @@
 //! Modes:
 //!
 //! ```text
-//! cargo bench --bench scale_constellation              # full: 10/25/50 sats
-//! cargo bench --bench scale_constellation -- --short   # CI smoke: 10/25, fewer frames
+//! cargo bench --bench scale_constellation              # full: 10/25/50 + 100/250/1000 sats
+//! cargo bench --bench scale_constellation -- --short   # CI smoke: 10/25/100, fewer frames
 //! BENCH_SCALE_WRITE=1 cargo bench --bench scale_constellation [-- --short]
 //!                                                      # re-baseline rust/BENCH_scale.json
 //! ```
@@ -48,20 +49,32 @@ fn baseline_path() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_scale.json")
 }
 
+/// Scenario for one constellation-size row: 10/25/50 stay the original
+/// chain rows; 100 satellites and up use the matching Walker shell preset
+/// (sparse +grid ISLs, per-plane planning).
+fn scale_scenario(n_sats: usize) -> Scenario {
+    let base = Scenario::jetson().with_name(format!("scale{n_sats}"));
+    if n_sats >= 100 {
+        let (_, spec) = orbitchain::orbit::presets::walker_shells()
+            .into_iter()
+            .find(|(_, w)| w.n_sats() == n_sats)
+            .unwrap_or_else(|| panic!("no walker shell preset with {n_sats} sats"));
+        base.with_walker(spec)
+    } else {
+        base.with_uniform_sats(n_sats)
+    }
+}
+
 /// The benchmark grid at one constellation size: 6 points sharing one
 /// build key and one deployment (frames × ISL rates, reseeded per point).
 fn grid_points(n_sats: usize, short: bool) -> Vec<SweepPoint> {
     let frames: &[usize] = if short { &[1, 2, 3] } else { &[2, 3, 4] };
-    SweepGrid::new(
-        Scenario::jetson()
-            .with_uniform_sats(n_sats)
-            .with_name(format!("scale{n_sats}")),
-    )
-    .frames(frames)
-    .isl_rates(&[25_000.0, 50_000.0])
-    .backends(&[BackendKind::OrbitChain])
-    .reseed(true)
-    .points()
+    SweepGrid::new(scale_scenario(n_sats))
+        .frames(frames)
+        .isl_rates(&[25_000.0, 50_000.0])
+        .backends(&[BackendKind::OrbitChain])
+        .reseed(true)
+        .points()
 }
 
 /// The pre-optimization sweep path, reproduced verbatim: every point
@@ -149,7 +162,11 @@ fn main() {
     let short = args.iter().any(|a| a == "--short");
     let write = std::env::var("BENCH_SCALE_WRITE").is_ok();
     let mode = if short { "short" } else { "full" };
-    let sat_counts: &[usize] = if short { &[10, 25] } else { &[10, 25, 50] };
+    let sat_counts: &[usize] = if short {
+        &[10, 25, 100]
+    } else {
+        &[10, 25, 50, 100, 250, 1000]
+    };
     let threads = SweepRunner::new().threads();
     println!("scale bench [{mode}]: sats {sat_counts:?}, {threads} threads");
 

@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use crate::constellation::Constellation;
+use crate::constellation::{Constellation, WalkerSpec};
 use crate::dynamic::DynamicSpec;
 use crate::mission::MissionSpec;
 use crate::profile::{Device, ProfileDb};
@@ -32,6 +32,9 @@ pub struct BuildKey {
     /// `f64::to_bits` of δ.
     delta_bits: u64,
     orbit_shift: bool,
+    /// Walker shell identity `(inclination bits, planes, sats/plane, F)`,
+    /// when the scenario pins one.
+    walker: Option<(u64, usize, usize, usize)>,
 }
 
 /// A fully-specified experiment scenario.
@@ -53,6 +56,11 @@ pub struct Scenario {
     pub isl_rate_bps: Option<f64>,
     /// Use the paper's §6.1 ground-track-shift capture groups.
     pub orbit_shift: bool,
+    /// Walker-delta shell layout (mega-constellation scale).  When set it
+    /// takes precedence over `orbit_shift`/`n_sats`: the constellation is
+    /// built with [`Constellation::walker`] and `n_sats` is the shell's
+    /// `planes × sats_per_plane`.  CLI syntax: `--sats walker:53:72x22`.
+    pub walker: Option<WalkerSpec>,
     /// Dynamic-orchestration extension: when set, the scenario runs the
     /// epoch loop of [`crate::dynamic::EpochOrchestrator`] (fault/visibility
     /// events, re-planning, migration) instead of one static cycle.
@@ -85,6 +93,7 @@ impl Scenario {
             seed: 7,
             isl_rate_bps: None,
             orbit_shift: true,
+            walker: None,
             dynamic: None,
             tipcue: None,
             mission: None,
@@ -105,6 +114,7 @@ impl Scenario {
             seed: 7,
             isl_rate_bps: None,
             orbit_shift: true,
+            walker: None,
             dynamic: None,
             tipcue: None,
             mission: None,
@@ -161,6 +171,16 @@ impl Scenario {
     pub fn with_uniform_sats(mut self, n_sats: usize) -> Self {
         self.n_sats = n_sats;
         self.orbit_shift = false;
+        self.walker = None;
+        self
+    }
+
+    /// Lay the constellation out as a Walker-delta shell (implies the
+    /// shift-free uniform capture groups; sizes `n_sats` to the shell).
+    pub fn with_walker(mut self, spec: WalkerSpec) -> Self {
+        self.n_sats = spec.n_sats();
+        self.orbit_shift = false;
+        self.walker = Some(spec);
         self
     }
 
@@ -186,26 +206,38 @@ impl Scenario {
     pub fn build(&self) -> (Workflow, ProfileDb, Constellation) {
         let wf = workflow::flood_prefix(self.workflow_size, self.delta);
         let db = ProfileDb::of(self.device);
-        let mut c = if self.orbit_shift {
-            match self.device {
-                Device::JetsonOrinNano => Constellation::jetson(),
-                Device::RaspberryPi4 => Constellation::rpi(),
-            }
-        } else {
-            Constellation::uniform(
-                self.n_sats,
+        let c = if let Some(w) = &self.walker {
+            // Walker fixes the satellite count to planes × sats/plane, so
+            // no n_sats override applies here.
+            Constellation::walker(
+                w,
                 self.device,
                 self.frame_deadline_s,
                 self.tiles_per_frame,
             )
+        } else {
+            let mut c = if self.orbit_shift {
+                match self.device {
+                    Device::JetsonOrinNano => Constellation::jetson(),
+                    Device::RaspberryPi4 => Constellation::rpi(),
+                }
+            } else {
+                Constellation::uniform(
+                    self.n_sats,
+                    self.device,
+                    self.frame_deadline_s,
+                    self.tiles_per_frame,
+                )
+            };
+            c.n_sats = self.n_sats.max(
+                c.capture_groups.iter().map(|g| g.last_sat + 1).max().unwrap_or(1),
+            );
+            c.frame_deadline_s = self.frame_deadline_s;
+            if !self.orbit_shift {
+                c.tiles_per_frame = self.tiles_per_frame;
+            }
+            c
         };
-        c.n_sats = self
-            .n_sats
-            .max(c.capture_groups.iter().map(|g| g.last_sat + 1).max().unwrap_or(1));
-        c.frame_deadline_s = self.frame_deadline_s;
-        if !self.orbit_shift {
-            c.tiles_per_frame = self.tiles_per_frame;
-        }
         c.validate().expect("scenario constellation");
         (wf, db, c)
     }
@@ -227,6 +259,14 @@ impl Scenario {
             workflow_size: self.workflow_size,
             delta_bits: self.delta.to_bits(),
             orbit_shift: self.orbit_shift,
+            walker: self.walker.as_ref().map(|w| {
+                (
+                    w.inclination_deg.to_bits(),
+                    w.planes,
+                    w.sats_per_plane,
+                    w.phasing,
+                )
+            }),
         }
     }
 
@@ -262,6 +302,13 @@ impl Scenario {
                 self.isl_rate_bps.map(Json::Num).unwrap_or(Json::Null),
             ),
             ("orbit_shift", Json::from(self.orbit_shift)),
+            (
+                "walker",
+                self.walker
+                    .as_ref()
+                    .map(|w| Json::from(w.to_string()))
+                    .unwrap_or(Json::Null),
+            ),
             (
                 "dynamic",
                 self.dynamic.as_ref().map(DynamicSpec::to_json).unwrap_or(Json::Null),
@@ -306,6 +353,10 @@ impl Scenario {
                 .get("orbit_shift")
                 .and_then(Json::as_bool)
                 .unwrap_or(base.orbit_shift),
+            walker: match j.get("walker").and_then(Json::as_str) {
+                None => None,
+                Some(s) => Some(WalkerSpec::parse(s).map_err(|e| anyhow!(e))?),
+            },
             dynamic: match j.get("dynamic") {
                 Some(Json::Null) | None => None,
                 Some(d) => Some(DynamicSpec::from_json(d)),
@@ -418,6 +469,35 @@ mod tests {
         assert_eq!(wf.len(), 4);
         assert_eq!(db.len(), 4);
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn walker_scenario_builds_and_round_trips() {
+        let spec = WalkerSpec {
+            inclination_deg: 53.0,
+            planes: 4,
+            sats_per_plane: 3,
+            phasing: 1,
+        };
+        let s = Scenario::jetson().with_walker(spec);
+        assert_eq!(s.n_sats, 12);
+        assert!(!s.orbit_shift);
+        let (_, _, c) = s.build();
+        assert_eq!(c.n_sats, 12);
+        assert!(matches!(
+            c.topology,
+            crate::constellation::Topology::Walker { planes: 4, .. }
+        ));
+        let back = Scenario::from_json(&s.to_json()).unwrap();
+        assert_eq!(s, back);
+        // The shell identity participates in the build key.
+        assert_ne!(
+            s.build_key(),
+            Scenario::jetson().with_uniform_sats(12).build_key()
+        );
+        // `with_uniform_sats` reverts to a chain layout.
+        let (_, _, chain) = s.clone().with_uniform_sats(12).build();
+        assert!(matches!(chain.topology, crate::constellation::Topology::Chain));
     }
 
     #[test]

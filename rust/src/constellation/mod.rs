@@ -22,6 +22,89 @@ use crate::profile::Device;
 /// Satellite index within the constellation, ordered by movement (0 leads).
 pub type SatId = usize;
 
+/// ISL topology of the constellation.
+///
+/// The paper's testbeds are single-plane leader–follower chains (§2.3);
+/// mega-constellation shells are Walker-delta grids where each satellite
+/// links to its two in-plane ring neighbors and the same slot in the two
+/// adjacent planes (the "+grid" ISL layout Starlink-class shells use).
+/// Satellite `s` of a Walker shell sits in plane `s / sats_per_plane`,
+/// slot `s % sats_per_plane`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// Single-plane chain: satellite `s` links to `s − 1` and `s + 1`.
+    Chain,
+    /// Walker-delta shell of `planes × sats_per_plane` satellites with
+    /// inter-plane phasing factor `phasing` (the `F` of `i:t/p/F` notation,
+    /// `0 ≤ F < planes`).
+    Walker { planes: usize, sats_per_plane: usize, phasing: usize },
+}
+
+/// A parsed Walker shell description, `walker:INC:PxQ[:F]` — e.g.
+/// `walker:53:72x22` for a 53°-inclined 72-plane, 22-sats-per-plane shell
+/// (F defaults to 0).  This is the `--sats` CLI syntax and the scenario
+/// JSON encoding.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WalkerSpec {
+    pub inclination_deg: f64,
+    pub planes: usize,
+    pub sats_per_plane: usize,
+    pub phasing: usize,
+}
+
+impl WalkerSpec {
+    /// Total satellites in the shell.
+    pub fn n_sats(&self) -> usize {
+        self.planes * self.sats_per_plane
+    }
+
+    /// Parse `walker:INC:PxQ[:F]`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let err = || {
+            format!("bad walker spec {s:?} (expected walker:INC:PxQ[:F], e.g. walker:53:72x22)")
+        };
+        let rest = s.strip_prefix("walker:").ok_or_else(err)?;
+        let parts: Vec<&str> = rest.split(':').collect();
+        if !(2..=3).contains(&parts.len()) {
+            return Err(err());
+        }
+        let inclination_deg: f64 = parts[0].parse().map_err(|_| err())?;
+        let (p_str, q_str) = parts[1].split_once('x').ok_or_else(err)?;
+        let planes: usize = p_str.parse().map_err(|_| err())?;
+        let sats_per_plane: usize = q_str.parse().map_err(|_| err())?;
+        let phasing: usize = match parts.get(2) {
+            Some(f) => f.parse().map_err(|_| err())?,
+            None => 0,
+        };
+        if planes == 0 || sats_per_plane == 0 {
+            return Err(format!("walker spec {s:?}: planes and sats/plane must be >= 1"));
+        }
+        if phasing >= planes {
+            return Err(format!("walker spec {s:?}: phasing F={phasing} must be < planes={planes}"));
+        }
+        if !(0.0..=180.0).contains(&inclination_deg) {
+            return Err(format!("walker spec {s:?}: inclination out of [0, 180]"));
+        }
+        Ok(WalkerSpec { inclination_deg, planes, sats_per_plane, phasing })
+    }
+}
+
+impl std::fmt::Display for WalkerSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "walker:{}:{}x{}:{}",
+            self.inclination_deg, self.planes, self.sats_per_plane, self.phasing
+        )
+    }
+}
+
+/// Ring distance between positions `a` and `b` on a cycle of length `n`.
+fn ring_dist(a: usize, b: usize, n: usize) -> usize {
+    let d = a.abs_diff(b);
+    d.min(n - d)
+}
+
 /// A contiguous satellite subset `S̄` and the tiles only it captures.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CaptureGroup {
@@ -74,6 +157,8 @@ pub struct Constellation {
     /// Capture groups covering the frame (§5.4).  Always non-empty; groups
     /// must partition `tiles_per_frame`.
     pub capture_groups: Vec<CaptureGroup>,
+    /// ISL topology (chain or Walker-delta shell).
+    pub topology: Topology,
 }
 
 /// Errors from constellation validation.
@@ -82,6 +167,7 @@ pub enum ConstellationError {
     BadCover { got: usize, want: usize },
     BadGroup(SatId, SatId),
     NoSats,
+    BadTopology { expect: usize, got: usize },
 }
 
 impl std::fmt::Display for ConstellationError {
@@ -94,6 +180,9 @@ impl std::fmt::Display for ConstellationError {
                 write!(f, "capture group [{a}, {b}] out of satellite range")
             }
             ConstellationError::NoSats => write!(f, "need at least one satellite"),
+            ConstellationError::BadTopology { expect, got } => {
+                write!(f, "walker topology expects {expect} satellites, constellation has {got}")
+            }
         }
     }
 }
@@ -125,6 +214,7 @@ impl Constellation {
                 CaptureGroup { first_sat: 0, last_sat: 1, tiles: 20 },
                 CaptureGroup { first_sat: 0, last_sat: 2, tiles: 75 },
             ],
+            topology: Topology::Chain,
         }
     }
 
@@ -153,6 +243,7 @@ impl Constellation {
                 CaptureGroup { first_sat: 0, last_sat: 1, tiles: 7 },
                 CaptureGroup { first_sat: 0, last_sat: 3, tiles: 18 },
             ],
+            topology: Topology::Chain,
         }
     }
 
@@ -176,6 +267,20 @@ impl Constellation {
         }
     }
 
+    /// A Walker-delta shell (`spec.planes × spec.sats_per_plane` satellites,
+    /// shift-free capture), the mega-constellation analogue of
+    /// [`Constellation::uniform`].
+    pub fn walker(spec: &WalkerSpec, device: Device, deadline_s: f64, tiles: usize) -> Self {
+        let mut c = Self::uniform(spec.n_sats(), device, deadline_s, tiles);
+        c.topology = Topology::Walker {
+            planes: spec.planes,
+            sats_per_plane: spec.sats_per_plane,
+            phasing: spec.phasing,
+        };
+        c.orbit.inclination_deg = spec.inclination_deg;
+        c
+    }
+
     /// Validate group cover and ranges.
     pub fn validate(&self) -> Result<(), ConstellationError> {
         if self.n_sats == 0 {
@@ -193,13 +298,116 @@ impl Constellation {
                 return Err(ConstellationError::BadGroup(g.first_sat, g.last_sat));
             }
         }
+        if let Topology::Walker { planes, sats_per_plane, .. } = self.topology {
+            let expect = planes * sats_per_plane;
+            if expect != self.n_sats {
+                return Err(ConstellationError::BadTopology { expect, got: self.n_sats });
+            }
+        }
         Ok(())
     }
 
-    /// ISL hop count between two satellites (space-relay chain: each
-    /// satellite links only to its nearest neighbors, §2.3).
+    /// Plane and in-plane slot of satellite `s`.  Chains are a single
+    /// plane, so `(0, s)`.
+    pub fn plane_slot(&self, s: SatId) -> (usize, usize) {
+        match self.topology {
+            Topology::Chain => (0, s),
+            Topology::Walker { sats_per_plane: q, .. } => (s / q, s % q),
+        }
+    }
+
+    /// ISL hop count between two satellites over the sparse neighbor
+    /// topology: chain distance on a chain (§2.3), Manhattan distance on
+    /// the plane/slot torus of a Walker grid.
     pub fn hops(&self, a: SatId, b: SatId) -> usize {
-        a.abs_diff(b)
+        match self.topology {
+            Topology::Chain => a.abs_diff(b),
+            Topology::Walker { planes: p, sats_per_plane: q, .. } => {
+                ring_dist(a / q, b / q, p) + ring_dist(a % q, b % q, q)
+            }
+        }
+    }
+
+    /// The neighbor `from` forwards to on a shortest ISL path toward `to`
+    /// (`from ≠ to`).  Each step strictly decreases [`Constellation::hops`]:
+    /// Walker routes correct the plane ring first, then the slot ring, each
+    /// along its shorter direction (ties break toward increasing index), so
+    /// relay paths are loop-free and deterministic.
+    pub fn next_hop(&self, from: SatId, to: SatId) -> SatId {
+        debug_assert_ne!(from, to);
+        match self.topology {
+            Topology::Chain => {
+                if to > from {
+                    from + 1
+                } else {
+                    from - 1
+                }
+            }
+            Topology::Walker { planes: p, sats_per_plane: q, .. } => {
+                let (pf, sf) = (from / q, from % q);
+                let (pt, st) = (to / q, to % q);
+                if pf != pt {
+                    let fwd = (pt + p - pf) % p;
+                    let next_p = if fwd <= p - fwd { (pf + 1) % p } else { (pf + p - 1) % p };
+                    next_p * q + sf
+                } else {
+                    let fwd = (st + q - sf) % q;
+                    let next_s = if fwd <= q - fwd { (sf + 1) % q } else { (sf + q - 1) % q };
+                    pf * q + next_s
+                }
+            }
+        }
+    }
+
+    /// Direct ISL neighbors of satellite `s`, ascending.
+    pub fn neighbors(&self, s: SatId) -> Vec<SatId> {
+        match self.topology {
+            Topology::Chain => {
+                let mut v = Vec::with_capacity(2);
+                if s > 0 {
+                    v.push(s - 1);
+                }
+                if s + 1 < self.n_sats {
+                    v.push(s + 1);
+                }
+                v
+            }
+            Topology::Walker { planes: p, sats_per_plane: q, .. } => {
+                let (pl, sl) = (s / q, s % q);
+                let mut v = Vec::with_capacity(4);
+                if q > 1 {
+                    v.push(pl * q + (sl + 1) % q);
+                    v.push(pl * q + (sl + q - 1) % q);
+                }
+                if p > 1 {
+                    v.push(((pl + 1) % p) * q + sl);
+                    v.push(((pl + p - 1) % p) * q + sl);
+                }
+                v.sort_unstable();
+                v.dedup();
+                v
+            }
+        }
+    }
+
+    /// Every undirected ISL `(a, b)` with `a < b`, lexicographically
+    /// sorted.  On a chain this is exactly `[(0,1), (1,2), …]`, so index
+    /// `l` is the historical adjacency id between satellites `l` and
+    /// `l + 1` — the id [`crate::dynamic`] link outages and
+    /// `link_rate_factors` use.  O(links), not O(n²): this is the sparse
+    /// structure the simulator and router iterate instead of all pairs.
+    pub fn isl_links(&self) -> Vec<(SatId, SatId)> {
+        let mut links: Vec<(SatId, SatId)> = Vec::new();
+        for s in 0..self.n_sats {
+            for t in self.neighbors(s) {
+                if t > s {
+                    links.push((s, t));
+                }
+            }
+        }
+        links.sort_unstable();
+        links.dedup();
+        links
     }
 
     /// Physical separation between adjacent satellites, km (Appendix C
@@ -214,9 +422,32 @@ impl Constellation {
     }
 
     /// Time satellite `s` passes over the ground location the leader saw at
-    /// `t = 0` (revisit delay accumulates per §6.2(4)).
+    /// `t = 0` (revisit delay accumulates per §6.2(4)).  On a Walker shell
+    /// the delay accumulates along the in-plane slot: each plane is its own
+    /// leader–follower chain over its ground track.
     pub fn revisit_time_s(&self, s: SatId) -> f64 {
-        s as f64 * self.revisit_interval_s
+        let (_, slot) = self.plane_slot(s);
+        slot as f64 * self.revisit_interval_s
+    }
+
+    /// Orbit of satellite `s`.  Chains reproduce the leader–follower
+    /// revisit delay exactly ([`CircularOrbit::delayed`]); Walker shells
+    /// spread planes over RAAN and slots over phase with the standard
+    /// `F·360/(P·Q)` inter-plane phasing.
+    pub fn sat_orbit(&self, s: SatId) -> CircularOrbit {
+        match self.topology {
+            Topology::Chain => self.orbit.delayed(self.revisit_time_s(s)),
+            Topology::Walker { planes: p, sats_per_plane: q, phasing: f } => {
+                let (pl, sl) = (s / q, s % q);
+                CircularOrbit {
+                    raan_deg: self.orbit.raan_deg + 360.0 * pl as f64 / p as f64,
+                    phase_deg: self.orbit.phase_deg
+                        + 360.0 * sl as f64 / q as f64
+                        + 360.0 * (f * pl) as f64 / (p * q) as f64,
+                    ..self.orbit
+                }
+            }
+        }
     }
 
     /// Capture-group index of each tile in a frame: tile ids
@@ -384,6 +615,129 @@ mod tests {
         assert_eq!(frames.len(), 12);
         assert_eq!(frames[3].t_captured_s, 15.0);
         assert!(frames.iter().all(|f| f.n_tiles == 100));
+    }
+
+    #[test]
+    fn walker_spec_parse_and_display_roundtrip() {
+        let w = WalkerSpec::parse("walker:53:72x22").unwrap();
+        assert_eq!(w.inclination_deg, 53.0);
+        assert_eq!((w.planes, w.sats_per_plane, w.phasing), (72, 22, 0));
+        assert_eq!(w.n_sats(), 1584);
+        let w2 = WalkerSpec::parse("walker:97.4:10x10:3").unwrap();
+        assert_eq!(w2.phasing, 3);
+        assert_eq!(WalkerSpec::parse(&w2.to_string()).unwrap(), w2);
+        assert!(WalkerSpec::parse("walker:53:72").is_err());
+        assert!(WalkerSpec::parse("walker:53:0x22").is_err());
+        assert!(WalkerSpec::parse("walker:53:4x4:4").is_err());
+        assert!(WalkerSpec::parse("10").is_err());
+    }
+
+    #[test]
+    fn walker_constellation_validates_and_chain_links_match_legacy() {
+        let w = WalkerSpec::parse("walker:53:5x4:1").unwrap();
+        let c = Constellation::walker(&w, Device::JetsonOrinNano, 5.0, 100);
+        c.validate().unwrap();
+        let mut bad = c.clone();
+        bad.n_sats = 19;
+        assert!(matches!(bad.validate(), Err(ConstellationError::BadTopology { .. })));
+        // Chain links enumerate exactly the historical adjacency ids.
+        let chain = Constellation::uniform(6, Device::JetsonOrinNano, 5.0, 100);
+        let links = chain.isl_links();
+        assert_eq!(links, vec![(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]);
+        assert_eq!(chain.next_hop(2, 5), 3);
+        assert_eq!(chain.next_hop(2, 0), 1);
+    }
+
+    #[test]
+    fn prop_walker_grid_well_formed() {
+        property("walker well-formed", 40, |rng| {
+            let p = 1 + rng.below(8);
+            let q = 1 + rng.below(8);
+            let f = if p > 1 { rng.below(p) } else { 0 };
+            let w = WalkerSpec { inclination_deg: 53.0, planes: p, sats_per_plane: q, phasing: f };
+            let c = Constellation::walker(&w, Device::JetsonOrinNano, 5.0, 60);
+            c.validate().map_err(|e| e.to_string())?;
+            // No duplicate (plane, slot) assignments.
+            let mut slots: Vec<(usize, usize)> = (0..c.n_sats).map(|s| c.plane_slot(s)).collect();
+            slots.sort_unstable();
+            slots.dedup();
+            if slots.len() != c.n_sats {
+                return Err("duplicate plane/slot".into());
+            }
+            // Neighbor lists are symmetric, self-free and degree <= 4.
+            for s in 0..c.n_sats {
+                let ns = c.neighbors(s);
+                if ns.len() > 4 || ns.contains(&s) {
+                    return Err(format!("bad neighbor list for {s}: {ns:?}"));
+                }
+                for &t in &ns {
+                    if !c.neighbors(t).contains(&s) {
+                        return Err(format!("asymmetric link {s}<->{t}"));
+                    }
+                    if c.hops(s, t) != 1 {
+                        return Err(format!("neighbor {s}->{t} not 1 hop"));
+                    }
+                }
+            }
+            // hops is a symmetric metric realized by next_hop: every step
+            // decreases the distance by exactly 1.
+            for a in 0..c.n_sats {
+                for b in 0..c.n_sats {
+                    if c.hops(a, b) != c.hops(b, a) {
+                        return Err(format!("asymmetric hops {a},{b}"));
+                    }
+                    let mut at = a;
+                    let mut left = c.hops(a, b);
+                    while at != b {
+                        let nxt = c.next_hop(at, b);
+                        if c.hops(nxt, b) != left - 1 {
+                            return Err(format!("next_hop {at}->{nxt} toward {b} not shortest"));
+                        }
+                        at = nxt;
+                        left -= 1;
+                    }
+                }
+            }
+            // Sparse link count: a p x q torus has ~2pq undirected links
+            // (minus degenerate dimensions), never the dense pq(pq-1)/2.
+            let links = c.isl_links();
+            let expect = match (w.planes, w.sats_per_plane) {
+                (1, 1) => 0,
+                (1, 2) | (2, 1) => 1,
+                (1, q) | (q, 1) => q,
+                (2, 2) => 4,
+                (2, q) | (q, 2) => 3 * q,
+                (p, q) => 2 * p * q,
+            };
+            if links.len() != expect {
+                return Err(format!(
+                    "{}x{}: {} links, expected {expect}",
+                    w.planes,
+                    w.sats_per_plane,
+                    links.len()
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn walker_orbits_spread_planes_and_slots() {
+        let w = WalkerSpec::parse("walker:53:4x5:2").unwrap();
+        let c = Constellation::walker(&w, Device::JetsonOrinNano, 5.0, 100);
+        let o0 = c.sat_orbit(0);
+        let o1 = c.sat_orbit(1); // same plane, next slot
+        let o5 = c.sat_orbit(5); // next plane, slot 0
+        assert_eq!(o0.inclination_deg, 53.0);
+        assert!((o1.phase_deg - o0.phase_deg - 72.0).abs() < 1e-9);
+        assert!((o5.raan_deg - o0.raan_deg - 90.0).abs() < 1e-9);
+        // Inter-plane phasing: F * 360 / (P*Q) = 2 * 18 = 36 degrees.
+        assert!((o5.phase_deg - o0.phase_deg - 36.0).abs() < 1e-9);
+        // Chains keep the exact legacy delayed-orbit expression.
+        let chain = Constellation::jetson();
+        for s in 0..chain.n_sats {
+            assert_eq!(chain.sat_orbit(s), chain.orbit.delayed(chain.revisit_time_s(s)));
+        }
     }
 
     #[test]

@@ -486,7 +486,7 @@ impl EpochOrchestrator {
 
             let invalid: Option<String> = match &current {
                 None => Some("initial deployment".to_string()),
-                Some(ps) => invalidation(ps, &health, &mask, &self.wf),
+                Some(ps) => invalidation(ps, &health, &mask, &self.wf, &self.c),
             };
 
             let mut replanned = false;
@@ -739,6 +739,7 @@ pub(crate) fn invalidation(
     health: &HealthState,
     mask: &[usize],
     wf: &Workflow,
+    c: &Constellation,
 ) -> Option<String> {
     if ps.mask.as_slice() != mask {
         return Some(format!(
@@ -747,7 +748,7 @@ pub(crate) fn invalidation(
         ));
     }
     for p in &ps.pipelines {
-        for l in p.adjacencies_crossed(wf) {
+        for l in p.adjacencies_crossed(wf, c) {
             if health.link_factor.get(l).copied().unwrap_or(1.0) <= 0.0 {
                 return Some(format!("pipeline crosses dead link {l}"));
             }

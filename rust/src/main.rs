@@ -1,7 +1,8 @@
 //! OrbitChain command-line interface — the Layer-3 leader entrypoint.
 //!
 //! ```text
-//! orbitchain plan       [--device jetson|rpi] [--workflow N] [--deadline S] [--sats N] [--delta D]
+//! orbitchain plan       [--device jetson|rpi] [--workflow N] [--deadline S]
+//!                       [--sats N|walker:INC:PxQ[:F]] [--delta D]
 //! orbitchain route      [same flags]            # Algorithm 1 + traffic summary
 //! orbitchain simulate   [same flags] [--frames N] [--isl-bps R] [--backend B] [--json]
 //! orbitchain sweep      [same flags] [--deadlines A,B,..] [--workflows 2,3,4]
@@ -181,8 +182,14 @@ fn scenario_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<Scenar
         s.frame_deadline_s = v.parse()?;
     }
     if let Some(v) = flags.get("sats") {
-        s.n_sats = v.parse()?;
-        s.orbit_shift = false; // explicit sizing implies the uniform layout
+        if v.starts_with("walker:") {
+            let spec = orbitchain::constellation::WalkerSpec::parse(v)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            s = s.with_walker(spec);
+        } else {
+            s.n_sats = v.parse()?;
+            s.orbit_shift = false; // explicit sizing implies the uniform layout
+        }
     }
     if let Some(v) = flags.get("delta") {
         s.delta = v.parse()?;
@@ -349,7 +356,8 @@ fn print_help() {
          \x20             tipcue, mission, all)\n\
          \x20 infer       hardware-in-the-loop PJRT inference on synthetic tiles\n\
          \x20 version     print version\n\n\
-         common flags:  --device jetson|rpi --workflow N --deadline S --sats N\n\
+         common flags:  --device jetson|rpi --workflow N --deadline S\n\
+         \x20             --sats N|walker:INC:PxQ[:F] (e.g. walker:53:72x22)\n\
          \x20             --delta D --frames N --seed N --isl-bps R --json\n\
          sweep flags:   --deadlines A,B,.. --workflows 2,3,4 --sats-list 3,5,8\n\
          \x20             (--sats 3,5,8 works too)\n\
@@ -365,8 +373,9 @@ fn print_help() {
          \x20             --area-visibility --state-bytes B --backend B --no-baseline\n\
          tipcue flags:  --tip-rate R --cue-deadline S --reserve F --pass-dt S\n\
          \x20             --min-elevation D --backend B\n\
-         mission flags: --sats 10,25,50 --epochs N --epoch-frames N --mtbf S\n\
-         \x20             --detection-rate R --cue-deadline S --reserve F --fifo"
+         mission flags: --sats 10,25,walker:53:10x10 --epochs N --epoch-frames N\n\
+         \x20             --mtbf S --detection-rate R --cue-deadline S --reserve F\n\
+         \x20             --fifo"
     );
 }
 
@@ -832,22 +841,32 @@ fn cmd_dynamic(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 /// the cue response latency under FIFO vs priority links per constellation
 /// size (`--sats` takes a comma list, e.g. `10,25,50`).
 fn cmd_mission(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    // One `--sats` entry: a chain size or a Walker shell spec.
+    enum SatsEntry {
+        Uniform(usize),
+        Walker(orbitchain::constellation::WalkerSpec),
+    }
     // `--sats` is a comma list here; parse it before the scenario flags.
     let mut flags = flags.clone();
-    let sats_list: Vec<Option<usize>> = match flags.remove("sats") {
+    let sats_list: Vec<Option<SatsEntry>> = match flags.remove("sats") {
         None => vec![None],
         Some(raw) => raw
             .split(',')
             .filter(|p| !p.is_empty())
             .map(|p| {
+                let p = p.trim();
+                if p.starts_with("walker:") {
+                    let spec = orbitchain::constellation::WalkerSpec::parse(p)
+                        .map_err(|e| anyhow::anyhow!(e))?;
+                    return Ok(Some(SatsEntry::Walker(spec)));
+                }
                 let n: usize = p
-                    .trim()
                     .parse()
                     .map_err(|e| anyhow::anyhow!("bad --sats entry {p:?}: {e}"))?;
                 if n == 0 {
                     anyhow::bail!("--sats entries must be >= 1");
                 }
-                Ok(Some(n))
+                Ok(Some(SatsEntry::Uniform(n)))
             })
             .collect::<anyhow::Result<_>>()?,
     };
@@ -890,11 +909,16 @@ fn cmd_mission(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     };
 
     let mut reports = Vec::new();
-    for &ns in &sats_list {
+    for ns in &sats_list {
         let mut s = base.clone();
-        if let Some(n) = ns {
-            s.n_sats = n;
-            s.orbit_shift = false;
+        match ns {
+            None => {}
+            Some(SatsEntry::Uniform(n)) => {
+                s = s.with_uniform_sats(*n);
+            }
+            Some(SatsEntry::Walker(w)) => {
+                s = s.with_walker(*w);
+            }
         }
         s.mission = Some(spec.clone());
         let rep = MissionOrchestrator::new(&s).with_backend(backend).run_compare()?;
@@ -975,9 +999,14 @@ fn cmd_mission(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             ),
             None => ("-".into(), "-".into(), "-".into()),
         };
+        let sats_shown = match &sats_list[i] {
+            None => base.n_sats,
+            Some(SatsEntry::Uniform(n)) => *n,
+            Some(SatsEntry::Walker(w)) => w.n_sats(),
+        };
         println!(
             "{:>5} {:>8} {:>5} {:>6} {:>5} {:>5} {:>11} {:>11} {:>7} {:>11.3}",
-            sats_list[i].unwrap_or(base.n_sats),
+            sats_shown,
             rep.replans,
             rep.tips,
             rep.admitted,

@@ -642,6 +642,13 @@ impl MissionOrchestrator {
         let mut worst_latency = 0.0f64;
         let mut worst_breakdown = (0.0, 0.0, 0.0);
 
+        // Per-member orbits for the fleet pass sweep, hoisted out of the
+        // epoch/detection loops (on a chain, member `j` flies the leader's
+        // orbit delayed by its revisit offset; on a Walker shell, its
+        // plane/slot phasing).
+        let sat_orbits: Vec<_> =
+            (0..self.c.n_sats).map(|j| self.c.sat_orbit(j)).collect();
+
         for e in 0..n_epochs {
             let t0 = e as f64 * epoch_s;
             // Events during epoch `e-1` take effect at this boundary
@@ -657,7 +664,7 @@ impl MissionOrchestrator {
 
             let invalid: Option<String> = match &current {
                 None => Some("initial deployment".to_string()),
-                Some(ps) => invalidation(ps, &health, &mask, &self.wf),
+                Some(ps) => invalidation(ps, &health, &mask, &self.wf, &self.c),
             };
 
             let mut replanned = false;
@@ -821,37 +828,35 @@ impl MissionOrchestrator {
                 (frames * epoch_c.tiles_per_frame + warm + cues_injected) as f64;
 
             let t_sim = Instant::now();
-            let rep = Simulator::new(
+            let sim = Simulator::new(
                 &self.wf,
                 &self.db,
                 &epoch_c,
                 &instances,
                 pipelines,
                 &cfg,
-            )
-            .run();
+            );
 
             // The overlay epoch: identical inputs, opposite ISL queue
-            // discipline.  Nothing of it feeds back into the loop state,
-            // and its only consumed output is the per-cue outcomes — so
-            // epochs without cue injections skip it entirely.
-            if compare && !inj_cues.is_empty() {
-                let alt_cfg = SimConfig { priority_isl: !cfg.priority_isl, ..cfg.clone() };
-                let alt = Simulator::new(
-                    &self.wf,
-                    &self.db,
-                    &epoch_c,
-                    &instances,
-                    pipelines,
-                    &alt_cfg,
-                )
-                .run();
+            // discipline.  The disciplines cannot diverge before the first
+            // priority injection enters the system, so the simulator drives
+            // the shared prefix once and forks state at that boundary
+            // (`run_compare_pair`) instead of paying the full 2× simulate —
+            // byte-identical outcomes to two independent runs.  Nothing of
+            // the overlay feeds back into the loop state, and its only
+            // consumed output is the per-cue outcomes — so epochs without
+            // cue injections skip it entirely.
+            let rep = if compare && !inj_cues.is_empty() {
+                let (rep, alt) = sim.run_compare_pair();
                 for (k, &cue_idx) in inj_cues.iter().enumerate() {
                     let o = &alt.injections[k];
                     let finished_abs = o.finished_s.map(|t| t0 + t);
                     alt_outcomes.push((cue_idx, finished_abs, o.met_deadline()));
                 }
-            }
+                rep
+            } else {
+                sim.run()
+            };
             sim_ms += t_sim.elapsed().as_secs_f64() * 1e3;
 
             if rep.frame_latency_s > worst_latency {
@@ -929,21 +934,22 @@ impl MissionOrchestrator {
                     location: tip.target,
                     min_elevation_deg: self.spec.min_elevation_deg,
                 };
-                // Earliest acquisition of signal across the chain (each
-                // member flies the leader's orbit delayed by its revisit
-                // offset).
-                let best = (0..self.c.n_sats)
-                    .filter_map(|j| {
-                        visibility::next_pass(
-                            &self.c.orbit.delayed(self.c.revisit_time_s(j)),
-                            &station,
-                            t_dec,
-                            self.spec.cue_deadline_s,
-                            self.spec.pass_dt_s,
-                        )
-                        .map(|p| (j, p))
-                    })
-                    .min_by(|a, b| a.1.aos_s.total_cmp(&b.1.aos_s));
+                // Earliest acquisition of signal across the fleet.  The
+                // batched sweep amortizes the closed-form plane setup over
+                // satellites sharing a shell (one setup per shell instead
+                // of per satellite) and is bitwise identical to calling
+                // `next_pass` per member.
+                let best = visibility::next_pass_fleet(
+                    &sat_orbits,
+                    &station,
+                    t_dec,
+                    self.spec.cue_deadline_s,
+                    self.spec.pass_dt_s,
+                )
+                .into_iter()
+                .enumerate()
+                .filter_map(|(j, p)| p.map(|p| (j, p)))
+                .min_by(|a, b| a.1.aos_s.total_cmp(&b.1.aos_s));
                 match best {
                     None => {
                         rejected_no_pass += 1;
@@ -1343,6 +1349,42 @@ mod tests {
         assert_eq!(
             rep.metrics.samples("mission.cue_latency_fifo").len(),
             alt.completed
+        );
+    }
+
+    #[test]
+    fn compare_overlay_is_inert_to_the_primary_run() {
+        // `run_compare` forks simulator state at the first priority
+        // injection instead of re-simulating every epoch from scratch; on
+        // the pinned seed-7 trace the primary outcomes must stay
+        // byte-identical to a plain `run`, and the overlay must only add
+        // the FIFO-slot distribution.
+        let mut spec = quiet_spec(6);
+        spec.detection_rate = 0.4;
+        let mut s = jetson_with(spec);
+        s.isl_rate_bps = Some(16_000.0);
+        let plain = MissionOrchestrator::new(&s).run().expect("plain run");
+        let paired = MissionOrchestrator::new(&s).run_compare().expect("compare run");
+        assert_eq!(plain.completed, paired.completed);
+        assert_eq!(plain.response_latency_s, paired.response_latency_s);
+        assert_eq!(plain.cues.len(), paired.cues.len());
+        for (a, b) in plain.cues.iter().zip(paired.cues.iter()) {
+            assert_eq!(a.status, b.status);
+            assert_eq!(
+                a.finished_s.map(f64::to_bits),
+                b.finished_s.map(f64::to_bits)
+            );
+        }
+        let prio_a = plain.metrics.samples("mission.cue_latency_prio");
+        let prio_b = paired.metrics.samples("mission.cue_latency_prio");
+        assert_eq!(prio_a.len(), prio_b.len());
+        for (x, y) in prio_a.iter().zip(prio_b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert!(plain.metrics.samples("mission.cue_latency_fifo").is_empty());
+        assert_eq!(
+            paired.metrics.samples("mission.cue_latency_fifo").len(),
+            paired.alt.as_ref().unwrap().completed
         );
     }
 

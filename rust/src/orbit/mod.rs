@@ -64,7 +64,7 @@ pub struct LatLon {
 }
 
 /// A circular low-Earth orbit.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CircularOrbit {
     /// Altitude above the mean Earth surface, km.
     pub altitude_km: f64,

@@ -8,6 +8,7 @@
 //! generated vs ~1 TB/day downlinkable; a 110×110 km frame ≈ 500 MB).
 
 use super::{CircularOrbit, GroundStation};
+use crate::constellation::WalkerSpec;
 
 /// A constellation preset for the ground-contact study.
 #[derive(Debug, Clone)]
@@ -45,6 +46,26 @@ pub fn all() -> Vec<ConstellationPreset> {
         mk("Dove-2", 475.0, 97.0, 4, 9.0, 25.0),
         mk("RapidEye", 630.0, 97.8, 5, 11.0, 20.0),
         mk("Starlink", 550.0, 53.0, 4, 15.0, 75.0),
+    ]
+}
+
+/// Walker-delta shell presets for the mega-constellation scale study:
+/// `(name, spec)` pairs covering the 100/250/1000-satellite benchmark
+/// rows plus the Starlink-like 53° shell (72 planes × 22 sats) the
+/// Fig. 17 "Starlink" preset's orbit belongs to.  Parse/format round-trips
+/// through the `walker:INC:PxQ[:F]` CLI syntax.
+pub fn walker_shells() -> Vec<(&'static str, WalkerSpec)> {
+    let mk = |inc: f64, p: usize, q: usize, f: usize| WalkerSpec {
+        inclination_deg: inc,
+        planes: p,
+        sats_per_plane: q,
+        phasing: f,
+    };
+    vec![
+        ("shell-100", mk(53.0, 10, 10, 1)),
+        ("shell-250", mk(53.0, 25, 10, 1)),
+        ("shell-1000", mk(53.0, 40, 25, 1)),
+        ("starlink-53", mk(53.0, 72, 22, 1)),
     ]
 }
 
@@ -104,6 +125,19 @@ mod tests {
         let sats = satellites(p);
         assert_eq!(sats.len(), 5);
         assert!((sats[1].phase_deg - 72.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn walker_shell_presets_are_valid_specs() {
+        let shells = walker_shells();
+        assert_eq!(shells.len(), 4);
+        let sizes: Vec<usize> = shells.iter().map(|(_, w)| w.n_sats()).collect();
+        assert_eq!(sizes, vec![100, 250, 1000, 1584]);
+        for (name, w) in &shells {
+            assert!(w.phasing < w.planes, "{name}");
+            let reparsed = WalkerSpec::parse(&w.to_string()).unwrap();
+            assert_eq!(&reparsed, w, "{name} round-trip");
+        }
     }
 
     #[test]

@@ -140,42 +140,7 @@ impl ElevationSeries {
     /// (`ψ_max ≥ 90°` breaks the positive-threshold bracket guarantee) —
     /// in which case callers fall back to the sweep oracle.
     pub fn new(orbit: &CircularOrbit, target: &GroundStation) -> Option<Self> {
-        let r = orbit.radius_km();
-        if r <= EARTH_RADIUS_KM {
-            return None;
-        }
-        if orbit.mean_motion() < Self::MIN_CARRIER_RATIO * EARTH_OMEGA {
-            return None;
-        }
-        let e = target.min_elevation_deg.to_radians();
-        if !(0.0..PI / 2.0).contains(&e) {
-            return None;
-        }
-        let x = (EARTH_RADIUS_KM / r) * e.cos();
-        if !(0.0..1.0).contains(&x) {
-            return None;
-        }
-        let psi_max = x.acos() - e;
-        if psi_max <= 0.0 {
-            return None;
-        }
-        let n = orbit.mean_motion();
-        let phi = target.location.lat_deg.to_radians();
-        let lam = target.location.lon_deg.to_radians();
-        let inc = orbit.inclination_deg.to_radians();
-        let raan = orbit.raan_deg.to_radians();
-        let u0 = orbit.phase_deg.to_radians();
-        Some(ElevationSeries {
-            n,
-            a: phi.cos() * (1.0 + inc.cos()) / 2.0,
-            p1: u0 - lam + raan,
-            b: phi.cos() * (1.0 - inc.cos()) / 2.0,
-            p2: u0 + lam - raan,
-            c: phi.sin() * inc.sin(),
-            p3: u0 - PI / 2.0,
-            threshold: psi_max.cos(),
-            radius_km: r,
-        })
+        PlaneSeries::new(orbit, target).map(|plane| plane.series(orbit))
     }
 
     /// Orbital period of the carrier, seconds.
@@ -312,6 +277,89 @@ impl ElevationSeries {
     }
 }
 
+/// The phase-independent core of an [`ElevationSeries`]: validity checks,
+/// tone amplitudes, carrier and threshold depend only on the orbit's
+/// *altitude and inclination* plus the target — shared by every satellite
+/// of a plane, and indeed of a whole Walker shell, whose members differ
+/// only in `phase_deg` / `raan_deg`.  Those enter the series purely as the
+/// tone phases `p₁ = u₀ − λ + Ω`, `p₂ = u₀ + λ − Ω`, `p₃ = u₀ − π/2`, which
+/// [`PlaneSeries::series`] attaches per satellite with exactly the
+/// arithmetic the scalar [`ElevationSeries::new`] performs (which in fact
+/// delegates here) — so batched fleet prediction is **bitwise identical**
+/// to per-satellite scalar calls while running the validity checks and
+/// amplitude trig once per shell instead of once per satellite.
+#[derive(Debug, Clone, Copy)]
+pub struct PlaneSeries {
+    n: f64,
+    a: f64,
+    b: f64,
+    c: f64,
+    /// Target longitude, radians (combined with each satellite's RAAN into
+    /// the tone phases).
+    lam: f64,
+    threshold: f64,
+    radius_km: f64,
+}
+
+impl PlaneSeries {
+    /// Precompute the shared geometry for one (shell, target) pair; `None`
+    /// outside the closed form's validity envelope (same envelope as
+    /// [`ElevationSeries::new`], which is phase-independent too).
+    pub fn new(orbit: &CircularOrbit, target: &GroundStation) -> Option<Self> {
+        let r = orbit.radius_km();
+        if r <= EARTH_RADIUS_KM {
+            return None;
+        }
+        if orbit.mean_motion() < ElevationSeries::MIN_CARRIER_RATIO * EARTH_OMEGA {
+            return None;
+        }
+        let e = target.min_elevation_deg.to_radians();
+        if !(0.0..PI / 2.0).contains(&e) {
+            return None;
+        }
+        let x = (EARTH_RADIUS_KM / r) * e.cos();
+        if !(0.0..1.0).contains(&x) {
+            return None;
+        }
+        let psi_max = x.acos() - e;
+        if psi_max <= 0.0 {
+            return None;
+        }
+        let n = orbit.mean_motion();
+        let phi = target.location.lat_deg.to_radians();
+        let lam = target.location.lon_deg.to_radians();
+        let inc = orbit.inclination_deg.to_radians();
+        Some(PlaneSeries {
+            n,
+            a: phi.cos() * (1.0 + inc.cos()) / 2.0,
+            b: phi.cos() * (1.0 - inc.cos()) / 2.0,
+            c: phi.sin() * inc.sin(),
+            lam,
+            threshold: psi_max.cos(),
+            radius_km: r,
+        })
+    }
+
+    /// Attach one satellite's phase and RAAN.  `orbit` must share the
+    /// plane's altitude and inclination (debug-asserted via the carrier).
+    pub fn series(&self, orbit: &CircularOrbit) -> ElevationSeries {
+        debug_assert_eq!(orbit.mean_motion().to_bits(), self.n.to_bits());
+        let raan = orbit.raan_deg.to_radians();
+        let u0 = orbit.phase_deg.to_radians();
+        ElevationSeries {
+            n: self.n,
+            a: self.a,
+            p1: u0 - self.lam + raan,
+            b: self.b,
+            p2: u0 + self.lam - raan,
+            c: self.c,
+            p3: u0 - PI / 2.0,
+            threshold: self.threshold,
+            radius_km: self.radius_km,
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Public entry points (closed form).
 // ---------------------------------------------------------------------------
@@ -415,6 +463,55 @@ pub fn next_pass(
         los_s: los,
         max_elevation_deg: series.elevation_deg(peak),
     })
+}
+
+/// Batched [`next_pass`] over a fleet — the SoA propagation path of the
+/// tip-and-cue scheduler at constellation scale.  One [`PlaneSeries`] is
+/// built per distinct `(altitude, inclination)` shell (exact bit keys) and
+/// shared by every member satellite, whose phase/RAAN attach in O(1);
+/// orbits outside the closed form's envelope fall back to the per-orbit
+/// sweep oracle, exactly as [`next_pass`] does.  Entry `k` of the result
+/// is bitwise identical to `next_pass(&orbits[k], target, …)` — a chain's
+/// [`CircularOrbit::delayed`] followers all share one series, as do all
+/// `P·Q` members of a Walker shell.
+pub fn next_pass_fleet(
+    orbits: &[CircularOrbit],
+    target: &GroundStation,
+    after_s: f64,
+    horizon_s: f64,
+    dt_s: f64,
+) -> Vec<Option<PassWindow>> {
+    if dt_s <= 0.0 || horizon_s <= 0.0 {
+        return vec![None; orbits.len()];
+    }
+    // Tiny linear cache: real fleets have a handful of distinct shells.
+    let mut shells: Vec<((u64, u64), Option<PlaneSeries>)> = Vec::new();
+    let mut out = Vec::with_capacity(orbits.len());
+    for orbit in orbits {
+        let key = (orbit.altitude_km.to_bits(), orbit.inclination_deg.to_bits());
+        let plane = match shells.iter().find(|(k, _)| *k == key) {
+            Some(&(_, p)) => p,
+            None => {
+                let p = PlaneSeries::new(orbit, target);
+                shells.push((key, p));
+                p
+            }
+        };
+        out.push(match plane {
+            Some(p) => {
+                let series = p.series(orbit);
+                series.first_pass(after_s, after_s + horizon_s).map(|(aos, los, peak)| {
+                    PassWindow {
+                        aos_s: aos,
+                        los_s: los,
+                        max_elevation_deg: series.elevation_deg(peak),
+                    }
+                })
+            }
+            None => next_pass_sweep(orbit, target, after_s, horizon_s, dt_s),
+        });
+    }
+    out
 }
 
 // ---------------------------------------------------------------------------
@@ -945,6 +1042,53 @@ mod tests {
                 }
                 (c, f) => Err(format!("existence mismatch: {c:?} vs fine {f:?}")),
             }
+        });
+    }
+
+    /// The SoA fleet path must be *bitwise* identical to per-satellite
+    /// scalar calls — chains of delayed followers and whole Walker shells
+    /// share one [`PlaneSeries`], and out-of-envelope members fall back to
+    /// the same sweep oracle.
+    #[test]
+    fn prop_fleet_next_pass_bitwise_matches_scalar() {
+        use crate::constellation::{Constellation, WalkerSpec};
+        use crate::profile::Device;
+        property("fleet next_pass == scalar next_pass", 20, |rng| {
+            let (orbit, mut target) = random_geometry(rng);
+            target.min_elevation_deg = rng.range(5.0, 60.0);
+            let after = rng.range(0.0, 500.0);
+            let horizon = rng.range(60.0, 600.0);
+            let dt = rng.range(0.5, 5.0);
+            // A chain of delayed followers on one shell...
+            let mut orbits: Vec<CircularOrbit> =
+                (0..6).map(|s| orbit.delayed(10.0 * s as f64)).collect();
+            // ...a Walker shell of a different inclination...
+            let w = WalkerSpec {
+                inclination_deg: rng.range(40.0, 100.0),
+                planes: 1 + rng.below(4),
+                sats_per_plane: 1 + rng.below(5),
+                phasing: 0,
+            };
+            let c = Constellation::walker(&w, Device::JetsonOrinNano, 5.0, 100);
+            orbits.extend((0..c.n_sats).map(|s| c.sat_orbit(s)));
+            // ...and one member outside the closed-form envelope.
+            orbits.push(CircularOrbit {
+                altitude_km: 35_786.0,
+                inclination_deg: 0.0,
+                raan_deg: 0.0,
+                phase_deg: rng.range(0.0, 360.0),
+            });
+            let fleet = next_pass_fleet(&orbits, &target, after, horizon, dt);
+            for (k, o) in orbits.iter().enumerate() {
+                let scalar = next_pass(o, &target, after, horizon, dt);
+                if fleet[k] != scalar {
+                    return Err(format!(
+                        "orbit {k}: fleet {:?} != scalar {scalar:?}",
+                        fleet[k]
+                    ));
+                }
+            }
+            Ok(())
         });
     }
 

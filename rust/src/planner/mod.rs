@@ -27,7 +27,7 @@
 //!   fractional in the relaxation and explode the B&B tree; spare
 //!   deployments that survive are real usable capacity.
 
-use crate::constellation::Constellation;
+use crate::constellation::{CaptureGroup, Constellation, Topology};
 use crate::lp::{solve_milp, Cmp, Lp, MilpOptions, MilpResult};
 use crate::profile::ProfileDb;
 use crate::workflow::Workflow;
@@ -255,6 +255,27 @@ pub fn plan_reserved(
         }
     }
 
+    // Mega-constellation decomposition: a shift-free Walker shell with no
+    // deployment mask block-diagonalizes Program (10) — every plane is an
+    // identical chain-style subproblem over its share of the frame.  Solve
+    // one plane-sized MILP and replicate, instead of building a fleet-sized
+    // tableau (5·nm·Q + Q + 1 variables instead of 5·nm·P·Q + P·Q + 1).
+    if let Topology::Walker { planes, sats_per_plane, .. } = constellation.topology {
+        let uniform_capture = constellation.capture_groups.len() == 1
+            && constellation.capture_groups[0].first_sat == 0
+            && constellation.capture_groups[0].last_sat == constellation.n_sats - 1;
+        if planes > 1 && uniform_capture && banned.is_empty() {
+            return plan_walker_per_plane(
+                workflow,
+                profiles,
+                constellation,
+                planes,
+                sats_per_plane,
+                cue_reserve,
+            );
+        }
+    }
+
     let nm = workflow.len();
     let ns = constellation.n_sats;
     let rho = workflow.workload_factors()?;
@@ -454,6 +475,58 @@ pub fn plan_reserved(
             })
         }
     }
+}
+
+/// Per-plane decomposition of Program (10) for a uniform Walker shell.
+///
+/// With a single fleet-wide capture group, no shift structure, and no
+/// deployment mask, the MILP's constraint matrix is block diagonal in the
+/// planes: Eqs. (4)–(9) are per-satellite, and the one cumulative Eq. (13)
+/// row sums identical per-satellite capacity terms.  Solving one
+/// plane-sized chain (Q satellites, ⌈tiles/P⌉ of the frame) and
+/// replicating its placements across all P planes is sound: the fleet
+/// capacity is P·cap_plane ≥ φ·ρ·P·⌈tiles/P⌉·scale ≥ φ·ρ·tiles·scale, so
+/// the replicated plan satisfies the fleet-level Eq. (13) at the same φ,
+/// and every per-satellite row holds because each satellite runs the same
+/// allocation the sub-solve certified.
+fn plan_walker_per_plane(
+    workflow: &Workflow,
+    profiles: &ProfileDb,
+    constellation: &Constellation,
+    planes: usize,
+    sats_per_plane: usize,
+    cue_reserve: f64,
+) -> Result<DeploymentPlan, PlanError> {
+    let tiles_plane = constellation.tiles_per_frame.div_ceil(planes);
+    let mut plane_c = constellation.clone();
+    plane_c.n_sats = sats_per_plane;
+    plane_c.topology = Topology::Chain;
+    plane_c.tiles_per_frame = tiles_plane;
+    plane_c.capture_groups = vec![CaptureGroup {
+        first_sat: 0,
+        last_sat: sats_per_plane - 1,
+        tiles: tiles_plane,
+    }];
+    let sub = plan_reserved(workflow, profiles, &plane_c, &[], cue_reserve)?;
+    let nm = sub.n_funcs;
+    let ns = constellation.n_sats;
+    let mut placements = Vec::with_capacity(nm * ns);
+    for i in 0..nm {
+        for j in 0..ns {
+            let mut p = sub.placement(i, j % sats_per_plane).clone();
+            p.sat = j;
+            placements.push(p);
+        }
+    }
+    Ok(DeploymentPlan {
+        phi: sub.phi,
+        placements,
+        n_funcs: nm,
+        n_sats: ns,
+        proven: sub.proven,
+        nodes: sub.nodes,
+        cue_reserve: sub.cue_reserve,
+    })
 }
 
 /// Verify a plan against Eqs. (4)–(9) + cumulative (13) directly (used by
@@ -711,6 +784,45 @@ mod tests {
         assert_eq!(a.phi, b.phi);
         assert_eq!(a.placements, b.placements);
         assert_eq!(b.cue_reserve, 0.0);
+    }
+
+    #[test]
+    fn walker_plan_decomposes_per_plane_and_verifies() {
+        // A 4×3 Walker shell with a uniform 120-tile frame decomposes into
+        // one 3-sat chain solve over 30 tiles, replicated across planes.
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let spec = crate::constellation::WalkerSpec {
+            inclination_deg: 53.0,
+            planes: 4,
+            sats_per_plane: 3,
+            phasing: 1,
+        };
+        let c = Constellation::walker(&spec, Device::JetsonOrinNano, 5.0, 120);
+        assert_eq!(c.n_sats, 12);
+        let p = plan(&wf, &db, &c).expect("walker plan");
+        assert!(p.feasible(), "phi={}", p.phi);
+        assert_eq!(p.n_sats, 12);
+        let violations = verify_plan(&p, &wf, &db, &c);
+        assert!(violations.is_empty(), "{violations:?}");
+        // Placements replicate plane-to-plane (satellite j mirrors j mod Q).
+        for i in 0..wf.len() {
+            for j in 0..12 {
+                let a = p.placement(i, j);
+                let b = p.placement(i, j % 3);
+                assert_eq!(a.sat, j);
+                assert_eq!(a.deployed, b.deployed, "[{i}][{j}]");
+                assert_eq!(a.cpu_quota, b.cpu_quota, "[{i}][{j}]");
+                assert_eq!(a.gpu, b.gpu, "[{i}][{j}]");
+                assert_eq!(a.gpu_slice_s, b.gpu_slice_s, "[{i}][{j}]");
+            }
+        }
+        // φ exactly equals the plane-sized chain solve (the planner reads
+        // only deadline/groups/n_sats/tiles, none of the orbit/ISL fields).
+        let chain =
+            plan(&wf, &db, &Constellation::uniform(3, Device::JetsonOrinNano, 5.0, 30))
+                .unwrap();
+        assert_eq!(p.phi, chain.phi);
     }
 
     #[test]

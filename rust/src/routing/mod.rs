@@ -75,19 +75,33 @@ impl Pipeline {
         bytes.max(0.0)
     }
 
-    /// Chain adjacencies (index `l` = the undirected link between sats `l`
-    /// and `l+1`) that some inter-stage transfer of this pipeline crosses.
-    /// The dynamic layer uses this to detect routes invalidated by a link
+    /// Undirected ISL links (indices into
+    /// [`Constellation::isl_links`]) that some inter-stage transfer of this
+    /// pipeline crosses, following the topology's `next_hop` forwarding.
+    /// On a chain, link `l` is the adjacency between sats `l` and `l+1`, so
+    /// this reproduces the legacy `a.min(b)..a.max(b)` range exactly.  The
+    /// dynamic layer uses this to detect routes invalidated by a link
     /// outage.
-    pub fn adjacencies_crossed(&self, wf: &Workflow) -> Vec<usize> {
+    pub fn adjacencies_crossed(
+        &self,
+        wf: &Workflow,
+        constellation: &Constellation,
+    ) -> Vec<usize> {
         let mut used = std::collections::BTreeSet::new();
+        let links = constellation.isl_links();
         for (u, v, delta) in wf.edge_list() {
             if delta <= 0.0 {
                 continue;
             }
-            let (a, b) = (self.stages[u].sat, self.stages[v].sat);
-            for l in a.min(b)..a.max(b) {
+            let (mut a, b) = (self.stages[u].sat, self.stages[v].sat);
+            while a != b {
+                let n = constellation.next_hop(a, b);
+                let key = (a.min(n), a.max(n));
+                let l = links
+                    .binary_search(&key)
+                    .expect("next_hop step must be an ISL");
                 used.insert(l);
+                a = n;
             }
         }
         used.into_iter().collect()
@@ -227,11 +241,20 @@ pub fn route(
             left -= take;
         }
     }
-    for _ in 0..4 {
-        let moved = improve_pass(wf, profiles, constellation, &rho, &mut ledger, &mut chunks);
-        let swapped = swap_pass(wf, profiles, constellation, &rho, &mut chunks);
-        if !moved && !swapped {
-            break;
+    // The relocation/swap sweeps are quadratic in the chunk count; at
+    // mega-constellation scale (hundreds of satellites, thousands of unit
+    // chunks) they would dominate planning time for a marginal traffic
+    // gain, so they only run at the scales the Fig. 12/13 studies cover.
+    // Behavior at 10–50 satellites is unchanged.
+    let do_sweeps = chunks.len() <= 512 && constellation.n_sats <= 256;
+    if do_sweeps {
+        for _ in 0..4 {
+            let moved =
+                improve_pass(wf, profiles, constellation, &rho, &mut ledger, &mut chunks);
+            let swapped = swap_pass(wf, profiles, constellation, &rho, &mut chunks);
+            if !moved && !swapped {
+                break;
+            }
         }
     }
     // Merge chunks that share (group, stage assignment).
@@ -441,7 +464,8 @@ fn build_pipeline(
     // Dummy instance ν₀: connect each in-degree-0 function to its instance
     // on the *first* satellite (in movement order) with remaining capacity.
     for src in wf.sources() {
-        let st = nearest_instance(ledger, group, src, None).ok_or_else(|| missing(src))?;
+        let st = nearest_instance(ledger, constellation, group, src, None)
+            .ok_or_else(|| missing(src))?;
         chosen[src] = Some(st);
         queue.push_back(src);
     }
@@ -452,7 +476,7 @@ fn build_pipeline(
             if chosen[v].is_some() {
                 continue; // exactly one instance per function (lines 7–8)
             }
-            let st = nearest_instance(ledger, group, v, Some(from_sat))
+            let st = nearest_instance(ledger, constellation, group, v, Some(from_sat))
                 .ok_or_else(|| missing(v))?;
             chosen[v] = Some(st);
             queue.push_back(v);
@@ -478,11 +502,14 @@ fn build_pipeline(
 }
 
 /// Instance of `func` with positive remaining capacity on the group's
-/// satellites, minimizing hops from `from_sat` (or the first satellite in
-/// movement order for sources); ties prefer the larger remaining capacity
-/// (keeps pipelines wide and reduces the pipeline count).
+/// satellites, minimizing topology hops from `from_sat` (or the first
+/// satellite in movement order for sources); ties prefer the larger
+/// remaining capacity (keeps pipelines wide and reduces the pipeline
+/// count).  On a chain `hops` is `abs_diff`, matching the original
+/// chain-only implementation exactly.
 fn nearest_instance(
     ledger: &Ledger,
+    constellation: &Constellation,
     group: &crate::constellation::CaptureGroup,
     func: usize,
     from_sat: Option<usize>,
@@ -495,8 +522,8 @@ fn nearest_instance(
                 continue;
             }
             let hops = match from_sat {
-                Some(f) => f.abs_diff(sat),
-                None => sat, // distance from the "first" satellite
+                Some(f) => constellation.hops(f, sat),
+                None => constellation.hops(0, sat), // from the "first" satellite
             };
             let better = match &best {
                 None => true,
@@ -781,5 +808,57 @@ mod tests {
         let r = route_strict(&wf, &db, &c, &plan).expect("feasible plan routes");
         assert!(r.unrouted_tiles < 1e-6);
         assert!(r.failures.is_empty());
+    }
+
+    #[test]
+    fn adjacencies_crossed_matches_legacy_chain_range() {
+        // On a chain, the next-hop walk must reproduce the original
+        // `a.min(b)..a.max(b)` adjacency range for every pipeline.
+        let (wf, db, c, plan) = setup();
+        let r = route(&wf, &db, &c, &plan).unwrap();
+        for p in &r.pipelines {
+            let mut legacy = std::collections::BTreeSet::new();
+            for (u, v, delta) in wf.edge_list() {
+                if delta <= 0.0 {
+                    continue;
+                }
+                let (a, b) = (p.stages[u].sat, p.stages[v].sat);
+                for l in a.min(b)..a.max(b) {
+                    legacy.insert(l);
+                }
+            }
+            let legacy: Vec<usize> = legacy.into_iter().collect();
+            assert_eq!(p.adjacencies_crossed(&wf, &c), legacy);
+        }
+    }
+
+    #[test]
+    fn routes_walker_constellation_fully() {
+        // A 4×3 Walker shell routes its whole frame; crossed links must be
+        // valid indices into the grid's undirected link list.
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let spec = crate::constellation::WalkerSpec {
+            inclination_deg: 53.0,
+            planes: 4,
+            sats_per_plane: 3,
+            phasing: 1,
+        };
+        let c = Constellation::walker(
+            &spec,
+            crate::profile::Device::JetsonOrinNano,
+            5.0,
+            120,
+        );
+        let plan = planner::plan(&wf, &db, &c).expect("walker plan");
+        assert!(plan.feasible(), "phi={}", plan.phi);
+        let r = route(&wf, &db, &c, &plan).unwrap();
+        assert!(r.unrouted_tiles < 1e-6, "unrouted={}", r.unrouted_tiles);
+        let n_links = c.isl_links().len();
+        for p in &r.pipelines {
+            for l in p.adjacencies_crossed(&wf, &c) {
+                assert!(l < n_links, "link {l} out of {n_links}");
+            }
+        }
     }
 }
