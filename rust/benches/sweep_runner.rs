@@ -5,7 +5,8 @@
 //! stay bit-identical.  Also micro-benches the `Metrics` hot path (every
 //! simulator event increments a counter) across its three generations:
 //! interned `MetricId` (current), name-based lookup-first, and the
-//! original allocate-a-`String`-per-call `entry()` spelling.
+//! original allocate-a-`String`-per-call `entry()` spelling — plus the
+//! sweep-aggregation `merge` path (one intern per name per registry).
 //! Run: `cargo bench --bench sweep_runner`.
 
 use std::time::Instant;
@@ -59,6 +60,40 @@ fn bench_metrics_hot_path() {
         t_naive * 1e3,
         t_naive / t_id.max(1e-9),
         t_naive / t_name.max(1e-9)
+    );
+    bench_metrics_merge();
+}
+
+/// `Metrics::merge` on a sweep-shaped workload: many small per-point
+/// registries (counter + samples under the same names) folded into one.
+/// Since the single-intern-per-name change, each name costs one hash
+/// lookup per merged registry instead of two.
+fn bench_metrics_merge() {
+    const POINTS: usize = 2_000;
+    const KEYS: usize = 32;
+    let names: Vec<String> = (0..KEYS).map(|k| format!("sweep.metric.{k}")).collect();
+    let mut point = Metrics::new();
+    for name in &names {
+        point.inc(name, 1.0);
+        for v in 0..8 {
+            point.observe(name, v as f64);
+        }
+    }
+
+    let t0 = Instant::now();
+    let mut merged = Metrics::new();
+    for _ in 0..POINTS {
+        merged.merge(&point);
+    }
+    let t_merge = t0.elapsed().as_secs_f64();
+
+    assert_eq!(merged.counter(&names[0]), POINTS as f64);
+    assert_eq!(merged.samples(&names[0]).len(), POINTS * 8);
+    println!(
+        "metrics merge ({POINTS} registries x {KEYS} keys): {:.1} ms \
+         ({:.0} merges/ms)",
+        t_merge * 1e3,
+        POINTS as f64 / (t_merge * 1e3).max(1e-9)
     );
 }
 

@@ -49,6 +49,7 @@ use crate::scenario::{
 };
 use crate::sim::{self, InstanceSpec, SimConfig, Simulator};
 use crate::telemetry::Metrics;
+use crate::trace::{TraceKind, TraceLog, TraceSpec, NO_PARENT};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 use crate::util::stats;
@@ -235,6 +236,11 @@ pub struct DynamicReport {
     pub route_ms: f64,
     pub sim_ms: f64,
     pub notes: Vec<String>,
+    /// Flight-recorder journal ([`crate::trace`]) when tracing was enabled
+    /// via [`EpochOrchestrator::with_trace`]: every epoch's simulator
+    /// events on the mission timeline plus the orchestrator's own
+    /// re-plan/migration/cue events.
+    pub trace: Option<TraceLog>,
     pub metrics: Metrics,
 }
 
@@ -329,6 +335,7 @@ pub struct EpochOrchestrator {
     planner: Box<dyn PlannerBackend>,
     router: Box<dyn RouterBackend>,
     timeline: Timeline,
+    trace: Option<TraceSpec>,
 }
 
 impl EpochOrchestrator {
@@ -374,6 +381,7 @@ impl EpochOrchestrator {
             planner: Box::new(MilpPlanner),
             router: Box::new(OrbitChainRouter),
             timeline,
+            trace: None,
         }
     }
 
@@ -409,6 +417,16 @@ impl EpochOrchestrator {
     /// Replay a declared fault trace instead of the generated one.
     pub fn with_timeline(mut self, timeline: Timeline) -> Self {
         self.timeline = timeline;
+        self
+    }
+
+    /// Enable the flight recorder ([`crate::trace`]): each epoch's
+    /// simulator runs with a ring of `spec.capacity` events, and the
+    /// report's `trace` journal collects them on the mission timeline
+    /// together with the orchestrator's re-plan/migration/cue events.
+    /// Tracing never changes an outcome (pinned by tests).
+    pub fn with_trace(mut self, spec: TraceSpec) -> Self {
+        self.trace = Some(spec);
         self
     }
 
@@ -465,6 +483,7 @@ impl EpochOrchestrator {
         let mut sim_ms = 0.0f64;
         let mut worst_latency = 0.0f64;
         let mut worst_breakdown = (0.0, 0.0, 0.0);
+        let mut trace_log: Option<TraceLog> = self.trace.map(|_| TraceLog::default());
 
         for e in 0..self.spec.epochs {
             let t0 = e as f64 * epoch_s;
@@ -493,11 +512,22 @@ impl EpochOrchestrator {
             let mut epoch_migrations = 0usize;
             let mut epoch_mig_bytes = 0.0f64;
             let mut epoch_downtime = 0.0f64;
-            let mut migration_ready: Vec<(usize, f64)> = Vec::new();
+            let mut migration_ready: Vec<(usize, f64, f64)> = Vec::new();
 
             if let Some(reason) = &invalid {
                 let initial = current.is_none();
                 if initial || self.spec.replan {
+                    let begin = trace_log.as_mut().map(|log| {
+                        log.push(
+                            e as u32,
+                            t0,
+                            NO_PARENT,
+                            TraceKind::ReplanBegin {
+                                epoch: e as u32,
+                                reason: reason.as_str().into(),
+                            },
+                        )
+                    });
                     match build_tables(
                         self.planner.as_ref(),
                         self.router.as_ref(),
@@ -529,6 +559,31 @@ impl EpochOrchestrator {
                                 replans += 1;
                                 replanned = true;
                                 notes.push(format!("epoch {e}: re-planned ({reason})"));
+                                merged.observe("trace.replan_latency", m_down);
+                            }
+                            if let (Some(log), Some(b)) = (trace_log.as_mut(), begin) {
+                                for &(idx, ready, bytes) in &migration_ready {
+                                    log.push(
+                                        e as u32,
+                                        t0,
+                                        b,
+                                        TraceKind::Migration {
+                                            sat: built.instances[idx].sat as u32,
+                                            bytes,
+                                            ready_s: ready,
+                                        },
+                                    );
+                                }
+                                log.push(
+                                    e as u32,
+                                    t0,
+                                    b,
+                                    TraceKind::ReplanEnd {
+                                        epoch: e as u32,
+                                        migrations: epoch_migrations as u32,
+                                        downtime_s: epoch_downtime,
+                                    },
+                                );
                             }
                             current = Some(built);
                         }
@@ -540,6 +595,18 @@ impl EpochOrchestrator {
                             notes.push(format!(
                                 "epoch {e}: re-plan failed ({err}); riding through"
                             ));
+                            if let (Some(log), Some(b)) = (trace_log.as_mut(), begin) {
+                                log.push(
+                                    e as u32,
+                                    t0,
+                                    b,
+                                    TraceKind::ReplanEnd {
+                                        epoch: e as u32,
+                                        migrations: 0,
+                                        downtime_s: 0.0,
+                                    },
+                                );
+                            }
                         }
                     }
                 }
@@ -568,7 +635,7 @@ impl EpochOrchestrator {
                     i2
                 })
                 .collect();
-            for &(idx, ready) in &migration_ready {
+            for &(idx, ready, _) in &migration_ready {
                 if let Some(i2) = instances.get_mut(idx) {
                     i2.ready_s = i2.ready_s.max(ready);
                 }
@@ -612,6 +679,7 @@ impl EpochOrchestrator {
                 link_rate_factors: Some(health.link_factor.clone()),
                 warm_tiles: warm,
                 injections: cue_injections,
+                trace: self.trace,
                 ..Default::default()
             };
             injected += (frames * epoch_c.tiles_per_frame + warm + cue_tiles) as f64;
@@ -627,6 +695,42 @@ impl EpochOrchestrator {
             )
             .run();
             sim_ms += t_sim.elapsed().as_secs_f64() * 1e3;
+
+            if let (Some(log), Some(rec)) = (trace_log.as_mut(), rep.trace.as_deref()) {
+                log.absorb(e as u32, t0, rec);
+                crate::trace::spans::observe_spans(
+                    &mut merged,
+                    &crate::trace::spans::assemble(rec),
+                );
+                // The timeline's cue arrivals are anonymous priority
+                // injections; journal their lifecycle with a running cue
+                // id (`sat` is the source the router actually picked,
+                // `u32::MAX` when the tile was unroutable).
+                for (k, o) in rep.injections.iter().enumerate() {
+                    let cue = (cues_injected - cue_tiles + k) as u32;
+                    let sat = o.source_sat.map(|s| s as u32).unwrap_or(u32::MAX);
+                    let inj =
+                        log.push(e as u32, t0, NO_PARENT, TraceKind::CueInject { cue, sat });
+                    match o.finished_s {
+                        Some(t) if o.met_deadline() => {
+                            log.push(
+                                e as u32,
+                                t0 + t,
+                                inj,
+                                TraceKind::CueComplete { cue, latency_s: t },
+                            );
+                        }
+                        _ => {
+                            log.push(
+                                e as u32,
+                                t0 + o.deadline_s,
+                                inj,
+                                TraceKind::CueMiss { cue },
+                            );
+                        }
+                    }
+                }
+            }
 
             if rep.frame_latency_s > worst_latency {
                 worst_latency = rep.frame_latency_s;
@@ -722,6 +826,7 @@ impl EpochOrchestrator {
             route_ms,
             sim_ms,
             notes,
+            trace: trace_log,
             metrics: merged,
         })
     }
@@ -826,9 +931,11 @@ pub(crate) fn build_tables(
 /// Migration accounting for a re-plan: every new instance on a satellite
 /// that did not already host its function ships state from the nearest
 /// live donor (hop-by-hop at the slowest link rate on the path) or pays
-/// the cold-deploy delay.  Returns per-instance ready times, total ISL
-/// bytes charged, and the handover downtime (the slowest migration).
-/// Shared by the dynamic epoch loop and the mission loop.
+/// the cold-deploy delay.  Returns per-instance `(index, ready time, ISL
+/// bytes)` charges, the total ISL bytes, and the handover downtime (the
+/// slowest migration).  Shared by the dynamic epoch loop and the mission
+/// loop; the per-instance bytes also feed the flight recorder's
+/// `migration` events.
 pub(crate) fn charge_migration(
     spec: &DynamicSpec,
     c: &Constellation,
@@ -836,7 +943,7 @@ pub(crate) fn charge_migration(
     prev: &[InstanceSpec],
     health: &HealthState,
     nominal_isl: f64,
-) -> (Vec<(usize, f64)>, f64, f64) {
+) -> (Vec<(usize, f64, f64)>, f64, f64) {
     let mut readies = Vec::new();
     let mut bytes_total = 0.0f64;
     let mut max_ready = 0.0f64;
@@ -857,21 +964,22 @@ pub(crate) fn charge_migration(
                     && path_min_factor(&health.link_factor, p.sat, inst.sat) > 0.0
             })
             .min_by_key(|p| c.hops(p.sat, inst.sat));
-        let ready = match donor {
-            Some(d) if d.sat == inst.sat => spec.handover_s,
+        let (ready, bytes) = match donor {
+            Some(d) if d.sat == inst.sat => (spec.handover_s, 0.0),
             Some(d) => {
                 let hops = c.hops(d.sat, inst.sat);
                 let factor = path_min_factor(&health.link_factor, d.sat, inst.sat);
                 let rate = (nominal_isl * factor).max(1e-9);
-                bytes_total += spec.migration_state_bytes * hops as f64;
-                spec.handover_s + spec.migration_state_bytes * 8.0 * hops as f64 / rate
+                let bytes = spec.migration_state_bytes * hops as f64;
+                (spec.handover_s + bytes * 8.0 / rate, bytes)
             }
-            None => spec.cold_deploy_s,
+            None => (spec.cold_deploy_s, 0.0),
         };
+        bytes_total += bytes;
         if ready > max_ready {
             max_ready = ready;
         }
-        readies.push((idx, ready));
+        readies.push((idx, ready, bytes));
     }
     (readies, bytes_total, max_ready)
 }

@@ -44,6 +44,9 @@
 //!   and tip-and-cue in one mission, with tips derived from the
 //!   simulator's actual detection completions, per-cue routed dedicated
 //!   pipelines, and two-class (priority) ISL queues measured against FIFO.
+//! * [`trace`] — deterministic flight recorder: ring-buffered typed events
+//!   with causal parents across sim/mission/dynamic/tipcue, per-tile/per-cue
+//!   span assembly with latency breakdowns, JSONL + Perfetto exporters.
 //! * [`exp`] — one driver per paper figure/table (all through
 //!   [`scenario::Orchestrator`]).
 //! * [`config`] — scenario configuration & §6.1 presets.
@@ -65,6 +68,7 @@ pub mod scenario;
 pub mod sim;
 pub mod telemetry;
 pub mod tipcue;
+pub mod trace;
 pub mod util;
 pub mod workflow;
 

@@ -13,17 +13,18 @@
 //!                       [--reserve-list 0.0,0.2,0.4] [--detection-rate-list 0.02,0.1]
 //!                       [--backends orbitchain,compute-par] [--threads N] [--json]
 //! orbitchain tipcue     [same flags] [--tip-rate R] [--cue-deadline S] [--reserve F]
-//!                       [--pass-dt S] [--min-elevation D] [--backend B] [--json]
+//!                       [--pass-dt S] [--min-elevation D] [--backend B]
+//!                       [--trace PATH[:CAP]] [--json]
 //! orbitchain dynamic    [same flags] [--epochs N] [--epoch-frames N] [--mtbf S] [--mttr S]
 //!                       [--link-mtbf S] [--link-mttr S] [--degrade-factor F]
 //!                       [--burst-mtbf S] [--burst-duration S] [--burst-factor X]
 //!                       [--area-visibility] [--state-bytes B] [--backend B]
-//!                       [--no-baseline] [--json]
+//!                       [--no-baseline] [--trace PATH[:CAP]] [--json]
 //! orbitchain mission    [same flags, --sats takes a comma list] [--epochs N]
 //!                       [--epoch-frames N] [--mtbf S] [--mttr S] [--link-mtbf S]
 //!                       [--link-mttr S] [--detection-rate R] [--cue-deadline S]
 //!                       [--reserve F] [--pass-dt S] [--min-elevation D]
-//!                       [--fifo] [--backend B] [--json]
+//!                       [--fifo] [--backend B] [--trace PATH[:CAP]] [--json]
 //! orbitchain experiment <fig3b|..|fig20|tab1|dynamic|tipcue|mission|all>
 //!                       [--device jetson|rpi] [--frames N] [--seed N] [--json]
 //! orbitchain infer      [--model cloud] [--tiles N] [--artifacts DIR]  # PJRT HIL
@@ -44,6 +45,7 @@ use orbitchain::scenario::{
     BackendKind, LoadSprayRouter, Orchestrator, ScenarioError, SweepGrid, SweepRunner,
 };
 use orbitchain::tipcue::{CueStatus, TipCueOrchestrator};
+use orbitchain::trace::{TraceLog, TraceSpec};
 use orbitchain::util::json::obj;
 use orbitchain::util::stats;
 use orbitchain::{planner, routing};
@@ -260,6 +262,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     "pass-dt",
                     "min-elevation",
                     "backend",
+                    "trace",
                     "json",
                 ]),
             )?;
@@ -281,6 +284,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 "state-bytes",
                 "backend",
                 "no-baseline",
+                "trace",
                 "json",
             ]);
             // Mission length is `--epochs` x `--epoch-frames`; rejecting
@@ -310,6 +314,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 "min-elevation",
                 "fifo",
                 "backend",
+                "trace",
                 "json",
             ]);
             // Mission length is `--epochs` x `--epoch-frames`.
@@ -714,6 +719,51 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse `--trace <path>[:capacity]` into a journal path plus ring spec.
+/// The capacity suffix is split on the *last* colon and only when numeric,
+/// so paths containing colons still work.
+fn parse_trace_flag(
+    flags: &HashMap<String, String>,
+) -> anyhow::Result<Option<(String, TraceSpec)>> {
+    let Some(raw) = flags.get("trace") else {
+        return Ok(None);
+    };
+    if raw == "true" {
+        anyhow::bail!("--trace needs a journal path, e.g. --trace out.jsonl[:65536]");
+    }
+    if let Some((path, cap)) = raw.rsplit_once(':') {
+        if let Ok(capacity) = cap.parse::<usize>() {
+            if capacity == 0 {
+                anyhow::bail!("--trace ring capacity must be >= 1");
+            }
+            if path.is_empty() {
+                anyhow::bail!("--trace needs a non-empty journal path");
+            }
+            return Ok(Some((path.to_string(), TraceSpec { capacity })));
+        }
+    }
+    Ok(Some((raw.clone(), TraceSpec::default())))
+}
+
+/// Write the journal as JSONL at `path` plus a Chrome-trace/Perfetto view
+/// (openable in ui.perfetto.dev) at `<path>.perfetto.json`, and say where
+/// they landed unless we are emitting machine-readable JSON on stdout.
+fn write_trace(path: &str, log: &TraceLog, quiet: bool) -> anyhow::Result<()> {
+    std::fs::write(path, orbitchain::trace::export::jsonl(log))
+        .map_err(|e| anyhow::anyhow!("writing trace journal {path}: {e}"))?;
+    let pf = format!("{path}.perfetto.json");
+    std::fs::write(&pf, orbitchain::trace::export::perfetto(log).to_string_compact())
+        .map_err(|e| anyhow::anyhow!("writing perfetto trace {pf}: {e}"))?;
+    if !quiet {
+        println!(
+            "trace: {} events ({} dropped) -> {path} (+ {pf})",
+            log.len(),
+            log.dropped
+        );
+    }
+    Ok(())
+}
+
 /// Epoch-driven orchestration: run the configured fault trace with
 /// re-planning, then (unless `--no-baseline`) the identical trace with the
 /// static ride-through policy, and report the availability/overhead
@@ -731,10 +781,19 @@ fn cmd_dynamic(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         None => BackendKind::OrbitChain,
     };
 
-    let orch = EpochOrchestrator::new(&s).with_backend(backend);
+    let trace = parse_trace_flag(flags)?;
+    let mut orch = EpochOrchestrator::new(&s).with_backend(backend);
+    if let Some((_, tspec)) = &trace {
+        orch = orch.with_trace(*tspec);
+    }
     let timeline = orch.timeline().clone();
     let df = orch.constellation().frame_deadline_s;
     let dyn_rep = orch.run()?;
+    // Only the re-planning run is journaled; the static baseline re-runs the
+    // identical timeline purely for the completion delta.
+    if let (Some((path, _)), Some(log)) = (&trace, &dyn_rep.trace) {
+        write_trace(path, log, flags.contains_key("json"))?;
+    }
     let static_rep = if flags.contains_key("no-baseline") {
         None
     } else {
@@ -908,8 +967,9 @@ fn cmd_mission(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         None => BackendKind::OrbitChain,
     };
 
+    let trace = parse_trace_flag(flags)?;
     let mut reports = Vec::new();
-    for ns in &sats_list {
+    for (i, ns) in sats_list.iter().enumerate() {
         let mut s = base.clone();
         match ns {
             None => {}
@@ -921,8 +981,19 @@ fn cmd_mission(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             }
         }
         s.mission = Some(spec.clone());
-        let rep = MissionOrchestrator::new(&s).with_backend(backend).run_compare()?;
+        let mut orch = MissionOrchestrator::new(&s).with_backend(backend);
+        // With a `--sats` comma list, only the first constellation is
+        // journaled — one run, one journal.
+        if let Some((_, tspec)) = trace.as_ref().filter(|_| i == 0) {
+            orch = orch.with_trace(*tspec);
+        }
+        let rep = orch.run_compare()?;
         reports.push(rep);
+    }
+    if let (Some((path, _)), Some(log)) =
+        (&trace, reports.first().and_then(|r| r.trace.as_ref()))
+    {
+        write_trace(path, log, flags.contains_key("json"))?;
     }
 
     if flags.contains_key("json") {
@@ -1065,7 +1136,15 @@ fn cmd_tipcue(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             .ok_or_else(|| anyhow::anyhow!("unknown --backend {name:?}"))?,
         None => BackendKind::OrbitChain,
     };
-    let rep = TipCueOrchestrator::new(&s).with_backend(backend).run()?;
+    let trace = parse_trace_flag(flags)?;
+    let mut orch = TipCueOrchestrator::new(&s).with_backend(backend);
+    if let Some((_, tspec)) = &trace {
+        orch = orch.with_trace(*tspec);
+    }
+    let rep = orch.run()?;
+    if let (Some((path, _)), Some(log)) = (&trace, &rep.trace) {
+        write_trace(path, log, flags.contains_key("json"))?;
+    }
 
     if flags.contains_key("json") {
         println!("{}", rep.to_json().to_string_pretty());

@@ -63,6 +63,7 @@ use crate::scenario::{
 };
 use crate::sim::{self, InstanceSpec, SimConfig, Simulator};
 use crate::telemetry::Metrics;
+use crate::trace::{TraceKind, TraceLog, TraceSpec, NO_PARENT};
 use crate::tipcue::{group_tile_for_sat, CueRecord, CueStatus, Tip};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
@@ -267,6 +268,11 @@ pub struct MissionReport {
     /// ([`MissionOrchestrator::run_compare`] only).
     pub alt: Option<AltDiscipline>,
     pub notes: Vec<String>,
+    /// Flight-recorder journal ([`crate::trace`]) when tracing was enabled
+    /// via [`MissionOrchestrator::with_trace`]: every epoch's simulator
+    /// events on the mission timeline (primary discipline only) plus the
+    /// orchestrator's re-plan, migration and cue-lifecycle events.
+    pub trace: Option<TraceLog>,
     pub metrics: Metrics,
 }
 
@@ -469,6 +475,7 @@ pub struct MissionOrchestrator {
     isl_rate_bps: Option<f64>,
     kind: BackendKind,
     timeline: Timeline,
+    trace: Option<TraceSpec>,
 }
 
 impl MissionOrchestrator {
@@ -495,6 +502,7 @@ impl MissionOrchestrator {
             isl_rate_bps: scenario.isl_rate_bps,
             kind: BackendKind::OrbitChain,
             timeline,
+            trace: None,
         }
     }
 
@@ -521,6 +529,18 @@ impl MissionOrchestrator {
     /// Replay a declared fault trace instead of the generated one.
     pub fn with_timeline(mut self, timeline: Timeline) -> Self {
         self.timeline = timeline;
+        self
+    }
+
+    /// Enable the flight recorder ([`crate::trace`]): each epoch's
+    /// simulator runs with a ring of `spec.capacity` events and the
+    /// report's `trace` journal collects them on the mission timeline,
+    /// together with the orchestrator's re-plan/migration events and the
+    /// cue lifecycle (admit → inject → complete/miss).  In compare mode
+    /// only the primary discipline is journaled.  Tracing never changes a
+    /// mission outcome (pinned by tests).
+    pub fn with_trace(mut self, spec: TraceSpec) -> Self {
+        self.trace = Some(spec);
         self
     }
 
@@ -641,6 +661,10 @@ impl MissionOrchestrator {
         let mut sim_ms = 0.0f64;
         let mut worst_latency = 0.0f64;
         let mut worst_breakdown = (0.0, 0.0, 0.0);
+        let mut trace_log: Option<TraceLog> = self.trace.map(|_| TraceLog::default());
+        // Orchestrator-scope chain head per cue record (admit → inject →
+        // complete/miss); maintained in lockstep with `cues` when tracing.
+        let mut cue_seq: Vec<u64> = Vec::new();
 
         // Per-member orbits for the fleet pass sweep, hoisted out of the
         // epoch/detection loops (on a chain, member `j` flies the leader's
@@ -669,11 +693,23 @@ impl MissionOrchestrator {
 
             let mut replanned = false;
             let mut epoch_migrations = 0usize;
-            let mut migration_ready: Vec<(usize, f64)> = Vec::new();
+            let mut epoch_downtime = 0.0f64;
+            let mut migration_ready: Vec<(usize, f64, f64)> = Vec::new();
 
             if let Some(reason) = &invalid {
                 let initial = current.is_none();
                 if initial || self.spec.dynamic.replan {
+                    let begin = trace_log.as_mut().map(|log| {
+                        log.push(
+                            e as u32,
+                            t0,
+                            NO_PARENT,
+                            TraceKind::ReplanBegin {
+                                epoch: e as u32,
+                                reason: reason.as_str().into(),
+                            },
+                        )
+                    });
                     match build_tables(
                         planner.as_ref(),
                         router.as_ref(),
@@ -696,6 +732,7 @@ impl MissionOrchestrator {
                                     nominal_isl,
                                 );
                                 epoch_migrations = readies.len();
+                                epoch_downtime = m_down;
                                 migrations += epoch_migrations;
                                 migration_bytes += m_bytes;
                                 downtime_s += m_down;
@@ -703,6 +740,31 @@ impl MissionOrchestrator {
                                 replans += 1;
                                 replanned = true;
                                 notes.push(format!("epoch {e}: re-planned ({reason})"));
+                                merged.observe("trace.replan_latency", m_down);
+                            }
+                            if let (Some(log), Some(b)) = (trace_log.as_mut(), begin) {
+                                for &(idx, ready, bytes) in &migration_ready {
+                                    log.push(
+                                        e as u32,
+                                        t0,
+                                        b,
+                                        TraceKind::Migration {
+                                            sat: built.instances[idx].sat as u32,
+                                            bytes,
+                                            ready_s: ready,
+                                        },
+                                    );
+                                }
+                                log.push(
+                                    e as u32,
+                                    t0,
+                                    b,
+                                    TraceKind::ReplanEnd {
+                                        epoch: e as u32,
+                                        migrations: epoch_migrations as u32,
+                                        downtime_s: epoch_downtime,
+                                    },
+                                );
                             }
                             current = Some(built);
                         }
@@ -714,6 +776,18 @@ impl MissionOrchestrator {
                             notes.push(format!(
                                 "epoch {e}: re-plan failed ({err}); riding through"
                             ));
+                            if let (Some(log), Some(b)) = (trace_log.as_mut(), begin) {
+                                log.push(
+                                    e as u32,
+                                    t0,
+                                    b,
+                                    TraceKind::ReplanEnd {
+                                        epoch: e as u32,
+                                        migrations: 0,
+                                        downtime_s: 0.0,
+                                    },
+                                );
+                            }
                         }
                     }
                 }
@@ -742,7 +816,7 @@ impl MissionOrchestrator {
                     i2
                 })
                 .collect();
-            for &(idx, ready) in &migration_ready {
+            for &(idx, ready, _) in &migration_ready {
                 if let Some(i2) = instances.get_mut(idx) {
                     i2.ready_s = i2.ready_s.max(ready);
                 }
@@ -795,6 +869,15 @@ impl MissionOrchestrator {
                 });
                 inj_cues.push(p.cue);
                 cues[p.cue].injected_t_s = Some(p.aos_abs_s.max(t0));
+                if let Some(log) = trace_log.as_mut() {
+                    let seq = log.push(
+                        e as u32,
+                        p.aos_abs_s.max(t0),
+                        cue_seq[p.cue],
+                        TraceKind::CueInject { cue: p.cue as u32, sat: p.sat as u32 },
+                    );
+                    cue_seq[p.cue] = seq;
+                }
             }
             let cues_injected = injections.len();
             // Most epochs inject no cues: borrow the background table
@@ -823,6 +906,7 @@ impl MissionOrchestrator {
                 detect_func: Some(detect_func),
                 stable_thinning: true,
                 priority_isl: self.spec.priority_isl,
+                trace: self.trace,
             };
             injected +=
                 (frames * epoch_c.tiles_per_frame + warm + cues_injected) as f64;
@@ -859,6 +943,18 @@ impl MissionOrchestrator {
             };
             sim_ms += t_sim.elapsed().as_secs_f64() * 1e3;
 
+            // Journal the primary discipline's recorder (the compare
+            // overlay is emit-identical up to the fork and not journaled)
+            // and surface the per-tile latency breakdowns as `trace.*`
+            // distributions.
+            if let (Some(log), Some(rec)) = (trace_log.as_mut(), rep.trace.as_deref()) {
+                log.absorb(e as u32, t0, rec);
+                crate::trace::spans::observe_spans(
+                    &mut merged,
+                    &crate::trace::spans::assemble(rec),
+                );
+            }
+
             if rep.frame_latency_s > worst_latency {
                 worst_latency = rep.frame_latency_s;
                 worst_breakdown = rep.breakdown;
@@ -876,10 +972,29 @@ impl MissionOrchestrator {
                         let latency = t - cue.tip.t_s;
                         latencies.push(latency);
                         merged.observe_id(m_latency, latency);
+                        if let Some(log) = trace_log.as_mut() {
+                            log.push(
+                                e as u32,
+                                t,
+                                cue_seq[cue_idx],
+                                TraceKind::CueComplete {
+                                    cue: cue_idx as u32,
+                                    latency_s: latency,
+                                },
+                            );
+                        }
                     }
                 } else {
                     cue.status = CueStatus::Missed;
                     missed += 1;
+                    if let Some(log) = trace_log.as_mut() {
+                        log.push(
+                            e as u32,
+                            cue.deadline_s,
+                            cue_seq[cue_idx],
+                            TraceKind::CueMiss { cue: cue_idx as u32 },
+                        );
+                    }
                 }
             }
 
@@ -953,6 +1068,18 @@ impl MissionOrchestrator {
                 match best {
                     None => {
                         rejected_no_pass += 1;
+                        if let Some(log) = trace_log.as_mut() {
+                            log.push(
+                                e as u32,
+                                t_dec,
+                                NO_PARENT,
+                                TraceKind::CueReject {
+                                    cue: cues.len() as u32,
+                                    no_pass: true,
+                                },
+                            );
+                        }
+                        cue_seq.push(NO_PARENT);
                         cues.push(CueRecord {
                             tip,
                             sat: None,
@@ -967,6 +1094,18 @@ impl MissionOrchestrator {
                         let tokens = budget_rate * pass.aos_s;
                         if (admitted + 1) as f64 > tokens + 1e-9 {
                             rejected_capacity += 1;
+                            if let Some(log) = trace_log.as_mut() {
+                                log.push(
+                                    e as u32,
+                                    t_dec,
+                                    NO_PARENT,
+                                    TraceKind::CueReject {
+                                        cue: cues.len() as u32,
+                                        no_pass: false,
+                                    },
+                                );
+                            }
+                            cue_seq.push(NO_PARENT);
                             cues.push(CueRecord {
                                 tip,
                                 sat: Some(sat),
@@ -985,6 +1124,19 @@ impl MissionOrchestrator {
                                 deadline_abs_s: deadline_abs,
                                 tile_no: group_tile_for_sat(&self.c, sat),
                             });
+                            let admit = trace_log.as_mut().map(|log| {
+                                log.push(
+                                    e as u32,
+                                    t_dec,
+                                    NO_PARENT,
+                                    TraceKind::CueAdmit {
+                                        cue: cues.len() as u32,
+                                        sat: sat as u32,
+                                        deadline_s: deadline_abs,
+                                    },
+                                )
+                            });
+                            cue_seq.push(admit.unwrap_or(NO_PARENT));
                             cues.push(CueRecord {
                                 tip,
                                 sat: Some(sat),
@@ -1030,6 +1182,14 @@ impl MissionOrchestrator {
         let expired = pending.len();
         for p in &pending {
             cues[p.cue].status = CueStatus::Missed;
+            if let Some(log) = trace_log.as_mut() {
+                log.push(
+                    n_epochs.saturating_sub(1) as u32,
+                    mission_end,
+                    cue_seq[p.cue],
+                    TraceKind::CueMiss { cue: p.cue as u32 },
+                );
+            }
         }
 
         // Mission-wide completion from the merged per-function counters.
@@ -1151,6 +1311,7 @@ impl MissionOrchestrator {
             sim_ms,
             alt,
             notes,
+            trace: trace_log,
             metrics: merged,
         })
     }

@@ -29,6 +29,7 @@ use crate::constellation::Constellation;
 use crate::profile::{datasize, ProfileDb};
 use crate::routing::{Dev, Pipeline};
 use crate::telemetry::{MetricId, Metrics};
+use crate::trace::{FlightRecorder, TraceKind, TraceSpec};
 use crate::util::rng::Rng;
 use crate::workflow::Workflow;
 use gpu::SliceWindow;
@@ -101,6 +102,13 @@ pub struct SimConfig {
     /// messages, but ahead of every queued background transfer.  Same-class
     /// order stays FIFO.  Off (the default), all messages queue FIFO.
     pub priority_isl: bool,
+    /// Flight-recorder tracing ([`crate::trace`]): when set, the run
+    /// records typed tile events (capture/enqueue/compute/ISL/downlink)
+    /// into a ring of the given capacity, returned in
+    /// [`SimReport::trace`].  `None` (the default) costs one pointer-null
+    /// check per emit site and changes no simulation outcome either way —
+    /// the recorder is emit-only.
+    pub trace: Option<TraceSpec>,
 }
 
 impl Default for SimConfig {
@@ -116,6 +124,7 @@ impl Default for SimConfig {
             detect_func: None,
             stable_thinning: false,
             priority_isl: false,
+            trace: None,
         }
     }
 }
@@ -212,6 +221,10 @@ pub struct SimReport {
     /// Detector completions (event order), when [`SimConfig::detect_func`]
     /// is set; empty otherwise.
     pub detections: Vec<Detection>,
+    /// The run's flight recorder when [`SimConfig::trace`] was set
+    /// (`None` otherwise): the raw event ring for span assembly
+    /// ([`crate::trace::spans`]) and journal export.
+    pub trace: Option<Box<FlightRecorder>>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -343,6 +356,9 @@ struct LinkTable {
     off: Vec<u32>,
     /// `(neighbor, undirected link index)` pairs.
     adj: Vec<(u32, u32)>,
+    /// Endpoints `(low, high)` of each undirected link — the reverse map
+    /// from a directed id back to its transmitting satellite (tracing).
+    ends: Vec<(u32, u32)>,
     /// Undirected link count (directed ids span `0..2·n_undirected`).
     n_undirected: usize,
 }
@@ -366,7 +382,22 @@ impl LinkTable {
             adj[cur[b] as usize] = (a as u32, l as u32);
             cur[b] += 1;
         }
-        LinkTable { off, adj, n_undirected: links.len() }
+        let ends = links
+            .iter()
+            .map(|&(a, b)| (a.min(b) as u32, a.max(b) as u32))
+            .collect();
+        LinkTable { off, adj, ends, n_undirected: links.len() }
+    }
+
+    /// Transmitting satellite of a directed link id: direction `2l` runs
+    /// low → high, `2l + 1` high → low.
+    fn src_of(&self, directed: usize) -> u32 {
+        let (lo, hi) = self.ends[directed / 2];
+        if directed % 2 == 0 {
+            lo
+        } else {
+            hi
+        }
     }
 
     /// Directed link id for the single hop `a → b` — panics when the
@@ -426,6 +457,9 @@ struct SimState {
     /// ISL queue discipline this state runs under — the one knob the
     /// compare fork flips; everything else is shared input.
     priority_isl: bool,
+    /// Flight recorder ([`SimConfig::trace`]); cloned with the state at
+    /// the compare fork so both overlays carry a complete journal.
+    trace: Option<Box<FlightRecorder>>,
 }
 
 /// The simulator.  Borrows every input — the scenario layer simulates one
@@ -548,6 +582,14 @@ impl<'a> Simulator<'a> {
         let df = c.frame_deadline_s;
         let mut rng = Rng::new(self.cfg.seed);
         let mut metrics = Metrics::new();
+        // Flight recorder (off by default).  Every emit site below and in
+        // `drive`/`start_service` is a single `None` check when disabled;
+        // the recorder itself never touches the RNG or the event queue,
+        // so tracing cannot change a simulation outcome.
+        let mut trace: Option<Box<FlightRecorder>> = self
+            .cfg
+            .trace
+            .map(|spec| Box::new(FlightRecorder::new(spec.capacity)));
 
         // Per-function metric keys, formatted and interned once: `inc`
         // runs per event, and first a `format!` per event, then a
@@ -623,6 +665,19 @@ impl<'a> Simulator<'a> {
                 priority: false,
                 injection: None,
             });
+            if let Some(tr) = trace.as_deref_mut() {
+                let sat = sources
+                    .first()
+                    .map(|&s| self.pipelines[chosen].stages[s].sat)
+                    .unwrap_or(0) as u32;
+                let kind = TraceKind::Capture {
+                    tile: tid,
+                    tile_no: tile_no as u32,
+                    sat,
+                    pipeline: chosen as u32,
+                };
+                tr.emit_tile(0.0, tid, kind);
+            }
             for &sfunc in &sources {
                 let st = self.pipelines[chosen].stages[sfunc];
                 let inst = self.inst_at(st.func, st.sat, st.dev);
@@ -666,6 +721,19 @@ impl<'a> Simulator<'a> {
                     priority: false,
                     injection: None,
                 });
+                if let Some(tr) = trace.as_deref_mut() {
+                    let sat = sources
+                        .first()
+                        .map(|&s| self.pipelines[chosen].stages[s].sat)
+                        .unwrap_or(0) as u32;
+                    let kind = TraceKind::Capture {
+                        tile: tid,
+                        tile_no: tile_no as u32,
+                        sat,
+                        pipeline: chosen as u32,
+                    };
+                    tr.emit_tile(t0, tid, kind);
+                }
                 for &sfunc in &sources {
                     let st = self.pipelines[chosen].stages[sfunc];
                     let inst = self.inst_at(st.func, st.sat, st.dev);
@@ -783,6 +851,15 @@ impl<'a> Simulator<'a> {
             outcome.source_sat = sources
                 .first()
                 .map(|&s| self.pipelines[chosen].stages[s].sat);
+            if let Some(tr) = trace.as_deref_mut() {
+                let kind = TraceKind::Capture {
+                    tile: tid,
+                    tile_no: inj.tile_no as u32,
+                    sat: outcome.source_sat.unwrap_or(0) as u32,
+                    pipeline: chosen as u32,
+                };
+                tr.emit_tile(inj.t_s, tid, kind);
+            }
             for &sfunc in &sources {
                 let st = self.pipelines[chosen].stages[sfunc];
                 let inst = self.inst_at(st.func, st.sat, st.dev);
@@ -824,6 +901,7 @@ impl<'a> Simulator<'a> {
             warm_tile_count,
             cutoff,
             priority_isl: self.cfg.priority_isl,
+            trace,
         }
     }
 
@@ -864,8 +942,17 @@ impl<'a> Simulator<'a> {
             };
             match ev {
                 Ev::Arrival { inst, tile } => {
-                    let key = st.recv_keys[self.instances[inst].func];
+                    let spec = &self.instances[inst];
+                    let key = st.recv_keys[spec.func];
                     st.metrics.inc_id(key, 1.0);
+                    if let Some(tr) = st.trace.as_deref_mut() {
+                        let kind = TraceKind::Enqueue {
+                            tile,
+                            sat: spec.sat as u32,
+                            func: spec.func as u32,
+                        };
+                        tr.emit_tile(t, tile, kind);
+                    }
                     // Priority tasks (cues) jump ahead of queued background
                     // tiles but behind earlier priority tiles — two-class
                     // FIFO, mirroring the ISL discipline; the tile in
@@ -891,6 +978,15 @@ impl<'a> Simulator<'a> {
                     let key = st.done_keys[spec.func];
                     st.metrics.inc_id(key, 1.0);
                     st.tiles[tile as usize].last_done = t;
+                    if let Some(tr) = st.trace.as_deref_mut() {
+                        let kind = TraceKind::ComputeDone {
+                            tile,
+                            sat: spec.sat as u32,
+                            func: spec.func as u32,
+                            gpu: spec.dev == Dev::Gpu,
+                        };
+                        tr.emit_tile(t, tile, kind);
+                    }
                     let (pipeline, tile_no, t0, priority, injection) = {
                         let ts = &st.tiles[tile as usize];
                         (ts.pipeline, ts.tile_no, ts.t0, ts.priority, ts.injection)
@@ -966,6 +1062,16 @@ impl<'a> Simulator<'a> {
                                 priority,
                             };
                             let link = self.links.directed(spec.sat, msg.next_sat);
+                            if let Some(tr) = st.trace.as_deref_mut() {
+                                let kind = TraceKind::IslEnqueue {
+                                    tile,
+                                    link: link as u32,
+                                    from_sat: spec.sat as u32,
+                                    to_sat: dst.sat as u32,
+                                    bytes,
+                                };
+                                tr.emit_tile(t, tile, kind);
+                            }
                             isl_enqueue(
                                 &mut st.link_queue[link],
                                 st.link_busy[link],
@@ -974,6 +1080,16 @@ impl<'a> Simulator<'a> {
                             );
                             if !st.link_busy[link] {
                                 st.link_busy[link] = true;
+                                // Idle link: the just-queued message is the
+                                // front and starts transmitting now.
+                                if let Some(tr) = st.trace.as_deref_mut() {
+                                    let kind = TraceKind::TxStart {
+                                        tile,
+                                        link: link as u32,
+                                        sat: spec.sat as u32,
+                                    };
+                                    tr.emit_tile(t, tile, kind);
+                                }
                                 let tx = st.link_queue[link].front().unwrap().bytes * 8.0
                                     / link_rate(link);
                                 let ev = Ev::LinkDone { link };
@@ -1000,14 +1116,28 @@ impl<'a> Simulator<'a> {
                                 if *left == 0 && !st.tiles[tile as usize].finished {
                                     st.tiles[tile as usize].finished = true;
                                     st.injection_outcomes[ii].finished_s = Some(t);
+                                    if let Some(tr) = st.trace.as_deref_mut() {
+                                        let kind = TraceKind::Downlink {
+                                            tile,
+                                            sat: spec.sat as u32,
+                                        };
+                                        tr.emit_tile(t, tile, kind);
+                                    }
                                 }
                             }
                         }
                         None => {
-                            if terminal {
+                            if terminal && !st.tiles[tile as usize].finished {
                                 // Journey over: a sink completed, or every
                                 // downstream edge thinned the tile out.
                                 st.tiles[tile as usize].finished = true;
+                                if let Some(tr) = st.trace.as_deref_mut() {
+                                    let kind = TraceKind::Downlink {
+                                        tile,
+                                        sat: spec.sat as u32,
+                                    };
+                                    tr.emit_tile(t, tile, kind);
+                                }
                             }
                         }
                     }
@@ -1019,12 +1149,28 @@ impl<'a> Simulator<'a> {
                 }
                 Ev::LinkDone { link } => {
                     let msg = st.link_queue[link].pop_front().unwrap();
+                    if let Some(tr) = st.trace.as_deref_mut() {
+                        let kind = TraceKind::Hop {
+                            tile: msg.tile,
+                            link: link as u32,
+                            sat: msg.next_sat as u32,
+                        };
+                        tr.emit_tile(t, msg.tile, kind);
+                    }
                     // Next message on this link.
                     let next_tx = st.link_queue[link]
                         .front()
-                        .map(|next| next.bytes * 8.0 / link_rate(link));
+                        .map(|next| (next.tile, next.bytes * 8.0 / link_rate(link)));
                     match next_tx {
-                        Some(tx) => {
+                        Some((ntile, tx)) => {
+                            if let Some(tr) = st.trace.as_deref_mut() {
+                                let kind = TraceKind::TxStart {
+                                    tile: ntile,
+                                    link: link as u32,
+                                    sat: self.links.src_of(link),
+                                };
+                                tr.emit_tile(t, ntile, kind);
+                            }
                             push_event(&mut st.heap, &mut st.seq, t + tx, Ev::LinkDone { link });
                         }
                         None => st.link_busy[link] = false,
@@ -1049,6 +1195,14 @@ impl<'a> Simulator<'a> {
                         if t_cap > t {
                             ts.revisit_s += t_cap - t;
                         }
+                        if let Some(tr) = st.trace.as_deref_mut() {
+                            let kind = TraceKind::Deliver {
+                                tile: msg.tile,
+                                sat: at as u32,
+                                wait_s: (t_cap - t).max(0.0),
+                            };
+                            tr.emit_tile(t, msg.tile, kind);
+                        }
                         push_event(
                             &mut st.heap,
                             &mut st.seq,
@@ -1061,6 +1215,16 @@ impl<'a> Simulator<'a> {
                         let nxt = c.next_hop(at, msg.dest_sat);
                         let fwd = IslMsg { next_sat: nxt, ..msg };
                         let link2 = self.links.directed(at, nxt);
+                        if let Some(tr) = st.trace.as_deref_mut() {
+                            let kind = TraceKind::IslEnqueue {
+                                tile: msg.tile,
+                                link: link2 as u32,
+                                from_sat: at as u32,
+                                to_sat: msg.dest_sat as u32,
+                                bytes: msg.bytes,
+                            };
+                            tr.emit_tile(t, msg.tile, kind);
+                        }
                         isl_enqueue(
                             &mut st.link_queue[link2],
                             st.link_busy[link2],
@@ -1069,6 +1233,14 @@ impl<'a> Simulator<'a> {
                         );
                         if !st.link_busy[link2] {
                             st.link_busy[link2] = true;
+                            if let Some(tr) = st.trace.as_deref_mut() {
+                                let kind = TraceKind::TxStart {
+                                    tile: msg.tile,
+                                    link: link2 as u32,
+                                    sat: at as u32,
+                                };
+                                tr.emit_tile(t, msg.tile, kind);
+                            }
                             let tx = st.link_queue[link2].front().unwrap().bytes * 8.0
                                 / link_rate(link2);
                             let ev = Ev::LinkDone { link: link2 };
@@ -1118,6 +1290,7 @@ impl<'a> Simulator<'a> {
             unfinished_tiles: unfinished,
             injections: st.injection_outcomes,
             detections: st.detections,
+            trace: st.trace,
             metrics: st.metrics,
         }
     }
@@ -1151,6 +1324,16 @@ impl<'a> Simulator<'a> {
         // delay, or a huge sentinel for a failed satellite's payload).
         let done_t = spec.window.finish(t.max(spec.ready_s), work);
         st.tiles[tile as usize].proc_s += done_t - t;
+        if let Some(tr) = st.trace.as_deref_mut() {
+            let kind = TraceKind::ComputeStart {
+                tile,
+                sat: spec.sat as u32,
+                func: spec.func as u32,
+                gpu: spec.dev == Dev::Gpu,
+                stall_s: (spec.ready_s - t).max(0.0),
+            };
+            tr.emit_tile(t, tile, kind);
+        }
         push_event(&mut st.heap, &mut st.seq, done_t, Ev::Done { inst, tile });
     }
 }
@@ -1754,5 +1937,126 @@ mod tests {
         assert_eq!(finite, vec![0.25, 1.5, 3.0]);
         assert!(popped[popped.len() - 1].is_nan());
         assert!(popped[popped.len() - 2].is_nan());
+    }
+
+    /// A contended config that exercises every trace emit site: multi-hop
+    /// ISL queues, GPU slices, thinning, and a priority injection.
+    fn traced_cfg(trace: Option<TraceSpec>) -> SimConfig {
+        SimConfig {
+            frames: 3,
+            isl_rate_bps: Some(16_000.0),
+            priority_isl: true,
+            injections: vec![TileInjection {
+                t_s: 3.0,
+                tile_no: 50,
+                deadline_s: 300.0,
+                priority: true,
+                prefer_sat: None,
+                pipeline: None,
+            }],
+            trace,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn tracing_on_or_off_never_changes_the_outcome() {
+        // Hard requirement: the recorder is emit-only, so enabling it must
+        // not perturb a single simulation result — and identical runs must
+        // journal byte-identically.
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let fingerprint = |r: &SimReport| {
+            (
+                r.metrics.to_json().to_string_compact(),
+                r.frame_latency_s.to_bits(),
+                r.injections
+                    .iter()
+                    .map(|o| o.finished_s.map(f64::to_bits))
+                    .collect::<Vec<_>>(),
+                r.unfinished_tiles,
+            )
+        };
+        let off = simulate_orbitchain(&wf, &db, &c, traced_cfg(None)).unwrap();
+        let on =
+            simulate_orbitchain(&wf, &db, &c, traced_cfg(Some(TraceSpec::default()))).unwrap();
+        assert_eq!(fingerprint(&off), fingerprint(&on));
+        assert!(off.trace.is_none());
+        let rec = on.trace.as_deref().expect("traced run returns its recorder");
+        assert!(!rec.is_empty());
+        assert_eq!(rec.dropped(), 0, "default capacity must hold this run");
+        // Byte-identical journal across identical runs.
+        let on2 =
+            simulate_orbitchain(&wf, &db, &c, traced_cfg(Some(TraceSpec::default()))).unwrap();
+        let journal = |r: &SimReport| {
+            crate::trace::export::jsonl(&crate::trace::TraceLog::from_recorder(
+                r.trace.as_deref().unwrap(),
+            ))
+        };
+        assert_eq!(journal(&on), journal(&on2));
+    }
+
+    #[test]
+    fn trace_spans_partition_tile_latency_exactly() {
+        // The acceptance bar: per-tile span breakdowns must sum to the
+        // end-to-end latency already in `Metrics` — bitwise for the total
+        // (same subtraction), float-tolerance for the component sum.
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let rep =
+            simulate_orbitchain(&wf, &db, &c, traced_cfg(Some(TraceSpec::default()))).unwrap();
+        let spans = crate::trace::spans::assemble(rep.trace.as_deref().unwrap());
+        let lat = rep.metrics.samples("tile.latency_s");
+        // One span per routed tile, in tile-id order (captures are
+        // journaled in creation order), aligned with the latency samples.
+        assert_eq!(spans.len(), lat.len());
+        let mut committed = 0;
+        for (i, s) in spans.iter().enumerate() {
+            assert_eq!(s.tile as usize, i);
+            assert!(!s.truncated);
+            if s.completed {
+                committed += 1;
+                assert_eq!(
+                    s.wall_s().to_bits(),
+                    lat[i].to_bits(),
+                    "tile {i}: span total must equal tile.latency_s"
+                );
+                let err = (s.components_sum() - s.wall_s()).abs();
+                assert!(err < 1e-9, "tile {i}: breakdown sums to {err} off");
+            } else {
+                // Never served before cutoff: the metric records 0.
+                assert_eq!(lat[i], 0.0, "tile {i}");
+            }
+        }
+        assert!(committed > 0, "contended run still completes tiles");
+        // The cross-sat pipeline stages show up as ISL components.
+        assert!(spans.iter().any(|s| s.hops > 0 && s.tx_s > 0.0));
+        // Surfacing as metrics distributions matches the span count.
+        let mut m = Metrics::new();
+        crate::trace::spans::observe_spans(&mut m, &spans);
+        assert_eq!(m.samples("trace.span_total").len(), committed);
+    }
+
+    #[test]
+    fn trace_ring_bounds_memory_on_small_capacity() {
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let rep = simulate_orbitchain(
+            &wf,
+            &db,
+            &c,
+            traced_cfg(Some(TraceSpec { capacity: 64 })),
+        )
+        .unwrap();
+        let rec = rep.trace.as_deref().unwrap();
+        assert_eq!(rec.len(), 64);
+        assert!(rec.dropped() > 0);
+        // Early tiles lost their prefix: flagged truncated, not
+        // misattributed.
+        let spans = crate::trace::spans::assemble(rec);
+        assert!(spans.iter().any(|s| s.truncated));
     }
 }

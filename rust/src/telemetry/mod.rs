@@ -126,11 +126,15 @@ impl Metrics {
     /// registry-specific).
     pub fn merge(&mut self, other: &Metrics) {
         for (i, name) in other.names.iter().enumerate() {
+            if !other.counted[i] && other.samples[i].is_empty() {
+                continue;
+            }
+            // One intern per name covers both the counter and the samples.
+            let id = self.id(name);
             if other.counted[i] {
-                self.inc(name, other.counters[i]);
+                self.inc_id(id, other.counters[i]);
             }
             if !other.samples[i].is_empty() {
-                let id = self.id(name);
                 self.samples[id.0 as usize].extend_from_slice(&other.samples[i]);
             }
         }
@@ -149,7 +153,7 @@ impl Metrics {
     }
 
     /// Export as JSON: counters verbatim; distributions summarized
-    /// (count/mean/p50/p99/max).  Keys sort by name (the `Json::Obj`
+    /// (count/mean/min/p50/p90/p99/max).  Keys sort by name (the `Json::Obj`
     /// `BTreeMap`), independent of interning order, so exports are
     /// byte-identical however the registry was populated;
     /// interned-but-never-recorded ids are omitted.
@@ -170,7 +174,12 @@ impl Metrics {
                         obj(vec![
                             ("count", Json::from(vs.len())),
                             ("mean", Json::Num(stats::mean(vs))),
+                            (
+                                "min",
+                                Json::Num(vs.iter().copied().fold(f64::MAX, f64::min)),
+                            ),
                             ("p50", Json::Num(stats::percentile(vs, 50.0))),
+                            ("p90", Json::Num(stats::percentile(vs, 90.0))),
                             ("p99", Json::Num(stats::percentile(vs, 99.0))),
                             (
                                 "max",
@@ -278,7 +287,12 @@ mod tests {
         assert_eq!(j.get("counters").unwrap().get("count").unwrap().as_f64(), Some(7.0));
         let lat = j.get("distributions").unwrap().get("lat").unwrap();
         assert_eq!(lat.get("count").unwrap().as_usize(), Some(3));
+        assert_eq!(lat.get("min").unwrap().as_f64(), Some(1.0));
         assert_eq!(lat.get("p50").unwrap().as_f64(), Some(2.0));
+        // p90 interpolates between the 2nd and 3rd order statistics.
+        let p90 = lat.get("p90").unwrap().as_f64().unwrap();
+        assert!((p90 - 2.8).abs() < 1e-12, "p90={p90}");
+        assert_eq!(lat.get("max").unwrap().as_f64(), Some(3.0));
     }
 
     #[test]

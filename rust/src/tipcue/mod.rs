@@ -55,6 +55,7 @@ use crate::scenario::{
 };
 use crate::sim;
 use crate::telemetry::Metrics;
+use crate::trace::{TraceKind, TraceLog, TraceSpec, NO_PARENT};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 use crate::util::stats;
@@ -292,6 +293,10 @@ pub struct TipCueReport {
     pub route_ms: f64,
     pub sim_ms: f64,
     pub notes: Vec<String>,
+    /// Flight-recorder journal ([`crate::trace`]) when tracing was enabled
+    /// via [`TipCueOrchestrator::with_trace`]: the shared simulation's
+    /// events plus the cue lifecycle (admit → inject → complete/miss).
+    pub trace: Option<TraceLog>,
     pub metrics: Metrics,
 }
 
@@ -386,6 +391,7 @@ pub struct TipCueOrchestrator {
     scenario: Scenario,
     spec: TipCueSpec,
     kind: BackendKind,
+    trace: Option<TraceSpec>,
 }
 
 impl TipCueOrchestrator {
@@ -396,7 +402,18 @@ impl TipCueOrchestrator {
             spec: scenario.tipcue.clone().unwrap_or_default(),
             scenario: scenario.clone(),
             kind: BackendKind::OrbitChain,
+            trace: None,
         }
+    }
+
+    /// Enable the flight recorder ([`crate::trace`]): the shared
+    /// simulation runs with a ring of `spec.capacity` events, and the
+    /// report's `trace` journal collects them together with the cue
+    /// lifecycle events.  Tracing never changes an outcome (pinned by
+    /// tests).
+    pub fn with_trace(mut self, spec: TraceSpec) -> Self {
+        self.trace = Some(spec);
+        self
     }
 
     /// Replace the spec.
@@ -448,6 +465,10 @@ impl TipCueOrchestrator {
         let mut cues: Vec<CueRecord> = Vec::with_capacity(tips.len());
         let mut injections: Vec<sim::TileInjection> = Vec::new();
         let mut inj_of_cue: Vec<Option<usize>> = Vec::with_capacity(tips.len());
+        let mut trace_log: Option<TraceLog> = self.trace.map(|_| TraceLog::default());
+        // Orchestrator-scope chain head per cue (admit → inject), in
+        // lockstep with `cues`; only meaningful when tracing.
+        let mut cue_seq: Vec<u64> = Vec::new();
         for tip in &tips {
             let deadline_s = tip.t_s + self.spec.cue_deadline_s;
             let target = GroundStation {
@@ -471,6 +492,15 @@ impl TipCueOrchestrator {
                 .min_by(|a, b| a.1.aos_s.total_cmp(&b.1.aos_s));
             match best {
                 None => {
+                    if let Some(log) = trace_log.as_mut() {
+                        log.push(
+                            0,
+                            tip.t_s,
+                            NO_PARENT,
+                            TraceKind::CueReject { cue: cues.len() as u32, no_pass: true },
+                        );
+                    }
+                    cue_seq.push(NO_PARENT);
                     cues.push(CueRecord {
                         tip: tip.clone(),
                         sat: None,
@@ -485,6 +515,18 @@ impl TipCueOrchestrator {
                 Some((sat, pass)) => {
                     let tokens = budget_rate * pass.aos_s;
                     if (injections.len() + 1) as f64 > tokens + 1e-9 {
+                        if let Some(log) = trace_log.as_mut() {
+                            log.push(
+                                0,
+                                tip.t_s,
+                                NO_PARENT,
+                                TraceKind::CueReject {
+                                    cue: cues.len() as u32,
+                                    no_pass: false,
+                                },
+                            );
+                        }
+                        cue_seq.push(NO_PARENT);
                         cues.push(CueRecord {
                             tip: tip.clone(),
                             sat: Some(sat),
@@ -505,6 +547,26 @@ impl TipCueOrchestrator {
                             prefer_sat: Some(sat),
                             pipeline: None,
                         });
+                        let head = trace_log.as_mut().map(|log| {
+                            let cue = cues.len() as u32;
+                            let admit = log.push(
+                                0,
+                                tip.t_s,
+                                NO_PARENT,
+                                TraceKind::CueAdmit {
+                                    cue,
+                                    sat: sat as u32,
+                                    deadline_s,
+                                },
+                            );
+                            log.push(
+                                0,
+                                pass.aos_s,
+                                admit,
+                                TraceKind::CueInject { cue, sat: sat as u32 },
+                            )
+                        });
+                        cue_seq.push(head.unwrap_or(NO_PARENT));
                         cues.push(CueRecord {
                             tip: tip.clone(),
                             sat: Some(sat),
@@ -523,6 +585,7 @@ impl TipCueOrchestrator {
         // Simulate background + cues on the shared tables.
         let mut cfg = orch.sim_config().clone();
         cfg.injections = injections;
+        cfg.trace = self.trace;
         let orch = orch.with_sim_config(cfg);
         let t0 = Instant::now();
         let rep = orch.simulate(&prepared);
@@ -541,10 +604,29 @@ impl TipCueOrchestrator {
                 completed += 1;
                 if let Some(t) = outcome.finished_s {
                     latencies.push(t - cue.tip.t_s);
+                    if let Some(log) = trace_log.as_mut() {
+                        log.push(
+                            0,
+                            t,
+                            cue_seq[k],
+                            TraceKind::CueComplete {
+                                cue: k as u32,
+                                latency_s: t - cue.tip.t_s,
+                            },
+                        );
+                    }
                 }
             } else {
                 cue.status = CueStatus::Missed;
                 missed += 1;
+                if let Some(log) = trace_log.as_mut() {
+                    log.push(
+                        0,
+                        cue.deadline_s,
+                        cue_seq[k],
+                        TraceKind::CueMiss { cue: k as u32 },
+                    );
+                }
             }
         }
         let rejected_no_pass = cues
@@ -570,6 +652,16 @@ impl TipCueOrchestrator {
         metrics.inc_id(m_missed, missed as f64);
         for l in &latencies {
             metrics.observe_id(m_latency, *l);
+        }
+
+        // Journal the simulation's recorder and surface the per-tile
+        // latency breakdowns as `trace.*` distributions.
+        if let (Some(log), Some(rec)) = (trace_log.as_mut(), rep.trace.as_deref()) {
+            log.absorb(0, 0.0, rec);
+            crate::trace::spans::observe_spans(
+                &mut metrics,
+                &crate::trace::spans::assemble(rec),
+            );
         }
 
         let routed = prepared.routed_tiles();
@@ -610,6 +702,7 @@ impl TipCueOrchestrator {
             route_ms: prepared.route_ms,
             sim_ms,
             notes,
+            trace: trace_log,
             metrics,
         })
     }

@@ -1,0 +1,448 @@
+//! Journal exporters: JSON-Lines (one event per line, stable key order,
+//! byte-deterministic) and Chrome-trace/Perfetto `trace_event` JSON
+//! (openable directly in `ui.perfetto.dev` or `chrome://tracing`).
+
+use std::collections::{BTreeSet, HashMap};
+
+use crate::trace::{LogEntry, TraceKind, TraceLog, NO_PARENT};
+use crate::util::json::{obj, Json};
+
+fn num(n: u32) -> Json {
+    Json::Num(n as f64)
+}
+
+/// Serialize a journal as JSON-Lines: one compact object per event, keys
+/// sorted, numbers via the deterministic shared formatter — an identical
+/// run produces a byte-identical journal.
+pub fn jsonl(log: &TraceLog) -> String {
+    let mut out = String::new();
+    for e in &log.entries {
+        out.push_str(&entry_json(e).to_string_compact());
+        out.push('\n');
+    }
+    out
+}
+
+/// One journal line as a `Json` object: `epoch`/`kind`/`seq`/`t`
+/// envelope, `parent` when the event has one, `orch:true` for
+/// orchestrator-scope events, plus the kind's payload fields flattened.
+pub fn entry_json(e: &LogEntry) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("epoch", num(e.epoch)),
+        ("kind", Json::from(e.kind.name())),
+        ("seq", Json::Num(e.seq as f64)),
+        ("t", Json::Num(e.t_s)),
+    ];
+    if e.parent != NO_PARENT {
+        pairs.push(("parent", Json::Num(e.parent as f64)));
+    }
+    if e.orch {
+        pairs.push(("orch", Json::from(true)));
+    }
+    match &e.kind {
+        TraceKind::Capture { tile, tile_no, sat, pipeline } => {
+            pairs.push(("tile", num(*tile)));
+            pairs.push(("tile_no", num(*tile_no)));
+            pairs.push(("sat", num(*sat)));
+            pairs.push(("pipeline", num(*pipeline)));
+        }
+        TraceKind::Enqueue { tile, sat, func } => {
+            pairs.push(("tile", num(*tile)));
+            pairs.push(("sat", num(*sat)));
+            pairs.push(("func", num(*func)));
+        }
+        TraceKind::ComputeStart { tile, sat, func, gpu, stall_s } => {
+            pairs.push(("tile", num(*tile)));
+            pairs.push(("sat", num(*sat)));
+            pairs.push(("func", num(*func)));
+            pairs.push(("gpu", Json::from(*gpu)));
+            pairs.push(("stall", Json::Num(*stall_s)));
+        }
+        TraceKind::ComputeDone { tile, sat, func, gpu } => {
+            pairs.push(("tile", num(*tile)));
+            pairs.push(("sat", num(*sat)));
+            pairs.push(("func", num(*func)));
+            pairs.push(("gpu", Json::from(*gpu)));
+        }
+        TraceKind::IslEnqueue { tile, link, from_sat, to_sat, bytes } => {
+            pairs.push(("tile", num(*tile)));
+            pairs.push(("link", num(*link)));
+            pairs.push(("from", num(*from_sat)));
+            pairs.push(("to", num(*to_sat)));
+            pairs.push(("bytes", Json::Num(*bytes)));
+        }
+        TraceKind::TxStart { tile, link, sat } | TraceKind::Hop { tile, link, sat } => {
+            pairs.push(("tile", num(*tile)));
+            pairs.push(("link", num(*link)));
+            pairs.push(("sat", num(*sat)));
+        }
+        TraceKind::Deliver { tile, sat, wait_s } => {
+            pairs.push(("tile", num(*tile)));
+            pairs.push(("sat", num(*sat)));
+            pairs.push(("wait", Json::Num(*wait_s)));
+        }
+        TraceKind::Downlink { tile, sat } => {
+            pairs.push(("tile", num(*tile)));
+            pairs.push(("sat", num(*sat)));
+        }
+        TraceKind::CueAdmit { cue, sat, deadline_s } => {
+            pairs.push(("cue", num(*cue)));
+            pairs.push(("sat", num(*sat)));
+            pairs.push(("deadline", Json::Num(*deadline_s)));
+        }
+        TraceKind::CueReject { cue, no_pass } => {
+            pairs.push(("cue", num(*cue)));
+            pairs.push(("no_pass", Json::from(*no_pass)));
+        }
+        TraceKind::CueInject { cue, sat } => {
+            pairs.push(("cue", num(*cue)));
+            pairs.push(("sat", num(*sat)));
+        }
+        TraceKind::CueComplete { cue, latency_s } => {
+            pairs.push(("cue", num(*cue)));
+            pairs.push(("latency", Json::Num(*latency_s)));
+        }
+        TraceKind::CueMiss { cue } => {
+            pairs.push(("cue", num(*cue)));
+        }
+        TraceKind::ReplanBegin { epoch: _, reason } => {
+            pairs.push(("reason", Json::from(reason.as_ref())));
+        }
+        TraceKind::ReplanEnd { epoch: _, migrations, downtime_s } => {
+            pairs.push(("migrations", num(*migrations)));
+            pairs.push(("downtime", Json::Num(*downtime_s)));
+        }
+        TraceKind::Migration { sat, bytes, ready_s } => {
+            pairs.push(("sat", num(*sat)));
+            pairs.push(("bytes", Json::Num(*bytes)));
+            pairs.push(("ready", Json::Num(*ready_s)));
+        }
+    }
+    obj(pairs)
+}
+
+/// Synthetic pid for orchestrator-scope tracks (cues, re-plans,
+/// migrations) — far above any satellite id.
+pub const ORCH_PID: u32 = 1_000_000;
+
+const TID_CPU: u32 = 0;
+const TID_GPU: u32 = 1;
+/// Link tracks start here: tid = `TID_LINK0 + directed_link_id`.
+const TID_LINK0: u32 = 2;
+
+fn us(t_s: f64) -> Json {
+    Json::Num(t_s * 1e6)
+}
+
+fn slice(name: String, pid: u32, tid: u32, t0_s: f64, t1_s: f64, args: Vec<(&str, Json)>) -> Json {
+    obj(vec![
+        ("ph", Json::from("X")),
+        ("name", Json::from(name)),
+        ("pid", num(pid)),
+        ("tid", num(tid)),
+        ("ts", us(t0_s)),
+        ("dur", us(t1_s - t0_s)),
+        ("args", obj(args)),
+    ])
+}
+
+fn instant(name: String, pid: u32, tid: u32, t_s: f64, args: Vec<(&str, Json)>) -> Json {
+    obj(vec![
+        ("ph", Json::from("i")),
+        ("s", Json::from("t")),
+        ("name", Json::from(name)),
+        ("pid", num(pid)),
+        ("tid", num(tid)),
+        ("ts", us(t_s)),
+        ("args", obj(args)),
+    ])
+}
+
+fn meta(kind: &str, pid: u32, tid: Option<u32>, label: String) -> Json {
+    let mut pairs = vec![
+        ("ph", Json::from("M")),
+        ("name", Json::from(kind)),
+        ("pid", num(pid)),
+    ];
+    if let Some(tid) = tid {
+        pairs.push(("tid", num(tid)));
+    }
+    pairs.push(("args", obj(vec![("name", Json::from(label))])));
+    obj(pairs)
+}
+
+/// Convert a journal to Chrome-trace/Perfetto `trace_event` JSON: one
+/// "process" per satellite (plus an orchestrator pseudo-process), one
+/// "thread" per device (cpu/gpu) and per directed ISL link.  Compute
+/// service and link transmissions become complete slices; captures,
+/// downlinks, cue lifecycle and migrations become instants; re-plans
+/// become slices on the orchestrator track.
+pub fn perfetto(log: &TraceLog) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    // (pid, tid) → thread label, collected while walking the journal.
+    let mut threads: BTreeSet<(u32, u32)> = BTreeSet::new();
+    let mut sats: BTreeSet<u32> = BTreeSet::new();
+    // Open compute slice per (epoch, sat, func, gpu) slot.
+    let mut open_compute: HashMap<(u32, u32, u32, bool), (f64, u32, f64)> = HashMap::new();
+    // Open transmission per (epoch, link): (start, tile, from_sat).
+    let mut open_tx: HashMap<(u32, u32), (f64, u32, u32)> = HashMap::new();
+    // Open re-plan per epoch.
+    let mut open_replan: HashMap<u32, (f64, String)> = HashMap::new();
+
+    for e in &log.entries {
+        match &e.kind {
+            TraceKind::Capture { tile, sat, pipeline, .. } => {
+                sats.insert(*sat);
+                threads.insert((*sat, TID_CPU));
+                events.push(instant(
+                    format!("capture t{tile}"),
+                    *sat,
+                    TID_CPU,
+                    e.t_s,
+                    vec![("tile", num(*tile)), ("pipeline", num(*pipeline))],
+                ));
+            }
+            TraceKind::ComputeStart { tile, sat, func, gpu, stall_s } => {
+                open_compute.insert((e.epoch, *sat, *func, *gpu), (e.t_s, *tile, *stall_s));
+            }
+            TraceKind::ComputeDone { tile, sat, func, gpu } => {
+                if let Some((t0, tile0, stall)) = open_compute.remove(&(e.epoch, *sat, *func, *gpu)) {
+                    let tid = if *gpu { TID_GPU } else { TID_CPU };
+                    sats.insert(*sat);
+                    threads.insert((*sat, tid));
+                    debug_assert_eq!(tile0, *tile);
+                    events.push(slice(
+                        format!("f{func} t{tile}"),
+                        *sat,
+                        tid,
+                        t0,
+                        e.t_s,
+                        vec![
+                            ("tile", num(*tile)),
+                            ("func", num(*func)),
+                            ("stall", Json::Num(stall)),
+                        ],
+                    ));
+                }
+            }
+            TraceKind::TxStart { tile, link, sat } => {
+                open_tx.insert((e.epoch, *link), (e.t_s, *tile, *sat));
+            }
+            TraceKind::Hop { tile, link, sat } => {
+                if let Some((t0, tile0, from)) = open_tx.remove(&(e.epoch, *link)) {
+                    sats.insert(from);
+                    threads.insert((from, TID_LINK0 + *link));
+                    debug_assert_eq!(tile0, *tile);
+                    events.push(slice(
+                        format!("t{tile}\u{2192}s{sat}"),
+                        from,
+                        TID_LINK0 + *link,
+                        t0,
+                        e.t_s,
+                        vec![("tile", num(*tile)), ("link", num(*link))],
+                    ));
+                }
+            }
+            TraceKind::Downlink { tile, sat } => {
+                sats.insert(*sat);
+                threads.insert((*sat, TID_CPU));
+                events.push(instant(
+                    format!("done t{tile}"),
+                    *sat,
+                    TID_CPU,
+                    e.t_s,
+                    vec![("tile", num(*tile))],
+                ));
+            }
+            TraceKind::CueAdmit { cue, sat, deadline_s } => {
+                threads.insert((ORCH_PID, TID_CPU));
+                events.push(instant(
+                    format!("cue{cue} admit"),
+                    ORCH_PID,
+                    TID_CPU,
+                    e.t_s,
+                    vec![("sat", num(*sat)), ("deadline", Json::Num(*deadline_s))],
+                ));
+            }
+            TraceKind::CueReject { cue, no_pass } => {
+                threads.insert((ORCH_PID, TID_CPU));
+                events.push(instant(
+                    format!("cue{cue} reject"),
+                    ORCH_PID,
+                    TID_CPU,
+                    e.t_s,
+                    vec![("no_pass", Json::from(*no_pass))],
+                ));
+            }
+            TraceKind::CueInject { cue, sat } => {
+                threads.insert((ORCH_PID, TID_CPU));
+                events.push(instant(
+                    format!("cue{cue} inject"),
+                    ORCH_PID,
+                    TID_CPU,
+                    e.t_s,
+                    vec![("sat", num(*sat))],
+                ));
+            }
+            TraceKind::CueComplete { cue, latency_s } => {
+                threads.insert((ORCH_PID, TID_CPU));
+                events.push(instant(
+                    format!("cue{cue} complete"),
+                    ORCH_PID,
+                    TID_CPU,
+                    e.t_s,
+                    vec![("latency", Json::Num(*latency_s))],
+                ));
+            }
+            TraceKind::CueMiss { cue } => {
+                threads.insert((ORCH_PID, TID_CPU));
+                events.push(instant(format!("cue{cue} miss"), ORCH_PID, TID_CPU, e.t_s, vec![]));
+            }
+            TraceKind::ReplanBegin { epoch, reason } => {
+                open_replan.insert(*epoch, (e.t_s, reason.to_string()));
+            }
+            TraceKind::ReplanEnd { epoch, migrations, downtime_s } => {
+                if let Some((t0, reason)) = open_replan.remove(epoch) {
+                    threads.insert((ORCH_PID, TID_GPU));
+                    events.push(slice(
+                        format!("replan e{epoch}"),
+                        ORCH_PID,
+                        TID_GPU,
+                        t0,
+                        // Zero-duration re-plan decisions still deserve a
+                        // visible slice: stretch by the charged downtime.
+                        t0 + downtime_s.max(1e-6),
+                        vec![
+                            ("reason", Json::from(reason)),
+                            ("migrations", num(*migrations)),
+                            ("downtime", Json::Num(*downtime_s)),
+                        ],
+                    ));
+                }
+            }
+            TraceKind::Migration { sat, bytes, ready_s } => {
+                threads.insert((ORCH_PID, TID_CPU));
+                events.push(instant(
+                    format!("migrate s{sat}"),
+                    ORCH_PID,
+                    TID_CPU,
+                    e.t_s,
+                    vec![("bytes", Json::Num(*bytes)), ("ready", Json::Num(*ready_s))],
+                ));
+            }
+            _ => {}
+        }
+    }
+
+    // Metadata first so viewers label tracks before any slice arrives.
+    let mut all: Vec<Json> = Vec::with_capacity(events.len() + threads.len() + sats.len() + 1);
+    for &sat in &sats {
+        all.push(meta("process_name", sat, None, format!("sat {sat}")));
+    }
+    if threads.iter().any(|&(pid, _)| pid == ORCH_PID) {
+        all.push(meta("process_name", ORCH_PID, None, "orchestrator".to_string()));
+    }
+    for &(pid, tid) in &threads {
+        let label = if pid == ORCH_PID {
+            if tid == TID_GPU { "replan".to_string() } else { "cues".to_string() }
+        } else if tid == TID_CPU {
+            "cpu".to_string()
+        } else if tid == TID_GPU {
+            "gpu".to_string()
+        } else {
+            format!("link {}", tid - TID_LINK0)
+        };
+        all.push(meta("thread_name", pid, Some(tid), label));
+    }
+    all.extend(events);
+
+    obj(vec![
+        ("traceEvents", Json::Arr(all)),
+        ("displayTimeUnit", Json::from("ms")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{FlightRecorder, TraceKind, TraceLog};
+
+    fn sample_log() -> TraceLog {
+        let mut r = FlightRecorder::new(64);
+        let t = 0u32;
+        r.emit_tile(0.0, t, TraceKind::Capture { tile: t, tile_no: 0, sat: 0, pipeline: 0 });
+        r.emit_tile(0.0, t, TraceKind::Enqueue { tile: t, sat: 0, func: 0 });
+        r.emit_tile(1.0, t, TraceKind::ComputeStart { tile: t, sat: 0, func: 0, gpu: false, stall_s: 0.0 });
+        r.emit_tile(3.0, t, TraceKind::ComputeDone { tile: t, sat: 0, func: 0, gpu: false });
+        r.emit_tile(3.0, t, TraceKind::IslEnqueue { tile: t, link: 1, from_sat: 0, to_sat: 1, bytes: 2e6 });
+        r.emit_tile(3.0, t, TraceKind::TxStart { tile: t, link: 1, sat: 0 });
+        r.emit_tile(5.0, t, TraceKind::Hop { tile: t, link: 1, sat: 1 });
+        r.emit_tile(5.0, t, TraceKind::Downlink { tile: t, sat: 1 });
+        let mut log = TraceLog::from_recorder(&r);
+        let a = log.push(0, 2.0, crate::trace::NO_PARENT, TraceKind::CueAdmit { cue: 0, sat: 1, deadline_s: 60.0 });
+        log.push(0, 2.0, a, TraceKind::CueInject { cue: 0, sat: 1 });
+        log.push(0, 9.0, a, TraceKind::CueComplete { cue: 0, latency_s: 7.0 });
+        log.push(1, 100.0, crate::trace::NO_PARENT, TraceKind::ReplanBegin { epoch: 1, reason: "sat_fail".into() });
+        log.push(1, 100.0, crate::trace::NO_PARENT, TraceKind::ReplanEnd { epoch: 1, migrations: 2, downtime_s: 0.5 });
+        log
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_are_deterministic() {
+        let log = sample_log();
+        let a = jsonl(&log);
+        let b = jsonl(&log);
+        assert_eq!(a, b, "same journal must serialize byte-identically");
+        assert_eq!(a.lines().count(), log.len());
+        for line in a.lines() {
+            let v = Json::parse(line).expect("every journal line is valid JSON");
+            assert!(v.get("kind").unwrap().as_str().is_some());
+            assert!(v.get("t").unwrap().as_f64().is_some());
+        }
+    }
+
+    #[test]
+    fn jsonl_omits_parent_for_roots_and_marks_orch_scope() {
+        let log = sample_log();
+        let text = jsonl(&log);
+        let first = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(first.get("kind").unwrap().as_str(), Some("capture"));
+        assert!(first.get("parent").is_none());
+        assert!(first.get("orch").is_none());
+        let admit = text.lines().find(|l| l.contains("cue_admit")).unwrap();
+        let admit = Json::parse(admit).unwrap();
+        assert_eq!(admit.get("orch").unwrap().as_bool(), Some(true));
+        let inject = text.lines().find(|l| l.contains("cue_inject")).unwrap();
+        let inject = Json::parse(inject).unwrap();
+        assert_eq!(inject.get("parent").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn perfetto_builds_slices_and_track_metadata() {
+        let log = sample_log();
+        let v = perfetto(&log);
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        let procs: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some("process_name"))
+            .collect();
+        assert!(procs.len() >= 2, "sat 0 and the orchestrator get process names");
+        let compute: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .collect();
+        // One compute slice (f0 on sat 0), one link slice, one re-plan.
+        assert_eq!(compute.len(), 3);
+        let f0 = compute
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("f0 t0"))
+            .expect("compute slice present");
+        assert_eq!(f0.get("ts").unwrap().as_f64(), Some(1.0 * 1e6));
+        assert_eq!(f0.get("dur").unwrap().as_f64(), Some(2.0 * 1e6));
+        let replan = compute
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("replan e1"))
+            .expect("re-plan slice present");
+        assert_eq!(replan.get("pid").unwrap().as_f64(), Some(ORCH_PID as f64));
+    }
+}

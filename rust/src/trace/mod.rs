@@ -1,0 +1,385 @@
+//! Flight recorder: deterministic causal tracing for the mission stack.
+//!
+//! Aggregate counters ([`crate::telemetry::Metrics`]) answer *how much*;
+//! this module answers *where and why*: every tile's journey through
+//! capture → instance queues → compute → ISL hops → delivery, every cue's
+//! admit → inject → complete/miss arc, and every epoch re-plan, recorded
+//! as typed events with sim-time stamps and causal parents.
+//!
+//! Design constraints (pinned by tests):
+//!
+//! * **Deterministic.**  Events carry only simulation time — never wall
+//!   clock — so an identical run produces a byte-identical JSONL journal.
+//! * **Zero overhead when off.**  The simulator holds an
+//!   `Option<Box<FlightRecorder>>`; every emit site is a single `None`
+//!   check and no event is allocated or formatted when tracing is
+//!   disabled.  Tracing on/off never changes a simulation outcome: the
+//!   recorder is emit-only (no RNG draws, no event-queue effects).
+//! * **Bounded memory.**  The recorder is a ring: past `capacity` events
+//!   the oldest are dropped (and counted), so long missions trace at flat
+//!   memory.  Span assembly marks tiles whose prefix fell out of the ring
+//!   as truncated instead of mis-attributing their latency.
+//!
+//! Submodules: [`spans`] folds the event log into per-tile/per-cue causal
+//! spans with a latency breakdown; [`export`] serializes journals as
+//! JSON-Lines and as Chrome-trace/Perfetto `trace_event` JSON (openable
+//! directly in `ui.perfetto.dev`).
+
+pub mod export;
+pub mod spans;
+
+use std::collections::VecDeque;
+
+/// Sentinel for "no causal parent" ([`TraceEvent::parent`]).
+pub const NO_PARENT: u64 = u64::MAX;
+
+/// Default ring capacity (events) when `--trace <path>` gives none.
+pub const DEFAULT_CAPACITY: usize = 1 << 20;
+
+/// Tracing configuration carried by `SimConfig::trace` and the
+/// orchestrators' `with_trace` builders.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceSpec {
+    /// Ring capacity in events; the oldest events are dropped (and
+    /// counted) past it.
+    pub capacity: usize,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec { capacity: DEFAULT_CAPACITY }
+    }
+}
+
+/// One typed trace event.
+///
+/// `parent` is the sequence number of the event's causal predecessor
+/// ([`NO_PARENT`] for roots): for tile events the recorder threads the
+/// tile's own previous event, so following the chain from a terminal
+/// event reconstructs the tile's full journey; orchestrator events (cue
+/// lifecycle, re-plans) are parented explicitly by their emitters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Recorder-local sequence number (dense, gap-free even when the ring
+    /// drops old events).
+    pub seq: u64,
+    /// Simulation time, seconds (epoch-local inside the simulator; offset
+    /// to mission time when absorbed into a [`TraceLog`]).
+    pub t_s: f64,
+    /// Sequence number of the causal parent, [`NO_PARENT`] for roots.
+    pub parent: u64,
+    pub kind: TraceKind,
+}
+
+/// The event vocabulary.  Tile events are emitted by the simulator at its
+/// existing dispatch sites; cue/re-plan/migration events by the mission,
+/// dynamic and tipcue orchestrators.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceKind {
+    /// A tile enters the system: frame capture, warm-backlog re-entry, or
+    /// a mid-run injection (cue).  Root of the tile's causal chain.
+    Capture { tile: u32, tile_no: u32, sat: u32, pipeline: u32 },
+    /// The tile joined instance `func`'s queue on `sat`.
+    Enqueue { tile: u32, sat: u32, func: u32 },
+    /// The instance started serving the tile.  `stall_s` is the handover
+    /// stall still ahead of it (`ready_s − t`, 0 when the instance is
+    /// ready) — the migration component of the compute interval.
+    ComputeStart { tile: u32, sat: u32, func: u32, gpu: bool, stall_s: f64 },
+    /// The instance finished serving the tile.
+    ComputeDone { tile: u32, sat: u32, func: u32, gpu: bool },
+    /// An intermediate result was queued on directed ISL link `link`.
+    IslEnqueue { tile: u32, link: u32, from_sat: u32, to_sat: u32, bytes: f64 },
+    /// Link `link` started transmitting the tile's message.
+    TxStart { tile: u32, link: u32, sat: u32 },
+    /// The message finished one hop, arriving at `sat`.
+    Hop { tile: u32, link: u32, sat: u32 },
+    /// Final-hop arrival at the destination satellite; `wait_s` is the
+    /// revisit wait until that satellite's own capture of the tile.
+    Deliver { tile: u32, sat: u32, wait_s: f64 },
+    /// The tile's pipeline journey completed (every reachable sink done).
+    /// Ground downlink is not modeled, so this closes the span at the
+    /// last compute completion; the `downlink` breakdown component is
+    /// structurally zero and reserved for a future ground segment.
+    Downlink { tile: u32, sat: u32 },
+    /// A cue passed token-bucket admission for a pass on `sat`.
+    CueAdmit { cue: u32, sat: u32, deadline_s: f64 },
+    /// A cue was rejected (`no_pass`: no pass before the deadline;
+    /// otherwise the capacity reserve was exhausted).
+    CueReject { cue: u32, no_pass: bool },
+    /// An admitted cue was injected into the simulation.
+    CueInject { cue: u32, sat: u32 },
+    /// The cue finished every reachable sink by its deadline.
+    CueComplete { cue: u32, latency_s: f64 },
+    /// The cue missed its deadline (or never finished).
+    CueMiss { cue: u32 },
+    /// An epoch invalidation triggered a re-plan.
+    ReplanBegin { epoch: u32, reason: Box<str> },
+    /// The re-plan finished; `downtime_s` is the slowest migration
+    /// handover it charged (the epoch's re-plan latency).
+    ReplanEnd { epoch: u32, migrations: u32, downtime_s: f64 },
+    /// One instance migration charged by a re-plan.
+    Migration { sat: u32, bytes: f64, ready_s: f64 },
+}
+
+impl TraceKind {
+    /// Stable journal name of the event kind.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::Capture { .. } => "capture",
+            TraceKind::Enqueue { .. } => "enqueue",
+            TraceKind::ComputeStart { .. } => "compute_start",
+            TraceKind::ComputeDone { .. } => "compute_done",
+            TraceKind::IslEnqueue { .. } => "isl_enqueue",
+            TraceKind::TxStart { .. } => "tx_start",
+            TraceKind::Hop { .. } => "hop",
+            TraceKind::Deliver { .. } => "deliver",
+            TraceKind::Downlink { .. } => "downlink",
+            TraceKind::CueAdmit { .. } => "cue_admit",
+            TraceKind::CueReject { .. } => "cue_reject",
+            TraceKind::CueInject { .. } => "cue_inject",
+            TraceKind::CueComplete { .. } => "cue_complete",
+            TraceKind::CueMiss { .. } => "cue_miss",
+            TraceKind::ReplanBegin { .. } => "replan_begin",
+            TraceKind::ReplanEnd { .. } => "replan_end",
+            TraceKind::Migration { .. } => "migration",
+        }
+    }
+
+    /// The tile this event belongs to, if it is a tile event.
+    pub fn tile(&self) -> Option<u32> {
+        match *self {
+            TraceKind::Capture { tile, .. }
+            | TraceKind::Enqueue { tile, .. }
+            | TraceKind::ComputeStart { tile, .. }
+            | TraceKind::ComputeDone { tile, .. }
+            | TraceKind::IslEnqueue { tile, .. }
+            | TraceKind::TxStart { tile, .. }
+            | TraceKind::Hop { tile, .. }
+            | TraceKind::Deliver { tile, .. }
+            | TraceKind::Downlink { tile, .. } => Some(tile),
+            _ => None,
+        }
+    }
+}
+
+/// Anything that consumes trace events.  Every method defaults to a
+/// no-op, so the trait bound costs nothing for sinks that ignore a class
+/// of events; [`NullSink`] is the all-no-op instance.
+pub trait TraceSink {
+    /// Record one event.
+    fn record(&mut self, _ev: &TraceEvent) {}
+}
+
+/// The no-op sink: every event vanishes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {}
+
+/// The ring-buffered event recorder the simulator carries when tracing is
+/// on.  Bounded memory: past `capacity` events the oldest are dropped and
+/// counted in [`FlightRecorder::dropped`].
+#[derive(Debug, Clone)]
+pub struct FlightRecorder {
+    capacity: usize,
+    next_seq: u64,
+    dropped: u64,
+    events: VecDeque<TraceEvent>,
+    /// Per-tile last event seq — the causal parent of the tile's next
+    /// event.  Indexed by tile id, grown on demand, [`NO_PARENT`]-filled.
+    last_of_tile: Vec<u64>,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> Self {
+        FlightRecorder {
+            capacity: capacity.max(1),
+            next_seq: 0,
+            dropped: 0,
+            events: VecDeque::new(),
+            last_of_tile: Vec::new(),
+        }
+    }
+
+    /// Append one event with an explicit causal parent; returns its seq.
+    pub fn emit(&mut self, t_s: f64, parent: u64, kind: TraceKind) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        if self.events.len() == self.capacity {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(TraceEvent { seq, t_s, parent, kind });
+        seq
+    }
+
+    /// Append one tile event, threading the causal parent automatically:
+    /// the parent is the tile's previous event (or [`NO_PARENT`] for its
+    /// first), and this event becomes the tile's new chain head.
+    pub fn emit_tile(&mut self, t_s: f64, tile: u32, kind: TraceKind) -> u64 {
+        let i = tile as usize;
+        if i >= self.last_of_tile.len() {
+            self.last_of_tile.resize(i + 1, NO_PARENT);
+        }
+        let parent = self.last_of_tile[i];
+        let seq = self.emit(t_s, parent, kind);
+        self.last_of_tile[i] = seq;
+        seq
+    }
+
+    /// Events still in the ring, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter()
+    }
+
+    /// Number of events still held.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events dropped by the ring (oldest-first eviction).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+impl TraceSink for FlightRecorder {
+    fn record(&mut self, ev: &TraceEvent) {
+        self.emit(ev.t_s, ev.parent, ev.kind.clone());
+    }
+}
+
+/// A mission-level journal: per-epoch simulator recorders absorbed onto
+/// one timeline (epoch-local times offset to mission time) plus the
+/// orchestrator's own cue/re-plan events.  `(epoch, orch, seq)` is unique;
+/// parent references resolve within the same `(epoch, orch)` scope.
+#[derive(Debug, Clone, Default)]
+pub struct TraceLog {
+    pub entries: Vec<LogEntry>,
+    /// Total events dropped by the absorbed recorders' rings.
+    pub dropped: u64,
+    orch_seq: u64,
+}
+
+/// One journal line.
+#[derive(Debug, Clone)]
+pub struct LogEntry {
+    /// Epoch the event belongs to (0 for single-shot runs).
+    pub epoch: u32,
+    /// Emitted by an orchestrator (cue/re-plan scope) rather than the
+    /// simulator — orchestrator seqs live in their own numbering space.
+    pub orch: bool,
+    pub seq: u64,
+    /// Mission time, seconds (epoch offset already applied).
+    pub t_s: f64,
+    pub parent: u64,
+    pub kind: TraceKind,
+}
+
+impl TraceLog {
+    /// Absorb one epoch's simulator recorder, offsetting its epoch-local
+    /// times by the epoch start `t0_s`.
+    pub fn absorb(&mut self, epoch: u32, t0_s: f64, rec: &FlightRecorder) {
+        self.dropped += rec.dropped();
+        for ev in rec.events() {
+            self.entries.push(LogEntry {
+                epoch,
+                orch: false,
+                seq: ev.seq,
+                t_s: t0_s + ev.t_s,
+                parent: ev.parent,
+                kind: ev.kind.clone(),
+            });
+        }
+    }
+
+    /// Append one orchestrator-scope event (mission time); returns its
+    /// seq for parenting follow-up events.
+    pub fn push(&mut self, epoch: u32, t_s: f64, parent: u64, kind: TraceKind) -> u64 {
+        let seq = self.orch_seq;
+        self.orch_seq += 1;
+        self.entries.push(LogEntry { epoch, orch: true, seq, t_s, parent, kind });
+        seq
+    }
+
+    /// Single-recorder journal (standalone simulator runs and tests).
+    pub fn from_recorder(rec: &FlightRecorder) -> Self {
+        let mut log = TraceLog::default();
+        log.absorb(0, 0.0, rec);
+        log
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enqueue(tile: u32) -> TraceKind {
+        TraceKind::Enqueue { tile, sat: 0, func: 0 }
+    }
+
+    #[test]
+    fn tile_events_thread_causal_parents() {
+        let mut rec = FlightRecorder::new(16);
+        let a = rec.emit_tile(0.0, 3, TraceKind::Capture { tile: 3, tile_no: 3, sat: 0, pipeline: 0 });
+        let b = rec.emit_tile(1.0, 3, enqueue(3));
+        let c = rec.emit_tile(1.0, 7, enqueue(7));
+        let d = rec.emit_tile(2.0, 3, enqueue(3));
+        let evs: Vec<&TraceEvent> = rec.events().collect();
+        assert_eq!(evs[a as usize].parent, NO_PARENT);
+        assert_eq!(evs[b as usize].parent, a);
+        assert_eq!(evs[c as usize].parent, NO_PARENT, "tiles chain independently");
+        assert_eq!(evs[d as usize].parent, b);
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let mut rec = FlightRecorder::new(4);
+        for i in 0..10u32 {
+            rec.emit_tile(i as f64, i, enqueue(i));
+        }
+        assert_eq!(rec.len(), 4);
+        assert_eq!(rec.dropped(), 6);
+        // Seqs stay dense and gap-free: the survivors are the newest four.
+        let seqs: Vec<u64> = rec.events().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn null_sink_is_a_no_op() {
+        let mut sink = NullSink;
+        sink.record(&TraceEvent {
+            seq: 0,
+            t_s: 0.0,
+            parent: NO_PARENT,
+            kind: TraceKind::CueMiss { cue: 0 },
+        });
+    }
+
+    #[test]
+    fn log_absorb_offsets_epoch_time_and_push_numbers_orch_scope() {
+        let mut rec = FlightRecorder::new(16);
+        rec.emit_tile(1.5, 0, enqueue(0));
+        let mut log = TraceLog::default();
+        log.absorb(2, 100.0, &rec);
+        let s0 = log.push(2, 105.0, NO_PARENT, TraceKind::CueAdmit { cue: 0, sat: 1, deadline_s: 60.0 });
+        let s1 = log.push(2, 106.0, s0, TraceKind::CueInject { cue: 0, sat: 1 });
+        assert_eq!(log.entries[0].t_s, 101.5);
+        assert!(!log.entries[0].orch);
+        assert!(log.entries[1].orch);
+        assert_eq!((s0, s1), (0, 1));
+        assert_eq!(log.entries[2].parent, s0);
+    }
+}

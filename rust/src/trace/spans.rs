@@ -1,0 +1,421 @@
+//! Span assembly: fold the flat event log into per-tile and per-cue
+//! causal spans with a latency breakdown.
+//!
+//! A tile's events form a time-ordered chain (the recorder threads each
+//! tile's causal parent), so the interval between consecutive events
+//! partitions the tile's wall time exactly.  Each interval is classified
+//! by the event that *ends* it:
+//!
+//! | ending event    | component         | meaning                                    |
+//! |-----------------|-------------------|--------------------------------------------|
+//! | `Enqueue` after capture/delivery | `revisit` | waiting for the satellite to revisit/capture |
+//! | `Enqueue` (forward), `ComputeStart` | `wait_cpu` | queued behind other tiles at the instance |
+//! | `ComputeDone` (stall part) | `migration_stall` | instance handover not yet ready       |
+//! | `ComputeDone` (rest) | `compute`    | service incl. GPU batching-window wait     |
+//! | `IslEnqueue`, `TxStart` | `wait_isl` | queued behind other messages on the link   |
+//! | `Hop`, `Deliver` | `tx`             | on-the-wire transmission                   |
+//! | `Downlink`      | `downlink`        | ground segment (structurally 0 today)      |
+//!
+//! Breakdown sums are committed into the span at every `ComputeDone`
+//! (and `Downlink`), so trailing events of messages still in flight when
+//! the run ends never inflate the span: `t_end` is the tile's last
+//! compute completion — exactly the instant the simulator's
+//! `tile.latency_s` metric measures against — and the committed
+//! components sum to `t_end − t_start` to the last bit of float
+//! associativity.
+
+use std::collections::HashMap;
+
+use crate::telemetry::Metrics;
+use crate::trace::{FlightRecorder, LogEntry, TraceKind, TraceLog, NO_PARENT};
+
+/// One tile's causal span with its latency breakdown.  All `_s` fields
+/// are seconds; `wall_s()` (= `t_end − t_start`) equals the sum of the
+/// components for committed (non-truncated) spans.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TileSpan {
+    pub epoch: u32,
+    pub tile: u32,
+    /// Capture time (first event).
+    pub t_start: f64,
+    /// Last committed completion (`ComputeDone`/`Downlink`).
+    pub t_end: f64,
+    /// Waiting for a satellite revisit/capture after delivery.
+    pub revisit_s: f64,
+    /// Queued at a compute instance behind other tiles.
+    pub wait_cpu_s: f64,
+    /// In service (includes GPU batching-window wait).
+    pub compute_s: f64,
+    /// Stalled on a not-yet-ready migrated instance.
+    pub migration_stall_s: f64,
+    /// Queued on an ISL behind other messages.
+    pub wait_isl_s: f64,
+    /// On-the-wire ISL transmission.
+    pub tx_s: f64,
+    /// Ground downlink (structurally 0; reserved for a ground segment).
+    pub downlink_s: f64,
+    /// Events folded into this span.
+    pub events: u32,
+    /// Completed ISL hops.
+    pub hops: u32,
+    /// Saw at least one `ComputeDone` — the span is committed and its
+    /// breakdown is exact.
+    pub completed: bool,
+    /// The tile's event prefix fell out of the recorder ring; breakdown
+    /// is partial and excluded from metrics.
+    pub truncated: bool,
+}
+
+impl TileSpan {
+    /// End-to-end wall time, capture → last completion.
+    pub fn wall_s(&self) -> f64 {
+        self.t_end - self.t_start
+    }
+
+    /// Sum of the breakdown components (equals `wall_s()` for committed,
+    /// non-truncated spans).
+    pub fn components_sum(&self) -> f64 {
+        self.revisit_s
+            + self.wait_cpu_s
+            + self.compute_s
+            + self.migration_stall_s
+            + self.wait_isl_s
+            + self.tx_s
+            + self.downlink_s
+    }
+}
+
+/// One cue's orchestrator-level arc.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CueSpan {
+    pub cue: u32,
+    /// Admission time (mission seconds).
+    pub admit_s: f64,
+    /// Injection time, if the cue reached its pass.
+    pub inject_s: Option<f64>,
+    /// Tip→completion latency, if the cue completed in time.
+    pub latency_s: Option<f64>,
+    /// The cue missed its deadline (or never finished).
+    pub missed: bool,
+}
+
+const REVISIT: usize = 0;
+const WAIT_CPU: usize = 1;
+const COMPUTE: usize = 2;
+const MIGRATION: usize = 3;
+const WAIT_ISL: usize = 4;
+const TX: usize = 5;
+const DOWNLINK: usize = 6;
+
+#[derive(Debug)]
+struct Work {
+    span: TileSpan,
+    prev_t: f64,
+    /// Previous event was `Capture`/`Deliver` → the next `Enqueue`
+    /// interval is revisit wait, not instance queueing.
+    after_wait: bool,
+    /// Handover stall reported by the last `ComputeStart`.
+    pending_stall: f64,
+    /// Uncommitted running component sums.
+    run: [f64; 7],
+}
+
+/// Streaming folder from events to tile spans, keyed by `(epoch, tile)`.
+#[derive(Debug, Default)]
+struct Builder {
+    index: HashMap<(u32, u32), usize>,
+    work: Vec<Work>,
+}
+
+impl Builder {
+    fn feed(&mut self, epoch: u32, t_s: f64, parent: u64, kind: &TraceKind) {
+        let Some(tile) = kind.tile() else { return };
+        let key = (epoch, tile);
+        let Some(&i) = self.index.get(&key) else {
+            // First event of the tile in this epoch: it opens the span
+            // and contributes no interval.  A non-root first event means
+            // the ring dropped the tile's prefix.
+            let mut w = Work {
+                span: TileSpan {
+                    epoch,
+                    tile,
+                    t_start: t_s,
+                    t_end: t_s,
+                    events: 1,
+                    truncated: parent != NO_PARENT || !matches!(kind, TraceKind::Capture { .. }),
+                    ..TileSpan::default()
+                },
+                prev_t: t_s,
+                after_wait: matches!(kind, TraceKind::Capture { .. } | TraceKind::Deliver { .. }),
+                pending_stall: 0.0,
+                run: [0.0; 7],
+            };
+            if let TraceKind::ComputeStart { stall_s, .. } = kind {
+                w.pending_stall = *stall_s;
+            }
+            self.index.insert(key, self.work.len());
+            self.work.push(w);
+            return;
+        };
+        let w = &mut self.work[i];
+        let dt = (t_s - w.prev_t).max(0.0);
+        match kind {
+            TraceKind::Capture { .. } => {}
+            TraceKind::Enqueue { .. } => {
+                if w.after_wait {
+                    w.run[REVISIT] += dt;
+                } else {
+                    w.run[WAIT_CPU] += dt;
+                }
+            }
+            TraceKind::ComputeStart { stall_s, .. } => {
+                w.run[WAIT_CPU] += dt;
+                w.pending_stall = *stall_s;
+            }
+            TraceKind::ComputeDone { .. } => {
+                let stall = w.pending_stall.clamp(0.0, dt);
+                w.run[MIGRATION] += stall;
+                w.run[COMPUTE] += dt - stall;
+                w.pending_stall = 0.0;
+                w.commit(t_s);
+            }
+            TraceKind::IslEnqueue { .. } | TraceKind::TxStart { .. } => {
+                w.run[WAIT_ISL] += dt;
+            }
+            TraceKind::Hop { .. } => {
+                w.run[TX] += dt;
+                w.span.hops += 1;
+            }
+            TraceKind::Deliver { .. } => {
+                w.run[TX] += dt;
+            }
+            TraceKind::Downlink { .. } => {
+                w.run[DOWNLINK] += dt;
+                w.commit(t_s);
+            }
+            _ => {}
+        }
+        w.after_wait = matches!(kind, TraceKind::Capture { .. } | TraceKind::Deliver { .. });
+        w.prev_t = t_s;
+        w.span.events += 1;
+    }
+
+    fn finish(self) -> Vec<TileSpan> {
+        self.work.into_iter().map(|w| w.span).collect()
+    }
+}
+
+impl Work {
+    fn commit(&mut self, t_s: f64) {
+        self.span.t_end = t_s;
+        self.span.revisit_s = self.run[REVISIT];
+        self.span.wait_cpu_s = self.run[WAIT_CPU];
+        self.span.compute_s = self.run[COMPUTE];
+        self.span.migration_stall_s = self.run[MIGRATION];
+        self.span.wait_isl_s = self.run[WAIT_ISL];
+        self.span.tx_s = self.run[TX];
+        self.span.downlink_s = self.run[DOWNLINK];
+        self.span.completed = true;
+    }
+}
+
+/// Assemble tile spans from one simulator recorder (epoch 0, local time).
+pub fn assemble(rec: &FlightRecorder) -> Vec<TileSpan> {
+    let mut b = Builder::default();
+    for ev in rec.events() {
+        b.feed(0, ev.t_s, ev.parent, &ev.kind);
+    }
+    b.finish()
+}
+
+/// Assemble tile spans from a mission-level journal, grouping by
+/// `(epoch, tile)` (epoch-local tile ids reuse the same numbers).
+pub fn assemble_log(log: &TraceLog) -> Vec<TileSpan> {
+    let mut b = Builder::default();
+    for e in &log.entries {
+        if !e.orch {
+            b.feed(e.epoch, e.t_s, e.parent, &e.kind);
+        }
+    }
+    b.finish()
+}
+
+/// Fold the orchestrator-scope cue events of a journal into per-cue
+/// spans, in admission order.
+pub fn cue_spans(log: &TraceLog) -> Vec<CueSpan> {
+    let mut index: HashMap<u32, usize> = HashMap::new();
+    let mut spans: Vec<CueSpan> = Vec::new();
+    for e in &log.entries {
+        if !e.orch {
+            continue;
+        }
+        match e.kind {
+            TraceKind::CueAdmit { cue, .. } => {
+                index.insert(cue, spans.len());
+                spans.push(CueSpan {
+                    cue,
+                    admit_s: e.t_s,
+                    inject_s: None,
+                    latency_s: None,
+                    missed: false,
+                });
+            }
+            TraceKind::CueInject { cue, .. } => {
+                if let Some(&i) = index.get(&cue) {
+                    spans[i].inject_s = Some(e.t_s);
+                }
+            }
+            TraceKind::CueComplete { cue, latency_s } => {
+                if let Some(&i) = index.get(&cue) {
+                    spans[i].latency_s = Some(latency_s);
+                }
+            }
+            TraceKind::CueMiss { cue } => {
+                if let Some(&i) = index.get(&cue) {
+                    spans[i].missed = true;
+                }
+            }
+            _ => {}
+        }
+    }
+    spans
+}
+
+/// Surface span breakdowns as `trace.*` metric distributions: one sample
+/// per committed span for each component plus `trace.span_total`
+/// (= end-to-end wall time, matching `tile.latency_s`), and a
+/// `trace.spans_truncated` counter for ring-truncated tiles.
+pub fn observe_spans(m: &mut Metrics, spans: &[TileSpan]) {
+    for s in spans {
+        if s.truncated {
+            m.inc("trace.spans_truncated", 1.0);
+            continue;
+        }
+        if !s.completed {
+            continue;
+        }
+        m.observe("trace.revisit", s.revisit_s);
+        m.observe("trace.wait_cpu", s.wait_cpu_s);
+        m.observe("trace.compute", s.compute_s);
+        m.observe("trace.migration_stall", s.migration_stall_s);
+        m.observe("trace.wait_isl", s.wait_isl_s);
+        m.observe("trace.tx", s.tx_s);
+        m.observe("trace.downlink", s.downlink_s);
+        m.observe("trace.span_total", s.wall_s());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceLog;
+
+    fn rec_with_chain() -> FlightRecorder {
+        // One tile's full two-sat journey, hand-built:
+        //   capture 0.0 → enqueue 0.0 (revisit 0)
+        //   → compute_start 2.0 (wait_cpu 2) → compute_done 5.0 (compute 3)
+        //   → isl_enqueue 5.0 (wait_isl 0) → tx_start 6.0 (wait_isl 1)
+        //   → hop 8.0 (tx 2) → deliver 8.0 (tx 0)
+        //   → enqueue 9.5 (revisit 1.5)
+        //   → compute_start 10.0 stall 0.5 (wait_cpu 0.5)
+        //   → compute_done 12.0 (migration_stall 0.5, compute 1.5)
+        //   → downlink 12.0 (downlink 0)
+        let mut r = FlightRecorder::new(64);
+        let t = 4u32;
+        r.emit_tile(0.0, t, TraceKind::Capture { tile: t, tile_no: 4, sat: 0, pipeline: 0 });
+        r.emit_tile(0.0, t, TraceKind::Enqueue { tile: t, sat: 0, func: 0 });
+        r.emit_tile(2.0, t, TraceKind::ComputeStart { tile: t, sat: 0, func: 0, gpu: false, stall_s: 0.0 });
+        r.emit_tile(5.0, t, TraceKind::ComputeDone { tile: t, sat: 0, func: 0, gpu: false });
+        r.emit_tile(5.0, t, TraceKind::IslEnqueue { tile: t, link: 0, from_sat: 0, to_sat: 1, bytes: 1e6 });
+        r.emit_tile(6.0, t, TraceKind::TxStart { tile: t, link: 0, sat: 0 });
+        r.emit_tile(8.0, t, TraceKind::Hop { tile: t, link: 0, sat: 1 });
+        r.emit_tile(8.0, t, TraceKind::Deliver { tile: t, sat: 1, wait_s: 1.5 });
+        r.emit_tile(9.5, t, TraceKind::Enqueue { tile: t, sat: 1, func: 1 });
+        r.emit_tile(10.0, t, TraceKind::ComputeStart { tile: t, sat: 1, func: 1, gpu: true, stall_s: 0.5 });
+        r.emit_tile(12.0, t, TraceKind::ComputeDone { tile: t, sat: 1, func: 1, gpu: true });
+        r.emit_tile(12.0, t, TraceKind::Downlink { tile: t, sat: 1 });
+        r
+    }
+
+    #[test]
+    fn breakdown_partitions_wall_time_exactly() {
+        let spans = assemble(&rec_with_chain());
+        assert_eq!(spans.len(), 1);
+        let s = &spans[0];
+        assert_eq!(s.tile, 4);
+        assert!(s.completed && !s.truncated);
+        assert_eq!(s.t_start, 0.0);
+        assert_eq!(s.t_end, 12.0);
+        assert_eq!(s.revisit_s, 1.5);
+        assert_eq!(s.wait_cpu_s, 2.5);
+        assert_eq!(s.compute_s, 4.5);
+        assert_eq!(s.migration_stall_s, 0.5);
+        assert_eq!(s.wait_isl_s, 1.0);
+        assert_eq!(s.tx_s, 2.0);
+        assert_eq!(s.downlink_s, 0.0);
+        assert_eq!(s.hops, 1);
+        assert_eq!(s.events, 12);
+        assert_eq!(s.components_sum(), s.wall_s());
+    }
+
+    #[test]
+    fn trailing_in_flight_events_do_not_move_span_end() {
+        let mut r = FlightRecorder::new(64);
+        let t = 0u32;
+        r.emit_tile(0.0, t, TraceKind::Capture { tile: t, tile_no: 0, sat: 0, pipeline: 0 });
+        r.emit_tile(0.0, t, TraceKind::Enqueue { tile: t, sat: 0, func: 0 });
+        r.emit_tile(1.0, t, TraceKind::ComputeStart { tile: t, sat: 0, func: 0, gpu: false, stall_s: 0.0 });
+        r.emit_tile(3.0, t, TraceKind::ComputeDone { tile: t, sat: 0, func: 0, gpu: false });
+        // The forwarded message is still on the wire when the run ends.
+        r.emit_tile(3.0, t, TraceKind::IslEnqueue { tile: t, link: 0, from_sat: 0, to_sat: 1, bytes: 1e6 });
+        r.emit_tile(4.0, t, TraceKind::TxStart { tile: t, link: 0, sat: 0 });
+        let spans = assemble(&r);
+        let s = &spans[0];
+        assert_eq!(s.t_end, 3.0, "uncommitted trailing events must not extend the span");
+        assert_eq!(s.wait_isl_s, 0.0);
+        assert_eq!(s.components_sum(), s.wall_s());
+    }
+
+    #[test]
+    fn ring_truncation_is_flagged_not_misattributed() {
+        let mut r = FlightRecorder::new(2);
+        let t = 0u32;
+        r.emit_tile(0.0, t, TraceKind::Capture { tile: t, tile_no: 0, sat: 0, pipeline: 0 });
+        r.emit_tile(0.0, t, TraceKind::Enqueue { tile: t, sat: 0, func: 0 });
+        r.emit_tile(1.0, t, TraceKind::ComputeStart { tile: t, sat: 0, func: 0, gpu: false, stall_s: 0.0 });
+        r.emit_tile(3.0, t, TraceKind::ComputeDone { tile: t, sat: 0, func: 0, gpu: false });
+        assert_eq!(r.dropped(), 2);
+        let spans = assemble(&r);
+        assert!(spans[0].truncated);
+        let mut m = Metrics::new();
+        observe_spans(&mut m, &spans);
+        assert!(m.samples("trace.span_total").is_empty());
+    }
+
+    #[test]
+    fn observe_spans_surfaces_distributions() {
+        let spans = assemble(&rec_with_chain());
+        let mut m = Metrics::new();
+        observe_spans(&mut m, &spans);
+        assert_eq!(m.samples("trace.span_total"), &[12.0]);
+        assert_eq!(m.samples("trace.compute"), &[4.5]);
+        assert_eq!(m.samples("trace.migration_stall"), &[0.5]);
+    }
+
+    #[test]
+    fn cue_spans_fold_the_lifecycle() {
+        let mut log = TraceLog::default();
+        let a = log.push(0, 10.0, crate::trace::NO_PARENT, TraceKind::CueAdmit { cue: 0, sat: 2, deadline_s: 60.0 });
+        log.push(0, 15.0, a, TraceKind::CueInject { cue: 0, sat: 2 });
+        log.push(1, 40.0, a, TraceKind::CueComplete { cue: 0, latency_s: 30.0 });
+        let b = log.push(1, 50.0, crate::trace::NO_PARENT, TraceKind::CueAdmit { cue: 1, sat: 0, deadline_s: 60.0 });
+        log.push(2, 120.0, b, TraceKind::CueMiss { cue: 1 });
+        let spans = cue_spans(&log);
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].inject_s, Some(15.0));
+        assert_eq!(spans[0].latency_s, Some(30.0));
+        assert!(!spans[0].missed);
+        assert!(spans[1].missed);
+        assert_eq!(spans[1].inject_s, None);
+    }
+}

@@ -3,9 +3,11 @@
 //! fault forces a re-plan mid-mission while detection-derived cues are
 //! admitted, per-cue routed, and completed before their deadlines), the
 //! FIFO-vs-priority ISL comparison on identical per-epoch inputs, the
-//! same-class ordering guarantee of the two-class link queues, and the
+//! same-class ordering guarantee of the two-class link queues, the
 //! mission branch of the parallel sweep staying bit-identical to
-//! sequential.
+//! sequential, and the flight-recorder contract (byte-identical journals
+//! on replay; tracing on/off never changes outcomes; span breakdowns
+//! partition the end-to-end latency).
 
 use orbitchain::config::Scenario;
 use orbitchain::dynamic::{DynamicSpec, Event, EventKind, Timeline};
@@ -13,6 +15,7 @@ use orbitchain::mission::{MissionOrchestrator, MissionSpec};
 use orbitchain::scenario::{SweepGrid, SweepRunner};
 use orbitchain::sim::{self, SimConfig, TileInjection};
 use orbitchain::tipcue::CueStatus;
+use orbitchain::trace::{export, spans, TraceSpec};
 
 fn mission_spec(epochs: usize, detection_rate: f64) -> MissionSpec {
     MissionSpec {
@@ -92,6 +95,91 @@ fn acceptance_seed7_mission_trace() {
     assert_eq!(
         again.metrics.to_json().to_string_compact(),
         rep.metrics.to_json().to_string_compact()
+    );
+}
+
+#[test]
+fn trace_journal_is_deterministic_and_spans_partition_latency() {
+    // The acceptance mission (`--seed 7` over a declared fault trace) with
+    // the flight recorder on: a replay must reproduce the JSONL journal
+    // byte for byte, and every committed tile span's breakdown must sum to
+    // the tile's end-to-end latency.
+    let s = Scenario::jetson().with_seed(7).with_mission(mission_spec(8, 0.3));
+    let tl = Timeline::declared(vec![
+        Event { t_s: 25.0, kind: EventKind::SatFail { sat: 1 } },
+        Event { t_s: 55.0, kind: EventKind::SatRecover { sat: 1 } },
+    ]);
+    let run = || {
+        MissionOrchestrator::new(&s)
+            .with_timeline(tl.clone())
+            .with_trace(TraceSpec::default())
+            .run()
+            .expect("traced mission runs")
+    };
+    let rep = run();
+    let log = rep.trace.as_ref().expect("tracing was requested");
+    assert!(!log.is_empty());
+    assert_eq!(log.dropped, 0, "default ring must hold the acceptance mission");
+
+    let j1 = export::jsonl(log);
+    let again = run();
+    let j2 = export::jsonl(again.trace.as_ref().unwrap());
+    assert!(!j1.is_empty());
+    assert_eq!(j1, j2, "same seed + timeline must give a byte-identical journal");
+
+    // Per-tile span breakdowns partition the end-to-end latency.
+    let tile_spans = spans::assemble_log(log);
+    let committed: Vec<_> = tile_spans
+        .iter()
+        .filter(|sp| sp.completed && !sp.truncated)
+        .collect();
+    assert!(!committed.is_empty(), "the mission must commit tile spans");
+    for sp in &committed {
+        assert!(
+            (sp.components_sum() - sp.wall_s()).abs() < 1e-9,
+            "breakdown must sum to wall time: {sp:?}"
+        );
+    }
+    // The same spans surfaced as `trace.*` distributions in the registry.
+    assert_eq!(rep.metrics.samples("trace.span_total").len(), committed.len());
+
+    // The journal's cue arcs agree with the report's outcome counters.
+    let cue_arcs = spans::cue_spans(log);
+    assert_eq!(
+        cue_arcs.iter().filter(|c| c.latency_s.is_some()).count(),
+        rep.completed
+    );
+}
+
+#[test]
+fn tracing_on_or_off_does_not_change_mission_outcomes() {
+    // The recorder only observes: the same mission with tracing enabled
+    // must produce identical outcomes (the traced run merely adds the
+    // `trace.*` span distributions on top of the shared metrics).
+    let s = Scenario::jetson().with_seed(7).with_mission(mission_spec(6, 0.3));
+    let plain = MissionOrchestrator::new(&s).run().expect("untraced mission runs");
+    let traced = MissionOrchestrator::new(&s)
+        .with_trace(TraceSpec { capacity: 1 << 16 })
+        .run()
+        .expect("traced mission runs");
+    assert!(plain.trace.is_none());
+    assert!(traced.trace.is_some());
+    assert_eq!(traced.replans, plain.replans);
+    assert_eq!(traced.detections, plain.detections);
+    assert_eq!(traced.tips, plain.tips);
+    assert_eq!(traced.admitted, plain.admitted);
+    assert_eq!(traced.completed, plain.completed);
+    assert_eq!(traced.missed, plain.missed);
+    assert_eq!(traced.expired, plain.expired);
+    assert_eq!(traced.completion_ratio, plain.completion_ratio);
+    assert_eq!(traced.response_latency_s, plain.response_latency_s);
+    assert_eq!(
+        traced.metrics.counter("mission.tips"),
+        plain.metrics.counter("mission.tips")
+    );
+    assert_eq!(
+        traced.metrics.samples("mission.cue_latency_prio"),
+        plain.metrics.samples("mission.cue_latency_prio")
     );
 }
 
