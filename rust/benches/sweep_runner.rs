@@ -6,7 +6,8 @@
 //! simulator event increments a counter) across its three generations:
 //! interned `MetricId` (current), name-based lookup-first, and the
 //! original allocate-a-`String`-per-call `entry()` spelling — plus the
-//! sweep-aggregation `merge` path (one intern per name per registry).
+//! sweep-aggregation `merge` path (one intern per name per registry) and
+//! the two `Dist` backends (exact vec-push vs bounded-memory histogram).
 //! Run: `cargo bench --bench sweep_runner`.
 
 use std::time::Instant;
@@ -94,6 +95,49 @@ fn bench_metrics_merge() {
          ({:.0} merges/ms)",
         t_merge * 1e3,
         POINTS as f64 / (t_merge * 1e3).max(1e-9)
+    );
+    bench_dist_backends();
+}
+
+/// `observe` into the two `Dist` backends: the exact-sample default
+/// (a `Vec` push per observation, O(n) memory) vs the bounded-memory
+/// streaming histogram (a `BTreeMap` bucket bump, O(distinct buckets)).
+/// Counters, counts, and means are identical across backends; memory is
+/// the tradeoff the histogram buys.
+fn bench_dist_backends() {
+    const N: usize = 2_000_000;
+    const KEY: &str = "sim.frame_latency";
+    // A deterministic latency-shaped spread over ~3 decades.
+    let value = |i: usize| 0.01 + (i.wrapping_mul(2_654_435_761) % 10_000) as f64 * 0.001;
+
+    let mut exact = Metrics::new();
+    let t0 = Instant::now();
+    for i in 0..N {
+        exact.observe(KEY, value(i));
+    }
+    let t_vec = t0.elapsed().as_secs_f64();
+
+    let mut hist = Metrics::new_hist();
+    let t1 = Instant::now();
+    for i in 0..N {
+        hist.observe(KEY, value(i));
+    }
+    let t_hist = t1.elapsed().as_secs_f64();
+
+    let hd = hist.dist(KEY).and_then(|d| d.as_hist()).expect("hist backend");
+    assert_eq!(hd.count() as usize, N);
+    assert_eq!(hist.dist(KEY).unwrap().mean(), exact.dist(KEY).unwrap().mean());
+    let buckets = hd.pos_buckets().len() + hd.neg_buckets().len();
+    println!(
+        "dist observe ({N} samples): vec-push {:.1} ms ({} KiB) vs histogram \
+         {:.1} ms ({} buckets, ~{} KiB) — {:.2}x time, {:.0}x memory",
+        t_vec * 1e3,
+        N * 8 / 1024,
+        t_hist * 1e3,
+        buckets,
+        (buckets * 16).max(1) / 1024 + 1,
+        t_hist / t_vec.max(1e-9),
+        (N * 8) as f64 / (buckets * 16).max(1) as f64
     );
 }
 

@@ -48,6 +48,7 @@ use crate::scenario::{
     RouterBackend, ScenarioError, ScenarioReport,
 };
 use crate::sim::{self, InstanceSpec, SimConfig, Simulator};
+use crate::telemetry::stream::{StreamSpec, StreamWriter};
 use crate::telemetry::Metrics;
 use crate::trace::{TraceKind, TraceLog, TraceSpec, NO_PARENT};
 use crate::util::json::{obj, Json};
@@ -241,6 +242,10 @@ pub struct DynamicReport {
     /// events on the mission timeline plus the orchestrator's own
     /// re-plan/migration/cue events.
     pub trace: Option<TraceLog>,
+    /// Telemetry delta-stream lines when an in-memory sink was requested
+    /// via [`EpochOrchestrator::with_telemetry`]; `None` for file sinks
+    /// and untelemetered runs.
+    pub telemetry: Option<Vec<String>>,
     pub metrics: Metrics,
 }
 
@@ -336,6 +341,8 @@ pub struct EpochOrchestrator {
     router: Box<dyn RouterBackend>,
     timeline: Timeline,
     trace: Option<TraceSpec>,
+    telemetry: Option<StreamSpec>,
+    hist_metrics: bool,
 }
 
 impl EpochOrchestrator {
@@ -382,6 +389,8 @@ impl EpochOrchestrator {
             router: Box::new(OrbitChainRouter),
             timeline,
             trace: None,
+            telemetry: None,
+            hist_metrics: false,
         }
     }
 
@@ -430,6 +439,21 @@ impl EpochOrchestrator {
         self
     }
 
+    /// Stream per-epoch telemetry delta snapshots
+    /// ([`crate::telemetry::stream`]); see the mission orchestrator's
+    /// `with_telemetry` for the format.  Never changes a run outcome.
+    pub fn with_telemetry(mut self, spec: StreamSpec) -> Self {
+        self.telemetry = Some(spec);
+        self
+    }
+
+    /// Back the metric registries with bounded-memory streaming histograms
+    /// ([`crate::telemetry::hist`]) instead of exact sample vectors.
+    pub fn with_hist_metrics(mut self, on: bool) -> Self {
+        self.hist_metrics = on;
+        self
+    }
+
     /// Toggle the re-planning policy (`false` = static ride-through
     /// baseline) without touching the fault trace.
     pub fn replanning(mut self, replan: bool) -> Self {
@@ -460,7 +484,11 @@ impl EpochOrchestrator {
         let mut ev_idx = 0usize;
         let mut current: Option<PlanState> = None;
 
-        let mut merged = Metrics::new();
+        let mut merged = if self.hist_metrics {
+            Metrics::new_hist()
+        } else {
+            Metrics::new()
+        };
         // Interned ids for everything this loop records per epoch (the
         // one-shot mission totals below reuse them; names resolve once).
         let m_epoch_completion = merged.id("dynamic.epoch_completion");
@@ -484,6 +512,16 @@ impl EpochOrchestrator {
         let mut worst_latency = 0.0f64;
         let mut worst_breakdown = (0.0, 0.0, 0.0);
         let mut trace_log: Option<TraceLog> = self.trace.map(|_| TraceLog::default());
+        let mut telem: Option<StreamWriter> = match &self.telemetry {
+            None => None,
+            Some(spec) => Some(
+                StreamWriter::create(spec, self.hist_metrics)
+                    .map_err(|e| ScenarioError::Telemetry(e.to_string()))?,
+            ),
+        };
+        // Wall-clock totals already emitted to the (opt-in) profile
+        // section; snapshots send increments only.
+        let mut prof_emitted = (0.0f64, 0.0f64, 0.0f64);
 
         for e in 0..self.spec.epochs {
             let t0 = e as f64 * epoch_s;
@@ -680,6 +718,7 @@ impl EpochOrchestrator {
                 warm_tiles: warm,
                 injections: cue_injections,
                 trace: self.trace,
+                hist_metrics: self.hist_metrics,
                 ..Default::default()
             };
             injected += (frames * epoch_c.tiles_per_frame + warm + cue_tiles) as f64;
@@ -761,6 +800,21 @@ impl EpochOrchestrator {
                 burst: health.burst,
                 area_visible: health.area_visible,
             });
+
+            // Epoch-boundary telemetry delta with the simulator's
+            // end-of-epoch gauges.
+            if let Some(w) = telem.as_mut() {
+                let prof = [
+                    ("plan_ms", plan_ms - prof_emitted.0),
+                    ("route_ms", route_ms - prof_emitted.1),
+                    ("sim_ms", sim_ms - prof_emitted.2),
+                ];
+                if w.due(e as u64) {
+                    prof_emitted = (plan_ms, route_ms, sim_ms);
+                }
+                w.epoch_snapshot(e as u64, t0 + epoch_s, &merged, &rep.gauges, &prof)
+                    .map_err(|err| ScenarioError::Telemetry(err.to_string()))?;
+            }
         }
 
         // Mission-wide completion from the merged per-function counters.
@@ -806,6 +860,20 @@ impl EpochOrchestrator {
             current = Some(built);
         }
         let state = current.as_ref().expect("tables just built");
+
+        // Final absolute-completing snapshot after the summary counters.
+        let telemetry = match telem {
+            None => None,
+            Some(mut w) => {
+                w.final_snapshot(
+                    self.spec.epochs as u64,
+                    self.spec.epochs as f64 * epoch_s,
+                    &merged,
+                )
+                .map_err(|e| ScenarioError::Telemetry(e.to_string()))?;
+                w.finish().map_err(|e| ScenarioError::Telemetry(e.to_string()))?
+            }
+        };
         Ok(DynamicReport {
             label: self.label.clone(),
             backend: state.backend.clone(),
@@ -827,6 +895,7 @@ impl EpochOrchestrator {
             sim_ms,
             notes,
             trace: trace_log,
+            telemetry,
             metrics: merged,
         })
     }
@@ -889,6 +958,7 @@ pub(crate) fn build_tables(
     }
     let (eff_c, _lost) = c.degraded(&usable, burst);
     let ctx = Ctx { wf, db, c: &eff_c, banned: mask };
+    crate::telemetry::phases::bump_router_passes(1);
     let t0 = Instant::now();
     let planned = planner.plan(&ctx)?;
     let plan_ms = t0.elapsed().as_secs_f64() * 1e3;

@@ -27,7 +27,12 @@
 //! * [`sim`] — discrete-event runtime: queues, GPU slices, ISL traffic.
 //! * [`runtime`] — PJRT artifact loading & hardware-in-the-loop inference.
 //! * [`baselines`] — data parallelism & compute parallelism frameworks.
-//! * [`telemetry`] — metric registry and reports.
+//! * [`telemetry`] — metric registry (exact-sample or bounded-memory
+//!   histogram backends), per-epoch delta-snapshot streaming, and the
+//!   deterministic phase self-profiler.
+//! * [`report`] — the mission observatory dashboard: folds a telemetry
+//!   stream (and optionally a trace journal) into per-epoch timelines,
+//!   top-k hot satellites/links, and the latency breakdown table.
 //! * [`scenario`] — the orchestration layer: `Orchestrator` owns the
 //!   plan → route → simulate cycle behind pluggable planner/router
 //!   backends, and `SweepRunner` fans parameter grids across threads
@@ -62,6 +67,7 @@ pub mod mission;
 pub mod orbit;
 pub mod planner;
 pub mod profile;
+pub mod report;
 pub mod routing;
 pub mod runtime;
 pub mod scenario;

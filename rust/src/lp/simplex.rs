@@ -270,6 +270,7 @@ impl Tableau {
     }
 
     fn pivot(&mut self, row: usize, col: usize) {
+        crate::telemetry::phases::bump_simplex_pivots(1);
         let stride = self.stride;
         let p = self.a[row * stride + col];
         debug_assert!(p.abs() > EPS);

@@ -14,17 +14,21 @@
 //!                       [--backends orbitchain,compute-par] [--threads N] [--json]
 //! orbitchain tipcue     [same flags] [--tip-rate R] [--cue-deadline S] [--reserve F]
 //!                       [--pass-dt S] [--min-elevation D] [--backend B]
-//!                       [--trace PATH[:CAP]] [--json]
+//!                       [--trace PATH[:CAP]] [--telemetry PATH[:N]] [--hist-metrics]
+//!                       [--profile] [--json]
 //! orbitchain dynamic    [same flags] [--epochs N] [--epoch-frames N] [--mtbf S] [--mttr S]
 //!                       [--link-mtbf S] [--link-mttr S] [--degrade-factor F]
 //!                       [--burst-mtbf S] [--burst-duration S] [--burst-factor X]
 //!                       [--area-visibility] [--state-bytes B] [--backend B]
-//!                       [--no-baseline] [--trace PATH[:CAP]] [--json]
+//!                       [--no-baseline] [--trace PATH[:CAP]] [--telemetry PATH[:N]]
+//!                       [--hist-metrics] [--profile] [--json]
 //! orbitchain mission    [same flags, --sats takes a comma list] [--epochs N]
 //!                       [--epoch-frames N] [--mtbf S] [--mttr S] [--link-mtbf S]
 //!                       [--link-mttr S] [--detection-rate R] [--cue-deadline S]
 //!                       [--reserve F] [--pass-dt S] [--min-elevation D]
-//!                       [--fifo] [--backend B] [--trace PATH[:CAP]] [--json]
+//!                       [--fifo] [--backend B] [--trace PATH[:CAP]]
+//!                       [--telemetry PATH[:N]] [--hist-metrics] [--profile] [--json]
+//! orbitchain report     <stream.jsonl> [--trace journal.jsonl] [--top K] [--json]
 //! orbitchain experiment <fig3b|..|fig20|tab1|dynamic|tipcue|mission|all>
 //!                       [--device jetson|rpi] [--frames N] [--seed N] [--json]
 //! orbitchain infer      [--model cloud] [--tiles N] [--artifacts DIR]  # PJRT HIL
@@ -40,10 +44,12 @@ use orbitchain::config::Scenario;
 use orbitchain::dynamic::EpochOrchestrator;
 use orbitchain::exp;
 use orbitchain::mission::MissionOrchestrator;
+use orbitchain::report::ReportOptions;
 use orbitchain::runtime::{ModelRuntime, TileGen};
 use orbitchain::scenario::{
     BackendKind, LoadSprayRouter, Orchestrator, ScenarioError, SweepGrid, SweepRunner,
 };
+use orbitchain::telemetry::stream::StreamSpec;
 use orbitchain::tipcue::{CueStatus, TipCueOrchestrator};
 use orbitchain::trace::{TraceLog, TraceSpec};
 use orbitchain::util::json::obj;
@@ -263,6 +269,9 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     "min-elevation",
                     "backend",
                     "trace",
+                    "telemetry",
+                    "hist-metrics",
+                    "profile",
                     "json",
                 ]),
             )?;
@@ -285,6 +294,9 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 "backend",
                 "no-baseline",
                 "trace",
+                "telemetry",
+                "hist-metrics",
+                "profile",
                 "json",
             ]);
             // Mission length is `--epochs` x `--epoch-frames`; rejecting
@@ -315,12 +327,19 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 "fifo",
                 "backend",
                 "trace",
+                "telemetry",
+                "hist-metrics",
+                "profile",
                 "json",
             ]);
             // Mission length is `--epochs` x `--epoch-frames`.
             valid.retain(|f| *f != "frames");
             ensure_known_flags("mission", &flags, &valid)?;
             cmd_mission(&flags)
+        }
+        "report" => {
+            ensure_known_flags("report", &flags, &["trace", "top", "json"])?;
+            cmd_report(&pos, &flags)
         }
         "experiment" => {
             ensure_known_flags("experiment", &flags, &["device", "frames", "seed", "json"])?;
@@ -357,6 +376,8 @@ fn print_help() {
          \x20             deadline-bound cue tasks admitted against a capacity reserve\n\
          \x20 mission     the combined loop: dynamic re-planning + detection-derived\n\
          \x20             tip-and-cue with per-cue routing, FIFO vs priority ISLs\n\
+         \x20 report      fold a --telemetry stream (and optionally a --trace journal)\n\
+         \x20             into the mission observatory dashboard\n\
          \x20 experiment  regenerate a paper figure/table (fig3b..fig20, dynamic,\n\
          \x20             tipcue, mission, all)\n\
          \x20 infer       hardware-in-the-loop PJRT inference on synthetic tiles\n\
@@ -380,7 +401,11 @@ fn print_help() {
          \x20             --min-elevation D --backend B\n\
          mission flags: --sats 10,25,walker:53:10x10 --epochs N --epoch-frames N\n\
          \x20             --mtbf S --detection-rate R --cue-deadline S --reserve F\n\
-         \x20             --fifo"
+         \x20             --fifo\n\
+         observability: --telemetry PATH[:N] (per-epoch delta snapshots, every Nth)\n\
+         \x20             --hist-metrics (bounded-memory histogram registry)\n\
+         \x20             --profile (wall-clock phase timers; non-deterministic)\n\
+         report flags:  --trace journal.jsonl --top K --json"
     );
 }
 
@@ -745,6 +770,52 @@ fn parse_trace_flag(
     Ok(Some((raw.clone(), TraceSpec::default())))
 }
 
+/// Parse `--telemetry <path>[:every_n_epochs]` (plus the sibling
+/// `--hist-metrics` / `--profile` toggles) into a [`StreamSpec`].  Like
+/// `--trace`, the density suffix splits on the *last* colon and only when
+/// numeric, so paths containing colons still work.
+fn parse_telemetry_flag(
+    flags: &HashMap<String, String>,
+) -> anyhow::Result<Option<StreamSpec>> {
+    let Some(raw) = flags.get("telemetry") else {
+        return Ok(None);
+    };
+    if raw == "true" {
+        anyhow::bail!(
+            "--telemetry needs a stream path, e.g. --telemetry out.jsonl[:4]"
+        );
+    }
+    let mut spec = if let Some((path, every)) = raw.rsplit_once(':') {
+        match every.parse::<u64>() {
+            Ok(0) => anyhow::bail!("--telemetry snapshot density must be >= 1"),
+            Ok(every) => {
+                if path.is_empty() {
+                    anyhow::bail!("--telemetry needs a non-empty stream path");
+                }
+                let mut s = StreamSpec::to_path(path);
+                s.every = every;
+                s
+            }
+            Err(_) => StreamSpec::to_path(raw.as_str()),
+        }
+    } else {
+        StreamSpec::to_path(raw.as_str())
+    };
+    spec.profile = flags.contains_key("profile");
+    Ok(Some(spec))
+}
+
+/// Say where the telemetry stream landed, unless stdout is machine-readable.
+fn note_telemetry(spec: &Option<StreamSpec>, quiet: bool) {
+    if let Some(path) = spec.as_ref().and_then(|s| s.path.as_deref()) {
+        if !quiet {
+            println!(
+                "telemetry: delta snapshots -> {path} (fold with `orbitchain report {path}`)"
+            );
+        }
+    }
+}
+
 /// Write the journal as JSONL at `path` plus a Chrome-trace/Perfetto view
 /// (openable in ui.perfetto.dev) at `<path>.perfetto.json`, and say where
 /// they landed unless we are emitting machine-readable JSON on stdout.
@@ -782,9 +853,16 @@ fn cmd_dynamic(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     };
 
     let trace = parse_trace_flag(flags)?;
+    let telemetry = parse_telemetry_flag(flags)?;
     let mut orch = EpochOrchestrator::new(&s).with_backend(backend);
     if let Some((_, tspec)) = &trace {
         orch = orch.with_trace(*tspec);
+    }
+    if let Some(tspec) = &telemetry {
+        orch = orch.with_telemetry(tspec.clone());
+    }
+    if flags.contains_key("hist-metrics") {
+        orch = orch.with_hist_metrics(true);
     }
     let timeline = orch.timeline().clone();
     let df = orch.constellation().frame_deadline_s;
@@ -794,6 +872,7 @@ fn cmd_dynamic(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     if let (Some((path, _)), Some(log)) = (&trace, &dyn_rep.trace) {
         write_trace(path, log, flags.contains_key("json"))?;
     }
+    note_telemetry(&telemetry, flags.contains_key("json"));
     let static_rep = if flags.contains_key("no-baseline") {
         None
     } else {
@@ -968,6 +1047,7 @@ fn cmd_mission(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     };
 
     let trace = parse_trace_flag(flags)?;
+    let telemetry = parse_telemetry_flag(flags)?;
     let mut reports = Vec::new();
     for (i, ns) in sats_list.iter().enumerate() {
         let mut s = base.clone();
@@ -983,9 +1063,15 @@ fn cmd_mission(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         s.mission = Some(spec.clone());
         let mut orch = MissionOrchestrator::new(&s).with_backend(backend);
         // With a `--sats` comma list, only the first constellation is
-        // journaled — one run, one journal.
+        // journaled / streamed — one run, one journal, one stream.
         if let Some((_, tspec)) = trace.as_ref().filter(|_| i == 0) {
             orch = orch.with_trace(*tspec);
+        }
+        if let Some(tspec) = telemetry.as_ref().filter(|_| i == 0) {
+            orch = orch.with_telemetry(tspec.clone());
+        }
+        if flags.contains_key("hist-metrics") {
+            orch = orch.with_hist_metrics(true);
         }
         let rep = orch.run_compare()?;
         reports.push(rep);
@@ -995,6 +1081,7 @@ fn cmd_mission(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     {
         write_trace(path, log, flags.contains_key("json"))?;
     }
+    note_telemetry(&telemetry, flags.contains_key("json"));
 
     if flags.contains_key("json") {
         let arr: Vec<orbitchain::util::json::Json> =
@@ -1137,14 +1224,22 @@ fn cmd_tipcue(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         None => BackendKind::OrbitChain,
     };
     let trace = parse_trace_flag(flags)?;
+    let telemetry = parse_telemetry_flag(flags)?;
     let mut orch = TipCueOrchestrator::new(&s).with_backend(backend);
     if let Some((_, tspec)) = &trace {
         orch = orch.with_trace(*tspec);
+    }
+    if let Some(tspec) = &telemetry {
+        orch = orch.with_telemetry(tspec.clone());
+    }
+    if flags.contains_key("hist-metrics") {
+        orch = orch.with_hist_metrics(true);
     }
     let rep = orch.run()?;
     if let (Some((path, _)), Some(log)) = (&trace, &rep.trace) {
         write_trace(path, log, flags.contains_key("json"))?;
     }
+    note_telemetry(&telemetry, flags.contains_key("json"));
 
     if flags.contains_key("json") {
         println!("{}", rep.to_json().to_string_pretty());
@@ -1223,6 +1318,45 @@ fn cmd_tipcue(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     for note in &rep.notes {
         println!("note: {note}");
     }
+    Ok(())
+}
+
+/// Fold a telemetry delta stream — and optionally a trace journal — into
+/// the mission observatory dashboard.
+fn cmd_report(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let Some(stream_path) = pos.first() else {
+        anyhow::bail!(
+            "report needs a telemetry stream path, e.g. `orbitchain report out.jsonl` \
+             (produce one with `mission --telemetry out.jsonl`)"
+        );
+    };
+    let stream_text = std::fs::read_to_string(stream_path)
+        .map_err(|e| anyhow::anyhow!("reading telemetry stream {stream_path}: {e}"))?;
+    let journal_text = match flags.get("trace") {
+        None => None,
+        Some(raw) if raw == "true" => {
+            anyhow::bail!("--trace needs a journal path, e.g. --trace journal.jsonl")
+        }
+        Some(path) => Some(
+            std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("reading trace journal {path}: {e}"))?,
+        ),
+    };
+    let opts = ReportOptions {
+        top_k: match flags.get("top") {
+            None => ReportOptions::default().top_k,
+            Some(raw) => {
+                let k: usize = raw.parse().map_err(|e| anyhow::anyhow!("bad --top {raw:?}: {e}"))?;
+                if k == 0 {
+                    anyhow::bail!("--top must be >= 1");
+                }
+                k
+            }
+        },
+        json: flags.contains_key("json"),
+    };
+    let rendered = orbitchain::report::render(&stream_text, journal_text.as_deref(), &opts)?;
+    println!("{rendered}");
     Ok(())
 }
 

@@ -62,7 +62,8 @@ use crate::scenario::{
     ReservedMilpPlanner, RouterBackend, ScenarioError, ScenarioReport,
 };
 use crate::sim::{self, InstanceSpec, SimConfig, Simulator};
-use crate::telemetry::Metrics;
+use crate::telemetry::stream::{StreamSpec, StreamWriter};
+use crate::telemetry::{phases, Metrics};
 use crate::trace::{TraceKind, TraceLog, TraceSpec, NO_PARENT};
 use crate::tipcue::{group_tile_for_sat, CueRecord, CueStatus, Tip};
 use crate::util::json::{obj, Json};
@@ -273,6 +274,10 @@ pub struct MissionReport {
     /// events on the mission timeline (primary discipline only) plus the
     /// orchestrator's re-plan, migration and cue-lifecycle events.
     pub trace: Option<TraceLog>,
+    /// The telemetry delta stream's lines when an in-memory sink was
+    /// requested via [`MissionOrchestrator::with_telemetry`]; `None` for
+    /// file sinks (flushed to disk) and untelemetered runs.
+    pub telemetry: Option<Vec<String>>,
     pub metrics: Metrics,
 }
 
@@ -476,6 +481,8 @@ pub struct MissionOrchestrator {
     kind: BackendKind,
     timeline: Timeline,
     trace: Option<TraceSpec>,
+    telemetry: Option<StreamSpec>,
+    hist_metrics: bool,
 }
 
 impl MissionOrchestrator {
@@ -503,6 +510,8 @@ impl MissionOrchestrator {
             kind: BackendKind::OrbitChain,
             timeline,
             trace: None,
+            telemetry: None,
+            hist_metrics: false,
         }
     }
 
@@ -541,6 +550,27 @@ impl MissionOrchestrator {
     /// mission outcome (pinned by tests).
     pub fn with_trace(mut self, spec: TraceSpec) -> Self {
         self.trace = Some(spec);
+        self
+    }
+
+    /// Stream per-epoch telemetry delta snapshots ([`crate::telemetry::
+    /// stream`]): every `spec.every`-th epoch boundary emits what changed
+    /// since the previous snapshot (counter deltas, distribution deltas,
+    /// per-satellite / per-link gauges, cue-reserve headroom, phase
+    /// work-unit deltas), plus a final absolute-completing snapshot after
+    /// the summary counters land.  Telemetry never changes a mission
+    /// outcome — the writer only reads the merged registry.
+    pub fn with_telemetry(mut self, spec: StreamSpec) -> Self {
+        self.telemetry = Some(spec);
+        self
+    }
+
+    /// Back the merged metric registry (and every epoch simulator's) with
+    /// bounded-memory streaming histograms instead of exact sample
+    /// vectors.  Counters, counts and means are identical; quantiles
+    /// become bucket-approximate ([`crate::telemetry::hist`]).
+    pub fn with_hist_metrics(mut self, on: bool) -> Self {
+        self.hist_metrics = on;
         self
     }
 
@@ -612,7 +642,11 @@ impl MissionOrchestrator {
         let mut ev_idx = 0usize;
         let mut current: Option<PlanState> = None;
 
-        let mut merged = Metrics::new();
+        let mut merged = if self.hist_metrics {
+            Metrics::new_hist()
+        } else {
+            Metrics::new()
+        };
         let m_epoch_completion = merged.id("mission.epoch_completion");
         let (primary_key, alt_key) = if self.spec.priority_isl {
             ("mission.cue_latency_prio", "mission.cue_latency_fifo")
@@ -662,6 +696,17 @@ impl MissionOrchestrator {
         let mut worst_latency = 0.0f64;
         let mut worst_breakdown = (0.0, 0.0, 0.0);
         let mut trace_log: Option<TraceLog> = self.trace.map(|_| TraceLog::default());
+        let mut telem: Option<StreamWriter> = match &self.telemetry {
+            None => None,
+            Some(spec) => Some(
+                StreamWriter::create(spec, self.hist_metrics)
+                    .map_err(|e| ScenarioError::Telemetry(e.to_string()))?,
+            ),
+        };
+        // Wall-clock totals already emitted to the stream's (opt-in,
+        // non-deterministic) profile section; the next snapshot sends only
+        // the increment.
+        let mut prof_emitted = (0.0f64, 0.0f64, 0.0f64);
         // Orchestrator-scope chain head per cue record (admit → inject →
         // complete/miss); maintained in lockstep with `cues` when tracing.
         let mut cue_seq: Vec<u64> = Vec::new();
@@ -907,6 +952,7 @@ impl MissionOrchestrator {
                 stable_thinning: true,
                 priority_isl: self.spec.priority_isl,
                 trace: self.trace,
+                hist_metrics: self.hist_metrics,
             };
             injected +=
                 (frames * epoch_c.tiles_per_frame + warm + cues_injected) as f64;
@@ -1176,6 +1222,25 @@ impl MissionOrchestrator {
                 burst: health.burst,
                 area_visible: health.area_visible,
             });
+
+            // Epoch-boundary telemetry delta: the simulator's end-of-epoch
+            // gauges plus the cue-reserve headroom (tokens accrued by the
+            // boundary minus admissions so far).
+            if let Some(w) = telem.as_mut() {
+                let mut gauges = rep.gauges.clone();
+                gauges.cue_headroom =
+                    Some(budget_rate * (t0 + epoch_s) - admitted as f64);
+                let prof = [
+                    ("plan_ms", plan_ms - prof_emitted.0),
+                    ("route_ms", route_ms - prof_emitted.1),
+                    ("sim_ms", sim_ms - prof_emitted.2),
+                ];
+                if w.due(e as u64) {
+                    prof_emitted = (plan_ms, route_ms, sim_ms);
+                }
+                w.epoch_snapshot(e as u64, t0 + epoch_s, &merged, &gauges, &prof)
+                    .map_err(|err| ScenarioError::Telemetry(err.to_string()))?;
+            }
         }
 
         // Admitted cues whose pass never arrived before the mission ended.
@@ -1276,6 +1341,19 @@ impl MissionOrchestrator {
             current = Some(built);
         }
         let state = current.as_ref().expect("tables just built");
+
+        // Final absolute-completing snapshot: the end-of-run summary
+        // counters (and compare-overlay samples) landed after the last
+        // epoch boundary, so replaying the stream reconstructs the full
+        // registry exactly.
+        let telemetry = match telem {
+            None => None,
+            Some(mut w) => {
+                w.final_snapshot(n_epochs as u64, mission_end, &merged)
+                    .map_err(|e| ScenarioError::Telemetry(e.to_string()))?;
+                w.finish().map_err(|e| ScenarioError::Telemetry(e.to_string()))?
+            }
+        };
         Ok(MissionReport {
             label: self.label.clone(),
             backend: state.backend.clone(),
@@ -1312,6 +1390,7 @@ impl MissionOrchestrator {
             alt,
             notes,
             trace: trace_log,
+            telemetry,
             metrics: merged,
         })
     }
@@ -1359,6 +1438,7 @@ fn route_cue(
     mask: &[usize],
     cue_sat: usize,
 ) -> Option<Pipeline> {
+    phases::bump_router_passes(1);
     let (first, last) = cue_group_span(c, cue_sat);
     let mut cue_c = c.clone();
     cue_c.tiles_per_frame = 1;

@@ -150,6 +150,7 @@ impl ElevationSeries {
 
     /// `cos ψ(t)` — the visibility signal (`≥ threshold` ⟺ above mask).
     pub fn cos_psi(&self, t: f64) -> f64 {
+        crate::telemetry::phases::bump_pass_pred_evals(1);
         let w = EARTH_OMEGA;
         self.a * (self.p1 + (self.n - w) * t).cos()
             + self.b * (self.p2 + (self.n + w) * t).cos()
@@ -618,7 +619,10 @@ pub fn next_pass_sweep(
     if dt_s <= 0.0 || horizon_s <= 0.0 {
         return None;
     }
-    let sees = |t: f64| target.sees(orbit.position_ecef(t));
+    let sees = |t: f64| {
+        crate::telemetry::phases::bump_pass_pred_evals(1);
+        target.sees(orbit.position_ecef(t))
+    };
     let end = after_s + horizon_s;
     let steps = (horizon_s / dt_s).ceil() as usize;
 

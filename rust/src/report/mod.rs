@@ -1,0 +1,654 @@
+//! The mission observatory dashboard (`report` subcommand).
+//!
+//! Folds a telemetry delta stream ([`crate::telemetry::stream`]) — and
+//! optionally a flight-recorder journal ([`crate::trace::export`]) — into
+//! a terminal dashboard:
+//!
+//! * a **per-epoch timeline**: unfinished tiles, total backlog/queue
+//!   depth, cue-reserve headroom, and the phase self-profiler's work-unit
+//!   deltas (simplex pivots, router passes, pass-prediction evals, events
+//!   drained) per snapshot, plus wall-clock phase timers when the stream
+//!   carries a `profile` section;
+//! * **top-k hottest satellites** (cumulative backlog + queue depth over
+//!   all snapshots) and **links** (cumulative busy seconds, with bytes);
+//! * the **seven-component latency breakdown** table over the
+//!   reconstructed `trace.*` span distributions (revisit, CPU wait,
+//!   compute, migration stall, ISL wait, transmit, downlink) — `n/a`
+//!   with a hint when the run was not traced;
+//! * an optional **journal summary**: event counts by kind and the time
+//!   range covered, from a `--trace` JSONL journal.
+//!
+//! Rendering replays the stream first ([`stream::replay`]), so every
+//! structural defect — missing header, version mismatch, non-monotone
+//! epochs, malformed deltas — surfaces as an error (the CLI exits
+//! non-zero) rather than a silently wrong dashboard.
+
+use std::collections::BTreeMap;
+
+use crate::telemetry::stream::{self, ReplayedStream};
+use crate::telemetry::{Dist, Metrics};
+use crate::util::json::{obj, Json};
+
+/// Dashboard options.
+#[derive(Debug, Clone)]
+pub struct ReportOptions {
+    /// Rows in the hottest-satellites / hottest-links tables.
+    pub top_k: usize,
+    /// Emit the dashboard as compact JSON instead of terminal text.
+    pub json: bool,
+}
+
+impl Default for ReportOptions {
+    fn default() -> Self {
+        ReportOptions { top_k: 5, json: false }
+    }
+}
+
+/// The seven span components of the latency breakdown (plus the total),
+/// in display order — the `trace.*` distributions emitted by
+/// [`crate::trace::spans::observe_spans`].
+const BREAKDOWN: [(&str, &str); 8] = [
+    ("trace.revisit", "revisit"),
+    ("trace.wait_cpu", "cpu wait"),
+    ("trace.compute", "compute"),
+    ("trace.migration_stall", "migration stall"),
+    ("trace.wait_isl", "isl wait"),
+    ("trace.tx", "transmit"),
+    ("trace.downlink", "downlink"),
+    ("trace.span_total", "TOTAL"),
+];
+
+/// Render the dashboard from the stream text (JSONL) and an optional
+/// trace-journal text.  Errors on any stream shape/parse defect.
+pub fn render(
+    stream_text: &str,
+    journal_text: Option<&str>,
+    opts: &ReportOptions,
+) -> anyhow::Result<String> {
+    let replayed = stream::replay(stream_text)?;
+    let journal = journal_text.map(summarize_journal).transpose()?;
+    if opts.json {
+        Ok(dashboard_json(&replayed, journal.as_ref(), opts).to_string_compact())
+    } else {
+        Ok(dashboard_text(&replayed, journal.as_ref(), opts))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stream digestion.
+// ---------------------------------------------------------------------------
+
+/// One timeline row, pulled out of a snapshot's raw JSON.
+struct TimelineRow {
+    epoch: u64,
+    t_s: f64,
+    is_final: bool,
+    unfinished: Option<f64>,
+    backlog_total: f64,
+    queue_total: f64,
+    cue_headroom: Option<f64>,
+    /// `(name, delta)` in the phases section's key order.
+    phases: Vec<(String, f64)>,
+    /// `(name, ms)` wall-clock timers (opt-in profile section).
+    profile: Vec<(String, f64)>,
+}
+
+fn obj_sum(j: Option<&Json>) -> f64 {
+    match j.and_then(Json::as_obj) {
+        None => 0.0,
+        Some(o) => o.values().filter_map(Json::as_f64).sum(),
+    }
+}
+
+fn obj_pairs(j: Option<&Json>) -> Vec<(String, f64)> {
+    match j.and_then(Json::as_obj) {
+        None => Vec::new(),
+        Some(o) => o
+            .iter()
+            .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+            .collect(),
+    }
+}
+
+fn timeline(replayed: &ReplayedStream) -> Vec<TimelineRow> {
+    replayed
+        .snapshots
+        .iter()
+        .map(|s| {
+            let g = s.json.get("gauges");
+            TimelineRow {
+                epoch: s.epoch,
+                t_s: s.t_s,
+                is_final: s.is_final,
+                unfinished: g
+                    .and_then(|g| g.get("unfinished"))
+                    .and_then(Json::as_f64),
+                backlog_total: obj_sum(g.and_then(|g| g.get("backlog"))),
+                queue_total: obj_sum(g.and_then(|g| g.get("queue"))),
+                cue_headroom: g
+                    .and_then(|g| g.get("cue_headroom"))
+                    .and_then(Json::as_f64),
+                phases: obj_pairs(s.json.get("phases")),
+                profile: obj_pairs(s.json.get("profile")),
+            }
+        })
+        .collect()
+}
+
+/// Cumulative per-satellite and per-link heat over all snapshots.
+struct Heat {
+    /// sat → backlog + queue, summed over snapshots.
+    sats: Vec<(String, f64)>,
+    /// link → (busy seconds, bytes), summed over snapshots.
+    links: Vec<(String, f64, f64)>,
+}
+
+fn heat(replayed: &ReplayedStream, top_k: usize) -> Heat {
+    let mut sats: BTreeMap<String, f64> = BTreeMap::new();
+    let mut busy: BTreeMap<String, f64> = BTreeMap::new();
+    let mut bytes: BTreeMap<String, f64> = BTreeMap::new();
+    for s in &replayed.snapshots {
+        let g = s.json.get("gauges");
+        for key in ["backlog", "queue"] {
+            for (sat, x) in obj_pairs(g.and_then(|g| g.get(key))) {
+                *sats.entry(sat).or_insert(0.0) += x;
+            }
+        }
+        for (link, x) in obj_pairs(g.and_then(|g| g.get("link_busy_s"))) {
+            *busy.entry(link).or_insert(0.0) += x;
+        }
+        for (link, x) in obj_pairs(g.and_then(|g| g.get("link_bytes"))) {
+            *bytes.entry(link).or_insert(0.0) += x;
+        }
+    }
+    // Sort by heat descending; ties break on the (unique) key so the
+    // ranking is deterministic.
+    let mut sat_rows: Vec<(String, f64)> = sats.into_iter().collect();
+    sat_rows.sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+    sat_rows.truncate(top_k);
+    let mut link_rows: Vec<(String, f64, f64)> = busy
+        .iter()
+        .map(|(k, &b)| (k.clone(), b, bytes.get(k).copied().unwrap_or(0.0)))
+        .collect();
+    for (k, &by) in &bytes {
+        if !busy.contains_key(k) {
+            link_rows.push((k.clone(), 0.0, by));
+        }
+    }
+    link_rows.sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+    link_rows.truncate(top_k);
+    Heat { sats: sat_rows, links: link_rows }
+}
+
+/// Summary stats of one distribution, backend-agnostic.
+struct DistRow {
+    count: u64,
+    mean: f64,
+    p50: f64,
+    p90: f64,
+    max: f64,
+}
+
+fn dist_row(m: &Metrics, name: &str) -> Option<DistRow> {
+    let d = m.dist(name)?;
+    match d {
+        Dist::Samples(v) => {
+            if v.is_empty() {
+                return None;
+            }
+            let mut sorted = v.clone();
+            sorted.sort_by(f64::total_cmp);
+            let q = |p: f64| {
+                let n = sorted.len();
+                let rank = ((p / 100.0 * n as f64).ceil() as usize).clamp(1, n);
+                sorted[rank - 1]
+            };
+            Some(DistRow {
+                count: v.len() as u64,
+                mean: v.iter().sum::<f64>() / v.len() as f64,
+                p50: q(50.0),
+                p90: q(90.0),
+                max: sorted[sorted.len() - 1],
+            })
+        }
+        Dist::Hist(h) => Some(DistRow {
+            count: h.count(),
+            mean: h.mean()?,
+            p50: h.quantile(50.0)?,
+            p90: h.quantile(90.0)?,
+            max: h.max()?,
+        }),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Journal summary.
+// ---------------------------------------------------------------------------
+
+/// Event counts by kind plus the covered time range, from a JSONL trace
+/// journal ([`crate::trace::export::jsonl`]).
+struct JournalSummary {
+    events: u64,
+    by_kind: Vec<(String, u64)>,
+    t_min_s: f64,
+    t_max_s: f64,
+}
+
+fn summarize_journal(text: &str) -> anyhow::Result<JournalSummary> {
+    let mut by_kind: BTreeMap<String, u64> = BTreeMap::new();
+    let mut events = 0u64;
+    let mut t_min = f64::INFINITY;
+    let mut t_max = f64::NEG_INFINITY;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| {
+            anyhow::anyhow!("journal line {}: not JSON: {e}", i + 1)
+        })?;
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("journal line {}: no kind", i + 1))?;
+        *by_kind.entry(kind.to_string()).or_insert(0) += 1;
+        events += 1;
+        if let Some(t) = j.get("t_s").and_then(Json::as_f64) {
+            t_min = t_min.min(t);
+            t_max = t_max.max(t);
+        }
+    }
+    let mut rows: Vec<(String, u64)> = by_kind.into_iter().collect();
+    rows.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+    Ok(JournalSummary {
+        events,
+        by_kind: rows,
+        t_min_s: if t_min.is_finite() { t_min } else { 0.0 },
+        t_max_s: if t_max.is_finite() { t_max } else { 0.0 },
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Rendering.
+// ---------------------------------------------------------------------------
+
+fn fmt1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+fn fmt3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+fn dashboard_text(
+    replayed: &ReplayedStream,
+    journal: Option<&JournalSummary>,
+    opts: &ReportOptions,
+) -> String {
+    let rows = timeline(replayed);
+    let heat = heat(replayed, opts.top_k);
+    let mut out = String::new();
+    let push = |out: &mut String, s: &str| {
+        out.push_str(s);
+        out.push('\n');
+    };
+
+    push(&mut out, "== mission observatory ==");
+    push(
+        &mut out,
+        &format!(
+            "stream: mode={} every={} snapshots={} counters={} dists={}",
+            replayed.mode,
+            replayed.every,
+            replayed.snapshots.len(),
+            replayed.metrics.counters_iter().count(),
+            replayed.metrics.dists_iter().count(),
+        ),
+    );
+
+    // --- Timeline ---------------------------------------------------------
+    push(&mut out, "");
+    push(&mut out, "-- epoch timeline --");
+    push(
+        &mut out,
+        &format!(
+            "{:>6} {:>10} {:>8} {:>8} {:>8} {:>9}  phases / profile",
+            "epoch", "t_s", "unfin", "backlog", "queue", "headroom"
+        ),
+    );
+    for r in &rows {
+        let label = if r.is_final {
+            format!("{}f", r.epoch)
+        } else {
+            r.epoch.to_string()
+        };
+        let mut tail = String::new();
+        if !r.phases.is_empty() {
+            let parts: Vec<String> = r
+                .phases
+                .iter()
+                .map(|(k, v)| format!("{k}={}", *v as u64))
+                .collect();
+            tail.push_str(&parts.join(" "));
+        }
+        if !r.profile.is_empty() {
+            if !tail.is_empty() {
+                tail.push_str(" | ");
+            }
+            let parts: Vec<String> =
+                r.profile.iter().map(|(k, v)| format!("{k}={}", fmt1(*v))).collect();
+            tail.push_str(&parts.join(" "));
+        }
+        push(
+            &mut out,
+            &format!(
+                "{label:>6} {:>10} {:>8} {:>8} {:>8} {:>9}  {tail}",
+                fmt1(r.t_s),
+                r.unfinished.map(fmt1).unwrap_or_else(|| "-".into()),
+                fmt1(r.backlog_total),
+                fmt1(r.queue_total),
+                r.cue_headroom.map(fmt1).unwrap_or_else(|| "-".into()),
+            ),
+        );
+    }
+
+    // --- Hot satellites / links ------------------------------------------
+    push(&mut out, "");
+    push(&mut out, &format!("-- top-{} hottest satellites --", opts.top_k));
+    if heat.sats.is_empty() {
+        push(&mut out, "(no per-satellite gauges in stream)");
+    } else {
+        push(&mut out, &format!("{:>6} {:>14}", "sat", "backlog+queue"));
+        for (sat, x) in &heat.sats {
+            push(&mut out, &format!("{sat:>6} {:>14}", fmt1(*x)));
+        }
+    }
+    push(&mut out, "");
+    push(&mut out, &format!("-- top-{} hottest links --", opts.top_k));
+    if heat.links.is_empty() {
+        push(&mut out, "(no per-link gauges in stream)");
+    } else {
+        push(&mut out, &format!("{:>8} {:>10} {:>14}", "link", "busy_s", "bytes"));
+        for (link, busy, bytes) in &heat.links {
+            push(
+                &mut out,
+                &format!("{link:>8} {:>10} {:>14}", fmt3(*busy), fmt1(*bytes)),
+            );
+        }
+    }
+
+    // --- Latency breakdown ------------------------------------------------
+    push(&mut out, "");
+    push(&mut out, "-- latency breakdown (trace.* spans, seconds) --");
+    if replayed.metrics.dist(BREAKDOWN[7].0).is_none() {
+        push(&mut out, "n/a (run with --trace to record span components)");
+    } else {
+        push(
+            &mut out,
+            &format!(
+                "{:<16} {:>8} {:>10} {:>10} {:>10} {:>10}",
+                "component", "count", "mean", "p50", "p90", "max"
+            ),
+        );
+        for (name, label) in BREAKDOWN {
+            let Some(r) = dist_row(&replayed.metrics, name) else { continue };
+            push(
+                &mut out,
+                &format!(
+                    "{label:<16} {:>8} {:>10} {:>10} {:>10} {:>10}",
+                    r.count,
+                    fmt3(r.mean),
+                    fmt3(r.p50),
+                    fmt3(r.p90),
+                    fmt3(r.max),
+                ),
+            );
+        }
+    }
+
+    // --- Journal ----------------------------------------------------------
+    if let Some(j) = journal {
+        push(&mut out, "");
+        push(&mut out, "-- trace journal --");
+        push(
+            &mut out,
+            &format!(
+                "events={} t=[{}, {}]",
+                j.events,
+                fmt1(j.t_min_s),
+                fmt1(j.t_max_s)
+            ),
+        );
+        for (kind, n) in &j.by_kind {
+            push(&mut out, &format!("{kind:<16} {n:>8}"));
+        }
+    }
+
+    out
+}
+
+fn dashboard_json(
+    replayed: &ReplayedStream,
+    journal: Option<&JournalSummary>,
+    opts: &ReportOptions,
+) -> Json {
+    let rows = timeline(replayed);
+    let heat = heat(replayed, opts.top_k);
+    let timeline_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut fields = vec![
+                ("epoch", Json::from(r.epoch as usize)),
+                ("t_s", Json::Num(r.t_s)),
+                ("final", Json::from(r.is_final)),
+                ("backlog", Json::Num(r.backlog_total)),
+                ("queue", Json::Num(r.queue_total)),
+            ];
+            if let Some(u) = r.unfinished {
+                fields.push(("unfinished", Json::Num(u)));
+            }
+            if let Some(h) = r.cue_headroom {
+                fields.push(("cue_headroom", Json::Num(h)));
+            }
+            if !r.phases.is_empty() {
+                fields.push((
+                    "phases",
+                    Json::Obj(
+                        r.phases
+                            .iter()
+                            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                            .collect(),
+                    ),
+                ));
+            }
+            if !r.profile.is_empty() {
+                fields.push((
+                    "profile",
+                    Json::Obj(
+                        r.profile
+                            .iter()
+                            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                            .collect(),
+                    ),
+                ));
+            }
+            obj(fields)
+        })
+        .collect();
+    let sats_json: Vec<Json> = heat
+        .sats
+        .iter()
+        .map(|(sat, x)| obj(vec![("sat", Json::from(sat.clone())), ("heat", Json::Num(*x))]))
+        .collect();
+    let links_json: Vec<Json> = heat
+        .links
+        .iter()
+        .map(|(link, busy, bytes)| {
+            obj(vec![
+                ("link", Json::from(link.clone())),
+                ("busy_s", Json::Num(*busy)),
+                ("bytes", Json::Num(*bytes)),
+            ])
+        })
+        .collect();
+    let breakdown_json: Vec<Json> = BREAKDOWN
+        .iter()
+        .filter_map(|(name, label)| {
+            dist_row(&replayed.metrics, name).map(|r| {
+                obj(vec![
+                    ("component", Json::from(*label)),
+                    ("count", Json::from(r.count as usize)),
+                    ("mean", Json::Num(r.mean)),
+                    ("p50", Json::Num(r.p50)),
+                    ("p90", Json::Num(r.p90)),
+                    ("max", Json::Num(r.max)),
+                ])
+            })
+        })
+        .collect();
+    let mut fields = vec![
+        ("mode", Json::from(replayed.mode.clone())),
+        ("every", Json::from(replayed.every as usize)),
+        ("snapshots", Json::from(replayed.snapshots.len())),
+        ("timeline", Json::Arr(timeline_json)),
+        ("hot_sats", Json::Arr(sats_json)),
+        ("hot_links", Json::Arr(links_json)),
+        ("breakdown", Json::Arr(breakdown_json)),
+    ];
+    if let Some(j) = journal {
+        fields.push((
+            "journal",
+            obj(vec![
+                ("events", Json::from(j.events as usize)),
+                ("t_min_s", Json::Num(j.t_min_s)),
+                ("t_max_s", Json::Num(j.t_max_s)),
+                (
+                    "by_kind",
+                    Json::Obj(
+                        j.by_kind
+                            .iter()
+                            .map(|(k, n)| (k.clone(), Json::from(*n as usize)))
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ));
+    }
+    obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::stream::{EpochGauges, StreamSpec, StreamWriter};
+    use crate::telemetry::Metrics;
+
+    fn sample_stream() -> String {
+        let mut m = Metrics::new();
+        let mut w = StreamWriter::create(&StreamSpec::in_memory(), false).unwrap();
+        m.inc("mission.replans", 1.0);
+        m.observe("trace.span_total", 10.0);
+        m.observe("trace.compute", 4.0);
+        let gauges = EpochGauges {
+            sat_backlog: vec![(2, 3.0)],
+            sat_queue: vec![(2, 1.0), (4, 2.0)],
+            link_busy_s: vec![("2-3".into(), 1.5)],
+            link_bytes: vec![("2-3".into(), 4096.0)],
+            unfinished_tiles: 3.0,
+            cue_headroom: Some(2.0),
+        };
+        w.epoch_snapshot(0, 60.0, &m, &gauges, &[]).unwrap();
+        m.inc("mission.replans", 1.0);
+        w.final_snapshot(1, 120.0, &m).unwrap();
+        w.finish().unwrap().unwrap().join("\n")
+    }
+
+    #[test]
+    fn renders_text_dashboard_with_all_sections() {
+        let text =
+            render(&sample_stream(), None, &ReportOptions::default()).unwrap();
+        assert!(text.contains("mission observatory"), "{text}");
+        assert!(text.contains("epoch timeline"), "{text}");
+        assert!(text.contains("hottest satellites"), "{text}");
+        assert!(text.contains("hottest links"), "{text}");
+        assert!(text.contains("2-3"), "{text}");
+        assert!(text.contains("latency breakdown"), "{text}");
+        assert!(text.contains("TOTAL"), "{text}");
+    }
+
+    #[test]
+    fn untraced_stream_gets_breakdown_hint() {
+        let mut m = Metrics::new();
+        let mut w = StreamWriter::create(&StreamSpec::in_memory(), false).unwrap();
+        m.inc("c", 1.0);
+        w.final_snapshot(0, 0.0, &m).unwrap();
+        let stream = w.finish().unwrap().unwrap().join("\n");
+        let text = render(&stream, None, &ReportOptions::default()).unwrap();
+        assert!(text.contains("n/a (run with --trace"), "{text}");
+    }
+
+    #[test]
+    fn hottest_satellite_ranking_is_by_cumulative_heat() {
+        let text =
+            render(&sample_stream(), None, &ReportOptions { top_k: 1, json: false })
+                .unwrap();
+        // Sat 2 carries backlog 3 + queue 1 = 4 > sat 4's queue 2; with
+        // top_k = 1 only sat 2 survives.
+        let sat_rows: Vec<&str> = text
+            .lines()
+            .skip_while(|l| !l.contains("hottest satellites"))
+            .skip(2) // section header + column header
+            .take_while(|l| !l.trim().is_empty())
+            .collect();
+        assert_eq!(sat_rows.len(), 1, "{text}");
+        assert!(sat_rows[0].trim().starts_with('2'), "{text}");
+    }
+
+    #[test]
+    fn json_dashboard_is_parseable_and_complete() {
+        let out = render(
+            &sample_stream(),
+            None,
+            &ReportOptions { top_k: 5, json: true },
+        )
+        .unwrap();
+        let j = Json::parse(&out).unwrap();
+        assert_eq!(j.get("mode").and_then(Json::as_str), Some("exact"));
+        assert_eq!(j.get("snapshots").and_then(Json::as_usize), Some(2));
+        assert!(j.get("timeline").and_then(Json::as_arr).is_some());
+        assert!(!j.get("breakdown").and_then(Json::as_arr).unwrap().is_empty());
+    }
+
+    #[test]
+    fn journal_summary_counts_kinds() {
+        let journal = "\
+{\"kind\":\"capture\",\"t_s\":0.5}\n\
+{\"kind\":\"capture\",\"t_s\":1.5}\n\
+{\"kind\":\"hop\",\"t_s\":2.0}";
+        let text = render(
+            &sample_stream(),
+            Some(journal),
+            &ReportOptions::default(),
+        )
+        .unwrap();
+        assert!(text.contains("trace journal"), "{text}");
+        assert!(text.contains("events=3"), "{text}");
+        assert!(text.contains("capture"), "{text}");
+    }
+
+    #[test]
+    fn malformed_stream_is_an_error() {
+        assert!(render("not json", None, &ReportOptions::default()).is_err());
+        let noheader = "{\"kind\":\"snapshot\",\"epoch\":0,\"t_s\":0}";
+        assert!(render(noheader, None, &ReportOptions::default()).is_err());
+    }
+
+    #[test]
+    fn malformed_journal_is_an_error() {
+        assert!(render(
+            &sample_stream(),
+            Some("{\"no_kind\":1}"),
+            &ReportOptions::default()
+        )
+        .is_err());
+    }
+}

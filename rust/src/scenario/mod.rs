@@ -61,6 +61,9 @@ pub enum ScenarioError {
     },
     /// A MILP-only operation was requested from a fixed-deployment backend.
     NoDeployment { backend: &'static str },
+    /// The telemetry stream sink failed (I/O error opening or writing the
+    /// `--telemetry` file).
+    Telemetry(String),
 }
 
 impl std::fmt::Display for ScenarioError {
@@ -78,6 +81,7 @@ impl std::fmt::Display for ScenarioError {
             ScenarioError::NoDeployment { backend } => {
                 write!(f, "backend {backend} does not produce a MILP deployment plan")
             }
+            ScenarioError::Telemetry(msg) => write!(f, "telemetry stream: {msg}"),
         }
     }
 }

@@ -28,7 +28,8 @@ use std::collections::{BinaryHeap, VecDeque};
 use crate::constellation::Constellation;
 use crate::profile::{datasize, ProfileDb};
 use crate::routing::{Dev, Pipeline};
-use crate::telemetry::{MetricId, Metrics};
+use crate::telemetry::stream::EpochGauges;
+use crate::telemetry::{phases, MetricId, Metrics};
 use crate::trace::{FlightRecorder, TraceKind, TraceSpec};
 use crate::util::rng::Rng;
 use crate::workflow::Workflow;
@@ -109,6 +110,13 @@ pub struct SimConfig {
     /// check per emit site and changes no simulation outcome either way —
     /// the recorder is emit-only.
     pub trace: Option<TraceSpec>,
+    /// Back the metric registry's distributions with bounded-memory
+    /// streaming histograms ([`crate::telemetry::hist::StreamHist`])
+    /// instead of exact sample vectors.  Counters, distribution counts
+    /// and means are identical either way (the histogram accumulates its
+    /// sum in arrival order); only quantiles become bucket-approximate.
+    /// Off by default so existing bit-identity pins keep passing.
+    pub hist_metrics: bool,
 }
 
 impl Default for SimConfig {
@@ -125,6 +133,7 @@ impl Default for SimConfig {
             stable_thinning: false,
             priority_isl: false,
             trace: None,
+            hist_metrics: false,
         }
     }
 }
@@ -225,6 +234,10 @@ pub struct SimReport {
     /// (`None` otherwise): the raw event ring for span assembly
     /// ([`crate::trace::spans`]) and journal export.
     pub trace: Option<Box<FlightRecorder>>,
+    /// End-of-run gauges for the telemetry stream: per-satellite backlog
+    /// and queue depth, per-link busy seconds and bytes, unfinished tiles.
+    /// `cue_headroom` is left `None`; the mission loop fills it in.
+    pub gauges: EpochGauges,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -400,6 +413,16 @@ impl LinkTable {
         }
     }
 
+    /// Receiving satellite of a directed link id.
+    fn dst_of(&self, directed: usize) -> u32 {
+        let (lo, hi) = self.ends[directed / 2];
+        if directed % 2 == 0 {
+            hi
+        } else {
+            lo
+        }
+    }
+
     /// Directed link id for the single hop `a → b` — panics when the
     /// satellites are not ISL neighbors (relay code only ever walks
     /// [`Constellation::next_hop`] edges).  Neighbor degree is ≤ 4, so the
@@ -448,6 +471,11 @@ struct SimState {
     inst_busy: Vec<bool>,
     link_queue: Vec<VecDeque<IslMsg>>,
     link_busy: Vec<bool>,
+    /// Per directed link: seconds spent transmitting and bytes carried —
+    /// pure accumulators for the telemetry gauges, never read by the
+    /// event loop.
+    link_busy_s: Vec<f64>,
+    link_bytes: Vec<f64>,
     /// Source→sink path counts (injection completion accounting).
     sink_paths_from: Vec<u64>,
     injection_outcomes: Vec<InjectionOutcome>,
@@ -581,7 +609,11 @@ impl<'a> Simulator<'a> {
         let c = self.constellation;
         let df = c.frame_deadline_s;
         let mut rng = Rng::new(self.cfg.seed);
-        let mut metrics = Metrics::new();
+        let mut metrics = if self.cfg.hist_metrics {
+            Metrics::new_hist()
+        } else {
+            Metrics::new()
+        };
         // Flight recorder (off by default).  Every emit site below and in
         // `drive`/`start_service` is a single `None` check when disabled;
         // the recorder itself never touches the RNG or the event queue,
@@ -631,6 +663,8 @@ impl<'a> Simulator<'a> {
         let n_links = self.links.n_directed();
         let link_queue: Vec<VecDeque<IslMsg>> = vec![VecDeque::new(); n_links];
         let link_busy = vec![false; n_links];
+        let link_busy_s = vec![0.0; n_links];
+        let link_bytes = vec![0.0; n_links];
 
         let sources = self.wf.sources();
 
@@ -895,6 +929,8 @@ impl<'a> Simulator<'a> {
             inst_busy,
             link_queue,
             link_busy,
+            link_busy_s,
+            link_bytes,
             sink_paths_from,
             injection_outcomes,
             injection_terminals_left,
@@ -926,6 +962,10 @@ impl<'a> Simulator<'a> {
             }
         };
 
+        // Work-unit accounting for the phase self-profiler: one unit per
+        // event popped.  Accumulated locally and flushed once — the
+        // thread-local bump is not free enough for the hot loop.
+        let mut drained: u64 = 0;
         while let Some(&Reverse(QueuedEvent { t, .. })) = st.heap.peek() {
             if let Some(u) = until {
                 // Anything not strictly before the fork — including a
@@ -940,6 +980,7 @@ impl<'a> Simulator<'a> {
             let Some(Reverse(QueuedEvent { t, ev, .. })) = st.heap.pop() else {
                 unreachable!("peeked event vanished");
             };
+            drained += 1;
             match ev {
                 Ev::Arrival { inst, tile } => {
                     let spec = &self.instances[inst];
@@ -1090,8 +1131,10 @@ impl<'a> Simulator<'a> {
                                     };
                                     tr.emit_tile(t, tile, kind);
                                 }
-                                let tx = st.link_queue[link].front().unwrap().bytes * 8.0
-                                    / link_rate(link);
+                                let fb = st.link_queue[link].front().unwrap().bytes;
+                                let tx = fb * 8.0 / link_rate(link);
+                                st.link_busy_s[link] += tx;
+                                st.link_bytes[link] += fb;
                                 let ev = Ev::LinkDone { link };
                                 push_event(&mut st.heap, &mut st.seq, t + tx, ev);
                             }
@@ -1160,9 +1203,11 @@ impl<'a> Simulator<'a> {
                     // Next message on this link.
                     let next_tx = st.link_queue[link]
                         .front()
-                        .map(|next| (next.tile, next.bytes * 8.0 / link_rate(link)));
+                        .map(|next| (next.tile, next.bytes, next.bytes * 8.0 / link_rate(link)));
                     match next_tx {
-                        Some((ntile, tx)) => {
+                        Some((ntile, nbytes, tx)) => {
+                            st.link_busy_s[link] += tx;
+                            st.link_bytes[link] += nbytes;
                             if let Some(tr) = st.trace.as_deref_mut() {
                                 let kind = TraceKind::TxStart {
                                     tile: ntile,
@@ -1241,8 +1286,10 @@ impl<'a> Simulator<'a> {
                                 };
                                 tr.emit_tile(t, msg.tile, kind);
                             }
-                            let tx = st.link_queue[link2].front().unwrap().bytes * 8.0
-                                / link_rate(link2);
+                            let fb = st.link_queue[link2].front().unwrap().bytes;
+                            let tx = fb * 8.0 / link_rate(link2);
+                            st.link_busy_s[link2] += tx;
+                            st.link_bytes[link2] += fb;
                             let ev = Ev::LinkDone { link: link2 };
                             push_event(&mut st.heap, &mut st.seq, t + tx, ev);
                         }
@@ -1250,6 +1297,7 @@ impl<'a> Simulator<'a> {
                 }
             }
         }
+        phases::bump_events_drained(drained);
     }
 
     /// Aggregate a fully-driven state into the report.
@@ -1282,6 +1330,7 @@ impl<'a> Simulator<'a> {
         let unfinished = st.tiles.iter().filter(|ts| !ts.finished).count();
         let isl_per_frame =
             st.metrics.counter_id(st.m_isl_bytes) / self.cfg.frames.max(1) as f64;
+        let gauges = self.collect_gauges(&st, unfinished);
         SimReport {
             completion_ratio: completion,
             isl_bytes_per_frame: isl_per_frame,
@@ -1291,7 +1340,62 @@ impl<'a> Simulator<'a> {
             injections: st.injection_outcomes,
             detections: st.detections,
             trace: st.trace,
+            gauges,
             metrics: st.metrics,
+        }
+    }
+
+    /// Sample the end-of-run gauges the telemetry stream snapshots:
+    /// per-satellite backlog and residual queue depth, per-link busy
+    /// seconds and bytes carried (sparse — zero entries dropped).
+    fn collect_gauges(&self, st: &SimState, unfinished: usize) -> EpochGauges {
+        let sources = self.wf.sources();
+        let mut backlog = vec![0.0f64; self.n_sats_dim];
+        for ts in &st.tiles {
+            if ts.finished {
+                continue;
+            }
+            // Attribute the straggler to the satellite hosting its
+            // pipeline's first source stage — where its pixels live.
+            let sat = sources
+                .first()
+                .map(|&s| self.pipelines[ts.pipeline].stages[s].sat)
+                .unwrap_or(0);
+            backlog[sat] += 1.0;
+        }
+        let mut queue = vec![0.0f64; self.n_sats_dim];
+        for (i, q) in st.inst_queue.iter().enumerate() {
+            queue[self.instances[i].sat] += q.len() as f64;
+        }
+        for (i, &busy) in st.inst_busy.iter().enumerate() {
+            if busy {
+                queue[self.instances[i].sat] += 1.0;
+            }
+        }
+        let mut link_busy_s = Vec::new();
+        let mut link_bytes = Vec::new();
+        for l in 0..st.link_busy_s.len() {
+            if st.link_busy_s[l] == 0.0 && st.link_bytes[l] == 0.0 {
+                continue;
+            }
+            let key = format!("{}-{}", self.links.src_of(l), self.links.dst_of(l));
+            if st.link_busy_s[l] != 0.0 {
+                link_busy_s.push((key.clone(), st.link_busy_s[l]));
+            }
+            if st.link_bytes[l] != 0.0 {
+                link_bytes.push((key, st.link_bytes[l]));
+            }
+        }
+        let sparse = |v: Vec<f64>| -> Vec<(usize, f64)> {
+            v.into_iter().enumerate().filter(|&(_, x)| x != 0.0).collect()
+        };
+        EpochGauges {
+            sat_backlog: sparse(backlog),
+            sat_queue: sparse(queue),
+            link_busy_s,
+            link_bytes,
+            unfinished_tiles: unfinished as f64,
+            cue_headroom: None,
         }
     }
 

@@ -1,0 +1,411 @@
+//! Deterministic bounded-memory streaming histogram.
+//!
+//! [`StreamHist`] is the fixed-footprint backend behind
+//! `Metrics::observe` in histogram mode: instead of pushing every sample
+//! into a `Vec<f64>` (unbounded over multi-day mission horizons), samples
+//! land in log-spaced buckets derived directly from the IEEE-754 bit
+//! pattern, alongside exact `count`/`sum`/`min`/`max` accumulators.
+//!
+//! **Bucket scheme.**  For a finite `v > 0` the bucket index is
+//! `v.to_bits() >> 49` — the sign bit, the 11 exponent bits and the top
+//! 3 mantissa bits, i.e. 8 sub-buckets per power of two.  The index is a
+//! pure bit shift (no logs, no float compares), total order over positive
+//! floats is preserved, and the bucket's value range is recoverable:
+//! lower edge `f64::from_bits(idx << 49)`, upper edge
+//! `f64::from_bits((idx + 1) << 49)`.  A bucket with lower edge
+//! `2^e * (1 + m/8)` spans `2^e / 8`, so the relative width is
+//! `1 / (8 + m) <= 12.5%`.  Negative values bucket their magnitude into a
+//! separate map, zeros and non-finite samples get dedicated slots.
+//!
+//! **Determinism.**  Recording is plain integer arithmetic plus one
+//! `sum += v` in arrival order; two runs that observe the same sample
+//! sequence produce bit-identical histograms.  Quantiles are *pinned to
+//! bucket edges* (nearest-rank walk, reporting the bucket's value-range
+//! infimum clamped to the tracked `[min, max]`), so they are reproducible
+//! byte-for-byte and bracket the exact-sample nearest-rank quantile
+//! within one bucket's relative width.
+
+use std::collections::BTreeMap;
+
+/// Bounded-memory histogram with exact count/sum/min/max.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StreamHist {
+    /// Bucket index (of `v`) → samples, for finite `v > 0`.
+    pos: BTreeMap<u16, u64>,
+    /// Bucket index (of `-v`) → samples, for finite `v < 0`.
+    neg: BTreeMap<u16, u64>,
+    /// Samples equal to `±0.0`.
+    zeros: u64,
+    /// Non-finite samples (NaN, ±inf): counted here, excluded from
+    /// `count`/`sum`/`min`/`max`/quantiles so one stray value cannot
+    /// poison the summary.
+    nonfinite: u64,
+    /// Exact number of finite samples.
+    count: u64,
+    /// Exact running sum of finite samples, accumulated in arrival order
+    /// (matches `stats::mean` over the equivalent sample vector bit for
+    /// bit).
+    sum: f64,
+    /// Exact minimum finite sample (`+inf` while empty).
+    min: f64,
+    /// Exact maximum finite sample (`-inf` while empty).
+    max: f64,
+}
+
+impl StreamHist {
+    pub fn new() -> Self {
+        StreamHist {
+            pos: BTreeMap::new(),
+            neg: BTreeMap::new(),
+            zeros: 0,
+            nonfinite: 0,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Bucket index of a finite `v > 0`: exponent plus top-3 mantissa
+    /// bits.  Monotone in `v`, fits in 14 bits.
+    pub fn bucket_index(v: f64) -> u16 {
+        debug_assert!(v > 0.0 && v.is_finite());
+        (v.to_bits() >> 49) as u16
+    }
+
+    /// Inclusive lower edge of bucket `idx` (in magnitude space).
+    pub fn bucket_lower(idx: u16) -> f64 {
+        f64::from_bits((idx as u64) << 49)
+    }
+
+    /// Exclusive upper edge of bucket `idx` (in magnitude space).
+    pub fn bucket_upper(idx: u16) -> f64 {
+        f64::from_bits((idx as u64 + 1) << 49)
+    }
+
+    /// Record one sample.
+    #[inline]
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            self.nonfinite += 1;
+            return;
+        }
+        if v == 0.0 {
+            self.zeros += 1;
+        } else if v > 0.0 {
+            *self.pos.entry(Self::bucket_index(v)).or_insert(0) += 1;
+        } else {
+            *self.neg.entry(Self::bucket_index(-v)).or_insert(0) += 1;
+        }
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Number of finite samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0 && self.nonfinite == 0
+    }
+
+    /// Exact sum of finite samples.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean (`None` while empty).
+    pub fn mean(&self) -> Option<f64> {
+        (self.count > 0).then(|| self.sum / self.count as f64)
+    }
+
+    /// Exact minimum finite sample.
+    pub fn min(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.min)
+    }
+
+    /// Exact maximum finite sample.
+    pub fn max(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.max)
+    }
+
+    pub fn zeros(&self) -> u64 {
+        self.zeros
+    }
+
+    pub fn nonfinite(&self) -> u64 {
+        self.nonfinite
+    }
+
+    /// Positive-magnitude buckets (index → count).
+    pub fn pos_buckets(&self) -> &BTreeMap<u16, u64> {
+        &self.pos
+    }
+
+    /// Negative-magnitude buckets (index of `|v|` → count).
+    pub fn neg_buckets(&self) -> &BTreeMap<u16, u64> {
+        &self.neg
+    }
+
+    /// Nearest-rank quantile pinned to bucket edges.
+    ///
+    /// `q` is a percentile in `[0, 100]` (matching `stats::percentile`).
+    /// The walk finds the bucket holding the rank-`ceil(q/100 * count)`
+    /// smallest sample and reports that bucket's value-range infimum
+    /// (lower edge for positive buckets, negated upper edge for negative
+    /// ones), clamped into the exact `[min, max]`.  The true quantile sits
+    /// in the same bucket, at most one bucket width (≤ 12.5% relative)
+    /// above the reported value.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((q / 100.0) * self.count as f64).ceil() as u64;
+        let rank = rank.clamp(1, self.count);
+        let mut seen = 0u64;
+        // Ascending value order: most-negative first.
+        for (&idx, &n) in self.neg.iter().rev() {
+            seen += n;
+            if seen >= rank {
+                return Some((-Self::bucket_upper(idx)).clamp(self.min, self.max));
+            }
+        }
+        seen += self.zeros;
+        if seen >= rank {
+            return Some(0.0);
+        }
+        for (&idx, &n) in self.pos.iter() {
+            seen += n;
+            if seen >= rank {
+                return Some(Self::bucket_lower(idx).clamp(self.min, self.max));
+            }
+        }
+        // Unreachable: the walk covers all `count` samples.
+        Some(self.max)
+    }
+
+    /// Merge `other` into `self`: bucket counts add, min/max fold, the
+    /// sums add.  Equivalent to having recorded the concatenated sample
+    /// sequences (bucket maps, counts and min/max exactly; the sum up to
+    /// one floating-point regrouping).
+    pub fn merge(&mut self, other: &StreamHist) {
+        for (&idx, &n) in &other.pos {
+            *self.pos.entry(idx).or_insert(0) += n;
+        }
+        for (&idx, &n) in &other.neg {
+            *self.neg.entry(idx).or_insert(0) += n;
+        }
+        self.zeros += other.zeros;
+        self.nonfinite += other.nonfinite;
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Apply a raw delta (streaming replay): bucket/zero/non-finite/count
+    /// increments plus a sum increment, with min/max folded in absolute.
+    /// The telemetry stream transmits histogram changes in exactly these
+    /// terms.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_delta(
+        &mut self,
+        pos: &[(u16, u64)],
+        neg: &[(u16, u64)],
+        zeros: u64,
+        nonfinite: u64,
+        count: u64,
+        sum_delta: f64,
+        min: Option<f64>,
+        max: Option<f64>,
+    ) {
+        for &(idx, n) in pos {
+            *self.pos.entry(idx).or_insert(0) += n;
+        }
+        for &(idx, n) in neg {
+            *self.neg.entry(idx).or_insert(0) += n;
+        }
+        self.zeros += zeros;
+        self.nonfinite += nonfinite;
+        self.count += count;
+        self.sum += sum_delta;
+        if let Some(m) = min {
+            self.min = self.min.min(m);
+        }
+        if let Some(m) = max {
+            self.max = self.max.max(m);
+        }
+    }
+
+    /// Overwrite the running sum (the stream writer falls back to an
+    /// absolute sum on the rare float where delta accumulation would not
+    /// round-trip exactly).
+    pub fn set_sum(&mut self, sum: f64) {
+        self.sum = sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::property;
+
+    /// Exact nearest-rank quantile over a sample vector.
+    fn exact_nearest_rank(sorted: &[f64], q: f64) -> f64 {
+        let rank = ((q / 100.0) * sorted.len() as f64).ceil() as usize;
+        sorted[rank.clamp(1, sorted.len()) - 1]
+    }
+
+    #[test]
+    fn tracks_exact_count_sum_min_max() {
+        let mut h = StreamHist::new();
+        for v in [3.0, 1.5, -2.0, 0.0, 8.25] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 3.0 + 1.5 + -2.0 + 0.0 + 8.25);
+        assert_eq!(h.min(), Some(-2.0));
+        assert_eq!(h.max(), Some(8.25));
+        assert_eq!(h.zeros(), 1);
+    }
+
+    #[test]
+    fn nonfinite_samples_are_quarantined() {
+        let mut h = StreamHist::new();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(2.0);
+        assert_eq!(h.nonfinite(), 2);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.sum(), 2.0);
+        assert_eq!(h.min(), Some(2.0));
+        assert_eq!(h.max(), Some(2.0));
+    }
+
+    #[test]
+    fn bucket_edges_bracket_the_value() {
+        for &v in &[1e-6, 0.1, 1.0, 1.05, 7.3, 1024.0, 9.9e11] {
+            let idx = StreamHist::bucket_index(v);
+            let (lo, hi) = (StreamHist::bucket_lower(idx), StreamHist::bucket_upper(idx));
+            assert!(lo <= v && v < hi, "v={v} not in [{lo}, {hi})");
+            assert!(hi - lo <= lo / 8.0 + f64::EPSILON * lo, "width at {v}");
+        }
+    }
+
+    #[test]
+    fn bucket_index_is_monotone() {
+        property("bucket index monotone", 200, |rng| {
+            let a = rng.range(1e-9, 1e9);
+            let b = rng.range(1e-9, 1e9);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            if StreamHist::bucket_index(lo) <= StreamHist::bucket_index(hi) {
+                Ok(())
+            } else {
+                Err(format!("{lo} vs {hi}"))
+            }
+        });
+    }
+
+    #[test]
+    fn quantiles_bracket_exact_within_one_bucket() {
+        property("hist quantile brackets exact", 60, |rng| {
+            let n = 1 + (rng.next_u64() % 200) as usize;
+            let mut vs: Vec<f64> = (0..n).map(|_| rng.range(1e-6, 1e6)).collect();
+            let mut h = StreamHist::new();
+            for &v in &vs {
+                h.record(v);
+            }
+            vs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for q in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+                let exact = exact_nearest_rank(&vs, q);
+                let approx = h.quantile(q).unwrap();
+                // Pinned to the lower edge of the exact quantile's bucket
+                // (clamped to min): below the exact value, within one
+                // bucket's relative width (≤ 12.5%).
+                if approx > exact {
+                    return Err(format!("q={q}: approx {approx} > exact {exact}"));
+                }
+                if exact - approx > exact / 8.0 + 1e-12 {
+                    return Err(format!("q={q}: {approx} vs {exact} (too far)"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantile_handles_signs_and_zeros() {
+        let mut h = StreamHist::new();
+        for v in [-4.0, -1.0, 0.0, 2.0, 8.0] {
+            h.record(v);
+        }
+        // Rank 1 of 5 at q=20: the most negative sample's bucket,
+        // clamped to the exact min.
+        assert_eq!(h.quantile(0.0), Some(-4.0));
+        // Rank 2 (-1.0) pins to its bucket's value-range infimum, the
+        // negated upper magnitude edge: at most one bucket width below.
+        let q40 = h.quantile(40.0).unwrap();
+        assert!((-1.125..=-1.0).contains(&q40), "q40={q40}");
+        assert_eq!(h.quantile(60.0), Some(0.0));
+        assert_eq!(h.quantile(100.0).unwrap(), 8.0);
+    }
+
+    #[test]
+    fn merge_equals_concatenation() {
+        property("hist merge == concat", 60, |rng| {
+            let na = (rng.next_u64() % 60) as usize;
+            let nb = (rng.next_u64() % 60) as usize;
+            let a_vs: Vec<f64> = (0..na).map(|_| rng.range(-1e3, 1e3)).collect();
+            let b_vs: Vec<f64> = (0..nb).map(|_| rng.range(-1e3, 1e3)).collect();
+            let (mut a, mut b, mut both) =
+                (StreamHist::new(), StreamHist::new(), StreamHist::new());
+            for &v in &a_vs {
+                a.record(v);
+                both.record(v);
+            }
+            for &v in &b_vs {
+                b.record(v);
+                both.record(v);
+            }
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            // Bucket maps, counts and min/max are exactly those of the
+            // concatenated sequence; the sums may differ by one
+            // floating-point regrouping, so compare them with tolerance
+            // and everything else exactly.
+            for (m, label) in [(&ab, "a+b"), (&ba, "b+a")] {
+                if m.pos != both.pos || m.neg != both.neg || m.zeros != both.zeros {
+                    return Err(format!("{label}: bucket mismatch"));
+                }
+                if m.count != both.count || m.min != both.min || m.max != both.max {
+                    return Err(format!("{label}: count/min/max mismatch"));
+                }
+                crate::util::testkit::close(m.sum, both.sum, 1e-12)
+                    .map_err(|e| format!("{label}: sum {e}"))?;
+            }
+            // Merge is commutative bit-for-bit except the sum grouping.
+            if ab.count != ba.count || ab.pos != ba.pos || ab.neg != ba.neg {
+                return Err("merge not commutative".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn apply_delta_reconstructs() {
+        let mut h = StreamHist::new();
+        for v in [1.0, 2.5, -3.0, 0.0] {
+            h.record(v);
+        }
+        let mut r = StreamHist::new();
+        let pos: Vec<(u16, u64)> = h.pos.iter().map(|(&i, &n)| (i, n)).collect();
+        let neg: Vec<(u16, u64)> = h.neg.iter().map(|(&i, &n)| (i, n)).collect();
+        r.apply_delta(&pos, &neg, h.zeros, h.nonfinite, h.count, h.sum, h.min(), h.max());
+        assert_eq!(r, h);
+    }
+}

@@ -1,4 +1,12 @@
-//! Metric registry: counters and sample collections with JSON export.
+//! Metric registry: counters and sample distributions with JSON export,
+//! plus the streaming-observability layer built on top of it:
+//!
+//! * [`hist`] — deterministic bounded-memory streaming histograms, the
+//!   fixed-footprint `observe` backend for long-horizon runs.
+//! * [`stream`] — per-epoch delta snapshots of a registry (plus sim
+//!   gauges and phase work counters) as byte-deterministic JSONL.
+//! * [`phases`] — deterministic per-phase work-unit counters (simplex
+//!   pivots, router passes, pass-prediction evals, events drained).
 //!
 //! Every simulator / runtime component records into a [`Metrics`] instance;
 //! experiment drivers export the registry as JSON rows (the paper-figure
@@ -12,11 +20,25 @@
 //! name-based [`Metrics::inc`] / [`Metrics::observe`] remain for cold
 //! paths and intern on first use.  Counter names use dotted paths
 //! (`"isl.bytes"`, `"func.cloud.analyzed"`).
+//!
+//! **Two distribution backends.**  By default every `observe` appends to
+//! an exact sample vector (`Dist::Samples`) — unbounded, but bit-identical
+//! to the historical exports, so all existing pins hold.  A registry
+//! created with [`Metrics::new_hist`] stores [`hist::StreamHist`]s instead
+//! (`Dist::Hist`): fixed memory per metric, exact count/sum/min/max/mean,
+//! bucket-edge quantiles.  Counters are identical between the two modes;
+//! only sample retention differs.
+
+pub mod hist;
+pub mod phases;
+pub mod stream;
 
 use std::collections::HashMap;
 
 use crate::util::json::{obj, Json};
 use crate::util::stats;
+
+use hist::StreamHist;
 
 /// An interned metric key: a dense index into one [`Metrics`] registry.
 ///
@@ -27,6 +49,57 @@ use crate::util::stats;
 /// path.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct MetricId(u32);
+
+/// One distribution metric's storage: exact samples or a bounded
+/// histogram, chosen per registry (see [`Metrics::new_hist`]).
+#[derive(Debug, Clone)]
+pub enum Dist {
+    /// Every sample, in arrival order (exact percentiles, unbounded).
+    Samples(Vec<f64>),
+    /// Log-bucketed streaming histogram (bounded, pinned quantiles).
+    Hist(StreamHist),
+}
+
+impl Dist {
+    pub fn is_empty(&self) -> bool {
+        match self {
+            Dist::Samples(v) => v.is_empty(),
+            Dist::Hist(h) => h.is_empty(),
+        }
+    }
+
+    /// Number of finite samples recorded.
+    pub fn count(&self) -> u64 {
+        match self {
+            Dist::Samples(v) => v.len() as u64,
+            Dist::Hist(h) => h.count(),
+        }
+    }
+
+    /// Mean of the recorded samples.  Exact in both modes: the histogram
+    /// accumulates its sum in arrival order, matching `stats::mean` bit
+    /// for bit.
+    pub fn mean(&self) -> Option<f64> {
+        match self {
+            Dist::Samples(v) => (!v.is_empty()).then(|| stats::mean(v)),
+            Dist::Hist(h) => h.mean(),
+        }
+    }
+
+    pub fn as_samples(&self) -> Option<&[f64]> {
+        match self {
+            Dist::Samples(v) => Some(v),
+            Dist::Hist(_) => None,
+        }
+    }
+
+    pub fn as_hist(&self) -> Option<&StreamHist> {
+        match self {
+            Dist::Samples(_) => None,
+            Dist::Hist(h) => Some(h),
+        }
+    }
+}
 
 /// A metric registry.
 #[derive(Debug, Clone, Default)]
@@ -41,13 +114,35 @@ pub struct Metrics {
     /// counter that never fired must not surface in the JSON export (the
     /// simulator interns every per-function key up front).
     counted: Vec<bool>,
-    /// Id → distribution samples (empty ⇔ absent from the export).
-    samples: Vec<Vec<f64>>,
+    /// Id → distribution storage (empty ⇔ absent from the export).
+    dists: Vec<Dist>,
+    /// New slots store histograms instead of sample vectors.
+    hist_mode: bool,
 }
 
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A registry whose distributions are bounded-memory streaming
+    /// histograms.  Counters behave identically to [`Metrics::new`];
+    /// `samples()` returns `&[]` for histogram slots.
+    pub fn new_hist() -> Self {
+        Metrics { hist_mode: true, ..Self::default() }
+    }
+
+    /// Whether new distribution slots use the histogram backend.
+    pub fn hist_mode(&self) -> bool {
+        self.hist_mode
+    }
+
+    fn new_dist(&self) -> Dist {
+        if self.hist_mode {
+            Dist::Hist(StreamHist::new())
+        } else {
+            Dist::Samples(Vec::new())
+        }
     }
 
     /// Intern `name`, returning its dense id in *this* registry.  The
@@ -61,7 +156,7 @@ impl Metrics {
         self.names.push(name.to_string());
         self.counters.push(0.0);
         self.counted.push(false);
-        self.samples.push(Vec::new());
+        self.dists.push(self.new_dist());
         MetricId(i)
     }
 
@@ -76,7 +171,10 @@ impl Metrics {
     /// Record one sample of an interned distribution metric.
     #[inline]
     pub fn observe_id(&mut self, id: MetricId, v: f64) {
-        self.samples[id.0 as usize].push(v);
+        match &mut self.dists[id.0 as usize] {
+            Dist::Samples(vs) => vs.push(v),
+            Dist::Hist(h) => h.record(v),
+        }
     }
 
     /// Add `v` to a counter by name (cold path: interns on first use).
@@ -104,12 +202,60 @@ impl Metrics {
         self.counters[id.0 as usize]
     }
 
-    /// All samples of a distribution metric.
+    /// Whether `name` has ever been incremented (an explicit zero counts).
+    pub fn counted(&self, name: &str) -> bool {
+        match self.index.get(name) {
+            Some(&i) => self.counted[i as usize],
+            None => false,
+        }
+    }
+
+    /// Overwrite a counter (streaming replay's absolute-value fallback).
+    pub fn set_counter(&mut self, name: &str, v: f64) {
+        let id = self.id(name);
+        self.counters[id.0 as usize] = v;
+        self.counted[id.0 as usize] = true;
+    }
+
+    /// All samples of a distribution metric (`&[]` for histogram slots —
+    /// use [`Metrics::dist`] to summarize either backend).
     pub fn samples(&self, name: &str) -> &[f64] {
         match self.index.get(name) {
-            Some(&i) => &self.samples[i as usize],
+            Some(&i) => self.dists[i as usize].as_samples().unwrap_or(&[]),
             None => &[],
         }
+    }
+
+    /// A distribution metric's storage, whichever backend it uses.
+    pub fn dist(&self, name: &str) -> Option<&Dist> {
+        let &i = self.index.get(name)?;
+        let d = &self.dists[i as usize];
+        (!d.is_empty()).then_some(d)
+    }
+
+    /// Mean of a distribution metric — identical in exact-sample and
+    /// histogram modes (the histogram sum accumulates in arrival order).
+    pub fn dist_mean(&self, name: &str) -> Option<f64> {
+        self.dist(name)?.mean()
+    }
+
+    /// Sample count of a distribution metric (0 when absent).
+    pub fn dist_count(&self, name: &str) -> u64 {
+        self.dist(name).map_or(0, Dist::count)
+    }
+
+    /// Every counted counter, in interning order.
+    pub fn counters_iter(&self) -> impl Iterator<Item = (&str, f64)> + '_ {
+        (0..self.names.len())
+            .filter(|&i| self.counted[i])
+            .map(|i| (self.names[i].as_str(), self.counters[i]))
+    }
+
+    /// Every non-empty distribution, in interning order.
+    pub fn dists_iter(&self) -> impl Iterator<Item = (&str, &Dist)> + '_ {
+        (0..self.names.len())
+            .filter(|&i| !self.dists[i].is_empty())
+            .map(|i| (self.names[i].as_str(), &self.dists[i]))
     }
 
     /// Ratio helper: `counter(num) / counter(den)` (0 when empty).
@@ -123,10 +269,13 @@ impl Metrics {
     }
 
     /// Merge another registry into this one (by name: id spaces are
-    /// registry-specific).
+    /// registry-specific).  Distribution backends compose: samples merged
+    /// into a histogram slot are recorded into it; a histogram merged into
+    /// an exact slot converts that slot to a histogram (samples cannot be
+    /// reconstituted from buckets).
     pub fn merge(&mut self, other: &Metrics) {
         for (i, name) in other.names.iter().enumerate() {
-            if !other.counted[i] && other.samples[i].is_empty() {
+            if !other.counted[i] && other.dists[i].is_empty() {
                 continue;
             }
             // One intern per name covers both the counter and the samples.
@@ -134,8 +283,44 @@ impl Metrics {
             if other.counted[i] {
                 self.inc_id(id, other.counters[i]);
             }
-            if !other.samples[i].is_empty() {
-                self.samples[id.0 as usize].extend_from_slice(&other.samples[i]);
+            match (&mut self.dists[id.0 as usize], &other.dists[i]) {
+                (_, d) if d.is_empty() => {}
+                (Dist::Samples(a), Dist::Samples(b)) => a.extend_from_slice(b),
+                (Dist::Hist(a), Dist::Hist(b)) => a.merge(b),
+                (Dist::Hist(a), Dist::Samples(b)) => {
+                    for &v in b {
+                        a.record(v);
+                    }
+                }
+                (slot @ Dist::Samples(_), Dist::Hist(b)) => {
+                    let mut h = StreamHist::new();
+                    if let Dist::Samples(vs) = slot {
+                        for &v in vs.iter() {
+                            h.record(v);
+                        }
+                    }
+                    h.merge(b);
+                    *slot = Dist::Hist(h);
+                }
+            }
+        }
+    }
+
+    /// Merge a histogram directly into a distribution slot (streaming
+    /// replay).  An exact slot converts to the histogram backend.
+    pub fn merge_hist(&mut self, name: &str, h: &StreamHist) {
+        let id = self.id(name);
+        match &mut self.dists[id.0 as usize] {
+            Dist::Hist(a) => a.merge(h),
+            slot @ Dist::Samples(_) => {
+                let mut own = StreamHist::new();
+                if let Dist::Samples(vs) = slot {
+                    for &v in vs.iter() {
+                        own.record(v);
+                    }
+                }
+                own.merge(h);
+                *slot = Dist::Hist(own);
             }
         }
     }
@@ -156,7 +341,8 @@ impl Metrics {
     /// (count/mean/min/p50/p90/p99/max).  Keys sort by name (the `Json::Obj`
     /// `BTreeMap`), independent of interning order, so exports are
     /// byte-identical however the registry was populated;
-    /// interned-but-never-recorded ids are omitted.
+    /// interned-but-never-recorded ids are omitted.  Histogram slots
+    /// report exact count/mean/min/max and bucket-edge percentiles.
     pub fn to_json(&self) -> Json {
         let counters = Json::Obj(
             (0..self.names.len())
@@ -166,31 +352,43 @@ impl Metrics {
         );
         let dists = Json::Obj(
             (0..self.names.len())
-                .filter(|&i| !self.samples[i].is_empty())
-                .map(|i| {
-                    let vs = &self.samples[i];
-                    (
-                        self.names[i].clone(),
-                        obj(vec![
-                            ("count", Json::from(vs.len())),
-                            ("mean", Json::Num(stats::mean(vs))),
-                            (
-                                "min",
-                                Json::Num(vs.iter().copied().fold(f64::MAX, f64::min)),
-                            ),
-                            ("p50", Json::Num(stats::percentile(vs, 50.0))),
-                            ("p90", Json::Num(stats::percentile(vs, 90.0))),
-                            ("p99", Json::Num(stats::percentile(vs, 99.0))),
-                            (
-                                "max",
-                                Json::Num(vs.iter().copied().fold(f64::MIN, f64::max)),
-                            ),
-                        ]),
-                    )
-                })
+                .filter(|&i| self.dists[i].count() > 0)
+                .map(|i| (self.names[i].clone(), dist_summary(&self.dists[i])))
                 .collect(),
         );
         obj(vec![("counters", counters), ("distributions", dists)])
+    }
+}
+
+/// The count/mean/min/p50/p90/p99/max summary of one distribution.
+fn dist_summary(d: &Dist) -> Json {
+    match d {
+        Dist::Samples(vs) => obj(vec![
+            ("count", Json::from(vs.len())),
+            ("mean", Json::Num(stats::mean(vs))),
+            // Seed with infinities, not MAX/MIN: a legitimate `f64::MAX`
+            // sample must not fold into a wrong extreme.
+            (
+                "min",
+                Json::Num(vs.iter().copied().fold(f64::INFINITY, f64::min)),
+            ),
+            ("p50", Json::Num(stats::percentile(vs, 50.0))),
+            ("p90", Json::Num(stats::percentile(vs, 90.0))),
+            ("p99", Json::Num(stats::percentile(vs, 99.0))),
+            (
+                "max",
+                Json::Num(vs.iter().copied().fold(f64::NEG_INFINITY, f64::max)),
+            ),
+        ]),
+        Dist::Hist(h) => obj(vec![
+            ("count", Json::from(h.count() as usize)),
+            ("mean", Json::Num(h.mean().unwrap_or(0.0))),
+            ("min", Json::Num(h.min().unwrap_or(0.0))),
+            ("p50", Json::Num(h.quantile(50.0).unwrap_or(0.0))),
+            ("p90", Json::Num(h.quantile(90.0).unwrap_or(0.0))),
+            ("p99", Json::Num(h.quantile(99.0).unwrap_or(0.0))),
+            ("max", Json::Num(h.max().unwrap_or(0.0))),
+        ]),
     }
 }
 
@@ -277,6 +475,46 @@ mod tests {
     }
 
     #[test]
+    fn merge_is_commutative_for_counters_and_hists() {
+        let mut a = Metrics::new_hist();
+        a.inc("c", 1.0);
+        for v in [1.0, 4.0] {
+            a.observe("d", v);
+        }
+        let mut b = Metrics::new_hist();
+        b.inc("c", 2.0);
+        b.observe("d", 2.0);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab.counter("c"), ba.counter("c"));
+        let (ha, hb) = (ab.dist("d").unwrap(), ba.dist("d").unwrap());
+        assert_eq!(ha.count(), hb.count());
+        assert_eq!(ha.as_hist().unwrap().min(), hb.as_hist().unwrap().min());
+        assert_eq!(ha.as_hist().unwrap().max(), hb.as_hist().unwrap().max());
+        assert_eq!(
+            ha.as_hist().unwrap().pos_buckets(),
+            hb.as_hist().unwrap().pos_buckets()
+        );
+    }
+
+    #[test]
+    fn merging_empty_registry_is_a_no_op() {
+        let mut a = Metrics::new();
+        a.inc("c", 2.0);
+        a.observe("d", 1.0);
+        let before = a.to_json().to_string_compact();
+        a.merge(&Metrics::new());
+        a.merge(&Metrics::new_hist());
+        assert_eq!(a.to_json().to_string_compact(), before);
+        // And merging into an empty registry copies the source.
+        let mut empty = Metrics::new();
+        empty.merge(&a);
+        assert_eq!(empty.to_json().to_string_compact(), before);
+    }
+
+    #[test]
     fn json_export_shape() {
         let mut m = Metrics::new();
         m.inc("count", 7.0);
@@ -304,5 +542,83 @@ mod tests {
         let za = s.find("z.last").unwrap();
         let af = s.find("a.first").unwrap();
         assert!(af < za, "{s}");
+    }
+
+    #[test]
+    fn extreme_samples_export_exactly() {
+        // With MAX/MIN seeds a lone f64::MAX sample used to fold wrong.
+        let mut m = Metrics::new();
+        m.observe("edge", f64::MAX);
+        let j = m.to_json();
+        let edge = j.get("distributions").unwrap().get("edge").unwrap();
+        assert_eq!(edge.get("min").unwrap().as_f64(), Some(f64::MAX));
+        assert_eq!(edge.get("max").unwrap().as_f64(), Some(f64::MAX));
+    }
+
+    #[test]
+    fn hist_mode_matches_exact_counters_and_mean() {
+        let vs = [4.0, 1.0, 9.5, 0.25, 2.0, 2.0, 7.0];
+        let mut exact = Metrics::new();
+        let mut histm = Metrics::new_hist();
+        for (i, &v) in vs.iter().enumerate() {
+            exact.inc("n", i as f64);
+            histm.inc("n", i as f64);
+            exact.observe("lat", v);
+            histm.observe("lat", v);
+        }
+        assert_eq!(exact.counter("n"), histm.counter("n"));
+        // Mean/count/min/max are exact in both backends.
+        assert_eq!(exact.dist_mean("lat"), histm.dist_mean("lat"));
+        assert_eq!(exact.dist_count("lat"), histm.dist_count("lat"));
+        let ej = exact.to_json();
+        let hj = histm.to_json();
+        for k in ["count", "mean", "min", "max"] {
+            assert_eq!(
+                ej.get("distributions").unwrap().get("lat").unwrap().get(k),
+                hj.get("distributions").unwrap().get("lat").unwrap().get(k),
+                "{k}"
+            );
+        }
+        // Histogram slots expose no raw samples.
+        assert!(histm.samples("lat").is_empty());
+        assert!(histm.dist("lat").unwrap().as_hist().is_some());
+    }
+
+    #[test]
+    fn hist_quantiles_sit_within_one_bucket_of_exact() {
+        let vs: Vec<f64> = (1..=100).map(|i| i as f64 * 1.37).collect();
+        let mut histm = Metrics::new_hist();
+        for &v in &vs {
+            histm.observe("lat", v);
+        }
+        let h = histm.dist("lat").unwrap().as_hist().unwrap().clone();
+        let mut sorted = vs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [50.0, 90.0, 99.0] {
+            let rank = ((q / 100.0) * sorted.len() as f64).ceil() as usize;
+            let exact = sorted[rank.clamp(1, sorted.len()) - 1];
+            let approx = h.quantile(q).unwrap();
+            assert!(approx <= exact && exact - approx <= exact / 8.0, "q={q}");
+        }
+    }
+
+    #[test]
+    fn mixed_mode_merge_converts_to_hist() {
+        let mut exact = Metrics::new();
+        exact.observe("d", 1.0);
+        let mut histm = Metrics::new_hist();
+        histm.observe("d", 2.0);
+        // hist ← samples: recorded into the histogram.
+        let mut h = histm.clone();
+        h.merge(&exact);
+        assert_eq!(h.dist_count("d"), 2);
+        assert!(h.dist("d").unwrap().as_hist().is_some());
+        // samples ← hist: the slot converts (buckets cannot be un-merged).
+        let mut e = exact.clone();
+        e.merge(&histm);
+        assert_eq!(e.dist_count("d"), 2);
+        assert!(e.dist("d").unwrap().as_hist().is_some());
+        assert_eq!(e.dist("d").unwrap().as_hist().unwrap().min(), Some(1.0));
+        assert_eq!(e.dist("d").unwrap().as_hist().unwrap().max(), Some(2.0));
     }
 }

@@ -1,0 +1,119 @@
+//! Deterministic per-phase work-unit counters (the phase self-profiler).
+//!
+//! Wall-clock timings are non-deterministic, so the primary profiling
+//! signal is *work units*: counts of the dominant operations of each
+//! orchestration phase, bumped at the operation itself —
+//!
+//! * **simplex pivots** — `lp::simplex` tableau pivots (planning),
+//! * **router passes** — full routing invocations (table builds and
+//!   per-cue re-routes),
+//! * **pass-prediction evals** — visibility predicate evaluations
+//!   (`cos_psi` calls, closed-form and sweep),
+//! * **events drained** — discrete events popped by the simulator.
+//!
+//! The counters are monotone thread-locals: each sweep worker or
+//! orchestrator thread accumulates its own totals, so a single-threaded
+//! mission run reads back exactly its own deterministic counts.  The
+//! telemetry stream snapshots [`snapshot`] at every epoch boundary and
+//! emits per-epoch deltas; two identical runs produce identical deltas.
+//! Optional wall-clock timers live in the stream's separate `profile`
+//! section, which byte-identity tests exclude (see `telemetry::stream`).
+
+use std::cell::Cell;
+
+thread_local! {
+    static SIMPLEX_PIVOTS: Cell<u64> = const { Cell::new(0) };
+    static ROUTER_PASSES: Cell<u64> = const { Cell::new(0) };
+    static PASS_PRED_EVALS: Cell<u64> = const { Cell::new(0) };
+    static EVENTS_DRAINED: Cell<u64> = const { Cell::new(0) };
+}
+
+/// One reading of the four monotone work-unit counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseCounters {
+    pub simplex_pivots: u64,
+    pub router_passes: u64,
+    pub pass_pred_evals: u64,
+    pub events_drained: u64,
+}
+
+impl PhaseCounters {
+    /// Component-wise `self - earlier` (saturating, for safety across
+    /// explicit resets).
+    pub fn delta_since(&self, earlier: &PhaseCounters) -> PhaseCounters {
+        PhaseCounters {
+            simplex_pivots: self.simplex_pivots.saturating_sub(earlier.simplex_pivots),
+            router_passes: self.router_passes.saturating_sub(earlier.router_passes),
+            pass_pred_evals: self.pass_pred_evals.saturating_sub(earlier.pass_pred_evals),
+            events_drained: self.events_drained.saturating_sub(earlier.events_drained),
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        *self == PhaseCounters::default()
+    }
+}
+
+/// Read the current thread's totals.
+pub fn snapshot() -> PhaseCounters {
+    PhaseCounters {
+        simplex_pivots: SIMPLEX_PIVOTS.with(Cell::get),
+        router_passes: ROUTER_PASSES.with(Cell::get),
+        pass_pred_evals: PASS_PRED_EVALS.with(Cell::get),
+        events_drained: EVENTS_DRAINED.with(Cell::get),
+    }
+}
+
+#[inline]
+pub fn bump_simplex_pivots(n: u64) {
+    SIMPLEX_PIVOTS.with(|c| c.set(c.get() + n));
+}
+
+#[inline]
+pub fn bump_router_passes(n: u64) {
+    ROUTER_PASSES.with(|c| c.set(c.get() + n));
+}
+
+#[inline]
+pub fn bump_pass_pred_evals(n: u64) {
+    PASS_PRED_EVALS.with(|c| c.set(c.get() + n));
+}
+
+#[inline]
+pub fn bump_events_drained(n: u64) {
+    EVENTS_DRAINED.with(|c| c.set(c.get() + n));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_are_monotone_and_delta_correct() {
+        let t0 = snapshot();
+        bump_simplex_pivots(3);
+        bump_router_passes(1);
+        bump_pass_pred_evals(10);
+        bump_events_drained(7);
+        let t1 = snapshot();
+        let d = t1.delta_since(&t0);
+        assert_eq!(d.simplex_pivots, 3);
+        assert_eq!(d.router_passes, 1);
+        assert_eq!(d.pass_pred_evals, 10);
+        assert_eq!(d.events_drained, 7);
+        assert!(t1.delta_since(&t1).is_zero());
+    }
+
+    #[test]
+    fn threads_count_independently() {
+        let before = snapshot();
+        std::thread::spawn(|| {
+            bump_simplex_pivots(1_000);
+        })
+        .join()
+        .unwrap();
+        // The spawned thread's bumps never leak into this thread's totals.
+        let after = snapshot();
+        assert_eq!(after.delta_since(&before).simplex_pivots, 0);
+    }
+}

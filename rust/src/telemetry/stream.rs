@@ -1,0 +1,806 @@
+//! Streaming telemetry: per-epoch delta snapshots as deterministic JSONL.
+//!
+//! A [`StreamWriter`] is fed the orchestrator's merged [`Metrics`] at
+//! every epoch boundary and emits **only what changed** since the last
+//! emitted snapshot: counters as numeric deltas, exact-sample
+//! distributions as the newly appended samples, histograms as
+//! bucket-count deltas, plus per-epoch [`EpochGauges`] sampled from the
+//! simulator and the per-phase work-unit deltas from
+//! [`phases`](super::phases).  Applying every delta in order reconstructs
+//! the end-of-run registry exactly ([`replay`]).
+//!
+//! **Byte determinism.**  Lines are rendered through `Json` (sorted keys)
+//! and the shared `util::fmt` number rule; timestamps are sim time.  Two
+//! runs of the same seed produce byte-identical streams.  The one
+//! intentionally non-deterministic section — optional wall-clock phase
+//! timers — is gated behind [`StreamSpec::profile`] (off by default) and
+//! excluded from byte-identity tests.
+//!
+//! **Replay exactness.**  Counter deltas are validated at write time
+//! against a shadow copy updated with *replay arithmetic*
+//! (`value += delta`): on the rare float where delta accumulation would
+//! not round-trip bit-exactly, the writer falls back to an absolute value
+//! for that key (`counters_abs`, histogram `sum_abs`), so
+//! `replay(stream)` always reconstructs the final `Metrics::to_json`
+//! byte-for-byte.
+//!
+//! Stream shape (one JSON object per line):
+//!
+//! ```text
+//! {"kind":"header","every":1,"mode":"exact","profile":false,"v":1}
+//! {"kind":"snapshot","epoch":0,"t_s":10,"counters":{...},"dists":{...},
+//!  "gauges":{...},"phases":{...}}
+//! ...
+//! {"kind":"snapshot","epoch":4,"t_s":40,"final":true,"counters":{...}}
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::Write;
+
+use crate::util::json::{num_arr, obj, Json};
+
+use super::hist::StreamHist;
+use super::phases::{self, PhaseCounters};
+use super::{Dist, Metrics};
+
+/// Stream format version.
+pub const STREAM_VERSION: u64 = 1;
+
+/// Where and how densely to stream telemetry.
+#[derive(Debug, Clone, Default)]
+pub struct StreamSpec {
+    /// JSONL destination; `None` keeps the lines in memory and returns
+    /// them on the run report (tests, programmatic use).
+    pub path: Option<String>,
+    /// Emit every `every`-th epoch (0 → 1).  Deltas accumulate across
+    /// skipped epochs, and the final snapshot always flushes, so replay
+    /// stays exact at any density.
+    pub every: u64,
+    /// Include wall-clock phase timers in a `profile` section.
+    /// **Non-deterministic** — leave off for byte-identity comparisons.
+    pub profile: bool,
+}
+
+impl StreamSpec {
+    /// Stream to a file at the default density.
+    pub fn to_path(path: impl Into<String>) -> Self {
+        StreamSpec { path: Some(path.into()), every: 1, profile: false }
+    }
+
+    /// Keep lines in memory (returned on the run report).
+    pub fn in_memory() -> Self {
+        StreamSpec::default()
+    }
+
+    pub fn every(&self) -> u64 {
+        self.every.max(1)
+    }
+}
+
+/// Per-epoch gauges sampled from the simulator (absolute values, not
+/// deltas): sparse per-satellite backlog / queue depth, per-link
+/// utilization, unfinished tiles, and (mission loop) cue-reserve
+/// headroom.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EpochGauges {
+    /// Unfinished tiles attributed to their pipeline's source satellite.
+    pub sat_backlog: Vec<(usize, f64)>,
+    /// Queued + in-service instructions per satellite at end of epoch.
+    pub sat_queue: Vec<(usize, f64)>,
+    /// Seconds each ISL spent transmitting ("a-b" keyed, nonzero only).
+    pub link_busy_s: Vec<(String, f64)>,
+    /// Bytes each ISL carried.
+    pub link_bytes: Vec<(String, f64)>,
+    /// Tiles arrived but not finished when the epoch's horizon closed.
+    pub unfinished_tiles: f64,
+    /// Cue-reserve tokens minus admissions (mission loop only).
+    pub cue_headroom: Option<f64>,
+}
+
+impl EpochGauges {
+    fn to_json(&self) -> Json {
+        let sparse_idx = |v: &[(usize, f64)]| {
+            Json::Obj(
+                v.iter()
+                    .filter(|(_, x)| *x != 0.0)
+                    .map(|(i, x)| (i.to_string(), Json::Num(*x)))
+                    .collect(),
+            )
+        };
+        let sparse_key = |v: &[(String, f64)]| {
+            Json::Obj(
+                v.iter()
+                    .filter(|(_, x)| *x != 0.0)
+                    .map(|(k, x)| (k.clone(), Json::Num(*x)))
+                    .collect(),
+            )
+        };
+        let mut fields: Vec<(&str, Json)> = Vec::new();
+        for (key, j) in [
+            ("backlog", sparse_idx(&self.sat_backlog)),
+            ("queue", sparse_idx(&self.sat_queue)),
+            ("link_busy_s", sparse_key(&self.link_busy_s)),
+            ("link_bytes", sparse_key(&self.link_bytes)),
+        ] {
+            if !matches!(&j, Json::Obj(o) if o.is_empty()) {
+                fields.push((key, j));
+            }
+        }
+        fields.push(("unfinished", Json::Num(self.unfinished_tiles)));
+        if let Some(h) = self.cue_headroom {
+            fields.push(("cue_headroom", Json::Num(h)));
+        }
+        obj(fields)
+    }
+}
+
+enum Sink {
+    Mem(Vec<String>),
+    File(std::io::BufWriter<std::fs::File>),
+}
+
+impl Sink {
+    fn write_line(&mut self, line: String) -> anyhow::Result<()> {
+        match self {
+            Sink::Mem(lines) => lines.push(line),
+            Sink::File(w) => {
+                w.write_all(line.as_bytes())?;
+                w.write_all(b"\n")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Streaming delta-snapshot writer (see the module docs for the format).
+pub struct StreamWriter {
+    sink: Sink,
+    every: u64,
+    profile: bool,
+    /// Replay-arithmetic shadow of every emitted counter.
+    shadow_counters: BTreeMap<String, f64>,
+    /// Emitted sample count per exact-mode distribution.
+    shadow_lens: BTreeMap<String, usize>,
+    /// Replay-arithmetic shadow of every histogram distribution.
+    shadow_hists: BTreeMap<String, StreamHist>,
+    /// Work-unit totals at the last emitted snapshot (baselined at
+    /// creation so earlier runs on this thread don't leak in).
+    last_phases: PhaseCounters,
+    snapshots: u64,
+}
+
+impl StreamWriter {
+    /// Open the sink and write the header line.  `hist_mode` must match
+    /// the registry that will be snapshotted.
+    pub fn create(spec: &StreamSpec, hist_mode: bool) -> anyhow::Result<StreamWriter> {
+        let sink = match &spec.path {
+            None => Sink::Mem(Vec::new()),
+            Some(p) => {
+                let f = std::fs::File::create(p)
+                    .map_err(|e| anyhow::anyhow!("creating telemetry stream {p}: {e}"))?;
+                Sink::File(std::io::BufWriter::new(f))
+            }
+        };
+        let mut w = StreamWriter {
+            sink,
+            every: spec.every(),
+            profile: spec.profile,
+            shadow_counters: BTreeMap::new(),
+            shadow_lens: BTreeMap::new(),
+            shadow_hists: BTreeMap::new(),
+            last_phases: phases::snapshot(),
+            snapshots: 0,
+        };
+        let header = obj(vec![
+            ("kind", Json::from("header")),
+            ("v", Json::from(STREAM_VERSION as usize)),
+            ("mode", Json::from(if hist_mode { "hist" } else { "exact" })),
+            ("every", Json::from(w.every as usize)),
+            ("profile", Json::from(spec.profile)),
+        ]);
+        w.sink.write_line(header.to_string_compact())?;
+        Ok(w)
+    }
+
+    /// Whether `epoch` lands on the stream's sampling grid.
+    pub fn due(&self, epoch: u64) -> bool {
+        epoch % self.every == 0
+    }
+
+    /// Snapshot an epoch boundary.  Skipped epochs (the `every` filter)
+    /// simply leave their changes for the next emitted delta.
+    pub fn epoch_snapshot(
+        &mut self,
+        epoch: u64,
+        t_s: f64,
+        m: &Metrics,
+        gauges: &EpochGauges,
+        profile_ms: &[(&str, f64)],
+    ) -> anyhow::Result<()> {
+        if !self.due(epoch) {
+            return Ok(());
+        }
+        self.emit(epoch, t_s, m, Some(gauges), profile_ms, false)
+    }
+
+    /// The mandatory end-of-run snapshot: flushes every pending delta
+    /// (including post-loop summary counters) regardless of the `every`
+    /// filter, so replay always reconstructs the final registry.
+    pub fn final_snapshot(
+        &mut self,
+        epoch: u64,
+        t_s: f64,
+        m: &Metrics,
+    ) -> anyhow::Result<()> {
+        self.emit(epoch, t_s, m, None, &[], true)
+    }
+
+    fn emit(
+        &mut self,
+        epoch: u64,
+        t_s: f64,
+        m: &Metrics,
+        gauges: Option<&EpochGauges>,
+        profile_ms: &[(&str, f64)],
+        is_final: bool,
+    ) -> anyhow::Result<()> {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("kind", Json::from("snapshot")),
+            ("epoch", Json::from(epoch as usize)),
+            ("t_s", Json::Num(t_s)),
+        ];
+        if is_final {
+            fields.push(("final", Json::from(true)));
+        }
+
+        // Counters: deltas validated against replay arithmetic, absolute
+        // fallback when `prev + delta` would not round-trip.
+        let mut deltas: BTreeMap<String, Json> = BTreeMap::new();
+        let mut abs: BTreeMap<String, Json> = BTreeMap::new();
+        for (name, cur) in m.counters_iter() {
+            let prev = self.shadow_counters.get(name).copied();
+            let d = cur - prev.unwrap_or(0.0);
+            if d == 0.0 && prev.is_some() {
+                continue;
+            }
+            if prev.unwrap_or(0.0) + d == cur {
+                deltas.insert(name.to_string(), Json::Num(d));
+                self.shadow_counters
+                    .insert(name.to_string(), prev.unwrap_or(0.0) + d);
+            } else {
+                abs.insert(name.to_string(), Json::Num(cur));
+                self.shadow_counters.insert(name.to_string(), cur);
+            }
+        }
+        if !deltas.is_empty() {
+            fields.push(("counters", Json::Obj(deltas)));
+        }
+        if !abs.is_empty() {
+            fields.push(("counters_abs", Json::Obj(abs)));
+        }
+
+        // Distributions: new samples (exact mode) or bucket deltas (hist).
+        let mut dists: BTreeMap<String, Json> = BTreeMap::new();
+        for (name, dist) in m.dists_iter() {
+            match dist {
+                Dist::Samples(vs) => {
+                    let prev = self.shadow_lens.get(name).copied().unwrap_or(0);
+                    if vs.len() > prev {
+                        dists.insert(
+                            name.to_string(),
+                            obj(vec![("new", num_arr(&vs[prev..]))]),
+                        );
+                        self.shadow_lens.insert(name.to_string(), vs.len());
+                    }
+                }
+                Dist::Hist(h) => {
+                    let shadow = self
+                        .shadow_hists
+                        .entry(name.to_string())
+                        .or_insert_with(StreamHist::new);
+                    if let Some(dj) = hist_delta(shadow, h) {
+                        dists.insert(name.to_string(), obj(vec![("hist", dj)]));
+                    }
+                }
+            }
+        }
+        if !dists.is_empty() {
+            fields.push(("dists", Json::Obj(dists)));
+        }
+
+        if let Some(g) = gauges {
+            fields.push(("gauges", g.to_json()));
+        }
+
+        // Deterministic per-phase work-unit deltas.
+        let now = phases::snapshot();
+        let pd = now.delta_since(&self.last_phases);
+        self.last_phases = now;
+        if !pd.is_zero() {
+            let mut p: Vec<(&str, Json)> = Vec::new();
+            for (k, v) in [
+                ("simplex_pivots", pd.simplex_pivots),
+                ("router_passes", pd.router_passes),
+                ("pass_pred_evals", pd.pass_pred_evals),
+                ("events_drained", pd.events_drained),
+            ] {
+                if v != 0 {
+                    p.push((k, Json::from(v as usize)));
+                }
+            }
+            fields.push(("phases", obj(p)));
+        }
+
+        // Optional wall-clock timers: the one non-deterministic section,
+        // opt-in and excluded from byte-identity tests.
+        if self.profile && !profile_ms.is_empty() {
+            fields.push((
+                "profile",
+                obj(profile_ms.iter().map(|&(k, v)| (k, Json::Num(v))).collect()),
+            ));
+        }
+
+        self.snapshots += 1;
+        self.sink.write_line(obj(fields).to_string_compact())
+    }
+
+    /// Snapshots emitted so far (header excluded).
+    pub fn snapshots(&self) -> u64 {
+        self.snapshots
+    }
+
+    /// Flush and close; memory sinks return their lines.
+    pub fn finish(self) -> anyhow::Result<Option<Vec<String>>> {
+        match self.sink {
+            Sink::Mem(lines) => Ok(Some(lines)),
+            Sink::File(mut w) => {
+                w.flush()?;
+                Ok(None)
+            }
+        }
+    }
+}
+
+/// Diff `cur` against the replay shadow, producing the delta JSON and
+/// advancing the shadow with replay arithmetic.  `None` when unchanged.
+fn hist_delta(shadow: &mut StreamHist, cur: &StreamHist) -> Option<Json> {
+    let dc = cur.count() - shadow.count();
+    let dnf = cur.nonfinite() - shadow.nonfinite();
+    if dc == 0 && dnf == 0 {
+        return None;
+    }
+    let bucket_deltas = |a: &BTreeMap<u16, u64>, b: &BTreeMap<u16, u64>| {
+        b.iter()
+            .filter_map(|(&idx, &n)| {
+                let d = n - a.get(&idx).copied().unwrap_or(0);
+                (d > 0).then_some((idx, d))
+            })
+            .collect::<Vec<(u16, u64)>>()
+    };
+    let pos = bucket_deltas(shadow.pos_buckets(), cur.pos_buckets());
+    let neg = bucket_deltas(shadow.neg_buckets(), cur.neg_buckets());
+    let dz = cur.zeros() - shadow.zeros();
+    let ds = cur.sum() - shadow.sum();
+    let sum_exact = shadow.sum() + ds == cur.sum();
+    let new_min = match (cur.min(), shadow.min()) {
+        (Some(c), Some(s)) if c < s => Some(c),
+        (Some(c), None) => Some(c),
+        _ => None,
+    };
+    let new_max = match (cur.max(), shadow.max()) {
+        (Some(c), Some(s)) if c > s => Some(c),
+        (Some(c), None) => Some(c),
+        _ => None,
+    };
+
+    let bucket_obj = |v: &[(u16, u64)]| {
+        Json::Obj(
+            v.iter()
+                .map(|&(idx, n)| (idx.to_string(), Json::from(n as usize)))
+                .collect(),
+        )
+    };
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+    if !pos.is_empty() {
+        fields.push(("pos", bucket_obj(&pos)));
+    }
+    if !neg.is_empty() {
+        fields.push(("neg", bucket_obj(&neg)));
+    }
+    if dz != 0 {
+        fields.push(("zeros", Json::from(dz as usize)));
+    }
+    if dnf != 0 {
+        fields.push(("nonfinite", Json::from(dnf as usize)));
+    }
+    fields.push(("count", Json::from(dc as usize)));
+    if sum_exact {
+        fields.push(("sum", Json::Num(ds)));
+    } else {
+        fields.push(("sum_abs", Json::Num(cur.sum())));
+    }
+    if let Some(mn) = new_min {
+        fields.push(("min", Json::Num(mn)));
+    }
+    if let Some(mx) = new_max {
+        fields.push(("max", Json::Num(mx)));
+    }
+
+    shadow.apply_delta(&pos, &neg, dz, dnf, dc, ds, new_min, new_max);
+    if !sum_exact {
+        shadow.set_sum(cur.sum());
+    }
+    Some(obj(fields))
+}
+
+/// One parsed snapshot line (raw JSON retained for dashboards).
+#[derive(Debug, Clone)]
+pub struct SnapshotInfo {
+    pub epoch: u64,
+    pub t_s: f64,
+    pub is_final: bool,
+    pub json: Json,
+}
+
+/// A fully replayed telemetry stream.
+#[derive(Debug, Clone)]
+pub struct ReplayedStream {
+    /// `"exact"` or `"hist"`.
+    pub mode: String,
+    pub every: u64,
+    /// The reconstructed end-of-run registry.
+    pub metrics: Metrics,
+    pub snapshots: Vec<SnapshotInfo>,
+}
+
+fn shape_err(line_no: usize, msg: &str) -> anyhow::Error {
+    anyhow::anyhow!("telemetry stream line {line_no}: {msg}")
+}
+
+/// Replay a JSONL telemetry stream, validating its shape and
+/// reconstructing the final registry by applying every delta in order.
+pub fn replay(text: &str) -> anyhow::Result<ReplayedStream> {
+    let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+    let (n0, first) = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("telemetry stream is empty"))?;
+    let header = Json::parse(first).map_err(|e| shape_err(n0 + 1, &e.to_string()))?;
+    if header.get("kind").and_then(Json::as_str) != Some("header") {
+        return Err(shape_err(n0 + 1, "first line is not a header"));
+    }
+    let v = header
+        .get("v")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| shape_err(n0 + 1, "header missing version"))?;
+    if v as u64 != STREAM_VERSION {
+        return Err(shape_err(n0 + 1, &format!("unsupported stream version {v}")));
+    }
+    let mode = header
+        .get("mode")
+        .and_then(Json::as_str)
+        .ok_or_else(|| shape_err(n0 + 1, "header missing mode"))?
+        .to_string();
+    if mode != "exact" && mode != "hist" {
+        return Err(shape_err(n0 + 1, &format!("unknown mode {mode:?}")));
+    }
+    let every = header
+        .get("every")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| shape_err(n0 + 1, "header missing every"))? as u64;
+
+    let mut metrics = if mode == "hist" {
+        Metrics::new_hist()
+    } else {
+        Metrics::new()
+    };
+    let mut hists: BTreeMap<String, StreamHist> = BTreeMap::new();
+    let mut snapshots: Vec<SnapshotInfo> = Vec::new();
+    let mut last_epoch: Option<u64> = None;
+
+    for (i, line) in lines {
+        let ln = i + 1;
+        let j = Json::parse(line).map_err(|e| shape_err(ln, &e.to_string()))?;
+        match j.get("kind").and_then(Json::as_str) {
+            Some("snapshot") => {}
+            Some(other) => return Err(shape_err(ln, &format!("unknown kind {other:?}"))),
+            None => return Err(shape_err(ln, "missing kind")),
+        }
+        let epoch = j
+            .get("epoch")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| shape_err(ln, "snapshot missing epoch"))? as u64;
+        if let Some(prev) = last_epoch {
+            if epoch < prev {
+                return Err(shape_err(ln, &format!("epoch {epoch} after {prev}")));
+            }
+        }
+        last_epoch = Some(epoch);
+        let t_s = j
+            .get("t_s")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| shape_err(ln, "snapshot missing t_s"))?;
+        let is_final = j.get("final").and_then(Json::as_bool).unwrap_or(false);
+
+        if let Some(cs) = j.get("counters") {
+            let o = cs
+                .as_obj()
+                .ok_or_else(|| shape_err(ln, "counters is not an object"))?;
+            for (k, v) in o {
+                let d = v
+                    .as_f64()
+                    .ok_or_else(|| shape_err(ln, &format!("counter {k:?} not numeric")))?;
+                metrics.inc(k, d);
+            }
+        }
+        if let Some(cs) = j.get("counters_abs") {
+            let o = cs
+                .as_obj()
+                .ok_or_else(|| shape_err(ln, "counters_abs is not an object"))?;
+            for (k, v) in o {
+                let a = v
+                    .as_f64()
+                    .ok_or_else(|| shape_err(ln, &format!("counter {k:?} not numeric")))?;
+                metrics.set_counter(k, a);
+            }
+        }
+        if let Some(ds) = j.get("dists") {
+            let o = ds
+                .as_obj()
+                .ok_or_else(|| shape_err(ln, "dists is not an object"))?;
+            for (name, entry) in o {
+                if let Some(new) = entry.get("new") {
+                    let arr = new
+                        .as_arr()
+                        .ok_or_else(|| shape_err(ln, "dist 'new' is not an array"))?;
+                    for v in arr {
+                        let x = v
+                            .as_f64()
+                            .ok_or_else(|| shape_err(ln, "dist sample not numeric"))?;
+                        metrics.observe(name, x);
+                    }
+                } else if let Some(hd) = entry.get("hist") {
+                    apply_hist_delta(hists.entry(name.clone()).or_default(), hd, ln)?;
+                } else {
+                    return Err(shape_err(
+                        ln,
+                        &format!("dist {name:?} has neither 'new' nor 'hist'"),
+                    ));
+                }
+            }
+        }
+        snapshots.push(SnapshotInfo { epoch, t_s, is_final, json: j });
+    }
+
+    for (name, h) in &hists {
+        metrics.merge_hist(name, h);
+    }
+    Ok(ReplayedStream { mode, every, metrics, snapshots })
+}
+
+fn apply_hist_delta(shadow: &mut StreamHist, hd: &Json, ln: usize) -> anyhow::Result<()> {
+    let buckets = |key: &str| -> anyhow::Result<Vec<(u16, u64)>> {
+        match hd.get(key) {
+            None => Ok(Vec::new()),
+            Some(Json::Obj(o)) => o
+                .iter()
+                .map(|(k, v)| {
+                    let idx: u16 = k
+                        .parse()
+                        .map_err(|_| shape_err(ln, &format!("bad bucket index {k:?}")))?;
+                    let n = v
+                        .as_usize()
+                        .ok_or_else(|| shape_err(ln, "bucket count not an integer"))?;
+                    Ok((idx, n as u64))
+                })
+                .collect(),
+            Some(_) => Err(shape_err(ln, &format!("hist {key:?} is not an object"))),
+        }
+    };
+    let int = |key: &str| -> anyhow::Result<u64> {
+        match hd.get(key) {
+            None => Ok(0),
+            Some(v) => v
+                .as_usize()
+                .map(|n| n as u64)
+                .ok_or_else(|| shape_err(ln, &format!("hist {key:?} not an integer"))),
+        }
+    };
+    let pos = buckets("pos")?;
+    let neg = buckets("neg")?;
+    let zeros = int("zeros")?;
+    let nonfinite = int("nonfinite")?;
+    let count = int("count")?;
+    let min = hd.get("min").and_then(Json::as_f64);
+    let max = hd.get("max").and_then(Json::as_f64);
+    let sum_delta = hd.get("sum").and_then(Json::as_f64);
+    let sum_abs = hd.get("sum_abs").and_then(Json::as_f64);
+    if sum_delta.is_none() && sum_abs.is_none() {
+        return Err(shape_err(ln, "hist delta missing sum"));
+    }
+    shadow.apply_delta(
+        &pos,
+        &neg,
+        zeros,
+        nonfinite,
+        count,
+        sum_delta.unwrap_or(0.0),
+        min,
+        max,
+    );
+    if let Some(s) = sum_abs {
+        shadow.set_sum(s);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn writer() -> StreamWriter {
+        StreamWriter::create(&StreamSpec::in_memory(), false).unwrap()
+    }
+
+    #[test]
+    fn deltas_reconstruct_final_registry_exact_mode() {
+        let mut w = writer();
+        let mut m = Metrics::new();
+        for epoch in 0..4u64 {
+            m.inc("tiles", 10.0 + epoch as f64);
+            m.inc("maybe_zero", 0.0);
+            m.observe("lat", 0.5 * (epoch + 1) as f64);
+            m.observe("lat", 1.0 / 3.0 + epoch as f64);
+            w.epoch_snapshot(epoch, epoch as f64 * 10.0, &m, &EpochGauges::default(), &[])
+                .unwrap();
+        }
+        m.inc("summary.final", 42.0);
+        w.final_snapshot(4, 40.0, &m).unwrap();
+        let text = w.finish().unwrap().unwrap().join("\n");
+        let r = replay(&text).unwrap();
+        assert_eq!(r.mode, "exact");
+        assert_eq!(
+            r.metrics.to_json().to_string_compact(),
+            m.to_json().to_string_compact()
+        );
+    }
+
+    #[test]
+    fn deltas_reconstruct_final_registry_hist_mode() {
+        let mut w = StreamWriter::create(&StreamSpec::in_memory(), true).unwrap();
+        let mut m = Metrics::new_hist();
+        for epoch in 0..5u64 {
+            m.inc("bytes", 1000.0 * (epoch + 1) as f64);
+            for k in 0..20 {
+                m.observe("lat", 0.1 + (epoch * 20 + k) as f64 * 0.37);
+            }
+            m.observe("signed", -((epoch + 1) as f64));
+            m.observe("signed", 0.0);
+            w.epoch_snapshot(epoch, epoch as f64, &m, &EpochGauges::default(), &[])
+                .unwrap();
+        }
+        w.final_snapshot(5, 5.0, &m).unwrap();
+        let text = w.finish().unwrap().unwrap().join("\n");
+        let r = replay(&text).unwrap();
+        assert_eq!(r.mode, "hist");
+        assert_eq!(
+            r.metrics.to_json().to_string_compact(),
+            m.to_json().to_string_compact()
+        );
+    }
+
+    #[test]
+    fn identical_runs_produce_identical_streams() {
+        let run = || {
+            let mut w = writer();
+            let mut m = Metrics::new();
+            for epoch in 0..3u64 {
+                m.inc("a", 1.5);
+                m.observe("d", epoch as f64 + 0.25);
+                let g = EpochGauges {
+                    sat_backlog: vec![(0, 2.0), (3, 1.0)],
+                    sat_queue: vec![(1, 4.0)],
+                    link_busy_s: vec![("0-1".into(), 0.5)],
+                    link_bytes: vec![("0-1".into(), 1024.0)],
+                    unfinished_tiles: 3.0,
+                    cue_headroom: Some(2.0),
+                };
+                w.epoch_snapshot(epoch, epoch as f64, &m, &g, &[]).unwrap();
+            }
+            w.final_snapshot(3, 3.0, &m).unwrap();
+            w.finish().unwrap().unwrap().join("\n")
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn every_filter_downsamples_but_replay_stays_exact() {
+        let spec = StreamSpec { every: 2, ..StreamSpec::in_memory() };
+        let mut w = StreamWriter::create(&spec, false).unwrap();
+        let mut m = Metrics::new();
+        for epoch in 0..5u64 {
+            m.inc("c", 1.0);
+            m.observe("d", epoch as f64);
+            w.epoch_snapshot(epoch, epoch as f64, &m, &EpochGauges::default(), &[])
+                .unwrap();
+        }
+        w.final_snapshot(5, 5.0, &m).unwrap();
+        // Epochs 0, 2, 4 emitted plus the final snapshot.
+        assert_eq!(w.snapshots(), 4);
+        let text = w.finish().unwrap().unwrap().join("\n");
+        let r = replay(&text).unwrap();
+        assert_eq!(r.every, 2);
+        assert_eq!(r.metrics.counter("c"), 5.0);
+        assert_eq!(r.metrics.samples("d"), &[0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn unchanged_metrics_emit_no_delta_sections() {
+        let mut w = writer();
+        let mut m = Metrics::new();
+        m.inc("c", 1.0);
+        w.epoch_snapshot(0, 0.0, &m, &EpochGauges::default(), &[]).unwrap();
+        w.epoch_snapshot(1, 1.0, &m, &EpochGauges::default(), &[]).unwrap();
+        let lines = w.finish().unwrap().unwrap();
+        let second = Json::parse(&lines[2]).unwrap();
+        assert!(second.get("counters").is_none(), "{}", lines[2]);
+        assert!(second.get("dists").is_none(), "{}", lines[2]);
+    }
+
+    #[test]
+    fn explicit_zero_counters_survive_replay() {
+        let mut w = writer();
+        let mut m = Metrics::new();
+        m.inc("zero", 0.0);
+        w.final_snapshot(0, 0.0, &m).unwrap();
+        let text = w.finish().unwrap().unwrap().join("\n");
+        let r = replay(&text).unwrap();
+        assert!(r.metrics.counted("zero"));
+        assert_eq!(
+            r.metrics.to_json().to_string_compact(),
+            m.to_json().to_string_compact()
+        );
+    }
+
+    #[test]
+    fn profile_section_is_opt_in() {
+        let mut w = writer();
+        let m = Metrics::new();
+        w.epoch_snapshot(0, 0.0, &m, &EpochGauges::default(), &[("sim_ms", 12.5)])
+            .unwrap();
+        let lines = w.finish().unwrap().unwrap();
+        assert!(!lines[1].contains("profile"), "{}", lines[1]);
+
+        let spec = StreamSpec { profile: true, ..StreamSpec::in_memory() };
+        let mut w = StreamWriter::create(&spec, false).unwrap();
+        w.epoch_snapshot(0, 0.0, &m, &EpochGauges::default(), &[("sim_ms", 12.5)])
+            .unwrap();
+        let lines = w.finish().unwrap().unwrap();
+        assert!(lines[1].contains("\"profile\":{\"sim_ms\":12.5}"), "{}", lines[1]);
+    }
+
+    #[test]
+    fn replay_rejects_malformed_streams() {
+        assert!(replay("").is_err());
+        assert!(replay("{\"kind\":\"snapshot\"}").is_err(), "header required first");
+        let hdr = "{\"every\":1,\"kind\":\"header\",\"mode\":\"exact\",\"profile\":false,\"v\":1}";
+        assert!(replay(&format!("{hdr}\nnot json")).is_err());
+        assert!(replay(&format!("{hdr}\n{{\"kind\":\"mystery\"}}")).is_err());
+        assert!(
+            replay(&format!("{hdr}\n{{\"kind\":\"snapshot\",\"t_s\":0}}")).is_err(),
+            "epoch required"
+        );
+        assert!(replay(&format!(
+            "{hdr}\n{{\"epoch\":0,\"kind\":\"snapshot\",\"t_s\":0,\"counters\":{{\"x\":\"y\"}}}}"
+        ))
+        .is_err());
+        // Epochs must be non-decreasing.
+        assert!(replay(&format!(
+            "{hdr}\n{{\"epoch\":2,\"kind\":\"snapshot\",\"t_s\":0}}\n\
+             {{\"epoch\":1,\"kind\":\"snapshot\",\"t_s\":0}}"
+        ))
+        .is_err());
+        // A well-formed minimal stream passes.
+        let ok = replay(&format!("{hdr}\n{{\"epoch\":0,\"kind\":\"snapshot\",\"t_s\":0}}"));
+        assert!(ok.is_ok());
+    }
+}

@@ -54,6 +54,7 @@ use crate::scenario::{
     ScenarioError, ScenarioReport,
 };
 use crate::sim;
+use crate::telemetry::stream::{StreamSpec, StreamWriter};
 use crate::telemetry::Metrics;
 use crate::trace::{TraceKind, TraceLog, TraceSpec, NO_PARENT};
 use crate::util::json::{obj, Json};
@@ -297,6 +298,10 @@ pub struct TipCueReport {
     /// via [`TipCueOrchestrator::with_trace`]: the shared simulation's
     /// events plus the cue lifecycle (admit → inject → complete/miss).
     pub trace: Option<TraceLog>,
+    /// Telemetry delta-stream lines when an in-memory sink was requested
+    /// via [`TipCueOrchestrator::with_telemetry`]; `None` for file sinks
+    /// and untelemetered runs.
+    pub telemetry: Option<Vec<String>>,
     pub metrics: Metrics,
 }
 
@@ -392,6 +397,8 @@ pub struct TipCueOrchestrator {
     spec: TipCueSpec,
     kind: BackendKind,
     trace: Option<TraceSpec>,
+    telemetry: Option<StreamSpec>,
+    hist_metrics: bool,
 }
 
 impl TipCueOrchestrator {
@@ -403,6 +410,8 @@ impl TipCueOrchestrator {
             scenario: scenario.clone(),
             kind: BackendKind::OrbitChain,
             trace: None,
+            telemetry: None,
+            hist_metrics: false,
         }
     }
 
@@ -413,6 +422,22 @@ impl TipCueOrchestrator {
     /// tests).
     pub fn with_trace(mut self, spec: TraceSpec) -> Self {
         self.trace = Some(spec);
+        self
+    }
+
+    /// Stream telemetry snapshots ([`crate::telemetry::stream`]): the
+    /// closed loop has a single simulation, so the stream carries one
+    /// epoch snapshot (gauges + cue-reserve headroom) and the final
+    /// absolute-completing snapshot.  Never changes an outcome.
+    pub fn with_telemetry(mut self, spec: StreamSpec) -> Self {
+        self.telemetry = Some(spec);
+        self
+    }
+
+    /// Back the metric registry with bounded-memory streaming histograms
+    /// ([`crate::telemetry::hist`]) instead of exact sample vectors.
+    pub fn with_hist_metrics(mut self, on: bool) -> Self {
+        self.hist_metrics = on;
         self
     }
 
@@ -586,6 +611,7 @@ impl TipCueOrchestrator {
         let mut cfg = orch.sim_config().clone();
         cfg.injections = injections;
         cfg.trace = self.trace;
+        cfg.hist_metrics = self.hist_metrics;
         let orch = orch.with_sim_config(cfg);
         let t0 = Instant::now();
         let rep = orch.simulate(&prepared);
@@ -669,6 +695,25 @@ impl TipCueOrchestrator {
             Some(r) => (r.unrouted_tiles, r.isl_bytes_per_frame),
             None => ((c.tiles_per_frame as f64 - routed).max(0.0), 0.0),
         };
+        // Telemetry: the single shared simulation is one "epoch" — emit
+        // its snapshot with the gauges and headroom, then the final
+        // absolute-completing snapshot (all metric writes above are done).
+        let telemetry = match &self.telemetry {
+            None => None,
+            Some(spec) => {
+                let horizon = frames as f64 * df;
+                let mut w = StreamWriter::create(spec, self.hist_metrics)
+                    .map_err(|e| ScenarioError::Telemetry(e.to_string()))?;
+                let mut gauges = rep.gauges.clone();
+                gauges.cue_headroom = Some(budget_rate * horizon - admitted as f64);
+                w.epoch_snapshot(0, horizon, &metrics, &gauges, &[("sim_ms", sim_ms)])
+                    .map_err(|e| ScenarioError::Telemetry(e.to_string()))?;
+                w.final_snapshot(1, horizon, &metrics)
+                    .map_err(|e| ScenarioError::Telemetry(e.to_string()))?;
+                w.finish().map_err(|e| ScenarioError::Telemetry(e.to_string()))?
+            }
+        };
+
         let mut notes = prepared.notes.clone();
         if self.scenario.dynamic.is_some() {
             notes.push(
@@ -703,6 +748,7 @@ impl TipCueOrchestrator {
             sim_ms,
             notes,
             trace: trace_log,
+            telemetry,
             metrics,
         })
     }

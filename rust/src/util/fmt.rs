@@ -1,0 +1,48 @@
+//! Canonical number formatting shared by every exporter.
+//!
+//! The JSON serializer, the metric reports and the streaming telemetry
+//! writer must all render a given `f64` to the *same* bytes — the
+//! byte-identity pins (trace journals, telemetry streams, metric exports)
+//! depend on it.  One rule, one place: integral values within `i64`'s
+//! exactly-representable range print without a fractional part, everything
+//! else uses Rust's shortest round-trip representation.
+
+/// Format `n` deterministically: `5.0` → `"5"`, `5.25` → `"5.25"`.
+///
+/// Non-finite values fall back to the `Display` form (`"NaN"`, `"inf"`);
+/// callers emitting strict JSON should keep those out of the tree.
+pub fn fmt_f64(n: f64) -> String {
+    if n.fract() == 0.0 && n.abs() < 1e15 {
+        format!("{}", n as i64)
+    } else {
+        format!("{n}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integral_values_drop_the_fraction() {
+        assert_eq!(fmt_f64(5.0), "5");
+        assert_eq!(fmt_f64(-3.0), "-3");
+        assert_eq!(fmt_f64(0.0), "0");
+    }
+
+    #[test]
+    fn fractional_values_round_trip() {
+        assert_eq!(fmt_f64(5.25), "5.25");
+        assert_eq!(fmt_f64(0.1), "0.1");
+        let v: f64 = "2.8000000000000003".parse().unwrap();
+        assert_eq!(fmt_f64(v).parse::<f64>().unwrap(), v);
+    }
+
+    #[test]
+    fn huge_integral_values_keep_precision() {
+        // Past 1e15 `as i64` truncation could disagree with the float's
+        // actual value; those take the round-trip path instead.
+        let v = 1e18;
+        assert_eq!(fmt_f64(v).parse::<f64>().unwrap(), v);
+    }
+}

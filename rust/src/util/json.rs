@@ -9,6 +9,8 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+use crate::util::fmt::fmt_f64 as fmt_num;
+
 /// A JSON value.
 ///
 /// Object keys are kept in a `BTreeMap` for deterministic ordering; numbers
@@ -185,15 +187,6 @@ impl From<String> for Json {
 impl From<bool> for Json {
     fn from(b: bool) -> Self {
         Json::Bool(b)
-    }
-}
-
-fn fmt_num(n: f64) -> String {
-    if n.fract() == 0.0 && n.abs() < 1e15 {
-        format!("{}", n as i64)
-    } else {
-        // Shortest round-trip representation Rust gives us.
-        format!("{n}")
     }
 }
 

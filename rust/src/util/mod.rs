@@ -5,6 +5,8 @@
 //! provides the small, well-tested replacements the rest of the crate builds
 //! on:
 //!
+//! * [`fmt`] — the canonical `f64` → text rule shared by every exporter
+//!   (JSON serializer, metric reports, telemetry streams).
 //! * [`json`] — a JSON value model, parser and serializer (config files,
 //!   the artifact manifest, metric reports).
 //! * [`rng`] — a SplitMix64 PRNG with uniform/normal/choice helpers.
@@ -13,6 +15,7 @@
 //! * [`testkit`] — a miniature property-testing harness (seed-reporting
 //!   randomized checks) standing in for `proptest`.
 
+pub mod fmt;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,281 @@
+//! Integration: the mission observatory end to end — the CLI acceptance
+//! scenario (`mission --seed 7 --telemetry out.jsonl` twice gives
+//! byte-identical streams), the replay contract (folding the per-epoch
+//! deltas reconstructs the end-of-run registry `Metrics::to_json`
+//! byte-for-byte, at any snapshot density), the histogram backend's
+//! drop-in guarantee (identical counters and sim outcomes vs the exact
+//! default), telemetry across all three orchestrators, and the `report`
+//! dashboard folding a real stream.
+
+use orbitchain::config::Scenario;
+use orbitchain::dynamic::{DynamicSpec, EpochOrchestrator, Event, EventKind, Timeline};
+use orbitchain::mission::{MissionOrchestrator, MissionReport, MissionSpec};
+use orbitchain::report::{self, ReportOptions};
+use orbitchain::telemetry::stream::{self, StreamSpec};
+use orbitchain::tipcue::{TipCueOrchestrator, TipCueSpec};
+use orbitchain::util::json::Json;
+
+fn mission_spec(epochs: usize, detection_rate: f64) -> MissionSpec {
+    MissionSpec {
+        dynamic: DynamicSpec {
+            epochs,
+            frames_per_epoch: 2,
+            sat_mtbf_s: 0.0,
+            link_mtbf_s: 0.0,
+            burst_mtbf_s: 0.0,
+            ..DynamicSpec::default()
+        },
+        detection_rate,
+        ..MissionSpec::default()
+    }
+}
+
+fn acceptance_timeline() -> Timeline {
+    Timeline::declared(vec![
+        Event { t_s: 25.0, kind: EventKind::SatFail { sat: 1 } },
+        Event { t_s: 55.0, kind: EventKind::SatRecover { sat: 1 } },
+    ])
+}
+
+fn run_mission(spec: StreamSpec) -> MissionReport {
+    let s = Scenario::jetson().with_seed(7).with_mission(mission_spec(8, 0.3));
+    MissionOrchestrator::new(&s)
+        .with_timeline(acceptance_timeline())
+        .with_telemetry(spec)
+        .run()
+        .expect("telemetered mission runs")
+}
+
+fn stream_text(rep: &MissionReport) -> String {
+    rep.telemetry
+        .as_ref()
+        .expect("in-memory telemetry lines on the report")
+        .join("\n")
+}
+
+#[test]
+fn acceptance_seed7_stream_is_byte_deterministic() {
+    // `mission --seed 7 --telemetry out.jsonl` run twice must produce
+    // byte-identical streams: every snapshot line carries only sim-time
+    // stamps and deterministically formatted deltas.
+    let a = stream_text(&run_mission(StreamSpec::in_memory()));
+    let b = stream_text(&run_mission(StreamSpec::in_memory()));
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "same seed must give a byte-identical telemetry stream");
+    let header = a.lines().next().expect("stream has a header");
+    assert!(header.contains("\"kind\":\"header\""), "{header}");
+    assert!(header.contains("\"mode\":\"exact\""), "{header}");
+}
+
+#[test]
+fn replaying_deltas_reconstructs_final_metrics_exactly() {
+    // Folding the per-epoch deltas back together must land on the run's
+    // end-of-run registry byte-for-byte — the stream loses nothing.
+    let rep = run_mission(StreamSpec::in_memory());
+    let replayed = stream::replay(&stream_text(&rep)).expect("stream replays");
+    assert_eq!(
+        replayed.metrics.to_json().to_string_compact(),
+        rep.metrics.to_json().to_string_compact(),
+        "replayed registry must equal the run's final registry"
+    );
+    // 8 epochs at density 1, plus the always-flushed final snapshot.
+    assert_eq!(replayed.snapshots.len(), 9);
+    let last = replayed.snapshots.last().unwrap();
+    assert!(last.is_final);
+    assert!(replayed.snapshots[..8].iter().all(|s| !s.is_final));
+    // Epoch snapshots carry the per-epoch gauges, including the mission
+    // loop's cue-reserve headroom.
+    let first = &replayed.snapshots[0];
+    let gauges = first.json.get("gauges").expect("epoch snapshots carry gauges");
+    assert!(gauges.get("unfinished").is_some());
+    assert!(gauges.get("cue_headroom").is_some());
+}
+
+#[test]
+fn sparse_snapshot_density_still_replays_exactly() {
+    // At `--telemetry out.jsonl:3` deltas accumulate across the skipped
+    // epochs; the final snapshot always flushes, so replay stays exact.
+    let mut spec = StreamSpec::in_memory();
+    spec.every = 3;
+    let rep = run_mission(spec);
+    let dense = run_mission(StreamSpec::in_memory());
+    let replayed = stream::replay(&stream_text(&rep)).expect("sparse stream replays");
+    assert!(replayed.snapshots.len() < 9, "density 3 must emit fewer snapshots");
+    assert_eq!(
+        replayed.metrics.to_json().to_string_compact(),
+        rep.metrics.to_json().to_string_compact()
+    );
+    // Both densities reconstruct the same registry.
+    assert_eq!(
+        replayed.metrics.to_json().to_string_compact(),
+        dense.metrics.to_json().to_string_compact()
+    );
+}
+
+#[test]
+fn hist_backend_matches_exact_mode_counters_and_outcomes() {
+    // The bounded-memory histogram registry is a drop-in backend: the sim
+    // evolves identically (metrics are write-only for the event loop), so
+    // every counter and outcome must match the exact-sample default
+    // bit-for-bit; only dist quantiles become bucket-approximate.
+    let s = Scenario::jetson().with_seed(7).with_mission(mission_spec(8, 0.3));
+    let exact = MissionOrchestrator::new(&s)
+        .with_timeline(acceptance_timeline())
+        .run()
+        .expect("exact-mode mission runs");
+    let hist = MissionOrchestrator::new(&s)
+        .with_timeline(acceptance_timeline())
+        .with_hist_metrics(true)
+        .run()
+        .expect("hist-mode mission runs");
+
+    assert_eq!(hist.replans, exact.replans);
+    assert_eq!(hist.tips, exact.tips);
+    assert_eq!(hist.admitted, exact.admitted);
+    assert_eq!(hist.completed, exact.completed);
+    assert_eq!(hist.completion_ratio, exact.completion_ratio);
+    assert_eq!(hist.response_latency_s, exact.response_latency_s);
+
+    let counters = |m: &orbitchain::telemetry::Metrics| -> Vec<(String, f64)> {
+        m.counters_iter().map(|(k, v)| (k.to_string(), v)).collect()
+    };
+    assert_eq!(counters(&hist.metrics), counters(&exact.metrics));
+    // Same dist registry: identical names, counts, and (arrival-order
+    // accumulated) sums — so identical means.
+    let names = |m: &orbitchain::telemetry::Metrics| -> Vec<String> {
+        m.dists_iter().map(|(k, _)| k.to_string()).collect()
+    };
+    assert_eq!(names(&hist.metrics), names(&exact.metrics));
+    for (name, d) in hist.metrics.dists_iter() {
+        let e = exact.metrics.dist(name).unwrap();
+        assert_eq!(d.count(), e.count(), "{name}");
+        assert_eq!(d.mean(), e.mean(), "{name}");
+    }
+}
+
+#[test]
+fn hist_mode_stream_is_deterministic_and_replays() {
+    let mut spec = StreamSpec::in_memory();
+    spec.every = 2;
+    let s = Scenario::jetson().with_seed(7).with_mission(mission_spec(6, 0.3));
+    let run = || {
+        MissionOrchestrator::new(&s)
+            .with_telemetry(spec.clone())
+            .with_hist_metrics(true)
+            .run()
+            .expect("hist-mode telemetered mission runs")
+    };
+    let rep = run();
+    let text = stream_text(&rep);
+    assert_eq!(text, stream_text(&run()));
+    assert!(text.lines().next().unwrap().contains("\"mode\":\"hist\""));
+    let replayed = stream::replay(&text).expect("hist stream replays");
+    assert_eq!(
+        replayed.metrics.to_json().to_string_compact(),
+        rep.metrics.to_json().to_string_compact()
+    );
+}
+
+#[test]
+fn dynamic_loop_streams_and_replays() {
+    let spec = DynamicSpec {
+        epochs: 6,
+        frames_per_epoch: 2,
+        sat_mtbf_s: 0.0,
+        link_mtbf_s: 0.0,
+        burst_mtbf_s: 0.0,
+        ..DynamicSpec::default()
+    };
+    let s = Scenario::jetson().with_seed(7).with_dynamic(spec);
+    let run = || {
+        EpochOrchestrator::new(&s)
+            .with_telemetry(StreamSpec::in_memory())
+            .run()
+            .expect("telemetered dynamic loop runs")
+    };
+    let rep = run();
+    let text = rep.telemetry.as_ref().expect("in-memory lines").join("\n");
+    assert_eq!(text, run().telemetry.unwrap().join("\n"));
+    let replayed = stream::replay(&text).expect("dynamic stream replays");
+    assert_eq!(replayed.snapshots.len(), 7);
+    assert_eq!(
+        replayed.metrics.to_json().to_string_compact(),
+        rep.metrics.to_json().to_string_compact()
+    );
+    // The phase self-profiler rides the stream: the epoch loop plans
+    // (simplex pivots) and drains events every epoch.
+    let has_phases = replayed
+        .snapshots
+        .iter()
+        .any(|sn| sn.json.get("phases").and_then(Json::as_obj).is_some());
+    assert!(has_phases, "snapshots must carry phase work-unit deltas");
+}
+
+#[test]
+fn tipcue_loop_streams_and_replays() {
+    let s = Scenario::jetson()
+        .with_seed(7)
+        .with_tipcue(TipCueSpec { tip_rate_per_frame: 0.5, ..TipCueSpec::default() });
+    let run = || {
+        TipCueOrchestrator::new(&s)
+            .with_telemetry(StreamSpec::in_memory())
+            .run()
+            .expect("telemetered tip-and-cue runs")
+    };
+    let rep = run();
+    let text = rep.telemetry.as_ref().expect("in-memory lines").join("\n");
+    assert_eq!(text, run().telemetry.unwrap().join("\n"));
+    let replayed = stream::replay(&text).expect("tipcue stream replays");
+    assert_eq!(
+        replayed.metrics.to_json().to_string_compact(),
+        rep.metrics.to_json().to_string_compact()
+    );
+    // The single-horizon loop emits one epoch snapshot (with cue-reserve
+    // headroom) plus the final flush.
+    assert_eq!(replayed.snapshots.len(), 2);
+    let headroom = replayed.snapshots[0]
+        .json
+        .get("gauges")
+        .and_then(|g| g.get("cue_headroom"));
+    assert!(headroom.is_some(), "tip-and-cue snapshots carry reserve headroom");
+}
+
+#[test]
+fn telemetry_on_or_off_does_not_change_outcomes() {
+    // The stream writer only observes: outcomes and the final registry
+    // must be identical with and without telemetry.
+    let s = Scenario::jetson().with_seed(7).with_mission(mission_spec(6, 0.3));
+    let plain = MissionOrchestrator::new(&s).run().expect("plain mission runs");
+    let streamed = MissionOrchestrator::new(&s)
+        .with_telemetry(StreamSpec::in_memory())
+        .run()
+        .expect("telemetered mission runs");
+    assert!(plain.telemetry.is_none());
+    assert!(streamed.telemetry.is_some());
+    assert_eq!(streamed.completion_ratio, plain.completion_ratio);
+    assert_eq!(streamed.response_latency_s, plain.response_latency_s);
+    assert_eq!(
+        streamed.metrics.to_json().to_string_compact(),
+        plain.metrics.to_json().to_string_compact()
+    );
+}
+
+#[test]
+fn report_dashboard_folds_a_real_mission_stream() {
+    let rep = run_mission(StreamSpec::in_memory());
+    let text = stream_text(&rep);
+    let dash = report::render(&text, None, &ReportOptions::default())
+        .expect("dashboard renders");
+    assert!(dash.contains("mission observatory"), "{dash}");
+    assert!(dash.contains("epoch timeline"), "{dash}");
+    assert!(dash.contains("hottest satellites"), "{dash}");
+    // Untraced run: the breakdown section points at --trace.
+    assert!(dash.contains("n/a (run with --trace"), "{dash}");
+
+    // JSON mode emits a machine-readable dashboard with the same shape.
+    let js = report::render(&text, None, &ReportOptions { top_k: 3, json: true })
+        .expect("json dashboard renders");
+    let j = Json::parse(&js).expect("dashboard json parses");
+    assert_eq!(j.get("snapshots").and_then(Json::as_usize), Some(9));
+    assert!(j.get("timeline").and_then(Json::as_arr).map(|a| a.len()) == Some(9));
+}
