@@ -76,6 +76,16 @@ pub struct Scenario {
     /// per-cue routing and two-class ISL queues.  Takes precedence over
     /// the `dynamic` and `tipcue` extensions in sweeps.
     pub mission: Option<MissionSpec>,
+    /// Unreliable ISL transport (`--loss`): per-attempt loss probability.
+    /// 0 (the default) keeps the transport reliable and the ARQ path
+    /// fully inert.  Sim-only — excluded from [`BuildKey`].
+    pub loss_p: f64,
+    /// ARQ attempt budget per hop when `loss_p > 0`; 1 disables ARQ
+    /// (every loss exhausts immediately).  Sim-only.
+    pub arq_max_attempts: usize,
+    /// Exhaustion policy name: `"drop"`, `"reroute"` or `"degrade"`
+    /// ([`crate::sim::DegradePolicy`]).  Sim-only.
+    pub loss_policy: String,
 }
 
 impl Scenario {
@@ -97,6 +107,9 @@ impl Scenario {
             dynamic: None,
             tipcue: None,
             mission: None,
+            loss_p: 0.0,
+            arq_max_attempts: 4,
+            loss_policy: "drop".into(),
         }
     }
 
@@ -118,6 +131,9 @@ impl Scenario {
             dynamic: None,
             tipcue: None,
             mission: None,
+            loss_p: 0.0,
+            arq_max_attempts: 4,
+            loss_policy: "drop".into(),
         }
     }
 
@@ -202,6 +218,45 @@ impl Scenario {
         self
     }
 
+    /// Set the unreliable-transport loss probability (`--loss`).
+    pub fn with_loss(mut self, loss_p: f64) -> Self {
+        self.loss_p = loss_p;
+        self
+    }
+
+    /// Set the ARQ attempt budget (1 disables ARQ).
+    pub fn with_arq_attempts(mut self, max_attempts: usize) -> Self {
+        self.arq_max_attempts = max_attempts.max(1);
+        self
+    }
+
+    /// Set the retry-exhaustion policy by name: `"drop"`, `"reroute"`,
+    /// `"degrade"`.
+    pub fn with_loss_policy(mut self, policy: impl Into<String>) -> Self {
+        self.loss_policy = policy.into();
+        self
+    }
+
+    /// The scenario's unreliable-transport model for [`SimConfig::loss`]
+    /// — `None` when `loss_p` is 0, keeping the retry path fully inert.
+    ///
+    /// [`SimConfig::loss`]: crate::sim::SimConfig::loss
+    pub fn loss_model(&self) -> Option<crate::sim::LossModel> {
+        if self.loss_p <= 0.0 {
+            return None;
+        }
+        Some(crate::sim::LossModel {
+            loss_p: self.loss_p,
+            max_attempts: self.arq_max_attempts.max(1) as u32,
+            policy: match self.loss_policy.as_str() {
+                "reroute" => crate::sim::DegradePolicy::Reroute,
+                "degrade" => crate::sim::DegradePolicy::DegradeQuality,
+                _ => crate::sim::DegradePolicy::Drop,
+            },
+            ..Default::default()
+        })
+    }
+
     /// Build the concrete experiment inputs.
     pub fn build(&self) -> (Workflow, ProfileDb, Constellation) {
         let wf = workflow::flood_prefix(self.workflow_size, self.delta);
@@ -276,6 +331,7 @@ impl Scenario {
             drain_s: 0.0,
             seed: self.seed,
             isl_rate_bps: self.isl_rate_bps,
+            loss: self.loss_model(),
             ..Default::default()
         }
     }
@@ -321,6 +377,9 @@ impl Scenario {
                 "mission",
                 self.mission.as_ref().map(MissionSpec::to_json).unwrap_or(Json::Null),
             ),
+            ("loss_p", Json::Num(self.loss_p)),
+            ("arq_max_attempts", Json::from(self.arq_max_attempts)),
+            ("loss_policy", Json::from(self.loss_policy.clone())),
         ])
     }
 
@@ -369,6 +428,13 @@ impl Scenario {
                 Some(Json::Null) | None => None,
                 Some(m) => Some(MissionSpec::from_json(m)),
             },
+            loss_p: get_num("loss_p", base.loss_p),
+            arq_max_attempts: get_usize("arq_max_attempts", base.arq_max_attempts),
+            loss_policy: j
+                .get("loss_policy")
+                .and_then(Json::as_str)
+                .unwrap_or(&base.loss_policy)
+                .to_string(),
         })
     }
 }
@@ -459,10 +525,37 @@ mod tests {
     }
 
     #[test]
+    fn json_roundtrip_with_loss_knobs() {
+        let s = Scenario::jetson()
+            .with_loss(0.05)
+            .with_arq_attempts(6)
+            .with_loss_policy("degrade");
+        let back = Scenario::from_json(&s.to_json()).unwrap();
+        assert_eq!(s, back);
+        let lm = back.loss_model().unwrap();
+        assert_eq!(lm.loss_p, 0.05);
+        assert_eq!(lm.max_attempts, 6);
+        assert_eq!(lm.policy, crate::sim::DegradePolicy::DegradeQuality);
+        // Zero loss maps to a fully-inert None, not a zero-probability
+        // model — the sim's reliable fast path stays branch-free.
+        assert!(Scenario::jetson().loss_model().is_none());
+        assert_eq!(
+            Scenario::jetson().with_loss(0.1).loss_model().unwrap().policy,
+            crate::sim::DegradePolicy::Drop
+        );
+    }
+
+    #[test]
     fn build_key_identifies_shared_builds() {
         let a = Scenario::jetson().with_frames(3).with_seed(1);
         let b = Scenario::jetson().with_frames(9).with_seed(2).with_isl_rate(5e3);
         assert_eq!(a.build_key(), b.build_key(), "sim-only params share a build");
+        // Loss knobs are sim-only: two scenarios differing only in them
+        // still share one build (the constellation triple is unaffected).
+        assert_eq!(
+            a.build_key(),
+            a.clone().with_loss(0.2).with_arq_attempts(2).build_key()
+        );
         assert_ne!(a.build_key(), Scenario::jetson().with_workflow_size(2).build_key());
         assert_ne!(a.build_key(), Scenario::rpi().build_key());
         let (wf, db, c) = a.build_shared();

@@ -43,6 +43,19 @@ pub enum EventKind {
     /// deadline-bound tasks raised by a detection elsewhere join the next
     /// epoch's workload (constellation health is unaffected).
     CueArrival { tiles: usize },
+    /// Chaos: the undirected link between sats `link` and `link + 1`
+    /// suffers elevated transfer loss (`add_p` added to the base loss
+    /// probability) for `duration_s` seconds.  Health is unaffected — the
+    /// link stays routable; the ARQ layer absorbs the extra retries.
+    LinkLossRate { link: usize, add_p: f64, duration_s: f64 },
+    /// Chaos: the link flaps — every transfer attempt inside the window is
+    /// forced to fail, so traffic rides through on retransmissions that
+    /// land after the window closes (or degrades per policy).
+    LinkFlap { link: usize, duration_s: f64 },
+    /// Chaos: the ground station is unavailable for `duration_s` seconds;
+    /// tiles that finish inside the window are held on the terminal
+    /// satellite and only count as delivered once the outage lifts.
+    StationOutage { duration_s: f64 },
 }
 
 impl EventKind {
@@ -58,6 +71,9 @@ impl EventKind {
             EventKind::AreaLeave => 6,
             EventKind::AreaEnter => 7,
             EventKind::CueArrival { .. } => 8,
+            EventKind::LinkLossRate { .. } => 9,
+            EventKind::LinkFlap { .. } => 10,
+            EventKind::StationOutage { .. } => 11,
         }
     }
 
@@ -72,6 +88,9 @@ impl EventKind {
             EventKind::AreaLeave => "area_leave",
             EventKind::AreaEnter => "area_enter",
             EventKind::CueArrival { .. } => "cue_arrival",
+            EventKind::LinkLossRate { .. } => "link_loss_rate",
+            EventKind::LinkFlap { .. } => "link_flap",
+            EventKind::StationOutage { .. } => "station_outage",
         }
     }
 }
@@ -91,9 +110,33 @@ impl std::fmt::Display for EventKind {
                 write!(f, "cue arrival ({tiles} follow-up tile{})",
                     if *tiles == 1 { "" } else { "s" })
             }
+            EventKind::LinkLossRate { link, add_p, duration_s } => {
+                write!(f, "link {link}\u{2194}{} loss +{add_p} for {duration_s}s", link + 1)
+            }
+            EventKind::LinkFlap { link, duration_s } => {
+                write!(f, "link {link}\u{2194}{} flapping for {duration_s}s", link + 1)
+            }
+            EventKind::StationOutage { duration_s } => {
+                write!(f, "ground station outage for {duration_s}s")
+            }
         }
     }
 }
+
+/// Error returned by [`Timeline::from_json`] when an event row carries a
+/// `"kind"` string no variant matches.  A named type (rather than a bare
+/// message) so callers and tests can assert on the rejection instead of the
+/// parser silently skipping the row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnknownEventKind(pub String);
+
+impl std::fmt::Display for UnknownEventKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "unknown event kind {:?}", self.0)
+    }
+}
+
+impl std::error::Error for UnknownEventKind {}
 
 /// A timestamped constellation event.
 #[derive(Debug, Clone, PartialEq)]
@@ -154,6 +197,17 @@ pub struct DynamicSpec {
     /// ride-through baseline: the epoch loop still applies faults, but the
     /// initial tables are kept for the whole mission).
     pub replan: bool,
+    /// Mean time between per-link elevated-loss chaos windows, s
+    /// (exponential); ≤ 0 disables the loss-rate chaos family.
+    pub chaos_loss_mtbf_s: f64,
+    /// Mean time between per-link flap chaos windows, s; ≤ 0 disables.
+    pub chaos_flap_mtbf_s: f64,
+    /// Mean time between ground-station outage windows, s; ≤ 0 disables.
+    pub chaos_outage_mtbf_s: f64,
+    /// Duration of each chaos window, s.
+    pub chaos_window_s: f64,
+    /// Loss probability added during a [`EventKind::LinkLossRate`] window.
+    pub chaos_loss_add_p: f64,
 }
 
 impl Default for DynamicSpec {
@@ -176,6 +230,11 @@ impl Default for DynamicSpec {
             cue_mtbt_s: 0.0,
             cue_deadline_s: 30.0,
             replan: true,
+            chaos_loss_mtbf_s: 0.0,
+            chaos_flap_mtbf_s: 0.0,
+            chaos_outage_mtbf_s: 0.0,
+            chaos_window_s: 30.0,
+            chaos_loss_add_p: 0.25,
         }
     }
 }
@@ -189,6 +248,14 @@ impl DynamicSpec {
     /// Mission horizon in seconds for a frame deadline `df`.
     pub fn horizon_s(&self, df: f64) -> f64 {
         self.epochs as f64 * self.epoch_s(df)
+    }
+
+    /// Whether any chaos family (loss windows, flaps, station outages) is
+    /// enabled.
+    pub fn chaos_enabled(&self) -> bool {
+        self.chaos_loss_mtbf_s > 0.0
+            || self.chaos_flap_mtbf_s > 0.0
+            || self.chaos_outage_mtbf_s > 0.0
     }
 
     pub fn to_json(&self) -> Json {
@@ -210,6 +277,11 @@ impl DynamicSpec {
             ("cue_mtbt_s", Json::Num(self.cue_mtbt_s)),
             ("cue_deadline_s", Json::Num(self.cue_deadline_s)),
             ("replan", Json::from(self.replan)),
+            ("chaos_loss_mtbf_s", Json::Num(self.chaos_loss_mtbf_s)),
+            ("chaos_flap_mtbf_s", Json::Num(self.chaos_flap_mtbf_s)),
+            ("chaos_outage_mtbf_s", Json::Num(self.chaos_outage_mtbf_s)),
+            ("chaos_window_s", Json::Num(self.chaos_window_s)),
+            ("chaos_loss_add_p", Json::Num(self.chaos_loss_add_p)),
         ])
     }
 
@@ -236,6 +308,11 @@ impl DynamicSpec {
             cue_mtbt_s: num("cue_mtbt_s", d.cue_mtbt_s),
             cue_deadline_s: num("cue_deadline_s", d.cue_deadline_s),
             replan: b("replan", d.replan),
+            chaos_loss_mtbf_s: num("chaos_loss_mtbf_s", d.chaos_loss_mtbf_s),
+            chaos_flap_mtbf_s: num("chaos_flap_mtbf_s", d.chaos_flap_mtbf_s),
+            chaos_outage_mtbf_s: num("chaos_outage_mtbf_s", d.chaos_outage_mtbf_s),
+            chaos_window_s: num("chaos_window_s", d.chaos_window_s),
+            chaos_loss_add_p: num("chaos_loss_add_p", d.chaos_loss_add_p),
         }
     }
 }
@@ -363,6 +440,59 @@ impl Timeline {
             }
         }
 
+        // Chaos families, appended after every pre-existing fork so turning
+        // chaos on never shifts the fault, burst or cue draws.  Each window
+        // lasts `chaos_window_s`; the next arrival is drawn from the window
+        // end so windows of one family on one link never overlap.
+        for link in 0..c.n_sats.saturating_sub(1) {
+            let mut r = root.fork();
+            if spec.chaos_loss_mtbf_s <= 0.0 {
+                continue;
+            }
+            let w = spec.chaos_window_s.max(1e-6);
+            let mut t = exp_sample(&mut r, spec.chaos_loss_mtbf_s);
+            while t < horizon_s {
+                events.push(Event {
+                    t_s: t,
+                    kind: EventKind::LinkLossRate {
+                        link,
+                        add_p: spec.chaos_loss_add_p,
+                        duration_s: w,
+                    },
+                });
+                t += w + exp_sample(&mut r, spec.chaos_loss_mtbf_s);
+            }
+        }
+        for link in 0..c.n_sats.saturating_sub(1) {
+            let mut r = root.fork();
+            if spec.chaos_flap_mtbf_s <= 0.0 {
+                continue;
+            }
+            let w = spec.chaos_window_s.max(1e-6);
+            let mut t = exp_sample(&mut r, spec.chaos_flap_mtbf_s);
+            while t < horizon_s {
+                events.push(Event {
+                    t_s: t,
+                    kind: EventKind::LinkFlap { link, duration_s: w },
+                });
+                t += w + exp_sample(&mut r, spec.chaos_flap_mtbf_s);
+            }
+        }
+        {
+            let mut r = root.fork();
+            if spec.chaos_outage_mtbf_s > 0.0 {
+                let w = spec.chaos_window_s.max(1e-6);
+                let mut t = exp_sample(&mut r, spec.chaos_outage_mtbf_s);
+                while t < horizon_s {
+                    events.push(Event {
+                        t_s: t,
+                        kind: EventKind::StationOutage { duration_s: w },
+                    });
+                    t += w + exp_sample(&mut r, spec.chaos_outage_mtbf_s);
+                }
+            }
+        }
+
         // Observation-area visibility from the orbit geometry: the area is
         // anchored at the constellation's mid-horizon sub-satellite point,
         // so a pass occurs within the mission window; sensing is possible
@@ -416,6 +546,18 @@ impl Timeline {
                     EventKind::CueArrival { tiles } => {
                         fields.push(("tiles", Json::from(*tiles)));
                     }
+                    EventKind::LinkLossRate { link, add_p, duration_s } => {
+                        fields.push(("link", Json::from(*link)));
+                        fields.push(("add_p", Json::Num(*add_p)));
+                        fields.push(("duration_s", Json::Num(*duration_s)));
+                    }
+                    EventKind::LinkFlap { link, duration_s } => {
+                        fields.push(("link", Json::from(*link)));
+                        fields.push(("duration_s", Json::Num(*duration_s)));
+                    }
+                    EventKind::StationOutage { duration_s } => {
+                        fields.push(("duration_s", Json::Num(*duration_s)));
+                    }
                     _ => {}
                 }
                 obj(fields)
@@ -449,6 +591,7 @@ impl Timeline {
                     .and_then(Json::as_usize)
                     .ok_or_else(|| anyhow!("{kind} event missing link"))
             };
+            let dur = || row.get("duration_s").and_then(Json::as_f64).unwrap_or(30.0);
             let kind = match kind {
                 "sat_fail" => EventKind::SatFail { sat: sat()? },
                 "sat_recover" => EventKind::SatRecover { sat: sat()? },
@@ -463,7 +606,14 @@ impl Timeline {
                 "cue_arrival" => EventKind::CueArrival {
                     tiles: row.get("tiles").and_then(Json::as_usize).unwrap_or(1),
                 },
-                other => return Err(anyhow!("unknown event kind {other:?}")),
+                "link_loss_rate" => EventKind::LinkLossRate {
+                    link: link()?,
+                    add_p: row.get("add_p").and_then(Json::as_f64).unwrap_or(0.25),
+                    duration_s: dur(),
+                },
+                "link_flap" => EventKind::LinkFlap { link: link()?, duration_s: dur() },
+                "station_outage" => EventKind::StationOutage { duration_s: dur() },
+                other => return Err(UnknownEventKind(other.to_string()).into()),
             };
             events.push(Event { t_s, kind });
         }
@@ -567,6 +717,87 @@ mod tests {
         let spec = enabled_spec();
         let spec_back = DynamicSpec::from_json(&spec.to_json());
         assert_eq!(spec, spec_back);
+    }
+
+    #[test]
+    fn json_round_trip_covers_every_event_kind() {
+        // One instance of every variant, including the chaos kinds, at
+        // distinct times so sorting cannot mask a mis-parsed row.
+        let tl = Timeline::declared(vec![
+            Event { t_s: 1.0, kind: EventKind::SatFail { sat: 1 } },
+            Event { t_s: 2.0, kind: EventKind::SatRecover { sat: 1 } },
+            Event { t_s: 3.0, kind: EventKind::LinkDown { link: 0 } },
+            Event { t_s: 4.0, kind: EventKind::LinkUp { link: 0 } },
+            Event { t_s: 5.0, kind: EventKind::BurstStart { factor: 2.5 } },
+            Event { t_s: 6.0, kind: EventKind::BurstEnd },
+            Event { t_s: 7.0, kind: EventKind::AreaLeave },
+            Event { t_s: 8.0, kind: EventKind::AreaEnter },
+            Event { t_s: 9.0, kind: EventKind::CueArrival { tiles: 2 } },
+            Event {
+                t_s: 10.0,
+                kind: EventKind::LinkLossRate { link: 1, add_p: 0.4, duration_s: 12.0 },
+            },
+            Event { t_s: 11.0, kind: EventKind::LinkFlap { link: 1, duration_s: 8.0 } },
+            Event { t_s: 12.0, kind: EventKind::StationOutage { duration_s: 20.0 } },
+        ]);
+        assert_eq!(tl.events.len(), 12, "one row per variant");
+        let back = Timeline::from_json(&tl.to_json()).unwrap();
+        assert_eq!(tl, back);
+    }
+
+    #[test]
+    fn unknown_event_kind_is_rejected_with_named_error() {
+        let j = obj(vec![(
+            "events",
+            Json::Arr(vec![obj(vec![
+                ("t_s", Json::Num(5.0)),
+                ("kind", Json::from("solar_storm")),
+            ])]),
+        )]);
+        let err = Timeline::from_json(&j).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("unknown event kind"), "{msg}");
+        assert!(msg.contains("solar_storm"), "{msg}");
+        // The named type itself displays identically, so callers matching
+        // on the typed error and on the erased chain agree.
+        assert_eq!(
+            format!("{}", UnknownEventKind("solar_storm".into())),
+            "unknown event kind \"solar_storm\""
+        );
+    }
+
+    #[test]
+    fn chaos_families_generate_without_shifting_existing_streams() {
+        let c = Constellation::jetson();
+        let base = Timeline::generate(&enabled_spec(), &c, 2000.0, 7);
+        let chaotic_spec = DynamicSpec {
+            chaos_loss_mtbf_s: 120.0,
+            chaos_flap_mtbf_s: 150.0,
+            chaos_outage_mtbf_s: 400.0,
+            ..enabled_spec()
+        };
+        assert!(chaotic_spec.chaos_enabled());
+        assert!(!enabled_spec().chaos_enabled());
+        let chaotic = Timeline::generate(&chaotic_spec, &c, 2000.0, 7);
+        // Chaos forks come after every pre-existing family, so enabling
+        // chaos leaves the fault/burst draws untouched.
+        let non_chaos = |tl: &Timeline| -> Vec<Event> {
+            tl.events
+                .iter()
+                .filter(|e| e.kind.rank() < 9)
+                .cloned()
+                .collect()
+        };
+        assert_eq!(non_chaos(&base), non_chaos(&chaotic));
+        let count = |pred: fn(&EventKind) -> bool| {
+            chaotic.events.iter().filter(|e| pred(&e.kind)).count()
+        };
+        assert!(count(|k| matches!(k, EventKind::LinkLossRate { .. })) > 0);
+        assert!(count(|k| matches!(k, EventKind::LinkFlap { .. })) > 0);
+        assert!(count(|k| matches!(k, EventKind::StationOutage { .. })) > 0);
+        // Deterministic and round-trippable.
+        assert_eq!(chaotic, Timeline::generate(&chaotic_spec, &c, 2000.0, 7));
+        assert_eq!(chaotic, Timeline::from_json(&chaotic.to_json()).unwrap());
     }
 
     #[test]

@@ -123,6 +123,13 @@ impl HealthState {
             // Cue arrivals are workload, not damage: the epoch loop queues
             // them as priority injections; health is untouched.
             EventKind::CueArrival { .. } => {}
+            // Chaos windows act inside the simulator's transfer layer (per
+            // attempt), not on the health view: a lossy or flapping link is
+            // still routable, and a station outage delays — never destroys
+            // — completions.  See [`chaos_windows`].
+            EventKind::LinkLossRate { .. }
+            | EventKind::LinkFlap { .. }
+            | EventKind::StationOutage { .. } => {}
         }
     }
 
@@ -343,6 +350,9 @@ pub struct EpochOrchestrator {
     trace: Option<TraceSpec>,
     telemetry: Option<StreamSpec>,
     hist_metrics: bool,
+    /// Per-attempt ISL loss/ARQ model ([`crate::sim::LossModel`]); `None`
+    /// keeps the transport perfectly reliable (retry path fully inert).
+    loss: Option<sim::LossModel>,
 }
 
 impl EpochOrchestrator {
@@ -362,6 +372,7 @@ impl EpochOrchestrator {
             scenario.seed,
             scenario.isl_rate_bps,
         )
+        .with_loss(scenario.loss_model())
     }
 
     /// Orchestrate hand-built inputs.
@@ -391,7 +402,15 @@ impl EpochOrchestrator {
             trace: None,
             telemetry: None,
             hist_metrics: false,
+            loss: None,
         }
+    }
+
+    /// Install (or clear) the unreliable-transport model for every epoch's
+    /// simulator run.
+    pub fn with_loss(mut self, loss: Option<sim::LossModel>) -> Self {
+        self.loss = loss;
+        self
     }
 
     pub fn with_backend(mut self, kind: BackendKind) -> Self {
@@ -719,6 +738,8 @@ impl EpochOrchestrator {
                 injections: cue_injections,
                 trace: self.trace,
                 hist_metrics: self.hist_metrics,
+                loss: self.loss.clone(),
+                chaos: chaos_windows(&self.timeline, t0, epoch_s),
                 ..Default::default()
             };
             injected += (frames * epoch_c.tiles_per_frame + warm + cue_tiles) as f64;
@@ -737,6 +758,9 @@ impl EpochOrchestrator {
 
             if let (Some(log), Some(rec)) = (trace_log.as_mut(), rep.trace.as_deref()) {
                 log.absorb(e as u32, t0, rec);
+                if rec.dropped() > 0 {
+                    merged.inc("trace.recorder_dropped", rec.dropped() as f64);
+                }
                 crate::trace::spans::observe_spans(
                     &mut merged,
                     &crate::trace::spans::assemble(rec),
@@ -1054,6 +1078,44 @@ pub(crate) fn charge_migration(
     (readies, bytes_total, max_ready)
 }
 
+/// Chaos events from `timeline` whose windows overlap the epoch
+/// `[t0, t0 + epoch_s)`, converted to epoch-relative, clamped
+/// [`sim::ChaosWindow`]s for [`SimConfig::chaos`].  Unlike health events
+/// (which take effect at the *next* boundary), chaos windows act inside the
+/// simulator run, so a window spanning a boundary is split across both
+/// epochs.  Shared by the dynamic epoch loop and the mission loop.
+pub(crate) fn chaos_windows(
+    timeline: &Timeline,
+    t0: f64,
+    epoch_s: f64,
+) -> Vec<sim::ChaosWindow> {
+    let mut out = Vec::new();
+    for e in &timeline.events {
+        let (kind, dur) = match e.kind {
+            EventKind::LinkLossRate { link, add_p, duration_s } => {
+                (sim::ChaosKind::LossRate { link: link as u32, add_p }, duration_s)
+            }
+            EventKind::LinkFlap { link, duration_s } => {
+                (sim::ChaosKind::Flap { link: link as u32 }, duration_s)
+            }
+            EventKind::StationOutage { duration_s } => {
+                (sim::ChaosKind::StationOutage, duration_s)
+            }
+            _ => continue,
+        };
+        let (w0, w1) = (e.t_s, e.t_s + dur.max(0.0));
+        if w1 <= t0 || w0 >= t0 + epoch_s {
+            continue;
+        }
+        out.push(sim::ChaosWindow {
+            t0_s: (w0 - t0).max(0.0),
+            t1_s: (w1 - t0).min(epoch_s),
+            kind,
+        });
+    }
+    out
+}
+
 /// Deterministic per-epoch simulator seed (shared with the mission loop).
 pub(crate) fn epoch_seed(seed: u64, epoch: usize) -> u64 {
     Rng::new(seed ^ (epoch as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64()
@@ -1203,6 +1265,68 @@ mod tests {
         assert_eq!(rep.metrics.counter("tiles.injected"), 3.0);
         // A healthy constellation with a generous deadline misses nothing.
         assert_eq!(rep.metrics.counter("dynamic.cues_missed"), 0.0);
+    }
+
+    #[test]
+    fn chaos_windows_clamp_to_epoch() {
+        let tl = Timeline::declared(vec![
+            // Spans the epoch-1 boundary: must be split/clamped.
+            Event { t_s: 8.0, kind: EventKind::LinkFlap { link: 0, duration_s: 6.0 } },
+            // Entirely before epoch 1.
+            Event {
+                t_s: 1.0,
+                kind: EventKind::LinkLossRate { link: 1, add_p: 0.5, duration_s: 2.0 },
+            },
+            // Entirely inside epoch 1.
+            Event { t_s: 12.0, kind: EventKind::StationOutage { duration_s: 3.0 } },
+            // Health events never become chaos windows.
+            Event { t_s: 12.5, kind: EventKind::SatFail { sat: 0 } },
+        ]);
+        let w0 = chaos_windows(&tl, 0.0, 10.0);
+        assert_eq!(w0.len(), 2, "{w0:?}");
+        assert!(w0.iter().any(|w| w.t0_s == 1.0
+            && w.t1_s == 3.0
+            && matches!(w.kind, sim::ChaosKind::LossRate { link: 1, .. })));
+        assert!(w0.iter().any(|w| w.t0_s == 8.0
+            && w.t1_s == 10.0
+            && matches!(w.kind, sim::ChaosKind::Flap { link: 0 })));
+        let w1 = chaos_windows(&tl, 10.0, 10.0);
+        assert_eq!(w1.len(), 2, "{w1:?}");
+        assert!(w1.iter().any(|w| w.t0_s == 0.0
+            && (w.t1_s - 4.0).abs() < 1e-12
+            && matches!(w.kind, sim::ChaosKind::Flap { link: 0 })));
+        assert!(w1.iter().any(|w| w.t0_s == 2.0
+            && w.t1_s == 5.0
+            && matches!(w.kind, sim::ChaosKind::StationOutage)));
+    }
+
+    #[test]
+    fn declared_flap_window_forces_retransmissions() {
+        let s = jetson_with(quiet_spec(2));
+        let flap_tl = || {
+            Timeline::declared(vec![
+                Event { t_s: 0.0, kind: EventKind::LinkFlap { link: 0, duration_s: 10.0 } },
+                Event { t_s: 0.0, kind: EventKind::LinkFlap { link: 1, duration_s: 10.0 } },
+            ])
+        };
+        let rep = EpochOrchestrator::new(&s)
+            .with_timeline(flap_tl())
+            .run()
+            .expect("mission runs");
+        // Every ISL attempt in epoch 0 is forced to fail, so the ARQ layer
+        // must have retried (and, with default bounded attempts, given up
+        // on some tiles).
+        assert!(rep.metrics.counter("sim.retransmits") > 0.0);
+        assert!(rep.metrics.counter("sim.retries_exhausted") > 0.0);
+        // Chaos is deterministic: same declared trace, same outcome.
+        let rep2 = EpochOrchestrator::new(&s)
+            .with_timeline(flap_tl())
+            .run()
+            .expect("mission runs");
+        assert_eq!(
+            rep.metrics.to_json().to_string_compact(),
+            rep2.metrics.to_json().to_string_compact()
+        );
     }
 
     #[test]

@@ -22,6 +22,7 @@
 //! | [`dynamic_availability`] | epoch re-planning vs ride-through (new subsystem) |
 //! | [`tipcue_response`] | tip→insight response latency vs reserve φ_cue (tip-and-cue subsystem) |
 //! | [`mission_scale`] | combined mission loop at 10–50 sats: cue latency, FIFO vs priority ISLs |
+//! | [`chaos_resilience`] | on-time delivery + cue deadline misses vs ISL loss rate, ARQ on/off |
 
 use std::time::Instant;
 
@@ -845,6 +846,84 @@ pub fn mission_scale(device_name: &str, seed: u64, sats: &[usize]) -> Table {
     t
 }
 
+// ---------------------------------------------------------------------------
+// Chaos resilience: delivery under ISL loss, ARQ on vs off.
+// ---------------------------------------------------------------------------
+
+/// Mission delivery under unreliable ISLs: for each per-attempt loss rate,
+/// run the full mission loop (chaos flap windows armed) with ARQ enabled
+/// (4 attempts, exponential backoff) and disabled (single attempt, every
+/// loss is terminal).  Reports the on-time delivered fraction and the cue
+/// deadline-miss rate, plus the retransmit and lost-tile counters — the
+/// graceful-degradation story of the transport layer.
+pub fn chaos_resilience(device_name: &str, seed: u64, loss_rates: &[f64]) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Chaos resilience: delivery vs ISL loss, ARQ on/off \
+             ({device_name}, seed {seed}, 16 kbps ISL, flap MTBF 240 s)"
+        ),
+        &[
+            "loss",
+            "arq",
+            "tips",
+            "admitted",
+            "completed",
+            "on_time_frac",
+            "miss_rate",
+            "retransmits",
+            "tiles_lost",
+        ],
+    );
+    for &p in loss_rates {
+        for &arq_on in &[true, false] {
+            let spec = crate::mission::MissionSpec {
+                dynamic: crate::dynamic::DynamicSpec {
+                    epochs: 6,
+                    chaos_flap_mtbf_s: 240.0,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let s = Scenario::of(device_of(device_name))
+                .with_seed(seed)
+                .with_uniform_sats(10)
+                .with_isl_rate(16_000.0)
+                .with_loss(p)
+                .with_arq_attempts(if arq_on { 4 } else { 1 })
+                .with_mission(spec);
+            let arq = if arq_on { "on" } else { "off" };
+            match crate::mission::MissionOrchestrator::new(&s).run() {
+                Ok(rep) => {
+                    let denom = rep.admitted.max(1) as f64;
+                    t.row(vec![
+                        f(p),
+                        arq.into(),
+                        rep.tips.to_string(),
+                        rep.admitted.to_string(),
+                        rep.completed.to_string(),
+                        f(rep.completed as f64 / denom),
+                        f((rep.missed + rep.expired) as f64 / denom),
+                        f(rep.metrics.counter("sim.retransmits")),
+                        f(rep.metrics.counter("sim.tiles_lost")),
+                    ]);
+                }
+                Err(e) => t.row(vec![
+                    f(p),
+                    arq.into(),
+                    format!("error: {e}"),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]),
+            }
+        }
+    }
+    t
+}
+
 /// Export a set of tables as a JSON report document.
 pub fn report_json(tables: &[Table]) -> Json {
     Json::Arr(tables.iter().map(|t| t.to_json()).collect())
@@ -919,6 +998,24 @@ mod tests {
     fn fig17_runs_quickly_at_coarse_step() {
         let t = fig17_ground(6.0 * 3600.0, 30.0);
         assert_eq!(t.rows.len(), 5);
+    }
+
+    #[test]
+    fn chaos_resilience_rows_and_arq_effect() {
+        let t = chaos_resilience("jetson", 7, &[0.0, 0.1]);
+        assert_eq!(t.rows.len(), 4);
+        // Lossless rows never retransmit (the retry path is inert).
+        for r in &t.rows[..2] {
+            assert_eq!(r[7].parse::<f64>().unwrap(), 0.0, "{r:?}");
+        }
+        // Lossy + ARQ on retransmits; lossy + ARQ off never does but loses
+        // tiles on the first failed attempt.
+        let on: f64 = t.rows[2][7].parse().unwrap();
+        let off_rtx: f64 = t.rows[3][7].parse().unwrap();
+        let off_lost: f64 = t.rows[3][8].parse().unwrap();
+        assert!(on > 0.0);
+        assert_eq!(off_rtx, 0.0);
+        assert!(off_lost > 0.0);
     }
 
     #[test]

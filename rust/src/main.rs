@@ -9,27 +9,29 @@
 //!                       [--sats-list 3,5,8 | --sats 3,5,8] [--frames-list 5,10]
 //!                       [--isl-list R1,R2]
 //!                       [--mtbf-list 300,600] [--outage-list 60,120] [--epoch-frames-list 2,4]
+//!                       [--loss-list 0,0.05] [--flap-list 240,600]
 //!                       [--tip-rate-list 0.2,0.5] [--cue-deadline-list 60,90]
 //!                       [--reserve-list 0.0,0.2,0.4] [--detection-rate-list 0.02,0.1]
 //!                       [--backends orbitchain,compute-par] [--threads N] [--json]
 //! orbitchain tipcue     [same flags] [--tip-rate R] [--cue-deadline S] [--reserve F]
-//!                       [--pass-dt S] [--min-elevation D] [--backend B]
+//!                       [--pass-dt S] [--min-elevation D] [--loss P] [--backend B]
 //!                       [--trace PATH[:CAP]] [--telemetry PATH[:N]] [--hist-metrics]
 //!                       [--profile] [--json]
 //! orbitchain dynamic    [same flags] [--epochs N] [--epoch-frames N] [--mtbf S] [--mttr S]
 //!                       [--link-mtbf S] [--link-mttr S] [--degrade-factor F]
 //!                       [--burst-mtbf S] [--burst-duration S] [--burst-factor X]
-//!                       [--area-visibility] [--state-bytes B] [--backend B]
+//!                       [--area-visibility] [--state-bytes B] [--loss P] [--chaos]
+//!                       [--backend B]
 //!                       [--no-baseline] [--trace PATH[:CAP]] [--telemetry PATH[:N]]
 //!                       [--hist-metrics] [--profile] [--json]
 //! orbitchain mission    [same flags, --sats takes a comma list] [--epochs N]
 //!                       [--epoch-frames N] [--mtbf S] [--mttr S] [--link-mtbf S]
 //!                       [--link-mttr S] [--detection-rate R] [--cue-deadline S]
 //!                       [--reserve F] [--pass-dt S] [--min-elevation D]
-//!                       [--fifo] [--backend B] [--trace PATH[:CAP]]
+//!                       [--loss P] [--chaos] [--fifo] [--backend B] [--trace PATH[:CAP]]
 //!                       [--telemetry PATH[:N]] [--hist-metrics] [--profile] [--json]
 //! orbitchain report     <stream.jsonl> [--trace journal.jsonl] [--top K] [--json]
-//! orbitchain experiment <fig3b|..|fig20|tab1|dynamic|tipcue|mission|all>
+//! orbitchain experiment <fig3b|..|fig20|tab1|dynamic|tipcue|mission|chaos|all>
 //!                       [--device jetson|rpi] [--frames N] [--seed N] [--json]
 //! orbitchain infer      [--model cloud] [--tiles N] [--artifacts DIR]  # PJRT HIL
 //! orbitchain version
@@ -174,6 +176,19 @@ fn apply_dynamic_flags(
     if let Some(v) = flags.get("state-bytes") {
         spec.migration_state_bytes = v.parse()?;
     }
+    if flags.contains_key("chaos") {
+        // Arm the three chaos families at sensible default rates; a spec
+        // that already configures a family keeps its own rate.
+        if spec.chaos_loss_mtbf_s <= 0.0 {
+            spec.chaos_loss_mtbf_s = 120.0;
+        }
+        if spec.chaos_flap_mtbf_s <= 0.0 {
+            spec.chaos_flap_mtbf_s = 240.0;
+        }
+        if spec.chaos_outage_mtbf_s <= 0.0 {
+            spec.chaos_outage_mtbf_s = 600.0;
+        }
+    }
     Ok(())
 }
 
@@ -211,6 +226,13 @@ fn scenario_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<Scenar
     if let Some(v) = flags.get("isl-bps") {
         s.isl_rate_bps = Some(v.parse()?);
     }
+    if let Some(v) = flags.get("loss") {
+        let p: f64 = v.parse()?;
+        if !(0.0..=1.0).contains(&p) {
+            anyhow::bail!("--loss {p} out of range [0, 1]");
+        }
+        s.loss_p = p;
+    }
     Ok(s)
 }
 
@@ -246,6 +268,8 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     "mtbf-list",
                     "outage-list",
                     "epoch-frames-list",
+                    "loss-list",
+                    "flap-list",
                     "tip-rate-list",
                     "cue-deadline-list",
                     "reserve-list",
@@ -267,6 +291,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     "reserve",
                     "pass-dt",
                     "min-elevation",
+                    "loss",
                     "backend",
                     "trace",
                     "telemetry",
@@ -291,6 +316,8 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 "burst-factor",
                 "area-visibility",
                 "state-bytes",
+                "loss",
+                "chaos",
                 "backend",
                 "no-baseline",
                 "trace",
@@ -324,6 +351,8 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 "reserve",
                 "pass-dt",
                 "min-elevation",
+                "loss",
+                "chaos",
                 "fifo",
                 "backend",
                 "trace",
@@ -379,7 +408,7 @@ fn print_help() {
          \x20 report      fold a --telemetry stream (and optionally a --trace journal)\n\
          \x20             into the mission observatory dashboard\n\
          \x20 experiment  regenerate a paper figure/table (fig3b..fig20, dynamic,\n\
-         \x20             tipcue, mission, all)\n\
+         \x20             tipcue, mission, chaos, all)\n\
          \x20 infer       hardware-in-the-loop PJRT inference on synthetic tiles\n\
          \x20 version     print version\n\n\
          common flags:  --device jetson|rpi --workflow N --deadline S\n\
@@ -389,6 +418,7 @@ fn print_help() {
          \x20             (--sats 3,5,8 works too)\n\
          \x20             --frames-list 5,10 --isl-list R1,R2 --mtbf-list 300,600\n\
          \x20             --outage-list 60,120 --epoch-frames-list 2,4\n\
+         \x20             --loss-list 0,0.05 --flap-list 240,600\n\
          \x20             --tip-rate-list 0.2,0.5 --cue-deadline-list 60,90\n\
          \x20             --reserve-list 0.0,0.2,0.4 --detection-rate-list 0.02,0.1\n\
          \x20             --backends orbitchain,load-spraying,data-par,compute-par\n\
@@ -397,11 +427,13 @@ fn print_help() {
          \x20             --link-mtbf S --link-mttr S --degrade-factor F\n\
          \x20             --burst-mtbf S --burst-duration S --burst-factor X\n\
          \x20             --area-visibility --state-bytes B --backend B --no-baseline\n\
+         \x20             --loss P (per-attempt ISL loss probability, ARQ retries)\n\
+         \x20             --chaos (inject link-loss/flap/station-outage windows)\n\
          tipcue flags:  --tip-rate R --cue-deadline S --reserve F --pass-dt S\n\
-         \x20             --min-elevation D --backend B\n\
+         \x20             --min-elevation D --loss P --backend B\n\
          mission flags: --sats 10,25,walker:53:10x10 --epochs N --epoch-frames N\n\
          \x20             --mtbf S --detection-rate R --cue-deadline S --reserve F\n\
-         \x20             --fifo\n\
+         \x20             --loss P --chaos --fifo\n\
          observability: --telemetry PATH[:N] (per-epoch delta snapshots, every Nth)\n\
          \x20             --hist-metrics (bounded-memory histogram registry)\n\
          \x20             --profile (wall-clock phase timers; non-deterministic)\n\
@@ -605,6 +637,16 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         }
         grid = grid.epoch_frames(&frames);
     }
+    if let Some(raw) = flags.get("loss-list") {
+        let rates = parse_list::<f64>(raw)?;
+        if let Some(bad) = rates.iter().find(|p| !(0.0..=1.0).contains(*p)) {
+            anyhow::bail!("--loss-list entry {bad} out of range [0, 1]");
+        }
+        grid = grid.loss_rates(&rates);
+    }
+    if let Some(raw) = flags.get("flap-list") {
+        grid = grid.flap_mtbfs(&parse_list::<f64>(raw)?);
+    }
     if let Some(raw) = flags.get("tip-rate-list") {
         grid = grid.tip_rates(&parse_list::<f64>(raw)?);
     }
@@ -638,7 +680,7 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     // dropping the fault timeline from those points.  The mission loop
     // derives its tips from detections, so the synthetic tip-stream
     // dimensions don't apply to it either.
-    let has_dynamic_dims = ["mtbf-list", "outage-list", "epoch-frames-list"]
+    let has_dynamic_dims = ["mtbf-list", "outage-list", "epoch-frames-list", "flap-list"]
         .iter()
         .any(|k| flags.contains_key(*k));
     let has_tipcue_dims = ["tip-rate-list", "cue-deadline-list", "reserve-list"]
@@ -1436,6 +1478,14 @@ fn cmd_experiment(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Re
             .transpose()?
             .unwrap_or(7);
         tables.push(exp::mission_scale(device, seed, &[10, 25, 50]));
+    }
+    if all || which == "chaos" {
+        let seed: u64 = flags
+            .get("seed")
+            .map(|v| v.parse())
+            .transpose()?
+            .unwrap_or(7);
+        tables.push(exp::chaos_resilience(device, seed, &[0.0, 0.02, 0.05, 0.1]));
     }
     if tables.is_empty() {
         anyhow::bail!("unknown experiment {which:?}");

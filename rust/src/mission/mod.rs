@@ -49,8 +49,8 @@ use std::time::Instant;
 use crate::config::Scenario;
 use crate::constellation::{CaptureGroup, Constellation};
 use crate::dynamic::{
-    build_tables, charge_migration, epoch_seed, invalidation, DynamicSpec, HealthState,
-    PlanState, Timeline, BACKLOG_CAP_FRAMES, NEVER_S,
+    build_tables, charge_migration, chaos_windows, epoch_seed, invalidation, DynamicSpec,
+    HealthState, PlanState, Timeline, BACKLOG_CAP_FRAMES, NEVER_S,
 };
 use crate::orbit::visibility;
 use crate::orbit::{GroundStation, LatLon};
@@ -483,6 +483,9 @@ pub struct MissionOrchestrator {
     trace: Option<TraceSpec>,
     telemetry: Option<StreamSpec>,
     hist_metrics: bool,
+    /// Per-attempt ISL loss/ARQ model ([`crate::sim::LossModel`]); `None`
+    /// keeps the transport perfectly reliable (retry path fully inert).
+    loss: Option<sim::LossModel>,
 }
 
 impl MissionOrchestrator {
@@ -512,7 +515,15 @@ impl MissionOrchestrator {
             trace: None,
             telemetry: None,
             hist_metrics: false,
+            loss: scenario.loss_model(),
         }
+    }
+
+    /// Install (or clear) the unreliable-transport model for every epoch's
+    /// simulator run (defaults to the scenario's `loss_p`/`arq_*` knobs).
+    pub fn with_loss(mut self, loss: Option<sim::LossModel>) -> Self {
+        self.loss = loss;
+        self
     }
 
     /// Replace the spec (regenerates the timeline; apply before
@@ -953,6 +964,8 @@ impl MissionOrchestrator {
                 priority_isl: self.spec.priority_isl,
                 trace: self.trace,
                 hist_metrics: self.hist_metrics,
+                loss: self.loss.clone(),
+                chaos: chaos_windows(&self.timeline, t0, epoch_s),
             };
             injected +=
                 (frames * epoch_c.tiles_per_frame + warm + cues_injected) as f64;
@@ -995,6 +1008,9 @@ impl MissionOrchestrator {
             // distributions.
             if let (Some(log), Some(rec)) = (trace_log.as_mut(), rep.trace.as_deref()) {
                 log.absorb(e as u32, t0, rec);
+                if rec.dropped() > 0 {
+                    merged.inc("trace.recorder_dropped", rec.dropped() as f64);
+                }
                 crate::trace::spans::observe_spans(
                     &mut merged,
                     &crate::trace::spans::assemble(rec),
@@ -1627,6 +1643,48 @@ mod tests {
             paired.metrics.samples("mission.cue_latency_fifo").len(),
             paired.alt.as_ref().unwrap().completed
         );
+    }
+
+    #[test]
+    fn lossy_mission_retransmits_and_compare_overlay_stays_inert() {
+        // Acceptance pin: loss 0.05 at seed 7 must visibly exercise the
+        // ARQ layer, and the compare fork must stay byte-identical to a
+        // plain run even with loss and chaos windows active (per-attempt
+        // fates are pure hashes, not RNG-stream draws).
+        let mut spec = quiet_spec(6);
+        spec.detection_rate = 0.4;
+        let mut s = jetson_with(spec).with_seed(7).with_loss(0.05);
+        s.isl_rate_bps = Some(16_000.0);
+        let tl = || {
+            Timeline::declared(vec![
+                Event { t_s: 12.0, kind: EventKind::LinkFlap { link: 0, duration_s: 5.0 } },
+                Event {
+                    t_s: 31.0,
+                    kind: EventKind::LinkLossRate { link: 1, add_p: 0.3, duration_s: 8.0 },
+                },
+            ])
+        };
+        let plain = MissionOrchestrator::new(&s)
+            .with_timeline(tl())
+            .run()
+            .expect("lossy run");
+        assert!(plain.metrics.counter("sim.retransmits") > 0.0);
+        let paired = MissionOrchestrator::new(&s)
+            .with_timeline(tl())
+            .run_compare()
+            .expect("lossy compare run");
+        assert_eq!(plain.completed, paired.completed);
+        assert_eq!(plain.response_latency_s, paired.response_latency_s);
+        assert_eq!(
+            plain.metrics.counter("sim.retransmits"),
+            paired.metrics.counter("sim.retransmits")
+        );
+        let prio_a = plain.metrics.samples("mission.cue_latency_prio");
+        let prio_b = paired.metrics.samples("mission.cue_latency_prio");
+        assert_eq!(prio_a.len(), prio_b.len());
+        for (x, y) in prio_a.iter().zip(prio_b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

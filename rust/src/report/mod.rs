@@ -16,7 +16,12 @@
 //!   compute, migration stall, ISL wait, transmit, downlink) — `n/a`
 //!   with a hint when the run was not traced;
 //! * an optional **journal summary**: event counts by kind and the time
-//!   range covered, from a `--trace` JSONL journal.
+//!   range covered, from a `--trace` JSONL journal;
+//! * explicit **warnings** when the flight recorder lost data: a
+//!   `trace.spans_truncated` count (tiles whose span prefix was evicted,
+//!   excluded from the breakdown) or a `trace.recorder_dropped` count
+//!   (ring evictions) both mean the trace capacity was too small for the
+//!   run.  Under `--json` these travel in a `"warnings"` array.
 //!
 //! Rendering replays the stream first ([`stream::replay`]), so every
 //! structural defect — missing header, version mismatch, non-monotone
@@ -221,6 +226,29 @@ fn dist_row(m: &Metrics, name: &str) -> Option<DistRow> {
     }
 }
 
+/// Data-loss warnings reconstructed from the stream's `trace.*` counters.
+/// Empty when the recorder kept every event (or the run was untraced).
+fn warnings(replayed: &ReplayedStream) -> Vec<String> {
+    let mut out = Vec::new();
+    let truncated = replayed.metrics.counter("trace.spans_truncated");
+    if truncated > 0.0 {
+        out.push(format!(
+            "{} tile span(s) truncated by the recorder ring and excluded \
+             from the latency breakdown; raise the --trace capacity",
+            truncated as u64
+        ));
+    }
+    let dropped = replayed.metrics.counter("trace.recorder_dropped");
+    if dropped > 0.0 {
+        out.push(format!(
+            "flight recorder dropped {} event(s) (oldest-first ring \
+             eviction); raise the --trace capacity",
+            dropped as u64
+        ));
+    }
+    out
+}
+
 // ---------------------------------------------------------------------------
 // Journal summary.
 // ---------------------------------------------------------------------------
@@ -304,6 +332,9 @@ fn dashboard_text(
             replayed.metrics.dists_iter().count(),
         ),
     );
+    for w in warnings(replayed) {
+        push(&mut out, &format!("WARNING: {w}"));
+    }
 
     // --- Timeline ---------------------------------------------------------
     push(&mut out, "");
@@ -505,10 +536,13 @@ fn dashboard_json(
             })
         })
         .collect();
+    let warnings_json: Vec<Json> =
+        warnings(replayed).into_iter().map(Json::from).collect();
     let mut fields = vec![
         ("mode", Json::from(replayed.mode.clone())),
         ("every", Json::from(replayed.every as usize)),
         ("snapshots", Json::from(replayed.snapshots.len())),
+        ("warnings", Json::Arr(warnings_json)),
         ("timeline", Json::Arr(timeline_json)),
         ("hot_sats", Json::Arr(sats_json)),
         ("hot_links", Json::Arr(links_json)),
@@ -633,6 +667,51 @@ mod tests {
         assert!(text.contains("trace journal"), "{text}");
         assert!(text.contains("events=3"), "{text}");
         assert!(text.contains("capture"), "{text}");
+    }
+
+    fn lossy_trace_stream() -> String {
+        let mut m = Metrics::new();
+        let mut w = StreamWriter::create(&StreamSpec::in_memory(), false).unwrap();
+        m.observe("trace.span_total", 10.0);
+        m.inc("trace.spans_truncated", 3.0);
+        m.inc("trace.recorder_dropped", 128.0);
+        w.final_snapshot(0, 60.0, &m).unwrap();
+        w.finish().unwrap().unwrap().join("\n")
+    }
+
+    #[test]
+    fn recorder_data_loss_surfaces_as_warnings() {
+        let text =
+            render(&lossy_trace_stream(), None, &ReportOptions::default()).unwrap();
+        assert!(text.contains("WARNING: 3 tile span(s) truncated"), "{text}");
+        assert!(text.contains("WARNING: flight recorder dropped 128 event(s)"), "{text}");
+
+        let out = render(
+            &lossy_trace_stream(),
+            None,
+            &ReportOptions { top_k: 5, json: true },
+        )
+        .unwrap();
+        let j = Json::parse(&out).unwrap();
+        let w = j.get("warnings").and_then(Json::as_arr).unwrap();
+        assert_eq!(w.len(), 2, "{out}");
+        assert!(w[0].as_str().unwrap().contains("truncated"), "{out}");
+        assert!(w[1].as_str().unwrap().contains("dropped 128"), "{out}");
+    }
+
+    #[test]
+    fn clean_stream_has_no_warnings() {
+        let text =
+            render(&sample_stream(), None, &ReportOptions::default()).unwrap();
+        assert!(!text.contains("WARNING"), "{text}");
+        let out = render(
+            &sample_stream(),
+            None,
+            &ReportOptions { top_k: 5, json: true },
+        )
+        .unwrap();
+        let j = Json::parse(&out).unwrap();
+        assert!(j.get("warnings").and_then(Json::as_arr).unwrap().is_empty());
     }
 
     #[test]

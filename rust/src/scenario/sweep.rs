@@ -42,8 +42,12 @@ pub struct SweepPoint {
 /// Dimensions left unset keep the base scenario's value.  Point order is
 /// deterministic: devices → constellation sizes → deadlines → workflow
 /// sizes → frame counts → ISL rates → satellite MTBFs → outage durations →
-/// epoch lengths → tip rates → cue deadlines → reserve fractions →
-/// backends (innermost).  Setting any of the three event-timeline
+/// epoch lengths → loss rates → flap MTBFs → tip rates → cue deadlines →
+/// reserve fractions → backends (innermost).  Setting a loss-rate
+/// dimension sets each point's [`Scenario::loss_p`]; a flap-MTBF
+/// dimension attaches the dynamic extension (its chaos flap process),
+/// absorbed into the mission fault spec on mission points.  Setting any
+/// of the three event-timeline
 /// dimensions attaches a [`DynamicSpec`](crate::dynamic::DynamicSpec) to
 /// the point (extending the base scenario's spec when present), so those
 /// points run the epoch loop; setting a tip-and-cue dimension likewise
@@ -60,9 +64,11 @@ pub struct SweepGrid {
     workflow_sizes: Vec<usize>,
     frames: Vec<usize>,
     isl_rates: Vec<Option<f64>>,
+    loss_rates: Vec<f64>,
     sat_mtbfs: Vec<f64>,
     outage_durations: Vec<f64>,
     epoch_frames: Vec<usize>,
+    flap_mtbfs: Vec<f64>,
     tip_rates: Vec<f64>,
     cue_deadlines: Vec<f64>,
     reserve_fracs: Vec<f64>,
@@ -81,9 +87,11 @@ impl SweepGrid {
             workflow_sizes: Vec::new(),
             frames: Vec::new(),
             isl_rates: Vec::new(),
+            loss_rates: Vec::new(),
             sat_mtbfs: Vec::new(),
             outage_durations: Vec::new(),
             epoch_frames: Vec::new(),
+            flap_mtbfs: Vec::new(),
             tip_rates: Vec::new(),
             cue_deadlines: Vec::new(),
             reserve_fracs: Vec::new(),
@@ -122,6 +130,22 @@ impl SweepGrid {
 
     pub fn isl_rates(mut self, rates: &[f64]) -> Self {
         self.isl_rates = rates.iter().map(|&r| Some(r)).collect();
+        self
+    }
+
+    /// Per-attempt ISL loss probabilities (the Fig.-style resilience axis);
+    /// sets each point's [`Scenario::loss_p`] — `0.0` keeps the transport
+    /// loss-free and the ARQ path inert.
+    pub fn loss_rates(mut self, rates: &[f64]) -> Self {
+        self.loss_rates = rates.to_vec();
+        self
+    }
+
+    /// Mean-time-between-flap-bursts for the chaos link-flap process
+    /// (seconds); attaches the dynamic extension to every point (absorbed
+    /// into the mission fault spec on mission points).
+    pub fn flap_mtbfs(mut self, mtbfs: &[f64]) -> Self {
+        self.flap_mtbfs = mtbfs.to_vec();
         self
     }
 
@@ -238,14 +262,32 @@ impl SweepGrid {
         } else {
             self.epoch_frames.iter().map(|&f| Some(f)).collect()
         };
-        // Tip-and-cue + mission dimensions, flattened into one (rate,
-        // deadline, reserve, detection-rate) axis so the nesting below
-        // stays readable.  With a detection-rate (mission) dimension the
-        // synthetic tip-rate axis is suppressed — mission points derive
-        // tips from actual detections, so the axis would silently
-        // multiply the grid without changing any point.
-        type ExtDim = (Option<f64>, Option<f64>, Option<f64>, Option<f64>);
+        // Unreliable-transport + tip-and-cue + mission dimensions,
+        // flattened into one (loss, flap-MTBF, rate, deadline, reserve,
+        // detection-rate) axis so the nesting below stays readable.  With
+        // a detection-rate (mission) dimension the synthetic tip-rate
+        // axis is suppressed — mission points derive tips from actual
+        // detections, so the axis would silently multiply the grid
+        // without changing any point.
+        type ExtDim = (
+            Option<f64>,
+            Option<f64>,
+            Option<f64>,
+            Option<f64>,
+            Option<f64>,
+            Option<f64>,
+        );
         let ext_dims: Vec<ExtDim> = {
+            let lps: Vec<Option<f64>> = if self.loss_rates.is_empty() {
+                vec![None]
+            } else {
+                self.loss_rates.iter().map(|&p| Some(p)).collect()
+            };
+            let fms: Vec<Option<f64>> = if self.flap_mtbfs.is_empty() {
+                vec![None]
+            } else {
+                self.flap_mtbfs.iter().map(|&m| Some(m)).collect()
+            };
             let trs: Vec<Option<f64>> =
                 if self.tip_rates.is_empty() || !self.detection_rates.is_empty() {
                     vec![None]
@@ -268,11 +310,15 @@ impl SweepGrid {
                 self.detection_rates.iter().map(|&r| Some(r)).collect()
             };
             let mut dims = Vec::new();
-            for &tr in &trs {
-                for &cd in &cds {
-                    for &rf in &rfs {
-                        for &dr in &drs {
-                            dims.push((tr, cd, rf, dr));
+            for &lp in &lps {
+                for &fm in &fms {
+                    for &tr in &trs {
+                        for &cd in &cds {
+                            for &rf in &rfs {
+                                for &dr in &drs {
+                                    dims.push((lp, fm, tr, cd, rf, dr));
+                                }
+                            }
                         }
                     }
                 }
@@ -295,7 +341,7 @@ impl SweepGrid {
                                 for &mtbf in &mtbfs {
                                     for &outage in &outages {
                                         for &ef in &epoch_frames {
-                                            for &(tr, cd, rf, dr) in &ext_dims {
+                                            for &(lp, fm, tr, cd, rf, dr) in &ext_dims {
                                                 for &backend in &backends {
                                                     let mut s = self.base.clone();
                                                     s.device = device;
@@ -307,9 +353,13 @@ impl SweepGrid {
                                                     s.workflow_size = wf_size;
                                                     s.frames = n_frames;
                                                     s.isl_rate_bps = isl;
+                                                    if let Some(p) = lp {
+                                                        s.loss_p = p;
+                                                    }
                                                     if mtbf.is_some()
                                                         || outage.is_some()
                                                         || ef.is_some()
+                                                        || fm.is_some()
                                                     {
                                                         let mut d = s
                                                             .dynamic
@@ -323,6 +373,9 @@ impl SweepGrid {
                                                         }
                                                         if let Some(f) = ef {
                                                             d.frames_per_epoch = f;
+                                                        }
+                                                        if let Some(m) = fm {
+                                                            d.chaos_flap_mtbf_s = m;
                                                         }
                                                         s.dynamic = Some(d);
                                                     }
@@ -349,7 +402,7 @@ impl SweepGrid {
                                                         self.attach_mission(
                                                             &mut s,
                                                             rate,
-                                                            (mtbf, outage, ef),
+                                                            (mtbf, outage, ef, fm),
                                                             (cd, rf),
                                                         );
                                                     }
@@ -389,10 +442,10 @@ impl SweepGrid {
         &self,
         s: &mut Scenario,
         rate: f64,
-        dyn_dims: (Option<f64>, Option<f64>, Option<usize>),
+        dyn_dims: (Option<f64>, Option<f64>, Option<usize>, Option<f64>),
         cue_dims: (Option<f64>, Option<f64>),
     ) {
-        let (mtbf, outage, ef) = dyn_dims;
+        let (mtbf, outage, ef, fm) = dyn_dims;
         let (cd, rf) = cue_dims;
         let mut m = s.mission.clone().unwrap_or_default();
         m.detection_rate = rate;
@@ -411,6 +464,9 @@ impl SweepGrid {
                 }
                 if let Some(v) = ef {
                     m.dynamic.frames_per_epoch = v;
+                }
+                if let Some(v) = fm {
+                    m.dynamic.chaos_flap_mtbf_s = v;
                 }
             }
         }
@@ -704,6 +760,62 @@ mod tests {
         }
         let plain = SweepGrid::new(Scenario::jetson()).points();
         assert!(plain[0].scenario.mission.is_none());
+    }
+
+    #[test]
+    fn loss_and_flap_dimensions_expand_and_attach() {
+        let base = Scenario::jetson().with_frames(2);
+        let points = SweepGrid::new(base)
+            .loss_rates(&[0.0, 0.05])
+            .flap_mtbfs(&[240.0])
+            .points();
+        assert_eq!(points.len(), 2);
+        for (point, lp) in points.iter().zip([0.0, 0.05]) {
+            assert_eq!(point.scenario.loss_p, lp);
+            let d = point.scenario.dynamic.as_ref().expect("dynamic attached");
+            assert_eq!(d.chaos_flap_mtbf_s, 240.0);
+        }
+        // A flap dimension on a mission point lands in the fault spec.
+        let points = SweepGrid::new(Scenario::jetson().with_frames(2))
+            .flap_mtbfs(&[240.0])
+            .detection_rates(&[0.1])
+            .points();
+        assert_eq!(points.len(), 1);
+        let m = points[0].scenario.mission.as_ref().expect("mission attached");
+        assert_eq!(m.dynamic.chaos_flap_mtbf_s, 240.0);
+        assert!(points[0].scenario.dynamic.is_none());
+        // Without the axes nothing changes.
+        let plain = SweepGrid::new(Scenario::jetson()).points();
+        assert_eq!(plain[0].scenario.loss_p, 0.0);
+        assert!(plain[0].scenario.dynamic.is_none());
+    }
+
+    #[test]
+    fn lossy_sweep_parallel_bit_identical_to_sequential() {
+        // The ARQ retry path draws per-attempt hashes, never a shared RNG
+        // stream, so a lossy sweep keeps the parallel == sequential
+        // bit-identity guarantee.
+        let base = Scenario::jetson().with_frames(2).with_isl_rate(16_000.0);
+        let points = SweepGrid::new(base).loss_rates(&[0.0, 0.1]).points();
+        assert_eq!(points.len(), 2);
+        let sequential = SweepRunner::new().with_threads(1).run(&points);
+        let parallel = SweepRunner::new().with_threads(4).run(&points);
+        for (s, p) in sequential.reports.iter().zip(&parallel.reports) {
+            match (s, p) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.completion_ratio, b.completion_ratio);
+                    assert_eq!(a.frame_latency_s, b.frame_latency_s);
+                    assert_eq!(
+                        a.metrics.to_json().to_string_compact(),
+                        b.metrics.to_json().to_string_compact()
+                    );
+                }
+                (a, b) => panic!("outcome mismatch: {a:?} vs {b:?}"),
+            }
+        }
+        // The lossy point actually exercised the transport.
+        let lossy = sequential.reports[1].as_ref().expect("lossy point runs");
+        assert!(lossy.metrics.counter("sim.retransmits") > 0.0);
     }
 
     #[test]

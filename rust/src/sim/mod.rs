@@ -18,7 +18,14 @@
 //!   pixels never cross the ISL);
 //! * metrics: per-function received/analyzed counts (completion ratio),
 //!   ISL bytes & transmit energy, and per-tile end-to-end latency split
-//!   into processing / communication / revisit components (Fig. 15).
+//!   into processing / communication / revisit components (Fig. 15);
+//! * optionally an unreliable transport ([`LossModel`]): per-attempt ISL
+//!   loss and corruption drawn from a stateless per-(tile, link, attempt)
+//!   hash, ARQ retransmission with deterministic exponential backoff,
+//!   per-hop delivery timeouts, and graceful degradation (drop / reroute
+//!   / partial delivery) when the attempt budget exhausts, plus
+//!   sub-epoch chaos windows ([`ChaosWindow`]) for loss bursts, link
+//!   flaps and station outages.
 
 pub mod gpu;
 
@@ -117,6 +124,19 @@ pub struct SimConfig {
     /// sum in arrival order); only quantiles become bucket-approximate.
     /// Off by default so existing bit-identity pins keep passing.
     pub hist_metrics: bool,
+    /// Unreliable ISL transport ([`LossModel`]): per-attempt loss /
+    /// corruption with ARQ retransmission and graceful degradation.
+    /// `None` (the default) keeps the transport reliable and the retry
+    /// path fully inert — no extra hash draws, heap events or metric
+    /// records, so every byte-identity pin holds bit-for-bit.
+    pub loss: Option<LossModel>,
+    /// Sub-epoch chaos windows (run-relative seconds) applied inside the
+    /// event loop: extra per-link loss, hard link flaps, station outages
+    /// blocking downlink completions.  Usually derived from the dynamic
+    /// timeline's chaos events; a non-empty list activates the ARQ
+    /// machinery even without a [`SimConfig::loss`] model (using
+    /// [`LossModel::default`]'s retry parameters).
+    pub chaos: Vec<ChaosWindow>,
 }
 
 impl Default for SimConfig {
@@ -134,8 +154,108 @@ impl Default for SimConfig {
             priority_isl: false,
             trace: None,
             hist_metrics: false,
+            loss: None,
+            chaos: Vec::new(),
         }
     }
+}
+
+/// What to do with a transfer whose ARQ attempt budget (or per-hop
+/// delivery timeout) exhausts ([`LossModel::policy`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DegradePolicy {
+    /// Abandon the transfer: the tile's journey never completes and is
+    /// counted in the `sim.tiles_lost` outcome.
+    Drop,
+    /// One alternate next-hop attempt via the link table: re-send on a
+    /// different outgoing link of the stuck satellite with a fresh
+    /// attempt budget.  A transfer reroutes at most once; a second
+    /// exhaustion (or a satellite with no alternate neighbor) falls back
+    /// to [`DegradePolicy::Drop`].
+    Reroute,
+    /// Deliver a reduced-bytes partial result across the stuck hop
+    /// instead of the full intermediate: the tile completes, flagged
+    /// partial (`sim.partial_results`, [`SimReport::partial_tiles`]).
+    DegradeQuality,
+}
+
+/// Unreliable-transport model for the ISL layer ([`SimConfig::loss`]).
+///
+/// Each transfer *attempt* on a directed link is lost with probability
+/// `loss_p` (plus any [`ChaosKind::LossRate`] window additions) and
+/// corrupted with independent probability `corrupt_p` — both decided by
+/// a stateless SplitMix64 hash of `(seed, tile, link, attempt)` in the
+/// style of [`SimConfig::stable_thinning`], so every attempt's fate is
+/// a pure function of the seed, independent of event order (the
+/// [`Simulator::run_compare_pair`] fork argument carries over).  A lost
+/// or corrupted attempt re-enters the two-class link queue at its class
+/// after a deterministic exponential backoff, consuming link busy-time,
+/// until either the attempt budget or the per-hop delivery timeout is
+/// spent; then [`LossModel::policy`] decides how the tile degrades.
+#[derive(Debug, Clone)]
+pub struct LossModel {
+    /// Per-attempt loss probability on every directed link.
+    pub loss_p: f64,
+    /// Per-attempt corruption probability (independent draw; a corrupted
+    /// attempt is counted in `sim.corrupted` and retransmits like a
+    /// loss — the receiver discards the damaged payload).
+    pub corrupt_p: f64,
+    /// Attempt budget per hop, clamped to ≥ 1; 1 disables ARQ entirely
+    /// (every loss exhausts immediately).
+    pub max_attempts: u32,
+    /// Retransmission `a` (1-based) waits `backoff_base_s · 2^(a−1)`
+    /// before re-entering the link queue.
+    pub backoff_base_s: f64,
+    /// Per-hop delivery timeout, seconds; 0 disables it.  A
+    /// retransmission that would start later than `hop entry +
+    /// timeout_s` exhausts immediately instead of backing off again.
+    pub timeout_s: f64,
+    /// Degradation policy once attempts exhaust.
+    pub policy: DegradePolicy,
+}
+
+impl Default for LossModel {
+    fn default() -> Self {
+        LossModel {
+            loss_p: 0.0,
+            corrupt_p: 0.0,
+            max_attempts: 4,
+            backoff_base_s: 0.1,
+            timeout_s: 0.0,
+            policy: DegradePolicy::Drop,
+        }
+    }
+}
+
+/// Fraction of the intermediate result [`DegradePolicy::DegradeQuality`]
+/// still delivers across the stuck hop.
+const PARTIAL_BYTES_FACTOR: f64 = 0.25;
+
+/// One sub-epoch chaos window, run-relative seconds `[t0_s, t1_s)`
+/// ([`SimConfig::chaos`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosWindow {
+    /// Window start (inclusive), seconds.
+    pub t0_s: f64,
+    /// Window end (exclusive), seconds.
+    pub t1_s: f64,
+    /// What the window does while it covers the current time.
+    pub kind: ChaosKind,
+}
+
+/// Effect of a [`ChaosWindow`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChaosKind {
+    /// Add `add_p` to the per-attempt loss probability of both
+    /// directions of undirected link `link`.
+    LossRate { link: u32, add_p: f64 },
+    /// Hard flap: every attempt on undirected link `link` is lost while
+    /// the window is open.
+    Flap { link: u32 },
+    /// Ground-station outage: tiles cannot complete (downlink) during
+    /// the window; completions are held and released at its end, the
+    /// blocked wait landing in the span's downlink component.
+    StationOutage,
 }
 
 /// One mid-run task injected into the simulation: a single tile that
@@ -225,6 +345,10 @@ pub struct SimReport {
     /// Injected tiles whose pipeline journey had not ended by the cutoff —
     /// the backlog a warm-started next epoch inherits.
     pub unfinished_tiles: usize,
+    /// Tiles delivered as reduced-bytes partial results by
+    /// [`DegradePolicy::DegradeQuality`] (the per-tile flag, aggregated;
+    /// also counted in `sim.partial_results`).
+    pub partial_tiles: usize,
     /// Per-injection outcomes, in [`SimConfig::injections`] order.
     pub injections: Vec<InjectionOutcome>,
     /// Detector completions (event order), when [`SimConfig::detect_func`]
@@ -248,6 +372,12 @@ enum Ev {
     Done { inst: usize, tile: u32 },
     /// ISL link `link` finished transmitting a message.
     LinkDone { link: usize },
+    /// ARQ backoff expired: the retransmission re-enters link `link`'s
+    /// two-class queue at its class.
+    Retry { link: usize, msg: IslMsg },
+    /// A station-outage chaos window ended: tile `tile`'s held
+    /// completion (downlink on `sat`) is released.
+    OutageRelease { tile: u32, sat: u32 },
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -298,10 +428,15 @@ struct TileState {
     priority: bool,
     /// Index into [`SimConfig::injections`] for injected tiles.
     injection: Option<usize>,
+    /// Completion is held by a station-outage chaos window (an
+    /// [`Ev::OutageRelease`] is queued at the window's end).
+    held: bool,
+    /// Delivered with reduced bytes by [`DegradePolicy::DegradeQuality`].
+    partial: bool,
 }
 
 /// An in-flight ISL message.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 struct IslMsg {
     tile: u32,
     /// Final destination instance.
@@ -316,6 +451,15 @@ struct IslMsg {
     /// ([`SimConfig::priority_isl`]) it overtakes queued background
     /// transfers.
     priority: bool,
+    /// Zero-based transfer attempt on the current hop (ARQ); reset at
+    /// every relay hop.
+    attempt: u32,
+    /// Time the message first entered the current hop's queue — the
+    /// reference point for the per-hop delivery timeout.
+    hop_t0: f64,
+    /// The exhaustion policy already rerouted this message once; a
+    /// second exhaustion degenerates to a drop.
+    rerouted: bool,
 }
 
 /// Enqueue an ISL message.  Two-class discipline: a priority message is
@@ -347,6 +491,25 @@ fn stable_chance(seed: u64, tile: u32, u: usize, v: usize, delta: f64) -> bool {
         .wrapping_mul(0x9E37_79B9_7F4A_7C15)
         .wrapping_add(((u as u64) << 32) | v as u64);
     Rng::new(seed ^ THINNING_SALT ^ key).f64() < delta
+}
+
+/// Seed mixing constant for the per-attempt ISL loss hash (keeps the
+/// loss stream independent of thinning for equal seeds).
+const LOSS_SALT: u64 = 0x51AF_3D29_8C6E_B7F1;
+
+/// Seed mixing constant for the independent per-attempt corruption draw.
+const CORRUPT_SALT: u64 = 0x0D6A_94E1_5B3C_27F9;
+
+/// Stateless per-(tile, link, attempt) Bernoulli: the loss fate of one
+/// transfer attempt under [`SimConfig::loss`], a pure function of the
+/// seed — independent of event order, so the unreliable transport
+/// preserves the [`Simulator::run_compare_pair`] fork argument exactly
+/// like [`stable_chance`] does for thinning.
+fn loss_chance(seed: u64, tile: u32, link: usize, attempt: u32, p: f64) -> bool {
+    let key = (tile as u64 + 1)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(((link as u64) << 32) | attempt as u64);
+    Rng::new(seed ^ LOSS_SALT ^ key).f64() < p
 }
 
 /// Sentinel for an absent `(func, sat, dev)` slot in the dense instance
@@ -463,6 +626,16 @@ struct SimState {
     m_isl_bytes: MetricId,
     m_isl_energy: MetricId,
     m_tile_latency: MetricId,
+    /// Unreliable-transport counters/distribution (interned always,
+    /// recorded only when losses occur — never-recorded ids are omitted
+    /// from the JSON export, so reliable runs stay byte-identical).
+    m_retransmits: MetricId,
+    m_retries_exhausted: MetricId,
+    m_rerouted: MetricId,
+    m_partial: MetricId,
+    m_tiles_lost: MetricId,
+    m_corrupted: MetricId,
+    m_backoff: MetricId,
     heap: BinaryHeap<Reverse<QueuedEvent>>,
     seq: u64,
     tiles: Vec<TileState>,
@@ -510,6 +683,9 @@ pub struct Simulator<'a> {
     /// Sparse ISL link table (directed ids `2l` / `2l + 1` per undirected
     /// link `l`).
     links: LinkTable,
+    /// Nominal ISL rate, bit/s: the config override or the
+    /// constellation's link-budget rate — resolved once at construction.
+    isl_rate: f64,
 }
 
 impl<'a> Simulator<'a> {
@@ -550,6 +726,22 @@ impl<'a> Simulator<'a> {
             inst_idx,
             n_sats_dim,
             links: LinkTable::new(constellation),
+            isl_rate: cfg.isl_rate_bps.unwrap_or_else(|| constellation.isl_rate_bps()),
+        }
+    }
+
+    /// Effective directed-link rate: the nominal rate times the
+    /// adjacency's factor from the per-epoch link table (link `2l`/`2l+1`
+    /// ↔ adjacency `l`).  Outage factors clamp to a vanishing rate so the
+    /// transfer stalls past any horizon rather than dividing by zero.
+    #[inline]
+    fn link_rate(&self, link: usize) -> f64 {
+        match &self.cfg.link_rate_factors {
+            Some(fs) => {
+                let f = fs.get(link / 2).copied().unwrap_or(1.0);
+                (self.isl_rate * f).max(1e-9)
+            }
+            None => self.isl_rate,
         }
     }
 
@@ -638,6 +830,13 @@ impl<'a> Simulator<'a> {
         let m_isl_bytes = metrics.id("isl.bytes");
         let m_isl_energy = metrics.id("isl.energy_j");
         let m_tile_latency = metrics.id("tile.latency_s");
+        let m_retransmits = metrics.id("sim.retransmits");
+        let m_retries_exhausted = metrics.id("sim.retries_exhausted");
+        let m_rerouted = metrics.id("sim.rerouted");
+        let m_partial = metrics.id("sim.partial_results");
+        let m_tiles_lost = metrics.id("sim.tiles_lost");
+        let m_corrupted = metrics.id("sim.corrupted");
+        let m_backoff = metrics.id("sim.backoff_s");
 
         // Weighted tile → pipeline assignment per capture group.
         let group_pipes: Vec<Vec<usize>> = (0..c.capture_groups.len())
@@ -698,6 +897,8 @@ impl<'a> Simulator<'a> {
                 finished: false,
                 priority: false,
                 injection: None,
+                held: false,
+                partial: false,
             });
             if let Some(tr) = trace.as_deref_mut() {
                 let sat = sources
@@ -754,6 +955,8 @@ impl<'a> Simulator<'a> {
                     finished: false,
                     priority: false,
                     injection: None,
+                    held: false,
+                    partial: false,
                 });
                 if let Some(tr) = trace.as_deref_mut() {
                     let sat = sources
@@ -880,6 +1083,8 @@ impl<'a> Simulator<'a> {
                 finished: false,
                 priority: inj.priority,
                 injection: Some(ii),
+                held: false,
+                partial: false,
             });
             outcome.routed = true;
             outcome.source_sat = sources
@@ -921,6 +1126,13 @@ impl<'a> Simulator<'a> {
             m_isl_bytes,
             m_isl_energy,
             m_tile_latency,
+            m_retransmits,
+            m_retries_exhausted,
+            m_rerouted,
+            m_partial,
+            m_tiles_lost,
+            m_corrupted,
+            m_backoff,
             heap,
             seq,
             tiles,
@@ -947,19 +1159,13 @@ impl<'a> Simulator<'a> {
     /// event itself stays queued so both forks process it identically).
     fn drive(&self, st: &mut SimState, until: Option<f64>) {
         let c = self.constellation;
-        let isl_rate = self.cfg.isl_rate_bps.unwrap_or_else(|| c.isl_rate_bps());
-        // Effective directed-link rate: nominal rate times the adjacency's
-        // factor from the per-epoch link table (link `2l`/`2l+1` ↔
-        // adjacency `l`).  Outage factors clamp to a vanishing rate so the
-        // transfer stalls past any horizon rather than dividing by zero.
-        let link_rate = |link: usize| -> f64 {
-            match &self.cfg.link_rate_factors {
-                Some(fs) => {
-                    let f = fs.get(link / 2).copied().unwrap_or(1.0);
-                    (isl_rate * f).max(1e-9)
-                }
-                None => isl_rate,
-            }
+        // Unreliable transport, resolved once per drive: with no loss
+        // model and no chaos windows the whole retry path reduces to one
+        // boolean test per LinkDone — the reliable fast path is inert.
+        let loss_on = self.cfg.loss.is_some() || !self.cfg.chaos.is_empty();
+        let lm = match &self.cfg.loss {
+            Some(m) => m.clone(),
+            None => LossModel::default(),
         };
 
         // Work-unit accounting for the phase self-profiler: one unit per
@@ -1101,43 +1307,12 @@ impl<'a> Simulator<'a> {
                                 bytes,
                                 sent_at: t,
                                 priority,
+                                attempt: 0,
+                                hop_t0: t,
+                                rerouted: false,
                             };
                             let link = self.links.directed(spec.sat, msg.next_sat);
-                            if let Some(tr) = st.trace.as_deref_mut() {
-                                let kind = TraceKind::IslEnqueue {
-                                    tile,
-                                    link: link as u32,
-                                    from_sat: spec.sat as u32,
-                                    to_sat: dst.sat as u32,
-                                    bytes,
-                                };
-                                tr.emit_tile(t, tile, kind);
-                            }
-                            isl_enqueue(
-                                &mut st.link_queue[link],
-                                st.link_busy[link],
-                                st.priority_isl,
-                                msg,
-                            );
-                            if !st.link_busy[link] {
-                                st.link_busy[link] = true;
-                                // Idle link: the just-queued message is the
-                                // front and starts transmitting now.
-                                if let Some(tr) = st.trace.as_deref_mut() {
-                                    let kind = TraceKind::TxStart {
-                                        tile,
-                                        link: link as u32,
-                                        sat: spec.sat as u32,
-                                    };
-                                    tr.emit_tile(t, tile, kind);
-                                }
-                                let fb = st.link_queue[link].front().unwrap().bytes;
-                                let tx = fb * 8.0 / link_rate(link);
-                                st.link_busy_s[link] += tx;
-                                st.link_bytes[link] += fb;
-                                let ev = Ev::LinkDone { link };
-                                push_event(&mut st.heap, &mut st.seq, t + tx, ev);
-                            }
+                            self.isl_send(st, t, link, msg);
                         }
                     }
                     match injection {
@@ -1156,31 +1331,23 @@ impl<'a> Simulator<'a> {
                             if dec > 0 {
                                 let left = &mut st.injection_terminals_left[ii];
                                 *left = left.saturating_sub(dec);
-                                if *left == 0 && !st.tiles[tile as usize].finished {
-                                    st.tiles[tile as usize].finished = true;
-                                    st.injection_outcomes[ii].finished_s = Some(t);
-                                    if let Some(tr) = st.trace.as_deref_mut() {
-                                        let kind = TraceKind::Downlink {
-                                            tile,
-                                            sat: spec.sat as u32,
-                                        };
-                                        tr.emit_tile(t, tile, kind);
-                                    }
+                                let done = *left == 0;
+                                if done
+                                    && !st.tiles[tile as usize].finished
+                                    && !st.tiles[tile as usize].held
+                                {
+                                    self.complete_tile(st, t, tile, spec.sat as u32);
                                 }
                             }
                         }
                         None => {
-                            if terminal && !st.tiles[tile as usize].finished {
+                            if terminal
+                                && !st.tiles[tile as usize].finished
+                                && !st.tiles[tile as usize].held
+                            {
                                 // Journey over: a sink completed, or every
                                 // downstream edge thinned the tile out.
-                                st.tiles[tile as usize].finished = true;
-                                if let Some(tr) = st.trace.as_deref_mut() {
-                                    let kind = TraceKind::Downlink {
-                                        tile,
-                                        sat: spec.sat as u32,
-                                    };
-                                    tr.emit_tile(t, tile, kind);
-                                }
+                                self.complete_tile(st, t, tile, spec.sat as u32);
                             }
                         }
                     }
@@ -1192,18 +1359,35 @@ impl<'a> Simulator<'a> {
                 }
                 Ev::LinkDone { link } => {
                     let msg = st.link_queue[link].pop_front().unwrap();
-                    if let Some(tr) = st.trace.as_deref_mut() {
-                        let kind = TraceKind::Hop {
-                            tile: msg.tile,
-                            link: link as u32,
-                            sat: msg.next_sat as u32,
-                        };
-                        tr.emit_tile(t, msg.tile, kind);
-                    }
+                    // Attempt fate under the unreliable transport: a lost
+                    // or corrupted attempt consumed the link busy-time
+                    // above but delivers nothing — ARQ backs off and
+                    // retransmits, or the degradation policy takes over.
+                    let (lost, corrupted) = if loss_on {
+                        self.attempt_fate(&lm, &msg, link, t)
+                    } else {
+                        (false, false)
+                    };
+                    let carry = if lost || corrupted {
+                        if corrupted {
+                            st.metrics.inc_id(st.m_corrupted, 1.0);
+                        }
+                        self.handle_lost_attempt(st, t, link, msg, &lm)
+                    } else {
+                        if let Some(tr) = st.trace.as_deref_mut() {
+                            let kind = TraceKind::Hop {
+                                tile: msg.tile,
+                                link: link as u32,
+                                sat: msg.next_sat as u32,
+                            };
+                            tr.emit_tile(t, msg.tile, kind);
+                        }
+                        Some(msg)
+                    };
                     // Next message on this link.
                     let next_tx = st.link_queue[link]
                         .front()
-                        .map(|next| (next.tile, next.bytes, next.bytes * 8.0 / link_rate(link)));
+                        .map(|next| (next.tile, next.bytes, next.bytes * 8.0 / self.link_rate(link)));
                     match next_tx {
                         Some((ntile, nbytes, tx)) => {
                             st.link_busy_s[link] += tx;
@@ -1220,6 +1404,7 @@ impl<'a> Simulator<'a> {
                         }
                         None => st.link_busy[link] = false,
                     }
+                    let Some(msg) = carry else { continue };
                     let at = msg.next_sat;
                     if at == msg.dest_sat {
                         // Arrived: wait for the destination satellite's own
@@ -1256,48 +1441,257 @@ impl<'a> Simulator<'a> {
                         );
                     } else {
                         // Relay one hop further (the priority class rides
-                        // along).
+                        // along; the ARQ attempt budget resets per hop).
                         let nxt = c.next_hop(at, msg.dest_sat);
-                        let fwd = IslMsg { next_sat: nxt, ..msg };
+                        let fwd = IslMsg { next_sat: nxt, attempt: 0, hop_t0: t, ..msg };
                         let link2 = self.links.directed(at, nxt);
-                        if let Some(tr) = st.trace.as_deref_mut() {
-                            let kind = TraceKind::IslEnqueue {
-                                tile: msg.tile,
-                                link: link2 as u32,
-                                from_sat: at as u32,
-                                to_sat: msg.dest_sat as u32,
-                                bytes: msg.bytes,
-                            };
-                            tr.emit_tile(t, msg.tile, kind);
+                        self.isl_send(st, t, link2, fwd);
+                    }
+                }
+                Ev::Retry { link, msg } => {
+                    // ARQ backoff expired: the retransmission re-enters
+                    // the link's two-class queue at its class, consuming
+                    // busy-time like any other transfer.
+                    self.isl_send(st, t, link, msg);
+                }
+                Ev::OutageRelease { tile, sat } => {
+                    // A station-outage chaos window ended: the held
+                    // completion downlinks now.  `last_done` advances to
+                    // the release so the tile's latency includes the
+                    // blocked wait (the span's downlink component).
+                    {
+                        let ts = &mut st.tiles[tile as usize];
+                        ts.held = false;
+                        ts.finished = true;
+                        if t > ts.last_done {
+                            ts.last_done = t;
                         }
-                        isl_enqueue(
-                            &mut st.link_queue[link2],
-                            st.link_busy[link2],
-                            st.priority_isl,
-                            fwd,
-                        );
-                        if !st.link_busy[link2] {
-                            st.link_busy[link2] = true;
-                            if let Some(tr) = st.trace.as_deref_mut() {
-                                let kind = TraceKind::TxStart {
-                                    tile: msg.tile,
-                                    link: link2 as u32,
-                                    sat: at as u32,
-                                };
-                                tr.emit_tile(t, msg.tile, kind);
-                            }
-                            let fb = st.link_queue[link2].front().unwrap().bytes;
-                            let tx = fb * 8.0 / link_rate(link2);
-                            st.link_busy_s[link2] += tx;
-                            st.link_bytes[link2] += fb;
-                            let ev = Ev::LinkDone { link: link2 };
-                            push_event(&mut st.heap, &mut st.seq, t + tx, ev);
-                        }
+                    }
+                    if let Some(ii) = st.tiles[tile as usize].injection {
+                        st.injection_outcomes[ii].finished_s = Some(t);
+                    }
+                    if let Some(tr) = st.trace.as_deref_mut() {
+                        tr.emit_tile(t, tile, TraceKind::Downlink { tile, sat });
                     }
                 }
             }
         }
         phases::bump_events_drained(drained);
+    }
+
+    /// Enqueue `msg` on directed link `link` — every link entry (first
+    /// send, relay hop, ARQ retransmission, reroute) funnels through
+    /// here — emitting the enqueue/TX-start trace events and starting
+    /// transmission immediately when the link is idle.
+    fn isl_send(&self, st: &mut SimState, t: f64, link: usize, msg: IslMsg) {
+        let tile = msg.tile;
+        if let Some(tr) = st.trace.as_deref_mut() {
+            let kind = TraceKind::IslEnqueue {
+                tile,
+                link: link as u32,
+                from_sat: self.links.src_of(link),
+                to_sat: msg.dest_sat as u32,
+                bytes: msg.bytes,
+            };
+            tr.emit_tile(t, tile, kind);
+        }
+        isl_enqueue(&mut st.link_queue[link], st.link_busy[link], st.priority_isl, msg);
+        if !st.link_busy[link] {
+            st.link_busy[link] = true;
+            // Idle link: the just-queued message is the front and starts
+            // transmitting now.
+            if let Some(tr) = st.trace.as_deref_mut() {
+                let kind = TraceKind::TxStart {
+                    tile,
+                    link: link as u32,
+                    sat: self.links.src_of(link),
+                };
+                tr.emit_tile(t, tile, kind);
+            }
+            let fb = st.link_queue[link].front().unwrap().bytes;
+            let tx = fb * 8.0 / self.link_rate(link);
+            st.link_busy_s[link] += tx;
+            st.link_bytes[link] += fb;
+            push_event(&mut st.heap, &mut st.seq, t + tx, Ev::LinkDone { link });
+        }
+    }
+
+    /// Decide one popped transfer attempt's fate under the loss model and
+    /// the chaos windows covering `t`: `(lost, corrupted)`.  Pure in
+    /// `(seed, tile, link, attempt)` plus wall-clock window membership —
+    /// no shared RNG stream — so fates are independent of event order and
+    /// the [`Simulator::run_compare_pair`] fork stays exact.
+    fn attempt_fate(&self, lm: &LossModel, msg: &IslMsg, link: usize, t: f64) -> (bool, bool) {
+        let undirected = (link / 2) as u32;
+        let mut p = lm.loss_p;
+        for w in &self.cfg.chaos {
+            if w.t0_s <= t && t < w.t1_s {
+                match w.kind {
+                    ChaosKind::Flap { link: l } if l == undirected => return (true, false),
+                    ChaosKind::LossRate { link: l, add_p } if l == undirected => p += add_p,
+                    _ => {}
+                }
+            }
+        }
+        if p > 0.0 && loss_chance(self.cfg.seed, msg.tile, link, msg.attempt, p.min(1.0)) {
+            return (true, false);
+        }
+        if lm.corrupt_p > 0.0
+            && loss_chance(self.cfg.seed ^ CORRUPT_SALT, msg.tile, link, msg.attempt, lm.corrupt_p)
+        {
+            return (false, true);
+        }
+        (false, false)
+    }
+
+    /// A transfer attempt was lost (or corrupted): schedule the ARQ
+    /// retransmission after its exponential backoff, or — when the
+    /// attempt budget or per-hop timeout exhausts — apply the degradation
+    /// policy.  Returns the message to carry on delivering (the
+    /// reduced-bytes partial under [`DegradePolicy::DegradeQuality`]),
+    /// `None` otherwise.
+    fn handle_lost_attempt(
+        &self,
+        st: &mut SimState,
+        t: f64,
+        link: usize,
+        msg: IslMsg,
+        lm: &LossModel,
+    ) -> Option<IslMsg> {
+        // Deterministic exponential backoff before retransmission
+        // `attempt + 1`; the shift saturates so huge budgets stay finite.
+        let backoff = lm.backoff_base_s.max(0.0) * (1u64 << msg.attempt.min(20)) as f64;
+        let timed_out = lm.timeout_s > 0.0 && t + backoff - msg.hop_t0 > lm.timeout_s;
+        if msg.attempt + 1 < lm.max_attempts.max(1) && !timed_out {
+            st.metrics.inc_id(st.m_retransmits, 1.0);
+            st.metrics.observe_id(st.m_backoff, backoff);
+            if let Some(tr) = st.trace.as_deref_mut() {
+                let kind = TraceKind::IslRetry {
+                    tile: msg.tile,
+                    link: link as u32,
+                    attempt: msg.attempt + 1,
+                    backoff_s: backoff,
+                };
+                tr.emit_tile(t, msg.tile, kind);
+            }
+            let retry = IslMsg { attempt: msg.attempt + 1, ..msg };
+            push_event(&mut st.heap, &mut st.seq, t + backoff, Ev::Retry { link, msg: retry });
+            return None;
+        }
+        // Attempt budget (or the hop timeout) exhausted.
+        st.metrics.inc_id(st.m_retries_exhausted, 1.0);
+        if let Some(tr) = st.trace.as_deref_mut() {
+            let kind = TraceKind::IslGiveup {
+                tile: msg.tile,
+                link: link as u32,
+                attempt: msg.attempt + 1,
+            };
+            tr.emit_tile(t, msg.tile, kind);
+        }
+        match lm.policy {
+            DegradePolicy::Reroute if !msg.rerouted => {
+                // One detour: re-send toward any other neighbor of the
+                // stuck satellite; later hops re-converge via `next_hop`.
+                let src = self.links.src_of(link) as usize;
+                let row = &self.links.adj
+                    [self.links.off[src] as usize..self.links.off[src + 1] as usize];
+                let alt = row.iter().map(|&(n, _)| n as usize).find(|&n| n != msg.next_sat);
+                match alt {
+                    Some(alt) => {
+                        let link2 = self.links.directed(src, alt);
+                        st.metrics.inc_id(st.m_rerouted, 1.0);
+                        if let Some(tr) = st.trace.as_deref_mut() {
+                            let kind = TraceKind::IslReroute {
+                                tile: msg.tile,
+                                link: link2 as u32,
+                                sat: src as u32,
+                            };
+                            tr.emit_tile(t, msg.tile, kind);
+                        }
+                        let fwd = IslMsg {
+                            next_sat: alt,
+                            attempt: 0,
+                            hop_t0: t,
+                            rerouted: true,
+                            ..msg
+                        };
+                        self.isl_send(st, t, link2, fwd);
+                        None
+                    }
+                    None => {
+                        // No alternate neighbor: the detour degenerates
+                        // to a drop.
+                        st.metrics.inc_id(st.m_tiles_lost, 1.0);
+                        None
+                    }
+                }
+            }
+            DegradePolicy::DegradeQuality => {
+                st.metrics.inc_id(st.m_partial, 1.0);
+                st.tiles[msg.tile as usize].partial = true;
+                let degraded = IslMsg { bytes: msg.bytes * PARTIAL_BYTES_FACTOR, ..msg };
+                if let Some(tr) = st.trace.as_deref_mut() {
+                    let kind = TraceKind::IslDegrade {
+                        tile: msg.tile,
+                        link: link as u32,
+                        bytes: degraded.bytes,
+                    };
+                    tr.emit_tile(t, msg.tile, kind);
+                }
+                Some(degraded)
+            }
+            // Drop — or a second exhaustion after the one allowed
+            // reroute.
+            _ => {
+                st.metrics.inc_id(st.m_tiles_lost, 1.0);
+                None
+            }
+        }
+    }
+
+    /// Release time for a completion held by station-outage chaos windows
+    /// covering `t` — `None` when no outage is active.  Chained windows
+    /// extend the hold to the furthest reachable end.
+    fn outage_release_t(&self, t: f64) -> Option<f64> {
+        let mut rel = None;
+        let mut cur = t;
+        loop {
+            let mut ext: Option<f64> = None;
+            for w in &self.cfg.chaos {
+                if matches!(w.kind, ChaosKind::StationOutage)
+                    && w.t0_s <= cur
+                    && cur < w.t1_s
+                    && w.t1_s > ext.unwrap_or(cur)
+                {
+                    ext = Some(w.t1_s);
+                }
+            }
+            match ext {
+                Some(e) => {
+                    rel = Some(e);
+                    cur = e;
+                }
+                None => return rel,
+            }
+        }
+    }
+
+    /// Finish tile `tile`'s journey at `t` (downlink on `sat`) — or, when
+    /// a station-outage chaos window covers `t`, hold it and queue the
+    /// release at the window's end.
+    fn complete_tile(&self, st: &mut SimState, t: f64, tile: u32, sat: u32) {
+        if let Some(t_rel) = self.outage_release_t(t) {
+            st.tiles[tile as usize].held = true;
+            push_event(&mut st.heap, &mut st.seq, t_rel, Ev::OutageRelease { tile, sat });
+            return;
+        }
+        st.tiles[tile as usize].finished = true;
+        if let Some(ii) = st.tiles[tile as usize].injection {
+            st.injection_outcomes[ii].finished_s = Some(t);
+        }
+        if let Some(tr) = st.trace.as_deref_mut() {
+            tr.emit_tile(t, tile, TraceKind::Downlink { tile, sat });
+        }
     }
 
     /// Aggregate a fully-driven state into the report.
@@ -1328,6 +1722,7 @@ impl<'a> Simulator<'a> {
         }
 
         let unfinished = st.tiles.iter().filter(|ts| !ts.finished).count();
+        let partial_tiles = st.tiles.iter().filter(|ts| ts.partial).count();
         let isl_per_frame =
             st.metrics.counter_id(st.m_isl_bytes) / self.cfg.frames.max(1) as f64;
         let gauges = self.collect_gauges(&st, unfinished);
@@ -1337,6 +1732,7 @@ impl<'a> Simulator<'a> {
             frame_latency_s: worst_latency,
             breakdown,
             unfinished_tiles: unfinished,
+            partial_tiles,
             injections: st.injection_outcomes,
             detections: st.detections,
             trace: st.trace,
@@ -1840,6 +2236,9 @@ mod tests {
             bytes,
             sent_at: 0.0,
             priority,
+            attempt: 0,
+            hop_t0: 0.0,
+            rerouted: false,
         }
     }
 
@@ -2162,5 +2561,211 @@ mod tests {
         // misattributed.
         let spans = crate::trace::spans::assemble(rec);
         assert!(spans.iter().any(|s| s.truncated));
+    }
+
+    #[test]
+    fn loss_hash_is_pure_and_order_independent() {
+        // Per-attempt fates are a pure hash of `(seed, tile, link,
+        // attempt)`, so evaluation order — and hence event-queue order —
+        // can never change them.
+        let grid: Vec<(u32, usize, u32)> = (0..8u32)
+            .flat_map(|t| (0..6usize).flat_map(move |l| (0..4u32).map(move |a| (t, l, a))))
+            .collect();
+        let forward: Vec<bool> =
+            grid.iter().map(|&(t, l, a)| loss_chance(7, t, l, a, 0.5)).collect();
+        let backward: Vec<bool> =
+            grid.iter().rev().map(|&(t, l, a)| loss_chance(7, t, l, a, 0.5)).collect();
+        assert!(forward.iter().eq(backward.iter().rev()));
+        // The extremes are certain, and p = 0.5 actually mixes.
+        assert!(grid.iter().all(|&(t, l, a)| !loss_chance(7, t, l, a, 0.0)));
+        assert!(grid.iter().all(|&(t, l, a)| loss_chance(7, t, l, a, 1.0)));
+        let losses = forward.iter().filter(|&&b| b).count();
+        assert!(losses > 0 && losses < forward.len());
+        // Attempts on the same (tile, link) draw independently: some
+        // retransmission succeeds right where attempt 0 failed, and the
+        // corruption stream is decorrelated from the loss stream.
+        assert!((0..64u32).any(|t| loss_chance(7, t, 0, 0, 0.5) && !loss_chance(7, t, 0, 1, 0.5)));
+        assert!((0..64u32)
+            .any(|t| loss_chance(7, t, 0, 0, 0.5) != loss_chance(7 ^ CORRUPT_SALT, t, 0, 0, 0.5)));
+    }
+
+    #[test]
+    fn zero_probability_loss_model_is_fully_inert() {
+        // `loss: Some(LossModel { loss_p: 0.0, .. })` walks the
+        // loss-enabled decision path on every transfer, yet must
+        // reproduce the loss-free run byte-for-byte — the acceptance bar
+        // that keeps every pre-existing identity pin valid.
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let fingerprint = |r: &SimReport| {
+            (
+                r.metrics.to_json().to_string_compact(),
+                r.frame_latency_s.to_bits(),
+                r.injections
+                    .iter()
+                    .map(|o| o.finished_s.map(f64::to_bits))
+                    .collect::<Vec<_>>(),
+                r.unfinished_tiles,
+            )
+        };
+        let mut armed = traced_cfg(None);
+        armed.loss = Some(LossModel::default());
+        let off = simulate_orbitchain(&wf, &db, &c, traced_cfg(None)).unwrap();
+        let on = simulate_orbitchain(&wf, &db, &c, armed).unwrap();
+        assert_eq!(fingerprint(&off), fingerprint(&on));
+        assert_eq!(on.partial_tiles, 0);
+        assert!(!on.metrics.counted("sim.retransmits"));
+    }
+
+    #[test]
+    fn exhausted_retries_follow_the_configured_policy() {
+        // Heavy loss with a 2-attempt budget exhausts plenty of hops; the
+        // six-sat chain gives interior satellites an alternate neighbor
+        // so `Reroute` has somewhere to detour.
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::uniform(6, crate::profile::Device::JetsonOrinNano, 5.0, 100);
+        let run = |policy: DegradePolicy| {
+            let cfg = SimConfig {
+                frames: 2,
+                // Generous drain: the contended 16 kbit/s links must pop
+                // enough transfer attempts before the measurement cutoff.
+                drain_s: 400.0,
+                isl_rate_bps: Some(16_000.0),
+                loss: Some(LossModel {
+                    loss_p: 0.6,
+                    max_attempts: 2,
+                    backoff_base_s: 0.01,
+                    policy,
+                    ..LossModel::default()
+                }),
+                ..Default::default()
+            };
+            simulate_orbitchain(&wf, &db, &c, cfg).unwrap()
+        };
+        let dropped = run(DegradePolicy::Drop);
+        assert!(dropped.metrics.counter("sim.retransmits") > 0.0);
+        assert!(dropped.metrics.counter("sim.retries_exhausted") > 0.0);
+        assert!(dropped.metrics.counter("sim.tiles_lost") > 0.0);
+        assert_eq!(dropped.metrics.counter("sim.rerouted"), 0.0);
+        assert_eq!(dropped.partial_tiles, 0);
+        assert!(!dropped.metrics.samples("sim.backoff_s").is_empty());
+
+        let rerouted = run(DegradePolicy::Reroute);
+        assert!(rerouted.metrics.counter("sim.rerouted") > 0.0);
+
+        let degraded = run(DegradePolicy::DegradeQuality);
+        assert!(degraded.metrics.counter("sim.partial_results") > 0.0);
+        assert!(degraded.partial_tiles > 0);
+        // Quality degradation always delivers: nothing is ever dropped.
+        assert_eq!(degraded.metrics.counter("sim.tiles_lost"), 0.0);
+    }
+
+    #[test]
+    fn trace_spans_stay_exact_under_loss_and_chaos() {
+        // The seven-component breakdown must still partition each tile's
+        // latency exactly with retries, degrades, flaps and outage holds
+        // in play: ARQ time lands in `wait_isl`, outage holds in
+        // `downlink` (the Downlink commit fires at release time, the same
+        // instant `last_done` advances to).
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let mut cfg = traced_cfg(Some(TraceSpec::default()));
+        // DegradeQuality so every served tile still completes.
+        cfg.loss = Some(LossModel {
+            loss_p: 0.25,
+            max_attempts: 2,
+            policy: DegradePolicy::DegradeQuality,
+            ..LossModel::default()
+        });
+        cfg.chaos = vec![
+            ChaosWindow { t0_s: 2.0, t1_s: 6.0, kind: ChaosKind::LossRate { link: 0, add_p: 0.5 } },
+            ChaosWindow { t0_s: 4.0, t1_s: 8.0, kind: ChaosKind::Flap { link: 1 } },
+            ChaosWindow { t0_s: 0.0, t1_s: 20.0, kind: ChaosKind::StationOutage },
+        ];
+        let rep = simulate_orbitchain(&wf, &db, &c, cfg).unwrap();
+        assert!(rep.metrics.counter("sim.retransmits") > 0.0);
+        let spans = crate::trace::spans::assemble(rep.trace.as_deref().unwrap());
+        let lat = rep.metrics.samples("tile.latency_s");
+        assert_eq!(spans.len(), lat.len());
+        let mut committed = 0;
+        for (i, s) in spans.iter().enumerate() {
+            assert!(!s.truncated);
+            if s.completed {
+                committed += 1;
+                assert_eq!(
+                    s.wall_s().to_bits(),
+                    lat[i].to_bits(),
+                    "tile {i}: span total must equal tile.latency_s under loss"
+                );
+                let err = (s.components_sum() - s.wall_s()).abs();
+                assert!(err < 1e-9, "tile {i}: breakdown sums to {err} off");
+            } else {
+                assert_eq!(lat[i], 0.0, "tile {i}");
+            }
+        }
+        assert!(committed > 0, "chaos run still completes tiles");
+        // Lost attempts surface as ISL queueing somewhere.
+        assert!(spans.iter().any(|s| s.wait_isl_s > 0.0));
+    }
+
+    #[test]
+    fn lossy_compare_pair_matches_double_simulate() {
+        // The shared-warmup fork must stay exact with the ARQ machinery
+        // live: retries pending in the heap at the fork point are cloned,
+        // and every fate re-drawn after the fork hashes identically.
+        let wf = workflow::flood_monitoring(0.5);
+        let db = ProfileDb::jetson();
+        let c = Constellation::jetson();
+        let plan = crate::planner::plan(&wf, &db, &c).unwrap();
+        let routing = crate::routing::route(&wf, &db, &c, &plan).unwrap();
+        let instances = instances_from_plan(&plan, &c);
+        let fingerprint = |r: &SimReport| {
+            (
+                r.metrics.to_json().to_string_compact(),
+                r.frame_latency_s.to_bits(),
+                r.injections
+                    .iter()
+                    .map(|o| o.finished_s.map(f64::to_bits))
+                    .collect::<Vec<_>>(),
+                r.unfinished_tiles,
+                r.partial_tiles,
+            )
+        };
+        let cfg = SimConfig {
+            frames: 4,
+            isl_rate_bps: Some(16_000.0),
+            priority_isl: true,
+            loss: Some(LossModel {
+                loss_p: 0.15,
+                policy: DegradePolicy::DegradeQuality,
+                ..LossModel::default()
+            }),
+            chaos: vec![ChaosWindow {
+                t0_s: 1.0,
+                t1_s: 5.0,
+                kind: ChaosKind::Flap { link: 0 },
+            }],
+            injections: vec![TileInjection {
+                t_s: 3.0,
+                tile_no: 50,
+                deadline_s: 300.0,
+                priority: true,
+                prefer_sat: None,
+                pipeline: None,
+            }],
+            ..Default::default()
+        };
+        let sim = Simulator::new(&wf, &db, &c, &instances, &routing.pipelines, &cfg);
+        let (prio, fifo) = sim.run_compare_pair();
+        assert!(prio.metrics.counter("sim.retransmits") > 0.0);
+        let naive_prio = sim.run();
+        let alt_cfg = SimConfig { priority_isl: false, ..cfg.clone() };
+        let naive_fifo =
+            Simulator::new(&wf, &db, &c, &instances, &routing.pipelines, &alt_cfg).run();
+        assert_eq!(fingerprint(&prio), fingerprint(&naive_prio));
+        assert_eq!(fingerprint(&fifo), fingerprint(&naive_fifo));
     }
 }

@@ -684,6 +684,9 @@ impl TipCueOrchestrator {
         // latency breakdowns as `trace.*` distributions.
         if let (Some(log), Some(rec)) = (trace_log.as_mut(), rep.trace.as_deref()) {
             log.absorb(0, 0.0, rec);
+            if rec.dropped() > 0 {
+                metrics.inc("trace.recorder_dropped", rec.dropped() as f64);
+            }
             crate::trace::spans::observe_spans(
                 &mut metrics,
                 &crate::trace::spans::assemble(rec),

@@ -85,6 +85,27 @@ pub fn entry_json(e: &LogEntry) -> Json {
             pairs.push(("tile", num(*tile)));
             pairs.push(("sat", num(*sat)));
         }
+        TraceKind::IslRetry { tile, link, attempt, backoff_s } => {
+            pairs.push(("tile", num(*tile)));
+            pairs.push(("link", num(*link)));
+            pairs.push(("attempt", num(*attempt)));
+            pairs.push(("backoff", Json::Num(*backoff_s)));
+        }
+        TraceKind::IslGiveup { tile, link, attempt } => {
+            pairs.push(("tile", num(*tile)));
+            pairs.push(("link", num(*link)));
+            pairs.push(("attempt", num(*attempt)));
+        }
+        TraceKind::IslReroute { tile, link, sat } => {
+            pairs.push(("tile", num(*tile)));
+            pairs.push(("link", num(*link)));
+            pairs.push(("sat", num(*sat)));
+        }
+        TraceKind::IslDegrade { tile, link, bytes } => {
+            pairs.push(("tile", num(*tile)));
+            pairs.push(("link", num(*link)));
+            pairs.push(("bytes", Json::Num(*bytes)));
+        }
         TraceKind::CueAdmit { cue, sat, deadline_s } => {
             pairs.push(("cue", num(*cue)));
             pairs.push(("sat", num(*sat)));
@@ -253,6 +274,29 @@ pub fn perfetto(log: &TraceLog) -> Json {
                     e.t_s,
                     vec![("tile", num(*tile))],
                 ));
+            }
+            TraceKind::IslRetry { tile, link, attempt, .. }
+            | TraceKind::IslGiveup { tile, link, attempt } => {
+                // A lost attempt ends the open transmission slice without
+                // a Hop; close it as a "lost" slice so ARQ churn is
+                // visible on the link track.
+                if let Some((t0, _, from)) = open_tx.remove(&(e.epoch, *link)) {
+                    sats.insert(from);
+                    threads.insert((from, TID_LINK0 + *link));
+                    let what = if matches!(e.kind, TraceKind::IslRetry { .. }) {
+                        "lost"
+                    } else {
+                        "giveup"
+                    };
+                    events.push(slice(
+                        format!("t{tile} {what}"),
+                        from,
+                        TID_LINK0 + *link,
+                        t0,
+                        e.t_s,
+                        vec![("tile", num(*tile)), ("attempt", num(*attempt))],
+                    ));
+                }
             }
             TraceKind::CueAdmit { cue, sat, deadline_s } => {
                 threads.insert((ORCH_PID, TID_CPU));

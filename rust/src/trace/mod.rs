@@ -99,8 +99,25 @@ pub enum TraceKind {
     /// The tile's pipeline journey completed (every reachable sink done).
     /// Ground downlink is not modeled, so this closes the span at the
     /// last compute completion; the `downlink` breakdown component is
-    /// structurally zero and reserved for a future ground segment.
+    /// structurally zero and reserved for a future ground segment — except
+    /// under a `StationOutage` chaos window, which defers the completion
+    /// to the window's end and lands the blocked interval here.
     Downlink { tile: u32, sat: u32 },
+    /// A transfer attempt on directed link `link` was lost (or corrupted)
+    /// and ARQ scheduled retransmission `attempt` after `backoff_s`.
+    IslRetry { tile: u32, link: u32, attempt: u32, backoff_s: f64 },
+    /// ARQ exhausted its attempt budget (or the per-hop delivery timeout
+    /// passed) on directed link `link`.  Emitted for every exhaustion;
+    /// under `Drop` the transfer is abandoned here, while `Reroute` /
+    /// `DegradeQuality` follow up with their own event.
+    IslGiveup { tile: u32, link: u32, attempt: u32 },
+    /// Retries exhausted and the `Reroute` policy re-sent the message on
+    /// alternate directed link `link` from satellite `sat`.
+    IslReroute { tile: u32, link: u32, sat: u32 },
+    /// Retries exhausted and the `DegradeQuality` policy delivered a
+    /// reduced-bytes partial result (`bytes` after reduction) over
+    /// directed link `link`.
+    IslDegrade { tile: u32, link: u32, bytes: f64 },
     /// A cue passed token-bucket admission for a pass on `sat`.
     CueAdmit { cue: u32, sat: u32, deadline_s: f64 },
     /// A cue was rejected (`no_pass`: no pass before the deadline;
@@ -134,6 +151,10 @@ impl TraceKind {
             TraceKind::Hop { .. } => "hop",
             TraceKind::Deliver { .. } => "deliver",
             TraceKind::Downlink { .. } => "downlink",
+            TraceKind::IslRetry { .. } => "isl_retry",
+            TraceKind::IslGiveup { .. } => "isl_giveup",
+            TraceKind::IslReroute { .. } => "isl_reroute",
+            TraceKind::IslDegrade { .. } => "isl_degrade",
             TraceKind::CueAdmit { .. } => "cue_admit",
             TraceKind::CueReject { .. } => "cue_reject",
             TraceKind::CueInject { .. } => "cue_inject",
@@ -156,7 +177,11 @@ impl TraceKind {
             | TraceKind::TxStart { tile, .. }
             | TraceKind::Hop { tile, .. }
             | TraceKind::Deliver { tile, .. }
-            | TraceKind::Downlink { tile, .. } => Some(tile),
+            | TraceKind::Downlink { tile, .. }
+            | TraceKind::IslRetry { tile, .. }
+            | TraceKind::IslGiveup { tile, .. }
+            | TraceKind::IslReroute { tile, .. }
+            | TraceKind::IslDegrade { tile, .. } => Some(tile),
             _ => None,
         }
     }

@@ -13,6 +13,7 @@
 //! | `ComputeDone` (stall part) | `migration_stall` | instance handover not yet ready       |
 //! | `ComputeDone` (rest) | `compute`    | service incl. GPU batching-window wait     |
 //! | `IslEnqueue`, `TxStart` | `wait_isl` | queued behind other messages on the link   |
+//! | `IslRetry`, `IslGiveup`, `IslReroute`, `IslDegrade` | `wait_isl` | lost attempt + ARQ backoff |
 //! | `Hop`, `Deliver` | `tx`             | on-the-wire transmission                   |
 //! | `Downlink`      | `downlink`        | ground segment (structurally 0 today)      |
 //!
@@ -179,7 +180,15 @@ impl Builder {
                 w.pending_stall = 0.0;
                 w.commit(t_s);
             }
-            TraceKind::IslEnqueue { .. } | TraceKind::TxStart { .. } => {
+            // ARQ events (lost attempt, backoff re-entry, giveup,
+            // reroute, degrade) all classify as ISL queueing: retry time
+            // is time the message spent not crossing the link.
+            TraceKind::IslEnqueue { .. }
+            | TraceKind::TxStart { .. }
+            | TraceKind::IslRetry { .. }
+            | TraceKind::IslGiveup { .. }
+            | TraceKind::IslReroute { .. }
+            | TraceKind::IslDegrade { .. } => {
                 w.run[WAIT_ISL] += dt;
             }
             TraceKind::Hop { .. } => {

@@ -152,6 +152,44 @@ fn trace_journal_is_deterministic_and_spans_partition_latency() {
 }
 
 #[test]
+fn acceptance_seed7_lossy_mission_retransmits_and_spans_stay_exact() {
+    // `orbitchain mission --seed 7 --loss 0.05 --chaos`: ARQ retransmits
+    // fire, the journal replays byte for byte, and every committed tile
+    // span still partitions its end-to-end latency — retry backoff lands
+    // in the ISL-wait component, never off the books.
+    let mut spec = mission_spec(6, 0.3);
+    spec.dynamic.chaos_flap_mtbf_s = 240.0;
+    let s = Scenario::jetson().with_seed(7).with_loss(0.05).with_mission(spec);
+    let run = || {
+        MissionOrchestrator::new(&s)
+            .with_trace(TraceSpec::default())
+            .run()
+            .expect("lossy mission runs")
+    };
+    let rep = run();
+    assert!(rep.metrics.counter("sim.retransmits") > 0.0, "loss must retransmit");
+    let log = rep.trace.as_ref().expect("tracing was requested");
+    let j1 = export::jsonl(log);
+    let again = run();
+    assert_eq!(
+        j1,
+        export::jsonl(again.trace.as_ref().unwrap()),
+        "lossy mission journal must replay byte-identically"
+    );
+    let committed: Vec<_> = spans::assemble_log(log)
+        .into_iter()
+        .filter(|sp| sp.completed && !sp.truncated)
+        .collect();
+    assert!(!committed.is_empty());
+    for sp in &committed {
+        assert!(
+            (sp.components_sum() - sp.wall_s()).abs() < 1e-9,
+            "breakdown must sum to wall time under loss: {sp:?}"
+        );
+    }
+}
+
+#[test]
 fn tracing_on_or_off_does_not_change_mission_outcomes() {
     // The recorder only observes: the same mission with tracing enabled
     // must produce identical outcomes (the traced run merely adds the
