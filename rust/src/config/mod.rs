@@ -86,6 +86,11 @@ pub struct Scenario {
     /// Exhaustion policy name: `"drop"`, `"reroute"` or `"degrade"`
     /// ([`crate::sim::DegradePolicy`]).  Sim-only.
     pub loss_policy: String,
+    /// SLO watchdog rules ([`crate::watchdog::SloSpec`], `--slo`): when
+    /// set, the orchestrators evaluate them per epoch and attach the
+    /// alert report.  Watch-only — never changes a run outcome and is
+    /// excluded from [`BuildKey`].
+    pub slo: Option<crate::watchdog::SloSpec>,
 }
 
 impl Scenario {
@@ -110,6 +115,7 @@ impl Scenario {
             loss_p: 0.0,
             arq_max_attempts: 4,
             loss_policy: "drop".into(),
+            slo: None,
         }
     }
 
@@ -134,6 +140,7 @@ impl Scenario {
             loss_p: 0.0,
             arq_max_attempts: 4,
             loss_policy: "drop".into(),
+            slo: None,
         }
     }
 
@@ -234,6 +241,12 @@ impl Scenario {
     /// `"degrade"`.
     pub fn with_loss_policy(mut self, policy: impl Into<String>) -> Self {
         self.loss_policy = policy.into();
+        self
+    }
+
+    /// Attach (or clear) the SLO watchdog rules (`--slo`).
+    pub fn with_slo(mut self, slo: Option<crate::watchdog::SloSpec>) -> Self {
+        self.slo = slo;
         self
     }
 
@@ -380,6 +393,13 @@ impl Scenario {
             ("loss_p", Json::Num(self.loss_p)),
             ("arq_max_attempts", Json::from(self.arq_max_attempts)),
             ("loss_policy", Json::from(self.loss_policy.clone())),
+            (
+                "slo",
+                self.slo
+                    .as_ref()
+                    .map(crate::watchdog::SloSpec::to_json)
+                    .unwrap_or(Json::Null),
+            ),
         ])
     }
 
@@ -435,6 +455,12 @@ impl Scenario {
                 .and_then(Json::as_str)
                 .unwrap_or(&base.loss_policy)
                 .to_string(),
+            slo: match j.get("slo") {
+                Some(Json::Null) | None => None,
+                Some(s) => Some(
+                    crate::watchdog::SloSpec::from_json(s).map_err(|e| anyhow!(e))?,
+                ),
+            },
         })
     }
 }
@@ -543,6 +569,22 @@ mod tests {
             Scenario::jetson().with_loss(0.1).loss_model().unwrap().policy,
             crate::sim::DegradePolicy::Drop
         );
+    }
+
+    #[test]
+    fn json_roundtrip_with_slo_spec() {
+        let s = Scenario::jetson()
+            .with_slo(Some(crate::watchdog::SloSpec::mission_defaults()));
+        let back = Scenario::from_json(&s.to_json()).unwrap();
+        assert_eq!(s, back);
+        // Absent and explicit-null both mean "no watchdog".
+        assert!(Scenario::jetson().to_json().get("slo") == Some(&Json::Null));
+        assert!(Scenario::from_json(&Scenario::jetson().to_json())
+            .unwrap()
+            .slo
+            .is_none());
+        // Watch-only: the SLO spec never changes the build identity.
+        assert_eq!(s.build_key(), Scenario::jetson().build_key());
     }
 
     #[test]

@@ -54,6 +54,7 @@ use crate::trace::{TraceKind, TraceLog, TraceSpec, NO_PARENT};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 use crate::util::stats;
+use crate::watchdog::{EpochObservation, SloSpec, Watchdog, WatchdogReport};
 use crate::workflow::Workflow;
 
 pub use events::{DynamicSpec, Event, EventKind, Timeline};
@@ -253,6 +254,9 @@ pub struct DynamicReport {
     /// via [`EpochOrchestrator::with_telemetry`]; `None` for file sinks
     /// and untelemetered runs.
     pub telemetry: Option<Vec<String>>,
+    /// SLO watchdog verdict ([`crate::watchdog`]) when rules were installed
+    /// via [`EpochOrchestrator::with_slo`]; `None` otherwise.
+    pub watchdog: Option<WatchdogReport>,
     pub metrics: Metrics,
 }
 
@@ -289,7 +293,7 @@ impl DynamicReport {
                 ])
             })
             .collect();
-        obj(vec![
+        let mut out = obj(vec![
             ("label", Json::from(self.label.clone())),
             ("backend", Json::from(self.backend.clone())),
             ("completion_ratio", Json::Num(self.completion_ratio)),
@@ -303,7 +307,13 @@ impl DynamicReport {
             ("frame_latency_s", Json::Num(self.frame_latency_s)),
             ("epochs", Json::Arr(epochs)),
             ("metrics", self.metrics.to_json()),
-        ])
+        ]);
+        // Keyed in only when the watchdog ran so watchdog-off JSON stays
+        // byte-identical to pre-watchdog builds.
+        if let (Json::Obj(map), Some(wd)) = (&mut out, &self.watchdog) {
+            map.insert("watchdog".to_string(), wd.to_json());
+        }
+        out
     }
 
     /// Collapse into the scenario layer's report shape so dynamic points
@@ -353,6 +363,9 @@ pub struct EpochOrchestrator {
     /// Per-attempt ISL loss/ARQ model ([`crate::sim::LossModel`]); `None`
     /// keeps the transport perfectly reliable (retry path fully inert).
     loss: Option<sim::LossModel>,
+    /// SLO watchdog rules ([`crate::watchdog`]); `None` evaluates nothing
+    /// and leaves every byte-identity pin untouched.
+    slo: Option<SloSpec>,
 }
 
 impl EpochOrchestrator {
@@ -373,6 +386,7 @@ impl EpochOrchestrator {
             scenario.isl_rate_bps,
         )
         .with_loss(scenario.loss_model())
+        .with_slo(scenario.slo.clone())
     }
 
     /// Orchestrate hand-built inputs.
@@ -403,6 +417,7 @@ impl EpochOrchestrator {
             telemetry: None,
             hist_metrics: false,
             loss: None,
+            slo: None,
         }
     }
 
@@ -410,6 +425,16 @@ impl EpochOrchestrator {
     /// simulator run.
     pub fn with_loss(mut self, loss: Option<sim::LossModel>) -> Self {
         self.loss = loss;
+        self
+    }
+
+    /// Install (or clear) the SLO watchdog ([`crate::watchdog`]): rules
+    /// evaluated at every epoch boundary against the merged registry and
+    /// the simulator's end-of-epoch gauges, with alerts blamed on the
+    /// epoch's chaos windows / hottest sat/link / trace anomalies.
+    /// Watching never changes a run outcome (pinned by tests).
+    pub fn with_slo(mut self, slo: Option<SloSpec>) -> Self {
+        self.slo = slo;
         self
     }
 
@@ -538,6 +563,8 @@ impl EpochOrchestrator {
                     .map_err(|e| ScenarioError::Telemetry(e.to_string()))?,
             ),
         };
+        let mut watchdog: Option<Watchdog> =
+            self.slo.as_ref().map(|s| Watchdog::new(s.clone()));
         // Wall-clock totals already emitted to the (opt-in) profile
         // section; snapshots send increments only.
         let mut prof_emitted = (0.0f64, 0.0f64, 0.0f64);
@@ -728,6 +755,7 @@ impl EpochOrchestrator {
                 .collect();
             cues_injected += cue_tiles;
 
+            let epoch_chaos = chaos_windows(&self.timeline, t0, epoch_s);
             let cfg = SimConfig {
                 frames,
                 drain_s: if frames == 0 { epoch_s } else { 0.0 },
@@ -739,7 +767,7 @@ impl EpochOrchestrator {
                 trace: self.trace,
                 hist_metrics: self.hist_metrics,
                 loss: self.loss.clone(),
-                chaos: chaos_windows(&self.timeline, t0, epoch_s),
+                chaos: epoch_chaos.clone(),
                 ..Default::default()
             };
             injected += (frames * epoch_c.tiles_per_frame + warm + cue_tiles) as f64;
@@ -839,6 +867,33 @@ impl EpochOrchestrator {
                 w.epoch_snapshot(e as u64, t0 + epoch_s, &merged, &rep.gauges, &prof)
                     .map_err(|err| ScenarioError::Telemetry(err.to_string()))?;
             }
+
+            // SLO watchdog pass at the same epoch boundary the telemetry
+            // stream snapshots: the merged registry, the simulator's
+            // end-of-epoch gauges, the cumulative cue-outcome extras, this
+            // epoch's chaos windows and the trace journal so far.
+            if let Some(wd) = watchdog.as_mut() {
+                let miss_rate = if cues_injected > 0 {
+                    cues_missed as f64 / cues_injected as f64
+                } else {
+                    0.0
+                };
+                let extra = [
+                    ("cue_miss_rate", miss_rate),
+                    ("cues_injected", cues_injected as f64),
+                    ("cues_missed", cues_missed as f64),
+                ];
+                wd.observe(&EpochObservation {
+                    epoch: e as u64,
+                    t0_s: t0,
+                    t1_s: t0 + epoch_s,
+                    metrics: &merged,
+                    gauges: &rep.gauges,
+                    extra: &extra,
+                    chaos: &epoch_chaos,
+                    trace: trace_log.as_ref(),
+                });
+            }
         }
 
         // Mission-wide completion from the merged per-function counters.
@@ -885,6 +940,22 @@ impl EpochOrchestrator {
         }
         let state = current.as_ref().expect("tables just built");
 
+        // Close the watchdog with a final counter/quantile-only pass (the
+        // `dynamic.*` summary counters landed after the last epoch
+        // boundary), then fold its tally into the registry *before* the
+        // final snapshot so the alert counts ride the telemetry stream.
+        let watchdog = watchdog.map(|wd| {
+            let rep = wd.finish(
+                self.spec.epochs as u64,
+                self.spec.epochs as f64 * epoch_s,
+                &merged,
+            );
+            merged.inc("watchdog.rules", rep.rules as f64);
+            merged.inc("watchdog.alerts_fired", rep.fired() as f64);
+            merged.inc("watchdog.alerts_cleared", rep.cleared() as f64);
+            rep
+        });
+
         // Final absolute-completing snapshot after the summary counters.
         let telemetry = match telem {
             None => None,
@@ -920,6 +991,7 @@ impl EpochOrchestrator {
             notes,
             trace: trace_log,
             telemetry,
+            watchdog,
             metrics: merged,
         })
     }

@@ -52,6 +52,11 @@
 //! * [`trace`] — deterministic flight recorder: ring-buffered typed events
 //!   with causal parents across sim/mission/dynamic/tipcue, per-tile/per-cue
 //!   span assembly with latency breakdowns, JSONL + Perfetto exporters.
+//! * [`watchdog`] — online SLO engine: declarative rules over counters,
+//!   distribution quantiles and per-epoch gauges with debounce/hysteresis,
+//!   byte-deterministic alerts with causal blame (chaos window, hottest
+//!   sat/link, dominant trace anomaly), and the run-to-run regression
+//!   `diff` engine.
 //! * [`exp`] — one driver per paper figure/table (all through
 //!   [`scenario::Orchestrator`]).
 //! * [`config`] — scenario configuration & §6.1 presets.
@@ -76,6 +81,7 @@ pub mod telemetry;
 pub mod tipcue;
 pub mod trace;
 pub mod util;
+pub mod watchdog;
 pub mod workflow;
 
 /// Crate-wide result type.

@@ -16,6 +16,7 @@
 //! orbitchain tipcue     [same flags] [--tip-rate R] [--cue-deadline S] [--reserve F]
 //!                       [--pass-dt S] [--min-elevation D] [--loss P] [--backend B]
 //!                       [--trace PATH[:CAP]] [--telemetry PATH[:N]] [--hist-metrics]
+//!                       [--slo default|spec.json] [--alerts PATH]
 //!                       [--profile] [--json]
 //! orbitchain dynamic    [same flags] [--epochs N] [--epoch-frames N] [--mtbf S] [--mttr S]
 //!                       [--link-mtbf S] [--link-mttr S] [--degrade-factor F]
@@ -23,14 +24,19 @@
 //!                       [--area-visibility] [--state-bytes B] [--loss P] [--chaos]
 //!                       [--backend B]
 //!                       [--no-baseline] [--trace PATH[:CAP]] [--telemetry PATH[:N]]
-//!                       [--hist-metrics] [--profile] [--json]
+//!                       [--hist-metrics] [--slo default|spec.json] [--alerts PATH]
+//!                       [--profile] [--json]
 //! orbitchain mission    [same flags, --sats takes a comma list] [--epochs N]
 //!                       [--epoch-frames N] [--mtbf S] [--mttr S] [--link-mtbf S]
 //!                       [--link-mttr S] [--detection-rate R] [--cue-deadline S]
 //!                       [--reserve F] [--pass-dt S] [--min-elevation D]
 //!                       [--loss P] [--chaos] [--fifo] [--backend B] [--trace PATH[:CAP]]
-//!                       [--telemetry PATH[:N]] [--hist-metrics] [--profile] [--json]
-//! orbitchain report     <stream.jsonl> [--trace journal.jsonl] [--top K] [--json]
+//!                       [--telemetry PATH[:N]] [--hist-metrics] [--slo default|spec.json]
+//!                       [--alerts PATH] [--profile] [--json]
+//! orbitchain report     <stream.jsonl> [--trace journal.jsonl] [--alerts alerts.jsonl]
+//!                       [--top K] [--json]
+//! orbitchain diff       <a> <b> [--tol-abs X] [--tol-rel R] [--top K] [--json]
+//!                       # exit 1 when divergent beyond tolerances
 //! orbitchain experiment <fig3b|..|fig20|tab1|dynamic|tipcue|mission|chaos|all>
 //!                       [--device jetson|rpi] [--frames N] [--seed N] [--json]
 //! orbitchain infer      [--model cloud] [--tiles N] [--artifacts DIR]  # PJRT HIL
@@ -54,8 +60,9 @@ use orbitchain::scenario::{
 use orbitchain::telemetry::stream::StreamSpec;
 use orbitchain::tipcue::{CueStatus, TipCueOrchestrator};
 use orbitchain::trace::{TraceLog, TraceSpec};
-use orbitchain::util::json::obj;
+use orbitchain::util::json::{obj, Json};
 use orbitchain::util::stats;
+use orbitchain::watchdog::{self, SloSpec, WatchdogReport};
 use orbitchain::{planner, routing};
 
 fn main() {
@@ -295,6 +302,8 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     "backend",
                     "trace",
                     "telemetry",
+                    "slo",
+                    "alerts",
                     "hist-metrics",
                     "profile",
                     "json",
@@ -322,6 +331,8 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 "no-baseline",
                 "trace",
                 "telemetry",
+                "slo",
+                "alerts",
                 "hist-metrics",
                 "profile",
                 "json",
@@ -357,6 +368,8 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 "backend",
                 "trace",
                 "telemetry",
+                "slo",
+                "alerts",
                 "hist-metrics",
                 "profile",
                 "json",
@@ -367,8 +380,16 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             cmd_mission(&flags)
         }
         "report" => {
-            ensure_known_flags("report", &flags, &["trace", "top", "json"])?;
+            ensure_known_flags("report", &flags, &["trace", "top", "alerts", "json"])?;
             cmd_report(&pos, &flags)
+        }
+        "diff" => {
+            ensure_known_flags(
+                "diff",
+                &flags,
+                &["tol-abs", "tol-rel", "top", "json"],
+            )?;
+            cmd_diff(&pos, &flags)
         }
         "experiment" => {
             ensure_known_flags("experiment", &flags, &["device", "frames", "seed", "json"])?;
@@ -405,8 +426,10 @@ fn print_help() {
          \x20             deadline-bound cue tasks admitted against a capacity reserve\n\
          \x20 mission     the combined loop: dynamic re-planning + detection-derived\n\
          \x20             tip-and-cue with per-cue routing, FIFO vs priority ISLs\n\
-         \x20 report      fold a --telemetry stream (and optionally a --trace journal)\n\
-         \x20             into the mission observatory dashboard\n\
+         \x20 report      fold a --telemetry stream (and optionally a --trace journal\n\
+         \x20             and --alerts JSONL) into the mission observatory dashboard\n\
+         \x20 diff        run-to-run regression diff of two telemetry streams or\n\
+         \x20             metric exports; exit 1 when divergent beyond tolerances\n\
          \x20 experiment  regenerate a paper figure/table (fig3b..fig20, dynamic,\n\
          \x20             tipcue, mission, chaos, all)\n\
          \x20 infer       hardware-in-the-loop PJRT inference on synthetic tiles\n\
@@ -437,7 +460,10 @@ fn print_help() {
          observability: --telemetry PATH[:N] (per-epoch delta snapshots, every Nth)\n\
          \x20             --hist-metrics (bounded-memory histogram registry)\n\
          \x20             --profile (wall-clock phase timers; non-deterministic)\n\
-         report flags:  --trace journal.jsonl --top K --json"
+         \x20             --slo default|spec.json (online SLO watchdog; deterministic\n\
+         \x20             alerts with causal blame) --alerts PATH (alerts JSONL)\n\
+         report flags:  --trace journal.jsonl --alerts alerts.jsonl --top K --json\n\
+         diff flags:    --tol-abs X --tol-rel R --top K --json"
     );
 }
 
@@ -877,6 +903,84 @@ fn write_trace(path: &str, log: &TraceLog, quiet: bool) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse `--slo default|<spec.json>` into an [`SloSpec`].
+fn parse_slo_flag(
+    flags: &HashMap<String, String>,
+) -> anyhow::Result<Option<SloSpec>> {
+    let Some(raw) = flags.get("slo") else {
+        return Ok(None);
+    };
+    if raw == "true" {
+        anyhow::bail!("--slo needs `default` or a spec path, e.g. --slo slo.json");
+    }
+    if raw == "default" {
+        return Ok(Some(SloSpec::mission_defaults()));
+    }
+    let text = std::fs::read_to_string(raw)
+        .map_err(|e| anyhow::anyhow!("reading SLO spec {raw}: {e}"))?;
+    let j = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing SLO spec {raw}: {e}"))?;
+    SloSpec::from_json(&j)
+        .map(Some)
+        .map_err(|e| anyhow::anyhow!("SLO spec {raw}: {e}"))
+}
+
+/// Write the byte-deterministic alerts JSONL (when `--alerts` asked for
+/// it) and, unless emitting machine-readable JSON on stdout, print the
+/// watchdog verdict with each alert's causal blame.
+fn emit_watchdog(
+    wd: Option<&WatchdogReport>,
+    flags: &HashMap<String, String>,
+) -> anyhow::Result<()> {
+    let alerts_path = match flags.get("alerts") {
+        None => None,
+        Some(raw) if raw == "true" => {
+            anyhow::bail!("--alerts needs a path, e.g. --alerts alerts.jsonl")
+        }
+        Some(path) => Some(path.clone()),
+    };
+    let Some(wd) = wd else {
+        if alerts_path.is_some() {
+            anyhow::bail!("--alerts needs a watchdog; add --slo default (or a spec path)");
+        }
+        return Ok(());
+    };
+    if let Some(path) = &alerts_path {
+        std::fs::write(path, wd.alerts_jsonl())
+            .map_err(|e| anyhow::anyhow!("writing alerts {path}: {e}"))?;
+    }
+    if !flags.contains_key("json") {
+        println!(
+            "watchdog: rules={} fired={} cleared={}{}",
+            wd.rules,
+            wd.fired(),
+            wd.cleared(),
+            alerts_path
+                .as_deref()
+                .map(|p| format!(" -> {p}"))
+                .unwrap_or_default()
+        );
+        for a in &wd.alerts {
+            let blame = a
+                .blame
+                .chaos
+                .as_deref()
+                .map(|c| format!("  blame={c}"))
+                .unwrap_or_default();
+            println!(
+                "  {:<5} {:<20} epoch={} value={:.3} {} {:.3}{blame}",
+                a.kind.name(),
+                a.rule,
+                a.epoch,
+                a.value,
+                a.op.name(),
+                a.threshold,
+            );
+        }
+    }
+    Ok(())
+}
+
 /// Epoch-driven orchestration: run the configured fault trace with
 /// re-planning, then (unless `--no-baseline`) the identical trace with the
 /// static ride-through policy, and report the availability/overhead
@@ -896,7 +1000,13 @@ fn cmd_dynamic(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 
     let trace = parse_trace_flag(flags)?;
     let telemetry = parse_telemetry_flag(flags)?;
+    let slo = parse_slo_flag(flags)?;
+    // Only the re-planning run is watched; the static baseline is a
+    // control measurement, not a mission.
     let mut orch = EpochOrchestrator::new(&s).with_backend(backend);
+    if slo.is_some() {
+        orch = orch.with_slo(slo);
+    }
     if let Some((_, tspec)) = &trace {
         orch = orch.with_trace(*tspec);
     }
@@ -915,12 +1025,14 @@ fn cmd_dynamic(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         write_trace(path, log, flags.contains_key("json"))?;
     }
     note_telemetry(&telemetry, flags.contains_key("json"));
+    emit_watchdog(dyn_rep.watchdog.as_ref(), flags)?;
     let static_rep = if flags.contains_key("no-baseline") {
         None
     } else {
         Some(
             EpochOrchestrator::new(&s)
                 .with_backend(backend)
+                .with_slo(None)
                 .with_timeline(timeline.clone())
                 .replanning(false)
                 .run()?,
@@ -1090,6 +1202,7 @@ fn cmd_mission(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 
     let trace = parse_trace_flag(flags)?;
     let telemetry = parse_telemetry_flag(flags)?;
+    let slo = parse_slo_flag(flags)?;
     let mut reports = Vec::new();
     for (i, ns) in sats_list.iter().enumerate() {
         let mut s = base.clone();
@@ -1112,6 +1225,15 @@ fn cmd_mission(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         if let Some(tspec) = telemetry.as_ref().filter(|_| i == 0) {
             orch = orch.with_telemetry(tspec.clone());
         }
+        // Like the journal/stream, the watchdog follows the first
+        // constellation of a `--sats` comma list.
+        if i == 0 {
+            if slo.is_some() {
+                orch = orch.with_slo(slo.clone());
+            }
+        } else {
+            orch = orch.with_slo(None);
+        }
         if flags.contains_key("hist-metrics") {
             orch = orch.with_hist_metrics(true);
         }
@@ -1124,6 +1246,10 @@ fn cmd_mission(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         write_trace(path, log, flags.contains_key("json"))?;
     }
     note_telemetry(&telemetry, flags.contains_key("json"));
+    emit_watchdog(
+        reports.first().and_then(|r| r.watchdog.as_ref()),
+        flags,
+    )?;
 
     if flags.contains_key("json") {
         let arr: Vec<orbitchain::util::json::Json> =
@@ -1267,7 +1393,11 @@ fn cmd_tipcue(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     };
     let trace = parse_trace_flag(flags)?;
     let telemetry = parse_telemetry_flag(flags)?;
+    let slo = parse_slo_flag(flags)?;
     let mut orch = TipCueOrchestrator::new(&s).with_backend(backend);
+    if slo.is_some() {
+        orch = orch.with_slo(slo);
+    }
     if let Some((_, tspec)) = &trace {
         orch = orch.with_trace(*tspec);
     }
@@ -1282,6 +1412,7 @@ fn cmd_tipcue(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         write_trace(path, log, flags.contains_key("json"))?;
     }
     note_telemetry(&telemetry, flags.contains_key("json"));
+    emit_watchdog(rep.watchdog.as_ref(), flags)?;
 
     if flags.contains_key("json") {
         println!("{}", rep.to_json().to_string_pretty());
@@ -1384,6 +1515,16 @@ fn cmd_report(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result
                 .map_err(|e| anyhow::anyhow!("reading trace journal {path}: {e}"))?,
         ),
     };
+    let alerts_text = match flags.get("alerts") {
+        None => None,
+        Some(raw) if raw == "true" => {
+            anyhow::bail!("--alerts needs an alerts path, e.g. --alerts alerts.jsonl")
+        }
+        Some(path) => Some(
+            std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("reading alerts {path}: {e}"))?,
+        ),
+    };
     let opts = ReportOptions {
         top_k: match flags.get("top") {
             None => ReportOptions::default().top_k,
@@ -1397,8 +1538,60 @@ fn cmd_report(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result
         },
         json: flags.contains_key("json"),
     };
-    let rendered = orbitchain::report::render(&stream_text, journal_text.as_deref(), &opts)?;
+    let rendered = orbitchain::report::render(
+        &stream_text,
+        journal_text.as_deref(),
+        alerts_text.as_deref(),
+        &opts,
+    )?;
     println!("{rendered}");
+    Ok(())
+}
+
+/// Run-to-run regression diff over two telemetry streams or metric JSON
+/// exports: counters, distribution shapes (total-variation distance),
+/// per-epoch gauges, and stream structure. Exits 1 when divergent beyond
+/// the tolerances, 0 when clean — made for CI gates.
+fn cmd_diff(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let [a_path, b_path] = pos else {
+        anyhow::bail!(
+            "diff needs exactly two paths, e.g. `orbitchain diff base.jsonl cand.jsonl` \
+             (telemetry streams or metric JSON exports)"
+        );
+    };
+    let a_text = std::fs::read_to_string(a_path)
+        .map_err(|e| anyhow::anyhow!("reading {a_path}: {e}"))?;
+    let b_text = std::fs::read_to_string(b_path)
+        .map_err(|e| anyhow::anyhow!("reading {b_path}: {e}"))?;
+    let mut opts = watchdog::diff::DiffOptions::default();
+    if let Some(raw) = flags.get("tol-abs") {
+        opts.tol_abs = raw
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad --tol-abs {raw:?}: {e}"))?;
+    }
+    if let Some(raw) = flags.get("tol-rel") {
+        opts.tol_rel = raw
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad --tol-rel {raw:?}: {e}"))?;
+    }
+    if let Some(raw) = flags.get("top") {
+        let k: usize = raw
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad --top {raw:?}: {e}"))?;
+        if k == 0 {
+            anyhow::bail!("--top must be >= 1");
+        }
+        opts.top_k = k;
+    }
+    let rep = watchdog::diff::diff_texts(&a_text, &b_text, &opts)?;
+    if flags.contains_key("json") {
+        println!("{}", rep.to_json().to_string_pretty());
+    } else {
+        println!("{}", rep.render_text(&opts));
+    }
+    if rep.divergent {
+        std::process::exit(1);
+    }
     Ok(())
 }
 

@@ -69,6 +69,7 @@ use crate::tipcue::{group_tile_for_sat, CueRecord, CueStatus, Tip};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 use crate::util::stats;
+use crate::watchdog::{EpochObservation, SloSpec, Watchdog, WatchdogReport};
 use crate::workflow::Workflow;
 
 /// Seed mixing constant for tip promotion/geolocation (keeps the stream
@@ -278,6 +279,9 @@ pub struct MissionReport {
     /// requested via [`MissionOrchestrator::with_telemetry`]; `None` for
     /// file sinks (flushed to disk) and untelemetered runs.
     pub telemetry: Option<Vec<String>>,
+    /// SLO watchdog verdict ([`crate::watchdog`]) when rules were installed
+    /// via [`MissionOrchestrator::with_slo`]; `None` otherwise.
+    pub watchdog: Option<WatchdogReport>,
     pub metrics: Metrics,
 }
 
@@ -378,7 +382,7 @@ impl MissionReport {
                 ])
             })
             .collect();
-        obj(vec![
+        let mut out = obj(vec![
             ("label", Json::from(self.label.clone())),
             ("backend", Json::from(self.backend.clone())),
             ("priority_isl", Json::from(self.priority_isl)),
@@ -425,7 +429,13 @@ impl MissionReport {
             ("epochs", Json::Arr(epochs)),
             ("cues", Json::Arr(cues)),
             ("metrics", self.metrics.to_json()),
-        ])
+        ]);
+        // Keyed in only when the watchdog ran so watchdog-off JSON stays
+        // byte-identical to pre-watchdog builds.
+        if let (Json::Obj(map), Some(wd)) = (&mut out, &self.watchdog) {
+            map.insert("watchdog".to_string(), wd.to_json());
+        }
+        out
     }
 
     /// Collapse into the scenario layer's report shape so mission points
@@ -486,6 +496,9 @@ pub struct MissionOrchestrator {
     /// Per-attempt ISL loss/ARQ model ([`crate::sim::LossModel`]); `None`
     /// keeps the transport perfectly reliable (retry path fully inert).
     loss: Option<sim::LossModel>,
+    /// SLO watchdog rules ([`crate::watchdog`]); `None` evaluates nothing
+    /// and leaves every byte-identity pin untouched.
+    slo: Option<SloSpec>,
 }
 
 impl MissionOrchestrator {
@@ -516,6 +529,7 @@ impl MissionOrchestrator {
             telemetry: None,
             hist_metrics: false,
             loss: scenario.loss_model(),
+            slo: scenario.slo.clone(),
         }
     }
 
@@ -523,6 +537,16 @@ impl MissionOrchestrator {
     /// simulator run (defaults to the scenario's `loss_p`/`arq_*` knobs).
     pub fn with_loss(mut self, loss: Option<sim::LossModel>) -> Self {
         self.loss = loss;
+        self
+    }
+
+    /// Install (or clear) the SLO watchdog ([`crate::watchdog`]): rules
+    /// are evaluated at every epoch boundary against the merged registry,
+    /// the epoch gauges and the cue budget, with alerts blamed on the
+    /// epoch's chaos windows / hottest sat/link / trace anomalies.
+    /// Watching never changes a mission outcome (pinned by tests).
+    pub fn with_slo(mut self, slo: Option<SloSpec>) -> Self {
+        self.slo = slo;
         self
     }
 
@@ -714,6 +738,8 @@ impl MissionOrchestrator {
                     .map_err(|e| ScenarioError::Telemetry(e.to_string()))?,
             ),
         };
+        let mut watchdog: Option<Watchdog> =
+            self.slo.as_ref().map(|s| Watchdog::new(s.clone()));
         // Wall-clock totals already emitted to the stream's (opt-in,
         // non-deterministic) profile section; the next snapshot sends only
         // the increment.
@@ -951,6 +977,7 @@ impl MissionOrchestrator {
                 &extended
             };
 
+            let epoch_chaos = chaos_windows(&self.timeline, t0, epoch_s);
             let cfg = SimConfig {
                 frames,
                 drain_s: if frames == 0 { epoch_s } else { 0.0 },
@@ -965,7 +992,7 @@ impl MissionOrchestrator {
                 trace: self.trace,
                 hist_metrics: self.hist_metrics,
                 loss: self.loss.clone(),
-                chaos: chaos_windows(&self.timeline, t0, epoch_s),
+                chaos: epoch_chaos.clone(),
             };
             injected +=
                 (frames * epoch_c.tiles_per_frame + warm + cues_injected) as f64;
@@ -1257,6 +1284,36 @@ impl MissionOrchestrator {
                 w.epoch_snapshot(e as u64, t0 + epoch_s, &merged, &gauges, &prof)
                     .map_err(|err| ScenarioError::Telemetry(err.to_string()))?;
             }
+
+            // SLO watchdog pass at the same epoch boundary the telemetry
+            // stream snapshots: the merged registry, the simulator's
+            // end-of-epoch gauges (plus the cue-reserve headroom), the
+            // cumulative cue-outcome extras, this epoch's chaos windows and
+            // the trace journal so far (for causal blame).
+            if let Some(wd) = watchdog.as_mut() {
+                let mut gauges = rep.gauges.clone();
+                gauges.cue_headroom =
+                    Some(budget_rate * (t0 + epoch_s) - admitted as f64);
+                let outcomes = (completed + missed) as f64;
+                let miss_rate =
+                    if outcomes > 0.0 { missed as f64 / outcomes } else { 0.0 };
+                let extra = [
+                    ("cue_miss_rate", miss_rate),
+                    ("cues_admitted", admitted as f64),
+                    ("cues_completed", completed as f64),
+                    ("cues_missed", missed as f64),
+                ];
+                wd.observe(&EpochObservation {
+                    epoch: e as u64,
+                    t0_s: t0,
+                    t1_s: t0 + epoch_s,
+                    metrics: &merged,
+                    gauges: &gauges,
+                    extra: &extra,
+                    chaos: &epoch_chaos,
+                    trace: trace_log.as_ref(),
+                });
+            }
         }
 
         // Admitted cues whose pass never arrived before the mission ended.
@@ -1358,6 +1415,20 @@ impl MissionOrchestrator {
         }
         let state = current.as_ref().expect("tables just built");
 
+        // Close the watchdog with a final counter/quantile-only pass (the
+        // `mission.*` summary counters and compare-overlay samples landed
+        // after the last epoch boundary), then fold its own tally into the
+        // registry *before* the final snapshot so the alert counts ride the
+        // telemetry stream.  With no SLO spec nothing here runs and every
+        // byte-identity pin is untouched.
+        let watchdog = watchdog.map(|wd| {
+            let rep = wd.finish(n_epochs as u64, mission_end, &merged);
+            merged.inc("watchdog.rules", rep.rules as f64);
+            merged.inc("watchdog.alerts_fired", rep.fired() as f64);
+            merged.inc("watchdog.alerts_cleared", rep.cleared() as f64);
+            rep
+        });
+
         // Final absolute-completing snapshot: the end-of-run summary
         // counters (and compare-overlay samples) landed after the last
         // epoch boundary, so replaying the stream reconstructs the full
@@ -1407,6 +1478,7 @@ impl MissionOrchestrator {
             notes,
             trace: trace_log,
             telemetry,
+            watchdog,
             metrics: merged,
         })
     }

@@ -63,19 +63,23 @@ const BREAKDOWN: [(&str, &str); 8] = [
     ("trace.span_total", "TOTAL"),
 ];
 
-/// Render the dashboard from the stream text (JSONL) and an optional
-/// trace-journal text.  Errors on any stream shape/parse defect.
+/// Render the dashboard from the stream text (JSONL), an optional
+/// trace-journal text and an optional watchdog alerts JSONL
+/// ([`crate::watchdog`]).  Errors on any stream shape/parse defect.
 pub fn render(
     stream_text: &str,
     journal_text: Option<&str>,
+    alerts_text: Option<&str>,
     opts: &ReportOptions,
 ) -> anyhow::Result<String> {
     let replayed = stream::replay(stream_text)?;
     let journal = journal_text.map(summarize_journal).transpose()?;
+    let alerts = alerts_text.map(summarize_alerts).transpose()?;
     if opts.json {
-        Ok(dashboard_json(&replayed, journal.as_ref(), opts).to_string_compact())
+        Ok(dashboard_json(&replayed, journal.as_ref(), alerts.as_ref(), opts)
+            .to_string_compact())
     } else {
-        Ok(dashboard_text(&replayed, journal.as_ref(), opts))
+        Ok(dashboard_text(&replayed, journal.as_ref(), alerts.as_ref(), opts))
     }
 }
 
@@ -296,6 +300,42 @@ fn summarize_journal(text: &str) -> anyhow::Result<JournalSummary> {
 }
 
 // ---------------------------------------------------------------------------
+// Alerts summary.
+// ---------------------------------------------------------------------------
+
+/// Parsed watchdog alerts JSONL ([`crate::watchdog::WatchdogReport::alerts_jsonl`]).
+struct AlertsSummary {
+    fired: u64,
+    cleared: u64,
+    events: Vec<Json>,
+}
+
+fn summarize_alerts(text: &str) -> anyhow::Result<AlertsSummary> {
+    let mut fired = 0u64;
+    let mut cleared = 0u64;
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("alerts line {}: not JSON: {e}", i + 1))?;
+        match j.get("kind").and_then(Json::as_str) {
+            Some("fire") => fired += 1,
+            Some("clear") => cleared += 1,
+            _ => {
+                return Err(anyhow::anyhow!(
+                    "alerts line {}: kind is not fire/clear",
+                    i + 1
+                ))
+            }
+        }
+        events.push(j);
+    }
+    Ok(AlertsSummary { fired, cleared, events })
+}
+
+// ---------------------------------------------------------------------------
 // Rendering.
 // ---------------------------------------------------------------------------
 
@@ -310,6 +350,7 @@ fn fmt3(x: f64) -> String {
 fn dashboard_text(
     replayed: &ReplayedStream,
     journal: Option<&JournalSummary>,
+    alerts: Option<&AlertsSummary>,
     opts: &ReportOptions,
 ) -> String {
     let rows = timeline(replayed);
@@ -454,12 +495,49 @@ fn dashboard_text(
         }
     }
 
+    // --- SLO alerts -------------------------------------------------------
+    if let Some(a) = alerts {
+        push(&mut out, "");
+        push(&mut out, "-- slo alerts --");
+        push(&mut out, &format!("fired={} cleared={}", a.fired, a.cleared));
+        for ev in &a.events {
+            let s = |key: &str| {
+                ev.get(key).and_then(Json::as_str).unwrap_or("?").to_string()
+            };
+            let n = |key: &str| {
+                ev.get(key)
+                    .and_then(Json::as_f64)
+                    .map(|x| format!("{x:.3}"))
+                    .unwrap_or_else(|| "?".into())
+            };
+            let blame = ev
+                .get("blame")
+                .and_then(|b| b.get("chaos"))
+                .and_then(Json::as_str)
+                .map(|c| format!("  blame={c}"))
+                .unwrap_or_default();
+            push(
+                &mut out,
+                &format!(
+                    "{:<5} {:<20} epoch={} value={} {} {}{blame}",
+                    s("kind"),
+                    s("rule"),
+                    ev.get("epoch").and_then(Json::as_usize).unwrap_or(0),
+                    n("value"),
+                    s("op"),
+                    n("threshold"),
+                ),
+            );
+        }
+    }
+
     out
 }
 
 fn dashboard_json(
     replayed: &ReplayedStream,
     journal: Option<&JournalSummary>,
+    alerts: Option<&AlertsSummary>,
     opts: &ReportOptions,
 ) -> Json {
     let rows = timeline(replayed);
@@ -567,6 +645,16 @@ fn dashboard_json(
             ]),
         ));
     }
+    if let Some(a) = alerts {
+        fields.push((
+            "alerts",
+            obj(vec![
+                ("fired", Json::from(a.fired as usize)),
+                ("cleared", Json::from(a.cleared as usize)),
+                ("events", Json::Arr(a.events.clone())),
+            ]),
+        ));
+    }
     obj(fields)
 }
 
@@ -599,7 +687,7 @@ mod tests {
     #[test]
     fn renders_text_dashboard_with_all_sections() {
         let text =
-            render(&sample_stream(), None, &ReportOptions::default()).unwrap();
+            render(&sample_stream(), None, None, &ReportOptions::default()).unwrap();
         assert!(text.contains("mission observatory"), "{text}");
         assert!(text.contains("epoch timeline"), "{text}");
         assert!(text.contains("hottest satellites"), "{text}");
@@ -616,14 +704,14 @@ mod tests {
         m.inc("c", 1.0);
         w.final_snapshot(0, 0.0, &m).unwrap();
         let stream = w.finish().unwrap().unwrap().join("\n");
-        let text = render(&stream, None, &ReportOptions::default()).unwrap();
+        let text = render(&stream, None, None, &ReportOptions::default()).unwrap();
         assert!(text.contains("n/a (run with --trace"), "{text}");
     }
 
     #[test]
     fn hottest_satellite_ranking_is_by_cumulative_heat() {
         let text =
-            render(&sample_stream(), None, &ReportOptions { top_k: 1, json: false })
+            render(&sample_stream(), None, None, &ReportOptions { top_k: 1, json: false })
                 .unwrap();
         // Sat 2 carries backlog 3 + queue 1 = 4 > sat 4's queue 2; with
         // top_k = 1 only sat 2 survives.
@@ -641,6 +729,7 @@ mod tests {
     fn json_dashboard_is_parseable_and_complete() {
         let out = render(
             &sample_stream(),
+            None,
             None,
             &ReportOptions { top_k: 5, json: true },
         )
@@ -661,6 +750,7 @@ mod tests {
         let text = render(
             &sample_stream(),
             Some(journal),
+            None,
             &ReportOptions::default(),
         )
         .unwrap();
@@ -682,12 +772,13 @@ mod tests {
     #[test]
     fn recorder_data_loss_surfaces_as_warnings() {
         let text =
-            render(&lossy_trace_stream(), None, &ReportOptions::default()).unwrap();
+            render(&lossy_trace_stream(), None, None, &ReportOptions::default()).unwrap();
         assert!(text.contains("WARNING: 3 tile span(s) truncated"), "{text}");
         assert!(text.contains("WARNING: flight recorder dropped 128 event(s)"), "{text}");
 
         let out = render(
             &lossy_trace_stream(),
+            None,
             None,
             &ReportOptions { top_k: 5, json: true },
         )
@@ -702,10 +793,11 @@ mod tests {
     #[test]
     fn clean_stream_has_no_warnings() {
         let text =
-            render(&sample_stream(), None, &ReportOptions::default()).unwrap();
+            render(&sample_stream(), None, None, &ReportOptions::default()).unwrap();
         assert!(!text.contains("WARNING"), "{text}");
         let out = render(
             &sample_stream(),
+            None,
             None,
             &ReportOptions { top_k: 5, json: true },
         )
@@ -714,11 +806,108 @@ mod tests {
         assert!(j.get("warnings").and_then(Json::as_arr).unwrap().is_empty());
     }
 
+    /// Pin the `--json` dashboard schema: compact serialization orders the
+    /// top-level keys alphabetically (BTreeMap-backed objects), and the
+    /// `warnings` array is always present — empty for a clean stream.
+    /// Downstream consumers (the `diff` engine, CI scripts) key on this.
+    #[test]
+    fn json_dashboard_schema_is_pinned() {
+        let out = render(
+            &sample_stream(),
+            None,
+            None,
+            &ReportOptions { top_k: 5, json: true },
+        )
+        .unwrap();
+        for key in
+            ["breakdown", "every", "hot_links", "hot_sats", "mode", "snapshots"]
+        {
+            assert!(out.contains(&format!("\"{key}\":")), "missing {key}: {out}");
+        }
+        // Alphabetical order of the top-level keys, in serialized form.
+        let keys = [
+            "\"breakdown\":",
+            "\"every\":",
+            "\"hot_links\":",
+            "\"hot_sats\":",
+            "\"mode\":",
+            "\"snapshots\":",
+            "\"timeline\":",
+            "\"warnings\":",
+        ];
+        let mut last = 0usize;
+        for k in keys {
+            let pos = out.find(k).unwrap_or_else(|| panic!("missing {k}: {out}"));
+            assert!(pos >= last, "{k} out of order: {out}");
+            last = pos;
+        }
+        // `warnings` is present even when empty.
+        let j = Json::parse(&out).unwrap();
+        assert_eq!(j.get("warnings").and_then(Json::as_arr).map(Vec::len), Some(0));
+
+        // With a journal and alerts, their keys appear too — `alerts`
+        // sorts first, `journal` between `hot_sats` and `mode`.
+        let out = render(
+            &sample_stream(),
+            Some("{\"kind\":\"capture\",\"t_s\":0.5}"),
+            Some(
+                "{\"blame\":{},\"epoch\":0,\"kind\":\"fire\",\"op\":\"gt\",\
+                 \"rule\":\"r\",\"t_s\":10,\"threshold\":1,\"value\":2}\n",
+            ),
+            &ReportOptions { top_k: 5, json: true },
+        )
+        .unwrap();
+        assert!(out.starts_with("{\"alerts\":"), "{out}");
+        let j = Json::parse(&out).unwrap();
+        let a = j.get("alerts").unwrap();
+        assert_eq!(a.get("fired").and_then(Json::as_usize), Some(1));
+        assert_eq!(a.get("cleared").and_then(Json::as_usize), Some(0));
+        assert_eq!(a.get("events").and_then(Json::as_arr).map(Vec::len), Some(1));
+        assert!(j.get("journal").is_some());
+    }
+
+    #[test]
+    fn alerts_section_renders_and_rejects_malformed_lines() {
+        let alerts = "{\"blame\":{\"chaos\":\"loss_rate link 3 +0.40 \
+                      t=[12.0s,18.0s)\"},\"epoch\":2,\"kind\":\"fire\",\
+                      \"op\":\"gt\",\"rule\":\"link-watermark\",\"t_s\":90,\
+                      \"threshold\":0.75,\"value\":0.9}";
+        let text = render(
+            &sample_stream(),
+            None,
+            Some(alerts),
+            &ReportOptions::default(),
+        )
+        .unwrap();
+        assert!(text.contains("slo alerts"), "{text}");
+        assert!(text.contains("fired=1 cleared=0"), "{text}");
+        assert!(text.contains("link-watermark"), "{text}");
+        assert!(text.contains("blame=loss_rate link 3"), "{text}");
+
+        // Malformed alert lines are named errors, not silent skips.
+        let err = render(
+            &sample_stream(),
+            None,
+            Some("{\"rule\":\"r\"}"),
+            &ReportOptions::default(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("alerts line 1"), "{err}");
+        assert!(render(
+            &sample_stream(),
+            None,
+            Some("not json"),
+            &ReportOptions::default()
+        )
+        .is_err());
+    }
+
     #[test]
     fn malformed_stream_is_an_error() {
-        assert!(render("not json", None, &ReportOptions::default()).is_err());
+        assert!(render("not json", None, None, &ReportOptions::default()).is_err());
         let noheader = "{\"kind\":\"snapshot\",\"epoch\":0,\"t_s\":0}";
-        assert!(render(noheader, None, &ReportOptions::default()).is_err());
+        assert!(render(noheader, None, None, &ReportOptions::default()).is_err());
     }
 
     #[test]
@@ -726,6 +915,7 @@ mod tests {
         assert!(render(
             &sample_stream(),
             Some("{\"no_kind\":1}"),
+            None,
             &ReportOptions::default()
         )
         .is_err());

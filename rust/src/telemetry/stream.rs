@@ -496,6 +496,7 @@ pub fn replay(text: &str) -> anyhow::Result<ReplayedStream> {
     let mut hists: BTreeMap<String, StreamHist> = BTreeMap::new();
     let mut snapshots: Vec<SnapshotInfo> = Vec::new();
     let mut last_epoch: Option<u64> = None;
+    let mut last_ln = 0usize;
 
     for (i, line) in lines {
         let ln = i + 1;
@@ -569,6 +570,22 @@ pub fn replay(text: &str) -> anyhow::Result<ReplayedStream> {
             }
         }
         snapshots.push(SnapshotInfo { epoch, t_s, is_final, json: j });
+        last_ln = ln;
+    }
+
+    // A writer always closes with the absolute-completing final snapshot,
+    // so a stream whose last snapshot is a plain delta was cut off mid-run
+    // — fail loudly instead of silently replaying a partial registry.
+    if let Some(last) = snapshots.last() {
+        if !last.is_final {
+            return Err(shape_err(
+                last_ln,
+                &format!(
+                    "stream truncated: last snapshot (epoch {}) is not final",
+                    last.epoch
+                ),
+            ));
+        }
     }
 
     for (name, h) in &hists {
@@ -799,8 +816,49 @@ mod tests {
              {{\"epoch\":1,\"kind\":\"snapshot\",\"t_s\":0}}"
         ))
         .is_err());
-        // A well-formed minimal stream passes.
-        let ok = replay(&format!("{hdr}\n{{\"epoch\":0,\"kind\":\"snapshot\",\"t_s\":0}}"));
+        // A well-formed minimal stream (closed by a final snapshot) passes.
+        let ok = replay(&format!(
+            "{hdr}\n{{\"epoch\":0,\"final\":true,\"kind\":\"snapshot\",\"t_s\":0}}"
+        ));
         assert!(ok.is_ok());
+    }
+
+    /// A stream cut off mid-run must fail with a named error — never panic
+    /// and never silently replay the partial registry.
+    #[test]
+    fn replay_rejects_truncated_streams() {
+        let mut w = StreamWriter::create(&StreamSpec::in_memory(), false).unwrap();
+        let mut m = Metrics::new();
+        m.inc("tiles.analyzed", 3.0);
+        m.observe("lat", 1.5);
+        w.epoch_snapshot(0, 10.0, &m, &EpochGauges::default(), &[]).unwrap();
+        m.inc("tiles.analyzed", 2.0);
+        w.epoch_snapshot(1, 20.0, &m, &EpochGauges::default(), &[]).unwrap();
+        w.final_snapshot(2, 30.0, &m).unwrap();
+        let lines = w.finish().unwrap().unwrap();
+        let full = lines.join("\n");
+        assert!(replay(&full).is_ok());
+
+        // Whole final line missing: the last snapshot is a delta.
+        let cut = lines[..lines.len() - 1].join("\n");
+        let err = replay(&cut).unwrap_err().to_string();
+        assert!(err.contains("stream truncated"), "{err}");
+        assert!(err.contains("epoch 1"), "{err}");
+        assert!(
+            err.contains(&format!("line {}", lines.len() - 1)),
+            "error names the offending line: {err}"
+        );
+
+        // Mid-line cut: the last line is no longer valid JSON.
+        let half = &full[..full.len() - 10];
+        let err = replay(half).unwrap_err().to_string();
+        assert!(
+            err.contains(&format!("telemetry stream line {}", lines.len())),
+            "{err}"
+        );
+
+        // Header-only streams stay acceptable (nothing was replayed, so
+        // nothing is silently partial).
+        assert!(replay(lines[0].as_str()).is_ok());
     }
 }

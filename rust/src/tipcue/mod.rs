@@ -60,6 +60,7 @@ use crate::trace::{TraceKind, TraceLog, TraceSpec, NO_PARENT};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 use crate::util::stats;
+use crate::watchdog::{EpochObservation, SloSpec, Watchdog, WatchdogReport};
 
 /// Seed mixing constant for tip generation (keeps the tip stream
 /// independent of the simulator's thinning stream and the dynamic layer's
@@ -302,6 +303,9 @@ pub struct TipCueReport {
     /// via [`TipCueOrchestrator::with_telemetry`]; `None` for file sinks
     /// and untelemetered runs.
     pub telemetry: Option<Vec<String>>,
+    /// SLO watchdog verdict ([`crate::watchdog`]) when rules were installed
+    /// via [`TipCueOrchestrator::with_slo`]; `None` otherwise.
+    pub watchdog: Option<WatchdogReport>,
     pub metrics: Metrics,
 }
 
@@ -338,7 +342,7 @@ impl TipCueReport {
                 ])
             })
             .collect();
-        obj(vec![
+        let mut out = obj(vec![
             ("label", Json::from(self.label.clone())),
             ("backend", Json::from(self.backend.clone())),
             ("phi", self.phi.map(Json::Num).unwrap_or(Json::Null)),
@@ -361,7 +365,13 @@ impl TipCueReport {
             ("frame_latency_s", Json::Num(self.frame_latency_s)),
             ("cues", Json::Arr(cues)),
             ("metrics", self.metrics.to_json()),
-        ])
+        ]);
+        // Keyed in only when the watchdog ran so watchdog-off JSON stays
+        // byte-identical to pre-watchdog builds.
+        if let (Json::Obj(map), Some(wd)) = (&mut out, &self.watchdog) {
+            map.insert("watchdog".to_string(), wd.to_json());
+        }
+        out
     }
 
     /// Collapse into the scenario layer's report shape so tip-and-cue
@@ -399,6 +409,9 @@ pub struct TipCueOrchestrator {
     trace: Option<TraceSpec>,
     telemetry: Option<StreamSpec>,
     hist_metrics: bool,
+    /// SLO watchdog rules ([`crate::watchdog`]); `None` evaluates nothing
+    /// and leaves every byte-identity pin untouched.
+    slo: Option<SloSpec>,
 }
 
 impl TipCueOrchestrator {
@@ -407,12 +420,22 @@ impl TipCueOrchestrator {
     pub fn new(scenario: &Scenario) -> Self {
         TipCueOrchestrator {
             spec: scenario.tipcue.clone().unwrap_or_default(),
+            slo: scenario.slo.clone(),
             scenario: scenario.clone(),
             kind: BackendKind::OrbitChain,
             trace: None,
             telemetry: None,
             hist_metrics: false,
         }
+    }
+
+    /// Install (or clear) the SLO watchdog ([`crate::watchdog`]): the
+    /// closed loop is a single simulation, so rules see one epoch pass
+    /// (gauges + cue-outcome extras) and the final counter/quantile pass.
+    /// Watching never changes a run outcome (pinned by tests).
+    pub fn with_slo(mut self, slo: Option<SloSpec>) -> Self {
+        self.slo = slo;
+        self
     }
 
     /// Enable the flight recorder ([`crate::trace`]): the shared
@@ -698,13 +721,49 @@ impl TipCueOrchestrator {
             Some(r) => (r.unrouted_tiles, r.isl_bytes_per_frame),
             None => ((c.tiles_per_frame as f64 - routed).max(0.0), 0.0),
         };
+        let horizon = frames as f64 * df;
+
+        // SLO watchdog: the closed loop is a single simulation, so rules
+        // see one epoch pass over the run's gauges and cue-outcome extras,
+        // then the final counter/quantile pass.  The tally folds into the
+        // registry *before* the telemetry snapshots so it rides the stream.
+        let watchdog = self.slo.as_ref().map(|s| {
+            let mut wd = Watchdog::new(s.clone());
+            let mut gauges = rep.gauges.clone();
+            gauges.cue_headroom = Some(budget_rate * horizon - admitted as f64);
+            let outcomes = (completed + missed) as f64;
+            let miss_rate =
+                if outcomes > 0.0 { missed as f64 / outcomes } else { 0.0 };
+            let extra = [
+                ("cue_miss_rate", miss_rate),
+                ("cues_admitted", admitted as f64),
+                ("cues_completed", completed as f64),
+                ("cues_missed", missed as f64),
+            ];
+            wd.observe(&EpochObservation {
+                epoch: 0,
+                t0_s: 0.0,
+                t1_s: horizon,
+                metrics: &metrics,
+                gauges: &gauges,
+                extra: &extra,
+                chaos: &[],
+                trace: trace_log.as_ref(),
+            });
+            wd.finish(1, horizon, &metrics)
+        });
+        if let Some(wrep) = &watchdog {
+            metrics.inc("watchdog.rules", wrep.rules as f64);
+            metrics.inc("watchdog.alerts_fired", wrep.fired() as f64);
+            metrics.inc("watchdog.alerts_cleared", wrep.cleared() as f64);
+        }
+
         // Telemetry: the single shared simulation is one "epoch" — emit
         // its snapshot with the gauges and headroom, then the final
         // absolute-completing snapshot (all metric writes above are done).
         let telemetry = match &self.telemetry {
             None => None,
             Some(spec) => {
-                let horizon = frames as f64 * df;
                 let mut w = StreamWriter::create(spec, self.hist_metrics)
                     .map_err(|e| ScenarioError::Telemetry(e.to_string()))?;
                 let mut gauges = rep.gauges.clone();
@@ -752,6 +811,7 @@ impl TipCueOrchestrator {
             notes,
             trace: trace_log,
             telemetry,
+            watchdog,
             metrics,
         })
     }

@@ -115,6 +115,25 @@ mod tests {
         assert!((r2 - 1.0).abs() < 1e-12);
     }
 
+    /// Constant y (ss_tot = 0): the fit is exact by definition, so r²
+    /// must be 1.0 — never NaN from the 0/0 — and the line is flat at y.
+    #[test]
+    fn linfit_constant_y_r2_is_one() {
+        let x: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        let y = vec![3.25; 8];
+        let (m, b, r2) = linfit(&x, &y);
+        assert_eq!(m, 0.0);
+        assert!((b - 3.25).abs() < 1e-12);
+        assert!(r2.is_finite(), "r2 must not be NaN for constant y");
+        assert_eq!(r2, 1.0);
+
+        // Degenerate both ways: constant x AND constant y.
+        let (m, b, r2) = linfit(&[2.0, 2.0, 2.0], &[7.0, 7.0, 7.0]);
+        assert_eq!(m, 0.0);
+        assert_eq!(b, 7.0);
+        assert_eq!(r2, 1.0);
+    }
+
     #[test]
     fn linfit_noise_r2_below_one() {
         let x: Vec<f64> = (0..20).map(|i| i as f64).collect();

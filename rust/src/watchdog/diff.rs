@@ -1,0 +1,659 @@
+//! Run-to-run regression diff (`diff` subcommand).
+//!
+//! Compares two runs captured as either telemetry delta streams
+//! ([`crate::telemetry::stream`] JSONL, replayed to the end-of-run
+//! registry) or metric JSON exports ([`crate::telemetry::Metrics::
+//! to_json`] shape, `{"counters":…,"distributions":…}`) — the two may
+//! be mixed.  The report has four axes:
+//!
+//! * **counter deltas** — every counter whose value moved beyond the
+//!   tolerance (a counter absent on one side counts as 0 there);
+//! * **distribution shift** — per distribution: count/mean/p90 deltas
+//!   plus, when both sides carry bucketed data (hist-mode streams, or
+//!   exact streams re-bucketed through [`StreamHist`]), the total-
+//!   variation distance between the normalized bucket mass functions
+//!   (`0` identical, `1` disjoint) — the mergeable-histogram shift the
+//!   summary stats can't see;
+//! * **gauge divergence per epoch** — the scalar timeline gauges
+//!   (backlog, queue depth, unfinished tiles, cue headroom) compared at
+//!   matching snapshot epochs (streams only);
+//! * **structure** — snapshot-count / mode mismatches.
+//!
+//! The verdict is thresholded: with the default zero tolerances *any*
+//! difference is divergence, so a run diffed against itself reports
+//! zero rows (pinned), and the CLI exits nonzero on divergence —
+//! turning every smoke-run pair into a regression gate.
+
+use std::collections::BTreeSet;
+
+use crate::telemetry::hist::StreamHist;
+use crate::telemetry::stream;
+use crate::telemetry::{Dist, Metrics};
+use crate::util::json::{obj, Json};
+use crate::util::stats;
+
+/// Diff tolerances and rendering knobs.
+#[derive(Debug, Clone)]
+pub struct DiffOptions {
+    /// Absolute slack: `|b - a| <= tol_abs + tol_rel * max(|a|, |b|)`
+    /// is not divergence.
+    pub tol_abs: f64,
+    pub tol_rel: f64,
+    /// Rows per axis in the text rendering (JSON keeps every row).
+    pub top_k: usize,
+}
+
+impl Default for DiffOptions {
+    fn default() -> Self {
+        DiffOptions { tol_abs: 0.0, tol_rel: 0.0, top_k: 10 }
+    }
+}
+
+/// One numeric divergence (counters and structure rows).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NumDiff {
+    pub name: String,
+    pub a: f64,
+    pub b: f64,
+}
+
+/// One diverging distribution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DistDiff {
+    pub name: String,
+    pub count_a: f64,
+    pub count_b: f64,
+    pub mean_a: f64,
+    pub mean_b: f64,
+    pub p90_a: f64,
+    pub p90_b: f64,
+    /// Total-variation distance of the bucket mass functions, when both
+    /// sides carry buckets.
+    pub shift: Option<f64>,
+}
+
+/// One diverging per-epoch gauge sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GaugeDiff {
+    pub gauge: String,
+    pub epoch: u64,
+    pub a: f64,
+    pub b: f64,
+}
+
+/// The full diff; `divergent` is the thresholded verdict.
+#[derive(Debug, Clone, Default)]
+pub struct DiffReport {
+    pub counters: Vec<NumDiff>,
+    pub dists: Vec<DistDiff>,
+    pub gauges: Vec<GaugeDiff>,
+    pub structure: Vec<NumDiff>,
+    pub divergent: bool,
+}
+
+impl DiffReport {
+    pub fn to_json(&self) -> Json {
+        let num = |rows: &[NumDiff]| {
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("a", Json::Num(r.a)),
+                            ("b", Json::Num(r.b)),
+                            ("name", Json::from(r.name.clone())),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        let dists = Json::Arr(
+            self.dists
+                .iter()
+                .map(|d| {
+                    let mut fields = vec![
+                        ("count_a", Json::Num(d.count_a)),
+                        ("count_b", Json::Num(d.count_b)),
+                        ("mean_a", Json::Num(d.mean_a)),
+                        ("mean_b", Json::Num(d.mean_b)),
+                        ("name", Json::from(d.name.clone())),
+                        ("p90_a", Json::Num(d.p90_a)),
+                        ("p90_b", Json::Num(d.p90_b)),
+                    ];
+                    if let Some(s) = d.shift {
+                        fields.push(("shift", Json::Num(s)));
+                    }
+                    obj(fields)
+                })
+                .collect(),
+        );
+        let gauges = Json::Arr(
+            self.gauges
+                .iter()
+                .map(|g| {
+                    obj(vec![
+                        ("a", Json::Num(g.a)),
+                        ("b", Json::Num(g.b)),
+                        ("epoch", Json::from(g.epoch as usize)),
+                        ("gauge", Json::from(g.gauge.clone())),
+                    ])
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("counters", num(&self.counters)),
+            ("dists", dists),
+            ("divergent", Json::from(self.divergent)),
+            ("gauges", gauges),
+            ("structure", num(&self.structure)),
+        ])
+    }
+
+    /// Terminal rendering; `top_k` rows per axis, sorted most-divergent
+    /// first.
+    pub fn render_text(&self, opts: &DiffOptions) -> String {
+        let mut out = String::new();
+        if !self.divergent {
+            out.push_str("runs are equivalent within tolerance: no divergence\n");
+            return out;
+        }
+        out.push_str("run divergence detected\n");
+        let clip = |n: usize| n.min(opts.top_k.max(1));
+        if !self.structure.is_empty() {
+            out.push_str("  structure:\n");
+            for r in &self.structure {
+                out.push_str(&format!("    {:<28} a={:<12} b={}\n", r.name, r.a, r.b));
+            }
+        }
+        if !self.counters.is_empty() {
+            let mut rows: Vec<&NumDiff> = self.counters.iter().collect();
+            rows.sort_by(|x, y| {
+                let dx = (x.b - x.a).abs();
+                let dy = (y.b - y.a).abs();
+                dy.partial_cmp(&dx)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then_with(|| x.name.cmp(&y.name))
+            });
+            out.push_str(&format!("  counters ({} diverging):\n", rows.len()));
+            for r in rows.iter().take(clip(rows.len())) {
+                out.push_str(&format!(
+                    "    {:<28} a={:<12} b={:<12} delta={:+}\n",
+                    r.name,
+                    r.a,
+                    r.b,
+                    r.b - r.a
+                ));
+            }
+            if rows.len() > opts.top_k {
+                out.push_str(&format!("    … and {} more\n", rows.len() - opts.top_k));
+            }
+        }
+        if !self.dists.is_empty() {
+            out.push_str(&format!("  distributions ({} diverging):\n", self.dists.len()));
+            for d in self.dists.iter().take(clip(self.dists.len())) {
+                let shift = match d.shift {
+                    Some(s) => format!(" shift={s:.3}"),
+                    None => String::new(),
+                };
+                out.push_str(&format!(
+                    "    {:<28} count {} -> {}  mean {:.3} -> {:.3}  p90 {:.3} -> {:.3}{}\n",
+                    d.name, d.count_a, d.count_b, d.mean_a, d.mean_b, d.p90_a, d.p90_b, shift
+                ));
+            }
+            if self.dists.len() > opts.top_k {
+                out.push_str(&format!("    … and {} more\n", self.dists.len() - opts.top_k));
+            }
+        }
+        if !self.gauges.is_empty() {
+            out.push_str(&format!("  gauges ({} diverging samples):\n", self.gauges.len()));
+            for g in self.gauges.iter().take(clip(self.gauges.len())) {
+                out.push_str(&format!(
+                    "    epoch {:<4} {:<16} a={:<12} b={}\n",
+                    g.epoch, g.gauge, g.a, g.b
+                ));
+            }
+            if self.gauges.len() > opts.top_k {
+                out.push_str(&format!("    … and {} more\n", self.gauges.len() - opts.top_k));
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Run loading.
+// ---------------------------------------------------------------------------
+
+/// One distribution, normalized for comparison.
+struct DistSnap {
+    count: f64,
+    mean: f64,
+    p90: f64,
+    hist: Option<StreamHist>,
+}
+
+/// Scalar timeline gauges of one snapshot.
+struct GaugeRow {
+    epoch: u64,
+    backlog: f64,
+    queue: f64,
+    unfinished: f64,
+    cue_headroom: Option<f64>,
+}
+
+/// One side of the diff, loaded from either input format.
+struct RunData {
+    mode: String,
+    counters: Vec<(String, f64)>,
+    dists: Vec<(String, DistSnap)>,
+    rows: Option<Vec<GaugeRow>>,
+}
+
+fn obj_num_sum(j: Option<&Json>) -> f64 {
+    match j.and_then(Json::as_obj) {
+        None => 0.0,
+        Some(o) => o.values().filter_map(Json::as_f64).sum(),
+    }
+}
+
+/// Load one input: a telemetry stream (JSONL, first line a `header`
+/// object) or a metric JSON export (single object with `counters`).
+fn load(label: &str, text: &str) -> anyhow::Result<RunData> {
+    let first = text.lines().find(|l| !l.trim().is_empty()).unwrap_or("");
+    let is_stream = Json::parse(first)
+        .ok()
+        .and_then(|j| j.get("kind").and_then(Json::as_str).map(|k| k == "header"))
+        .unwrap_or(false);
+    if is_stream {
+        return load_stream(text);
+    }
+    let j = Json::parse(text).map_err(|e| {
+        anyhow::anyhow!(
+            "{label}: neither a telemetry stream (JSONL header) nor a \
+             metric JSON export: {e}"
+        )
+    })?;
+    load_export(label, &j)
+}
+
+fn load_stream(text: &str) -> anyhow::Result<RunData> {
+    let replayed = stream::replay(text)?;
+    let counters = replayed
+        .metrics
+        .counters_iter()
+        .map(|(n, v)| (n.to_string(), v))
+        .collect();
+    let dists = replayed
+        .metrics
+        .dists_iter()
+        .filter(|(_, d)| !d.is_empty())
+        .map(|(n, d)| (n.to_string(), snap_dist(d)))
+        .collect();
+    let rows = replayed
+        .snapshots
+        .iter()
+        .filter(|s| !s.is_final)
+        .map(|s| {
+            let g = s.json.get("gauges");
+            GaugeRow {
+                epoch: s.epoch,
+                backlog: obj_num_sum(g.and_then(|g| g.get("backlog"))),
+                queue: obj_num_sum(g.and_then(|g| g.get("queue"))),
+                unfinished: g
+                    .and_then(|g| g.get("unfinished"))
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0),
+                cue_headroom: g
+                    .and_then(|g| g.get("cue_headroom"))
+                    .and_then(Json::as_f64),
+            }
+        })
+        .collect();
+    Ok(RunData { mode: replayed.mode.clone(), counters, dists, rows: Some(rows) })
+}
+
+fn load_export(label: &str, j: &Json) -> anyhow::Result<RunData> {
+    let counters = j
+        .get("counters")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow::anyhow!("{label}: metric export has no counters object"))?
+        .iter()
+        .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+        .collect();
+    let dists = match j.get("distributions").and_then(Json::as_obj) {
+        None => Vec::new(),
+        Some(o) => o
+            .iter()
+            .map(|(k, v)| {
+                let f = |key: &str| v.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+                (
+                    k.clone(),
+                    DistSnap {
+                        count: f("count"),
+                        mean: f("mean"),
+                        p90: f("p90"),
+                        hist: None,
+                    },
+                )
+            })
+            .collect(),
+    };
+    Ok(RunData { mode: "export".into(), counters, dists, rows: None })
+}
+
+/// Normalize one registry distribution: summary stats plus a bucketed
+/// view (exact samples are re-bucketed so exact-mode runs still get the
+/// histogram shift axis).
+fn snap_dist(d: &Dist) -> DistSnap {
+    match d {
+        Dist::Samples(vs) => {
+            let mut h = StreamHist::new();
+            for &v in vs {
+                h.record(v);
+            }
+            DistSnap {
+                count: vs.len() as f64,
+                mean: stats::mean(vs),
+                p90: stats::percentile(vs, 90.0),
+                hist: Some(h),
+            }
+        }
+        Dist::Hist(h) => DistSnap {
+            count: h.count() as f64,
+            mean: h.mean().unwrap_or(0.0),
+            p90: h.quantile(90.0).unwrap_or(0.0),
+            hist: Some(h.clone()),
+        },
+    }
+}
+
+/// Total-variation distance between two bucket mass functions: half the
+/// L1 distance of the normalized (neg, zero, pos) bucket frequencies.
+/// `0` for identical shapes, `1` for disjoint support.
+fn tv_distance(a: &StreamHist, b: &StreamHist) -> f64 {
+    let (na, nb) = (a.count() as f64, b.count() as f64);
+    if na == 0.0 || nb == 0.0 {
+        return if na == nb { 0.0 } else { 1.0 };
+    }
+    let mut l1 = 0.0;
+    // Signed bucket keys: negative buckets below zero below positive.
+    let keys: BTreeSet<(i8, u16)> = a
+        .neg_buckets()
+        .keys()
+        .chain(b.neg_buckets().keys())
+        .map(|&k| (-1i8, k))
+        .chain(std::iter::once((0i8, 0u16)))
+        .chain(
+            a.pos_buckets()
+                .keys()
+                .chain(b.pos_buckets().keys())
+                .map(|&k| (1i8, k)),
+        )
+        .collect();
+    for (sign, k) in keys {
+        let (ca, cb) = match sign {
+            -1 => (
+                a.neg_buckets().get(&k).copied().unwrap_or(0),
+                b.neg_buckets().get(&k).copied().unwrap_or(0),
+            ),
+            0 => (a.zeros(), b.zeros()),
+            _ => (
+                a.pos_buckets().get(&k).copied().unwrap_or(0),
+                b.pos_buckets().get(&k).copied().unwrap_or(0),
+            ),
+        };
+        l1 += (ca as f64 / na - cb as f64 / nb).abs();
+    }
+    l1 / 2.0
+}
+
+// ---------------------------------------------------------------------------
+// The diff.
+// ---------------------------------------------------------------------------
+
+/// Diff two run captures (see the module docs for accepted formats).
+pub fn diff_texts(
+    a_text: &str,
+    b_text: &str,
+    opts: &DiffOptions,
+) -> anyhow::Result<DiffReport> {
+    let a = load("first input", a_text)?;
+    let b = load("second input", b_text)?;
+    let exceeds = |x: f64, y: f64| {
+        (y - x).abs() > opts.tol_abs + opts.tol_rel * x.abs().max(y.abs())
+    };
+
+    let mut rep = DiffReport::default();
+
+    if a.mode != b.mode {
+        // Mode mismatch is worth surfacing but is not by itself
+        // divergence: an exact and a hist capture of the same run agree
+        // on counters and counts.
+        rep.structure.push(NumDiff { name: format!("mode {} vs {}", a.mode, b.mode), a: 0.0, b: 0.0 });
+    }
+
+    // Counters: union of names, absent = 0.
+    let names: BTreeSet<&str> = a
+        .counters
+        .iter()
+        .map(|(n, _)| n.as_str())
+        .chain(b.counters.iter().map(|(n, _)| n.as_str()))
+        .collect();
+    let lookup = |rows: &[(String, f64)], n: &str| {
+        rows.iter().find(|(k, _)| k == n).map(|(_, v)| *v).unwrap_or(0.0)
+    };
+    for n in &names {
+        let (va, vb) = (lookup(&a.counters, n), lookup(&b.counters, n));
+        if exceeds(va, vb) {
+            rep.counters.push(NumDiff { name: n.to_string(), a: va, b: vb });
+        }
+    }
+
+    // Distributions: union of names; an absent side compares as empty.
+    let dnames: BTreeSet<&str> = a
+        .dists
+        .iter()
+        .map(|(n, _)| n.as_str())
+        .chain(b.dists.iter().map(|(n, _)| n.as_str()))
+        .collect();
+    let empty = DistSnap { count: 0.0, mean: 0.0, p90: 0.0, hist: None };
+    for n in &dnames {
+        let da = a.dists.iter().find(|(k, _)| k == n).map(|(_, d)| d).unwrap_or(&empty);
+        let db = b.dists.iter().find(|(k, _)| k == n).map(|(_, d)| d).unwrap_or(&empty);
+        let shift = match (&da.hist, &db.hist) {
+            (Some(ha), Some(hb)) => Some(tv_distance(ha, hb)),
+            _ => None,
+        };
+        let diverges = exceeds(da.count, db.count)
+            || exceeds(da.mean, db.mean)
+            || exceeds(da.p90, db.p90)
+            || shift.is_some_and(|s| exceeds(0.0, s));
+        if diverges {
+            rep.dists.push(DistDiff {
+                name: n.to_string(),
+                count_a: da.count,
+                count_b: db.count,
+                mean_a: da.mean,
+                mean_b: db.mean,
+                p90_a: da.p90,
+                p90_b: db.p90,
+                shift,
+            });
+        }
+    }
+
+    // Per-epoch gauge divergence: streams only, aligned by epoch.
+    if let (Some(ra), Some(rb)) = (&a.rows, &b.rows) {
+        if ra.len() != rb.len() {
+            rep.structure.push(NumDiff {
+                name: "snapshots".into(),
+                a: ra.len() as f64,
+                b: rb.len() as f64,
+            });
+        }
+        for (x, y) in ra.iter().zip(rb.iter()) {
+            if x.epoch != y.epoch {
+                rep.structure.push(NumDiff {
+                    name: "snapshot_epoch".into(),
+                    a: x.epoch as f64,
+                    b: y.epoch as f64,
+                });
+                break;
+            }
+            let axes = [
+                ("backlog", x.backlog, y.backlog),
+                ("queue", x.queue, y.queue),
+                ("unfinished", x.unfinished, y.unfinished),
+                (
+                    "cue_headroom",
+                    x.cue_headroom.unwrap_or(0.0),
+                    y.cue_headroom.unwrap_or(0.0),
+                ),
+            ];
+            for (gauge, va, vb) in axes {
+                if exceeds(va, vb) {
+                    rep.gauges.push(GaugeDiff {
+                        gauge: gauge.into(),
+                        epoch: x.epoch,
+                        a: va,
+                        b: vb,
+                    });
+                }
+            }
+        }
+    }
+
+    rep.divergent = !rep.counters.is_empty()
+        || !rep.dists.is_empty()
+        || !rep.gauges.is_empty()
+        || rep.structure.iter().any(|s| s.name == "snapshots" || s.name == "snapshot_epoch");
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::stream::{EpochGauges, StreamSpec, StreamWriter};
+
+    fn stream(build: impl Fn(&mut Metrics, u64) -> EpochGauges, epochs: u64) -> String {
+        let mut w = StreamWriter::create(&StreamSpec::in_memory(), false).unwrap();
+        let mut m = Metrics::new();
+        for e in 0..epochs {
+            let g = build(&mut m, e);
+            w.epoch_snapshot(e, e as f64 * 10.0, &m, &g, &[]).unwrap();
+        }
+        w.final_snapshot(epochs, epochs as f64 * 10.0, &m).unwrap();
+        w.finish().unwrap().unwrap().join("\n")
+    }
+
+    fn base_stream(extra_loss: f64) -> String {
+        stream(
+            move |m, e| {
+                m.inc("tiles", 100.0);
+                if extra_loss > 0.0 {
+                    m.inc("sim.tiles_lost", extra_loss);
+                }
+                m.observe("lat", 1.0 + e as f64 + extra_loss);
+                EpochGauges {
+                    unfinished_tiles: extra_loss * (e + 1) as f64,
+                    ..EpochGauges::default()
+                }
+            },
+            3,
+        )
+    }
+
+    #[test]
+    fn self_diff_is_zero_divergence() {
+        let a = base_stream(0.0);
+        let rep = diff_texts(&a, &a, &DiffOptions::default()).unwrap();
+        assert!(!rep.divergent, "{:?}", rep);
+        assert!(rep.counters.is_empty());
+        assert!(rep.dists.is_empty());
+        assert!(rep.gauges.is_empty());
+        assert!(rep.render_text(&DiffOptions::default()).contains("equivalent"));
+    }
+
+    #[test]
+    fn divergent_runs_are_flagged_on_all_axes() {
+        let a = base_stream(0.0);
+        let b = base_stream(2.0);
+        let rep = diff_texts(&a, &b, &DiffOptions::default()).unwrap();
+        assert!(rep.divergent);
+        assert!(
+            rep.counters.iter().any(|c| c.name == "sim.tiles_lost" && c.a == 0.0),
+            "counter absent on one side compares as 0: {:?}",
+            rep.counters
+        );
+        let lat = rep.dists.iter().find(|d| d.name == "lat").expect("lat shifted");
+        assert!(lat.shift.unwrap() > 0.0, "bucket TV distance sees the shift");
+        assert!(
+            rep.gauges.iter().any(|g| g.gauge == "unfinished"),
+            "{:?}",
+            rep.gauges
+        );
+        let text = rep.render_text(&DiffOptions::default());
+        assert!(text.contains("divergence"), "{text}");
+    }
+
+    #[test]
+    fn tolerances_suppress_small_drift() {
+        let a = base_stream(0.0);
+        let b = stream(
+            |m, e| {
+                m.inc("tiles", 101.0); // ~1% off per epoch
+                m.observe("lat", 1.0 + e as f64);
+                EpochGauges::default()
+            },
+            3,
+        );
+        let strict = diff_texts(&a, &b, &DiffOptions::default()).unwrap();
+        assert!(strict.divergent);
+        let loose = diff_texts(
+            &a,
+            &b,
+            &DiffOptions { tol_rel: 0.05, tol_abs: 0.0, top_k: 10 },
+        )
+        .unwrap();
+        assert!(!loose.divergent, "{:?}", loose.counters);
+    }
+
+    #[test]
+    fn stream_vs_metric_export_compares_counters() {
+        let a = base_stream(0.0);
+        let replayed = stream::replay(&a).unwrap();
+        let export = replayed.metrics.to_json().to_string_pretty();
+        let rep = diff_texts(&a, &export, &DiffOptions::default()).unwrap();
+        assert!(!rep.divergent, "a run vs its own export: {:?}", rep.counters);
+        // Structure note about the mode mismatch is informational only.
+        assert!(rep.structure.iter().all(|s| s.name.starts_with("mode")));
+    }
+
+    #[test]
+    fn tv_distance_bounds() {
+        let mut a = StreamHist::new();
+        let mut b = StreamHist::new();
+        for i in 0..100 {
+            a.record(1.0 + i as f64 * 0.01);
+            b.record(1.0 + i as f64 * 0.01);
+        }
+        assert_eq!(tv_distance(&a, &b), 0.0);
+        let mut c = StreamHist::new();
+        for _ in 0..100 {
+            c.record(1e9);
+        }
+        let d = tv_distance(&a, &c);
+        assert!((d - 1.0).abs() < 1e-12, "disjoint supports: {d}");
+        assert_eq!(tv_distance(&StreamHist::new(), &StreamHist::new()), 0.0);
+        assert_eq!(tv_distance(&a, &StreamHist::new()), 1.0);
+    }
+
+    #[test]
+    fn malformed_inputs_are_named_errors() {
+        assert!(diff_texts("not json", "{}", &DiffOptions::default()).is_err());
+        let a = base_stream(0.0);
+        let err = diff_texts(&a, "{\"nope\":1}", &DiffOptions::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("second input"), "{err}");
+    }
+}

@@ -1,0 +1,949 @@
+//! The mission watchdog: a deterministic online SLO engine.
+//!
+//! OrbitChain's claim is *real-time* delivery; the watchdog is the part
+//! of the stack that checks the claim while the run happens instead of a
+//! human eyeballing report tables afterwards.  An [`SloSpec`] declares
+//! rules over the signals every orchestrator already produces:
+//!
+//! * **counters** — the merged [`crate::telemetry::Metrics`] registry at
+//!   the epoch boundary (e.g. `sim.tiles_lost`, `sim.retransmits`);
+//! * **distribution quantiles** — exact-sample percentiles or
+//!   [`crate::telemetry::hist::StreamHist`] bucket quantiles (e.g.
+//!   `tipcue.response_latency` p90 against a latency budget);
+//! * **gauges** — the per-epoch [`EpochGauges`] snapshot plus
+//!   orchestrator extras: `backlog_total`, `queue_total`, `unfinished`,
+//!   `cue_headroom`, the per-link busy-fraction watermark
+//!   `link_busy_frac_max`, and the mission loop's `cue_miss_rate`.
+//!
+//! Rules are evaluated once per epoch with **debounce** (a rule must
+//! breach for `debounce` consecutive evaluated epochs before it fires)
+//! and **hysteresis** (a firing rule clears only when the signal returns
+//! past the `clear` level, which defaults to the threshold) so alerts
+//! are stable under jitter.  Every state transition is recorded as an
+//! [`Alert`]; the JSONL export is byte-deterministic (sorted keys,
+//! [`crate::util::fmt::fmt_f64`] number formatting, sim-time stamps
+//! only), pinned by tests.
+//!
+//! **Causal blame**: each fire alert is joined, at the breaching epoch,
+//! against the active chaos windows ([`crate::sim::ChaosWindow`], as
+//! computed by the dynamic layer from the event timeline), the epoch's
+//! gauge heat (hottest satellite by backlog + queue, hottest link by
+//! busy seconds) and the flight-recorder journal (the dominant anomaly
+//! event kind in that epoch) — so an alert names the fault/flap/loss
+//! window and the sat/link most correlated with the breach.
+//!
+//! The engine is fed by the `mission`/`dynamic`/`tipcue` orchestrators
+//! at the same epoch boundary as the telemetry stream writer and is
+//! `Option`-gated: when no spec is installed nothing is evaluated and
+//! every existing byte-identity pin is untouched.  The run-to-run
+//! regression diff lives in [`diff`].
+
+pub mod diff;
+
+use crate::sim::{ChaosKind, ChaosWindow};
+use crate::telemetry::stream::EpochGauges;
+use crate::telemetry::{Dist, Metrics};
+use crate::trace::TraceLog;
+use crate::util::json::{obj, Json};
+use crate::util::stats;
+
+// ---------------------------------------------------------------------------
+// SLO spec.
+// ---------------------------------------------------------------------------
+
+/// Breach comparison: the rule breaches when `value op threshold`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    Gt,
+    Lt,
+}
+
+impl Cmp {
+    pub fn name(self) -> &'static str {
+        match self {
+            Cmp::Gt => "gt",
+            Cmp::Lt => "lt",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "gt" => Some(Cmp::Gt),
+            "lt" => Some(Cmp::Lt),
+            _ => None,
+        }
+    }
+
+    fn breached(self, value: f64, level: f64) -> bool {
+        match self {
+            Cmp::Gt => value > level,
+            Cmp::Lt => value < level,
+        }
+    }
+}
+
+/// What a rule watches.  A signal that cannot be resolved at an epoch
+/// (unknown gauge name, empty distribution) is skipped — the rule's
+/// debounce/hysteresis state is frozen, never silently breached.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Signal {
+    /// Cumulative counter value from the merged registry.
+    Counter { name: String },
+    /// Distribution quantile, `q` in `[0, 100]`.
+    Quantile { dist: String, q: f64 },
+    /// Per-epoch gauge; see the module docs for the derived names.
+    Gauge { name: String },
+}
+
+impl Signal {
+    fn to_json(&self) -> Json {
+        match self {
+            Signal::Counter { name } => obj(vec![("counter", Json::from(name.clone()))]),
+            Signal::Quantile { dist, q } => obj(vec![
+                ("dist", Json::from(dist.clone())),
+                ("q", Json::Num(*q)),
+            ]),
+            Signal::Gauge { name } => obj(vec![("gauge", Json::from(name.clone()))]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        if let Some(name) = j.get("counter").and_then(Json::as_str) {
+            return Ok(Signal::Counter { name: name.to_string() });
+        }
+        if let Some(name) = j.get("gauge").and_then(Json::as_str) {
+            return Ok(Signal::Gauge { name: name.to_string() });
+        }
+        if let Some(dist) = j.get("dist").and_then(Json::as_str) {
+            let q = j
+                .get("q")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("signal for dist {dist:?} needs a numeric q"))?;
+            if !(0.0..=100.0).contains(&q) {
+                return Err(format!("quantile q={q} outside [0, 100]"));
+            }
+            return Ok(Signal::Quantile { dist: dist.to_string(), q });
+        }
+        Err("signal needs one of \"counter\", \"gauge\" or \"dist\"+\"q\"".into())
+    }
+
+    /// Short human label for summaries: `counter sim.tiles_lost`,
+    /// `p90(tipcue.response_latency)`, `gauge link_busy_frac_max`.
+    pub fn label(&self) -> String {
+        match self {
+            Signal::Counter { name } => format!("counter {name}"),
+            Signal::Quantile { dist, q } => {
+                format!("p{}({dist})", crate::util::fmt::fmt_f64(*q))
+            }
+            Signal::Gauge { name } => format!("gauge {name}"),
+        }
+    }
+}
+
+/// One SLO rule; see the module docs for the evaluation semantics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloRule {
+    /// Unique rule name; keys the alert lines.
+    pub name: String,
+    pub signal: Signal,
+    pub op: Cmp,
+    pub threshold: f64,
+    /// Consecutive breaching evaluations before the rule fires (>= 1).
+    pub debounce: u32,
+    /// Hysteresis: a firing rule clears only once the signal is no
+    /// longer past this level (defaults to `threshold`).
+    pub clear: Option<f64>,
+}
+
+impl SloRule {
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::from(self.name.clone())),
+            ("signal", self.signal.to_json()),
+            ("op", Json::from(self.op.name())),
+            ("threshold", Json::Num(self.threshold)),
+            ("debounce", Json::from(self.debounce as usize)),
+        ];
+        if let Some(c) = self.clear {
+            fields.push(("clear", Json::Num(c)));
+        }
+        obj(fields)
+    }
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("rule needs a string name")?
+            .to_string();
+        let err = |msg: &str| format!("rule {name:?}: {msg}");
+        let signal = Signal::from_json(
+            j.get("signal").ok_or_else(|| err("missing signal"))?,
+        )
+        .map_err(|e| err(&e))?;
+        let op = match j.get("op").and_then(Json::as_str) {
+            None => Cmp::Gt,
+            Some(s) => {
+                Cmp::from_name(s).ok_or_else(|| err("op must be \"gt\" or \"lt\""))?
+            }
+        };
+        let threshold = j
+            .get("threshold")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| err("needs a numeric threshold"))?;
+        let debounce = match j.get("debounce") {
+            None => 1,
+            Some(v) => match v.as_f64() {
+                Some(d) if d >= 1.0 && d.fract() == 0.0 => d as u32,
+                _ => return Err(err("debounce must be an integer >= 1")),
+            },
+        };
+        let clear = match j.get("clear") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_f64().ok_or_else(|| err("clear must be numeric"))?,
+            ),
+        };
+        Ok(SloRule { name, signal, op, threshold, debounce, clear })
+    }
+}
+
+/// A set of SLO rules — the `--slo <path>` file body and the
+/// `config::Scenario` `slo` extension.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SloSpec {
+    pub rules: Vec<SloRule>,
+}
+
+impl SloSpec {
+    /// The built-in mission budget (`--slo default`): cue deadline-miss
+    /// rate, cue response p90, per-link busy-fraction watermark,
+    /// sustained backlog growth, chaos-dropped tiles and ARQ storms.
+    /// Rules over signals an orchestrator never produces simply stay
+    /// idle there.
+    pub fn mission_defaults() -> Self {
+        let rule = |name: &str, signal: Signal, op: Cmp, threshold: f64| SloRule {
+            name: name.to_string(),
+            signal,
+            op,
+            threshold,
+            debounce: 1,
+            clear: None,
+        };
+        SloSpec {
+            rules: vec![
+                SloRule {
+                    clear: Some(0.25),
+                    ..rule(
+                        "cue-miss-rate",
+                        Signal::Gauge { name: "cue_miss_rate".into() },
+                        Cmp::Gt,
+                        0.5,
+                    )
+                },
+                rule(
+                    "cue-latency-p90",
+                    Signal::Quantile { dist: "tipcue.response_latency".into(), q: 90.0 },
+                    Cmp::Gt,
+                    300.0,
+                ),
+                SloRule {
+                    clear: Some(0.5),
+                    ..rule(
+                        "link-watermark",
+                        Signal::Gauge { name: "link_busy_frac_max".into() },
+                        Cmp::Gt,
+                        0.75,
+                    )
+                },
+                SloRule {
+                    debounce: 2,
+                    ..rule(
+                        "backlog-growth",
+                        Signal::Gauge { name: "backlog_total".into() },
+                        Cmp::Gt,
+                        0.0,
+                    )
+                },
+                rule(
+                    "tiles-lost",
+                    Signal::Counter { name: "sim.tiles_lost".into() },
+                    Cmp::Gt,
+                    0.0,
+                ),
+                rule(
+                    "arq-retransmits",
+                    Signal::Counter { name: "sim.retransmits".into() },
+                    Cmp::Gt,
+                    0.0,
+                ),
+            ],
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![(
+            "rules",
+            Json::Arr(self.rules.iter().map(SloRule::to_json).collect()),
+        )])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let rules = j
+            .get("rules")
+            .and_then(Json::as_arr)
+            .ok_or("slo spec needs a \"rules\" array")?;
+        let rules: Vec<SloRule> =
+            rules.iter().map(SloRule::from_json).collect::<Result<_, _>>()?;
+        let mut seen = std::collections::BTreeSet::new();
+        for r in &rules {
+            if !seen.insert(r.name.as_str()) {
+                return Err(format!("duplicate rule name {:?}", r.name));
+            }
+        }
+        Ok(SloSpec { rules })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Online evaluation.
+// ---------------------------------------------------------------------------
+
+/// Everything the watchdog may consult at one epoch boundary — the same
+/// inputs the telemetry stream writer sees, plus the epoch's chaos
+/// windows and the trace journal for the blame join.
+pub struct EpochObservation<'a> {
+    pub epoch: u64,
+    /// Epoch start on the mission clock, seconds.
+    pub t0_s: f64,
+    /// Epoch end (the evaluation time stamped on alerts), seconds.
+    pub t1_s: f64,
+    /// The merged registry at the boundary.
+    pub metrics: &'a Metrics,
+    pub gauges: &'a EpochGauges,
+    /// Orchestrator extras, looked up before the derived gauge names.
+    pub extra: &'a [(&'a str, f64)],
+    /// Chaos windows overlapping this epoch, epoch-relative times.
+    pub chaos: &'a [ChaosWindow],
+    pub trace: Option<&'a TraceLog>,
+}
+
+/// Alert transition kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlertKind {
+    Fire,
+    Clear,
+}
+
+impl AlertKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            AlertKind::Fire => "fire",
+            AlertKind::Clear => "clear",
+        }
+    }
+}
+
+/// The causal-blame join attached to a fire alert: the chaos window,
+/// hottest satellite/link and dominant trace anomaly of the breaching
+/// epoch.  All fields optional — a clear alert (or a final-pass fire
+/// with no epoch context) carries an empty blame.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Blame {
+    /// Active fault/flap/loss window, absolute times, e.g.
+    /// `"loss_rate link 2 +0.40 t=[120.0s,180.0s)"`.
+    pub chaos: Option<String>,
+    /// Satellite with the largest backlog + queue depth this epoch.
+    pub hot_sat: Option<usize>,
+    /// Link (`"a-b"`) with the most transmit-busy seconds this epoch.
+    pub hot_link: Option<String>,
+    /// Dominant anomaly event kind in the journal this epoch, with its
+    /// count, e.g. `"isl_retry x41"`.
+    pub trace: Option<String>,
+}
+
+impl Blame {
+    fn to_json(&self) -> Json {
+        let mut fields = Vec::new();
+        if let Some(c) = &self.chaos {
+            fields.push(("chaos", Json::from(c.clone())));
+        }
+        if let Some(s) = self.hot_sat {
+            fields.push(("hot_sat", Json::from(s)));
+        }
+        if let Some(l) = &self.hot_link {
+            fields.push(("hot_link", Json::from(l.clone())));
+        }
+        if let Some(t) = &self.trace {
+            fields.push(("trace", Json::from(t.clone())));
+        }
+        obj(fields)
+    }
+}
+
+/// One rule state transition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Alert {
+    pub rule: String,
+    pub kind: AlertKind,
+    pub epoch: u64,
+    /// Mission time of the evaluation, seconds (never wall clock).
+    pub t_s: f64,
+    pub value: f64,
+    pub threshold: f64,
+    pub op: Cmp,
+    pub blame: Blame,
+}
+
+impl Alert {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("blame", self.blame.to_json()),
+            ("epoch", Json::from(self.epoch as usize)),
+            ("kind", Json::from(self.kind.name())),
+            ("op", Json::from(self.op.name())),
+            ("rule", Json::from(self.rule.clone())),
+            ("t_s", Json::Num(self.t_s)),
+            ("threshold", Json::Num(self.threshold)),
+            ("value", Json::Num(self.value)),
+        ])
+    }
+}
+
+/// Journal event kinds counted as anomalies for the blame join, with
+/// their display names ([`crate::trace::TraceKind::name`] values).
+const ANOMALY_KINDS: [&str; 7] = [
+    "cue_miss",
+    "isl_degrade",
+    "isl_giveup",
+    "isl_reroute",
+    "isl_retry",
+    "migration",
+    "replan_begin",
+];
+
+/// Per-rule debounce/hysteresis state.
+#[derive(Debug, Clone, Copy, Default)]
+struct RuleState {
+    streak: u32,
+    firing: bool,
+}
+
+/// The online engine: construct from a spec, feed one
+/// [`EpochObservation`] per epoch boundary, then [`Watchdog::finish`]
+/// for the summary-counter pass and the report.
+#[derive(Debug, Clone)]
+pub struct Watchdog {
+    spec: SloSpec,
+    state: Vec<RuleState>,
+    alerts: Vec<Alert>,
+    epochs: u64,
+}
+
+impl Watchdog {
+    pub fn new(spec: SloSpec) -> Self {
+        let n = spec.rules.len();
+        Watchdog { spec, state: vec![RuleState::default(); n], alerts: Vec::new(), epochs: 0 }
+    }
+
+    /// Evaluate every rule against one epoch boundary.
+    pub fn observe(&mut self, o: &EpochObservation) {
+        self.epochs += 1;
+        let dt_s = (o.t1_s - o.t0_s).max(0.0);
+        for i in 0..self.spec.rules.len() {
+            let rule = &self.spec.rules[i];
+            let value = match &rule.signal {
+                Signal::Counter { name } => Some(o.metrics.counter(name)),
+                Signal::Quantile { dist, q } => {
+                    o.metrics.dist(dist).and_then(|d| quantile(d, *q))
+                }
+                Signal::Gauge { name } => gauge_value(name, o.gauges, o.extra, dt_s),
+            };
+            if let Some(v) = value {
+                self.step(i, v, o.epoch, o.t1_s, Some(o));
+            }
+        }
+    }
+
+    /// Run the end-of-run pass (counters and quantiles only — the
+    /// summary counters land after the last epoch boundary) and return
+    /// the report.  `epoch`/`t_s` stamp any final-pass alerts.
+    pub fn finish(mut self, epoch: u64, t_s: f64, m: &Metrics) -> WatchdogReport {
+        for i in 0..self.spec.rules.len() {
+            let rule = &self.spec.rules[i];
+            let value = match &rule.signal {
+                Signal::Counter { name } => Some(m.counter(name)),
+                Signal::Quantile { dist, q } => m.dist(dist).and_then(|d| quantile(d, *q)),
+                Signal::Gauge { .. } => None,
+            };
+            if let Some(v) = value {
+                self.step(i, v, epoch, t_s, None);
+            }
+        }
+        WatchdogReport {
+            rules: self.spec.rules.len(),
+            epochs: self.epochs,
+            alerts: self.alerts,
+        }
+    }
+
+    fn step(&mut self, i: usize, value: f64, epoch: u64, t_s: f64, o: Option<&EpochObservation>) {
+        let rule = &self.spec.rules[i];
+        let st = &mut self.state[i];
+        if !st.firing {
+            if rule.op.breached(value, rule.threshold) {
+                st.streak += 1;
+                if st.streak >= rule.debounce.max(1) {
+                    st.firing = true;
+                    st.streak = 0;
+                    self.alerts.push(Alert {
+                        rule: rule.name.clone(),
+                        kind: AlertKind::Fire,
+                        epoch,
+                        t_s,
+                        value,
+                        threshold: rule.threshold,
+                        op: rule.op,
+                        blame: o.map(blame).unwrap_or_default(),
+                    });
+                }
+            } else {
+                st.streak = 0;
+            }
+        } else {
+            let clear_level = rule.clear.unwrap_or(rule.threshold);
+            if !rule.op.breached(value, clear_level) {
+                st.firing = false;
+                st.streak = 0;
+                self.alerts.push(Alert {
+                    rule: rule.name.clone(),
+                    kind: AlertKind::Clear,
+                    epoch,
+                    t_s,
+                    value,
+                    threshold: rule.threshold,
+                    op: rule.op,
+                    blame: Blame::default(),
+                });
+            }
+        }
+    }
+}
+
+/// Resolve a distribution quantile (exact nearest-rank interpolation for
+/// sample vectors, bucket-edge for histograms); `None` when empty.
+fn quantile(d: &Dist, q: f64) -> Option<f64> {
+    match d {
+        Dist::Samples(vs) if !vs.is_empty() => Some(stats::percentile(vs, q)),
+        Dist::Samples(_) => None,
+        Dist::Hist(h) => h.quantile(q),
+    }
+}
+
+/// Resolve a gauge signal: orchestrator extras first, then the derived
+/// names over [`EpochGauges`].  Unknown names are `None` (skipped).
+fn gauge_value(
+    name: &str,
+    gauges: &EpochGauges,
+    extra: &[(&str, f64)],
+    dt_s: f64,
+) -> Option<f64> {
+    if let Some((_, v)) = extra.iter().find(|(k, _)| *k == name) {
+        return Some(*v);
+    }
+    match name {
+        "unfinished" => Some(gauges.unfinished_tiles),
+        "backlog_total" => Some(gauges.sat_backlog.iter().map(|(_, x)| x).sum()),
+        "queue_total" => Some(gauges.sat_queue.iter().map(|(_, x)| x).sum()),
+        "cue_headroom" => gauges.cue_headroom,
+        "link_busy_frac_max" => {
+            if dt_s <= 0.0 {
+                return None;
+            }
+            let max = gauges.link_busy_s.iter().map(|(_, x)| *x).fold(0.0, f64::max);
+            Some(max / dt_s)
+        }
+        _ => None,
+    }
+}
+
+/// The blame join over one breaching epoch; see [`Blame`].
+fn blame(o: &EpochObservation) -> Blame {
+    // Chaos window with the largest overlap (windows arrive clamped to
+    // the epoch); ties resolve to the first in timeline order.
+    let chaos = o
+        .chaos
+        .iter()
+        .max_by(|a, b| {
+            let da = a.t1_s - a.t0_s;
+            let db = b.t1_s - b.t0_s;
+            // Ties keep the accumulator — the first window in timeline
+            // order.
+            da.partial_cmp(&db)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(std::cmp::Ordering::Greater)
+        })
+        .map(|w| {
+            let t0 = o.t0_s + w.t0_s;
+            let t1 = o.t0_s + w.t1_s;
+            match w.kind {
+                ChaosKind::LossRate { link, add_p } => {
+                    format!("loss_rate link {link} +{add_p:.2} t=[{t0:.1}s,{t1:.1}s)")
+                }
+                ChaosKind::Flap { link } => {
+                    format!("flap link {link} t=[{t0:.1}s,{t1:.1}s)")
+                }
+                ChaosKind::StationOutage => {
+                    format!("station_outage t=[{t0:.1}s,{t1:.1}s)")
+                }
+            }
+        });
+
+    // Hottest satellite: backlog + queue depth; ties to the lowest id.
+    let mut heat: std::collections::BTreeMap<usize, f64> = std::collections::BTreeMap::new();
+    for (s, x) in o.gauges.sat_backlog.iter().chain(&o.gauges.sat_queue) {
+        *heat.entry(*s).or_insert(0.0) += x;
+    }
+    let hot_sat = heat
+        .iter()
+        .filter(|(_, &x)| x > 0.0)
+        .max_by(|a, b| {
+            a.1.partial_cmp(b.1)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                // BTreeMap iterates ids ascending; prefer the earlier
+                // (lower) id on equal heat by treating it as the max.
+                .then(std::cmp::Ordering::Greater)
+        })
+        .map(|(s, _)| *s);
+
+    // Hottest link: busy seconds; ties to the lexicographically first key.
+    let hot_link = o
+        .gauges
+        .link_busy_s
+        .iter()
+        .filter(|(_, x)| *x > 0.0)
+        .max_by(|a, b| {
+            a.1.partial_cmp(&b.1)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(b.0.cmp(&a.0))
+        })
+        .map(|(l, _)| l.clone());
+
+    // Dominant anomaly kind in the journal, this epoch only.
+    let trace = o.trace.and_then(|log| {
+        let mut counts: std::collections::BTreeMap<&'static str, u64> =
+            std::collections::BTreeMap::new();
+        for e in &log.entries {
+            if e.epoch as u64 == o.epoch {
+                let name = e.kind.name();
+                if ANOMALY_KINDS.contains(&name) {
+                    *counts.entry(name).or_insert(0) += 1;
+                }
+            }
+        }
+        counts
+            .iter()
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(a.0)))
+            .map(|(k, n)| format!("{k} x{n}"))
+    });
+
+    Blame { chaos, hot_sat, hot_link, trace }
+}
+
+// ---------------------------------------------------------------------------
+// Report.
+// ---------------------------------------------------------------------------
+
+/// The watchdog's end-of-run summary, attached to the orchestrator
+/// reports when a spec was installed.
+#[derive(Debug, Clone)]
+pub struct WatchdogReport {
+    pub rules: usize,
+    pub epochs: u64,
+    pub alerts: Vec<Alert>,
+}
+
+impl WatchdogReport {
+    pub fn fired(&self) -> usize {
+        self.alerts.iter().filter(|a| a.kind == AlertKind::Fire).count()
+    }
+
+    pub fn cleared(&self) -> usize {
+        self.alerts.iter().filter(|a| a.kind == AlertKind::Clear).count()
+    }
+
+    /// The byte-deterministic alerts export: one compact JSON object per
+    /// line, newline-terminated (empty string when no alerts).
+    pub fn alerts_jsonl(&self) -> String {
+        let mut out = String::new();
+        for a in &self.alerts {
+            out.push_str(&a.to_json().to_string_compact());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("alerts", Json::Arr(self.alerts.iter().map(Alert::to_json).collect())),
+            ("cleared", Json::from(self.cleared())),
+            ("epochs", Json::from(self.epochs as usize)),
+            ("fired", Json::from(self.fired())),
+            ("rules", Json::from(self.rules)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gauge_rule(name: &str, gauge: &str, threshold: f64) -> SloRule {
+        SloRule {
+            name: name.into(),
+            signal: Signal::Gauge { name: gauge.into() },
+            op: Cmp::Gt,
+            threshold,
+            debounce: 1,
+            clear: None,
+        }
+    }
+
+    fn observe_gauges(w: &mut Watchdog, epoch: u64, gauges: &EpochGauges) {
+        let m = Metrics::new();
+        w.observe(&EpochObservation {
+            epoch,
+            t0_s: epoch as f64 * 10.0,
+            t1_s: (epoch + 1) as f64 * 10.0,
+            metrics: &m,
+            gauges,
+            extra: &[],
+            chaos: &[],
+            trace: None,
+        });
+    }
+
+    fn backlog(x: f64) -> EpochGauges {
+        EpochGauges { unfinished_tiles: x, ..EpochGauges::default() }
+    }
+
+    #[test]
+    fn spec_json_round_trips() {
+        let spec = SloSpec::mission_defaults();
+        let j = spec.to_json();
+        let back = SloSpec::from_json(&j).unwrap();
+        assert_eq!(spec, back);
+        // And through actual serialization.
+        let text = j.to_string_compact();
+        let re = SloSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(spec, re);
+    }
+
+    #[test]
+    fn spec_json_rejects_malformed_rules() {
+        let bad = |s: &str| SloSpec::from_json(&Json::parse(s).unwrap());
+        assert!(bad("{}").is_err(), "rules array required");
+        assert!(bad("{\"rules\":[{\"name\":\"x\"}]}").is_err(), "signal required");
+        assert!(
+            bad("{\"rules\":[{\"name\":\"x\",\"signal\":{\"gauge\":\"g\"}}]}").is_err(),
+            "threshold required"
+        );
+        assert!(
+            bad("{\"rules\":[{\"name\":\"x\",\"signal\":{\"dist\":\"d\"},\
+                 \"threshold\":1}]}")
+            .is_err(),
+            "dist signal needs q"
+        );
+        assert!(
+            bad("{\"rules\":[\
+                 {\"name\":\"x\",\"signal\":{\"gauge\":\"g\"},\"threshold\":1},\
+                 {\"name\":\"x\",\"signal\":{\"gauge\":\"g\"},\"threshold\":2}]}")
+            .is_err(),
+            "duplicate rule names rejected"
+        );
+    }
+
+    #[test]
+    fn debounce_delays_firing() {
+        let spec = SloSpec {
+            rules: vec![SloRule { debounce: 3, ..gauge_rule("r", "unfinished", 5.0) }],
+        };
+        let mut w = Watchdog::new(spec);
+        observe_gauges(&mut w, 0, &backlog(10.0));
+        observe_gauges(&mut w, 1, &backlog(10.0));
+        assert!(w.alerts.is_empty(), "two breaches under debounce 3 stay silent");
+        // A recovery resets the streak.
+        observe_gauges(&mut w, 2, &backlog(0.0));
+        observe_gauges(&mut w, 3, &backlog(10.0));
+        observe_gauges(&mut w, 4, &backlog(10.0));
+        observe_gauges(&mut w, 5, &backlog(10.0));
+        let rep = w.finish(6, 60.0, &Metrics::new());
+        assert_eq!(rep.fired(), 1);
+        assert_eq!(rep.alerts[0].epoch, 5, "fires on the third consecutive breach");
+    }
+
+    #[test]
+    fn hysteresis_clears_at_the_clear_level() {
+        let spec = SloSpec {
+            rules: vec![SloRule {
+                clear: Some(2.0),
+                ..gauge_rule("r", "unfinished", 5.0)
+            }],
+        };
+        let mut w = Watchdog::new(spec);
+        observe_gauges(&mut w, 0, &backlog(6.0)); // fire
+        observe_gauges(&mut w, 1, &backlog(4.0)); // below threshold, above clear
+        observe_gauges(&mut w, 2, &backlog(1.0)); // below clear
+        observe_gauges(&mut w, 3, &backlog(6.0)); // fire again
+        let rep = w.finish(4, 40.0, &Metrics::new());
+        let kinds: Vec<(AlertKind, u64)> =
+            rep.alerts.iter().map(|a| (a.kind, a.epoch)).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                (AlertKind::Fire, 0),
+                (AlertKind::Clear, 2),
+                (AlertKind::Fire, 3)
+            ],
+            "{:?}",
+            rep.alerts
+        );
+    }
+
+    #[test]
+    fn missing_signals_freeze_rule_state() {
+        let spec = SloSpec {
+            rules: vec![SloRule {
+                debounce: 2,
+                ..SloRule {
+                    name: "q".into(),
+                    signal: Signal::Quantile { dist: "lat".into(), q: 90.0 },
+                    op: Cmp::Gt,
+                    threshold: 1.0,
+                    debounce: 1,
+                    clear: None,
+                }
+            }],
+        };
+        let mut w = Watchdog::new(spec);
+        let mut m = Metrics::new();
+        m.observe("lat", 5.0);
+        let g = EpochGauges::default();
+        let obs = |m: &Metrics, epoch: u64| EpochObservation {
+            epoch,
+            t0_s: 0.0,
+            t1_s: 10.0,
+            metrics: m,
+            gauges: &g,
+            extra: &[],
+            chaos: &[],
+            trace: None,
+        };
+        w.observe(&obs(&m, 0)); // breach 1/2
+        let empty = Metrics::new(); // dist missing: skipped, streak frozen
+        w.observe(&obs(&empty, 1));
+        w.observe(&obs(&m, 2)); // breach 2/2 -> fire
+        let rep = w.finish(3, 30.0, &empty);
+        assert_eq!(rep.fired(), 1);
+        assert_eq!(rep.alerts[0].epoch, 2);
+    }
+
+    #[test]
+    fn counter_rules_fire_on_the_final_pass() {
+        let spec = SloSpec {
+            rules: vec![SloRule {
+                name: "lost".into(),
+                signal: Signal::Counter { name: "mission.tiles_lost".into() },
+                op: Cmp::Gt,
+                threshold: 0.0,
+                debounce: 1,
+                clear: None,
+            }],
+        };
+        let w = Watchdog::new(spec);
+        let mut m = Metrics::new();
+        m.inc("mission.tiles_lost", 3.0);
+        let rep = w.finish(4, 40.0, &m);
+        assert_eq!(rep.fired(), 1);
+        assert_eq!(rep.alerts[0].value, 3.0);
+        assert_eq!(rep.alerts[0].blame, Blame::default(), "final pass has no epoch blame");
+    }
+
+    #[test]
+    fn blame_names_chaos_window_and_hot_spots() {
+        let spec = SloSpec {
+            rules: vec![gauge_rule("wm", "link_busy_frac_max", 0.5)],
+        };
+        let mut w = Watchdog::new(spec);
+        let m = Metrics::new();
+        let gauges = EpochGauges {
+            sat_backlog: vec![(2, 3.0)],
+            sat_queue: vec![(2, 1.0), (4, 2.0)],
+            link_busy_s: vec![("2-3".into(), 9.0), ("0-1".into(), 4.0)],
+            link_bytes: vec![("2-3".into(), 4096.0)],
+            unfinished_tiles: 3.0,
+            cue_headroom: None,
+        };
+        let chaos = [ChaosWindow {
+            t0_s: 2.0,
+            t1_s: 8.0,
+            kind: ChaosKind::LossRate { link: 3, add_p: 0.4 },
+        }];
+        w.observe(&EpochObservation {
+            epoch: 1,
+            t0_s: 10.0,
+            t1_s: 20.0,
+            metrics: &m,
+            gauges: &gauges,
+            extra: &[],
+            chaos: &chaos,
+            trace: None,
+        });
+        let rep = w.finish(2, 20.0, &m);
+        assert_eq!(rep.fired(), 1);
+        let b = &rep.alerts[0].blame;
+        assert_eq!(
+            b.chaos.as_deref(),
+            Some("loss_rate link 3 +0.40 t=[12.0s,18.0s)"),
+            "window named with absolute times"
+        );
+        assert_eq!(b.hot_sat, Some(2), "backlog 3 + queue 1 beats sat 4's queue 2");
+        assert_eq!(b.hot_link.as_deref(), Some("2-3"));
+    }
+
+    #[test]
+    fn alerts_jsonl_is_byte_deterministic() {
+        let run = || {
+            let spec = SloSpec {
+                rules: vec![gauge_rule("r", "unfinished", 1.5)],
+            };
+            let mut w = Watchdog::new(spec);
+            observe_gauges(&mut w, 0, &backlog(3.25));
+            observe_gauges(&mut w, 1, &backlog(0.0));
+            w.finish(2, 20.0, &Metrics::new()).alerts_jsonl()
+        };
+        let a = run();
+        assert_eq!(a, run());
+        let first = a.lines().next().unwrap();
+        assert_eq!(
+            first,
+            "{\"blame\":{},\"epoch\":0,\"kind\":\"fire\",\"op\":\"gt\",\
+             \"rule\":\"r\",\"t_s\":10,\"threshold\":1.5,\"value\":3.25}",
+        );
+    }
+
+    #[test]
+    fn gauge_extras_shadow_derived_names() {
+        let g = EpochGauges { unfinished_tiles: 7.0, ..EpochGauges::default() };
+        assert_eq!(gauge_value("unfinished", &g, &[], 10.0), Some(7.0));
+        assert_eq!(gauge_value("unfinished", &g, &[("unfinished", 1.0)], 10.0), Some(1.0));
+        assert_eq!(gauge_value("cue_miss_rate", &g, &[("cue_miss_rate", 0.5)], 10.0), Some(0.5));
+        assert_eq!(gauge_value("cue_miss_rate", &g, &[], 10.0), None, "unknown gauge skips");
+        assert_eq!(gauge_value("cue_headroom", &g, &[], 10.0), None);
+        let g2 = EpochGauges {
+            link_busy_s: vec![("0-1".into(), 2.5), ("1-2".into(), 5.0)],
+            ..EpochGauges::default()
+        };
+        assert_eq!(gauge_value("link_busy_frac_max", &g2, &[], 10.0), Some(0.5));
+    }
+}

@@ -264,7 +264,7 @@ fn telemetry_on_or_off_does_not_change_outcomes() {
 fn report_dashboard_folds_a_real_mission_stream() {
     let rep = run_mission(StreamSpec::in_memory());
     let text = stream_text(&rep);
-    let dash = report::render(&text, None, &ReportOptions::default())
+    let dash = report::render(&text, None, None, &ReportOptions::default())
         .expect("dashboard renders");
     assert!(dash.contains("mission observatory"), "{dash}");
     assert!(dash.contains("epoch timeline"), "{dash}");
@@ -273,7 +273,7 @@ fn report_dashboard_folds_a_real_mission_stream() {
     assert!(dash.contains("n/a (run with --trace"), "{dash}");
 
     // JSON mode emits a machine-readable dashboard with the same shape.
-    let js = report::render(&text, None, &ReportOptions { top_k: 3, json: true })
+    let js = report::render(&text, None, None, &ReportOptions { top_k: 3, json: true })
         .expect("json dashboard renders");
     let j = Json::parse(&js).expect("dashboard json parses");
     assert_eq!(j.get("snapshots").and_then(Json::as_usize), Some(9));

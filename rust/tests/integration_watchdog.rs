@@ -1,0 +1,249 @@
+//! Integration: the mission watchdog end to end — a seed-7 loss/chaos
+//! mission fires an SLO alert whose blame names the injected chaos
+//! window, the alerts JSONL is byte-deterministic across identical runs,
+//! watching a run never changes its outcomes (epoch telemetry stays
+//! byte-identical; only the final snapshot gains the `watchdog.*`
+//! tallies), and the run-to-run regression diff reports zero divergence
+//! against itself and flags a genuinely different run.
+
+use orbitchain::config::Scenario;
+use orbitchain::dynamic::{
+    DynamicSpec, EpochOrchestrator, Event, EventKind, Timeline,
+};
+use orbitchain::mission::{MissionOrchestrator, MissionReport, MissionSpec};
+use orbitchain::telemetry::stream::StreamSpec;
+use orbitchain::telemetry::Metrics;
+use orbitchain::tipcue::{TipCueOrchestrator, TipCueSpec};
+use orbitchain::util::json::Json;
+use orbitchain::watchdog::diff::{diff_texts, DiffOptions};
+use orbitchain::watchdog::{AlertKind, Cmp, Signal, SloRule, SloSpec};
+
+fn mission_spec(epochs: usize, detection_rate: f64) -> MissionSpec {
+    MissionSpec {
+        dynamic: DynamicSpec {
+            epochs,
+            frames_per_epoch: 2,
+            sat_mtbf_s: 0.0,
+            link_mtbf_s: 0.0,
+            burst_mtbf_s: 0.0,
+            ..DynamicSpec::default()
+        },
+        detection_rate,
+        ..MissionSpec::default()
+    }
+}
+
+/// One declared elevated-loss chaos window opening 5s into the mission —
+/// overlaps epoch 0 whatever the epoch length, so an epoch-0 alert must
+/// blame it.
+fn chaos_timeline() -> Timeline {
+    Timeline::declared(vec![Event {
+        t_s: 5.0,
+        kind: EventKind::LinkLossRate { link: 1, add_p: 0.9, duration_s: 60.0 },
+    }])
+}
+
+/// The mission budget plus one rule that breaches by construction
+/// (`unfinished > -1` holds at every epoch): the acceptance pins below
+/// must not depend on which stochastic default rule trips first.
+fn watch_spec() -> SloSpec {
+    let mut spec = SloSpec::mission_defaults();
+    spec.rules.push(SloRule {
+        name: "work-exists".into(),
+        signal: Signal::Gauge { name: "unfinished".into() },
+        op: Cmp::Gt,
+        threshold: -1.0,
+        debounce: 1,
+        clear: None,
+    });
+    spec
+}
+
+fn run_watched(telemetry: Option<StreamSpec>) -> MissionReport {
+    let s = Scenario::jetson()
+        .with_seed(7)
+        .with_loss(0.05)
+        .with_mission(mission_spec(8, 0.3));
+    let mut orch = MissionOrchestrator::new(&s)
+        .with_timeline(chaos_timeline())
+        .with_slo(Some(watch_spec()));
+    if let Some(spec) = telemetry {
+        orch = orch.with_telemetry(spec);
+    }
+    orch.run().expect("watched mission runs")
+}
+
+#[test]
+fn seed7_chaos_mission_fires_alert_blaming_the_chaos_window() {
+    let rep = run_watched(None);
+    let wd = rep.watchdog.as_ref().expect("watchdog report on the mission");
+    assert_eq!(wd.rules, 7, "six mission defaults plus the pinned rule");
+    assert_eq!(wd.epochs, 8);
+    assert!(wd.fired() >= 1, "at least one SLO alert fires");
+
+    let fire = wd
+        .alerts
+        .iter()
+        .find(|a| a.rule == "work-exists" && a.kind == AlertKind::Fire)
+        .expect("the by-construction rule fires");
+    assert_eq!(fire.epoch, 0, "breaches at the first epoch boundary");
+    let chaos = fire
+        .blame
+        .chaos
+        .as_deref()
+        .expect("fire alert blames the active chaos window");
+    assert!(
+        chaos.starts_with("loss_rate link 1 +0.90 t=[5.0s,"),
+        "blame names the declared window with absolute times: {chaos}"
+    );
+
+    // The watchdog tally rides the merged registry (and therefore the
+    // final telemetry snapshot).
+    assert_eq!(rep.metrics.counter("watchdog.rules"), 7.0);
+    assert_eq!(rep.metrics.counter("watchdog.alerts_fired"), wd.fired() as f64);
+    assert_eq!(
+        rep.metrics.counter("watchdog.alerts_cleared"),
+        wd.cleared() as f64
+    );
+
+    // The report JSON carries the verdict under its own key.
+    let j = rep.to_json();
+    assert!(j.get("watchdog").is_some(), "report JSON keys the watchdog in");
+}
+
+#[test]
+fn alerts_jsonl_is_byte_identical_across_identical_runs() {
+    let a = run_watched(None);
+    let b = run_watched(None);
+    let aj = a.watchdog.as_ref().unwrap().alerts_jsonl();
+    let bj = b.watchdog.as_ref().unwrap().alerts_jsonl();
+    assert!(!aj.is_empty(), "the chaos mission produces alert lines");
+    assert_eq!(aj, bj, "same seed must give byte-identical alerts JSONL");
+    // Every line is a JSON object with the pinned alphabetical key order.
+    for line in aj.lines() {
+        let j = Json::parse(line).expect("alert line parses");
+        assert!(j.get("rule").is_some() && j.get("kind").is_some(), "{line}");
+        assert!(line.starts_with("{\"blame\":"), "keys alphabetical: {line}");
+    }
+}
+
+#[test]
+fn watchdog_on_or_off_does_not_change_outcomes_or_epoch_telemetry() {
+    let s = Scenario::jetson()
+        .with_seed(7)
+        .with_loss(0.05)
+        .with_mission(mission_spec(8, 0.3));
+    let plain = MissionOrchestrator::new(&s)
+        .with_timeline(chaos_timeline())
+        .with_telemetry(StreamSpec::in_memory())
+        .run()
+        .expect("unwatched mission runs");
+    let watched = run_watched(Some(StreamSpec::in_memory()));
+
+    assert!(plain.watchdog.is_none());
+    assert_eq!(watched.completion_ratio, plain.completion_ratio);
+    assert_eq!(watched.response_latency_s, plain.response_latency_s);
+    assert_eq!(watched.tips, plain.tips);
+    assert_eq!(watched.admitted, plain.admitted);
+    assert_eq!(watched.completed, plain.completed);
+
+    // Watching only observes: every epoch snapshot is byte-identical;
+    // the final snapshot alone gains the `watchdog.*` counter deltas.
+    let pl = plain.telemetry.as_ref().expect("in-memory stream");
+    let wl = watched.telemetry.as_ref().expect("in-memory stream");
+    assert_eq!(pl.len(), wl.len());
+    assert_eq!(
+        pl[..pl.len() - 1],
+        wl[..wl.len() - 1],
+        "epoch snapshots must not change when the watchdog is on"
+    );
+    assert_ne!(pl.last(), wl.last(), "final snapshot carries the tallies");
+
+    // Outside its own namespace the registry is untouched.
+    let named = |m: &Metrics| -> Vec<(String, f64)> {
+        m.counters_iter()
+            .filter(|(k, _)| !k.starts_with("watchdog."))
+            .map(|(k, v)| (k.to_string(), v))
+            .collect()
+    };
+    assert_eq!(named(&watched.metrics), named(&plain.metrics));
+
+    // Unwatched report JSON has no watchdog key at all.
+    assert!(plain.to_json().get("watchdog").is_none());
+}
+
+#[test]
+fn self_diff_is_clean_and_a_different_run_diverges() {
+    let text = run_watched(Some(StreamSpec::in_memory()))
+        .telemetry
+        .unwrap()
+        .join("\n");
+    let opts = DiffOptions::default();
+    let same = diff_texts(&text, &text, &opts).expect("self diff runs");
+    assert!(!same.divergent, "a run diffed against itself is clean");
+    assert!(same.counters.is_empty(), "no counter rows on a self diff");
+
+    // A genuinely different mission (two fewer epochs) must diverge.
+    let s = Scenario::jetson()
+        .with_seed(7)
+        .with_loss(0.05)
+        .with_mission(mission_spec(6, 0.3));
+    let other = MissionOrchestrator::new(&s)
+        .with_timeline(chaos_timeline())
+        .with_telemetry(StreamSpec::in_memory())
+        .run()
+        .expect("shorter mission runs")
+        .telemetry
+        .unwrap()
+        .join("\n");
+    let diff = diff_texts(&text, &other, &opts).expect("cross diff runs");
+    assert!(diff.divergent, "an 8-epoch vs 6-epoch run must diverge");
+
+    // The verdict JSON is parseable and the text render names the runs'
+    // divergence for CI logs.
+    let j = diff.to_json();
+    assert_eq!(j.get("divergent").and_then(Json::as_bool), Some(true));
+    assert!(diff.render_text(&opts).contains("run divergence detected"));
+}
+
+#[test]
+fn dynamic_and_tipcue_loops_feed_the_watchdog_too() {
+    let spec = DynamicSpec {
+        epochs: 6,
+        frames_per_epoch: 2,
+        sat_mtbf_s: 0.0,
+        link_mtbf_s: 0.0,
+        burst_mtbf_s: 0.0,
+        ..DynamicSpec::default()
+    };
+    let s = Scenario::jetson().with_seed(7).with_dynamic(spec);
+    let dyn_rep = EpochOrchestrator::new(&s)
+        .with_slo(Some(watch_spec()))
+        .run()
+        .expect("watched dynamic loop runs");
+    let wd = dyn_rep.watchdog.as_ref().expect("dynamic watchdog verdict");
+    assert_eq!(wd.rules, 7);
+    assert!(wd.fired() >= 1, "the by-construction rule fires here too");
+    assert_eq!(dyn_rep.metrics.counter("watchdog.rules"), 7.0);
+
+    let s = Scenario::jetson()
+        .with_seed(7)
+        .with_tipcue(TipCueSpec { tip_rate_per_frame: 0.5, ..TipCueSpec::default() });
+    let tc = TipCueOrchestrator::new(&s)
+        .with_slo(Some(watch_spec()))
+        .run()
+        .expect("watched tip-and-cue runs");
+    let wd = tc.watchdog.as_ref().expect("tipcue watchdog verdict");
+    assert_eq!(wd.rules, 7);
+    assert!(wd.fired() >= 1);
+    assert_eq!(tc.metrics.counter("watchdog.rules"), 7.0);
+
+    // The scenario-level `slo` extension reaches the orchestrator without
+    // any builder call — config is the declarative path the CLI uses.
+    let s = Scenario::jetson()
+        .with_seed(7)
+        .with_mission(mission_spec(4, 0.3))
+        .with_slo(Some(watch_spec()));
+    let rep = MissionOrchestrator::new(&s).run().expect("config-watched run");
+    assert!(rep.watchdog.is_some(), "scenario.slo installs the watchdog");
+}
